@@ -1,0 +1,87 @@
+//! Image classification under runtime-adaptive CORDIC execution.
+//!
+//! The paper's §IV-A software-emulation flow, end to end:
+//!   1. train an MLP (FP32) on the synthetic 14×14 dataset;
+//!   2. quantise post-training (FxP-8 / FxP-16);
+//!   3. evaluate bit-accurate CORDIC inference across iteration budgets
+//!      (a compact Fig. 11 sweep);
+//!   4. run the accuracy-sensitivity heuristic to pick a mixed
+//!      approximate/accurate per-layer policy within a 2 % drop budget,
+//!      and report the latency saved.
+//!
+//! Run: `cargo run --release --example image_classification [--quick]`
+
+use corvet::cordic::mac::ExecMode;
+use corvet::model::workloads::paper_mlp;
+use corvet::quant::{assign_modes, describe, PolicyTable, Precision};
+use corvet::report::{fnum, Table};
+use corvet::train::{train, Dataset, DatasetConfig, SgdConfig};
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    // 1. train
+    let data = Dataset::generate(DatasetConfig {
+        train: if quick { 400 } else { 2000 },
+        test: if quick { 120 } else { 400 },
+        noise: 0.2,
+        ..Default::default()
+    });
+    let mut net = paper_mlp(101);
+    let report = train(
+        &mut net,
+        &data.train_x,
+        &data.train_y,
+        SgdConfig { epochs: if quick { 6 } else { 14 }, lr: 0.08, ..Default::default() },
+    );
+    let fp32 = net.accuracy_f64(&data.test_x, &data.test_y);
+    println!(
+        "trained {}: final loss {}, fp32 test accuracy {}",
+        net.name,
+        fnum(*report.loss_curve.last().unwrap()),
+        fnum(fp32)
+    );
+
+    // 2+3. iteration sweep at both precisions (bit-accurate CORDIC)
+    let eval_n = if quick { 60 } else { 200 };
+    let inputs = &data.test_x[..eval_n];
+    let labels = &data.test_y[..eval_n];
+    let mut sweep = Table::new(
+        "accuracy vs iteration budget (bit-accurate CORDIC)",
+        &["precision", "iterations", "cycles/MAC", "accuracy", "drop vs fp32"],
+    );
+    for precision in [Precision::Fxp8, Precision::Fxp16] {
+        for iters in if quick { vec![4, 8, 12, 18] } else { vec![2, 4, 6, 8, 10, 12, 14, 18] } {
+            let policy =
+                PolicyTable::uniform(net.compute_layers(), precision, ExecMode::Custom(iters));
+            let acc = net.accuracy_cordic(inputs, labels, &policy);
+            sweep.row(vec![
+                format!("{precision}"),
+                iters.to_string(),
+                policy.layer(0).cycles_per_mac().to_string(),
+                fnum(acc),
+                fnum(fp32 - acc),
+            ]);
+        }
+    }
+    print!("{}", sweep.render());
+
+    // 4. sensitivity heuristic: mixed policy within a 2% budget
+    let sens = assign_modes(net.compute_layers(), Precision::Fxp8, 0.02, |policy| {
+        net.accuracy_cordic(inputs, labels, policy)
+    });
+    let macs = net.macs_per_layer();
+    let accurate = PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+    let mixed_acc = net.accuracy_cordic(inputs, labels, &sens.policy);
+    println!("sensitivity heuristic (budget 2%):");
+    println!("  per-layer drops : {:?}", sens.per_layer_drop.iter().map(|d| fnum(*d)).collect::<Vec<_>>());
+    println!("  policy          : {}", describe(&sens.policy));
+    println!("  accuracy        : {} (baseline {})", fnum(mixed_acc), fnum(sens.baseline_accuracy));
+    println!(
+        "  MAC cycles      : {} -> {} ({}x faster)",
+        accurate.total_mac_cycles(&macs),
+        sens.policy.total_mac_cycles(&macs),
+        fnum(accurate.total_mac_cycles(&macs) as f64 / sens.policy.total_mac_cycles(&macs) as f64)
+    );
+    Ok(())
+}

@@ -1,0 +1,83 @@
+//! Object detection (TinyYOLO-v3) on the vector-engine simulator — the
+//! Table IV / §V-F workload.
+//!
+//! Sweeps engine sizes and execution modes over the full TinyYOLO-v3 layer
+//! trace, reporting latency, throughput, power and efficiency from the
+//! calibrated cost model, plus the end-to-end comparison table against the
+//! published platforms (Jetson Nano, Raspberry Pi, prior FPGA designs).
+//!
+//! Run: `cargo run --release --example object_detection`
+
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::hwcost;
+use corvet::model::workloads::tinyyolo_trace;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::{fnum, Table};
+use corvet::tables;
+
+fn main() -> anyhow::Result<()> {
+    let trace = tinyyolo_trace();
+    println!(
+        "workload: {} — {} layers, {} GMACs, {} Gops, {} M params",
+        trace.name,
+        trace.layers.len(),
+        fnum(trace.total_macs() as f64 / 1e9),
+        fnum(trace.total_ops() as f64 / 1e9),
+        fnum(trace.total_params() as f64 / 1e6),
+    );
+
+    let mut t = Table::new(
+        "TinyYOLO-v3 on the vector engine (ASIC clock from the cost model)",
+        &["PEs", "mode", "GHz", "latency ms", "GOPS", "PE util", "power mW", "GOPS/W", "fps"],
+    );
+    for pes in [64usize, 128, 256] {
+        let mut cfg = EngineConfig::pe256();
+        cfg.pes = pes;
+        cfg.af_blocks = (pes / 64).max(1);
+        cfg.pool_units = (pes / 8).max(1);
+        for mode in [ExecMode::Approximate, ExecMode::Accurate] {
+            let policy = PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, mode);
+            let report = VectorEngine::new(cfg).run_trace(&trace, &policy);
+            let asic = hwcost::engine_asic(&cfg, policy.layer(0).cycles_per_mac());
+            let clock = asic.freq_ghz * 1e9;
+            let ms = report.time_ms(clock);
+            let gops = report.gops(clock);
+            t.row(vec![
+                pes.to_string(),
+                format!("{mode:?}"),
+                fnum(asic.freq_ghz),
+                fnum(ms),
+                fnum(gops),
+                fnum(report.mean_pe_utilization()),
+                fnum(asic.power_mw),
+                fnum(gops / (asic.power_mw / 1e3)),
+                fnum(1e3 / ms),
+            ]);
+        }
+    }
+    print!("{}", t.render());
+
+    // FPGA-clocked point (the Table IV row) and the e2e comparison
+    let cfg = EngineConfig::pe256();
+    let fpga = hwcost::engine_fpga(&cfg);
+    let policy = PolicyTable::uniform(
+        trace.compute_layers(),
+        Precision::Fxp8,
+        ExecMode::Approximate,
+    );
+    let report = VectorEngine::new(cfg).run_trace(&trace, &policy);
+    let clock = fpga.freq_mhz * 1e6;
+    println!(
+        "FPGA point (VC707 model): {} kLUTs, {} MHz, {} W -> {} ms, {} GOPS/W",
+        fnum(fpga.kluts),
+        fnum(fpga.freq_mhz),
+        fnum(fpga.power_w),
+        fnum(report.time_ms(clock)),
+        fnum(report.gops(clock) / fpga.power_w),
+    );
+
+    let (sim_ms, sim_w) = tables::e2e_simulated();
+    print!("{}", tables::e2e_table(Some((sim_ms, sim_w))).render());
+    Ok(())
+}

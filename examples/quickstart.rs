@@ -1,0 +1,60 @@
+//! Quickstart: the minimum path through CORVET's public API.
+//!
+//! 1. Build a (deterministic) model and quantise it for the CORDIC engine.
+//! 2. Load the AOT-compiled HLO artifact and run one inference over PJRT.
+//! 3. Run the same input through the bit-accurate Rust CORDIC evaluator
+//!    and check the two agree.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use corvet::cordic::mac::ExecMode;
+use corvet::model::workloads::paper_mlp;
+use corvet::model::Tensor;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::runtime::{quantize_input, quantize_network, ArtifactRegistry, PjrtRuntime};
+use corvet::testutil::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. a model (normally you'd train it; see `corvet train`)
+    let net = paper_mlp(2026);
+    let (weights, clipped) = quantize_network(&net)?;
+    println!("model: {} ({} params, {clipped} clipped)", net.name, {
+        let mut n = 0;
+        for l in &weights.layers {
+            n += l.w.len() + l.b.len();
+        }
+        n
+    });
+
+    // --- 2. PJRT path: artifact -> compile -> execute
+    let registry = ArtifactRegistry::load("artifacts")?;
+    let mut rt = PjrtRuntime::new()?;
+    println!("PJRT platform: {}", rt.platform());
+    rt.deploy_weights(&weights)?;
+
+    let mut rng = Xoshiro256::new(1);
+    let input: Vec<f64> = (0..196).map(|_| rng.uniform(-0.9, 0.9)).collect();
+    let xq = quantize_input(&input);
+    let logits = rt.execute_via(&registry, Precision::Fxp8, ExecMode::Approximate, &xq, 1)?;
+    let class = logits
+        .iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap();
+    println!("PJRT logits : {logits:?}");
+    println!("PJRT class  : {class}");
+
+    // --- 3. bit-accurate Rust path for cross-checking
+    let policy = PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    let (probs, stats) = net.forward_cordic(&Tensor::vector(&input), &policy);
+    println!(
+        "Rust path   : argmax {} after {} MACs / {} cycles",
+        probs.argmax(),
+        stats.total_macs(),
+        stats.total_mac_cycles()
+    );
+    assert_eq!(class, probs.argmax(), "PJRT and Rust CORDIC paths must agree");
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! END-TO-END DRIVER (recorded in EXPERIMENTS.md §E2E): the full system on
+//! a real small workload, proving all layers compose.
+//!
+//!   L1 Pallas CORDIC kernels  ──lowered into──┐
+//!   L2 JAX model (AOT, HLO text artifacts) ───┤ build time (make artifacts)
+//!                                             ▼
+//!   L3 Rust coordinator: train (FP32) → quantise → deploy weights →
+//!      serve batched requests over PJRT → measure accuracy/latency/
+//!      throughput, with the precision governor switching approximate/
+//!      accurate artifacts under load.
+//!
+//! Run: `make artifacts && cargo run --release --example serving [--quick]`
+
+use corvet::coordinator::{GovernorConfig, Server, ServerConfig};
+use corvet::model::workloads::paper_mlp;
+use corvet::quant::Precision;
+use corvet::report::fnum;
+use corvet::runtime::quantize_network;
+use corvet::testutil::Xoshiro256;
+use corvet::train::{train, Dataset, DatasetConfig, SgdConfig};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let quick = std::env::args().any(|a| a == "--quick");
+
+    // ---- train the served model (FP32, synthetic corpus)
+    let data = Dataset::generate(DatasetConfig {
+        train: if quick { 400 } else { 2000 },
+        test: if quick { 120 } else { 400 },
+        noise: 0.2,
+        ..Default::default()
+    });
+    let mut net = paper_mlp(101);
+    let tr = train(
+        &mut net,
+        &data.train_x,
+        &data.train_y,
+        SgdConfig { epochs: if quick { 6 } else { 14 }, lr: 0.08, ..Default::default() },
+    );
+    let fp32 = net.accuracy_f64(&data.test_x, &data.test_y);
+    println!("loss curve: {:?}", tr.loss_curve.iter().map(|l| fnum(*l)).collect::<Vec<_>>());
+    println!("fp32 test accuracy: {}", fnum(fp32));
+
+    // ---- quantise + deploy behind the server
+    let (weights, clipped) = quantize_network(&net)?;
+    println!("quantised weights ({clipped} clipped)");
+    let config = ServerConfig {
+        precision: Precision::Fxp8,
+        governor: GovernorConfig { approx_threshold: 12, accurate_threshold: 3, pinned: None },
+        ..Default::default()
+    };
+    let mut server = Server::start("artifacts", weights, config)?;
+
+    // ---- replay the test set as a bursty request stream
+    let n_requests = if quick { 96 } else { 768 };
+    let mut rng = Xoshiro256::new(77);
+    let mut order: Vec<usize> = (0..data.test_x.len()).collect();
+    rng.shuffle(&mut order);
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        let idx = order[i % order.len()];
+        pending.push((idx, server.submit(data.test_x[idx].data().to_vec())?));
+        // bursty arrivals: occasionally pause so the governor sees both
+        // pressure and drain
+        if i % 64 == 63 {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+    }
+    let mut correct = 0usize;
+    let mut served_approx = 0usize;
+    for (idx, rx) in pending {
+        let resp = rx.recv()?;
+        if resp.class == data.test_y[idx] {
+            correct += 1;
+        }
+        if resp.mode == corvet::cordic::mac::ExecMode::Approximate {
+            served_approx += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = server.shutdown()?;
+
+    let served_acc = correct as f64 / n_requests as f64;
+    println!("--- e2e serving results ---");
+    println!("requests             : {n_requests}");
+    println!("served accuracy      : {} (fp32 {})", fnum(served_acc), fnum(fp32));
+    println!("throughput           : {} req/s", fnum(n_requests as f64 / wall.as_secs_f64()));
+    println!(
+        "latency mean/p50/p99 : {} / {} / {} ms",
+        fnum(snap.latency.mean_ms),
+        fnum(snap.latency.p50_ms),
+        fnum(snap.latency.p99_ms)
+    );
+    println!("batches (mean size)  : {} ({})", snap.batches, fnum(snap.mean_batch));
+    println!("served approximate   : {served_approx}/{n_requests}");
+
+    // sanity: quantised serving shouldn't lose more than a few points
+    anyhow::ensure!(
+        served_acc > fp32 - 0.08,
+        "served accuracy {served_acc} too far below fp32 {fp32}"
+    );
+    println!("serving e2e OK");
+    Ok(())
+}

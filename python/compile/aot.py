@@ -1,0 +1,80 @@
+"""AOT lowering: JAX model -> HLO **text** artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Writes one artifact per (precision, mode, batch) configuration plus a
+manifest the Rust artifact registry parses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+
+from .model import example_args, make_forward
+
+jax.config.update("jax_enable_x64", True)
+
+#: the artifact matrix: paper operating points x serving batch shapes
+CONFIGS = [
+    ("fxp8", "approx"),
+    ("fxp8", "accurate"),
+    ("fxp16", "approx"),
+    ("fxp16", "accurate"),
+]
+BATCHES = [1, 8]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def artifact_name(precision: str, mode: str, batch: int) -> str:
+    return f"mlp_{precision}_{mode}_b{batch}.hlo.txt"
+
+
+def lower_one(precision: str, mode: str, batch: int) -> str:
+    fwd = make_forward(precision, mode, batch)
+    lowered = jax.jit(fwd).lower(*example_args(batch))
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None, help="(legacy) single-artifact path; ignored")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = []
+    for precision, mode in CONFIGS:
+        for batch in BATCHES:
+            name = artifact_name(precision, mode, batch)
+            text = lower_one(precision, mode, batch)
+            path = os.path.join(args.out_dir, name)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest.append(f"{name}\t{precision}\t{mode}\t{batch}")
+            print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.tsv"), "w") as f:
+        f.write("# file\tprecision\tmode\tbatch\n")
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote manifest with {len(manifest)} artifacts")
+
+
+if __name__ == "__main__":
+    main()

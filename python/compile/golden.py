@@ -1,0 +1,91 @@
+"""Golden-vector generation: the §IV-B cross-validation analogue.
+
+The paper validates its RTL against the software emulation model with
+randomised test vectors. Here the roles are: the **Python fixed-point
+oracle** (ref.py, which the Pallas kernels are bit-exact against) generates
+golden vectors, and the **Rust CORDIC model** (rust/tests/golden_crossval.rs)
+must reproduce them — bit-exactly for the linear-mode MAC (identical
+algorithm on both sides), and within a tight tolerance for the activation
+functions (independent formulations of the same datapath).
+
+Usage: cd python && python -m compile.golden --out ../artifacts/golden.tsv
+Runs as part of `make artifacts`.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from .kernels import ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+def gen_mac_vectors(rng, n: int):
+    """Random MAC accumulations: acc' = acc + x*w, |w| < 1."""
+    rows = []
+    for _ in range(n):
+        iters = int(rng.choice([8, 10, 14, 18]))
+        acc = int(ref.to_guard(rng.uniform(-4, 4)))
+        x = int(ref.to_guard(rng.uniform(-2, 2)))
+        w = int(ref.to_guard(rng.uniform(-0.999, 0.999)))
+        prod = int(np.asarray(ref.cordic_mul_ref(np.int64(x), np.int64(w), iters)))
+        rows.append(("mac", iters, [acc, x, w], acc + prod))
+    return rows
+
+
+def gen_dot_vectors(rng, n: int):
+    """Random short dot products through the layer oracle."""
+    rows = []
+    for _ in range(n):
+        iters = int(rng.choice([8, 10, 14, 18]))
+        j = int(rng.integers(2, 12))
+        xs = np.asarray(ref.to_guard(rng.uniform(-1, 1, size=(1, j))))
+        ws = np.asarray(ref.to_guard(rng.uniform(-0.999, 0.999, size=(j, 1))))
+        b = np.asarray(ref.to_guard(rng.uniform(-0.25, 0.25, size=(1,))))
+        out = int(np.asarray(ref.cordic_mac_ref(xs, ws, b, iters))[0, 0])
+        operands = [int(v) for v in xs.ravel()] + [int(v) for v in ws.ravel()] + [int(b[0])]
+        rows.append(("dot", iters, operands, out))
+    return rows
+
+
+def gen_af_vectors(rng, n: int):
+    """Sigmoid/tanh vectors (tolerance-checked on the Rust side: the Rust
+    AF block uses an equivalent but differently-factored datapath)."""
+    rows = []
+    for _ in range(n):
+        iters = int(rng.choice([12, 16, 20]))
+        t = int(ref.to_guard(rng.uniform(-6, 6)))
+        s = int(np.asarray(ref.sigmoid_ref_fixed(np.int64(t), iters)))
+        rows.append(("sigmoid", iters, [t], s))
+        th = int(np.asarray(ref.tanh_ref_fixed(np.int64(t), iters)))
+        rows.append(("tanh", iters, [t], th))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/golden.tsv")
+    ap.add_argument("--count", type=int, default=200)
+    ap.add_argument("--seed", type=int, default=20260710)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(args.seed)
+    rows = []
+    rows += gen_mac_vectors(rng, args.count)
+    rows += gen_dot_vectors(rng, args.count // 2)
+    rows += gen_af_vectors(rng, args.count // 2)
+
+    with open(args.out, "w") as f:
+        f.write("# kind\titers\toperands(comma-sep raw i64, guard Q.28)\texpected(raw i64)\n")
+        for kind, iters, operands, expected in rows:
+            ops = ",".join(str(v) for v in operands)
+            f.write(f"{kind}\t{iters}\t{ops}\t{expected}\n")
+    print(f"wrote {len(rows)} golden vectors to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Layer-1 Pallas kernel: CORDIC sigmoid/tanh (the multi-AF block's HR+LV
+datapath) as an elementwise tile.
+
+Formulation (overflow-free in the guard format, identical to
+``ref.sigmoid_ref_fixed``):
+
+    sigmoid(t) = 1 / (1 + e^-|t|),  mirrored for t < 0
+    e^-a       = (cosh r - sinh r) >> j,   a = j*ln2 + r, |r| <= ln2/2
+    cosh/sinh  — hyperbolic rotation (HR mode)
+    1/(1+u)    — linear vectoring (LV mode)
+
+tanh derives as 2*sigmoid(2t) - 1 through the same datapath (the switching
+multiplexer of Fig. 10).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import (
+    GUARD_FRAC,
+    INV_LN2_Q20,
+    LN2,
+    ONE,
+    atanh_table,
+    gain_inverse,
+    hyperbolic_schedule,
+)
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _sigmoid_kernel(t_ref, o_ref, *, iters: int):
+    t = t_ref[...]
+    a = jnp.abs(t)
+    j = ((a >> 8) * INV_LN2_Q20 + (np.int64(1) << 39)) >> 40
+    r = a - j * LN2
+
+    # HR mode: rotate (1/Kh, 0) through -r -> x+y = e^-r
+    x = jnp.full(t.shape, gain_inverse(iters), jnp.int64)
+    y = jnp.zeros(t.shape, jnp.int64)
+    z = -r
+    tab = atanh_table(GUARD_FRAC + 2)
+    for i in hyperbolic_schedule(iters):
+        e = np.int64(tab[i])
+        pos = z >= 0
+        nx = x + jnp.where(pos, y >> i, -(y >> i))
+        ny = y + jnp.where(pos, x >> i, -(x >> i))
+        x, y = nx, ny
+        z = z - jnp.where(pos, e, -e)
+    e_neg_a = (x + y) >> jnp.clip(j, 0, 62).astype(jnp.int64)
+
+    # LV mode: q = ONE / (ONE + e^-a)
+    denom = ONE + e_neg_a
+    q = jnp.zeros(t.shape, jnp.int64)
+    rem = jnp.full(t.shape, ONE, jnp.int64)
+    for i in range(iters):
+        e = np.int64(1) << (GUARD_FRAC - i) if i <= GUARD_FRAC else np.int64(0)
+        pos = rem >= 0
+        rem = rem - jnp.where(pos, denom >> i, -(denom >> i))
+        q = q + jnp.where(pos, e, -e)
+    o_ref[...] = jnp.where(t >= 0, q, ONE - q)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def cordic_sigmoid(t, *, iters: int):
+    """Elementwise CORDIC sigmoid on int64 guard-format input [B, N]."""
+    bsz, n = t.shape
+    kernel = functools.partial(_sigmoid_kernel, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((None, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((None, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.int64),
+        interpret=True,
+    )(t)
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def cordic_tanh(t, *, iters: int):
+    """tanh through the sigmoid datapath: 2*sigmoid(2t) - 1."""
+    return (cordic_sigmoid(t << 1, iters=iters) << 1) - ONE
+
+
+def _softmax_kernel(t_ref, o_ref, *, iters: int):
+    """SoftMax over the last axis: HR-mode exp per element (max-shifted, so
+    every exponent is <= 0 and the datapath never overflows), FIFO-style
+    accumulation, then LV-mode normalisation by the running sum."""
+    t = t_ref[...]
+    m = jnp.max(t, axis=-1, keepdims=True)
+    a = m - t  # >= 0; exp(-(a)) through the same e^-x machinery as sigmoid
+    j = ((a >> 8) * INV_LN2_Q20 + (np.int64(1) << 39)) >> 40
+    r = a - j * LN2
+
+    x = jnp.full(t.shape, gain_inverse(iters), jnp.int64)
+    y = jnp.zeros(t.shape, jnp.int64)
+    z = -r
+    tab = atanh_table(GUARD_FRAC + 2)
+    for i in hyperbolic_schedule(iters):
+        e = np.int64(tab[i])
+        pos = z >= 0
+        nx = x + jnp.where(pos, y >> i, -(y >> i))
+        ny = y + jnp.where(pos, x >> i, -(x >> i))
+        x, y = nx, ny
+        z = z - jnp.where(pos, e, -e)
+    exps = (x + y) >> jnp.clip(j, 0, 62).astype(jnp.int64)  # e^(t - max)
+
+    denom = jnp.sum(exps, axis=-1, keepdims=True)  # in [ONE, N*ONE]
+    # LV division q = exps/denom in [0, 1]: prescale numerator is not
+    # needed since exps <= denom elementwise.
+    q = jnp.zeros(t.shape, jnp.int64)
+    rem = exps
+    for i in range(iters):
+        e = np.int64(1) << (GUARD_FRAC - i) if i <= GUARD_FRAC else np.int64(0)
+        pos = rem >= 0
+        rem = rem - jnp.where(pos, denom >> i, -(denom >> i))
+        q = q + jnp.where(pos, e, -e)
+    o_ref[...] = q
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def cordic_softmax(t, *, iters: int):
+    """SoftMax over the last axis of an int64 guard-format [B, N] tensor."""
+    bsz, n = t.shape
+    kernel = functools.partial(_softmax_kernel, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[pl.BlockSpec((None, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((None, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.int64),
+        interpret=True,
+    )(t)

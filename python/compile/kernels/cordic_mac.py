@@ -1,0 +1,80 @@
+"""Layer-1 Pallas kernel: the iterative CORDIC MAC as a dense-layer tile.
+
+The paper's hot-spot — every multiply in a dense/conv layer executed as a
+linear-mode CORDIC iteration (shift + add/sub + mux, no multiplier) — as a
+Pallas kernel. One grid step processes one batch row: the lane dimension of
+the vector engine maps onto the kernel's [J, N] element-parallel tile (the
+VPU axis on real hardware), and the iteration loop is a statically unrolled
+sequence of shift/add vector ops, exactly the paper's per-cycle micro-
+rotation.
+
+HARDWARE ADAPTATION (DESIGN.md §Hardware-Adaptation): on a real TPU this
+kernel deliberately avoids the MXU — the whole point of CORVET is a
+multiplier-free datapath — so the roofline comparison is against the VPU.
+``interpret=True`` is mandatory here: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that the Rust
+runtime can load.
+
+All arithmetic is int64 in the guard format ``Q(63-28).28`` shared with
+``ref.py`` and the Rust model — the three implementations are bit-identical.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .ref import GUARD_FRAC
+
+jax.config.update("jax_enable_x64", True)
+
+
+def _mac_kernel(x_ref, w_ref, b_ref, o_ref, *, iters: int):
+    """One batch row: o[N] = b[N] + sum_j cordic_mul(x[j], w[j, n])."""
+    x = x_ref[...]  # [J]
+    w = w_ref[...]  # [J, N]
+    xb = x[:, None]  # [J, 1] broadcast against lanes
+    y = jnp.zeros(w.shape, jnp.int64)
+    z = w
+    for i in range(iters):
+        e = np.int64(1) << (GUARD_FRAC - i) if i <= GUARD_FRAC else np.int64(0)
+        pos = z >= 0
+        y = y + jnp.where(pos, xb >> i, -(xb >> i))
+        z = z - jnp.where(pos, e, -e)
+    o_ref[...] = y.sum(axis=0) + b_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("iters",))
+def cordic_dense(x, w, b, *, iters: int):
+    """Dense layer on the CORDIC MAC kernel.
+
+    Args:
+      x: int64[B, J] guard-format activations.
+      w: int64[J, N] guard-format weights, |w| < ONE (pre-normalised by the
+         quantiser — the hardware's prescaler guarantee).
+      b: int64[N] guard-format biases.
+      iters: micro-rotations per MAC (8/10/14/18 for the paper's modes).
+
+    Returns:
+      int64[B, N] guard-format pre-activations.
+    """
+    bsz, j = x.shape
+    j2, n = w.shape
+    assert j == j2, f"shape mismatch {x.shape} @ {w.shape}"
+    kernel = functools.partial(_mac_kernel, iters=iters)
+    return pl.pallas_call(
+        kernel,
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((None, j), lambda i: (i, 0)),
+            pl.BlockSpec((j, n), lambda i: (0, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((None, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, n), jnp.int64),
+        interpret=True,
+    )(x, w, b)

@@ -1,0 +1,181 @@
+"""Pure-jnp oracles for the Pallas CORDIC kernels.
+
+Two reference levels:
+
+* ``*_float`` — FP32 semantics (what the fixed-point path approximates);
+* ``cordic_mac_ref`` / ``sigmoid_ref_fixed`` — *bit-exact* fixed-point
+  models of the CORDIC iterations written in plain jnp (no pallas), used to
+  check that the Pallas kernels implement exactly the same shift/add
+  datapath (they must agree to the last bit).
+
+Fixed-point convention (mirrors ``rust/src/cordic``): int64 words in the
+guard format ``Q(63-GUARD_FRAC).GUARD_FRAC`` with ``GUARD_FRAC = 28``;
+arithmetic right shift == truncation toward -inf, exactly like the RTL
+shifter and the Rust model.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+jax.config.update("jax_enable_x64", True)
+
+GUARD_FRAC = 28
+ONE = np.int64(1) << GUARD_FRAC
+
+
+# Walther hyperbolic schedule with repeats at 4 and 13 (matches
+# rust/src/cordic/hyperbolic.rs::SCHEDULE).
+def hyperbolic_schedule(iters: int) -> list:
+    s = []
+    i = 1
+    while len(s) < iters:
+        s.append(i)
+        if i in (4, 13) and len(s) < iters:
+            s.append(i)
+        i += 1
+    return s[:iters]
+
+
+def gain_inverse(iters: int) -> np.int64:
+    """1/K_h for an ``iters``-rotation schedule, guard format."""
+    k = 1.0
+    for i in hyperbolic_schedule(iters):
+        k *= float(np.sqrt(1.0 - 2.0 ** (-2 * i)))
+    return np.int64(round((1.0 / k) * float(ONE)))
+
+
+def atanh_table(max_i: int) -> np.ndarray:
+    return np.array(
+        [round(float(np.arctanh(2.0 ** (-i))) * float(ONE)) if i > 0 else 0 for i in range(max_i + 1)],
+        dtype=np.int64,
+    )
+
+
+LN2 = np.int64(round(float(np.log(2.0)) * float(ONE)))
+INV_LN2_Q20 = np.int64(round((1.0 / float(np.log(2.0))) * (1 << 20)))
+
+
+def to_guard(x):
+    """f64 -> guard-format int64."""
+    return jnp.round(jnp.asarray(x, jnp.float64) * float(ONE)).astype(jnp.int64)
+
+
+def from_guard(g):
+    """guard-format int64 -> f64."""
+    return jnp.asarray(g, jnp.float64) / float(ONE)
+
+
+def quantize_to_guard(x, frac_bits: int):
+    """Quantise f64 to an n-frac-bit grid, then widen to the guard format
+    (models the datapath word entering the wide CORDIC unit)."""
+    x = jnp.asarray(x, jnp.float64)
+    q = jnp.round(x * (1 << frac_bits)).astype(jnp.int64)
+    return q << (GUARD_FRAC - frac_bits)
+
+
+# ---------------------------------------------------------------------------
+# bit-exact fixed-point references (plain jnp)
+# ---------------------------------------------------------------------------
+
+def cordic_mul_ref(x_g, z_g, iters: int):
+    """Linear-rotation multiply ``x*z`` (|z| < ONE), bit-exact.
+
+    x_g, z_g: int64 guard arrays (broadcastable). Returns int64 guard array.
+    """
+    x_g = jnp.asarray(x_g, jnp.int64)
+    z = jnp.asarray(z_g, jnp.int64)
+    shape = jnp.broadcast_shapes(x_g.shape, z.shape)
+    y = jnp.zeros(shape, jnp.int64)
+    z = jnp.broadcast_to(z, shape)
+    x_b = jnp.broadcast_to(x_g, shape)
+    for i in range(iters):
+        e = np.int64(1) << (GUARD_FRAC - i) if i <= GUARD_FRAC else np.int64(0)
+        pos = z >= 0
+        y = y + jnp.where(pos, x_b >> i, -(x_b >> i))
+        z = z - jnp.where(pos, e, -e)
+    return y
+
+
+def cordic_mac_ref(x_g, w_g, b_g, iters: int):
+    """Bit-exact dense layer: ``y[b,n] = bias[n] + sum_j x[b,j]*w[j,n]``.
+
+    x_g: [B, J], w_g: [J, N] (|w| < ONE), b_g: [N]. Guard int64.
+    """
+    prod = cordic_mul_ref(x_g[:, :, None], w_g[None, :, :], iters)  # [B,J,N]
+    return prod.sum(axis=1) + jnp.asarray(b_g, jnp.int64)[None, :]
+
+
+def sigmoid_ref_fixed(t_g, iters: int):
+    """Bit-exact CORDIC sigmoid (the Pallas kernel's oracle).
+
+    sigmoid(t) = 1/(1+e^-|t|) with symmetry for t < 0;
+    e^-a = e^-r >> j with a = j*ln2 + r, |r| <= ln2/2;
+    e^-r via hyperbolic rotation; the final ratio via linear vectoring.
+    """
+    t = jnp.asarray(t_g, jnp.int64)
+    a = jnp.abs(t)
+    # range-reduce: j = round(a / ln2) via a Q20 reciprocal multiply
+    # (a >> 8) keeps the product within int64 for any |t| < 2^35.
+    j = ((a >> 8) * INV_LN2_Q20 + (np.int64(1) << 39)) >> 40
+    r = a - j * LN2  # |r| <= ~ln2/2
+
+    # hyperbolic rotation through angle -r: x+y -> cosh - sinh = e^-r
+    x = jnp.full(t.shape, gain_inverse(iters), jnp.int64)
+    y = jnp.zeros(t.shape, jnp.int64)
+    z = -r
+    tab = atanh_table(GUARD_FRAC + 2)
+    for i in hyperbolic_schedule(iters):
+        e = tab[i]
+        pos = z >= 0
+        nx = x + jnp.where(pos, y >> i, -(y >> i))
+        ny = y + jnp.where(pos, x >> i, -(x >> i))
+        x, y = nx, ny
+        z = z - jnp.where(pos, e, -e)
+    e_neg_r = x + y
+    j_c = jnp.clip(j, 0, 62).astype(jnp.int64)
+    e_neg_a = e_neg_r >> j_c
+
+    # q = ONE / (ONE + e^-a) via linear vectoring; quotient in [0.5, 1]
+    denom = ONE + e_neg_a
+    q = jnp.zeros(t.shape, jnp.int64)
+    rem = jnp.full(t.shape, ONE, jnp.int64)
+    for i in range(iters):
+        e = np.int64(1) << (GUARD_FRAC - i) if i <= GUARD_FRAC else np.int64(0)
+        pos = rem >= 0
+        rem = rem - jnp.where(pos, denom >> i, -(denom >> i))
+        q = q + jnp.where(pos, e, -e)
+    return jnp.where(t >= 0, q, ONE - q)
+
+
+def tanh_ref_fixed(t_g, iters: int):
+    """tanh(t) = 2*sigmoid(2t) - ONE, bit-exact."""
+    t = jnp.asarray(t_g, jnp.int64)
+    return (sigmoid_ref_fixed(t << 1, iters) << 1) - ONE
+
+
+# ---------------------------------------------------------------------------
+# float references
+# ---------------------------------------------------------------------------
+
+def dense_float(x, w, b):
+    """FP64 dense layer reference."""
+    return jnp.asarray(x, jnp.float64) @ jnp.asarray(w, jnp.float64) + jnp.asarray(
+        b, jnp.float64
+    )
+
+
+def sigmoid_float(x):
+    return 1.0 / (1.0 + jnp.exp(-jnp.asarray(x, jnp.float64)))
+
+
+def mlp_float(x, params, hidden_act=sigmoid_float):
+    """Float reference of the full MLP: params = [(w, b), ...]."""
+    h = jnp.asarray(x, jnp.float64)
+    for li, (w, b) in enumerate(params):
+        h = dense_float(h, w, b)
+        if li + 1 < len(params):
+            h = hidden_act(h)
+    return h

@@ -1,0 +1,114 @@
+"""Layer-2 JAX model: the paper's 196-64-32-32-10 MLP with every matmul on
+the L1 CORDIC MAC kernel and every hidden activation on the L1 CORDIC
+sigmoid kernel.
+
+The model is **weight-parameterised**: weights/biases are runtime arguments
+of the compiled executable (quantised guard-format int64), so one artifact
+serves any trained parameter set — the Rust coordinator feeds the weights it
+trained/quantised itself. Outputs are float32 logits (dequantised at the
+boundary, where the hardware's read-out path sits).
+
+Configurations mirror the paper's runtime knobs:
+
+  precision ∈ {fxp4, fxp8, fxp16}  -> operand quantisation grid
+  mode      ∈ {approx, accurate}   -> CORDIC iteration budget
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.cordic_af import cordic_sigmoid
+from .kernels.cordic_mac import cordic_dense
+from .kernels.ref import GUARD_FRAC
+
+jax.config.update("jax_enable_x64", True)
+
+#: the Table V network
+LAYER_DIMS = (196, 64, 32, 32, 10)
+
+#: micro-rotation budgets per (precision, mode) — the §III-A cycle table
+#: times two stages per cycle (see rust/src/cordic/mac.rs).
+ITERATIONS = {
+    ("fxp4", "accurate"): 8,
+    ("fxp4", "approx"): 8,
+    ("fxp8", "approx"): 8,
+    ("fxp8", "accurate"): 10,
+    ("fxp16", "approx"): 14,
+    ("fxp16", "accurate"): 18,
+}
+
+#: fractional bits of the operand grid per precision (inputs/weights are
+#: normalised to (-1, 1), so the full word minus sign is fraction)
+FRAC_BITS = {"fxp4": 3, "fxp8": 7, "fxp16": 15}
+
+
+def mask_to_precision(g, frac_bits: int):
+    """Truncate a guard-format word to an ``frac_bits`` operand grid —
+    models the narrow datapath word entering the MAC."""
+    shift = GUARD_FRAC - frac_bits
+    return (g >> shift) << shift
+
+
+def mlp_forward(x, params, *, precision: str, mode: str):
+    """Forward pass.
+
+    Args:
+      x: int64[B, 196] guard-format inputs in (-1, 1).
+      params: flat tuple (w1, b1, ..., w4, b4); w int64[J, N] guard format
+        with |w| < ONE, b int64[N] guard format.
+      precision/mode: the runtime knobs (static at trace time; one artifact
+        per configuration).
+
+    Returns:
+      float32[B, 10] logits.
+    """
+    iters = ITERATIONS[(precision, mode)]
+    frac = FRAC_BITS[precision]
+    h = mask_to_precision(x, frac)
+    n_layers = len(params) // 2
+    for li in range(n_layers):
+        w = mask_to_precision(params[2 * li], frac)
+        b = params[2 * li + 1]
+        h = cordic_dense(h, w, b, iters=iters)
+        if li + 1 < n_layers:
+            h = cordic_sigmoid(h, iters=iters)
+            h = mask_to_precision(h, frac)
+    return (h.astype(jnp.float64) / float(1 << GUARD_FRAC)).astype(jnp.float32)
+
+
+def make_forward(precision: str, mode: str, batch: int):
+    """A jit-ready closure with static config and fixed batch size."""
+
+    @functools.wraps(mlp_forward)
+    def fwd(x, *params):
+        assert x.shape[0] == batch
+        return (mlp_forward(x, params, precision=precision, mode=mode),)
+
+    return fwd
+
+
+def example_args(batch: int):
+    """ShapeDtypeStructs for lowering: x plus the 4 (w, b) pairs."""
+    args = [jax.ShapeDtypeStruct((batch, LAYER_DIMS[0]), jnp.int64)]
+    for j, n in zip(LAYER_DIMS[:-1], LAYER_DIMS[1:]):
+        args.append(jax.ShapeDtypeStruct((j, n), jnp.int64))
+        args.append(jax.ShapeDtypeStruct((n,), jnp.int64))
+    return args
+
+
+def random_params(seed: int = 0, scale: float = 0.5):
+    """Deterministic random guard-format parameters (tests / smoke runs)."""
+    import numpy as np
+
+    rng = np.random.default_rng(seed)
+    params = []
+    for j, n in zip(LAYER_DIMS[:-1], LAYER_DIMS[1:]):
+        w = rng.uniform(-scale, scale, size=(j, n))
+        b = rng.uniform(-0.1, 0.1, size=(n,))
+        params.append(jnp.asarray(np.round(w * (1 << GUARD_FRAC)), jnp.int64))
+        params.append(jnp.asarray(np.round(b * (1 << GUARD_FRAC)), jnp.int64))
+    return tuple(params)

@@ -1,0 +1,197 @@
+"""L1 kernel correctness: Pallas CORDIC MAC / AF vs the pure-jnp oracle
+(bit-exact) and vs the float reference (mode-dependent tolerance).
+
+Hypothesis sweeps shapes and value ranges, as required for the L1 layer.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.cordic_af import cordic_sigmoid, cordic_tanh
+from compile.kernels.cordic_mac import cordic_dense
+
+jax.config.update("jax_enable_x64", True)
+
+MODES = [8, 10, 14, 18]  # the paper's iteration budgets
+
+
+def rand_guard(rng, shape, lo, hi):
+    return np.asarray(ref.to_guard(rng.uniform(lo, hi, size=shape)))
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness vs the jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("iters", MODES)
+def test_mac_bit_exact_vs_oracle(iters):
+    rng = np.random.default_rng(iters)
+    x = rand_guard(rng, (4, 9), -0.95, 0.95)
+    w = rand_guard(rng, (9, 5), -0.99, 0.99)
+    b = rand_guard(rng, (5,), -0.2, 0.2)
+    got = cordic_dense(x, w, b, iters=iters)
+    want = ref.cordic_mac_ref(x, w, b, iters)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+@pytest.mark.parametrize("iters", MODES)
+def test_sigmoid_bit_exact_vs_oracle(iters):
+    t = np.asarray(ref.to_guard(np.linspace(-8, 8, 64).reshape(4, 16)))
+    got = cordic_sigmoid(t, iters=iters)
+    want = ref.sigmoid_ref_fixed(t, iters)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+def test_tanh_bit_exact_vs_oracle():
+    t = np.asarray(ref.to_guard(np.linspace(-4, 4, 32).reshape(2, 16)))
+    got = cordic_tanh(t, iters=18)
+    want = ref.tanh_ref_fixed(t, 18)
+    assert (np.asarray(got) == np.asarray(want)).all()
+
+
+# ---------------------------------------------------------------------------
+# accuracy vs float reference, per mode
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("iters,tol", [(8, 2e-2), (10, 8e-3), (14, 1e-3), (18, 1e-4)])
+def test_mac_error_shrinks_with_iterations(iters, tol):
+    rng = np.random.default_rng(7)
+    x = rand_guard(rng, (3, 16), -0.9, 0.9)
+    w = rand_guard(rng, (16, 8), -0.99, 0.99)
+    b = rand_guard(rng, (8,), -0.1, 0.1)
+    got = ref.from_guard(cordic_dense(x, w, b, iters=iters))
+    want = ref.dense_float(ref.from_guard(x), ref.from_guard(w), ref.from_guard(b))
+    # error bound: per-MAC residual 2^-(n-1) * |x|, summed over J=16 terms
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=16 * tol)
+
+
+@pytest.mark.parametrize("iters", MODES)
+def test_sigmoid_close_to_float(iters):
+    t = np.asarray(ref.to_guard(np.linspace(-8, 8, 101).reshape(1, 101)))
+    got = ref.from_guard(cordic_sigmoid(t, iters=iters))
+    want = ref.sigmoid_float(ref.from_guard(t))
+    tol = 2.0 ** (-(iters - 3))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=float(tol))
+
+
+def test_sigmoid_bounds_and_symmetry():
+    t = np.asarray(ref.to_guard(np.linspace(-30, 30, 61).reshape(1, 61)))
+    s = np.asarray(ref.from_guard(cordic_sigmoid(t, iters=18)))
+    # LV vectoring overshoots by at most ~2^-(iters-1) of ripple
+    rip = 2.0 ** (-16)
+    assert (s >= -rip).all() and (s <= 1.0 + rip).all()
+    # sigmoid(-t) = 1 - sigmoid(t) up to the LV quotient ripple at t=0
+    # (the vectoring quotient of ONE/(2*ONE) is 0.5 ± 2^-(iters-1))
+    np.testing.assert_allclose(s + s[:, ::-1], 1.0, atol=2.0 ** (-15))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes, ranges, iteration budgets
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 5),
+    j=st.integers(1, 24),
+    n=st.integers(1, 12),
+    iters=st.sampled_from(MODES),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_mac_any_shape_matches_oracle_and_float(b, j, n, iters, seed):
+    rng = np.random.default_rng(seed)
+    x = rand_guard(rng, (b, j), -1.0, 1.0)
+    w = rand_guard(rng, (j, n), -0.999, 0.999)
+    bias = rand_guard(rng, (n,), -0.25, 0.25)
+    got = cordic_dense(x, w, bias, iters=iters)
+    want = ref.cordic_mac_ref(x, w, bias, iters)
+    assert (np.asarray(got) == np.asarray(want)).all(), "pallas != jnp oracle"
+    gf = ref.from_guard(got)
+    wf = ref.dense_float(ref.from_guard(x), ref.from_guard(w), ref.from_guard(bias))
+    bound = j * 2.0 ** (1 - iters) + j * 2.0**-24
+    np.testing.assert_allclose(np.asarray(gf), np.asarray(wf), atol=float(bound))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 32),
+    iters=st.sampled_from(MODES),
+    lo=st.floats(-12.0, -0.1),
+    hi=st.floats(0.1, 12.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_sigmoid_any_shape_monotone_and_exact(b, n, iters, lo, hi, seed):
+    rng = np.random.default_rng(seed)
+    vals = np.sort(rng.uniform(lo, hi, size=(b, n)), axis=1)
+    t = np.asarray(ref.to_guard(vals))
+    got = cordic_sigmoid(t, iters=iters)
+    want = ref.sigmoid_ref_fixed(t, iters)
+    assert (np.asarray(got) == np.asarray(want)).all(), "pallas != jnp oracle"
+    s = np.asarray(ref.from_guard(got))
+    # monotone along the sorted axis (allow tiny CORDIC ripple)
+    assert (np.diff(s, axis=1) >= -2.0 ** (-(iters - 4))).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_more_iterations_never_hurt_mac(seed):
+    rng = np.random.default_rng(seed)
+    x = rand_guard(rng, (2, 12), -0.9, 0.9)
+    w = rand_guard(rng, (12, 6), -0.99, 0.99)
+    bias = np.zeros(6, np.int64)
+    want = ref.dense_float(ref.from_guard(x), ref.from_guard(w), 0.0)
+    e8 = float(np.abs(np.asarray(ref.from_guard(cordic_dense(x, w, bias, iters=8))) - np.asarray(want)).max())
+    e18 = float(np.abs(np.asarray(ref.from_guard(cordic_dense(x, w, bias, iters=18))) - np.asarray(want)).max())
+    assert e18 <= e8 + 1e-9
+
+
+# ---------------------------------------------------------------------------
+# softmax kernel (the multi-AF block's LV-heavy function)
+# ---------------------------------------------------------------------------
+
+def _softmax_float(x):
+    x = np.asarray(x, np.float64)
+    e = np.exp(x - x.max(axis=-1, keepdims=True))
+    return e / e.sum(axis=-1, keepdims=True)
+
+
+@pytest.mark.parametrize("iters", MODES)
+def test_softmax_matches_float(iters):
+    from compile.kernels.cordic_af import cordic_softmax
+
+    rng = np.random.default_rng(iters)
+    vals = rng.uniform(-4, 4, size=(3, 10))
+    t = np.asarray(ref.to_guard(vals))
+    got = np.asarray(ref.from_guard(cordic_softmax(t, iters=iters)))
+    want = _softmax_float(vals)
+    np.testing.assert_allclose(got, want, atol=float(2.0 ** (-(iters - 4))))
+
+
+def test_softmax_is_distribution_and_shift_invariant():
+    from compile.kernels.cordic_af import cordic_softmax
+
+    rng = np.random.default_rng(7)
+    vals = rng.uniform(-3, 3, size=(4, 8))
+    t = np.asarray(ref.to_guard(vals))
+    s = np.asarray(ref.from_guard(cordic_softmax(t, iters=18)))
+    assert (s >= -2.0**-16).all()
+    np.testing.assert_allclose(s.sum(axis=-1), 1.0, atol=1e-3)
+    shifted = np.asarray(ref.to_guard(vals + 2.5))
+    s2 = np.asarray(ref.from_guard(cordic_softmax(shifted, iters=18)))
+    np.testing.assert_allclose(s, s2, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 3), n=st.integers(2, 16), seed=st.integers(0, 2**31 - 1))
+def test_softmax_any_shape_preserves_argmax(b, n, seed):
+    from compile.kernels.cordic_af import cordic_softmax
+
+    rng = np.random.default_rng(seed)
+    vals = rng.uniform(-4, 4, size=(b, n))
+    t = np.asarray(ref.to_guard(vals))
+    s = np.asarray(cordic_softmax(t, iters=14))
+    assert (s.argmax(axis=-1) == vals.argmax(axis=-1)).all()

@@ -1,0 +1,57 @@
+//! Bench: regenerate Fig. 13 — VGG-16 layer-wise execution time and power
+//! breakdown under runtime precision switching, plus mode ablations.
+
+use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::hwcost::engine_asic;
+use corvet::model::workloads::vgg16_trace;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::fnum;
+
+fn main() {
+    print!("{}", corvet::tables::fig13().render());
+
+    // ablation: uniform approx vs uniform accurate vs the mixed policy
+    let trace = vgg16_trace();
+    let cfg = EngineConfig::pe256();
+    let asic = engine_asic(&cfg, 4);
+    let clock = asic.freq_ghz * 1e9;
+    println!("\npolicy ablation (VGG-16, 256 PE):");
+    for (label, policy) in [
+        (
+            "all approximate",
+            PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, ExecMode::Approximate),
+        ),
+        (
+            "all accurate",
+            PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, ExecMode::Accurate),
+        ),
+        ("mixed (boundary accurate)", {
+            let mut p = PolicyTable::uniform(
+                trace.compute_layers(),
+                Precision::Fxp8,
+                ExecMode::Approximate,
+            );
+            let n = p.len();
+            p.layer_mut(0).mode = ExecMode::Accurate;
+            p.layer_mut(n - 1).mode = ExecMode::Accurate;
+            p
+        }),
+    ] {
+        let r = VectorEngine::new(cfg).run_trace(&trace, &policy);
+        println!(
+            "  {label:26}: {} ms, {} GOPS, util {}",
+            fnum(r.time_ms(clock)),
+            fnum(r.gops(clock)),
+            fnum(r.mean_pe_utilization())
+        );
+    }
+
+    let b = Bencher { warmup: 2, samples: 10, iters_per_sample: 5 };
+    let mut rep = BenchReport::new();
+    let policy =
+        PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    rep.push(b.run("simulate vgg16 256PE", || VectorEngine::new(cfg).run_trace(&trace, &policy)));
+    print!("{}", rep.render("fig13 simulator throughput"));
+}

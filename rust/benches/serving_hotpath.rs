@@ -1,0 +1,79 @@
+//! Bench: the L3 serving hot path over PJRT — per-call execute latency by
+//! batch size and mode, batching amortisation, and end-to-end server
+//! throughput. Skips gracefully when artifacts are not built.
+
+use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::coordinator::{BatcherConfig, Server, ServerConfig};
+use corvet::cordic::mac::ExecMode;
+use corvet::model::workloads::paper_mlp;
+use corvet::quant::Precision;
+use corvet::report::fnum;
+use corvet::runtime::{quantize_network, ArtifactRegistry, PjrtRuntime, GUARD_ONE};
+use corvet::testutil::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/manifest.tsv").exists() {
+        println!("serving_hotpath: artifacts not built (run `make artifacts`); skipping");
+        return Ok(());
+    }
+
+    let registry = ArtifactRegistry::load("artifacts")?;
+    let mut rt = PjrtRuntime::new()?;
+    let net = paper_mlp(1);
+    let (weights, _) = quantize_network(&net)?;
+    rt.deploy_weights(&weights)?;
+
+    let mut rng = Xoshiro256::new(2);
+    let x8: Vec<i64> =
+        (0..8 * 196).map(|_| (rng.uniform(-0.9, 0.9) * GUARD_ONE as f64) as i64).collect();
+
+    // --- per-call execute latency: batch x mode matrix
+    let b = Bencher { warmup: 3, samples: 15, iters_per_sample: 4 };
+    let mut rep = BenchReport::new();
+    for mode in [ExecMode::Approximate, ExecMode::Accurate] {
+        for batch in [1usize, 8] {
+            let spec = registry.find(Precision::Fxp8, mode, batch).unwrap().clone();
+            rt.load(&spec)?;
+            let x = &x8[..batch * 196];
+            rep.push(b.run(&format!("execute fxp8 {mode:?} b{batch}"), || {
+                rt.execute(&spec.path, x, batch).unwrap()
+            }));
+        }
+    }
+    print!("{}", rep.render("PJRT execute hot path"));
+
+    // batching amortisation: per-request cost at b=1 vs b=8
+    let r1 = rep.results().iter().find(|r| r.name.contains("Approximate b1")).unwrap();
+    let r8 = rep.results().iter().find(|r| r.name.contains("Approximate b8")).unwrap();
+    let amort = r1.mean_ns / (r8.mean_ns / 8.0);
+    println!(
+        "batching amortisation: b8 is {}x cheaper per request than b1 \
+         (the 4x-throughput claim's serving analogue)",
+        fnum(amort)
+    );
+
+    // --- end-to-end server throughput
+    let data_rng = &mut Xoshiro256::new(9);
+    let inputs: Vec<Vec<f64>> = (0..256).map(|_| data_rng.uniform_vec(196, -0.9, 0.9)).collect();
+    for max_batch in [1usize, 8] {
+        let (weights, _) = quantize_network(&net)?;
+        let mut cfg = ServerConfig { precision: Precision::Fxp8, ..Default::default() };
+        cfg.batcher = BatcherConfig { max_batch, ..Default::default() };
+        let mut server = Server::start("artifacts", weights, cfg)?;
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> =
+            inputs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
+        for rx in pending {
+            rx.recv()?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = server.shutdown()?;
+        println!(
+            "server max_batch={max_batch}: {} req/s, mean latency {} ms, mean batch {}",
+            fnum(256.0 / wall),
+            fnum(snap.latency.mean_ms),
+            fnum(snap.mean_batch)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Bench: regenerate Table II (MAC units) and micro-benchmark the
+//! behavioural MAC models (iterative CORDIC vs pipelined vs exact), plus
+//! the §III-A per-stage savings ablation.
+
+use corvet::baselines::{dot_cycles, ExactMac, PipelinedCordicMac};
+use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::cordic::mac::{CordicMac, ExecMode, MacConfig};
+use corvet::fxp::{Fxp, FXP8};
+use corvet::hwcost;
+use corvet::quant::Precision;
+use corvet::report::fnum;
+use corvet::testutil::Xoshiro256;
+
+fn main() {
+    // --- the table itself
+    print!("{}", corvet::tables::table2().render());
+
+    // --- cycle-model ablation (dot product of 196, the paper MLP's layer 1)
+    println!("\ncycle model for a 196-MAC dot product (FxP-8):");
+    for (mode, label) in [(ExecMode::Approximate, "approx"), (ExecMode::Accurate, "accurate")] {
+        let cfg = MacConfig::new(Precision::Fxp8, mode);
+        let (it, pipe, exact) = dot_cycles(cfg, 196);
+        println!("  {label:9}: iterative {it} cyc | pipelined {pipe} cyc | exact-mult {exact} cyc");
+    }
+
+    // --- §III-A per-stage savings
+    let it = hwcost::iterative_mac_asic(Precision::Fxp8);
+    let pipe = hwcost::pipelined_mac_asic(Precision::Fxp8, 8);
+    println!("\nper-stage savings vs pipelined CORDIC (paper claims 33% delay / 21% power):");
+    println!("  delay : {}", fnum(1.0 - (it.delay_ns / 2.0) / pipe.delay_ns));
+    println!("  power : {}", fnum(1.0 - (it.power_mw / 2.0) / (pipe.power_mw / 8.0)));
+
+    // --- host-side micro-benchmarks of the behavioural models
+    let mut rng = Xoshiro256::new(1);
+    let xs: Vec<Fxp> = (0..196).map(|_| Fxp::from_f64(rng.uniform(-1.0, 1.0), FXP8)).collect();
+    let ws: Vec<Fxp> = (0..196).map(|_| Fxp::from_f64(rng.uniform(-1.0, 1.0), FXP8)).collect();
+
+    let b = Bencher { warmup: 3, samples: 15, iters_per_sample: 20 };
+    let mut rep = BenchReport::new();
+    for (mode, label) in [(ExecMode::Approximate, "approx"), (ExecMode::Accurate, "accurate")] {
+        let cfg = MacConfig::new(Precision::Fxp8, mode);
+        rep.push(b.run(&format!("iterative-cordic dot196 {label}"), || {
+            let mut mac = CordicMac::new(cfg);
+            mac.dot(&xs, &ws, None)
+        }));
+        rep.push(b.run(&format!("pipelined-cordic dot196 {label}"), || {
+            let mut mac = PipelinedCordicMac::new(cfg);
+            mac.reset();
+            for (&x, &w) in xs.iter().zip(&ws) {
+                mac.mac(x, w);
+            }
+            mac.read()
+        }));
+    }
+    rep.push(b.run("exact-mult dot196", || {
+        let mut mac = ExactMac::new(FXP8);
+        mac.reset();
+        for (&x, &w) in xs.iter().zip(&ws) {
+            mac.mac(x, w);
+        }
+        mac.read()
+    }));
+    print!("{}", rep.render("table2_mac host-model microbench"));
+}

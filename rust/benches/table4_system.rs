@@ -1,0 +1,31 @@
+//! Bench: regenerate Table IV (FPGA system-level TinyYOLO-v3) and time the
+//! simulator over the trace at several configurations.
+
+use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::model::workloads::tinyyolo_trace;
+use corvet::quant::{PolicyTable, Precision};
+
+fn main() {
+    print!("{}", corvet::tables::table4().render());
+
+    let trace = tinyyolo_trace();
+    let b = Bencher { warmup: 2, samples: 10, iters_per_sample: 5 };
+    let mut rep = BenchReport::new();
+    for pes in [64usize, 256] {
+        let mut cfg = EngineConfig::pe256();
+        cfg.pes = pes;
+        cfg.af_blocks = (pes / 64).max(1);
+        cfg.pool_units = (pes / 8).max(1);
+        let policy = PolicyTable::uniform(
+            trace.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        );
+        rep.push(b.run(&format!("simulate tinyyolo {pes}PE"), || {
+            VectorEngine::new(cfg).run_trace(&trace, &policy)
+        }));
+    }
+    print!("{}", rep.render("table4_system simulator throughput"));
+}

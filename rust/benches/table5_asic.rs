@@ -1,0 +1,34 @@
+//! Bench: regenerate Table V (ASIC scalability) and sweep the PE count to
+//! expose the scaling law behind the 64→256 efficiency gain.
+
+use corvet::engine::EngineConfig;
+use corvet::hwcost::engine_asic;
+use corvet::report::{fnum, Table};
+
+fn main() {
+    print!("{}", corvet::tables::table5().render());
+
+    let mut sweep = Table::new(
+        "PE-count scaling sweep (FxP-8 approximate, calibrated cost model)",
+        &["PEs", "GHz", "mm²", "mW", "peak GOPS", "GOPS/W", "GOPS/mm²"],
+    );
+    for pes in [32usize, 64, 96, 128, 192, 256, 384, 512] {
+        let mut cfg = EngineConfig::pe256();
+        cfg.pes = pes;
+        cfg.af_blocks = (pes / 64).max(1);
+        cfg.pool_units = (pes / 8).max(1);
+        let r = engine_asic(&cfg, 4);
+        sweep.row(vec![
+            pes.to_string(),
+            fnum(r.freq_ghz),
+            fnum(r.area_mm2),
+            fnum(r.power_mw),
+            fnum(r.peak_gops),
+            fnum(r.peak_gops / (r.power_mw / 1e3)),
+            fnum(r.peak_gops / r.area_mm2),
+        ]);
+    }
+    print!("{}", sweep.render());
+    println!("(efficiency and density rise with PE count while fixed overheads amortise,");
+    println!(" then flatten as the broadcast clock penalty bites — Table V's trend.)");
+}

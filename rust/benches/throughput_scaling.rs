@@ -1,0 +1,76 @@
+//! Bench: the paper's 4× throughput claim — vectorised, time-multiplexed
+//! execution scales throughput with lane count within the same MAC design,
+//! plus the AF-overlap and prefetch ablations DESIGN.md calls out.
+
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::model::workloads::{tinyyolo_trace, vgg16_trace};
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::{fnum, Table};
+
+fn main() {
+    for trace in [vgg16_trace(), tinyyolo_trace()] {
+        let policy = PolicyTable::uniform(
+            trace.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        );
+        let mut t = Table::new(
+            &format!("throughput scaling — {} (fixed 1 GHz clock)", trace.name),
+            &["PEs", "cycles (M)", "GOPS @1GHz", "speedup vs 64PE", "PE util"],
+        );
+        let base = VectorEngine::new(with_pes(64)).run_trace(&trace, &policy);
+        for pes in [64usize, 128, 256] {
+            let r = VectorEngine::new(with_pes(pes)).run_trace(&trace, &policy);
+            t.row(vec![
+                pes.to_string(),
+                fnum(r.total_cycles as f64 / 1e6),
+                fnum(r.gops(1e9)),
+                fnum(base.total_cycles as f64 / r.total_cycles as f64),
+                fnum(r.mean_pe_utilization()),
+            ]);
+        }
+        print!("{}", t.render());
+    }
+
+    // ablations
+    let trace = vgg16_trace();
+    let policy =
+        PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    println!("\nablations (VGG-16, 256 PE, cycles in M):");
+    let base_cfg = with_pes(256);
+    let base = VectorEngine::new(base_cfg).run_trace(&trace, &policy);
+    println!("  baseline                  : {}", fnum(base.total_cycles as f64 / 1e6));
+    let mut no_overlap = base_cfg;
+    no_overlap.af_overlap = false;
+    let r = VectorEngine::new(no_overlap).run_trace(&trace, &policy);
+    println!(
+        "  no AF/MAC overlap         : {} ({}x)",
+        fnum(r.total_cycles as f64 / 1e6),
+        fnum(r.total_cycles as f64 / base.total_cycles as f64)
+    );
+    let mut one_af = base_cfg;
+    one_af.af_blocks = 1;
+    let r = VectorEngine::new(one_af).run_trace(&trace, &policy);
+    println!(
+        "  single AF block           : {} ({}x)",
+        fnum(r.total_cycles as f64 / 1e6),
+        fnum(r.total_cycles as f64 / base.total_cycles as f64)
+    );
+    let mut slow_mem = base_cfg;
+    slow_mem.burst_words = 4;
+    let r = VectorEngine::new(slow_mem).run_trace(&trace, &policy);
+    println!(
+        "  8x narrower memory bursts : {} ({}x)",
+        fnum(r.total_cycles as f64 / 1e6),
+        fnum(r.total_cycles as f64 / base.total_cycles as f64)
+    );
+}
+
+fn with_pes(pes: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::pe256();
+    cfg.pes = pes;
+    cfg.af_blocks = (pes / 64).max(1);
+    cfg.pool_units = (pes / 8).max(1);
+    cfg
+}

@@ -1,0 +1,187 @@
+//! The time-multiplexed multi-activation-function (multi-AF) block
+//! (paper §II-E, §III-D, Fig. 10).
+//!
+//! One CORDIC datapath, shared by **all** PEs and reused across **all**
+//! supported nonlinearities — Sigmoid, Tanh, SoftMax, GELU, Swish, ReLU,
+//! SELU — in two primary modes:
+//!
+//! * **HR** (hyperbolic rotation): anything needing sinh/cosh/exp;
+//! * **LV** (linear-vectoring / division): normalisation and ratios.
+//!
+//! Auxiliary logic: a switching mux for sigmoid/tanh selection, a ReLU
+//! bypass buffer, a FIFO for intermediate SoftMax storage, and two small
+//! multipliers for GELU — modelled here (for numerics + cycle accounting)
+//! and in [`crate::hwcost`] (for area/power).
+//!
+//! [`funcs`] holds the bit-accurate function implementations on guard-format
+//! words; [`scheduler`] models the time multiplexing across PEs and tracks
+//! the HR/LV utilisation factors the paper reports (86 % / 72 %).
+
+pub mod funcs;
+pub mod scheduler;
+
+pub use funcs::{AfCost, Datapath};
+pub use scheduler::{AfRequest, AfScheduler, UtilizationReport};
+
+use crate::cordic::{from_guard, to_guard};
+
+/// The supported nonlinear activation functions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ActFn {
+    /// Rectified linear unit (bypass buffer — no CORDIC use).
+    Relu,
+    /// Logistic sigmoid (HR + LV).
+    Sigmoid,
+    /// Hyperbolic tangent (HR + LV).
+    Tanh,
+    /// Gaussian-error linear unit, tanh approximation (HR + LV + 2 muls).
+    Gelu,
+    /// x · sigmoid(x) (HR + LV + 1 mul).
+    Swish,
+    /// Scaled exponential linear unit (HR + 1 mul).
+    Selu,
+    /// Softmax over a vector (HR per element + LV normalisation + FIFO).
+    Softmax,
+    /// Identity (no activation; zero cost) — for output layers.
+    Identity,
+}
+
+impl ActFn {
+    /// All scalar functions (softmax excluded: it is vector-valued).
+    pub const SCALAR: [ActFn; 7] = [
+        ActFn::Relu,
+        ActFn::Sigmoid,
+        ActFn::Tanh,
+        ActFn::Gelu,
+        ActFn::Swish,
+        ActFn::Selu,
+        ActFn::Identity,
+    ];
+
+    /// Parse a CLI/config name.
+    pub fn parse(s: &str) -> Option<ActFn> {
+        match s.to_ascii_lowercase().as_str() {
+            "relu" => Some(ActFn::Relu),
+            "sigmoid" => Some(ActFn::Sigmoid),
+            "tanh" => Some(ActFn::Tanh),
+            "gelu" => Some(ActFn::Gelu),
+            "swish" | "silu" => Some(ActFn::Swish),
+            "selu" => Some(ActFn::Selu),
+            "softmax" => Some(ActFn::Softmax),
+            "identity" | "none" | "linear" => Some(ActFn::Identity),
+            _ => None,
+        }
+    }
+
+    /// f64 reference implementation (the oracle the CORDIC path is tested
+    /// against; also used by the FP32 baseline network).
+    pub fn reference(&self, x: f64) -> f64 {
+        match self {
+            ActFn::Relu => x.max(0.0),
+            ActFn::Sigmoid => 1.0 / (1.0 + (-x).exp()),
+            ActFn::Tanh => x.tanh(),
+            ActFn::Gelu => {
+                let c = (2.0 / std::f64::consts::PI).sqrt();
+                0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+            }
+            ActFn::Swish => x / (1.0 + (-x).exp()),
+            ActFn::Selu => {
+                const LAMBDA: f64 = 1.0507009873554805;
+                const ALPHA: f64 = 1.6732632423543772;
+                if x > 0.0 {
+                    LAMBDA * x
+                } else {
+                    LAMBDA * ALPHA * (x.exp() - 1.0)
+                }
+            }
+            ActFn::Softmax => panic!("softmax is vector-valued; use reference_softmax"),
+            ActFn::Identity => x,
+        }
+    }
+}
+
+impl std::fmt::Display for ActFn {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ActFn::Relu => "ReLU",
+            ActFn::Sigmoid => "Sigmoid",
+            ActFn::Tanh => "Tanh",
+            ActFn::Gelu => "GELU",
+            ActFn::Swish => "Swish",
+            ActFn::Selu => "SELU",
+            ActFn::Softmax => "SoftMax",
+            ActFn::Identity => "Identity",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// f64 reference softmax.
+pub fn reference_softmax(xs: &[f64]) -> Vec<f64> {
+    let m = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let exps: Vec<f64> = xs.iter().map(|&x| (x - m).exp()).collect();
+    let sum: f64 = exps.iter().sum();
+    exps.iter().map(|&e| e / sum).collect()
+}
+
+/// The multi-AF block: function evaluation + cycle/datapath accounting.
+///
+/// One instance is shared per vector engine; PE-side calls go through the
+/// [`AfScheduler`] which serialises access (time multiplexing).
+#[derive(Debug, Clone)]
+pub struct MultiAfBlock {
+    /// Micro-rotation budget for the CORDIC phases of each function.
+    pub iters: u32,
+    total_cost: AfCost,
+    ops: u64,
+}
+
+impl MultiAfBlock {
+    /// Block with an iteration budget (accuracy knob, like the MAC's).
+    pub fn new(iters: u32) -> Self {
+        MultiAfBlock { iters, total_cost: AfCost::default(), ops: 0 }
+    }
+
+    /// Apply a scalar function to a guard-format word.
+    pub fn apply_raw(&mut self, f: ActFn, x: i64) -> (i64, AfCost) {
+        let (y, cost) = funcs::apply(f, x, self.iters);
+        self.total_cost = self.total_cost.merge(cost);
+        self.ops += 1;
+        (y, cost)
+    }
+
+    /// Apply a scalar function to an f64 (convenience: quantise → CORDIC →
+    /// dequantise; used by the network evaluator and tests).
+    pub fn apply_f64(&mut self, f: ActFn, x: f64) -> (f64, AfCost) {
+        let (y, c) = self.apply_raw(f, to_guard(x));
+        (from_guard(y), c)
+    }
+
+    /// Softmax over guard-format words.
+    pub fn softmax_raw(&mut self, xs: &[i64]) -> (Vec<i64>, AfCost) {
+        let (ys, cost) = funcs::softmax(xs, self.iters);
+        self.total_cost = self.total_cost.merge(cost);
+        self.ops += 1;
+        (ys, cost)
+    }
+
+    /// Softmax over f64s.
+    pub fn softmax_f64(&mut self, xs: &[f64]) -> (Vec<f64>, AfCost) {
+        let raw: Vec<i64> = xs.iter().map(|&x| to_guard(x)).collect();
+        let (ys, c) = self.softmax_raw(&raw);
+        (ys.iter().map(|&y| from_guard(y)).collect(), c)
+    }
+
+    /// Cumulative datapath cost since construction.
+    pub fn total_cost(&self) -> AfCost {
+        self.total_cost
+    }
+
+    /// Operations served.
+    pub fn ops(&self) -> u64 {
+        self.ops
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,348 @@
+//! Time-multiplexing scheduler for the shared multi-AF block.
+//!
+//! The block is a single physical resource shared by all PEs (paper §II-E):
+//! activation requests queue up and are served serially, overlapping with
+//! MAC computation of the *next* layer chunk wherever the dataflow allows.
+//! This module models that arbitration and produces the utilisation
+//! statistics the paper reports (§V-B: 86 % in HR mode, ~72 % in LV mode,
+//! <4 % area/power overhead — the latter lives in [`crate::hwcost`]).
+//!
+//! Utilisation here is *structural*: in a given mode, which fraction of the
+//! block's datapath components is switching (vs parked)? The component
+//! inventory mirrors Fig. 10: the CORDIC x/y/z adder-shifter triplet, the
+//! angle table, the sigmoid/tanh switching mux, the ReLU bypass buffer, the
+//! SoftMax FIFO and the two small GELU multipliers.
+
+use super::funcs::AfCost;
+use super::ActFn;
+use std::collections::VecDeque;
+
+/// One queued activation request from a PE.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AfRequest {
+    /// Issuing PE index.
+    pub pe: usize,
+    /// Requested function.
+    pub func: ActFn,
+    /// Cycle at which the request entered the queue.
+    pub issue_cycle: u64,
+    /// Number of scalar elements in the request (softmax length, or 1).
+    pub elements: usize,
+}
+
+/// Structural component inventory of the multi-AF block (relative cost
+/// units; absolute area/power scaling lives in `hwcost`).
+#[derive(Debug, Clone, Copy)]
+pub struct ComponentInventory {
+    /// CORDIC adder/shifter/register triplet (x, y, z paths).
+    pub cordic_core: f64,
+    /// Angle constant table (atanh/2^-i ROM).
+    pub angle_table: f64,
+    /// Sigmoid/Tanh switching multiplexer.
+    pub switch_mux: f64,
+    /// ReLU bypass buffer.
+    pub bypass_buf: f64,
+    /// SoftMax intermediate FIFO.
+    pub fifo: f64,
+    /// Two small auxiliary multipliers (GELU/Swish).
+    pub aux_muls: f64,
+}
+
+impl Default for ComponentInventory {
+    fn default() -> Self {
+        // Relative weights estimated from Fig. 10's datapath: the CORDIC
+        // core dominates; FIFO and aux multipliers are the "<4 % overhead"
+        // add-ons, mux/buffer are small.
+        ComponentInventory {
+            cordic_core: 60.0,
+            angle_table: 12.0,
+            switch_mux: 3.0,
+            bypass_buf: 2.0,
+            fifo: 9.0,
+            aux_muls: 14.0,
+        }
+    }
+}
+
+impl ComponentInventory {
+    /// Total component weight.
+    pub fn total(&self) -> f64 {
+        self.cordic_core + self.angle_table + self.switch_mux + self.bypass_buf + self.fifo
+            + self.aux_muls
+    }
+
+    /// Active component weight in HR mode: core + table + mux, plus the
+    /// FIFO when the op is softmax (exp results parked there).
+    pub fn active_hr(&self, softmax: bool) -> f64 {
+        let base = self.cordic_core + self.angle_table + self.switch_mux;
+        if softmax {
+            base + self.fifo
+        } else {
+            base
+        }
+    }
+
+    /// Active weight in LV mode: core (z-path + y-path) without the
+    /// hyperbolic angle table (linear e(i) needs no ROM).
+    pub fn active_lv(&self) -> f64 {
+        self.cordic_core + self.switch_mux
+    }
+
+    /// Active weight on the aux multipliers.
+    pub fn active_lin(&self) -> f64 {
+        self.aux_muls
+    }
+
+    /// Active weight on the bypass path.
+    pub fn active_bypass(&self) -> f64 {
+        self.bypass_buf
+    }
+}
+
+/// Utilisation statistics accumulated by the scheduler.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct UtilizationReport {
+    /// Cycles the block spent in HR mode.
+    pub hr_cycles: u64,
+    /// Cycles in LV mode.
+    pub lv_cycles: u64,
+    /// Cycles on the aux multipliers.
+    pub lin_cycles: u64,
+    /// Bypass-only cycles.
+    pub bypass_cycles: u64,
+    /// Idle cycles (queue empty while the engine was running).
+    pub idle_cycles: u64,
+    /// Component-weighted utilisation while in HR mode (paper: up to 86 %).
+    pub hr_utilization: f64,
+    /// Component-weighted utilisation while in LV mode (paper: ~72 %).
+    pub lv_utilization: f64,
+    /// Requests served.
+    pub served: u64,
+    /// Mean queueing delay (cycles a request waited before service).
+    pub mean_wait: f64,
+}
+
+impl UtilizationReport {
+    /// Busy fraction of total engine time.
+    pub fn busy_fraction(&self) -> f64 {
+        let busy = self.hr_cycles + self.lv_cycles + self.lin_cycles + self.bypass_cycles;
+        let total = busy + self.idle_cycles;
+        if total == 0 {
+            0.0
+        } else {
+            busy as f64 / total as f64
+        }
+    }
+}
+
+/// Serialising scheduler for the shared block.
+#[derive(Debug)]
+pub struct AfScheduler {
+    inventory: ComponentInventory,
+    queue: VecDeque<AfRequest>,
+    /// Engine clock at which the block becomes free.
+    free_at: u64,
+    // accumulators
+    hr: u64,
+    lv: u64,
+    lin: u64,
+    bypass: u64,
+    idle: u64,
+    served: u64,
+    wait_sum: u64,
+    hr_weighted: f64,
+    lv_weighted: f64,
+    last_advance: u64,
+}
+
+impl AfScheduler {
+    /// New scheduler with the default component inventory.
+    pub fn new() -> Self {
+        Self::with_inventory(ComponentInventory::default())
+    }
+
+    /// New scheduler with an explicit inventory (ablations).
+    pub fn with_inventory(inventory: ComponentInventory) -> Self {
+        AfScheduler {
+            inventory,
+            queue: VecDeque::new(),
+            free_at: 0,
+            hr: 0,
+            lv: 0,
+            lin: 0,
+            bypass: 0,
+            idle: 0,
+            served: 0,
+            wait_sum: 0,
+            hr_weighted: 0.0,
+            lv_weighted: 0.0,
+            last_advance: 0,
+        }
+    }
+
+    /// Enqueue a request at engine time `now`.
+    pub fn submit(&mut self, req: AfRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Serve the queue head given its datapath cost; returns the cycle at
+    /// which the result is available. `now` is the engine clock.
+    pub fn serve(&mut self, now: u64, cost: AfCost) -> u64 {
+        let req = self.queue.pop_front().expect("serve: empty AF queue");
+        let start = now.max(self.free_at).max(req.issue_cycle);
+        // idle gap between last busy period and this start
+        if start > self.free_at && self.free_at >= self.last_advance {
+            self.idle += start - self.free_at;
+        }
+        let softmax = req.func == ActFn::Softmax;
+
+        self.hr += cost.hr as u64;
+        self.lv += cost.lv as u64;
+        self.lin += cost.lin as u64;
+        self.bypass += cost.bypass as u64;
+        let inv = &self.inventory;
+        self.hr_weighted += cost.hr as f64 * inv.active_hr(softmax) / inv.total();
+        self.lv_weighted += cost.lv as f64 * inv.active_lv() / inv.total();
+
+        self.wait_sum += start - req.issue_cycle;
+        self.served += 1;
+        self.free_at = start + cost.total() as u64;
+        self.last_advance = start;
+        self.free_at
+    }
+
+    /// Number of requests waiting.
+    pub fn backlog(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Cycle at which the block is next free.
+    pub fn free_at(&self) -> u64 {
+        self.free_at
+    }
+
+    /// Snapshot the utilisation report.
+    pub fn report(&self) -> UtilizationReport {
+        UtilizationReport {
+            hr_cycles: self.hr,
+            lv_cycles: self.lv,
+            lin_cycles: self.lin,
+            bypass_cycles: self.bypass,
+            idle_cycles: self.idle,
+            hr_utilization: if self.hr == 0 { 0.0 } else { self.hr_weighted / self.hr as f64 },
+            lv_utilization: if self.lv == 0 { 0.0 } else { self.lv_weighted / self.lv as f64 },
+            served: self.served,
+            mean_wait: if self.served == 0 {
+                0.0
+            } else {
+                self.wait_sum as f64 / self.served as f64
+            },
+        }
+    }
+}
+
+impl Default for AfScheduler {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(pe: usize, func: ActFn, at: u64) -> AfRequest {
+        AfRequest { pe, func, issue_cycle: at, elements: 1 }
+    }
+
+    fn cost_hr_lv(hr: u32, lv: u32) -> AfCost {
+        AfCost { hr, lv, ..Default::default() }
+    }
+
+    #[test]
+    fn serial_service_orders_requests() {
+        let mut s = AfScheduler::new();
+        s.submit(req(0, ActFn::Sigmoid, 0));
+        s.submit(req(1, ActFn::Sigmoid, 0));
+        let t0 = s.serve(0, cost_hr_lv(10, 10));
+        let t1 = s.serve(0, cost_hr_lv(10, 10));
+        assert_eq!(t0, 20);
+        assert_eq!(t1, 40, "second request must wait for the shared block");
+    }
+
+    #[test]
+    fn hr_utilization_matches_paper_band() {
+        // Plain tanh/sigmoid traffic: HR-mode structural utilisation should
+        // land in the paper's "up to 86 %" band.
+        let mut s = AfScheduler::new();
+        for i in 0..100 {
+            s.submit(req(i % 8, ActFn::Tanh, i as u64));
+        }
+        for _ in 0..100 {
+            let now = s.free_at();
+            s.serve(now, cost_hr_lv(12, 12));
+        }
+        let r = s.report();
+        assert!(
+            (0.70..=0.90).contains(&r.hr_utilization),
+            "HR utilisation {} outside band",
+            r.hr_utilization
+        );
+        assert!(r.hr_utilization <= 0.86 + 1e-9, "paper caps at 86 %");
+    }
+
+    #[test]
+    fn lv_utilization_below_hr() {
+        let mut s = AfScheduler::new();
+        for i in 0..50 {
+            s.submit(req(0, ActFn::Softmax, i));
+        }
+        for _ in 0..50 {
+            let now = s.free_at();
+            s.serve(now, cost_hr_lv(12, 12));
+        }
+        let r = s.report();
+        assert!(
+            r.lv_utilization < r.hr_utilization,
+            "LV {} should be below HR {}",
+            r.lv_utilization,
+            r.hr_utilization
+        );
+        assert!((0.6..=0.8).contains(&r.lv_utilization), "LV {}", r.lv_utilization);
+    }
+
+    #[test]
+    fn idle_cycles_tracked_when_queue_gaps() {
+        let mut s = AfScheduler::new();
+        s.submit(req(0, ActFn::Relu, 0));
+        s.serve(0, AfCost { bypass: 1, ..Default::default() });
+        s.submit(req(0, ActFn::Relu, 100));
+        s.serve(100, AfCost { bypass: 1, ..Default::default() });
+        let r = s.report();
+        assert!(r.idle_cycles >= 99, "idle = {}", r.idle_cycles);
+        assert!(r.busy_fraction() < 0.1);
+    }
+
+    #[test]
+    fn mean_wait_grows_under_contention() {
+        let mut uncontended = AfScheduler::new();
+        uncontended.submit(req(0, ActFn::Tanh, 0));
+        uncontended.serve(0, cost_hr_lv(10, 10));
+
+        let mut contended = AfScheduler::new();
+        for i in 0..10 {
+            contended.submit(req(i, ActFn::Tanh, 0));
+        }
+        for _ in 0..10 {
+            let now = contended.free_at();
+            contended.serve(now, cost_hr_lv(10, 10));
+        }
+        assert!(contended.report().mean_wait > uncontended.report().mean_wait);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty AF queue")]
+    fn serve_empty_panics() {
+        AfScheduler::new().serve(0, AfCost::default());
+    }
+}

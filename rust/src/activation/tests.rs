@@ -1,0 +1,90 @@
+//! Integration tests for the multi-AF block facade.
+
+use super::*;
+use crate::testutil::check_prop;
+
+#[test]
+fn block_applies_every_scalar_function() {
+    let mut block = MultiAfBlock::new(24);
+    for f in ActFn::SCALAR {
+        for x in [-2.0, -0.5, 0.0, 0.5, 2.0] {
+            let (y, _) = block.apply_f64(f, x);
+            let want = f.reference(x);
+            assert!(
+                (y - want).abs() < 3e-3 * (1.0 + want.abs()),
+                "{f}({x}): got {y} want {want}"
+            );
+        }
+    }
+    assert_eq!(block.ops(), (ActFn::SCALAR.len() * 5) as u64);
+}
+
+#[test]
+fn block_softmax_matches_reference() {
+    let mut block = MultiAfBlock::new(24);
+    let xs = [0.1, -1.0, 2.0, 0.0];
+    let (ys, cost) = block.softmax_f64(&xs);
+    let want = reference_softmax(&xs);
+    for (y, w) in ys.iter().zip(&want) {
+        assert!((y - w).abs() < 2e-3, "got {y} want {w}");
+    }
+    assert!(cost.hr > 0 && cost.lv > 0);
+}
+
+#[test]
+fn block_accumulates_cost() {
+    let mut block = MultiAfBlock::new(16);
+    let before = block.total_cost().total();
+    block.apply_f64(ActFn::Tanh, 0.5);
+    block.apply_f64(ActFn::Relu, -0.5);
+    let after = block.total_cost().total();
+    assert!(after > before);
+}
+
+#[test]
+fn parse_roundtrip() {
+    for f in ActFn::SCALAR {
+        let name = format!("{f}");
+        assert_eq!(ActFn::parse(&name), Some(f), "parse({name})");
+    }
+    assert_eq!(ActFn::parse("softmax"), Some(ActFn::Softmax));
+    assert_eq!(ActFn::parse("nope"), None);
+}
+
+#[test]
+fn reference_softmax_invariant_to_shift() {
+    let a = reference_softmax(&[1.0, 2.0, 3.0]);
+    let b = reference_softmax(&[101.0, 102.0, 103.0]);
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_gelu_between_relu_and_identity_for_positive() {
+    check_prop("0 <= gelu(x) <= x for x >= 0", |rng| {
+        let mut block = MultiAfBlock::new(24);
+        let x = rng.uniform(0.0, 4.0);
+        let (y, _) = block.apply_f64(ActFn::Gelu, x);
+        if y >= -2e-3 && y <= x + 2e-3 {
+            Ok(())
+        } else {
+            Err(format!("gelu({x}) = {y}"))
+        }
+    });
+}
+
+#[test]
+fn prop_swish_equals_x_times_sigmoid() {
+    check_prop("swish == x*sigmoid within tolerance", |rng| {
+        let mut block = MultiAfBlock::new(24);
+        let x = rng.uniform(-4.0, 4.0);
+        let (sw, _) = block.apply_f64(ActFn::Swish, x);
+        let (sg, _) = block.apply_f64(ActFn::Sigmoid, x);
+        if (sw - x * sg).abs() < 5e-3 * (1.0 + x.abs()) {
+            Ok(())
+        } else {
+            Err(format!("swish({x})={sw} vs x*sig={}", x * sg))
+        }
+    });
+}

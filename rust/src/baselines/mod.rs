@@ -1,0 +1,197 @@
+//! Behavioural baseline MAC designs for ablations.
+//!
+//! The paper compares its iterative CORDIC MAC against pipelined CORDIC and
+//! exact-multiplier designs. For ablation benches we need *functional*
+//! models of those baselines, not just cost rows:
+//!
+//! * [`ExactMac`] — conventional multiplier + wide accumulator (Quant-MAC
+//!   style): 1 cycle/MAC, exact within the format grid;
+//! * [`PipelinedCordicMac`] — N unrolled CORDIC stages: identical numerics
+//!   to the iterative unit at the same iteration count, 1 MAC retired per
+//!   cycle after an N-cycle fill, N× the area (see
+//!   [`crate::hwcost::pipelined_mac_asic`]).
+
+use crate::cordic::mac::MacConfig;
+#[cfg(test)]
+use crate::cordic::mac::CordicMac;
+use crate::cordic::{cycles_for_iters, linear, GUARD_FRAC};
+use crate::fxp::{Format, Fxp};
+
+/// Exact-multiplier MAC baseline: one cycle per MAC, exact products
+/// truncated into a wide accumulator.
+#[derive(Debug, Clone)]
+pub struct ExactMac {
+    format: Format,
+    acc: i64, // guard format
+    cycles: u64,
+    macs: u64,
+}
+
+impl ExactMac {
+    /// New exact MAC in a datapath format.
+    pub fn new(format: Format) -> Self {
+        ExactMac { format, acc: 0, cycles: 0, macs: 0 }
+    }
+
+    /// Zero the accumulator.
+    pub fn reset(&mut self) {
+        self.acc = 0;
+    }
+
+    /// acc += x*w (exact product), 1 cycle.
+    pub fn mac(&mut self, x: Fxp, w: Fxp) -> u32 {
+        debug_assert_eq!(x.format(), self.format);
+        debug_assert_eq!(w.format(), self.format);
+        // exact product has 2*frac fractional bits; align to guard
+        let wide = x.raw() * w.raw();
+        let f2 = 2 * self.format.frac_bits;
+        self.acc += if f2 <= GUARD_FRAC { wide << (GUARD_FRAC - f2) } else { wide >> (f2 - GUARD_FRAC) };
+        self.cycles += 1;
+        self.macs += 1;
+        1
+    }
+
+    /// Read the accumulator in the datapath format.
+    pub fn read(&self) -> Fxp {
+        let raw = self.acc >> (GUARD_FRAC - self.format.frac_bits);
+        Fxp::from_raw(raw, self.format)
+    }
+
+    /// Cycles so far.
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles
+    }
+}
+
+/// Pipelined CORDIC MAC: same micro-rotations as the iterative unit,
+/// organised as a free-running pipeline — issue 1 MAC/cycle, `depth`-cycle
+/// latency. Numerics are identical to [`CordicMac`] at equal iteration
+/// count (it is the same datapath, unrolled), so this model reuses the
+/// linear-mode CORDIC and only the *timing* differs.
+#[derive(Debug, Clone)]
+pub struct PipelinedCordicMac {
+    config: MacConfig,
+    acc: i64,
+    issued: u64,
+}
+
+impl PipelinedCordicMac {
+    /// New pipelined unit.
+    pub fn new(config: MacConfig) -> Self {
+        PipelinedCordicMac { config, acc: 0, issued: 0 }
+    }
+
+    /// Pipeline depth in cycles (one stage per clock; the unrolled design
+    /// does not share stages, so depth == iteration count).
+    pub fn depth(&self) -> u32 {
+        self.config.iterations()
+    }
+
+    /// Zero the accumulator.
+    pub fn reset(&mut self) {
+        self.acc = 0;
+        self.issued = 0;
+    }
+
+    /// Issue one MAC into the pipeline.
+    pub fn mac(&mut self, x: Fxp, w: Fxp) {
+        let fmt = self.config.format();
+        let xg = x.raw() << (GUARD_FRAC - fmt.frac_bits);
+        let wg = w.raw() << (GUARD_FRAC - fmt.frac_bits);
+        let r = linear::mac(self.acc, xg, wg, self.config.iterations());
+        self.acc = r.value;
+        self.issued += 1;
+    }
+
+    /// Cycles to drain a dot product of `n` MACs: fill + steady state.
+    pub fn cycles_for(&self, n: u64) -> u64 {
+        if n == 0 {
+            0
+        } else {
+            self.depth() as u64 + (n - 1)
+        }
+    }
+
+    /// Read accumulator.
+    pub fn read(&self) -> Fxp {
+        let fmt = self.config.format();
+        Fxp::from_raw(self.acc >> (GUARD_FRAC - fmt.frac_bits), fmt)
+    }
+}
+
+/// Ablation helper: cycles for an `n`-MAC dot product on each design.
+/// Returns (iterative, pipelined, exact).
+pub fn dot_cycles(config: MacConfig, n: u64) -> (u64, u64, u64) {
+    let iterative = n * cycles_for_iters(config.iterations()) as u64;
+    let pipelined = PipelinedCordicMac::new(config).cycles_for(n);
+    let exact = n;
+    (iterative, pipelined, exact)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::mac::ExecMode;
+    use crate::fxp::FXP16;
+    use crate::quant::Precision;
+    use crate::testutil::{check_prop, Xoshiro256};
+
+    #[test]
+    fn exact_mac_is_exact_on_grid() {
+        let mut m = ExactMac::new(FXP16);
+        let x = Fxp::from_f64(0.25, FXP16);
+        let w = Fxp::from_f64(-0.5, FXP16);
+        m.mac(x, w);
+        assert!(m.read().error_vs(-0.125) < 2.0 * FXP16.epsilon());
+        assert_eq!(m.total_cycles(), 1);
+    }
+
+    #[test]
+    fn pipelined_matches_iterative_numerics() {
+        let cfg = MacConfig::new(Precision::Fxp16, ExecMode::Accurate);
+        let mut rng = Xoshiro256::new(4);
+        let mut it = CordicMac::new(cfg);
+        let mut pipe = PipelinedCordicMac::new(cfg);
+        for _ in 0..16 {
+            let x = Fxp::from_f64(rng.uniform(-1.0, 1.0), FXP16);
+            let w = Fxp::from_f64(rng.uniform(-1.0, 1.0), FXP16);
+            it.mac(x, w);
+            pipe.mac(x, w);
+        }
+        assert_eq!(it.read().raw(), pipe.read().raw(), "same datapath, same bits");
+    }
+
+    #[test]
+    fn pipeline_wins_cycles_on_long_dots_loses_on_short() {
+        let cfg = MacConfig::new(Precision::Fxp8, ExecMode::Approximate); // 4 cyc/MAC
+        let (it_long, pipe_long, exact_long) = dot_cycles(cfg, 196);
+        assert!(pipe_long < it_long, "pipeline amortises on long dots");
+        assert!(exact_long < pipe_long);
+        let (it1, pipe1, _) = dot_cycles(cfg, 1);
+        assert!(it1 <= pipe1, "single MAC: iterative (4 cyc) <= pipeline depth (8)");
+    }
+
+    #[test]
+    fn prop_exact_mac_accumulates_like_f64() {
+        check_prop("exact mac tracks f64 accumulation", |rng| {
+            let mut m = ExactMac::new(FXP16);
+            let n = rng.int_in(1, 32) as usize;
+            let mut expect = 0.0;
+            for _ in 0..n {
+                let x = Fxp::from_f64(rng.uniform(-1.0, 1.0), FXP16);
+                let w = Fxp::from_f64(rng.uniform(-1.0, 1.0), FXP16);
+                m.mac(x, w);
+                expect += x.to_f64() * w.to_f64();
+            }
+            if expect.abs() > 0.95 {
+                // read-out saturates at the Q0.15 word range by design
+                return Ok(());
+            }
+            if m.read().error_vs(expect) <= FXP16.epsilon() * (1.0 + n as f64 * 0.01) {
+                Ok(())
+            } else {
+                Err(format!("n={n}: got {} want {expect}", m.read()))
+            }
+        });
+    }
+}

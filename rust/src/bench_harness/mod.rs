@@ -1,0 +1,186 @@
+//! Criterion-replacement micro-benchmark harness (criterion is not
+//! vendored). Cargo bench targets set `harness = false` and drive this.
+//!
+//! Methodology: warmup runs, then `samples` timed runs of `iters_per_sample`
+//! iterations each; reports mean/median/stddev/min/max and derived
+//! throughput. Deterministic ordering, plain-text + CSV output through
+//! [`crate::report::Table`].
+
+use crate::report::{fnum, Table};
+use std::time::Instant;
+
+/// Result of one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Benchmark name.
+    pub name: String,
+    /// Mean time per iteration (ns).
+    pub mean_ns: f64,
+    /// Median time per iteration (ns).
+    pub median_ns: f64,
+    /// Standard deviation (ns).
+    pub stddev_ns: f64,
+    /// Fastest sample (ns/iter).
+    pub min_ns: f64,
+    /// Slowest sample (ns/iter).
+    pub max_ns: f64,
+    /// Samples taken.
+    pub samples: usize,
+}
+
+impl BenchResult {
+    /// Iterations per second implied by the mean.
+    pub fn per_second(&self) -> f64 {
+        1e9 / self.mean_ns
+    }
+}
+
+/// The harness configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bencher {
+    /// Warmup iterations (untimed).
+    pub warmup: usize,
+    /// Timed samples.
+    pub samples: usize,
+    /// Iterations per sample.
+    pub iters_per_sample: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 3, samples: 15, iters_per_sample: 1 }
+    }
+}
+
+impl Bencher {
+    /// Quick preset for heavier end-to-end benches.
+    pub fn heavy() -> Self {
+        Bencher { warmup: 1, samples: 5, iters_per_sample: 1 }
+    }
+
+    /// Run one benchmark. `f` is called once per iteration; its result is
+    /// black-boxed so the optimiser cannot elide the work.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchResult {
+        for _ in 0..self.warmup * self.iters_per_sample {
+            std::hint::black_box(f());
+        }
+        let mut per_iter: Vec<f64> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..self.iters_per_sample {
+                std::hint::black_box(f());
+            }
+            let dt = t0.elapsed().as_nanos() as f64 / self.iters_per_sample as f64;
+            per_iter.push(dt);
+        }
+        let mut sorted = per_iter.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = per_iter.iter().sum::<f64>() / per_iter.len() as f64;
+        let var = per_iter.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+            / per_iter.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            mean_ns: mean,
+            median_ns: sorted[sorted.len() / 2],
+            stddev_ns: var.sqrt(),
+            min_ns: sorted[0],
+            max_ns: *sorted.last().unwrap(),
+            samples: per_iter.len(),
+        }
+    }
+}
+
+/// Collect results and render a summary table (used by every bench main).
+#[derive(Debug, Default)]
+pub struct BenchReport {
+    results: Vec<BenchResult>,
+}
+
+impl BenchReport {
+    /// Empty report.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a result.
+    pub fn push(&mut self, r: BenchResult) {
+        self.results.push(r);
+    }
+
+    /// Access results.
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Render the standard bench table.
+    pub fn render(&self, title: &str) -> String {
+        let mut t = Table::new(
+            title,
+            &["benchmark", "mean", "median", "stddev", "min", "max", "ops/s"],
+        );
+        for r in &self.results {
+            t.row(vec![
+                r.name.clone(),
+                human_ns(r.mean_ns),
+                human_ns(r.median_ns),
+                human_ns(r.stddev_ns),
+                human_ns(r.min_ns),
+                human_ns(r.max_ns),
+                fnum(r.per_second()),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Human-readable nanoseconds.
+pub fn human_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.2} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let b = Bencher { warmup: 1, samples: 5, iters_per_sample: 10 };
+        let r = b.run("spin", || {
+            let mut s = 0u64;
+            for i in 0..1000 {
+                s = s.wrapping_add(i);
+            }
+            s
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.min_ns <= r.median_ns && r.median_ns <= r.max_ns);
+        assert_eq!(r.samples, 5);
+        assert!(r.per_second() > 0.0);
+    }
+
+    #[test]
+    fn report_renders_all_rows() {
+        let b = Bencher { warmup: 0, samples: 3, iters_per_sample: 1 };
+        let mut rep = BenchReport::new();
+        rep.push(b.run("a", || 1 + 1));
+        rep.push(b.run("b", || 2 + 2));
+        let text = rep.render("bench");
+        assert!(text.contains("a") && text.contains("b"));
+    }
+
+    #[test]
+    fn human_ns_units() {
+        assert_eq!(human_ns(500.0), "500 ns");
+        assert_eq!(human_ns(1500.0), "1.50 µs");
+        assert_eq!(human_ns(2.5e6), "2.50 ms");
+        assert_eq!(human_ns(3.2e9), "3.20 s");
+    }
+}

@@ -1,0 +1,129 @@
+//! Hand-rolled CLI (clap is not vendored): flag parsing helpers and the
+//! subcommand surface used by `rust/src/main.rs`.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments: positionals + `--key value` / `--flag` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    /// Positional arguments in order.
+    pub positional: Vec<String>,
+    /// `--key value` options.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (excluding argv[0]).
+    pub fn parse(raw: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    bail!("stray `--`");
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Positional at index, or error with a usage hint.
+    pub fn pos(&self, idx: usize, what: &str) -> Result<&str> {
+        self.positional
+            .get(idx)
+            .map(|s| s.as_str())
+            .with_context(|| format!("missing <{what}> argument"))
+    }
+
+    /// Option value with default.
+    pub fn opt_or(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Parsed numeric option with default.
+    pub fn num_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: std::error::Error + Send + Sync + 'static,
+    {
+        match self.options.get(key) {
+            Some(v) => v.parse::<T>().with_context(|| format!("bad --{key} value {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Is a bare flag present?
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+corvet — CORDIC-powered vector engine (paper reproduction)
+
+USAGE: corvet <command> [options]
+
+COMMANDS:
+  table <1|2|3|4|5> [--csv]          regenerate a paper table
+  fig <11|13> [--quick] [--csv]      regenerate a paper figure's data
+  simulate [--workload tinyyolo|vgg16|vit-mlp] [--pes N] [--precision fxp4|8|16]
+           [--mode approx|accurate]  run the vector-engine simulator
+  train [--quick] [--out FILE]       train the MLP on synthetic data (FP32)
+  sensitivity [--quick] [--budget F] run the accuracy-sensitivity heuristic
+  serve [--requests N] [--batch N] [--precision fxp8|fxp16]
+        [--artifacts DIR] [--quick]  e2e serving demo over PJRT artifacts
+  utilization                        multi-AF time-multiplexing report
+  info [--artifacts DIR]             platform + artifact inventory
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn positionals_and_options() {
+        let a = parse(&["table", "2", "--csv", "--pes", "256", "--mode=approx"]);
+        assert_eq!(a.positional, vec!["table", "2"]);
+        assert!(a.has_flag("csv"));
+        assert_eq!(a.opt_or("pes", "64"), "256");
+        assert_eq!(a.opt_or("mode", "accurate"), "approx");
+        assert_eq!(a.num_or("pes", 64usize).unwrap(), 256);
+    }
+
+    #[test]
+    fn trailing_flag_is_flag() {
+        let a = parse(&["fig", "11", "--quick"]);
+        assert!(a.has_flag("quick"));
+        assert!(a.options.is_empty());
+    }
+
+    #[test]
+    fn missing_positional_errors() {
+        let a = parse(&["table"]);
+        assert!(a.pos(1, "n").is_err());
+        assert_eq!(a.pos(0, "cmd").unwrap(), "table");
+    }
+
+    #[test]
+    fn bad_numeric_errors() {
+        let a = parse(&["x", "--pes", "abc"]);
+        assert!(a.num_or("pes", 1usize).is_err());
+    }
+}

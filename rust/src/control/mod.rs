@@ -1,0 +1,303 @@
+//! The control engine (paper §II-C, Fig. 2): an FSM-with-datapath that
+//! sequences layer-multiplexed DNN execution over a fixed array of neuron
+//! processing units.
+//!
+//! Status signals, exactly as the paper names them:
+//!
+//! * `Index` — produced per neuron unit; counts MACs completed in the
+//!   active layer and selects the next input to route to the MAC;
+//! * `ComputeDone` — a unit finished its neuron for the current layer;
+//!   aggregated across units as `ComputeDoneArray`;
+//! * `ComputeInit` — control pulse that selectively activates units for the
+//!   current layer (idle-unit deactivation);
+//! * `CurrentLayer` / `LayerDone` — layer progress tracking;
+//! * `DNNDone` — all layers finished; outputs valid for the host.
+//!
+//! The engine is cycle-steppable (one [`ControlEngine::step`] = one MAC
+//! slot across the lock-stepped active units), and accounts active vs idle
+//! unit-cycles — the quantity behind the paper's "reduces dynamic power by
+//! enabling idle-unit deactivation" claim.
+
+use crate::memory::NetworkShape;
+
+/// FSM states of the control engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtrlState {
+    /// Waiting for parameters / inputs.
+    Idle,
+    /// Pulsing ComputeInit for the current layer.
+    InitLayer,
+    /// MAC streaming within the current layer.
+    Compute,
+    /// Layer finished; advancing CurrentLayer.
+    AdvanceLayer,
+    /// DNNDone asserted; outputs valid.
+    Done,
+}
+
+/// Snapshot of the engine's status signals.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StatusSignals {
+    /// Current layer index.
+    pub current_layer: usize,
+    /// Per-unit MAC index within the layer.
+    pub index: Vec<usize>,
+    /// Per-unit ComputeDone.
+    pub compute_done_array: Vec<bool>,
+    /// LayerDone for the current layer.
+    pub layer_done: bool,
+    /// DNNDone.
+    pub dnn_done: bool,
+}
+
+/// The control engine.
+#[derive(Debug, Clone)]
+pub struct ControlEngine {
+    shape: NetworkShape,
+    /// Physical neuron units available (the layer-reused array width).
+    units: usize,
+    state: CtrlState,
+    current_layer: usize,
+    /// Neurons of the current layer not yet assigned to a unit wave.
+    remaining_neurons: usize,
+    /// Neurons being computed in the current wave (<= units).
+    wave_active: usize,
+    /// MAC index within the wave (0..inputs_of(layer)).
+    mac_index: usize,
+    // statistics
+    cycles: u64,
+    active_unit_cycles: u64,
+    idle_unit_cycles: u64,
+    init_pulses: u64,
+}
+
+impl ControlEngine {
+    /// New engine for a network shape on `units` physical neuron units.
+    pub fn new(shape: NetworkShape, units: usize) -> Self {
+        assert!(units > 0, "need at least one neuron unit");
+        let first = shape.neurons[0];
+        ControlEngine {
+            shape,
+            units,
+            state: CtrlState::Idle,
+            current_layer: 0,
+            remaining_neurons: first,
+            wave_active: 0,
+            mac_index: 0,
+            cycles: 0,
+            active_unit_cycles: 0,
+            idle_unit_cycles: 0,
+            init_pulses: 0,
+        }
+    }
+
+    /// Assert "parameters loaded, inputs valid" — leaves Idle.
+    pub fn start(&mut self) {
+        assert_eq!(self.state, CtrlState::Idle, "start() only from Idle");
+        self.state = CtrlState::InitLayer;
+    }
+
+    /// Current FSM state.
+    pub fn state(&self) -> CtrlState {
+        self.state
+    }
+
+    /// Advance one control step. Each step in `Compute` retires one MAC slot
+    /// on every active unit (the engine's lock-step wave execution).
+    /// Returns the post-step status snapshot.
+    pub fn step(&mut self) -> StatusSignals {
+        self.cycles += 1;
+        match self.state {
+            CtrlState::Idle | CtrlState::Done => { /* hold */ }
+            CtrlState::InitLayer => {
+                // ComputeInit pulse: activate min(units, remaining) units
+                self.wave_active = self.remaining_neurons.min(self.units);
+                self.init_pulses += 1;
+                self.mac_index = 0;
+                self.state = CtrlState::Compute;
+            }
+            CtrlState::Compute => {
+                let inputs = self.shape.inputs_of(self.current_layer);
+                self.active_unit_cycles += self.wave_active as u64;
+                self.idle_unit_cycles += (self.units - self.wave_active) as u64;
+                self.mac_index += 1;
+                if self.mac_index >= inputs {
+                    // wave's neurons all assert ComputeDone
+                    self.remaining_neurons -= self.wave_active;
+                    if self.remaining_neurons > 0 {
+                        self.state = CtrlState::InitLayer; // next wave, same layer
+                    } else {
+                        self.state = CtrlState::AdvanceLayer;
+                    }
+                }
+            }
+            CtrlState::AdvanceLayer => {
+                if self.current_layer + 1 < self.shape.layers() {
+                    self.current_layer += 1;
+                    self.remaining_neurons = self.shape.neurons[self.current_layer];
+                    self.state = CtrlState::InitLayer;
+                } else {
+                    self.state = CtrlState::Done;
+                }
+            }
+        }
+        self.status()
+    }
+
+    /// Run to DNNDone; returns total control steps taken.
+    pub fn run_to_completion(&mut self) -> u64 {
+        if self.state == CtrlState::Idle {
+            self.start();
+        }
+        let before = self.cycles;
+        let mut guard = 0u64;
+        while self.state != CtrlState::Done {
+            self.step();
+            guard += 1;
+            assert!(guard < 1_000_000_000, "control engine did not converge");
+        }
+        self.cycles - before
+    }
+
+    /// Current status snapshot.
+    pub fn status(&self) -> StatusSignals {
+        let done = self.state == CtrlState::Done;
+        let in_compute = self.state == CtrlState::Compute;
+        StatusSignals {
+            current_layer: self.current_layer,
+            index: (0..self.units)
+                .map(|u| if in_compute && u < self.wave_active { self.mac_index } else { 0 })
+                .collect(),
+            compute_done_array: (0..self.units)
+                .map(|u| !in_compute || u >= self.wave_active)
+                .collect(),
+            layer_done: matches!(self.state, CtrlState::AdvanceLayer | CtrlState::Done),
+            dnn_done: done,
+        }
+    }
+
+    /// Control steps elapsed.
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Unit-cycles spent computing.
+    pub fn active_unit_cycles(&self) -> u64 {
+        self.active_unit_cycles
+    }
+
+    /// Unit-cycles spent deactivated (the dark-silicon/dynamic-power saving).
+    pub fn idle_unit_cycles(&self) -> u64 {
+        self.idle_unit_cycles
+    }
+
+    /// ComputeInit pulses issued (== waves executed).
+    pub fn init_pulses(&self) -> u64 {
+        self.init_pulses
+    }
+
+    /// Fraction of unit-cycles that were active.
+    pub fn unit_utilization(&self) -> f64 {
+        let total = self.active_unit_cycles + self.idle_unit_cycles;
+        if total == 0 {
+            0.0
+        } else {
+            self.active_unit_cycles as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn paper_shape() -> NetworkShape {
+        NetworkShape::new(196, vec![64, 32, 32, 10])
+    }
+
+    #[test]
+    fn fsm_walks_idle_init_compute_done() {
+        let mut e = ControlEngine::new(NetworkShape::new(2, vec![1]), 1);
+        assert_eq!(e.state(), CtrlState::Idle);
+        e.start();
+        assert_eq!(e.state(), CtrlState::InitLayer);
+        e.step(); // init -> compute
+        assert_eq!(e.state(), CtrlState::Compute);
+        e.step(); // mac 0
+        e.step(); // mac 1 -> advance
+        assert_eq!(e.state(), CtrlState::AdvanceLayer);
+        let s = e.step(); // -> done
+        assert!(s.dnn_done);
+    }
+
+    #[test]
+    fn mac_count_matches_network_shape() {
+        // with units >= widest layer, every layer runs in one wave, so
+        // compute steps per layer == inputs_of(layer)
+        let shape = paper_shape();
+        let mut e = ControlEngine::new(shape.clone(), 64);
+        e.run_to_completion();
+        // total MACs = sum over layers of waves(l) * inputs(l) * ... ; here
+        // active-unit-cycles must equal total MAC ops of the network
+        let total_macs: u64 = (0..shape.layers())
+            .map(|l| (shape.neurons[l] * shape.inputs_of(l)) as u64)
+            .sum();
+        assert_eq!(e.active_unit_cycles(), total_macs);
+    }
+
+    #[test]
+    fn waves_split_wide_layers() {
+        // 64 neurons on 16 units -> 4 ComputeInit pulses for layer 0
+        let shape = NetworkShape::new(8, vec![64]);
+        let mut e = ControlEngine::new(shape, 16);
+        e.run_to_completion();
+        assert_eq!(e.init_pulses(), 4);
+    }
+
+    #[test]
+    fn idle_units_are_deactivated_not_busy() {
+        // 10-neuron layer on 64 units: 54 units idle during that layer
+        let shape = NetworkShape::new(4, vec![10]);
+        let mut e = ControlEngine::new(shape, 64);
+        e.run_to_completion();
+        assert_eq!(e.active_unit_cycles(), 40); // 10 neurons * 4 inputs
+        assert_eq!(e.idle_unit_cycles(), 54 * 4);
+        assert!(e.unit_utilization() < 0.2);
+    }
+
+    #[test]
+    fn utilization_high_when_layers_match_units() {
+        let shape = NetworkShape::new(4, vec![64, 64]);
+        let mut e = ControlEngine::new(shape, 64);
+        e.run_to_completion();
+        assert_eq!(e.unit_utilization(), 1.0);
+    }
+
+    #[test]
+    fn status_signals_during_compute() {
+        let mut e = ControlEngine::new(NetworkShape::new(3, vec![2]), 4);
+        e.start();
+        e.step(); // init
+        let s = e.step(); // first MAC
+        assert_eq!(s.current_layer, 0);
+        assert_eq!(s.index[0], 1, "active unit advanced its Index");
+        assert!(!s.compute_done_array[0], "active unit not done");
+        assert!(s.compute_done_array[2], "inactive unit reads done/parked");
+        assert!(!s.dnn_done);
+    }
+
+    #[test]
+    #[should_panic(expected = "only from Idle")]
+    fn double_start_panics() {
+        let mut e = ControlEngine::new(NetworkShape::new(2, vec![1]), 1);
+        e.start();
+        e.start();
+    }
+
+    #[test]
+    fn run_to_completion_is_deterministic() {
+        let mut a = ControlEngine::new(paper_shape(), 64);
+        let mut b = ControlEngine::new(paper_shape(), 64);
+        assert_eq!(a.run_to_completion(), b.run_to_completion());
+    }
+}

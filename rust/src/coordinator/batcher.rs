@@ -1,0 +1,168 @@
+//! Dynamic batching: collect queued requests into the largest compiled
+//! batch shape, but never hold a request past its deadline.
+
+use std::time::{Duration, Instant};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Largest compiled batch shape (requests per dispatch).
+    pub max_batch: usize,
+    /// Longest a request may wait for co-batching before dispatch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A pending item with its arrival time.
+#[derive(Debug)]
+struct Pending<T> {
+    item: T,
+    arrived: Instant,
+}
+
+/// The dynamic batcher: a deadline-aware queue.
+#[derive(Debug)]
+pub struct DynamicBatcher<T> {
+    config: BatcherConfig,
+    queue: Vec<Pending<T>>,
+    dispatched_batches: u64,
+    dispatched_items: u64,
+}
+
+impl<T> DynamicBatcher<T> {
+    /// New batcher.
+    pub fn new(config: BatcherConfig) -> Self {
+        assert!(config.max_batch >= 1);
+        DynamicBatcher { config, queue: Vec::new(), dispatched_batches: 0, dispatched_items: 0 }
+    }
+
+    /// Enqueue a request at time `now`.
+    pub fn push(&mut self, item: T, now: Instant) {
+        self.queue.push(Pending { item, arrived: now });
+    }
+
+    /// Queue depth.
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// True when no requests wait.
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Should a batch be dispatched at `now`? True when the queue reached
+    /// `max_batch` or the oldest request hits its deadline.
+    pub fn ready(&self, now: Instant) -> bool {
+        if self.queue.len() >= self.config.max_batch {
+            return true;
+        }
+        match self.queue.first() {
+            Some(p) => now.duration_since(p.arrived) >= self.config.max_wait,
+            None => false,
+        }
+    }
+
+    /// How long the dispatcher may sleep before the oldest request's
+    /// deadline (None when the queue is empty).
+    pub fn time_to_deadline(&self, now: Instant) -> Option<Duration> {
+        self.queue.first().map(|p| {
+            self.config
+                .max_wait
+                .saturating_sub(now.duration_since(p.arrived))
+        })
+    }
+
+    /// Take up to `max_batch` oldest requests (FIFO order).
+    pub fn take_batch(&mut self) -> Vec<T> {
+        let n = self.queue.len().min(self.config.max_batch);
+        let batch: Vec<T> = self.queue.drain(..n).map(|p| p.item).collect();
+        if !batch.is_empty() {
+            self.dispatched_batches += 1;
+            self.dispatched_items += batch.len() as u64;
+        }
+        batch
+    }
+
+    /// Mean dispatched batch size so far.
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.dispatched_batches == 0 {
+            0.0
+        } else {
+            self.dispatched_items as f64 / self.dispatched_batches as f64
+        }
+    }
+
+    /// Batches dispatched.
+    pub fn batches(&self) -> u64 {
+        self.dispatched_batches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(max_batch: usize, ms: u64) -> BatcherConfig {
+        BatcherConfig { max_batch, max_wait: Duration::from_millis(ms) }
+    }
+
+    #[test]
+    fn dispatches_when_full() {
+        let mut b = DynamicBatcher::new(cfg(3, 1000));
+        let t0 = Instant::now();
+        for i in 0..3 {
+            b.push(i, t0);
+        }
+        assert!(b.ready(t0), "full queue dispatches immediately");
+        assert_eq!(b.take_batch(), vec![0, 1, 2]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn dispatches_on_deadline() {
+        let mut b = DynamicBatcher::new(cfg(8, 5));
+        let t0 = Instant::now();
+        b.push(42, t0);
+        assert!(!b.ready(t0), "fresh request waits for co-batching");
+        let later = t0 + Duration::from_millis(6);
+        assert!(b.ready(later), "deadline forces dispatch");
+        assert_eq!(b.take_batch(), vec![42]);
+    }
+
+    #[test]
+    fn fifo_order_and_partial_drain() {
+        let mut b = DynamicBatcher::new(cfg(2, 1000));
+        let t0 = Instant::now();
+        for i in 0..5 {
+            b.push(i, t0);
+        }
+        assert_eq!(b.take_batch(), vec![0, 1]);
+        assert_eq!(b.take_batch(), vec![2, 3]);
+        assert_eq!(b.take_batch(), vec![4]);
+        assert_eq!(b.batches(), 3);
+        assert!((b.mean_batch_size() - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn time_to_deadline_counts_down() {
+        let mut b = DynamicBatcher::new(cfg(8, 10));
+        let t0 = Instant::now();
+        b.push(1, t0);
+        let d = b.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
+        assert!(d <= Duration::from_millis(6));
+        assert!(b.time_to_deadline(t0 + Duration::from_millis(60)).unwrap().is_zero());
+    }
+
+    #[test]
+    fn empty_queue_never_ready() {
+        let b: DynamicBatcher<u32> = DynamicBatcher::new(cfg(4, 1));
+        assert!(!b.ready(Instant::now()));
+        assert!(b.time_to_deadline(Instant::now()).is_none());
+    }
+}

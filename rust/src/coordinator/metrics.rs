@@ -1,0 +1,174 @@
+//! Serving metrics: latency distribution, throughput, batch statistics.
+
+use std::time::{Duration, Instant};
+
+/// Latency summary over a set of samples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    /// Samples observed.
+    pub count: u64,
+    /// Mean latency (ms).
+    pub mean_ms: f64,
+    /// Median (ms).
+    pub p50_ms: f64,
+    /// 99th percentile (ms).
+    pub p99_ms: f64,
+    /// Max (ms).
+    pub max_ms: f64,
+}
+
+/// A point-in-time snapshot of the server's metrics.
+#[derive(Debug, Clone)]
+pub struct MetricsSnapshot {
+    /// Request latency stats.
+    pub latency: LatencyStats,
+    /// Requests completed.
+    pub completed: u64,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Mean batch size.
+    pub mean_batch: f64,
+    /// Requests served in approximate mode.
+    pub approx_served: u64,
+    /// Wall-clock throughput (requests/s) since first request.
+    pub throughput_rps: f64,
+}
+
+/// Metrics accumulator (single-threaded: owned by the server loop).
+#[derive(Debug)]
+pub struct Metrics {
+    latencies_us: Vec<u64>,
+    completed: u64,
+    batches: u64,
+    batched_items: u64,
+    approx_served: u64,
+    first: Option<Instant>,
+    last: Option<Instant>,
+}
+
+impl Metrics {
+    /// Empty accumulator.
+    pub fn new() -> Self {
+        Metrics {
+            latencies_us: Vec::new(),
+            completed: 0,
+            batches: 0,
+            batched_items: 0,
+            approx_served: 0,
+            first: None,
+            last: None,
+        }
+    }
+
+    /// Record one completed request.
+    pub fn record(&mut self, latency: Duration, approx: bool, now: Instant) {
+        self.latencies_us.push(latency.as_micros() as u64);
+        self.completed += 1;
+        if approx {
+            self.approx_served += 1;
+        }
+        if self.first.is_none() {
+            self.first = Some(now);
+        }
+        self.last = Some(now);
+    }
+
+    /// Record one dispatched batch.
+    pub fn record_batch(&mut self, size: usize) {
+        self.batches += 1;
+        self.batched_items += size as u64;
+    }
+
+    /// Summarise.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut sorted = self.latencies_us.clone();
+        sorted.sort_unstable();
+        let pct = |p: f64| -> f64 {
+            if sorted.is_empty() {
+                return 0.0;
+            }
+            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
+            sorted[idx] as f64 / 1e3
+        };
+        let mean_ms = if sorted.is_empty() {
+            0.0
+        } else {
+            sorted.iter().sum::<u64>() as f64 / sorted.len() as f64 / 1e3
+        };
+        let span = match (self.first, self.last) {
+            (Some(a), Some(b)) if b > a => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        MetricsSnapshot {
+            latency: LatencyStats {
+                count: sorted.len() as u64,
+                mean_ms,
+                p50_ms: pct(0.50),
+                p99_ms: pct(0.99),
+                max_ms: sorted.last().map(|&v| v as f64 / 1e3).unwrap_or(0.0),
+            },
+            completed: self.completed,
+            batches: self.batches,
+            mean_batch: if self.batches == 0 {
+                0.0
+            } else {
+                self.batched_items as f64 / self.batches as f64
+            },
+            approx_served: self.approx_served,
+            throughput_rps: if span > 0.0 { self.completed as f64 / span } else { 0.0 },
+        }
+    }
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_on_known_distribution() {
+        let mut m = Metrics::new();
+        let t0 = Instant::now();
+        for i in 1..=100u64 {
+            m.record(Duration::from_millis(i), false, t0 + Duration::from_millis(i));
+        }
+        let s = m.snapshot();
+        assert_eq!(s.latency.count, 100);
+        assert!((s.latency.p50_ms - 50.0).abs() <= 1.0, "p50 {}", s.latency.p50_ms);
+        assert!((s.latency.p99_ms - 99.0).abs() <= 1.0, "p99 {}", s.latency.p99_ms);
+        assert_eq!(s.latency.max_ms, 100.0);
+        assert!((s.latency.mean_ms - 50.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::new();
+        m.record_batch(8);
+        m.record_batch(4);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 2);
+        assert!((s.mean_batch - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_snapshot_is_zeroed() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.latency.p99_ms, 0.0);
+        assert_eq!(s.throughput_rps, 0.0);
+    }
+
+    #[test]
+    fn approx_counter() {
+        let mut m = Metrics::new();
+        let t = Instant::now();
+        m.record(Duration::from_millis(1), true, t);
+        m.record(Duration::from_millis(1), false, t);
+        assert_eq!(m.snapshot().approx_served, 1);
+    }
+}

@@ -1,0 +1,30 @@
+//! The L3 serving coordinator: the deployable AIoT inference path.
+//!
+//! Mirrors the paper's Pynq-Z2 co-design flow (§II-C, Fig. 3b) in software:
+//! the host loads parameters once ([`crate::runtime::PjrtRuntime::deploy_weights`]),
+//! then streams inputs and captures outputs when the accelerator signals
+//! completion. On top of that single-model runtime this module adds what a
+//! production edge deployment needs:
+//!
+//! * [`DynamicBatcher`] — collect requests into batches matched to the
+//!   compiled artifact shapes (size/deadline policy), amortising per-call
+//!   overhead — the software analogue of the engine's vectorised,
+//!   time-multiplexed execution;
+//! * [`PrecisionGovernor`] — the runtime accuracy–latency knob: switches
+//!   between approximate and accurate artifacts from queue pressure,
+//!   exactly the paper's "dynamic reconfiguration between approximate and
+//!   accurate modes";
+//! * [`Server`] — worker thread owning the PJRT runtime, request channel,
+//!   response plumbing, metrics.
+//!
+//! No tokio in the vendored environment: std threads + mpsc channels.
+
+mod batcher;
+mod metrics;
+mod policy;
+mod server;
+
+pub use batcher::{BatcherConfig, DynamicBatcher};
+pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
+pub use policy::{GovernorConfig, PrecisionGovernor};
+pub use server::{InferenceRequest, InferenceResponse, Server, ServerConfig};

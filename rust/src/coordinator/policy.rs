@@ -1,0 +1,134 @@
+//! The precision governor: the runtime accuracy–latency knob at the
+//! serving level.
+//!
+//! The paper's engine exposes per-layer approximate/accurate modes; at the
+//! coordinator level the same knob appears as *which artifact to dispatch
+//! to*. The governor watches queue pressure: when the backlog exceeds
+//! `approx_threshold`, it switches to the approximate artifact (4-cycle
+//! MACs) to shed latency, and hysteretically returns to accurate mode once
+//! the queue drains below `accurate_threshold` — "exploiting the
+//! latency–accuracy trade-off for a wide range of workloads".
+
+use crate::cordic::mac::ExecMode;
+
+/// Governor thresholds (queue depths), with hysteresis.
+#[derive(Debug, Clone, Copy)]
+pub struct GovernorConfig {
+    /// Switch to approximate mode at or above this backlog.
+    pub approx_threshold: usize,
+    /// Return to accurate mode at or below this backlog.
+    pub accurate_threshold: usize,
+    /// Pin the mode (disable adaptation).
+    pub pinned: Option<ExecMode>,
+}
+
+impl Default for GovernorConfig {
+    fn default() -> Self {
+        GovernorConfig { approx_threshold: 16, accurate_threshold: 4, pinned: None }
+    }
+}
+
+/// Hysteretic mode governor.
+#[derive(Debug, Clone)]
+pub struct PrecisionGovernor {
+    config: GovernorConfig,
+    mode: ExecMode,
+    switches: u64,
+}
+
+impl PrecisionGovernor {
+    /// New governor starting in accurate mode (the paper's default:
+    /// accuracy first, approximation under pressure).
+    pub fn new(config: GovernorConfig) -> Self {
+        assert!(
+            config.accurate_threshold <= config.approx_threshold,
+            "hysteresis thresholds inverted"
+        );
+        let mode = config.pinned.unwrap_or(ExecMode::Accurate);
+        PrecisionGovernor { config, mode, switches: 0 }
+    }
+
+    /// Observe the current backlog and return the mode to dispatch with.
+    pub fn observe(&mut self, backlog: usize) -> ExecMode {
+        if let Some(p) = self.config.pinned {
+            return p;
+        }
+        let new_mode = match self.mode {
+            ExecMode::Accurate if backlog >= self.config.approx_threshold => {
+                ExecMode::Approximate
+            }
+            ExecMode::Approximate if backlog <= self.config.accurate_threshold => {
+                ExecMode::Accurate
+            }
+            m => m,
+        };
+        if new_mode != self.mode {
+            self.switches += 1;
+            self.mode = new_mode;
+        }
+        self.mode
+    }
+
+    /// Current mode without observing.
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    /// Mode switches performed.
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_accurate_and_sheds_under_pressure() {
+        let mut g = PrecisionGovernor::new(GovernorConfig {
+            approx_threshold: 10,
+            accurate_threshold: 2,
+            pinned: None,
+        });
+        assert_eq!(g.observe(0), ExecMode::Accurate);
+        assert_eq!(g.observe(9), ExecMode::Accurate);
+        assert_eq!(g.observe(10), ExecMode::Approximate);
+        assert_eq!(g.switches(), 1);
+    }
+
+    #[test]
+    fn hysteresis_prevents_flapping() {
+        let mut g = PrecisionGovernor::new(GovernorConfig {
+            approx_threshold: 10,
+            accurate_threshold: 2,
+            pinned: None,
+        });
+        g.observe(12); // -> approximate
+        assert_eq!(g.observe(5), ExecMode::Approximate, "in the hysteresis band");
+        assert_eq!(g.observe(9), ExecMode::Approximate);
+        assert_eq!(g.observe(2), ExecMode::Accurate, "drained below threshold");
+        assert_eq!(g.switches(), 2);
+    }
+
+    #[test]
+    fn pinned_mode_never_switches() {
+        let mut g = PrecisionGovernor::new(GovernorConfig {
+            approx_threshold: 1,
+            accurate_threshold: 0,
+            pinned: Some(ExecMode::Accurate),
+        });
+        assert_eq!(g.observe(100), ExecMode::Accurate);
+        assert_eq!(g.switches(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "hysteresis")]
+    fn inverted_thresholds_rejected() {
+        PrecisionGovernor::new(GovernorConfig {
+            approx_threshold: 2,
+            accurate_threshold: 10,
+            pinned: None,
+        });
+    }
+}

@@ -1,0 +1,302 @@
+//! The serving loop: request channel → dynamic batcher → precision
+//! governor → PJRT execute → responses.
+//!
+//! One worker thread owns the [`PjrtRuntime`] (PJRT clients are not
+//! shareable across threads in the vendored crate, and a single CPU client
+//! saturates the host anyway); clients talk to it through an mpsc channel
+//! and get responses on per-request channels.
+
+use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::policy::{GovernorConfig, PrecisionGovernor};
+use crate::cordic::mac::ExecMode;
+use crate::quant::Precision;
+use crate::runtime::{ArtifactRegistry, ModelWeights, PjrtRuntime};
+use anyhow::{Context, Result};
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One inference request: a flat input vector in (-1, 1).
+#[derive(Debug)]
+pub struct InferenceRequest {
+    /// Caller-chosen id, echoed in the response.
+    pub id: u64,
+    /// Input features (length = model input width).
+    pub input: Vec<f64>,
+    /// Respond on this channel.
+    pub respond: mpsc::Sender<InferenceResponse>,
+}
+
+/// The response.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    /// Request id.
+    pub id: u64,
+    /// Raw logits.
+    pub logits: Vec<f32>,
+    /// argmax class.
+    pub class: usize,
+    /// End-to-end latency (enqueue → response).
+    pub latency: std::time::Duration,
+    /// Mode the request was served in.
+    pub mode: ExecMode,
+}
+
+/// Server configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Operand precision of the deployed artifacts.
+    pub precision: Precision,
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+    /// Precision-governor policy.
+    pub governor: GovernorConfig,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            precision: Precision::Fxp8,
+            batcher: BatcherConfig::default(),
+            governor: GovernorConfig::default(),
+        }
+    }
+}
+
+enum Control {
+    Request(Box<InferenceRequest>, Instant),
+    Snapshot(mpsc::Sender<MetricsSnapshot>),
+    Shutdown,
+}
+
+/// Handle to a running server.
+pub struct Server {
+    tx: mpsc::Sender<Control>,
+    worker: Option<JoinHandle<Result<()>>>,
+    next_id: u64,
+}
+
+impl Server {
+    /// Start the worker: loads artifacts for both modes of the configured
+    /// precision, deploys the weights, then serves until shutdown.
+    pub fn start(
+        artifacts_dir: impl Into<std::path::PathBuf>,
+        weights: ModelWeights,
+        config: ServerConfig,
+    ) -> Result<Self> {
+        let dir = artifacts_dir.into();
+        let (tx, rx) = mpsc::channel::<Control>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("corvet-server".to_string())
+            .spawn(move || serve_loop(dir, weights, config, rx, ready_tx))
+            .context("spawning server thread")?;
+        // block until artifacts are compiled and weights deployed, so
+        // request latency reflects the steady state, not cold compilation
+        match ready_rx.recv() {
+            Ok(Ok(())) => Ok(Server { tx, worker: Some(worker), next_id: 0 }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => {
+                let join = worker.join();
+                match join {
+                    Ok(Err(e)) => Err(e.context("server died during startup")),
+                    _ => Err(anyhow::anyhow!("server died during startup")),
+                }
+            }
+        }
+    }
+
+    /// Submit a request; returns the receiver for its response.
+    pub fn submit(&mut self, input: Vec<f64>) -> Result<mpsc::Receiver<InferenceResponse>> {
+        let (rtx, rrx) = mpsc::channel();
+        self.next_id += 1;
+        let req = InferenceRequest { id: self.next_id, input, respond: rtx };
+        self.tx
+            .send(Control::Request(Box::new(req), Instant::now()))
+            .map_err(|_| anyhow::anyhow!("server is down"))?;
+        Ok(rrx)
+    }
+
+    /// Fetch a metrics snapshot.
+    pub fn metrics(&self) -> Result<MetricsSnapshot> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Control::Snapshot(tx)).map_err(|_| anyhow::anyhow!("server is down"))?;
+        rx.recv().context("server dropped snapshot request")
+    }
+
+    /// Graceful shutdown (drains the queue first).
+    pub fn shutdown(mut self) -> Result<MetricsSnapshot> {
+        let snap = self.metrics()?;
+        self.tx.send(Control::Shutdown).ok();
+        if let Some(h) = self.worker.take() {
+            h.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
+        }
+        Ok(snap)
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.tx.send(Control::Shutdown).ok();
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct QueuedReq {
+    req: Box<InferenceRequest>,
+    enqueued: Instant,
+}
+
+fn serve_loop(
+    dir: std::path::PathBuf,
+    weights: ModelWeights,
+    config: ServerConfig,
+    rx: mpsc::Receiver<Control>,
+    ready: mpsc::Sender<Result<()>>,
+) -> Result<()> {
+    // pre-compile every batch shape of both modes (compile happens once,
+    // off the steady-state path), then signal readiness
+    let setup = (|| -> Result<(ArtifactRegistry, PjrtRuntime)> {
+        let registry = ArtifactRegistry::load(&dir)?;
+        let mut rt = PjrtRuntime::new()?;
+        for mode in [ExecMode::Approximate, ExecMode::Accurate] {
+            for b in registry.batches() {
+                if let Some(spec) = registry.find(config.precision, mode, b) {
+                    rt.load(spec)?;
+                }
+            }
+        }
+        rt.deploy_weights(&weights)?;
+        Ok((registry, rt))
+    })();
+    let (registry, mut rt) = match setup {
+        Ok(v) => {
+            ready.send(Ok(())).ok();
+            v
+        }
+        Err(e) => {
+            ready.send(Err(anyhow::anyhow!("{e:#}"))).ok();
+            return Err(e);
+        }
+    };
+    let input_width = weights.layers[0].inputs;
+
+    let mut batcher: DynamicBatcher<QueuedReq> = DynamicBatcher::new(config.batcher);
+    let mut governor = PrecisionGovernor::new(config.governor);
+    let mut metrics = Metrics::new();
+    let mut shutting_down = false;
+
+    loop {
+        // wait for work (bounded by the batching deadline)
+        if !shutting_down {
+            let now = Instant::now();
+            let msg = if batcher.is_empty() {
+                rx.recv().ok()
+            } else {
+                match batcher.time_to_deadline(now) {
+                    Some(d) if !d.is_zero() && batcher.len() < config.batcher.max_batch => {
+                        match rx.recv_timeout(d) {
+                            Ok(m) => Some(m),
+                            Err(mpsc::RecvTimeoutError::Timeout) => None,
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                shutting_down = true;
+                                None
+                            }
+                        }
+                    }
+                    _ => match rx.try_recv() {
+                        Ok(m) => Some(m),
+                        Err(_) => None,
+                    },
+                }
+            };
+            match msg {
+                Some(Control::Request(req, at)) => {
+                    batcher.push(QueuedReq { req, enqueued: at }, at);
+                    // drain everything immediately available so the queue
+                    // pressure is visible to the precision governor (the
+                    // batcher caps each dispatch at max_batch regardless)
+                    while batcher.len() < 65_536 {
+                        match rx.try_recv() {
+                            Ok(Control::Request(r, at)) => {
+                                batcher.push(QueuedReq { req: r, enqueued: at }, at)
+                            }
+                            Ok(Control::Snapshot(tx)) => {
+                                tx.send(metrics.snapshot()).ok();
+                            }
+                            Ok(Control::Shutdown) => {
+                                shutting_down = true;
+                                break;
+                            }
+                            Err(_) => break,
+                        }
+                    }
+                }
+                Some(Control::Snapshot(tx)) => {
+                    tx.send(metrics.snapshot()).ok();
+                    continue;
+                }
+                Some(Control::Shutdown) => {
+                    shutting_down = true;
+                }
+                None => {}
+            }
+        }
+
+        if shutting_down && batcher.is_empty() {
+            return Ok(());
+        }
+
+        let now = Instant::now();
+        if !(batcher.ready(now) || (shutting_down && !batcher.is_empty())) {
+            continue;
+        }
+
+        // dispatch one batch
+        let mode = governor.observe(batcher.len());
+        let batch = batcher.take_batch();
+        if batch.is_empty() {
+            continue;
+        }
+        metrics.record_batch(batch.len());
+
+        // pack inputs
+        let rows = batch.len();
+        let mut x = Vec::with_capacity(rows * input_width);
+        for q in &batch {
+            anyhow::ensure!(
+                q.req.input.len() == input_width,
+                "request {} input width {} != {}",
+                q.req.id,
+                q.req.input.len(),
+                input_width
+            );
+            x.extend(crate::runtime::quantize_input(&q.req.input));
+        }
+
+        let logits = rt.execute_via(&registry, config.precision, mode, &x, rows)?;
+        let classes = rt.output_width();
+        let done = Instant::now();
+        for (i, q) in batch.into_iter().enumerate() {
+            let l = logits[i * classes..(i + 1) * classes].to_vec();
+            let class = l
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+            let latency = done.duration_since(q.enqueued);
+            metrics.record(latency, mode == ExecMode::Approximate, done);
+            q.req
+                .respond
+                .send(InferenceResponse { id: q.req.id, logits: l, class, latency, mode })
+                .ok();
+        }
+    }
+}

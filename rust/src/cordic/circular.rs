@@ -1,0 +1,149 @@
+//! Circular-mode CORDIC: sin/cos (rotation) and atan/magnitude (vectoring).
+//!
+//! CORVET's datapath is Walther-unified, so the same shift/add structure
+//! also covers the circular mode. The accelerator itself only exercises
+//! linear + hyperbolic modes for DNN inference, but the circular mode is
+//! part of the unified block (and of its area model), so it is implemented
+//! and tested for completeness.
+
+use super::{CordicResult, CordicResult as R, GUARD_FRAC, ONE};
+use once_cell::sync::Lazy;
+
+/// `atan(2^-i)` table in guard format.
+static ATAN: Lazy<Vec<i64>> = Lazy::new(|| {
+    (0..=GUARD_FRAC + 2)
+        .map(|i| {
+            let v = (2f64.powi(-(i as i32))).atan();
+            (v * ONE as f64).round() as i64
+        })
+        .collect()
+});
+
+/// Circular gain inverse `1/K_c(n)` in guard format, per iteration count.
+pub fn gain_inverse(iters: u32) -> i64 {
+    let mut k = 1f64;
+    for i in 0..iters {
+        k *= (1.0 + 2f64.powi(-2 * i as i32)).sqrt();
+    }
+    ((1.0 / k) * ONE as f64).round() as i64
+}
+
+/// Raw circular rotation from `(x0, y0)` through angle `t` (radians, guard
+/// format, `|t| <= ~1.7433`). Returns `(x_n, y_n, z_residual)`.
+pub fn rotate_raw(mut x: i64, mut y: i64, mut t: i64, iters: u32) -> (i64, i64, i64) {
+    for i in 0..iters {
+        let e = ATAN.get(i as usize).copied().unwrap_or(0);
+        if t >= 0 {
+            let nx = x - (y >> i);
+            let ny = y + (x >> i);
+            x = nx;
+            y = ny;
+            t -= e;
+        } else {
+            let nx = x + (y >> i);
+            let ny = y - (x >> i);
+            x = nx;
+            y = ny;
+            t += e;
+        }
+    }
+    (x, y, t)
+}
+
+/// `(cos t, sin t)` with quadrant folding to the convergence range:
+/// `value = cos`, `aux = sin`.
+pub fn cos_sin(t: i64, iters: u32) -> CordicResult {
+    // Fold into [-pi, pi] then into [-pi/2, pi/2] with sign flips.
+    let pi = (std::f64::consts::PI * ONE as f64) as i64;
+    let two_pi = 2 * pi;
+    let mut a = t % two_pi;
+    if a > pi {
+        a -= two_pi;
+    } else if a < -pi {
+        a += two_pi;
+    }
+    let (a, flip) = if a > pi / 2 {
+        (a - pi, true)
+    } else if a < -pi / 2 {
+        (a + pi, true)
+    } else {
+        (a, false)
+    };
+    let x0 = gain_inverse(iters);
+    let (c, s, _) = rotate_raw(x0, 0, a, iters);
+    if flip {
+        R::new(-c, -s, iters)
+    } else {
+        R::new(c, s, iters)
+    }
+}
+
+/// Circular vectoring: `value = atan2(y, x)` (x > 0), `aux = magnitude
+/// sqrt(x²+y²)` (gain-corrected).
+pub fn vector_raw(mut x: i64, mut y: i64, iters: u32) -> CordicResult {
+    let mut z: i64 = 0;
+    for i in 0..iters {
+        let e = ATAN.get(i as usize).copied().unwrap_or(0);
+        if y >= 0 {
+            let nx = x + (y >> i);
+            let ny = y - (x >> i);
+            x = nx;
+            y = ny;
+            z += e;
+        } else {
+            let nx = x - (y >> i);
+            let ny = y + (x >> i);
+            x = nx;
+            y = ny;
+            z -= e;
+        }
+    }
+    // magnitude carries the gain K_c; correct with a linear-mode multiply by
+    // 1/K_c (in HW this constant multiply shares the linear datapath).
+    let mag = super::linear::multiply(x, gain_inverse(iters), iters).value;
+    R::new(z, mag, iters)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::{from_guard, to_guard};
+    use crate::testutil::check_prop;
+
+    #[test]
+    fn cos_sin_zero() {
+        let r = cos_sin(0, 20);
+        assert!((from_guard(r.value) - 1.0).abs() < 1e-5);
+        assert!(from_guard(r.aux).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cos_sin_quadrants() {
+        for t in [-3.0, -1.5, -0.7, 0.0, 0.5, 1.2, 2.0, 3.0] {
+            let r = cos_sin(to_guard(t), 24);
+            assert!((from_guard(r.value) - t.cos()).abs() < 1e-4, "cos({t})");
+            assert!((from_guard(r.aux) - t.sin()).abs() < 1e-4, "sin({t})");
+        }
+    }
+
+    #[test]
+    fn vectoring_atan() {
+        let r = vector_raw(to_guard(1.0), to_guard(1.0), 24);
+        assert!((from_guard(r.value) - std::f64::consts::FRAC_PI_4).abs() < 1e-5);
+        assert!((from_guard(r.aux) - 2f64.sqrt()).abs() < 1e-3);
+    }
+
+    #[test]
+    fn prop_pythagorean_identity() {
+        check_prop("cos² + sin² == 1", |rng| {
+            let t = rng.uniform(-6.0, 6.0);
+            let r = cos_sin(to_guard(t), 26);
+            let id = from_guard(r.value).powi(2) + from_guard(r.aux).powi(2);
+            if (id - 1.0).abs() < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("t={t}: cos²+sin² = {id}"))
+            }
+        });
+    }
+}

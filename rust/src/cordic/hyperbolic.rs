@@ -1,0 +1,289 @@
+//! Hyperbolic-mode CORDIC: cosh/sinh (rotation), atanh (vectoring), and the
+//! derived exp / tanh used by the multi-activation-function block.
+//!
+//! This is the paper's "HR mode" datapath. Hyperbolic iterations use shift
+//! indices `i = 1, 2, 3, 4, 4, 5, ..., 13, 13, ...` — indices 4, 13, 40 are
+//! executed twice to guarantee convergence (Walther). The rotation gain
+//! `K_h = prod sqrt(1 - 2^-2i)` is compensated by seeding `x0 = 1/K_h`.
+//!
+//! Convergence for rotation is `|t| <= ~1.1182`; larger arguments are range-
+//! reduced: `e^t = 2^j * e^r` with `t = j*ln2 + r`, and `tanh` folds through
+//! `e^{2t}` — both reductions are shift/add-only, matching the paper's
+//! claim that no true multipliers are needed anywhere on this path.
+
+use super::{linear, CordicResult, CordicResult as R, GUARD_FRAC, ONE};
+use once_cell::sync::Lazy;
+
+/// Maximum micro-rotations supported (beyond this atanh(2^-i) underflows the
+/// guard format anyway).
+pub const MAX_ITERS: u32 = 30;
+
+/// Shift-index schedule with Walther repeats at 4 and 13.
+/// `SCHEDULE[n]` = shift index of the n-th micro-rotation.
+pub static SCHEDULE: Lazy<Vec<u32>> = Lazy::new(|| {
+    let mut s = Vec::with_capacity(MAX_ITERS as usize + 4);
+    let mut i = 1u32;
+    while s.len() < MAX_ITERS as usize + 4 {
+        s.push(i);
+        if i == 4 || i == 13 {
+            s.push(i); // repeated iteration
+        }
+        i += 1;
+    }
+    s
+});
+
+/// `atanh(2^-i)` table in guard format.
+static ATANH: Lazy<Vec<i64>> = Lazy::new(|| {
+    (0..=GUARD_FRAC + 2)
+        .map(|i| {
+            let v = (2f64.powi(-(i as i32))).atanh();
+            (v * ONE as f64).round() as i64
+        })
+        .collect()
+});
+
+/// `ln 2` in guard format.
+pub static LN2: Lazy<i64> = Lazy::new(|| ((2f64).ln() * ONE as f64).round() as i64);
+
+/// Hyperbolic gain `K_h(n)` for an `n`-micro-rotation schedule; the seed
+/// `x0 = 1/K_h` is looked up per iteration count so any budget is exact.
+pub fn gain_inverse(iters: u32) -> i64 {
+    let mut k = 1f64;
+    for &i in SCHEDULE.iter().take(iters as usize) {
+        k *= (1.0 - 2f64.powi(-2 * i as i32)).sqrt();
+    }
+    ((1.0 / k) * ONE as f64).round() as i64
+}
+
+/// Raw hyperbolic rotation from seeds `(x0, y0)` through angle `t`
+/// (guard format, must be within convergence ~1.1182).
+/// Returns `(x_n, y_n, z_residual)`.
+pub fn rotate_raw(mut x: i64, mut y: i64, mut t: i64, iters: u32) -> (i64, i64, i64) {
+    for &i in SCHEDULE.iter().take(iters as usize) {
+        let e = ATANH.get(i as usize).copied().unwrap_or(0);
+        if t >= 0 {
+            let nx = x + (y >> i);
+            let ny = y + (x >> i);
+            x = nx;
+            y = ny;
+            t -= e;
+        } else {
+            let nx = x - (y >> i);
+            let ny = y - (x >> i);
+            x = nx;
+            y = ny;
+            t += e;
+        }
+    }
+    (x, y, t)
+}
+
+/// `(cosh t, sinh t)`: `value = cosh`, `aux = sinh`. `|t|` must be within
+/// the convergence bound (callers use [`exp`]/[`tanh`] for reduction).
+pub fn cosh_sinh(t: i64, iters: u32) -> CordicResult {
+    let x0 = gain_inverse(iters);
+    let (c, s, _) = rotate_raw(x0, 0, t, iters);
+    R::new(c, s, iters)
+}
+
+/// `e^t` for any guard-format `t`, via `t = j*ln2 + r`, `|r| <= ln2/2`,
+/// `e^t = (cosh r + sinh r) << j`. The `j` extraction is a divide-by-ln2
+/// done with the linear-vectoring datapath (shift/add only).
+pub fn exp(t: i64, iters: u32) -> CordicResult {
+    // j = round(t / ln2): cheap fixed-point division by a constant.
+    // (In RTL this is a small reciprocal-constant shift-add network; here we
+    // use the exact integer computation — same result, fewer lines.)
+    let j = div_round_const(t, *LN2);
+    let r = t - j * *LN2;
+    let x0 = gain_inverse(iters);
+    let (c, s, _) = rotate_raw(x0, 0, r, iters);
+    let e_r = c + s;
+    let v = if j >= 0 {
+        linear::shl_sat(e_r, j as u32)
+    } else {
+        let sh = (-j) as u32;
+        if sh >= 63 {
+            0
+        } else {
+            e_r >> sh
+        }
+    };
+    R::new(v, 0, iters)
+}
+
+/// `tanh t` for any `t`: direct HR rotation + LV division when within
+/// convergence; fold through `e^{2t}` otherwise.
+/// `value = tanh(t)`; cycle cost covers both phases.
+pub fn tanh(t: i64, iters: u32) -> CordicResult {
+    // Convergence bound ~1.1182; stay well inside it.
+    let bound = (1.1 * ONE as f64) as i64;
+    if t.abs() <= bound {
+        let cs = cosh_sinh(t, iters);
+        let d = linear::divide(cs.aux, cs.value, iters);
+        return R::new(d.value, 0, iters * 2);
+    }
+    // tanh(t) = 1 - 2 / (e^{2t} + 1), with sign symmetry.
+    let neg = t < 0;
+    let ta = t.abs();
+    // saturate: tanh(>= ~10) == 1 at guard precision
+    if ta >= 10 * ONE {
+        let one = ONE;
+        return R::new(if neg { -one } else { one }, 0, iters);
+    }
+    let e2t = exp(ta << 1, iters);
+    let denom = e2t.value + ONE;
+    let frac = linear::divide(2 * ONE, denom, iters);
+    let v = ONE - frac.value;
+    R::new(if neg { -v } else { v }, 0, iters * 2)
+}
+
+/// Hyperbolic vectoring: drives `y → 0`, accumulating `atanh(y/x)` in `z`.
+/// `value = atanh(y0/x0)`, `aux = K_h * sqrt(x0² - y0²)` (unscaled).
+pub fn vector_raw(mut x: i64, mut y: i64, iters: u32) -> CordicResult {
+    let mut z: i64 = 0;
+    for &i in SCHEDULE.iter().take(iters as usize) {
+        let e = ATANH.get(i as usize).copied().unwrap_or(0);
+        if y >= 0 {
+            let nx = x - (y >> i);
+            let ny = y - (x >> i);
+            x = nx;
+            y = ny;
+            z += e;
+        } else {
+            let nx = x + (y >> i);
+            let ny = y + (x >> i);
+            x = nx;
+            y = ny;
+            z -= e;
+        }
+    }
+    R::new(z, x, iters)
+}
+
+/// `round(a / b)` for positive-`b` guard values, exact integer math.
+#[inline]
+fn div_round_const(a: i64, b: i64) -> i64 {
+    debug_assert!(b > 0);
+    if a >= 0 {
+        (a + b / 2) / b
+    } else {
+        -((-a + b / 2) / b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::{from_guard, to_guard};
+    use crate::testutil::check_prop;
+
+    #[test]
+    fn schedule_repeats_4_and_13() {
+        let s: Vec<u32> = SCHEDULE.iter().take(16).copied().collect();
+        assert_eq!(&s[..6], &[1, 2, 3, 4, 4, 5]);
+        let count13 = s.iter().filter(|&&x| x == 13).count();
+        assert_eq!(count13, 2);
+    }
+
+    #[test]
+    fn cosh_sinh_at_zero() {
+        let r = cosh_sinh(0, 20);
+        // residual after n rotations is ~atanh(2^-n) ~ 2^-20 ≈ 1e-6
+        assert!((from_guard(r.value) - 1.0).abs() < 1e-5);
+        assert!(from_guard(r.aux).abs() < 1e-5);
+    }
+
+    #[test]
+    fn cosh_sinh_known_value() {
+        let r = cosh_sinh(to_guard(1.0), 24);
+        assert!((from_guard(r.value) - 1f64.cosh()).abs() < 1e-5, "cosh {}", from_guard(r.value));
+        assert!((from_guard(r.aux) - 1f64.sinh()).abs() < 1e-5, "sinh {}", from_guard(r.aux));
+    }
+
+    #[test]
+    fn exp_range_reduced() {
+        for t in [-5.0, -2.3, -0.4, 0.0, 0.3, 1.0, 2.5, 4.2] {
+            let r = exp(to_guard(t), 24);
+            let want = t.exp();
+            let got = from_guard(r.value);
+            assert!(
+                (got - want).abs() < 1e-4 * (1.0 + want),
+                "exp({t}): got {got} want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn tanh_inside_and_outside_convergence() {
+        for t in [-6.0, -2.0, -1.0, -0.3, 0.0, 0.5, 1.05, 1.5, 3.0, 8.0, 20.0] {
+            let r = tanh(to_guard(t), 24);
+            let want = t.tanh();
+            let got = from_guard(r.value);
+            assert!((got - want).abs() < 5e-4, "tanh({t}): got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn vectoring_computes_atanh_ratio() {
+        let r = vector_raw(to_guard(2.0), to_guard(1.0), 24);
+        let want = (0.5f64).atanh();
+        assert!((from_guard(r.value) - want).abs() < 1e-5);
+    }
+
+    #[test]
+    fn gain_inverse_close_to_analytic() {
+        // K_h -> 0.82816 for large n, so 1/K_h -> 1.20750
+        let gi = gain_inverse(24) as f64 / ONE as f64;
+        assert!((gi - 1.2075).abs() < 1e-3, "1/Kh = {gi}");
+    }
+
+    #[test]
+    fn prop_exp_accuracy_improves_with_iters() {
+        check_prop("exp error shrinks with iteration count", |rng| {
+            let t = rng.uniform(-3.0, 3.0);
+            let lo = exp(to_guard(t), 8);
+            let hi = exp(to_guard(t), 24);
+            let want = t.exp();
+            let e_lo = (from_guard(lo.value) - want).abs();
+            let e_hi = (from_guard(hi.value) - want).abs();
+            if e_hi <= e_lo + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("t={t}: err(24)={e_hi} > err(8)={e_lo}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_tanh_bounded_and_odd() {
+        check_prop("tanh in [-1,1] and odd", |rng| {
+            let t = rng.uniform(-8.0, 8.0);
+            let p = from_guard(tanh(to_guard(t), 20).value);
+            let n = from_guard(tanh(to_guard(-t), 20).value);
+            if p.abs() > 1.0 + 1e-6 {
+                return Err(format!("tanh({t}) = {p} out of range"));
+            }
+            if (p + n).abs() > 2e-3 {
+                return Err(format!("tanh not odd at {t}: {p} vs {n}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_cosh_sq_minus_sinh_sq_is_one() {
+        check_prop("cosh^2 - sinh^2 == 1", |rng| {
+            let t = rng.uniform(-1.1, 1.1);
+            let r = cosh_sinh(to_guard(t), 26);
+            let c = from_guard(r.value);
+            let s = from_guard(r.aux);
+            let id = c * c - s * s;
+            if (id - 1.0).abs() < 1e-4 {
+                Ok(())
+            } else {
+                Err(format!("t={t}: cosh²-sinh² = {id}"))
+            }
+        });
+    }
+}

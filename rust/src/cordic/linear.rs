@@ -1,0 +1,323 @@
+//! Linear-mode CORDIC: multiplication (rotation) and division (vectoring).
+//!
+//! Linear mode is the paper's MAC workhorse. Rotation drives the angle
+//! accumulator `z` to zero while `y` accumulates `x * z` one signed,
+//! shifted copy of `x` at a time — i.e. a serial Booth-like multiplier made
+//! of one adder and one shifter:
+//!
+//! ```text
+//! d = sign(z)
+//! y += d * (x >> i);   z -= d * 2^-i          (i = 0, 1, 2, ...)
+//! ```
+//!
+//! Convergence: with shifts starting at `i = 0`, any `|z| < 2 - 2^-(n-1)`
+//! is absorbed, and after `n` iterations the residual satisfies
+//! `|z_n| <= 2^-(n-1)`, so the multiply error is bounded by
+//! `|x| * 2^-(n-1)` plus shift-truncation. Operands are pre-normalised into
+//! the convergence range by [`normalize_z`] (the paper's "flexible precision
+//! scaling") and the result is rescaled afterwards.
+
+use super::{CordicResult, CordicResult as R, GUARD_FRAC, ONE};
+
+/// Normalise `z` into `(-1, 1)` by arithmetic right shifts, returning the
+/// normalised value and the shift count `k` such that `z ≈ z_norm * 2^k`.
+///
+/// Models the barrel-shifter prescaler in front of the MAC datapath.
+#[inline]
+pub fn normalize_z(z: i64) -> (i64, u32) {
+    let mut k = 0u32;
+    let mut zn = z;
+    while zn >= ONE || zn < -ONE {
+        zn >>= 1;
+        k += 1;
+    }
+    (zn, k)
+}
+
+/// Core linear rotation: returns `(y0 + x*z, z_residual)` after `iters`
+/// micro-rotations. `z` must already be within `(-2, 2)` in guard format.
+///
+/// The loop is branchless: `d = sign(z)` becomes an arithmetic-shift mask,
+/// and `±v` is computed as `(v ^ m) - m`. Identical bit-level results to
+/// the naive if/else (both compute `y ± (x>>i)`, `z ∓ e`), ~1.9× faster on
+/// the host because the sign of `z` is data-dependent and unpredictable —
+/// see EXPERIMENTS.md §Perf.
+#[inline]
+pub fn rotate_raw(x: i64, mut z: i64, mut y: i64, iters: u32) -> (i64, i64) {
+    debug_assert!(z > -2 * ONE && z < 2 * ONE, "linear rotation: |z| must be < 2");
+    for i in 0..iters {
+        // e(i) = 2^-i in guard format; beyond the guard width the angle
+        // constant underflows to zero and iterations stop contributing,
+        // exactly like running out of fractional wires in the RTL.
+        let e = if i <= GUARD_FRAC { 1i64 << (GUARD_FRAC - i) } else { 0 };
+        let m = z >> 63; // 0 when z >= 0, -1 when z < 0
+        let xv = x >> i;
+        y += (xv ^ m) - m; // +xv or -xv
+        z -= (e ^ m) - m; // -e or +e
+    }
+    (y, z)
+}
+
+/// Fully-unrolled rotation for the fixed iteration budgets of the paper's
+/// operating points (8/10/14/18). Monomorphising the loop lets the compiler
+/// resolve every shift amount and angle constant statically — the software
+/// analogue of the RTL's two unrolled stages. Falls back to the generic
+/// loop for other budgets. Bit-identical to [`rotate_raw`].
+#[inline]
+fn rotate_dispatch(x: i64, z: i64, y: i64, iters: u32) -> (i64, i64) {
+    #[inline(always)]
+    fn unrolled<const N: u32>(x: i64, mut z: i64, mut y: i64) -> (i64, i64) {
+        let mut i = 0u32;
+        while i < N {
+            let e = if i <= GUARD_FRAC { 1i64 << (GUARD_FRAC - i) } else { 0 };
+            let m = z >> 63;
+            let xv = x >> i;
+            y += (xv ^ m) - m;
+            z -= (e ^ m) - m;
+            i += 1;
+        }
+        (y, z)
+    }
+    match iters {
+        8 => unrolled::<8>(x, z, y),
+        10 => unrolled::<10>(x, z, y),
+        14 => unrolled::<14>(x, z, y),
+        18 => unrolled::<18>(x, z, y),
+        n => rotate_raw(x, z, y, n),
+    }
+}
+
+/// Multiply `x * z` (both guard format) with pre-normalisation; `iters`
+/// micro-rotations. `value` = product, `aux` = residual angle (scaled).
+pub fn multiply(x: i64, z: i64, iters: u32) -> CordicResult {
+    let (zn, k) = normalize_z(z);
+    let (y, zr) = rotate_dispatch(x, zn, 0, iters);
+    R::new(shl_sat(y, k), zr, iters)
+}
+
+/// Fused multiply-accumulate `acc + x*z` in guard format — the actual MAC
+/// datapath operation (the accumulator rides along in `y0`, no extra adder).
+pub fn mac(acc: i64, x: i64, z: i64, iters: u32) -> CordicResult {
+    if z > -ONE && z < ONE {
+        // fast path: multiplier already normalised (the common case — DNN
+        // operand grids are (-1, 1); see fxp formats)
+        let (y, zr) = rotate_dispatch(x, z, acc, iters);
+        return R::new(y, zr, iters);
+    }
+    let (zn, k) = normalize_z(z);
+    if k == 0 {
+        let (y, zr) = rotate_dispatch(x, zn, acc, iters);
+        R::new(y, zr, iters)
+    } else {
+        // Normalised multiplier: compute the product separately, scale,
+        // then accumulate (the RTL realigns via the same barrel shifter).
+        let (y, zr) = rotate_dispatch(x, zn, 0, iters);
+        R::new(acc + shl_sat(y, k), zr, iters)
+    }
+}
+
+/// Divide `y / x` via linear vectoring: drives `y` to zero, accumulating the
+/// quotient in `z`. Requires `x != 0`. Handles signs and normalises so the
+/// quotient magnitude is `< 2` during iteration.
+pub fn divide(y: i64, x: i64, iters: u32) -> CordicResult {
+    assert!(x != 0, "linear vectoring: division by zero");
+    let neg = (y < 0) != (x < 0);
+    let mut yy = y.abs();
+    let xx = x.abs();
+
+    // Pre-scale numerator so |y/x| < 1: find k with yy/2^k < xx.
+    let mut k = 0u32;
+    while (yy >> k) >= xx && k < 62 {
+        k += 1;
+    }
+    yy >>= k;
+
+    let mut z: i64 = 0;
+    let mut rem = yy;
+    for i in 0..iters {
+        let e = if i <= GUARD_FRAC { 1i64 << (GUARD_FRAC - i) } else { 0 };
+        if rem >= 0 {
+            rem -= xx >> i;
+            z += e;
+        } else {
+            rem += xx >> i;
+            z -= e;
+        }
+    }
+    let q = shl_sat(z, k);
+    R::new(if neg { -q } else { q }, rem, iters)
+}
+
+/// Saturating left shift (keeps the model honest when a rescale would
+/// overflow the guard word).
+#[inline]
+pub fn shl_sat(v: i64, k: u32) -> i64 {
+    if k == 0 {
+        return v;
+    }
+    if k >= 62 {
+        return if v > 0 {
+            i64::MAX
+        } else if v < 0 {
+            i64::MIN + 1
+        } else {
+            0
+        };
+    }
+    let shifted = v << k;
+    if (shifted >> k) != v {
+        if v > 0 {
+            i64::MAX
+        } else {
+            i64::MIN + 1
+        }
+    } else {
+        shifted
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::{from_guard, to_guard};
+    use crate::testutil::check_prop;
+
+    #[test]
+    fn multiply_simple_values() {
+        let x = to_guard(1.5);
+        let z = to_guard(0.75);
+        let r = multiply(x, z, 24);
+        assert!((from_guard(r.value) - 1.125).abs() < 1e-5, "got {}", from_guard(r.value));
+    }
+
+    #[test]
+    fn multiply_handles_large_multiplier_via_normalisation() {
+        let x = to_guard(0.5);
+        let z = to_guard(6.5); // outside (-2,2): needs prescaling
+        let r = multiply(x, z, 24);
+        assert!((from_guard(r.value) - 3.25).abs() < 1e-4, "got {}", from_guard(r.value));
+    }
+
+    #[test]
+    fn multiply_error_shrinks_with_iterations() {
+        let x = to_guard(1.9);
+        let z = to_guard(0.7);
+        let exact = 1.9 * 0.7;
+        let mut last = f64::INFINITY;
+        for iters in [4, 8, 12, 16, 20] {
+            let err = (from_guard(multiply(x, z, iters).value) - exact).abs();
+            assert!(err <= last + 1e-9, "error not monotone at {iters}: {err} vs {last}");
+            last = err;
+        }
+        assert!(last < 1e-4);
+    }
+
+    #[test]
+    fn mac_accumulates() {
+        let acc = to_guard(2.0);
+        let r = mac(acc, to_guard(1.0), to_guard(0.5), 20);
+        assert!((from_guard(r.value) - 2.5).abs() < 1e-4);
+    }
+
+    #[test]
+    fn divide_simple() {
+        let r = divide(to_guard(1.0), to_guard(4.0), 24);
+        assert!((from_guard(r.value) - 0.25).abs() < 1e-5);
+    }
+
+    #[test]
+    fn divide_signs() {
+        for (y, x, want) in [(3.0, 2.0, 1.5), (-3.0, 2.0, -1.5), (3.0, -2.0, -1.5), (-3.0, -2.0, 1.5)]
+        {
+            let r = divide(to_guard(y), to_guard(x), 28);
+            assert!(
+                (from_guard(r.value) - want).abs() < 1e-4,
+                "{y}/{x}: got {}",
+                from_guard(r.value)
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "division by zero")]
+    fn divide_by_zero_panics() {
+        divide(to_guard(1.0), 0, 8);
+    }
+
+    #[test]
+    fn prop_multiply_error_bound() {
+        // |err| <= |x| * 2^-(n-1) * 2^k + truncation slack
+        check_prop("linear rotation error bound", |rng| {
+            let xv = rng.uniform(-4.0, 4.0);
+            let zv = rng.uniform(-4.0, 4.0);
+            let iters = rng.int_in(6, 24) as u32;
+            let r = multiply(to_guard(xv), to_guard(zv), iters);
+            let exact = xv * zv;
+            let k = if zv.abs() >= 1.0 { zv.abs().log2().ceil().max(0.0) } else { 0.0 };
+            let bound = xv.abs() * 2f64.powi(1 - iters as i32) * 2f64.powf(k)
+                + 1e-6 * (1.0 + xv.abs());
+            let err = (from_guard(r.value) - exact).abs();
+            if err <= bound + 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("x={xv} z={zv} n={iters}: err={err} bound={bound}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_divide_matches_float() {
+        check_prop("linear vectoring approximates y/x", |rng| {
+            let y = rng.uniform(-8.0, 8.0);
+            let x = {
+                let v = rng.uniform(0.1, 8.0);
+                if rng.chance(0.5) {
+                    -v
+                } else {
+                    v
+                }
+            };
+            let r = divide(to_guard(y), to_guard(x), 28);
+            let got = from_guard(r.value);
+            let want = y / x;
+            if (got - want).abs() < 1e-3 * (1.0 + want.abs()) {
+                Ok(())
+            } else {
+                Err(format!("{y}/{x}: got {got} want {want}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mac_equals_multiply_plus_acc() {
+        check_prop("mac == acc + mul within tolerance", |rng| {
+            let acc = rng.uniform(-4.0, 4.0);
+            let x = rng.uniform(-2.0, 2.0);
+            let z = rng.uniform(-2.0, 2.0);
+            let m = mac(to_guard(acc), to_guard(x), to_guard(z), 20);
+            let p = multiply(to_guard(x), to_guard(z), 20);
+            let diff = from_guard(m.value) - (acc + from_guard(p.value));
+            if diff.abs() < 1e-6 {
+                Ok(())
+            } else {
+                Err(format!("mac deviates from acc+mul by {diff}"))
+            }
+        });
+    }
+
+    #[test]
+    fn shl_sat_saturates() {
+        assert_eq!(shl_sat(1, 62), i64::MAX);
+        assert_eq!(shl_sat(-1, 63), i64::MIN + 1);
+        assert_eq!(shl_sat(3, 2), 12);
+        assert_eq!(shl_sat(0, 63), 0);
+    }
+
+    #[test]
+    fn cycle_accounting_two_stages_per_cycle() {
+        let r = multiply(to_guard(1.0), to_guard(1.0), 8);
+        assert_eq!(r.cycles, 4);
+        let r = multiply(to_guard(1.0), to_guard(1.0), 9);
+        assert_eq!(r.cycles, 5);
+    }
+}

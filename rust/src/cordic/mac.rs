@@ -1,0 +1,338 @@
+//! The runtime-adaptive iterative CORDIC MAC unit (paper §III-A, Fig. 5).
+//!
+//! One [`CordicMac`] models one PE's MAC datapath: a single reused CORDIC
+//! stage (one adder, one shifter, one mux) iterated under FSM control, with
+//! **precision mode** (FxP-4/8/16) and **execution mode**
+//! (approximate/accurate) as runtime knobs. The knobs map to the paper's
+//! cycle table:
+//!
+//! | precision | mode        | cycles | micro-rotations (2/cycle) |
+//! |-----------|-------------|--------|---------------------------|
+//! | FxP-8     | approximate | 4      | 8                         |
+//! | FxP-8     | accurate    | 5      | 10                        |
+//! | FxP-16    | approximate | 7      | 14                        |
+//! | FxP-16    | accurate    | 9      | 18                        |
+//! | FxP-4     | accurate    | 4      | 8                         |
+//!
+//! Application-level accuracy at these points is what Fig. 11 sweeps:
+//! ≈2 % degradation in approximate mode, <0.5 % in accurate mode.
+
+use super::{cycles_for_iters, linear, GUARD_FRAC};
+use crate::fxp::{Format, Fxp, FXP16, FXP4, FXP8};
+use crate::quant::Precision;
+
+/// Execution mode: the paper's runtime accuracy/latency knob.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum ExecMode {
+    /// Fewer iterations, lower latency, ≈2 % app-level accuracy loss.
+    Approximate,
+    /// Full iteration budget, <0.5 % accuracy loss.
+    #[default]
+    Accurate,
+    /// Explicit micro-rotation budget — the fine-grained knob behind the
+    /// Fig. 11 accuracy-vs-iteration sweep (the named modes are two points
+    /// on this axis).
+    Custom(u32),
+}
+
+/// Static configuration of one MAC unit instance.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MacConfig {
+    /// Operand precision (selects the I/O [`Format`]).
+    pub precision: Precision,
+    /// Approximate vs accurate iteration budget.
+    pub mode: ExecMode,
+}
+
+impl MacConfig {
+    /// Construct a config.
+    pub fn new(precision: Precision, mode: ExecMode) -> Self {
+        MacConfig { precision, mode }
+    }
+
+    /// The datapath word format for this precision.
+    pub fn format(&self) -> Format {
+        match self.precision {
+            Precision::Fxp4 => FXP4,
+            Precision::Fxp8 => FXP8,
+            Precision::Fxp16 => FXP16,
+        }
+    }
+
+    /// Micro-rotation budget per MAC (paper cycle table × 2 stages/cycle).
+    pub fn iterations(&self) -> u32 {
+        match (self.precision, self.mode) {
+            (_, ExecMode::Custom(n)) => n.max(1),
+            (Precision::Fxp4, _) => 8, // single (accurate) 4-bit mode
+            (Precision::Fxp8, ExecMode::Approximate) => 8,
+            (Precision::Fxp8, ExecMode::Accurate) => 10,
+            (Precision::Fxp16, ExecMode::Approximate) => 14,
+            (Precision::Fxp16, ExecMode::Accurate) => 18,
+        }
+    }
+
+    /// Clock cycles per MAC operation.
+    pub fn cycles_per_mac(&self) -> u32 {
+        cycles_for_iters(self.iterations())
+    }
+}
+
+/// Iterative CORDIC MAC unit with cycle accounting.
+///
+/// The accumulator is a wide guard-format register (like the RTL's wide
+/// accumulator); quantisation back to the datapath format happens only when
+/// the result is read out, so partial sums don't lose precision en route.
+#[derive(Debug, Clone)]
+pub struct CordicMac {
+    config: MacConfig,
+    acc: i64, // guard format
+    cycles: u64,
+    macs: u64,
+}
+
+impl CordicMac {
+    /// New MAC unit with a zeroed accumulator.
+    pub fn new(config: MacConfig) -> Self {
+        CordicMac { config, acc: 0, cycles: 0, macs: 0 }
+    }
+
+    /// Current configuration.
+    pub fn config(&self) -> MacConfig {
+        self.config
+    }
+
+    /// Reconfigure precision/mode at runtime (what the control engine does
+    /// between layers). Keeps the accumulator — callers normally
+    /// [`Self::reset`] first.
+    pub fn reconfigure(&mut self, config: MacConfig) {
+        self.config = config;
+    }
+
+    /// Zero the accumulator (start of a neuron's dot product).
+    pub fn reset(&mut self) {
+        self.acc = 0;
+    }
+
+    /// One multiply-accumulate: `acc += x * w`, both operands in the
+    /// configured datapath format. Returns the cycles this MAC took.
+    pub fn mac(&mut self, x: Fxp, w: Fxp) -> u32 {
+        let fmt = self.config.format();
+        debug_assert_eq!(x.format(), fmt, "activation format mismatch");
+        debug_assert_eq!(w.format(), fmt, "weight format mismatch");
+        let xg = to_guard_raw(x);
+        let wg = to_guard_raw(w);
+        let r = linear::mac(self.acc, xg, wg, self.config.iterations());
+        self.acc = r.value;
+        self.cycles += r.cycles as u64;
+        self.macs += 1;
+        r.cycles
+    }
+
+    /// Read the accumulator quantised into the datapath format (saturating,
+    /// truncation — the hardware read-out path).
+    pub fn read(&self) -> Fxp {
+        from_guard_raw(self.acc, self.config.format())
+    }
+
+    /// Read the accumulator at full guard precision (for the wide
+    /// accumulate-then-activate path).
+    pub fn read_guard(&self) -> i64 {
+        self.acc
+    }
+
+    /// Add a bias (datapath format) directly into the accumulator — biases
+    /// skip the CORDIC stage, they are a plain adder input.
+    pub fn add_bias(&mut self, b: Fxp) {
+        self.acc += to_guard_raw(b);
+    }
+
+    /// Total cycles consumed since construction.
+    pub fn total_cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Total MAC operations performed.
+    pub fn total_macs(&self) -> u64 {
+        self.macs
+    }
+
+    /// Full dot product `sum_i xs[i] * ws[i] (+ bias)`, resetting first.
+    /// Returns (result, cycles).
+    pub fn dot(&mut self, xs: &[Fxp], ws: &[Fxp], bias: Option<Fxp>) -> (Fxp, u64) {
+        assert_eq!(xs.len(), ws.len(), "dot: operand length mismatch");
+        self.reset();
+        let before = self.cycles;
+        if let Some(b) = bias {
+            self.add_bias(b);
+        }
+        for (&x, &w) in xs.iter().zip(ws) {
+            self.mac(x, w);
+        }
+        (self.read(), self.cycles - before)
+    }
+}
+
+/// Datapath-format value → guard-format raw.
+#[inline]
+fn to_guard_raw(v: Fxp) -> i64 {
+    v.raw() << (GUARD_FRAC - v.format().frac_bits)
+}
+
+/// Guard-format raw → datapath-format value (truncating, saturating).
+#[inline]
+fn from_guard_raw(g: i64, fmt: Format) -> Fxp {
+    let raw = g >> (GUARD_FRAC - fmt.frac_bits);
+    Fxp::from_raw(raw, fmt)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check_prop;
+
+    #[test]
+    fn cycle_table_matches_paper() {
+        use ExecMode::*;
+        use Precision::*;
+        let cases = [
+            (Fxp8, Approximate, 4),
+            (Fxp8, Accurate, 5),
+            (Fxp16, Approximate, 7),
+            (Fxp16, Accurate, 9),
+            (Fxp4, Accurate, 4),
+            (Fxp4, Approximate, 4),
+        ];
+        for (p, m, cyc) in cases {
+            assert_eq!(
+                MacConfig::new(p, m).cycles_per_mac(),
+                cyc,
+                "cycles for {p:?}/{m:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn single_mac_accumulates_product() {
+        let cfg = MacConfig::new(Precision::Fxp8, ExecMode::Accurate);
+        let mut mac = CordicMac::new(cfg);
+        let x = Fxp::from_f64(0.5, FXP8);
+        let w = Fxp::from_f64(0.5, FXP8);
+        let cycles = mac.mac(x, w);
+        assert_eq!(cycles, 5);
+        let out = mac.read();
+        assert!(out.error_vs(0.25) <= 2.0 * FXP8.epsilon(), "got {out}");
+    }
+
+    #[test]
+    fn dot_product_reasonable_fxp16_accurate() {
+        let cfg = MacConfig::new(Precision::Fxp16, ExecMode::Accurate);
+        let mut mac = CordicMac::new(cfg);
+        let xs: Vec<Fxp> = [0.5, -0.25, 0.75, 0.125].iter().map(|&v| Fxp::from_f64(v, FXP16)).collect();
+        let ws: Vec<Fxp> = [0.9, 0.5, -0.75, 0.6].iter().map(|&v| Fxp::from_f64(v, FXP16)).collect();
+        let exact: f64 = 0.5 * 0.9 + -0.25 * 0.5 + 0.75 * -0.75 + 0.125 * 0.6;
+        let (out, cycles) = mac.dot(&xs, &ws, None);
+        assert_eq!(cycles, 4 * 9);
+        assert!(out.error_vs(exact) < 0.01, "got {out} want {exact}");
+    }
+
+    #[test]
+    fn bias_is_free_and_exact() {
+        let cfg = MacConfig::new(Precision::Fxp8, ExecMode::Accurate);
+        let mut mac = CordicMac::new(cfg);
+        mac.add_bias(Fxp::from_f64(0.25, FXP8));
+        assert_eq!(mac.total_cycles(), 0);
+        assert!(mac.read().error_vs(0.25) < 1e-9);
+    }
+
+    #[test]
+    fn approximate_mode_is_faster_and_coarser() {
+        let x = Fxp::from_f64(0.9375, FXP16);
+        let w = Fxp::from_f64(0.9375, FXP16);
+        let exact = 0.9375 * 0.9375;
+
+        let mut approx = CordicMac::new(MacConfig::new(Precision::Fxp16, ExecMode::Approximate));
+        let mut accur = CordicMac::new(MacConfig::new(Precision::Fxp16, ExecMode::Accurate));
+        let ca = approx.mac(x, w);
+        let cb = accur.mac(x, w);
+        assert!(ca < cb, "approx must be faster: {ca} vs {cb}");
+        let ea = approx.read().error_vs(exact);
+        let eb = accur.read().error_vs(exact);
+        assert!(eb <= ea + 1e-12, "accurate must not be worse: {eb} vs {ea}");
+    }
+
+    #[test]
+    fn reconfigure_between_layers() {
+        let mut mac = CordicMac::new(MacConfig::new(Precision::Fxp8, ExecMode::Approximate));
+        assert_eq!(mac.config().cycles_per_mac(), 4);
+        mac.reconfigure(MacConfig::new(Precision::Fxp16, ExecMode::Accurate));
+        assert_eq!(mac.config().cycles_per_mac(), 9);
+    }
+
+    #[test]
+    fn prop_mac_error_within_mode_bound() {
+        // Approximate FxP-16: residual 2^-13 on normalised multiplier; with
+        // operands up to 4.0 the absolute error stays well under 1 LSB-ish
+        // tolerance we allow below.
+        check_prop("fxp16 accurate mac error small", |rng| {
+            let cfg = MacConfig::new(Precision::Fxp16, ExecMode::Accurate);
+            let mut mac = CordicMac::new(cfg);
+            let xv = rng.uniform(-1.0, 1.0);
+            let wv = rng.uniform(-1.0, 1.0);
+            let x = Fxp::from_f64(xv, FXP16);
+            let w = Fxp::from_f64(wv, FXP16);
+            mac.mac(x, w);
+            let exact = x.to_f64() * w.to_f64();
+            let err = mac.read().error_vs(exact);
+            // accurate mode: 18 rotations, residual 2^-17 * |x| + LSB
+            let bound = xv.abs() * 2f64.powi(-15) + 2.0 * FXP16.epsilon();
+            if err <= bound {
+                Ok(())
+            } else {
+                Err(format!("x={xv} w={wv}: err={err} > {bound}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_dot_matches_float_reference() {
+        check_prop("dot product tracks f64 reference", |rng| {
+            let n = rng.int_in(1, 32) as usize;
+            let cfg = MacConfig::new(Precision::Fxp16, ExecMode::Accurate);
+            let mut mac = CordicMac::new(cfg);
+            let xs: Vec<Fxp> =
+                (0..n).map(|_| Fxp::from_f64(rng.uniform(-1.0, 1.0), FXP16)).collect();
+            let ws: Vec<Fxp> =
+                (0..n).map(|_| Fxp::from_f64(rng.uniform(-1.0, 1.0), FXP16)).collect();
+            let exact: f64 = xs.iter().zip(&ws).map(|(x, w)| x.to_f64() * w.to_f64()).sum();
+            if exact.abs() > 0.95 {
+                return Ok(()); // read-out saturates at the word range
+            }
+            let (out, _) = mac.dot(&xs, &ws, None);
+            let tol = n as f64 * 2f64.powi(-14) + 2.0 * FXP16.epsilon();
+            if out.error_vs(exact) <= tol {
+                Ok(())
+            } else {
+                Err(format!("n={n}: got {out} want {exact} tol {tol}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_cycles_scale_linearly_with_macs() {
+        check_prop("total cycles == n * cycles_per_mac", |rng| {
+            let cfg = MacConfig::new(Precision::Fxp8, ExecMode::Approximate);
+            let mut mac = CordicMac::new(cfg);
+            let n = rng.int_in(1, 64) as usize;
+            for _ in 0..n {
+                let x = Fxp::from_f64(rng.uniform(-2.0, 2.0), FXP8);
+                let w = Fxp::from_f64(rng.uniform(-2.0, 2.0), FXP8);
+                mac.mac(x, w);
+            }
+            if mac.total_cycles() == (n as u64) * 4 {
+                Ok(())
+            } else {
+                Err(format!("cycles {} != {}", mac.total_cycles(), n * 4))
+            }
+        });
+    }
+}

@@ -1,0 +1,131 @@
+//! Bit-accurate iterative CORDIC engine (Walther's unified formulation).
+//!
+//! This is the software model of CORVET's single shared CORDIC datapath:
+//! every "multiplier-free" operation in the accelerator — MAC multiplies,
+//! divisions, sinh/cosh/exp for the activation block — is a sequence of
+//! shift + add/sub + mux micro-rotations over two's-complement fixed-point
+//! words:
+//!
+//! ```text
+//! x[i+1] = x[i] - m * d[i] * (y[i] >> i)
+//! y[i+1] = y[i] +     d[i] * (x[i] >> i)
+//! z[i+1] = z[i] -     d[i] * e(i)
+//! ```
+//!
+//! with mode `m ∈ {1 (circular), 0 (linear), -1 (hyperbolic)}` and
+//! `e(i) = atan 2^-i / 2^-i / atanh 2^-i` respectively.
+//!
+//! The **iteration count is the paper's runtime knob**: every public entry
+//! point takes `iters` and the error shrinks geometrically with it. One
+//! hardware clock cycle executes [`STAGES_PER_CYCLE`] micro-rotations (the
+//! RTL unrolls two stages per cycle), which is what reconciles the paper's
+//! cycle table (§III-A: FxP-8 in 4/5 cycles, FxP-16 in 7/9) with the
+//! iteration counts needed for the reported accuracy.
+//!
+//! All arithmetic below is on raw `i64` words in the internal guard format
+//! `Q(63-GUARD_FRAC).GUARD_FRAC`; conversion from/to the narrow datapath
+//! formats happens at the [`mac`] / [`crate::activation`] boundary, exactly
+//! where the RTL width-converts.
+
+pub mod circular;
+pub mod hyperbolic;
+pub mod linear;
+pub mod mac;
+
+#[cfg(test)]
+mod tests;
+
+/// Micro-rotations executed per hardware clock cycle (the RTL unrolls two
+/// CORDIC stages between registers; see DESIGN.md §7).
+pub const STAGES_PER_CYCLE: u32 = 2;
+
+/// Internal working format: fractional bits carried through the iterative
+/// datapath (guard bits beyond any supported I/O format, mirroring the wide
+/// accumulator in the RTL).
+pub const GUARD_FRAC: u32 = 28;
+
+/// `1.0` in the internal working format.
+pub const ONE: i64 = 1 << GUARD_FRAC;
+
+/// Convert cycles from iterations under the two-stage-per-cycle unrolling.
+#[inline]
+pub fn cycles_for_iters(iters: u32) -> u32 {
+    iters.div_ceil(STAGES_PER_CYCLE)
+}
+
+/// Outcome of an iterative CORDIC evaluation: the raw results plus the
+/// cycle cost actually incurred (for the engine-level timing model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CordicResult {
+    /// Primary output (meaning depends on mode/operation).
+    pub value: i64,
+    /// Secondary output where applicable (e.g. sinh when value=cosh).
+    pub aux: i64,
+    /// Micro-rotations executed.
+    pub iters: u32,
+    /// Clock cycles consumed (`ceil(iters / STAGES_PER_CYCLE)`).
+    pub cycles: u32,
+}
+
+impl CordicResult {
+    pub(crate) fn new(value: i64, aux: i64, iters: u32) -> Self {
+        CordicResult { value, aux, iters, cycles: cycles_for_iters(iters) }
+    }
+}
+
+/// Facade bundling the three CORDIC modes with a fixed iteration budget —
+/// the software twin of one physical CORDIC datapath instance.
+#[derive(Debug, Clone, Copy)]
+pub struct CordicEngine {
+    /// Micro-rotations per operation.
+    pub iters: u32,
+}
+
+impl CordicEngine {
+    /// Engine with an explicit iteration budget.
+    pub fn new(iters: u32) -> Self {
+        CordicEngine { iters }
+    }
+
+    /// Multiply `x * z` (both in guard format) via linear rotation.
+    pub fn mul(&self, x: i64, z: i64) -> CordicResult {
+        linear::multiply(x, z, self.iters)
+    }
+
+    /// Divide `y / x` (guard format) via linear vectoring.
+    pub fn div(&self, y: i64, x: i64) -> CordicResult {
+        linear::divide(y, x, self.iters)
+    }
+
+    /// `(cosh t, sinh t)` via hyperbolic rotation (|t| within convergence).
+    pub fn cosh_sinh(&self, t: i64) -> CordicResult {
+        hyperbolic::cosh_sinh(t, self.iters)
+    }
+
+    /// `e^t` with range reduction (any representable t).
+    pub fn exp(&self, t: i64) -> CordicResult {
+        hyperbolic::exp(t, self.iters)
+    }
+
+    /// `tanh t` (HR rotation + LV division, with range folding).
+    pub fn tanh(&self, t: i64) -> CordicResult {
+        hyperbolic::tanh(t, self.iters)
+    }
+
+    /// `(cos t, sin t)` via circular rotation.
+    pub fn cos_sin(&self, t: i64) -> CordicResult {
+        circular::cos_sin(t, self.iters)
+    }
+}
+
+/// Quantise an `f64` into the internal guard format (test/bridge helper).
+#[inline]
+pub fn to_guard(v: f64) -> i64 {
+    (v * ONE as f64).round() as i64
+}
+
+/// Dequantise from the internal guard format.
+#[inline]
+pub fn from_guard(raw: i64) -> f64 {
+    raw as f64 / ONE as f64
+}

@@ -1,0 +1,75 @@
+//! Cross-mode integration tests for the CORDIC engine facade.
+
+use super::*;
+use crate::testutil::check_prop;
+
+#[test]
+fn engine_mul_div_roundtrip() {
+    let eng = CordicEngine::new(24);
+    let x = to_guard(1.75);
+    let z = to_guard(0.6);
+    let p = eng.mul(x, z);
+    let q = eng.div(p.value, x);
+    assert!((from_guard(q.value) - 0.6).abs() < 1e-4, "roundtrip got {}", from_guard(q.value));
+}
+
+#[test]
+fn engine_exposes_all_modes() {
+    let eng = CordicEngine::new(24);
+    assert!((from_guard(eng.exp(to_guard(1.0)).value) - 1f64.exp()).abs() < 1e-3);
+    assert!((from_guard(eng.tanh(to_guard(0.5)).value) - 0.5f64.tanh()).abs() < 1e-4);
+    let cs = eng.cos_sin(to_guard(0.5));
+    assert!((from_guard(cs.value) - 0.5f64.cos()).abs() < 1e-4);
+    let hs = eng.cosh_sinh(to_guard(0.5));
+    assert!((from_guard(hs.value) - 0.5f64.cosh()).abs() < 1e-4);
+}
+
+#[test]
+fn guard_conversion_roundtrip() {
+    for v in [-7.5, -0.125, 0.0, 0.333, 3.75] {
+        assert!((from_guard(to_guard(v)) - v).abs() < 1e-8);
+    }
+}
+
+#[test]
+fn cycles_for_iters_rounds_up() {
+    assert_eq!(cycles_for_iters(1), 1);
+    assert_eq!(cycles_for_iters(2), 1);
+    assert_eq!(cycles_for_iters(3), 2);
+    assert_eq!(cycles_for_iters(18), 9);
+}
+
+#[test]
+fn prop_mul_commutes_approximately() {
+    check_prop("a*b ~ b*a through the CORDIC path", |rng| {
+        let eng = CordicEngine::new(20);
+        let a = rng.uniform(-2.0, 2.0);
+        let b = rng.uniform(-2.0, 2.0);
+        let ab = from_guard(eng.mul(to_guard(a), to_guard(b)).value);
+        let ba = from_guard(eng.mul(to_guard(b), to_guard(a)).value);
+        // the datapath is asymmetric (x vs z roles) so results differ only
+        // within the iteration error bound
+        let tol = (a.abs() + b.abs()) * 2f64.powi(-18) + 1e-6;
+        if (ab - ba).abs() <= tol {
+            Ok(())
+        } else {
+            Err(format!("{a}*{b}: {ab} vs {ba}"))
+        }
+    });
+}
+
+#[test]
+fn prop_div_then_mul_is_identity() {
+    check_prop("x * (y/x) ~ y", |rng| {
+        let eng = CordicEngine::new(26);
+        let y = rng.uniform(-4.0, 4.0);
+        let x = rng.uniform(0.25, 4.0);
+        let q = eng.div(to_guard(y), to_guard(x));
+        let back = eng.mul(to_guard(x), q.value);
+        if (from_guard(back.value) - y).abs() < 2e-3 * (1.0 + y.abs()) {
+            Ok(())
+        } else {
+            Err(format!("x={x} y={y}: got {}", from_guard(back.value)))
+        }
+    });
+}

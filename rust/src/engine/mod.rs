@@ -1,0 +1,84 @@
+//! The vector engine: N lock-stepped PE lanes around the iterative CORDIC
+//! MAC, a shared time-multiplexed multi-AF block, pooling/normalisation
+//! units and the prefetcher — as a cycle-approximate performance simulator.
+//!
+//! The paper's central performance argument (§III-B) is **latency hiding
+//! through vector-level parallelism**: an iterative MAC takes 4–9 cycles,
+//! but with N PEs running independent elements, engine throughput is
+//! `N / cycles_per_mac` MACs/cycle without any deep pipeline. This module
+//! makes that argument quantitative for real layer traces: per-layer MAC
+//! waves, AF-block contention, pooling, and memory-fetch overlap.
+//!
+//! Outputs are *cycles and op counts*; converting them to seconds / watts /
+//! TOPS happens in [`crate::hwcost`] so the timing model stays technology-
+//! independent.
+
+mod sim;
+
+pub use sim::{EngineReport, LayerTiming};
+
+use crate::model::workloads::Trace;
+use crate::quant::PolicyTable;
+
+/// Vector-engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Number of processing elements (paper: 64–256).
+    pub pes: usize,
+    /// Shared multi-AF block instances (paper: 1, time-multiplexed).
+    pub af_blocks: usize,
+    /// Pooling-unit lanes.
+    pub pool_units: usize,
+    /// External-memory fetch latency per parameter burst (cycles).
+    pub fetch_latency: u64,
+    /// Words fetched per burst (bus width × burst length).
+    pub burst_words: u64,
+    /// Overlap AF execution with MAC computation (paper: yes).
+    pub af_overlap: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            pes: 64,
+            af_blocks: 1,
+            pool_units: 8,
+            fetch_latency: 64,
+            burst_words: 32,
+            af_overlap: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    /// The paper's two reported ASIC configurations.
+    pub fn pe64() -> Self {
+        EngineConfig { pes: 64, ..Default::default() }
+    }
+
+    /// 256-PE configuration (Table V resource-equivalent comparison).
+    pub fn pe256() -> Self {
+        EngineConfig { pes: 256, af_blocks: 4, pool_units: 32, ..Default::default() }
+    }
+}
+
+/// The simulator facade.
+#[derive(Debug, Clone)]
+pub struct VectorEngine {
+    /// Configuration being simulated.
+    pub config: EngineConfig,
+}
+
+impl VectorEngine {
+    /// New engine.
+    pub fn new(config: EngineConfig) -> Self {
+        assert!(config.pes > 0 && config.af_blocks > 0 && config.pool_units > 0);
+        VectorEngine { config }
+    }
+
+    /// Simulate one inference of a traced workload under a per-compute-layer
+    /// policy. `policy.len()` must equal `trace.compute_layers()`.
+    pub fn run_trace(&self, trace: &Trace, policy: &PolicyTable) -> EngineReport {
+        sim::run(self.config, trace, policy)
+    }
+}

@@ -1,0 +1,334 @@
+//! Trace-driven cycle-approximate simulation of the vector engine.
+
+use super::EngineConfig;
+use crate::activation::funcs;
+use crate::activation::ActFn;
+use crate::cordic::to_guard;
+use crate::memory::Prefetcher;
+use crate::model::network::af_iters;
+use crate::model::workloads::{Trace, TraceKind, TraceLayer};
+use crate::quant::{LayerPolicy, PolicyTable};
+
+/// Per-layer timing outcome.
+#[derive(Debug, Clone)]
+pub struct LayerTiming {
+    /// Layer name from the trace.
+    pub name: String,
+    /// Layer kind.
+    pub kind: TraceKind,
+    /// MAC operations.
+    pub macs: u64,
+    /// Cycles spent in MAC waves (after PE parallelism).
+    pub mac_cycles: u64,
+    /// Cycles of AF work (after AF-block parallelism), overlapped or not.
+    pub af_cycles: u64,
+    /// Pooling cycles (after pool-unit parallelism).
+    pub pool_cycles: u64,
+    /// Memory stall cycles not hidden by the prefetcher.
+    pub mem_stall_cycles: u64,
+    /// Total layer makespan in engine cycles.
+    pub total_cycles: u64,
+    /// PE utilisation during the layer's MAC phase.
+    pub pe_utilization: f64,
+    /// Policy applied (compute layers only).
+    pub policy: Option<LayerPolicy>,
+}
+
+/// Whole-trace simulation report.
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    /// Configuration simulated.
+    pub config: EngineConfig,
+    /// Per-layer breakdown.
+    pub per_layer: Vec<LayerTiming>,
+    /// Total engine cycles for one inference.
+    pub total_cycles: u64,
+    /// Total MACs.
+    pub total_macs: u64,
+    /// Total operations (2·MAC + AF + pool elems).
+    pub total_ops: u64,
+}
+
+impl EngineReport {
+    /// Wall-clock for one inference at a clock frequency.
+    pub fn time_ms(&self, clock_hz: f64) -> f64 {
+        self.total_cycles as f64 / clock_hz * 1e3
+    }
+
+    /// Sustained GOPS at a clock frequency.
+    pub fn gops(&self, clock_hz: f64) -> f64 {
+        self.total_ops as f64 / (self.total_cycles as f64 / clock_hz) / 1e9
+    }
+
+    /// Mean PE utilisation across MAC cycles.
+    pub fn mean_pe_utilization(&self) -> f64 {
+        let mac_cycles: u64 = self.per_layer.iter().map(|l| l.mac_cycles).sum();
+        if mac_cycles == 0 {
+            return 0.0;
+        }
+        let weighted: f64 = self
+            .per_layer
+            .iter()
+            .map(|l| l.pe_utilization * l.mac_cycles as f64)
+            .sum();
+        weighted / mac_cycles as f64
+    }
+}
+
+/// Cycles for one scalar AF evaluation of `f` under `mode`-budget iterations
+/// (deterministic representative-input probe of the datapath cost).
+fn af_cost_cycles(f: ActFn, iters: u32) -> u64 {
+    match f {
+        ActFn::Identity => 0,
+        ActFn::Softmax => 0, // handled per-vector below
+        _ => {
+            let (_, c) = funcs::apply(f, to_guard(0.5), iters);
+            // negative-branch functions (SELU) cost more; probe both sides
+            let (_, cn) = funcs::apply(f, to_guard(-0.5), iters);
+            c.total().max(cn.total()) as u64
+        }
+    }
+}
+
+/// Cycles for a pooling window of `k` elements (AAD datapath: all pairs in
+/// parallel SA modules -> adder tree -> shift/divide).
+fn pool_window_cycles(k: u32) -> u64 {
+    if k < 2 {
+        return 1;
+    }
+    // SA modules run in parallel (3 cycles), adder tree log2(pairs), 1
+    // normalisation cycle (window sizes are powers of two in the traces).
+    let pairs = (k * (k - 1) / 2).max(1);
+    3 + (32 - pairs.leading_zeros()) as u64 + 1
+}
+
+/// Run the simulation.
+pub fn run(config: EngineConfig, trace: &Trace, policy: &PolicyTable) -> EngineReport {
+    assert_eq!(
+        policy.len(),
+        trace.compute_layers(),
+        "policy must cover each compute layer of the trace"
+    );
+    let mut prefetch = Prefetcher::new(config.fetch_latency);
+    prefetch.preload();
+    let mut per_layer = Vec::with_capacity(trace.layers.len());
+    let mut now = 0u64;
+    let mut pidx = 0usize;
+    let mut current_mode = crate::cordic::mac::ExecMode::Accurate;
+
+    for layer in &trace.layers {
+        let timing = match layer.kind {
+            TraceKind::Conv | TraceKind::Dense => {
+                let lp = policy.layer(pidx);
+                pidx += 1;
+                current_mode = lp.mode;
+                sim_compute_layer(&config, layer, lp, &mut prefetch, now)
+            }
+            TraceKind::Pool => sim_pool_layer(&config, layer),
+            TraceKind::Plumbing => LayerTiming {
+                name: layer.name.clone(),
+                kind: layer.kind,
+                macs: 0,
+                mac_cycles: 0,
+                af_cycles: 0,
+                pool_cycles: 0,
+                mem_stall_cycles: 0,
+                // a pass over the outputs on the broadcast bus
+                total_cycles: layer.outputs / config.burst_words.max(1) + 1,
+                pe_utilization: 0.0,
+                policy: None,
+            },
+        };
+        let _ = current_mode;
+        now += timing.total_cycles;
+        per_layer.push(timing);
+    }
+
+    EngineReport {
+        config,
+        total_cycles: now,
+        total_macs: trace.total_macs(),
+        total_ops: trace.total_ops(),
+        per_layer,
+    }
+}
+
+fn sim_compute_layer(
+    config: &EngineConfig,
+    layer: &TraceLayer,
+    lp: LayerPolicy,
+    prefetch: &mut Prefetcher,
+    now: u64,
+) -> LayerTiming {
+    let cyc_per_mac = lp.cycles_per_mac() as u64;
+    // MAC waves: each wave issues one MAC slot to every PE.
+    let waves = layer.macs.div_ceil(config.pes as u64);
+    let mac_cycles = waves * cyc_per_mac;
+    let pe_utilization = if waves == 0 {
+        0.0
+    } else {
+        layer.macs as f64 / (waves * config.pes as u64) as f64
+    };
+
+    // AF work on the shared block(s); overlapped with MAC waves when enabled.
+    let iters = af_iters(lp.mode);
+    let per_op = af_cost_cycles(layer.af, iters);
+    let af_total = (layer.af_ops * per_op).div_ceil(config.af_blocks as u64);
+    let (af_cycles, compute_span) = if config.af_overlap {
+        // AF drains behind the MAC waves; only the non-hidden tail counts.
+        let tail = af_total.saturating_sub(mac_cycles);
+        (af_total, mac_cycles + tail)
+    } else {
+        (af_total, mac_cycles + af_total)
+    };
+
+    // Parameter fetch for the layer (weights stream once per inference);
+    // the prefetcher hides bursts behind compute.
+    let bursts = layer.params.div_ceil(config.burst_words.max(1));
+    let fetch_cycles = bursts.div_ceil(8); // 8 bursts in flight per slot
+    let mut fetcher = core::mem::replace(prefetch, Prefetcher::new(config.fetch_latency));
+    fetcher.fetch_latency = fetch_cycles.max(1);
+    let start = fetcher.consume(now, compute_span);
+    let mem_stall = start - now;
+    *prefetch = fetcher;
+
+    LayerTiming {
+        name: layer.name.clone(),
+        kind: layer.kind,
+        macs: layer.macs,
+        mac_cycles,
+        af_cycles,
+        pool_cycles: 0,
+        mem_stall_cycles: mem_stall,
+        total_cycles: compute_span + mem_stall,
+        pe_utilization,
+        policy: Some(lp),
+    }
+}
+
+fn sim_pool_layer(config: &EngineConfig, layer: &TraceLayer) -> LayerTiming {
+    let per_window = pool_window_cycles(layer.pool_window_size);
+    let pool_cycles = (layer.pool_windows * per_window).div_ceil(config.pool_units as u64);
+    LayerTiming {
+        name: layer.name.clone(),
+        kind: layer.kind,
+        macs: 0,
+        mac_cycles: 0,
+        af_cycles: 0,
+        pool_cycles,
+        mem_stall_cycles: 0,
+        total_cycles: pool_cycles,
+        pe_utilization: 0.0,
+        policy: None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::mac::ExecMode;
+    use crate::model::workloads::{tinyyolo_trace, vgg16_trace};
+    use crate::quant::Precision;
+
+    fn uniform_policy(trace: &Trace, mode: ExecMode) -> PolicyTable {
+        PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, mode)
+    }
+
+    #[test]
+    fn report_covers_all_layers() {
+        let t = vgg16_trace();
+        let eng = super::super::VectorEngine::new(EngineConfig::pe256());
+        let r = eng.run_trace(&t, &uniform_policy(&t, ExecMode::Approximate));
+        assert_eq!(r.per_layer.len(), t.layers.len());
+        assert_eq!(r.total_macs, t.total_macs());
+        assert!(r.total_cycles > 0);
+    }
+
+    #[test]
+    fn more_pes_fewer_cycles() {
+        let t = tinyyolo_trace();
+        let p = uniform_policy(&t, ExecMode::Approximate);
+        let r64 = super::super::VectorEngine::new(EngineConfig::pe64()).run_trace(&t, &p);
+        let r256 = super::super::VectorEngine::new(EngineConfig::pe256()).run_trace(&t, &p);
+        assert!(r256.total_cycles < r64.total_cycles);
+        // near-ideal scaling on big layers: between 2x and 4x
+        let speedup = r64.total_cycles as f64 / r256.total_cycles as f64;
+        assert!((2.0..=4.5).contains(&speedup), "speedup {speedup}");
+    }
+
+    #[test]
+    fn accurate_mode_slower_than_approximate() {
+        let t = tinyyolo_trace();
+        let ra = super::super::VectorEngine::new(EngineConfig::pe64())
+            .run_trace(&t, &uniform_policy(&t, ExecMode::Approximate));
+        let rc = super::super::VectorEngine::new(EngineConfig::pe64())
+            .run_trace(&t, &uniform_policy(&t, ExecMode::Accurate));
+        assert!(rc.total_cycles > ra.total_cycles);
+        // FxP-8: 5 vs 4 cycles per MAC -> ~1.25x on MAC-bound layers
+        let ratio = rc.total_cycles as f64 / ra.total_cycles as f64;
+        assert!((1.1..=1.3).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn af_overlap_hides_activation_time() {
+        let t = vgg16_trace();
+        let p = uniform_policy(&t, ExecMode::Approximate);
+        let mut on = EngineConfig::pe64();
+        on.af_overlap = true;
+        let mut off = on;
+        off.af_overlap = false;
+        let r_on = super::super::VectorEngine::new(on).run_trace(&t, &p);
+        let r_off = super::super::VectorEngine::new(off).run_trace(&t, &p);
+        assert!(r_on.total_cycles <= r_off.total_cycles);
+    }
+
+    #[test]
+    fn pe_utilization_bounded_and_high_on_big_layers() {
+        let t = vgg16_trace();
+        let r = super::super::VectorEngine::new(EngineConfig::pe256())
+            .run_trace(&t, &uniform_policy(&t, ExecMode::Approximate));
+        let u = r.mean_pe_utilization();
+        assert!((0.9..=1.0).contains(&u), "utilisation {u}");
+        for l in &r.per_layer {
+            assert!(l.pe_utilization <= 1.0);
+        }
+    }
+
+    #[test]
+    fn gops_and_time_are_consistent() {
+        let t = tinyyolo_trace();
+        let r = super::super::VectorEngine::new(EngineConfig::pe64())
+            .run_trace(&t, &uniform_policy(&t, ExecMode::Approximate));
+        let clock = 100e6;
+        let time_s = r.time_ms(clock) / 1e3;
+        let gops = r.gops(clock);
+        let ops = gops * 1e9 * time_s;
+        assert!((ops - r.total_ops as f64).abs() / (r.total_ops as f64) < 1e-9);
+    }
+
+    #[test]
+    fn throughput_scales_with_lanes_amortising_iterative_latency() {
+        // the paper's 4x claim: 4x the PEs -> ~4x throughput at equal
+        // clock, despite every MAC still being multi-cycle
+        let t = vgg16_trace();
+        let p = uniform_policy(&t, ExecMode::Approximate);
+        let mut c1 = EngineConfig::pe64();
+        c1.pes = 64;
+        let mut c4 = c1;
+        c4.pes = 256;
+        c4.af_blocks = 4;
+        c4.pool_units = 32;
+        let g1 = super::super::VectorEngine::new(c1).run_trace(&t, &p).gops(1e9);
+        let g4 = super::super::VectorEngine::new(c4).run_trace(&t, &p).gops(1e9);
+        let gain = g4 / g1;
+        assert!((3.2..=4.2).contains(&gain), "throughput gain {gain}");
+    }
+
+    #[test]
+    #[should_panic(expected = "policy must cover")]
+    fn policy_length_checked() {
+        let t = tinyyolo_trace();
+        let p = PolicyTable::uniform(2, Precision::Fxp8, ExecMode::Accurate);
+        super::super::VectorEngine::new(EngineConfig::pe64()).run_trace(&t, &p);
+    }
+}

@@ -1,0 +1,167 @@
+//! Fixed-point formats: word width + binary-point position.
+
+use super::FxpError;
+use std::fmt;
+
+/// A two's-complement fixed-point format `Q(m.n)` with `total_bits = 1 + m + n`
+/// (sign + integer + fraction).
+///
+/// The paper's supported precisions map to normalised operand grids
+/// (sign + all-fraction, range (-1, 1)): DNN operands are pre-normalised by
+/// the paper's "flexible precision scaling", so spending word bits on
+/// integer range would waste them. Wide partial sums live in the guard
+/// accumulator, not in these formats. The same grids are used by the L2
+/// JAX model (`python/compile/model.py::FRAC_BITS`).
+///
+/// | paper mode | format         | range            | resolution |
+/// |------------|----------------|------------------|------------|
+/// | FxP-4      | [`FXP4`]  Q0.3  | \[-1, 0.875\]    | 0.125      |
+/// | FxP-8      | [`FXP8`]  Q0.7  | \[-1, ~0.992\]   | 2⁻⁷        |
+/// | FxP-16     | [`FXP16`] Q0.15 | \[-1, ~1\]       | 2⁻¹⁵       |
+/// | (internal) | [`FXP32`] Q15.16 | accumulators    | 2⁻¹⁶       |
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Format {
+    /// Total word width in bits, including sign. 2..=63.
+    pub total_bits: u32,
+    /// Number of fractional bits. `frac_bits < total_bits`.
+    pub frac_bits: u32,
+}
+
+/// Paper FxP-4 mode: Q0.3.
+pub const FXP4: Format = Format { total_bits: 4, frac_bits: 3 };
+/// Paper FxP-8 mode: Q0.7.
+pub const FXP8: Format = Format { total_bits: 8, frac_bits: 7 };
+/// Paper FxP-16 mode: Q0.15.
+pub const FXP16: Format = Format { total_bits: 16, frac_bits: 15 };
+/// Wide internal/accumulator format: Q15.16 (not a paper datapath width; used
+/// for partial sums, mirroring the wider accumulator register in the RTL).
+pub const FXP32: Format = Format { total_bits: 32, frac_bits: 16 };
+
+/// Rounding behaviour when discarding fractional bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Rounding {
+    /// Arithmetic shift right — floor rounding. This is what a bare CORDIC
+    /// shifter does, and the paper's datapath default.
+    #[default]
+    Truncate,
+    /// Round half to even ("convergent"); used at quantisation boundaries.
+    NearestEven,
+    /// Round half away from zero; cheapest "add half then truncate" adder.
+    NearestAway,
+}
+
+impl Format {
+    /// Construct a validated format.
+    pub fn new(total_bits: u32, frac_bits: u32) -> Result<Self, FxpError> {
+        if total_bits < 2 || total_bits > 63 || frac_bits >= total_bits {
+            return Err(FxpError::InvalidFormat { total_bits, frac_bits });
+        }
+        Ok(Format { total_bits, frac_bits })
+    }
+
+    /// Integer bits (excluding sign).
+    #[inline]
+    pub fn int_bits(&self) -> u32 {
+        self.total_bits - 1 - self.frac_bits
+    }
+
+    /// Scale factor `2^frac_bits` as f64.
+    #[inline]
+    pub fn scale(&self) -> f64 {
+        (1i64 << self.frac_bits) as f64
+    }
+
+    /// Smallest representable raw value (`-2^(total_bits-1)`).
+    #[inline]
+    pub fn raw_min(&self) -> i64 {
+        -(1i64 << (self.total_bits - 1))
+    }
+
+    /// Largest representable raw value (`2^(total_bits-1) - 1`).
+    #[inline]
+    pub fn raw_max(&self) -> i64 {
+        (1i64 << (self.total_bits - 1)) - 1
+    }
+
+    /// Smallest representable real value.
+    #[inline]
+    pub fn min_value(&self) -> f64 {
+        self.raw_min() as f64 / self.scale()
+    }
+
+    /// Largest representable real value.
+    #[inline]
+    pub fn max_value(&self) -> f64 {
+        self.raw_max() as f64 / self.scale()
+    }
+
+    /// Resolution (value of one LSB).
+    #[inline]
+    pub fn epsilon(&self) -> f64 {
+        1.0 / self.scale()
+    }
+
+    /// The raw integer for `1.0` in this format.
+    #[inline]
+    pub fn one(&self) -> i64 {
+        1i64 << self.frac_bits
+    }
+
+    /// Convert a real value to raw representation with the given rounding,
+    /// saturating at the format bounds.
+    pub fn quantize(&self, value: f64, rounding: Rounding) -> i64 {
+        let scaled = value * self.scale();
+        let raw = match rounding {
+            Rounding::Truncate => scaled.floor(),
+            Rounding::NearestEven => {
+                // f64 round-half-even via round_ties_even semantics.
+                let r = scaled.round();
+                if (scaled - scaled.floor() - 0.5).abs() < f64::EPSILON * scaled.abs().max(1.0) {
+                    // exact tie: pick even
+                    let f = scaled.floor();
+                    if (f as i64) % 2 == 0 {
+                        f
+                    } else {
+                        f + 1.0
+                    }
+                } else {
+                    r
+                }
+            }
+            Rounding::NearestAway => {
+                if scaled >= 0.0 {
+                    (scaled + 0.5).floor()
+                } else {
+                    (scaled - 0.5).ceil()
+                }
+            }
+        };
+        let raw = if raw.is_nan() { 0.0 } else { raw };
+        let raw = raw.clamp(self.raw_min() as f64, self.raw_max() as f64);
+        raw as i64
+    }
+
+    /// Convert a raw value back to f64. The raw value is *not* required to be
+    /// within the word's bounds (accumulators are wider).
+    #[inline]
+    pub fn dequantize(&self, raw: i64) -> f64 {
+        raw as f64 / self.scale()
+    }
+
+    /// Reinterpret a raw value of this format in another format (shift the
+    /// binary point, truncating or extending fractional bits).
+    pub fn convert_raw(&self, raw: i64, to: Format, rounding: Rounding) -> i64 {
+        let shifted = if to.frac_bits >= self.frac_bits {
+            raw << (to.frac_bits - self.frac_bits)
+        } else {
+            super::ops::rshift_round(raw, self.frac_bits - to.frac_bits, rounding)
+        };
+        shifted.clamp(to.raw_min(), to.raw_max())
+    }
+}
+
+impl fmt::Display for Format {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Q{}.{}", self.int_bits(), self.frac_bits)
+    }
+}

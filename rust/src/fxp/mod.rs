@@ -1,0 +1,56 @@
+//! Fixed-point arithmetic substrate.
+//!
+//! CORVET's datapath is pure fixed point: FxP-4 / FxP-8 / FxP-16 two's
+//! complement words with a configurable binary point ("flexible precision
+//! scaling", paper §II-B). This module is the bit-accurate software model of
+//! that word format, shared by the CORDIC engine, the activation block, the
+//! pooling/normalisation units and the quantiser.
+//!
+//! Design notes
+//! ------------
+//! * Raw values are carried as `i64` so intermediates (adder-tree partial
+//!   sums, CORDIC guard bits) never overflow the host integer; the *format*
+//!   says how many bits the modelled hardware word has and quantisation back
+//!   to that width is an explicit, saturating operation — exactly like the
+//!   RTL, where the accumulator is wider than the operand registers.
+//! * Rounding is selectable per operation: hardware truncation (arithmetic
+//!   shift right, the paper's default), round-to-nearest-even (used at
+//!   quantisation boundaries), and stochastic rounding is intentionally
+//!   *not* provided (the paper's datapath has none).
+
+mod format;
+mod ops;
+mod value;
+
+pub use format::{Format, Rounding, FXP16, FXP32, FXP4, FXP8};
+pub use ops::{add_sat, clamp_to, mul_exact, rshift_round, sat_bounds, sub_sat};
+pub use value::Fxp;
+
+/// Errors produced by fixed-point conversions.
+#[derive(Debug, thiserror::Error, PartialEq, Eq, Clone)]
+pub enum FxpError {
+    /// A real value fell outside the representable range and saturation was
+    /// not requested.
+    #[error("value {value} out of range for format {format} (range [{lo}, {hi}])")]
+    OutOfRange {
+        /// Offending value, rendered as a string to keep the error `Eq`.
+        value: String,
+        /// Target format description.
+        format: String,
+        /// Lower representable bound.
+        lo: String,
+        /// Upper representable bound.
+        hi: String,
+    },
+    /// A format was constructed with an invalid bit allocation.
+    #[error("invalid format: total_bits={total_bits} frac_bits={frac_bits}")]
+    InvalidFormat {
+        /// Requested total width.
+        total_bits: u32,
+        /// Requested fractional width.
+        frac_bits: u32,
+    },
+}
+
+#[cfg(test)]
+mod tests;

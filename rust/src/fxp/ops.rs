@@ -1,0 +1,119 @@
+//! Raw-word fixed-point operations: the add/sub/shift primitives the CORDIC
+//! datapath is built from, with explicit saturation and rounding.
+
+use super::{Format, Rounding};
+
+/// Inclusive saturation bounds for a format.
+#[inline]
+pub fn sat_bounds(fmt: Format) -> (i64, i64) {
+    (fmt.raw_min(), fmt.raw_max())
+}
+
+/// Saturating addition of two raw words in `fmt`.
+#[inline]
+pub fn add_sat(a: i64, b: i64, fmt: Format) -> i64 {
+    (a + b).clamp(fmt.raw_min(), fmt.raw_max())
+}
+
+/// Saturating subtraction of two raw words in `fmt`.
+#[inline]
+pub fn sub_sat(a: i64, b: i64, fmt: Format) -> i64 {
+    (a - b).clamp(fmt.raw_min(), fmt.raw_max())
+}
+
+/// Clamp a wide raw value into `fmt`'s range.
+#[inline]
+pub fn clamp_to(a: i64, fmt: Format) -> i64 {
+    a.clamp(fmt.raw_min(), fmt.raw_max())
+}
+
+/// Exact product of two raw words; the result's binary point is at
+/// `a_frac + b_frac`. This models the *reference* multiplier the paper's
+/// CORDIC MAC replaces (used by baselines and oracles, never by the CORDIC
+/// datapath itself).
+#[inline]
+pub fn mul_exact(a: i64, b: i64) -> i64 {
+    // i64 suffices: operands are <= 32-bit words in all modelled formats.
+    a * b
+}
+
+/// Arithmetic right shift with selectable rounding. `shift == 0` is identity.
+///
+/// `Truncate` is the hardware shifter (floor); the nearest modes model an
+/// extra half-LSB adder before the shift.
+#[inline]
+pub fn rshift_round(value: i64, shift: u32, rounding: Rounding) -> i64 {
+    if shift == 0 {
+        return value;
+    }
+    if shift >= 63 {
+        return if value < 0 { -1 } else { 0 };
+    }
+    match rounding {
+        Rounding::Truncate => value >> shift,
+        Rounding::NearestAway => {
+            let half = 1i64 << (shift - 1);
+            if value >= 0 {
+                (value + half) >> shift
+            } else {
+                -((-value + half) >> shift)
+            }
+        }
+        Rounding::NearestEven => {
+            let floor = value >> shift;
+            let rem = value - (floor << shift);
+            let half = 1i64 << (shift - 1);
+            if rem > half || (rem == half && (floor & 1) == 1) {
+                floor + 1
+            } else {
+                floor
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fxp::FXP8;
+
+    #[test]
+    fn add_saturates_at_max() {
+        assert_eq!(add_sat(FXP8.raw_max(), 1, FXP8), FXP8.raw_max());
+        assert_eq!(add_sat(FXP8.raw_min(), -1, FXP8), FXP8.raw_min());
+        assert_eq!(add_sat(3, 4, FXP8), 7);
+    }
+
+    #[test]
+    fn sub_saturates_at_min() {
+        assert_eq!(sub_sat(FXP8.raw_min(), 1, FXP8), FXP8.raw_min());
+        assert_eq!(sub_sat(10, 3, FXP8), 7);
+    }
+
+    #[test]
+    fn rshift_truncate_is_floor() {
+        assert_eq!(rshift_round(7, 1, Rounding::Truncate), 3);
+        assert_eq!(rshift_round(-7, 1, Rounding::Truncate), -4); // floor(-3.5)
+        assert_eq!(rshift_round(-1, 5, Rounding::Truncate), -1);
+    }
+
+    #[test]
+    fn rshift_nearest_away() {
+        assert_eq!(rshift_round(7, 1, Rounding::NearestAway), 4); // 3.5 -> 4
+        assert_eq!(rshift_round(-7, 1, Rounding::NearestAway), -4); // -3.5 -> -4
+        assert_eq!(rshift_round(5, 1, Rounding::NearestAway), 3); // 2.5 -> 3
+    }
+
+    #[test]
+    fn rshift_nearest_even_ties() {
+        assert_eq!(rshift_round(5, 1, Rounding::NearestEven), 2); // 2.5 -> 2
+        assert_eq!(rshift_round(7, 1, Rounding::NearestEven), 4); // 3.5 -> 4
+        assert_eq!(rshift_round(6, 2, Rounding::NearestEven), 2); // 1.5 -> 2
+    }
+
+    #[test]
+    fn rshift_huge_shift_collapses_to_sign() {
+        assert_eq!(rshift_round(12345, 63, Rounding::Truncate), 0);
+        assert_eq!(rshift_round(-12345, 100, Rounding::Truncate), -1);
+    }
+}

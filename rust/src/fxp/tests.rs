@@ -1,0 +1,198 @@
+//! Unit + property tests for the fixed-point substrate.
+
+use super::*;
+use crate::testutil::{assert_close, check_prop};
+
+#[test]
+fn format_constants_are_valid() {
+    for fmt in [FXP4, FXP8, FXP16, FXP32] {
+        assert!(Format::new(fmt.total_bits, fmt.frac_bits).is_ok());
+    }
+}
+
+#[test]
+fn format_rejects_bad_allocations() {
+    assert!(Format::new(1, 0).is_err());
+    assert!(Format::new(8, 8).is_err());
+    assert!(Format::new(64, 2).is_err());
+}
+
+#[test]
+fn fxp8_range_matches_q0_7() {
+    assert_close(FXP8.min_value(), -1.0, 1e-12, 0.0);
+    assert_close(FXP8.max_value(), 127.0 / 128.0, 1e-12, 0.0);
+    assert_close(FXP8.epsilon(), 1.0 / 128.0, 1e-12, 0.0);
+    assert_eq!(FXP8.one(), 128);
+}
+
+#[test]
+fn fxp16_range_matches_q0_15() {
+    assert_close(FXP16.min_value(), -1.0, 1e-12, 0.0);
+    assert_close(FXP16.epsilon(), 1.0 / 32768.0, 1e-12, 0.0);
+}
+
+#[test]
+fn quantize_dequantize_exact_grid_points() {
+    // Every representable FxP-8 value round-trips exactly.
+    for raw in FXP8.raw_min()..=FXP8.raw_max() {
+        let v = FXP8.dequantize(raw);
+        assert_eq!(FXP8.quantize(v, Rounding::NearestEven), raw);
+        assert_eq!(FXP8.quantize(v, Rounding::Truncate), raw);
+    }
+}
+
+#[test]
+fn quantize_saturates() {
+    assert_eq!(FXP8.quantize(100.0, Rounding::NearestEven), FXP8.raw_max());
+    assert_eq!(FXP8.quantize(-100.0, Rounding::NearestEven), FXP8.raw_min());
+    assert_eq!(FXP8.quantize(f64::NAN, Rounding::Truncate), 0);
+}
+
+#[test]
+fn convert_widens_and_narrows() {
+    let x = Fxp::from_f64(0.25, FXP8);
+    let wide = x.convert(FXP16, Rounding::Truncate);
+    assert_close(wide.to_f64(), 0.25, 1e-12, 0.0);
+    let back = wide.convert(FXP8, Rounding::Truncate);
+    assert_eq!(back.raw(), x.raw());
+}
+
+#[test]
+fn narrow_saturates_out_of_range() {
+    // FXP32 has integer bits; 2.0 cannot survive narrowing to Q0.7
+    let big = Fxp::from_f64(2.0, FXP32);
+    let narrow = big.convert(FXP8, Rounding::Truncate);
+    assert_eq!(narrow.raw(), FXP8.raw_max());
+    let neg = Fxp::from_f64(-2.0, FXP32);
+    assert_eq!(neg.convert(FXP8, Rounding::Truncate).raw(), FXP8.raw_min());
+}
+
+#[test]
+fn mul_exact_matches_float_within_lsb() {
+    let a = Fxp::from_f64(0.5, FXP8);
+    let b = Fxp::from_f64(0.25, FXP8);
+    let p = a.mul_exact(b);
+    assert!(p.error_vs(0.5 * 0.25) <= FXP8.epsilon());
+}
+
+#[test]
+fn neg_and_abs() {
+    let x = Fxp::from_f64(-0.5, FXP8);
+    assert_close(x.neg().to_f64(), 0.5, 1e-12, 0.0);
+    assert_close(x.abs().to_f64(), 0.5, 1e-12, 0.0);
+    // -raw_min saturates rather than wrapping
+    let m = Fxp::from_raw(FXP8.raw_min(), FXP8);
+    assert_eq!(m.neg().raw(), FXP8.raw_max());
+}
+
+#[test]
+fn try_from_f64_errors_out_of_range() {
+    assert!(Fxp::try_from_f64(1.0, FXP8).is_err());
+    assert!(Fxp::try_from_f64(0.99, FXP8).is_ok());
+}
+
+#[test]
+fn display_formats() {
+    assert_eq!(format!("{FXP8}"), "Q0.7");
+    assert_eq!(format!("{FXP16}"), "Q0.15");
+    let x = Fxp::from_f64(0.5, FXP8);
+    assert_eq!(format!("{x}"), "0.5(Q0.7)");
+}
+
+// ---- property tests -------------------------------------------------------
+
+#[test]
+fn prop_quantize_error_bounded_by_lsb() {
+    check_prop("quantise error <= 1 LSB", |rng| {
+        let fmt = *[FXP4, FXP8, FXP16].iter().nth(rng.index(3)).unwrap();
+        let v = rng.uniform(fmt.min_value(), fmt.max_value());
+        let q = Fxp::from_f64(v, fmt);
+        let err = q.error_vs(v);
+        if err <= fmt.epsilon() {
+            Ok(())
+        } else {
+            Err(format!("|q({v}) - {v}| = {err} > eps {} in {fmt}", fmt.epsilon()))
+        }
+    });
+}
+
+#[test]
+fn prop_add_matches_float_when_in_range() {
+    check_prop("in-range add is exact on the grid", |rng| {
+        let a = Fxp::from_raw(rng.int_in(-60, 60), FXP8);
+        let b = Fxp::from_raw(rng.int_in(-60, 60), FXP8);
+        let s = a.add(b);
+        let expect = a.to_f64() + b.to_f64();
+        if (s.to_f64() - expect).abs() < 1e-12 {
+            Ok(())
+        } else {
+            Err(format!("{a} + {b} = {s}, expected {expect}"))
+        }
+    });
+}
+
+#[test]
+fn prop_add_saturates_never_wraps() {
+    check_prop("saturating add never wraps sign", |rng| {
+        let a = Fxp::from_raw(rng.int_in(FXP8.raw_min(), FXP8.raw_max()), FXP8);
+        let b = Fxp::from_raw(rng.int_in(FXP8.raw_min(), FXP8.raw_max()), FXP8);
+        let s = a.add(b);
+        let exact = a.to_f64() + b.to_f64();
+        // saturation moves toward the bound, never past/away from it
+        if exact > FXP8.max_value() && s.raw() != FXP8.raw_max() {
+            return Err(format!("{exact} should saturate high, got {s}"));
+        }
+        if exact < FXP8.min_value() && s.raw() != FXP8.raw_min() {
+            return Err(format!("{exact} should saturate low, got {s}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_convert_roundtrip_widening_is_lossless() {
+    check_prop("narrow->wide->narrow is identity", |rng| {
+        let raw = rng.int_in(FXP8.raw_min(), FXP8.raw_max());
+        let x = Fxp::from_raw(raw, FXP8);
+        let rt = x.convert(FXP32, Rounding::Truncate).convert(FXP8, Rounding::Truncate);
+        if rt.raw() == x.raw() {
+            Ok(())
+        } else {
+            Err(format!("roundtrip {} -> {}", x.raw(), rt.raw()))
+        }
+    });
+}
+
+#[test]
+fn prop_rshift_round_nearest_within_half_lsb() {
+    check_prop("nearest rounding error <= 0.5 ulp", |rng| {
+        let v = rng.int_in(-1_000_000, 1_000_000);
+        let sh = rng.int_in(1, 12) as u32;
+        let exact = v as f64 / (1i64 << sh) as f64;
+        for mode in [Rounding::NearestEven, Rounding::NearestAway] {
+            let r = rshift_round(v, sh, mode) as f64;
+            if (r - exact).abs() > 0.5 + 1e-12 {
+                return Err(format!("v={v} sh={sh} mode={mode:?}: {r} vs {exact}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_mul_exact_error_bounded() {
+    check_prop("exact mul truncation error < 1 LSB", |rng| {
+        let a = Fxp::from_raw(rng.int_in(-40, 40), FXP8);
+        let b = Fxp::from_raw(rng.int_in(-40, 40), FXP8);
+        let p = a.mul_exact(b);
+        let exact = a.to_f64() * b.to_f64();
+        if exact.abs() > FXP8.max_value() {
+            return Ok(()); // saturation case, checked elsewhere
+        }
+        if p.error_vs(exact) <= FXP8.epsilon() {
+            Ok(())
+        } else {
+            Err(format!("{a} * {b} = {p}, expected {exact}"))
+        }
+    });
+}

@@ -1,0 +1,125 @@
+//! A tagged fixed-point value: raw word + format, with checked arithmetic.
+//!
+//! [`Fxp`] is the ergonomic layer used by the model-level code (quantiser,
+//! network inference, pooling). The CORDIC inner loops work directly on raw
+//! `i64` words for speed; [`Fxp`] is how values enter and leave them.
+
+use super::{ops, Format, FxpError, Rounding};
+use std::fmt;
+
+/// A fixed-point number: `raw / 2^format.frac_bits`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Fxp {
+    raw: i64,
+    format: Format,
+}
+
+impl Fxp {
+    /// Quantise a real value into `format`, saturating.
+    pub fn from_f64(value: f64, format: Format) -> Self {
+        Fxp { raw: format.quantize(value, Rounding::NearestEven), format }
+    }
+
+    /// Quantise with explicit rounding.
+    pub fn from_f64_round(value: f64, format: Format, rounding: Rounding) -> Self {
+        Fxp { raw: format.quantize(value, rounding), format }
+    }
+
+    /// Quantise, erroring (instead of saturating) if out of range.
+    pub fn try_from_f64(value: f64, format: Format) -> Result<Self, FxpError> {
+        if value < format.min_value() || value > format.max_value() {
+            return Err(FxpError::OutOfRange {
+                value: format!("{value}"),
+                format: format!("{format}"),
+                lo: format!("{}", format.min_value()),
+                hi: format!("{}", format.max_value()),
+            });
+        }
+        Ok(Self::from_f64(value, format))
+    }
+
+    /// Wrap an existing raw word (clamped into range).
+    pub fn from_raw(raw: i64, format: Format) -> Self {
+        Fxp { raw: ops::clamp_to(raw, format), format }
+    }
+
+    /// Zero in the given format.
+    pub fn zero(format: Format) -> Self {
+        Fxp { raw: 0, format }
+    }
+
+    /// One in the given format.
+    pub fn one(format: Format) -> Self {
+        Fxp { raw: format.one(), format }
+    }
+
+    /// The raw two's-complement word.
+    #[inline]
+    pub fn raw(&self) -> i64 {
+        self.raw
+    }
+
+    /// The format tag.
+    #[inline]
+    pub fn format(&self) -> Format {
+        self.format
+    }
+
+    /// Real value.
+    #[inline]
+    pub fn to_f64(&self) -> f64 {
+        self.format.dequantize(self.raw)
+    }
+
+    /// Saturating add; panics if formats differ (a format mismatch is a
+    /// datapath wiring bug, not a runtime condition).
+    pub fn add(&self, other: Fxp) -> Fxp {
+        assert_eq!(self.format, other.format, "fxp format mismatch in add");
+        Fxp { raw: ops::add_sat(self.raw, other.raw, self.format), format: self.format }
+    }
+
+    /// Saturating subtract.
+    pub fn sub(&self, other: Fxp) -> Fxp {
+        assert_eq!(self.format, other.format, "fxp format mismatch in sub");
+        Fxp { raw: ops::sub_sat(self.raw, other.raw, self.format), format: self.format }
+    }
+
+    /// Exact (reference) multiply, result re-quantised into this value's
+    /// format with truncation — this is the baseline multiplier, *not* the
+    /// CORDIC path.
+    pub fn mul_exact(&self, other: Fxp) -> Fxp {
+        let wide = ops::mul_exact(self.raw, other.raw);
+        let raw = ops::rshift_round(wide, other.format.frac_bits, Rounding::Truncate);
+        Fxp { raw: ops::clamp_to(raw, self.format), format: self.format }
+    }
+
+    /// Negation (saturating: `-raw_min` saturates to `raw_max`).
+    pub fn neg(&self) -> Fxp {
+        Fxp { raw: ops::clamp_to(-self.raw, self.format), format: self.format }
+    }
+
+    /// Absolute value (saturating).
+    pub fn abs(&self) -> Fxp {
+        if self.raw < 0 {
+            self.neg()
+        } else {
+            *self
+        }
+    }
+
+    /// Convert to another format (binary-point shift + saturation).
+    pub fn convert(&self, to: Format, rounding: Rounding) -> Fxp {
+        Fxp { raw: self.format.convert_raw(self.raw, to, rounding), format: to }
+    }
+
+    /// Quantisation error against a real reference value.
+    pub fn error_vs(&self, reference: f64) -> f64 {
+        (self.to_f64() - reference).abs()
+    }
+}
+
+impl fmt::Display for Fxp {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}({})", self.to_f64(), self.format)
+    }
+}

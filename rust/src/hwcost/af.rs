@@ -1,0 +1,129 @@
+//! Structural cost model of the time-multiplexed multi-AF block
+//! (Table III "Proposed" column; Fig. 10 datapath).
+//!
+//! Inventory: HR + LV CORDIC paths over a 16-bit datapath (two unrolled
+//! stages each), the angle/constant ROM, the sigmoid/tanh switching mux,
+//! the ReLU bypass, the SoftMax FIFO, the two small 8×8 GELU multipliers,
+//! range-reduction logic and the mode sequencer.
+
+use super::primitives::{AsicPrimitives, FpgaPrimitives};
+use super::{AsicReport, FpgaReport};
+
+/// Component counts of the multi-AF block.
+struct AfStruct {
+    adder_bits: f64,   // HR core + LV core + range reduction
+    mux_bits: f64,     // steering + function select + bypass
+    shifter_bits: f64, // iterative barrel shifters + exponent shifter
+    rom_bits: f64,     // atanh/atan/constant tables
+    fifo_bits: f64,    // SoftMax intermediate FIFO (16 × 16)
+    reg_bits: f64,     // core x/y/z + I/O + pipeline
+    mult_bitsq: f64,   // two 8×8 auxiliary multipliers
+    cmp_bits: f64,     // sign/saturation comparators
+    ctrl_units: f64,   // sequencer FSM complexity
+    width: f64,        // datapath width (16)
+}
+
+fn af_struct() -> AfStruct {
+    AfStruct {
+        adder_bits: 2.0 * (16.0 + 16.0 + 12.0) + 2.0 * (16.0 + 12.0) + 32.0,
+        mux_bits: 64.0 + 48.0 + 16.0,
+        shifter_bits: 2.0 * 16.0 * 4.0 + 64.0,
+        rom_bits: 48.0 * 16.0,
+        fifo_bits: 16.0 * 16.0,
+        reg_bits: 88.0 + 64.0 + 24.0 + 32.0,
+        mult_bitsq: 2.0 * 64.0,
+        cmp_bits: 32.0,
+        ctrl_units: 14.0,
+        width: 16.0,
+    }
+}
+
+/// FPGA cost of the multi-AF block (paper row: 537 LUTs / 468 FFs /
+/// 2.6 ns / 30 mW).
+pub fn multi_af_fpga() -> FpgaReport {
+    let s = af_struct();
+    let c = FpgaPrimitives::default();
+    let luts = s.adder_bits * c.adder_lut_per_bit * 0.5
+        + s.mux_bits * c.mux_lut_per_bit
+        + s.shifter_bits * c.shifter_lut_per_bit
+        + s.rom_bits * c.rom_lut_per_bit
+        + s.mult_bitsq * c.mult_lut_per_bitsq
+        + s.cmp_bits * c.cmp_lut_per_bit
+        + s.ctrl_units * c.ctrl_lut
+        + 8.0; // output-scaling adder
+    let ffs = s.fifo_bits + s.reg_bits;
+    // pipelined per-stage path: one adder level
+    let delay_ns = c.level_ns + s.width * c.adder_ns_per_bit;
+    let power_mw = luts * c.mw_per_lut_100mhz + 4.0 * c.static_mw;
+    FpgaReport { luts, ffs, dsps: 0, delay_ns, power_mw }
+}
+
+/// ASIC cost of the multi-AF block (paper row: 2138 µm² / 2.6 ns / 60 mW).
+pub fn multi_af_asic() -> AsicReport {
+    let s = af_struct();
+    let c = AsicPrimitives::default();
+    let wiring = 1.25; // clock tree + routing overhead of the mode muxing
+    let area = (s.adder_bits * c.adder_um2_per_bit
+        + s.mux_bits * c.mux_um2_per_bit
+        + s.shifter_bits * c.shifter_um2_per_bit
+        + s.rom_bits * c.rom_um2_per_bit
+        + (s.fifo_bits + s.reg_bits) * c.reg_um2_per_bit
+        + s.mult_bitsq * c.mult_um2_per_bitsq
+        + s.cmp_bits * c.cmp_um2_per_bit
+        + 2.0 * c.ctrl_um2)
+        * wiring;
+    let delay = s.width * c.adder_ns_per_bit + c.level_ns + c.reg_ns;
+    // time-multiplexed block: only one mode's datapath switches at a time,
+    // so the activity factor is far below the MAC's
+    let activity = 4.6;
+    let power = area * c.mw_per_um2_ghz * (1.0 / delay) * activity + area * c.leak_mw_per_um2;
+    AsicReport { area_um2: area, delay_ns: delay, power_mw: power }
+}
+
+/// The "<4 % overhead" claim (§III-D): area/power of the aux components
+/// (FIFO + two multipliers + switch mux + bypass) over a whole 64-PE engine.
+pub fn aux_overhead_fraction() -> f64 {
+    let c = AsicPrimitives::default();
+    let aux = (16.0 * 16.0) * c.reg_um2_per_bit // FIFO
+        + 2.0 * 64.0 * c.mult_um2_per_bitsq // two small multipliers
+        + (64.0 + 16.0) * c.mux_um2_per_bit; // switch mux + bypass
+    let engine = super::engine_asic(&crate::engine::EngineConfig::pe64(), 4).area_mm2 * 1e6;
+    aux / engine
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fpga_near_paper_row() {
+        let r = multi_af_fpga();
+        assert!((r.luts - 537.0).abs() / 537.0 < 0.2, "LUTs {}", r.luts);
+        assert!((r.ffs - 468.0).abs() / 468.0 < 0.2, "FFs {}", r.ffs);
+        assert!((r.delay_ns - 2.6).abs() / 2.6 < 0.2, "delay {}", r.delay_ns);
+        assert!((r.power_mw - 30.0).abs() / 30.0 < 0.25, "power {}", r.power_mw);
+    }
+
+    #[test]
+    fn asic_near_paper_row() {
+        let r = multi_af_asic();
+        assert!((r.area_um2 - 2138.0).abs() / 2138.0 < 0.25, "area {}", r.area_um2);
+        assert!((r.delay_ns - 2.6).abs() / 2.6 < 0.15, "delay {}", r.delay_ns);
+        assert!((r.power_mw - 60.0).abs() / 60.0 < 0.3, "power {}", r.power_mw);
+    }
+
+    #[test]
+    fn aux_overhead_below_four_percent() {
+        let f = aux_overhead_fraction();
+        assert!(f < 0.04, "aux overhead {f}");
+        assert!(f > 0.0);
+    }
+
+    #[test]
+    fn af_block_bigger_than_one_mac_smaller_than_array() {
+        let af = multi_af_asic();
+        let mac = super::super::iterative_mac_asic(crate::quant::Precision::Fxp8);
+        assert!(af.area_um2 > 5.0 * mac.area_um2);
+        assert!(af.area_um2 < 64.0 * mac.area_um2);
+    }
+}

@@ -1,0 +1,77 @@
+//! Calibrated FPGA + ASIC hardware cost models.
+//!
+//! We cannot re-run Synopsys DC or Vivado here, so the paper's absolute
+//! synthesis numbers are reproduced through an **analytic structural model**:
+//! each design (the proposed iterative MAC, the pipelined-CORDIC baseline,
+//! the multi-AF block, the full vector engine) is decomposed into datapath
+//! primitives (adders, registers, muxes, shifters, ROM/SRAM bits,
+//! multipliers) and costed with a primitive library whose constants are
+//! calibrated against the paper's *proposed-design* rows (Table II/III/IV/V)
+//! — see DESIGN.md §6 for the calibration policy. SoTA comparison rows are
+//! carried as published data in [`crate::tables`].
+//!
+//! What the model is good for:
+//! * internal-consistency checks (does an iterative single-datapath MAC
+//!   really come out ~2× smaller than an unrolled one?);
+//! * scaling laws (64→256 PE area/power/frequency, Table V);
+//! * converting the engine simulator's cycle counts into seconds, watts and
+//!   TOPS/W / TOPS/mm² for Tables IV–V and Fig. 13.
+
+mod af;
+mod mac;
+mod primitives;
+mod system;
+
+pub use af::{aux_overhead_fraction, multi_af_asic, multi_af_fpga};
+pub use mac::{iterative_mac_asic, iterative_mac_fpga, pipelined_mac_asic, pipelined_mac_fpga};
+pub use primitives::{AsicPrimitives, FpgaPrimitives};
+pub use system::{engine_asic, engine_fpga, SystemAsic, SystemFpga};
+
+/// FPGA post-P&R style resource/timing/power estimate for one block
+/// (VC707-class device, 100 MHz methodology as in the paper §IV-C).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaReport {
+    /// Lookup tables.
+    pub luts: f64,
+    /// Flip-flops.
+    pub ffs: f64,
+    /// DSP blocks (the proposed designs use none).
+    pub dsps: u32,
+    /// Critical-path delay in ns.
+    pub delay_ns: f64,
+    /// Dynamic + static power in mW at the methodology clock.
+    pub power_mw: f64,
+}
+
+impl FpgaReport {
+    /// Power-delay product in pJ.
+    pub fn pdp_pj(&self) -> f64 {
+        self.power_mw * self.delay_ns
+    }
+}
+
+/// ASIC post-synthesis style estimate (28 nm HPC+, 0.9 V, worst corner).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AsicReport {
+    /// Cell area in µm².
+    pub area_um2: f64,
+    /// Critical-path delay in ns.
+    pub delay_ns: f64,
+    /// Power in mW at the block's natural operating frequency.
+    pub power_mw: f64,
+}
+
+impl AsicReport {
+    /// Power-delay product in pJ.
+    pub fn pdp_pj(&self) -> f64 {
+        self.power_mw * self.delay_ns
+    }
+
+    /// Maximum clock in GHz implied by the critical path.
+    pub fn fmax_ghz(&self) -> f64 {
+        1.0 / self.delay_ns
+    }
+}
+
+#[cfg(test)]
+mod tests;

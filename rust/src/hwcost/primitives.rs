@@ -1,0 +1,127 @@
+//! The primitive cost library.
+//!
+//! Constants are calibrated (DESIGN.md §6) so the structural model of the
+//! *proposed* designs reproduces the paper's reported rows; every other
+//! design is then costed with the same library, making the comparisons
+//! regenerable instead of quoted.
+
+/// FPGA primitive costs (VC707-class 7-series, post-P&R averages).
+#[derive(Debug, Clone, Copy)]
+pub struct FpgaPrimitives {
+    /// LUTs per adder bit (carry-chain packed).
+    pub adder_lut_per_bit: f64,
+    /// LUTs per 2:1 mux bit (often absorbed, fractional).
+    pub mux_lut_per_bit: f64,
+    /// LUTs per barrel-shifter bit-stage.
+    pub shifter_lut_per_bit: f64,
+    /// LUTs per comparator bit.
+    pub cmp_lut_per_bit: f64,
+    /// LUTs per ROM bit (distributed).
+    pub rom_lut_per_bit: f64,
+    /// LUTs for a small FSM/control block per state-ish unit.
+    pub ctrl_lut: f64,
+    /// LUTs per (n×n) multiplier when DSPs are not used, per n² bit-product.
+    pub mult_lut_per_bitsq: f64,
+    /// FFs per register bit.
+    pub ff_per_bit: f64,
+    /// ns per adder bit on the carry chain.
+    pub adder_ns_per_bit: f64,
+    /// Fixed routing + LUT delay per logic level, ns.
+    pub level_ns: f64,
+    /// Dynamic power per LUT at 100 MHz, mW.
+    pub mw_per_lut_100mhz: f64,
+    /// Static power floor per block, mW.
+    pub static_mw: f64,
+}
+
+impl Default for FpgaPrimitives {
+    fn default() -> Self {
+        FpgaPrimitives {
+            adder_lut_per_bit: 1.0,
+            mux_lut_per_bit: 0.5,
+            shifter_lut_per_bit: 0.4,
+            cmp_lut_per_bit: 0.5,
+            rom_lut_per_bit: 0.04,
+            ctrl_lut: 6.0,
+            mult_lut_per_bitsq: 1.05,
+            ff_per_bit: 1.0,
+            adder_ns_per_bit: 0.12,
+            level_ns: 0.9,
+            mw_per_lut_100mhz: 0.055,
+            static_mw: 0.45,
+        }
+    }
+}
+
+/// ASIC primitive costs (28 nm HPC+, 0.9 V, worst-case corner).
+#[derive(Debug, Clone, Copy)]
+pub struct AsicPrimitives {
+    /// µm² per adder bit.
+    pub adder_um2_per_bit: f64,
+    /// µm² per register bit.
+    pub reg_um2_per_bit: f64,
+    /// µm² per 2:1 mux bit.
+    pub mux_um2_per_bit: f64,
+    /// µm² per barrel-shifter bit-stage.
+    pub shifter_um2_per_bit: f64,
+    /// µm² per comparator bit.
+    pub cmp_um2_per_bit: f64,
+    /// µm² per ROM bit.
+    pub rom_um2_per_bit: f64,
+    /// µm² per SRAM bit (compiled macro).
+    pub sram_um2_per_bit: f64,
+    /// µm² per multiplier bit-product.
+    pub mult_um2_per_bitsq: f64,
+    /// µm² for a small control FSM.
+    pub ctrl_um2: f64,
+    /// ns per adder bit (ripple).
+    pub adder_ns_per_bit: f64,
+    /// ns per mux/shift logic level.
+    pub level_ns: f64,
+    /// Register clk-to-q + setup, ns.
+    pub reg_ns: f64,
+    /// Dynamic power: mW per µm² per GHz at typical activity.
+    pub mw_per_um2_ghz: f64,
+    /// Leakage: mW per µm².
+    pub leak_mw_per_um2: f64,
+}
+
+impl Default for AsicPrimitives {
+    fn default() -> Self {
+        AsicPrimitives {
+            adder_um2_per_bit: 1.9,
+            reg_um2_per_bit: 2.0,
+            mux_um2_per_bit: 0.55,
+            shifter_um2_per_bit: 0.5,
+            cmp_um2_per_bit: 0.7,
+            rom_um2_per_bit: 0.08,
+            sram_um2_per_bit: 0.15,
+            mult_um2_per_bitsq: 1.1,
+            ctrl_um2: 18.0,
+            adder_ns_per_bit: 0.13,
+            level_ns: 0.18,
+            reg_ns: 0.35,
+            mw_per_um2_ghz: 0.016,
+            leak_mw_per_um2: 0.0008,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_positive() {
+        let f = FpgaPrimitives::default();
+        assert!(f.adder_lut_per_bit > 0.0 && f.mw_per_lut_100mhz > 0.0);
+        let a = AsicPrimitives::default();
+        assert!(a.adder_um2_per_bit > 0.0 && a.mw_per_um2_ghz > 0.0);
+    }
+
+    #[test]
+    fn sram_denser_than_logic_registers() {
+        let a = AsicPrimitives::default();
+        assert!(a.sram_um2_per_bit < a.reg_um2_per_bit / 4.0);
+    }
+}

@@ -1,0 +1,207 @@
+//! System-level (whole vector engine) cost models: the Table IV FPGA row
+//! and the Table V ASIC scaling rows.
+//!
+//! The important *architectural* content here is the scaling law: PE array
+//! area/power grow linearly with N, interconnect superlinearly (N·√N), and
+//! the control engine + memory subsystem are amortised — which is exactly
+//! why the 256-PE configuration comes out ahead of the 64-PE one in both
+//! TOPS/W and TOPS/mm² (Table V's headline). Absolute calibration targets
+//! are the paper's 64-PE row; see EXPERIMENTS.md for per-cell deltas.
+
+use super::primitives::{AsicPrimitives, FpgaPrimitives};
+use super::{af, mac};
+use crate::engine::EngineConfig;
+use crate::quant::Precision;
+
+/// Whole-engine ASIC estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemAsic {
+    /// Die area of the engine, mm².
+    pub area_mm2: f64,
+    /// Clock frequency, GHz (broadcast-limited).
+    pub freq_ghz: f64,
+    /// Total power at that clock, mW.
+    pub power_mw: f64,
+    /// Peak throughput, GOPS (2 ops per MAC, FxP-8 approximate mode unless
+    /// the caller passes other cycles-per-MAC).
+    pub peak_gops: f64,
+}
+
+impl SystemAsic {
+    /// Energy efficiency in TOPS/W.
+    pub fn tops_per_w(&self) -> f64 {
+        (self.peak_gops / 1e3) / (self.power_mw / 1e3)
+    }
+
+    /// Compute density in TOPS/mm².
+    pub fn tops_per_mm2(&self) -> f64 {
+        (self.peak_gops / 1e3) / self.area_mm2
+    }
+}
+
+/// Whole-engine FPGA estimate.
+#[derive(Debug, Clone, Copy)]
+pub struct SystemFpga {
+    /// kLUTs.
+    pub kluts: f64,
+    /// kFFs.
+    pub kffs: f64,
+    /// DSP blocks (none — the headline resource claim).
+    pub dsps: u32,
+    /// Achievable clock, MHz.
+    pub freq_mhz: f64,
+    /// Power at that clock, W.
+    pub power_w: f64,
+}
+
+/// On-chip SRAM per engine (activation + weight buffers), KB. Fixed across
+/// PE counts — the dual kernel banks are per-engine, not per-PE, which is
+/// what amortisation of the memory subsystem means.
+const ENGINE_SRAM_KB: f64 = 256.0;
+
+/// ASIC model of the engine (`cycles_per_mac` sets the peak-throughput
+/// denominator; 4 = FxP-8 approximate, the Table V operating point).
+pub fn engine_asic(cfg: &EngineConfig, cycles_per_mac: u32) -> SystemAsic {
+    let c = AsicPrimitives::default();
+    let pes = cfg.pes as f64;
+    let mac_area = mac::iterative_mac_asic(Precision::Fxp8).area_um2;
+    let af_area = af::multi_af_asic().area_um2;
+
+    // area: PE array + PE-local regs/interface + interconnect (N·sqrt(N)) +
+    // AF blocks + pooling + control + SRAM
+    let pe_local = 32.0 * c.reg_um2_per_bit + 60.0; // local regs + iface
+    let interconnect = 50.0 * pes * pes.sqrt() / 8.0;
+    let pooling = cfg.pool_units as f64 * 220.0;
+    let control = 12_000.0;
+    let sram = ENGINE_SRAM_KB * 1024.0 * 8.0 * c.sram_um2_per_bit;
+    let area_um2 = pes * (mac_area + pe_local)
+        + interconnect
+        + cfg.af_blocks as f64 * af_area
+        + pooling
+        + control
+        + sram;
+    let area_mm2 = area_um2 / 1e6;
+
+    // frequency: MAC stage + broadcast wire delay growing with array side
+    let freq_ghz = 1.0 / (0.57 + 0.0295 * pes.sqrt());
+
+    // power: PE array switches at a derated fraction of the standalone-MAC
+    // activity (data gating, wave scheduling); peripheral logic switches
+    // rarely; SRAM and leakage are separate terms.
+    let pe_array_area = pes * mac_area;
+    let logic_area = area_um2 - sram;
+    let pe_dynamic =
+        pe_array_area * c.mw_per_um2_ghz * freq_ghz * super::mac::MAC_ACTIVITY * 0.22;
+    let periph_dynamic = (logic_area - pe_array_area) * c.mw_per_um2_ghz * freq_ghz * 0.05;
+    let sram_mw = ENGINE_SRAM_KB * 0.05 * freq_ghz;
+    let leakage = logic_area * c.leak_mw_per_um2 + sram * 0.0001;
+    let power_mw = pe_dynamic + periph_dynamic + sram_mw + leakage;
+
+    // peak throughput: every PE retires one MAC per cycles_per_mac
+    let peak_gops = pes / cycles_per_mac as f64 * 2.0 * freq_ghz;
+
+    SystemAsic { area_mm2, freq_ghz, power_mw, peak_gops }
+}
+
+/// FPGA model of the engine (Table IV row; the paper's FPGA build maps the
+/// 256-PE configuration onto the VC707).
+pub fn engine_fpga(cfg: &EngineConfig) -> SystemFpga {
+    let c = FpgaPrimitives::default();
+    let pes = cfg.pes as f64;
+    let mac_f = mac::iterative_mac_fpga(Precision::Fxp8);
+    let af_f = af::multi_af_fpga();
+
+    let pe_iface_luts = 35.0;
+    let interconnect_luts = 20.0;
+    let pooling_luts = cfg.pool_units as f64 * 30.0;
+    let control_luts = 2_000.0;
+    let mem_iface_luts = 2_600.0;
+    let luts = pes * (mac_f.luts + pe_iface_luts + interconnect_luts)
+        + cfg.af_blocks as f64 * af_f.luts
+        + pooling_luts
+        + control_luts
+        + mem_iface_luts;
+
+    let ffs = pes * (mac_f.ffs + 28.0) + cfg.af_blocks as f64 * af_f.ffs + 1_200.0;
+
+    // clock: iterative MAC path + broadcast fanout across the array
+    let delay_ns = mac_f.delay_ns + 0.16 * pes.sqrt();
+    let freq_mhz = 1e3 / delay_ns;
+
+    // power: activity-derated LUT switching + BRAM + static
+    let activity = 0.30;
+    let dynamic_mw = luts * c.mw_per_lut_100mhz * (freq_mhz / 100.0) * activity;
+    let bram_static_mw = 140.0;
+    let power_w = (dynamic_mw + bram_static_mw) / 1e3;
+
+    SystemFpga { kluts: luts / 1e3, kffs: ffs / 1e3, dsps: 0, freq_mhz, power_w }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn asic_64pe_near_paper_row() {
+        // Paper Table V (64 PE): 0.43 mm², 1.24 GHz, 329 mW
+        let r = engine_asic(&EngineConfig::pe64(), 4);
+        assert!((r.area_mm2 - 0.43).abs() / 0.43 < 0.25, "area {}", r.area_mm2);
+        assert!((r.freq_ghz - 1.24).abs() / 1.24 < 0.05, "freq {}", r.freq_ghz);
+        assert!((r.power_mw - 329.0).abs() / 329.0 < 0.35, "power {}", r.power_mw);
+    }
+
+    #[test]
+    fn asic_256pe_frequency_drops_as_paper() {
+        // Paper: 0.96 GHz at 256 PEs (longer broadcast wires)
+        let r = engine_asic(&EngineConfig::pe256(), 4);
+        assert!((r.freq_ghz - 0.96).abs() / 0.96 < 0.05, "freq {}", r.freq_ghz);
+    }
+
+    #[test]
+    fn scaling_improves_efficiency_and_density() {
+        // Table V's headline: the 256-PE configuration beats the 64-PE one
+        // on both TOPS/W and TOPS/mm² (fixed overheads amortised).
+        let r64 = engine_asic(&EngineConfig::pe64(), 4);
+        let r256 = engine_asic(&EngineConfig::pe256(), 4);
+        assert!(
+            r256.tops_per_w() > r64.tops_per_w(),
+            "{} vs {}",
+            r256.tops_per_w(),
+            r64.tops_per_w()
+        );
+        assert!(
+            r256.tops_per_mm2() > r64.tops_per_mm2(),
+            "{} vs {}",
+            r256.tops_per_mm2(),
+            r64.tops_per_mm2()
+        );
+    }
+
+    #[test]
+    fn fpga_near_table4_row() {
+        // Paper Table IV: 26.7 kLUTs, 15.9 kFF/Regs, 85.4 MHz, 0.53 W, 0 DSP
+        let r = engine_fpga(&EngineConfig::pe256());
+        assert!((r.kluts - 26.7).abs() / 26.7 < 0.2, "kLUTs {}", r.kluts);
+        assert!((r.kffs - 15.9).abs() / 15.9 < 0.2, "kFFs {}", r.kffs);
+        assert!((r.freq_mhz - 85.4).abs() / 85.4 < 0.1, "freq {}", r.freq_mhz);
+        assert!((r.power_w - 0.53).abs() / 0.53 < 0.25, "power {}", r.power_w);
+        assert_eq!(r.dsps, 0);
+    }
+
+    #[test]
+    fn approximate_mode_raises_peak_throughput() {
+        let fast = engine_asic(&EngineConfig::pe64(), 4); // approx: 4 cyc
+        let slow = engine_asic(&EngineConfig::pe64(), 5); // accurate: 5 cyc
+        assert!(fast.peak_gops > slow.peak_gops);
+        let ratio = fast.peak_gops / slow.peak_gops;
+        assert!((ratio - 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn area_grows_sublinearly_with_pes() {
+        let r64 = engine_asic(&EngineConfig::pe64(), 4);
+        let r256 = engine_asic(&EngineConfig::pe256(), 4);
+        let growth = r256.area_mm2 / r64.area_mm2;
+        assert!(growth > 1.0 && growth < 4.0, "area growth {growth} for 4x PEs");
+    }
+}

@@ -1,0 +1,51 @@
+//! Cross-module consistency tests for the cost model.
+
+use super::*;
+use crate::engine::EngineConfig;
+use crate::quant::Precision;
+
+#[test]
+fn reports_have_positive_fields() {
+    let f = iterative_mac_fpga(Precision::Fxp8);
+    assert!(f.luts > 0.0 && f.ffs > 0.0 && f.delay_ns > 0.0 && f.power_mw > 0.0);
+    let a = iterative_mac_asic(Precision::Fxp8);
+    assert!(a.area_um2 > 0.0 && a.delay_ns > 0.0 && a.power_mw > 0.0);
+    assert!(a.fmax_ghz() > 0.0);
+}
+
+#[test]
+fn engine_dominated_by_memory_and_array_not_af() {
+    // the dark-silicon argument: the shared AF block must be a small
+    // fraction of the engine
+    let af = multi_af_asic().area_um2;
+    let engine = engine_asic(&EngineConfig::pe64(), 4).area_mm2 * 1e6;
+    assert!(af / engine < 0.02, "AF is {} of engine", af / engine);
+}
+
+#[test]
+fn pdp_ordering_iterative_vs_pipelined_total() {
+    // the iterative MAC trades delay for area/power: its per-op PDP should
+    // remain within a small factor of the pipelined one while being much
+    // smaller in area
+    let it = iterative_mac_asic(Precision::Fxp8);
+    let pipe = pipelined_mac_asic(Precision::Fxp8, 8);
+    assert!(it.pdp_pj() < pipe.pdp_pj() * 4.0);
+    assert!(it.area_um2 < pipe.area_um2 / 2.0);
+}
+
+#[test]
+fn fpga_engine_uses_no_dsps_any_config() {
+    for cfg in [EngineConfig::pe64(), EngineConfig::pe256()] {
+        assert_eq!(engine_fpga(&cfg).dsps, 0);
+    }
+}
+
+#[test]
+fn asic_peak_gops_scale_linearly_with_pes_at_fixed_clock() {
+    let r64 = engine_asic(&EngineConfig::pe64(), 4);
+    let r256 = engine_asic(&EngineConfig::pe256(), 4);
+    // normalise out the frequency drop
+    let per_pe64 = r64.peak_gops / r64.freq_ghz / 64.0;
+    let per_pe256 = r256.peak_gops / r256.freq_ghz / 256.0;
+    assert!((per_pe64 - per_pe256).abs() < 1e-9);
+}

@@ -1,0 +1,60 @@
+//! # CORVET — a CORDIC-powered, resource-frugal mixed-precision vector engine
+//!
+//! Reproduction of *CORVET: A CORDIC-Powered, Resource-Frugal Mixed-Precision
+//! Vector Processing Engine for High-Throughput AIoT Applications* (CS.AR
+//! 2026) as a three-layer Rust + JAX + Pallas system:
+//!
+//! * **Layer 1** (build time, Python): iterative CORDIC MAC and activation
+//!   kernels written in Pallas (`python/compile/kernels/`), checked against a
+//!   pure-jnp oracle.
+//! * **Layer 2** (build time, Python): a quantised JAX model
+//!   (`python/compile/model.py`) that calls the L1 kernels, AOT-lowered to
+//!   HLO text artifacts under `artifacts/`.
+//! * **Layer 3** (this crate): the deployable coordinator — PJRT runtime
+//!   ([`runtime`]), request router / dynamic batcher ([`coordinator`]) — plus
+//!   every hardware substrate the paper depends on, as bit-accurate,
+//!   cycle-accountable Rust models: fixed point ([`fxp`]), the iterative
+//!   CORDIC engine ([`cordic`]), the time-multiplexed multi-activation block
+//!   ([`activation`]), AAD pooling ([`pooling`]), normalisation ([`norm`]),
+//!   the eq.(1)–(5) memory-mapping scheme ([`memory`]), the layer-multiplexed
+//!   control engine ([`control`]), the vector-engine simulator ([`engine`]),
+//!   and the calibrated FPGA/ASIC cost model ([`hwcost`]).
+//!
+//! See `DESIGN.md` for the paper→module inventory and `EXPERIMENTS.md` for
+//! paper-vs-measured results for every table and figure.
+
+pub mod activation;
+pub mod baselines;
+pub mod bench_harness;
+pub mod cli;
+pub mod control;
+pub mod coordinator;
+pub mod cordic;
+pub mod engine;
+pub mod fxp;
+pub mod hwcost;
+pub mod memory;
+pub mod model;
+pub mod norm;
+pub mod pooling;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod tables;
+pub mod testutil;
+pub mod train;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Commonly used items, re-exported for examples and benches.
+pub mod prelude {
+    pub use crate::activation::{ActFn, MultiAfBlock};
+    pub use crate::cordic::mac::{CordicMac, ExecMode, MacConfig};
+    pub use crate::cordic::CordicEngine;
+    pub use crate::engine::{EngineConfig, VectorEngine};
+    pub use crate::fxp::{Format, Fxp};
+    pub use crate::hwcost::{AsicReport, FpgaReport};
+    pub use crate::model::{Network, Tensor};
+    pub use crate::quant::Precision;
+}

@@ -1,0 +1,283 @@
+//! `corvet` — the leader binary: table/figure regeneration, simulator,
+//! trainer, sensitivity analysis, and the PJRT serving demo.
+
+use anyhow::{bail, Context, Result};
+use corvet::cli::{Args, USAGE};
+use corvet::coordinator::{Server, ServerConfig};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::model::workloads::{paper_mlp, tinyyolo_trace, vgg16_trace, vit_tiny_mlp_trace};
+use corvet::quant::{assign_modes, describe, PolicyTable, Precision};
+use corvet::report::fnum;
+use corvet::runtime::{quantize_network, ArtifactRegistry, ModelWeights};
+use corvet::tables;
+use corvet::testutil::Xoshiro256;
+use corvet::train::{train, Dataset, DatasetConfig, SgdConfig};
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(raw) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(raw: Vec<String>) -> Result<()> {
+    let args = Args::parse(raw)?;
+    let Some(cmd) = args.positional.first() else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "table" => cmd_table(&args),
+        "fig" => cmd_fig(&args),
+        "simulate" => cmd_simulate(&args),
+        "train" => cmd_train(&args),
+        "sensitivity" => cmd_sensitivity(&args),
+        "serve" => cmd_serve(&args),
+        "utilization" => cmd_utilization(),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command {other:?}\n{USAGE}"),
+    }
+}
+
+fn emit(table: corvet::report::Table, csv: bool) {
+    if csv {
+        print!("{}", table.to_csv());
+    } else {
+        print!("{}", table.render());
+    }
+}
+
+fn cmd_table(args: &Args) -> Result<()> {
+    let n: u32 = args.pos(1, "table number")?.parse().context("table number")?;
+    let t = match n {
+        1 => tables::table1(),
+        2 => tables::table2(),
+        3 => tables::table3(),
+        4 => tables::table4(),
+        5 => tables::table5(),
+        _ => bail!("tables 1-5 exist"),
+    };
+    emit(t, args.has_flag("csv"));
+    Ok(())
+}
+
+fn cmd_fig(args: &Args) -> Result<()> {
+    let n: u32 = args.pos(1, "figure number")?.parse().context("figure number")?;
+    let quick = args.has_flag("quick");
+    let t = match n {
+        11 => tables::fig11(quick).1,
+        13 => tables::fig13(),
+        _ => bail!("figures 11 and 13 are reproducible (12 is a board photo; see `serve`)"),
+    };
+    emit(t, args.has_flag("csv"));
+    Ok(())
+}
+
+fn parse_mode(s: &str) -> Result<ExecMode> {
+    match s {
+        "approx" | "approximate" => Ok(ExecMode::Approximate),
+        "accurate" => Ok(ExecMode::Accurate),
+        other => match other.parse::<u32>() {
+            Ok(n) => Ok(ExecMode::Custom(n)),
+            Err(_) => bail!("mode must be approx|accurate|<iterations>"),
+        },
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let workload = args.opt_or("workload", "tinyyolo");
+    let trace = match workload.as_str() {
+        "tinyyolo" => tinyyolo_trace(),
+        "vgg16" => vgg16_trace(),
+        "vit-mlp" | "transformer" => vit_tiny_mlp_trace(),
+        other => bail!("unknown workload {other:?} (tinyyolo|vgg16|vit-mlp)"),
+    };
+    let pes: usize = args.num_or("pes", 256usize)?;
+    let precision = Precision::parse(&args.opt_or("precision", "fxp8"))
+        .context("bad --precision")?;
+    let mode = parse_mode(&args.opt_or("mode", "approx"))?;
+    let mut cfg = EngineConfig { pes, ..EngineConfig::pe256() };
+    cfg.af_blocks = (pes / 64).max(1);
+    cfg.pool_units = (pes / 8).max(1);
+    let policy = PolicyTable::uniform(trace.compute_layers(), precision, mode);
+    let report = VectorEngine::new(cfg).run_trace(&trace, &policy);
+    let asic = corvet::hwcost::engine_asic(&cfg, policy.layer(0).cycles_per_mac());
+    let clock = asic.freq_ghz * 1e9;
+
+    println!("workload       : {} ({} layers, {:.2} GMACs)", trace.name, trace.layers.len(), trace.total_macs() as f64 / 1e9);
+    println!("engine         : {pes} PEs @ {:.2} GHz, {} AF blocks", asic.freq_ghz, cfg.af_blocks);
+    println!("policy         : {precision} / {mode:?} ({} cyc/MAC)", policy.layer(0).cycles_per_mac());
+    println!("cycles         : {}", report.total_cycles);
+    println!("latency        : {} ms", fnum(report.time_ms(clock)));
+    println!("throughput     : {} GOPS", fnum(report.gops(clock)));
+    println!("PE utilisation : {}", fnum(report.mean_pe_utilization()));
+    println!("area/power     : {} mm² / {} mW", fnum(asic.area_mm2), fnum(asic.power_mw));
+    println!("efficiency     : {} TOPS/W, {} TOPS/mm² (peak)", fnum(asic.tops_per_w()), fnum(asic.tops_per_mm2()));
+    Ok(())
+}
+
+fn dataset(quick: bool) -> Dataset {
+    Dataset::generate(DatasetConfig {
+        train: if quick { 400 } else { 2000 },
+        test: if quick { 120 } else { 400 },
+        noise: 0.2,
+        ..Default::default()
+    })
+}
+
+fn trained_mlp(quick: bool) -> (Dataset, corvet::model::Network) {
+    let data = dataset(quick);
+    let mut net = paper_mlp(101);
+    let report = train(
+        &mut net,
+        &data.train_x,
+        &data.train_y,
+        SgdConfig { epochs: if quick { 6 } else { 14 }, lr: 0.08, ..Default::default() },
+    );
+    eprintln!(
+        "trained {}: loss {} -> {}, train acc {}",
+        net.name,
+        fnum(report.loss_curve[0]),
+        fnum(*report.loss_curve.last().unwrap()),
+        fnum(report.train_accuracy)
+    );
+    (data, net)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let quick = args.has_flag("quick");
+    let out = args.opt_or("out", "weights.txt");
+    let (data, net) = trained_mlp(quick);
+    let test_acc = net.accuracy_f64(&data.test_x, &data.test_y);
+    println!("fp32 test accuracy: {}", fnum(test_acc));
+    let (weights, clipped) = quantize_network(&net)?;
+    weights.save(&out)?;
+    println!("saved quantised weights to {out} ({clipped} clipped)");
+    Ok(())
+}
+
+fn cmd_sensitivity(args: &Args) -> Result<()> {
+    let quick = args.has_flag("quick");
+    let budget: f64 = args.num_or("budget", 0.02)?;
+    let (data, net) = trained_mlp(quick);
+    let eval_n = if quick { 60 } else { 200 };
+    let inputs = &data.test_x[..eval_n];
+    let labels = &data.test_y[..eval_n];
+    let report = assign_modes(net.compute_layers(), Precision::Fxp8, budget, |policy| {
+        net.accuracy_cordic(inputs, labels, policy)
+    });
+    println!("baseline (all accurate) accuracy : {}", fnum(report.baseline_accuracy));
+    for (i, d) in report.per_layer_drop.iter().enumerate() {
+        println!("layer {i} approx drop            : {}", fnum(*d));
+    }
+    println!("selected policy                  : {}", describe(&report.policy));
+    println!("projected accuracy               : {}", fnum(report.projected_accuracy));
+    let macs = net.macs_per_layer();
+    let all_acc = PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+    println!(
+        "MAC cycles: accurate {} -> policy {} ({}x)",
+        all_acc.total_mac_cycles(&macs),
+        report.policy.total_mac_cycles(&macs),
+        fnum(all_acc.total_mac_cycles(&macs) as f64 / report.policy.total_mac_cycles(&macs) as f64)
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let quick = args.has_flag("quick");
+    let artifacts = args.opt_or("artifacts", "artifacts");
+    let n_requests: usize = args.num_or("requests", if quick { 64 } else { 512 })?;
+    let precision = Precision::parse(&args.opt_or("precision", "fxp8"))
+        .context("bad --precision")?;
+    let max_batch: usize = args.num_or("batch", 8usize)?;
+
+    let (data, net) = trained_mlp(quick);
+    let fp32_acc = net.accuracy_f64(&data.test_x, &data.test_y);
+    let (weights, _) = quantize_network(&net)?;
+
+    let mut config = ServerConfig { precision, ..Default::default() };
+    config.batcher.max_batch = max_batch;
+    let mut server = Server::start(&artifacts, weights, config)?;
+
+    // replay the test set as a request stream and check served accuracy
+    let mut rng = Xoshiro256::new(77);
+    let mut pending = Vec::new();
+    let mut order: Vec<usize> = (0..data.test_x.len()).collect();
+    rng.shuffle(&mut order);
+    let t0 = std::time::Instant::now();
+    for i in 0..n_requests {
+        let idx = order[i % order.len()];
+        let rx = server.submit(data.test_x[idx].data().to_vec())?;
+        pending.push((idx, rx));
+    }
+    let mut correct = 0usize;
+    for (idx, rx) in pending {
+        let resp = rx.recv().context("response channel closed")?;
+        if resp.class == data.test_y[idx] {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = server.shutdown()?;
+
+    println!("requests            : {n_requests}");
+    println!("served accuracy     : {}", fnum(correct as f64 / n_requests as f64));
+    println!("fp32 accuracy       : {}", fnum(fp32_acc));
+    println!("wall time           : {} ms", fnum(wall.as_secs_f64() * 1e3));
+    println!("throughput          : {} req/s", fnum(n_requests as f64 / wall.as_secs_f64()));
+    println!("latency mean/p50/p99: {} / {} / {} ms", fnum(snap.latency.mean_ms), fnum(snap.latency.p50_ms), fnum(snap.latency.p99_ms));
+    println!("batches (mean size) : {} ({})", snap.batches, fnum(snap.mean_batch));
+    println!("approx-served       : {}/{}", snap.approx_served, snap.completed);
+
+    let (sim_ms, sim_w) = tables::e2e_simulated();
+    emit(tables::e2e_table(Some((sim_ms, sim_w))), args.has_flag("csv"));
+    Ok(())
+}
+
+fn cmd_utilization() -> Result<()> {
+    use corvet::activation::{ActFn, AfRequest, AfScheduler, MultiAfBlock};
+    let mut sched = AfScheduler::new();
+    let mut block = MultiAfBlock::new(20);
+    let mut rng = Xoshiro256::new(1);
+    let funcs = [ActFn::Sigmoid, ActFn::Tanh, ActFn::Gelu, ActFn::Swish, ActFn::Selu, ActFn::Relu];
+    for i in 0..600 {
+        let f = funcs[rng.index(funcs.len())];
+        sched.submit(AfRequest { pe: i % 64, func: f, issue_cycle: (i as u64) * 3, elements: 1 });
+        let (_, cost) = block.apply_f64(f, rng.uniform(-3.0, 3.0));
+        let now = sched.free_at();
+        sched.serve(now.max((i as u64) * 3), cost);
+    }
+    let r = sched.report();
+    println!("multi-AF block utilisation (paper §V-B claims 86% HR / 72% LV):");
+    println!("  HR-mode utilisation : {}", fnum(r.hr_utilization));
+    println!("  LV-mode utilisation : {}", fnum(r.lv_utilization));
+    println!("  busy fraction       : {}", fnum(r.busy_fraction()));
+    println!("  mean queue wait     : {} cycles", fnum(r.mean_wait));
+    println!("  aux overhead        : {} of 64-PE engine area (<4% claim)", fnum(corvet::hwcost::aux_overhead_fraction()));
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.opt_or("artifacts", "artifacts");
+    match ArtifactRegistry::load(&artifacts) {
+        Ok(reg) => {
+            println!("artifacts ({}):", artifacts);
+            for e in reg.entries() {
+                println!("  {} {:?} b{} <- {}", e.precision, e.mode, e.batch, e.path.display());
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    match corvet::runtime::PjrtRuntime::new() {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT: unavailable ({e})"),
+    }
+    let _ = ModelWeights::default();
+    Ok(())
+}

@@ -1,0 +1,176 @@
+//! Dual kernel memory banks (paper §II-A): one bank for input activations,
+//! one for weights, each organised as `(n-bit × 32)` entries, so compute
+//! can overlap with the memory interface refilling the other slots.
+//!
+//! The model tracks per-bank read/write ports (one each, like simple
+//! dual-port BRAM), counts access conflicts, and enforces the
+//! word width of the configured precision.
+
+use crate::quant::Precision;
+
+/// Bank geometry/config.
+#[derive(Debug, Clone, Copy)]
+pub struct BankConfig {
+    /// Entries per bank (the paper's organisation: 32).
+    pub entries: usize,
+    /// Word precision (n-bit).
+    pub precision: Precision,
+}
+
+impl Default for BankConfig {
+    fn default() -> Self {
+        BankConfig { entries: 32, precision: Precision::Fxp8 }
+    }
+}
+
+/// The two kernel banks plus access statistics.
+#[derive(Debug, Clone)]
+pub struct KernelBanks {
+    config: BankConfig,
+    activations: Vec<i64>,
+    weights: Vec<i64>,
+    reads: u64,
+    writes: u64,
+    conflicts: u64,
+    /// Port busy flags for the current cycle (cleared by [`Self::tick`]).
+    act_port_busy: bool,
+    wgt_port_busy: bool,
+}
+
+impl KernelBanks {
+    /// Zero-initialised banks.
+    pub fn new(config: BankConfig) -> Self {
+        KernelBanks {
+            config,
+            activations: vec![0; config.entries],
+            weights: vec![0; config.entries],
+            reads: 0,
+            writes: 0,
+            conflicts: 0,
+            act_port_busy: false,
+            wgt_port_busy: false,
+        }
+    }
+
+    /// Bank word range check (the word must fit the configured precision).
+    fn check_word(&self, w: i64) {
+        let f = self.config.precision.format();
+        assert!(
+            w >= f.raw_min() && w <= f.raw_max(),
+            "word {w} exceeds {} range",
+            self.config.precision
+        );
+    }
+
+    /// Write an activation word. Returns false (and counts a conflict) if
+    /// the port was already used this cycle.
+    pub fn write_activation(&mut self, idx: usize, word: i64) -> bool {
+        self.check_word(word);
+        if self.act_port_busy {
+            self.conflicts += 1;
+            return false;
+        }
+        self.act_port_busy = true;
+        self.activations[idx % self.config.entries] = word;
+        self.writes += 1;
+        true
+    }
+
+    /// Write a weight word.
+    pub fn write_weight(&mut self, idx: usize, word: i64) -> bool {
+        self.check_word(word);
+        if self.wgt_port_busy {
+            self.conflicts += 1;
+            return false;
+        }
+        self.wgt_port_busy = true;
+        self.weights[idx % self.config.entries] = word;
+        self.writes += 1;
+        true
+    }
+
+    /// Read an (activation, weight) pair — the dual-bank organisation's
+    /// whole point is that this is a single-cycle concurrent fetch.
+    pub fn read_pair(&mut self, act_idx: usize, wgt_idx: usize) -> (i64, i64) {
+        self.reads += 2;
+        (
+            self.activations[act_idx % self.config.entries],
+            self.weights[wgt_idx % self.config.entries],
+        )
+    }
+
+    /// Advance one cycle (release the write ports).
+    pub fn tick(&mut self) {
+        self.act_port_busy = false;
+        self.wgt_port_busy = false;
+    }
+
+    /// Total reads.
+    pub fn reads(&self) -> u64 {
+        self.reads
+    }
+
+    /// Total writes.
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Port conflicts observed.
+    pub fn conflicts(&self) -> u64 {
+        self.conflicts
+    }
+
+    /// Bank capacity in words.
+    pub fn entries(&self) -> usize {
+        self.config.entries
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concurrent_pair_read() {
+        let mut b = KernelBanks::new(BankConfig::default());
+        b.write_activation(3, 5);
+        b.tick();
+        b.write_weight(3, -7);
+        b.tick();
+        assert_eq!(b.read_pair(3, 3), (5, -7));
+        assert_eq!(b.reads(), 2);
+    }
+
+    #[test]
+    fn same_cycle_double_write_conflicts() {
+        let mut b = KernelBanks::new(BankConfig::default());
+        assert!(b.write_activation(0, 1));
+        assert!(!b.write_activation(1, 2), "second write same cycle must conflict");
+        assert_eq!(b.conflicts(), 1);
+        b.tick();
+        assert!(b.write_activation(1, 2), "port free after tick");
+    }
+
+    #[test]
+    fn separate_banks_do_not_conflict() {
+        let mut b = KernelBanks::new(BankConfig::default());
+        assert!(b.write_activation(0, 1));
+        assert!(b.write_weight(0, 2), "different banks have independent ports");
+        assert_eq!(b.conflicts(), 0);
+    }
+
+    #[test]
+    fn indices_wrap_modulo_entries() {
+        let mut b = KernelBanks::new(BankConfig { entries: 4, ..Default::default() });
+        b.write_activation(5, 3); // lands at index 1
+        b.tick();
+        assert_eq!(b.read_pair(1, 0).0, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds")]
+    fn oversized_word_panics() {
+        let mut b = KernelBanks::new(BankConfig { entries: 4, precision: Precision::Fxp8 });
+        b.write_activation(0, 1000); // FxP-8 raw range is [-128, 127]
+    }
+}

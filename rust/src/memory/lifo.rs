@@ -1,0 +1,173 @@
+//! LIFO parameter loader (paper §II-C, Fig. 3).
+//!
+//! "A key aspect of the parameter-loading mechanism is that the memory
+//! write sequence is the inverse of the read sequence … parameters must be
+//! loaded using a Last-In-First-Out (LIFO) ordering for both weights and
+//! biases, as well as for input data."
+//!
+//! The loader models the synchronous valid-signal interface: the host
+//! pushes `(address, word)` records with `load_param_weight` asserted; the
+//! accelerator later pops them in reverse, which must reconstruct the
+//! forward read order exactly.
+
+use super::mapping::{AddressMap, ParamAddress};
+
+/// One loaded parameter record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParamRecord {
+    /// Decoded address.
+    pub addr: ParamAddress,
+    /// Raw datapath word.
+    pub word: i64,
+}
+
+/// The LIFO load stack with valid-signal bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct LifoLoader {
+    stack: Vec<ParamRecord>,
+    writes: u64,
+    /// Cycles with the valid signal low (host stalls).
+    stall_cycles: u64,
+}
+
+impl LifoLoader {
+    /// Empty loader.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Host-side write with `load_param_weight` (valid) asserted.
+    pub fn push(&mut self, rec: ParamRecord) {
+        self.stack.push(rec);
+        self.writes += 1;
+    }
+
+    /// A cycle with valid deasserted (host not ready) — tracked for the
+    /// deployment-latency model.
+    pub fn stall(&mut self) {
+        self.stall_cycles += 1;
+    }
+
+    /// Accelerator-side pop (reverse of write order).
+    pub fn pop(&mut self) -> Option<ParamRecord> {
+        self.stack.pop()
+    }
+
+    /// Records currently resident.
+    pub fn len(&self) -> usize {
+        self.stack.len()
+    }
+
+    /// True when drained.
+    pub fn is_empty(&self) -> bool {
+        self.stack.is_empty()
+    }
+
+    /// Total write transactions.
+    pub fn writes(&self) -> u64 {
+        self.writes
+    }
+
+    /// Total stall cycles.
+    pub fn stalls(&self) -> u64 {
+        self.stall_cycles
+    }
+
+    /// Load an entire network's parameters in the *inverse* of the read
+    /// order, so that popping yields the forward read order of
+    /// [`AddressMap::enumerate`]. `words` must be parallel to the forward
+    /// enumeration.
+    pub fn load_network(&mut self, map: &AddressMap, words: &[i64]) {
+        let order = map.enumerate();
+        assert_eq!(order.len(), words.len(), "parameter count mismatch");
+        for (a, &w) in order.iter().zip(words).rev() {
+            self.push(ParamRecord { addr: *a, word: w });
+        }
+    }
+
+    /// Drain into forward read order (what the compute engine consumes).
+    pub fn drain_forward(&mut self) -> Vec<ParamRecord> {
+        let mut out = Vec::with_capacity(self.stack.len());
+        while let Some(r) = self.pop() {
+            out.push(r);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::memory::mapping::NetworkShape;
+    use crate::testutil::check_prop;
+
+    #[test]
+    fn pop_is_reverse_of_push() {
+        let mut l = LifoLoader::new();
+        let map = AddressMap::new(NetworkShape::new(2, vec![2]));
+        let order = map.enumerate();
+        for (i, a) in order.iter().enumerate() {
+            l.push(ParamRecord { addr: *a, word: i as i64 });
+        }
+        let mut popped = Vec::new();
+        while let Some(r) = l.pop() {
+            popped.push(r.word);
+        }
+        let expect: Vec<i64> = (0..order.len() as i64).rev().collect();
+        assert_eq!(popped, expect);
+    }
+
+    #[test]
+    fn load_network_then_drain_recovers_read_order() {
+        let map = AddressMap::new(NetworkShape::new(5, vec![3, 2]));
+        let n = map.shape().total_params();
+        let words: Vec<i64> = (0..n as i64).collect();
+        let mut l = LifoLoader::new();
+        l.load_network(&map, &words);
+        assert_eq!(l.len(), n);
+        let fwd = l.drain_forward();
+        let got: Vec<i64> = fwd.iter().map(|r| r.word).collect();
+        assert_eq!(got, words, "drain must reproduce forward read order");
+        // and addresses must match the forward enumeration
+        let order = map.enumerate();
+        for (r, a) in fwd.iter().zip(order) {
+            assert_eq!(r.addr, a);
+        }
+    }
+
+    #[test]
+    fn stall_accounting() {
+        let mut l = LifoLoader::new();
+        l.stall();
+        l.stall();
+        assert_eq!(l.stalls(), 2);
+        assert_eq!(l.writes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "parameter count mismatch")]
+    fn wrong_word_count_panics() {
+        let map = AddressMap::new(NetworkShape::new(2, vec![2]));
+        LifoLoader::new().load_network(&map, &[0i64; 3]);
+    }
+
+    #[test]
+    fn prop_lifo_roundtrip_any_shape() {
+        check_prop("LIFO load/drain is order-inverting", |rng| {
+            let layers = rng.int_in(1, 4) as usize;
+            let input = rng.int_in(1, 16) as usize;
+            let neurons: Vec<usize> = (0..layers).map(|_| rng.int_in(1, 16) as usize).collect();
+            let map = AddressMap::new(NetworkShape::new(input, neurons));
+            let n = map.shape().total_params();
+            let words: Vec<i64> = (0..n).map(|_| rng.int_in(-128, 127)).collect();
+            let mut l = LifoLoader::new();
+            l.load_network(&map, &words);
+            let got: Vec<i64> = l.drain_forward().iter().map(|r| r.word).collect();
+            if got == words {
+                Ok(())
+            } else {
+                Err("drain did not recover forward order".to_string())
+            }
+        });
+    }
+}

@@ -1,0 +1,275 @@
+//! The paper's memory-mapping scheme for weights and biases (§II-D,
+//! eqs. (1)–(5), Fig. 4).
+//!
+//! Each parameter address is `[layer | select | field]` where `select`
+//! distinguishes weight (with field = neuron‖input index) from bias (field
+//! = neuron index). The address width is fixed network-wide at the maximum
+//! any layer needs:
+//!
+//! ```text
+//! R_addr(l) = ceil(log2 N(l)) + ceil(log2 J(l))          (2)
+//! Addr(l)   = ceil(log2 L) + 1 + R_addr(l)               (3)
+//! R_addr    = max_l R_addr(l)                            (4)
+//! Addr      = ceil(log2 L) + 1 + R_addr                  (5)
+//! ```
+//!
+//! with `J(l+1) = N(l)` (1). The mapping is checked to be conflict-free by
+//! construction (see the property test).
+
+/// Weight or bias select bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ParamKind {
+    /// Weight: field = neuron index ‖ input index.
+    Weight,
+    /// Bias: field = neuron index.
+    Bias,
+}
+
+/// A decoded parameter address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ParamAddress {
+    /// Layer index (0-based).
+    pub layer: usize,
+    /// Weight vs bias.
+    pub kind: ParamKind,
+    /// Neuron index within the layer.
+    pub neuron: usize,
+    /// Input index (weights only; 0 for biases).
+    pub input: usize,
+}
+
+/// The shape of a fully connected network: neurons per layer `N(l)` and the
+/// primary input width.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NetworkShape {
+    /// Network input width J(1).
+    pub input_width: usize,
+    /// Neurons per layer, N(1..=L).
+    pub neurons: Vec<usize>,
+}
+
+impl NetworkShape {
+    /// Construct; validates non-degenerate dimensions.
+    pub fn new(input_width: usize, neurons: Vec<usize>) -> Self {
+        assert!(input_width > 0 && !neurons.is_empty(), "degenerate network shape");
+        assert!(neurons.iter().all(|&n| n > 0), "zero-width layer");
+        NetworkShape { input_width, neurons }
+    }
+
+    /// Number of layers L.
+    pub fn layers(&self) -> usize {
+        self.neurons.len()
+    }
+
+    /// Inputs to layer `l` (0-based): `J(l+1) = N(l)`, eq. (1).
+    pub fn inputs_of(&self, l: usize) -> usize {
+        if l == 0 {
+            self.input_width
+        } else {
+            self.neurons[l - 1]
+        }
+    }
+
+    /// Total parameter count (weights + biases).
+    pub fn total_params(&self) -> usize {
+        (0..self.layers()).map(|l| self.neurons[l] * (self.inputs_of(l) + 1)).sum()
+    }
+}
+
+/// The uniform address map of eqs. (2)–(5).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct AddressMap {
+    shape: NetworkShape,
+    layer_bits: u32,
+    neuron_bits: Vec<u32>,
+    input_bits: Vec<u32>,
+    field_bits: u32, // R_addr, eq. (4)
+}
+
+/// `ceil(log2(n))`, with `log2(1) = 0` needing at least... the paper's
+/// formulas use ceil(log2 N); a single-element space still needs a 0-bit
+/// field. We follow the formula exactly.
+fn clog2(n: usize) -> u32 {
+    assert!(n > 0);
+    (usize::BITS - (n - 1).leading_zeros()).min(usize::BITS)
+}
+
+impl AddressMap {
+    /// Build the map for a network shape.
+    pub fn new(shape: NetworkShape) -> Self {
+        let l = shape.layers();
+        let layer_bits = clog2(l.max(2)); // ceil(log2 L), at least 1 bit
+        let neuron_bits: Vec<u32> = (0..l).map(|i| clog2(shape.neurons[i])).collect();
+        let input_bits: Vec<u32> = (0..l).map(|i| clog2(shape.inputs_of(i))).collect();
+        // eq. (4): R_addr = max_l (ceil(log2 N) + ceil(log2 J))
+        let field_bits = (0..l).map(|i| neuron_bits[i] + input_bits[i]).max().unwrap();
+        AddressMap { shape, layer_bits, neuron_bits, input_bits, field_bits }
+    }
+
+    /// The network shape.
+    pub fn shape(&self) -> &NetworkShape {
+        &self.shape
+    }
+
+    /// Per-layer field width, eq. (2).
+    pub fn r_addr(&self, l: usize) -> u32 {
+        self.neuron_bits[l] + self.input_bits[l]
+    }
+
+    /// Uniform field width, eq. (4).
+    pub fn r_addr_max(&self) -> u32 {
+        self.field_bits
+    }
+
+    /// Total uniform address width, eq. (5).
+    pub fn addr_bits(&self) -> u32 {
+        self.layer_bits + 1 + self.field_bits
+    }
+
+    /// Encode a parameter address into its bit pattern.
+    pub fn encode(&self, a: ParamAddress) -> u64 {
+        let l = a.layer;
+        assert!(l < self.shape.layers(), "layer out of range");
+        assert!(a.neuron < self.shape.neurons[l], "neuron out of range");
+        let field = match a.kind {
+            ParamKind::Bias => {
+                assert_eq!(a.input, 0, "bias has no input index");
+                a.neuron as u64
+            }
+            ParamKind::Weight => {
+                assert!(a.input < self.shape.inputs_of(l), "input out of range");
+                ((a.neuron as u64) << self.input_bits[l]) | a.input as u64
+            }
+        };
+        let select = match a.kind {
+            ParamKind::Weight => 0u64,
+            ParamKind::Bias => 1u64,
+        };
+        ((l as u64) << (1 + self.field_bits)) | (select << self.field_bits) | field
+    }
+
+    /// Decode a bit pattern back into a parameter address.
+    pub fn decode(&self, bits: u64) -> ParamAddress {
+        let field_mask = (1u64 << self.field_bits) - 1;
+        let field = bits & field_mask;
+        let select = (bits >> self.field_bits) & 1;
+        let layer = (bits >> (1 + self.field_bits)) as usize;
+        assert!(layer < self.shape.layers(), "decoded layer out of range");
+        if select == 1 {
+            ParamAddress { layer, kind: ParamKind::Bias, neuron: field as usize, input: 0 }
+        } else {
+            let ib = self.input_bits[layer];
+            ParamAddress {
+                layer,
+                kind: ParamKind::Weight,
+                neuron: (field >> ib) as usize,
+                input: (field & ((1u64 << ib) - 1)) as usize,
+            }
+        }
+    }
+
+    /// Enumerate every parameter address of the network (weights then bias,
+    /// per layer, in neuron-major order — the read order of Fig. 3).
+    pub fn enumerate(&self) -> Vec<ParamAddress> {
+        let mut out = Vec::with_capacity(self.shape.total_params());
+        for l in 0..self.shape.layers() {
+            for n in 0..self.shape.neurons[l] {
+                for i in 0..self.shape.inputs_of(l) {
+                    out.push(ParamAddress { layer: l, kind: ParamKind::Weight, neuron: n, input: i });
+                }
+                out.push(ParamAddress { layer: l, kind: ParamKind::Bias, neuron: n, input: 0 });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::check_prop;
+    use std::collections::HashSet;
+
+    /// The paper's running example: 196-64-32-32-10.
+    fn paper_shape() -> NetworkShape {
+        NetworkShape::new(196, vec![64, 32, 32, 10])
+    }
+
+    #[test]
+    fn eq1_inputs_chain() {
+        let s = paper_shape();
+        assert_eq!(s.inputs_of(0), 196);
+        assert_eq!(s.inputs_of(1), 64);
+        assert_eq!(s.inputs_of(2), 32);
+        assert_eq!(s.inputs_of(3), 32);
+    }
+
+    #[test]
+    fn eq2_to_eq5_widths() {
+        let m = AddressMap::new(paper_shape());
+        // layer 0: ceil(log2 64) + ceil(log2 196) = 6 + 8 = 14
+        assert_eq!(m.r_addr(0), 14);
+        // layer 1: 5 + 6 = 11; layer 2: 5 + 5 = 10; layer 3: 4 + 5 = 9
+        assert_eq!(m.r_addr(1), 11);
+        assert_eq!(m.r_addr(2), 10);
+        assert_eq!(m.r_addr(3), 9);
+        // eq.(4): max = 14; eq.(5): ceil(log2 4) + 1 + 14 = 2 + 1 + 14 = 17
+        assert_eq!(m.r_addr_max(), 14);
+        assert_eq!(m.addr_bits(), 17);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_all_params() {
+        let m = AddressMap::new(NetworkShape::new(7, vec![5, 3]));
+        for a in m.enumerate() {
+            let bits = m.encode(a);
+            assert!(bits < (1u64 << m.addr_bits()), "address overflows width");
+            assert_eq!(m.decode(bits), a, "roundtrip of {a:?}");
+        }
+    }
+
+    #[test]
+    fn addresses_are_conflict_free() {
+        let m = AddressMap::new(paper_shape());
+        let mut seen = HashSet::new();
+        for a in m.enumerate() {
+            assert!(seen.insert(m.encode(a)), "address collision at {a:?}");
+        }
+        assert_eq!(seen.len(), m.shape().total_params());
+    }
+
+    #[test]
+    fn total_params_matches_dense_count() {
+        let s = paper_shape();
+        // 64*(196+1) + 32*(64+1) + 32*(32+1) + 10*(32+1) = 12608+2080+1056+330
+        assert_eq!(s.total_params(), 16074);
+    }
+
+    #[test]
+    #[should_panic(expected = "neuron out of range")]
+    fn encode_rejects_bad_neuron() {
+        let m = AddressMap::new(NetworkShape::new(4, vec![2]));
+        m.encode(ParamAddress { layer: 0, kind: ParamKind::Bias, neuron: 5, input: 0 });
+    }
+
+    #[test]
+    fn prop_random_shapes_conflict_free() {
+        check_prop("address map is injective for random shapes", |rng| {
+            let layers = rng.int_in(1, 5) as usize;
+            let input = rng.int_in(1, 64) as usize;
+            let neurons: Vec<usize> = (0..layers).map(|_| rng.int_in(1, 64) as usize).collect();
+            let m = AddressMap::new(NetworkShape::new(input, neurons));
+            let mut seen = HashSet::new();
+            for a in m.enumerate() {
+                let bits = m.encode(a);
+                if !seen.insert(bits) {
+                    return Err(format!("collision at {a:?}"));
+                }
+                if m.decode(bits) != a {
+                    return Err(format!("roundtrip failed at {a:?}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

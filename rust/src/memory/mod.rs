@@ -1,0 +1,13 @@
+//! On-chip memory subsystem: the eq.(1)–(5) parameter address mapping,
+//! partitioned kernel memory banks, the LIFO parameter loader and the data
+//! prefetcher (paper §II-C/§II-D, Figs. 3–4).
+
+mod banks;
+mod lifo;
+mod mapping;
+mod prefetch;
+
+pub use banks::{BankConfig, KernelBanks};
+pub use lifo::{LifoLoader, ParamRecord};
+pub use mapping::{AddressMap, NetworkShape, ParamAddress, ParamKind};
+pub use prefetch::{Prefetcher, PrefetchStats};

@@ -1,0 +1,186 @@
+//! Layer definitions: dense (FC/MLP), conv2d, pooling, flatten.
+//!
+//! Weight layouts follow the paper's memory-mapping discussion (§II-D):
+//! dense weights are stored neuron-major (`w[out][in]`), which is what the
+//! per-neuron weight-memory segmentation in Fig. 3(a) implies.
+
+use crate::activation::ActFn;
+use crate::pooling::sliding::{Pool2dConfig, PoolKind};
+
+/// Dense (fully connected) layer parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseParams {
+    /// Input width J(l).
+    pub inputs: usize,
+    /// Neuron count N(l).
+    pub outputs: usize,
+    /// Weights, neuron-major: `w[out * inputs + in]`.
+    pub weights: Vec<f64>,
+    /// Per-neuron biases.
+    pub biases: Vec<f64>,
+    /// Activation applied to the pre-activations.
+    pub act: ActFn,
+}
+
+impl DenseParams {
+    /// Zero-initialised layer.
+    pub fn zeros(inputs: usize, outputs: usize, act: ActFn) -> Self {
+        DenseParams {
+            inputs,
+            outputs,
+            weights: vec![0.0; inputs * outputs],
+            biases: vec![0.0; outputs],
+            act,
+        }
+    }
+
+    /// Weight row (all input weights) of one neuron.
+    pub fn neuron_weights(&self, out: usize) -> &[f64] {
+        &self.weights[out * self.inputs..(out + 1) * self.inputs]
+    }
+
+    /// MAC operations for one forward pass.
+    pub fn macs(&self) -> u64 {
+        (self.inputs * self.outputs) as u64
+    }
+}
+
+/// 2-D convolution parameters (NCHW, stride 1 by default, optional same
+/// padding disabled — the evaluation nets use valid convolutions).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Conv2dParams {
+    /// Input channels.
+    pub in_ch: usize,
+    /// Output channels.
+    pub out_ch: usize,
+    /// Square kernel size.
+    pub kernel: usize,
+    /// Stride (both dims).
+    pub stride: usize,
+    /// Kernels: `w[out][in][ky][kx]` flattened.
+    pub weights: Vec<f64>,
+    /// Per-output-channel biases.
+    pub biases: Vec<f64>,
+    /// Activation.
+    pub act: ActFn,
+}
+
+impl Conv2dParams {
+    /// Zero-initialised convolution.
+    pub fn zeros(in_ch: usize, out_ch: usize, kernel: usize, stride: usize, act: ActFn) -> Self {
+        Conv2dParams {
+            in_ch,
+            out_ch,
+            kernel,
+            stride,
+            weights: vec![0.0; in_ch * out_ch * kernel * kernel],
+            biases: vec![0.0; out_ch],
+            act,
+        }
+    }
+
+    /// Flat index into `weights`.
+    #[inline]
+    pub fn widx(&self, o: usize, i: usize, ky: usize, kx: usize) -> usize {
+        ((o * self.in_ch + i) * self.kernel + ky) * self.kernel + kx
+    }
+
+    /// Output spatial dim for an input dim (valid padding).
+    pub fn out_dim(&self, in_dim: usize) -> usize {
+        (in_dim - self.kernel) / self.stride + 1
+    }
+
+    /// MACs for one forward pass over an `in_ch × h × w` input.
+    pub fn macs(&self, h: usize, w: usize) -> u64 {
+        let oh = self.out_dim(h) as u64;
+        let ow = self.out_dim(w) as u64;
+        oh * ow * (self.out_ch as u64) * (self.in_ch * self.kernel * self.kernel) as u64
+    }
+}
+
+/// Pooling layer parameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool2dParams {
+    /// Window/stride config.
+    pub config: Pool2dConfig,
+    /// AAD / max / avg.
+    pub kind: PoolKind,
+}
+
+/// A network layer.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Layer {
+    /// Fully connected layer.
+    Dense(DenseParams),
+    /// 2-D convolution.
+    Conv2d(Conv2dParams),
+    /// 2-D pooling over each channel.
+    Pool2d(Pool2dParams),
+    /// CHW → flat vector.
+    Flatten,
+    /// Softmax over the (flat) input (output layers).
+    Softmax,
+}
+
+impl Layer {
+    /// Short kind name for reports.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            Layer::Dense(_) => "dense",
+            Layer::Conv2d(_) => "conv2d",
+            Layer::Pool2d(_) => "pool2d",
+            Layer::Flatten => "flatten",
+            Layer::Softmax => "softmax",
+        }
+    }
+
+    /// Whether this layer holds trainable parameters (and hence consumes a
+    /// per-layer precision policy slot for MAC configuration).
+    pub fn is_compute(&self) -> bool {
+        matches!(self, Layer::Dense(_) | Layer::Conv2d(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_macs_and_rows() {
+        let mut d = DenseParams::zeros(4, 3, ActFn::Relu);
+        d.weights[1 * 4 + 2] = 7.0; // neuron 1, input 2
+        assert_eq!(d.macs(), 12);
+        assert_eq!(d.neuron_weights(1)[2], 7.0);
+    }
+
+    #[test]
+    fn conv_dims_and_macs() {
+        let c = Conv2dParams::zeros(1, 8, 3, 1, ActFn::Relu);
+        assert_eq!(c.out_dim(14), 12);
+        // 12*12 positions * 8 out * (1*3*3) = 10368
+        assert_eq!(c.macs(14, 14), 10368);
+    }
+
+    #[test]
+    fn conv_weight_indexing_is_dense() {
+        let c = Conv2dParams::zeros(2, 3, 3, 1, ActFn::Relu);
+        let mut seen = std::collections::HashSet::new();
+        for o in 0..3 {
+            for i in 0..2 {
+                for ky in 0..3 {
+                    for kx in 0..3 {
+                        assert!(seen.insert(c.widx(o, i, ky, kx)), "collision");
+                    }
+                }
+            }
+        }
+        assert_eq!(seen.len(), c.weights.len());
+    }
+
+    #[test]
+    fn layer_kinds() {
+        assert_eq!(Layer::Flatten.kind_name(), "flatten");
+        assert!(!Layer::Flatten.is_compute());
+        assert!(Layer::Dense(DenseParams::zeros(1, 1, ActFn::Identity)).is_compute());
+    }
+}

@@ -1,0 +1,24 @@
+//! DNN model substrate: tensors, layers, networks, and the paper's
+//! evaluation workloads.
+//!
+//! Two execution paths exist for every network:
+//!
+//! * **FP32 reference** ([`Network::forward_f64`]) — the baseline the paper
+//!   compares against ("all deep learning evaluations are performed against
+//!   an FP32 reference baseline under identical network topology").
+//! * **CORDIC fixed-point** ([`Network::forward_cordic`]) — bit-accurate
+//!   execution through [`crate::cordic::mac`], [`crate::activation`] and
+//!   [`crate::pooling`], under a per-layer [`crate::quant::PolicyTable`].
+//!
+//! Large evaluation networks (TinyYOLO-v3, VGG-16) are represented as
+//! [`workloads::Trace`]s — exact layer shapes and op counts — because the
+//! paper uses them for timing/energy, not for retraining.
+
+mod layer;
+pub mod network;
+mod tensor;
+pub mod workloads;
+
+pub use layer::{Conv2dParams, DenseParams, Layer, Pool2dParams};
+pub use network::{CordicRunStats, Network};
+pub use tensor::Tensor;

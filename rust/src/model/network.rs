@@ -1,0 +1,393 @@
+//! Network container with the FP32 reference path and the bit-accurate
+//! CORDIC fixed-point path.
+
+use super::layer::{Conv2dParams, DenseParams, Layer};
+use super::tensor::Tensor;
+use crate::activation::{funcs::AfCost, MultiAfBlock};
+use crate::cordic::mac::{CordicMac, ExecMode, MacConfig};
+use crate::cordic::{from_guard, to_guard};
+use crate::fxp::Fxp;
+use crate::pooling::sliding::AadSlidingWindow;
+use crate::pooling::PoolCost;
+use crate::quant::{LayerPolicy, PolicyTable, Precision};
+
+/// Micro-rotation budget for the multi-AF block under a given execution
+/// mode (the activation block shares the layer's accuracy knob; hyperbolic
+/// phases need a somewhat deeper budget than the linear MAC).
+pub fn af_iters(mode: ExecMode) -> u32 {
+    match mode {
+        ExecMode::Approximate => 12,
+        ExecMode::Accurate => 20,
+        // custom budgets drive the AF block with the same count, floored at
+        // the minimum the hyperbolic schedule needs to converge usefully
+        ExecMode::Custom(n) => n.max(4),
+    }
+}
+
+/// Per-layer statistics from a CORDIC forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct LayerStats {
+    /// Layer kind.
+    pub kind: &'static str,
+    /// MAC operations.
+    pub macs: u64,
+    /// Serial MAC cycles (one PE; the engine divides by lane count).
+    pub mac_cycles: u64,
+    /// Activation datapath cost.
+    pub af_cost: AfCost,
+    /// Pooling datapath cost.
+    pub pool_cost: PoolCost,
+    /// Output element count.
+    pub outputs: usize,
+}
+
+/// Aggregate statistics from a CORDIC forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct CordicRunStats {
+    /// Per-layer breakdown (compute + pooling layers).
+    pub per_layer: Vec<LayerStats>,
+}
+
+impl CordicRunStats {
+    /// Total MAC operations.
+    pub fn total_macs(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.macs).sum()
+    }
+
+    /// Total serial MAC cycles.
+    pub fn total_mac_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.mac_cycles).sum()
+    }
+
+    /// Total activation cycles.
+    pub fn total_af_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.af_cost.total() as u64).sum()
+    }
+
+    /// Total pooling cycles.
+    pub fn total_pool_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.pool_cost.total() as u64).sum()
+    }
+}
+
+/// A feed-forward network (sequential layers).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Network {
+    /// Layers in execution order.
+    pub layers: Vec<Layer>,
+    /// Expected input shape (e.g. `[196]` or `[1, 14, 14]`).
+    pub input_shape: Vec<usize>,
+    /// Human-readable name for reports.
+    pub name: String,
+}
+
+impl Network {
+    /// New network.
+    pub fn new(name: &str, input_shape: &[usize], layers: Vec<Layer>) -> Self {
+        Network { layers, input_shape: input_shape.to_vec(), name: name.to_string() }
+    }
+
+    /// Number of compute layers (dense + conv) — the policy table length.
+    pub fn compute_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_compute()).count()
+    }
+
+    /// MACs per compute layer for an input of the declared shape.
+    pub fn macs_per_layer(&self) -> Vec<u64> {
+        let mut shape = self.input_shape.clone();
+        let mut out = Vec::new();
+        for layer in &self.layers {
+            match layer {
+                Layer::Dense(d) => {
+                    out.push(d.macs());
+                    shape = vec![d.outputs];
+                }
+                Layer::Conv2d(c) => {
+                    let (h, w) = (shape[1], shape[2]);
+                    out.push(c.macs(h, w));
+                    shape = vec![c.out_ch, c.out_dim(h), c.out_dim(w)];
+                }
+                Layer::Pool2d(p) => {
+                    shape = vec![
+                        shape[0],
+                        p.config.out_dim(shape[1]),
+                        p.config.out_dim(shape[2]),
+                    ];
+                }
+                Layer::Flatten => {
+                    shape = vec![shape.iter().product()];
+                }
+                Layer::Softmax => {}
+            }
+        }
+        out
+    }
+
+    /// FP32 reference forward pass.
+    pub fn forward_f64(&self, input: &Tensor) -> Tensor {
+        assert_eq!(input.shape(), &self.input_shape[..], "input shape mismatch");
+        let mut x = input.clone();
+        for layer in &self.layers {
+            x = match layer {
+                Layer::Dense(d) => dense_f64(d, &x),
+                Layer::Conv2d(c) => conv_f64(c, &x),
+                Layer::Pool2d(p) => pool_f64(p, &x),
+                Layer::Flatten => {
+                    let n = x.len();
+                    x.reshape(&[n])
+                }
+                Layer::Softmax => {
+                    Tensor::vector(&crate::activation::reference_softmax(x.data()))
+                }
+            };
+        }
+        x
+    }
+
+    /// Bit-accurate CORDIC forward pass under a per-layer policy.
+    ///
+    /// The policy must have exactly [`Self::compute_layers`] entries;
+    /// non-compute layers (pooling, softmax) inherit the *previous* compute
+    /// layer's execution mode for their CORDIC budgets, matching the control
+    /// engine's layer-scoped configuration registers.
+    pub fn forward_cordic(&self, input: &Tensor, policy: &PolicyTable) -> (Tensor, CordicRunStats) {
+        assert_eq!(input.shape(), &self.input_shape[..], "input shape mismatch");
+        assert_eq!(policy.len(), self.compute_layers(), "policy/compute-layer mismatch");
+        let mut x = input.clone();
+        let mut stats = CordicRunStats::default();
+        let mut pidx = 0usize;
+        let mut current: LayerPolicy = if policy.is_empty() {
+            LayerPolicy { layer: 0, precision: Precision::Fxp16, mode: ExecMode::Accurate }
+        } else {
+            policy.layer(0)
+        };
+        for layer in &self.layers {
+            match layer {
+                Layer::Dense(d) => {
+                    current = policy.layer(pidx);
+                    pidx += 1;
+                    let (y, st) = dense_cordic(d, &x, current);
+                    x = y;
+                    stats.per_layer.push(st);
+                }
+                Layer::Conv2d(c) => {
+                    current = policy.layer(pidx);
+                    pidx += 1;
+                    let (y, st) = conv_cordic(c, &x, current);
+                    x = y;
+                    stats.per_layer.push(st);
+                }
+                Layer::Pool2d(p) => {
+                    let iters = af_iters(current.mode);
+                    let raw: Vec<i64> = x.data().iter().map(|&v| to_guard(v)).collect();
+                    let shape = x.shape().to_vec();
+                    let (ch, h, w) = (shape[0], shape[1], shape[2]);
+                    let mut eng = AadSlidingWindow::new(p.config, p.kind, iters);
+                    let (oh, ow) = (p.config.out_dim(h), p.config.out_dim(w));
+                    let mut out = Vec::with_capacity(ch * oh * ow);
+                    for c in 0..ch {
+                        let chan = &raw[c * h * w..(c + 1) * h * w];
+                        out.extend(eng.pool_channel(chan, h, w).iter().map(|&v| from_guard(v)));
+                    }
+                    stats.per_layer.push(LayerStats {
+                        kind: "pool2d",
+                        pool_cost: eng.total_cost(),
+                        outputs: out.len(),
+                        ..Default::default()
+                    });
+                    x = Tensor::from_vec(&[ch, oh, ow], out);
+                }
+                Layer::Flatten => {
+                    let n = x.len();
+                    x = x.reshape(&[n]);
+                }
+                Layer::Softmax => {
+                    let mut block = MultiAfBlock::new(af_iters(current.mode));
+                    let (ys, cost) = block.softmax_f64(x.data());
+                    stats.per_layer.push(LayerStats {
+                        kind: "softmax",
+                        af_cost: cost,
+                        outputs: ys.len(),
+                        ..Default::default()
+                    });
+                    x = Tensor::vector(&ys);
+                }
+            }
+        }
+        (x, stats)
+    }
+
+    /// Classification accuracy of the FP32 path over a labelled set.
+    pub fn accuracy_f64(&self, inputs: &[Tensor], labels: &[usize]) -> f64 {
+        accuracy_of(inputs, labels, |x| self.forward_f64(x))
+    }
+
+    /// Classification accuracy of the CORDIC path under a policy.
+    pub fn accuracy_cordic(
+        &self,
+        inputs: &[Tensor],
+        labels: &[usize],
+        policy: &PolicyTable,
+    ) -> f64 {
+        accuracy_of(inputs, labels, |x| self.forward_cordic(x, policy).0)
+    }
+}
+
+fn accuracy_of(inputs: &[Tensor], labels: &[usize], mut fwd: impl FnMut(&Tensor) -> Tensor) -> f64 {
+    assert_eq!(inputs.len(), labels.len(), "inputs/labels mismatch");
+    assert!(!inputs.is_empty(), "empty evaluation set");
+    let correct = inputs
+        .iter()
+        .zip(labels)
+        .filter(|(x, &y)| fwd(x).argmax() == y)
+        .count();
+    correct as f64 / inputs.len() as f64
+}
+
+// ---- FP32 layer implementations -------------------------------------------
+
+fn dense_f64(d: &DenseParams, x: &Tensor) -> Tensor {
+    assert_eq!(x.len(), d.inputs, "dense input width mismatch");
+    let mut out = Vec::with_capacity(d.outputs);
+    for o in 0..d.outputs {
+        let w = d.neuron_weights(o);
+        let s: f64 = w.iter().zip(x.data()).map(|(wi, xi)| wi * xi).sum::<f64>() + d.biases[o];
+        out.push(d.act.reference(s));
+    }
+    Tensor::vector(&out)
+}
+
+fn conv_f64(c: &Conv2dParams, x: &Tensor) -> Tensor {
+    let (in_ch, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert_eq!(in_ch, c.in_ch, "conv input channels mismatch");
+    let (oh, ow) = (c.out_dim(h), c.out_dim(w));
+    let mut out = Tensor::zeros(&[c.out_ch, oh, ow]);
+    for o in 0..c.out_ch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut s = c.biases[o];
+                for i in 0..c.in_ch {
+                    for ky in 0..c.kernel {
+                        for kx in 0..c.kernel {
+                            s += c.weights[c.widx(o, i, ky, kx)]
+                                * x.at3(i, oy * c.stride + ky, ox * c.stride + kx);
+                        }
+                    }
+                }
+                *out.at3_mut(o, oy, ox) = c.act.reference(s);
+            }
+        }
+    }
+    out
+}
+
+fn pool_f64(p: &super::layer::Pool2dParams, x: &Tensor) -> Tensor {
+    use crate::pooling::sliding::PoolKind;
+    let (ch, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    let (oh, ow) = (p.config.out_dim(h), p.config.out_dim(w));
+    let mut out = Tensor::zeros(&[ch, oh, ow]);
+    for c in 0..ch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut vals = Vec::with_capacity(p.config.window * p.config.window);
+                for dy in 0..p.config.window {
+                    for dx in 0..p.config.window {
+                        vals.push(x.at3(c, oy * p.config.stride + dy, ox * p.config.stride + dx));
+                    }
+                }
+                *out.at3_mut(c, oy, ox) = match p.kind {
+                    PoolKind::Max => vals.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+                    PoolKind::Avg => vals.iter().sum::<f64>() / vals.len() as f64,
+                    PoolKind::Aad => crate::pooling::reference_aad(&vals),
+                };
+            }
+        }
+    }
+    out
+}
+
+// ---- CORDIC layer implementations ------------------------------------------
+
+fn dense_cordic(d: &DenseParams, x: &Tensor, policy: LayerPolicy) -> (Tensor, LayerStats) {
+    assert_eq!(x.len(), d.inputs, "dense input width mismatch");
+    let fmt = policy.precision.format();
+    let cfg = MacConfig::new(policy.precision, policy.mode);
+    let mut mac = CordicMac::new(cfg);
+    let mut af = MultiAfBlock::new(af_iters(policy.mode));
+    let xs: Vec<Fxp> = x.data().iter().map(|&v| Fxp::from_f64(v, fmt)).collect();
+    // quantise the whole weight bank once (as the kernel memory holds it),
+    // not per neuron — the per-row re-quantisation dominated this loop
+    let wq: Vec<Fxp> = d.weights.iter().map(|&v| Fxp::from_f64(v, fmt)).collect();
+    let mut out = Vec::with_capacity(d.outputs);
+    let mut af_cost = AfCost::default();
+    for o in 0..d.outputs {
+        let ws = &wq[o * d.inputs..(o + 1) * d.inputs];
+        let bias = Fxp::from_f64(d.biases[o], fmt);
+        let (_, _) = mac.dot(&xs, ws, Some(bias));
+        // accumulate-then-activate: the wide partial sum feeds the AF
+        // pipeline directly (paper §II-E: partial sums are forwarded to
+        // the activation pipeline), so only operands see the narrow grid
+        let (y, c) = af.apply_raw(d.act, mac.read_guard());
+        af_cost = af_cost.merge(c);
+        out.push(from_guard(y));
+    }
+    let stats = LayerStats {
+        kind: "dense",
+        macs: mac.total_macs(),
+        mac_cycles: mac.total_cycles(),
+        af_cost,
+        outputs: d.outputs,
+        ..Default::default()
+    };
+    (Tensor::vector(&out), stats)
+}
+
+fn conv_cordic(c: &Conv2dParams, x: &Tensor, policy: LayerPolicy) -> (Tensor, LayerStats) {
+    let (in_ch, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert_eq!(in_ch, c.in_ch, "conv input channels mismatch");
+    let fmt = policy.precision.format();
+    let cfg = MacConfig::new(policy.precision, policy.mode);
+    let mut mac = CordicMac::new(cfg);
+    let mut af = MultiAfBlock::new(af_iters(policy.mode));
+    let (oh, ow) = (c.out_dim(h), c.out_dim(w));
+    // quantise the whole input map and kernel bank once (the memory banks
+    // hold quantised words)
+    let xq: Vec<Fxp> = x.data().iter().map(|&v| Fxp::from_f64(v, fmt)).collect();
+    let wq: Vec<Fxp> = c.weights.iter().map(|&v| Fxp::from_f64(v, fmt)).collect();
+    let mut out = Tensor::zeros(&[c.out_ch, oh, ow]);
+    let mut af_cost = AfCost::default();
+    for o in 0..c.out_ch {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                mac.reset();
+                mac.add_bias(Fxp::from_f64(c.biases[o], fmt));
+                for i in 0..c.in_ch {
+                    for ky in 0..c.kernel {
+                        for kx in 0..c.kernel {
+                            let xv =
+                                xq[i * h * w + (oy * c.stride + ky) * w + (ox * c.stride + kx)];
+                            let wv = wq[c.widx(o, i, ky, kx)];
+                            mac.mac(xv, wv);
+                        }
+                    }
+                }
+                // wide accumulate-then-activate, as in the dense path
+                let (y, cst) = af.apply_raw(c.act, mac.read_guard());
+                af_cost = af_cost.merge(cst);
+                *out.at3_mut(o, oy, ox) = from_guard(y);
+            }
+        }
+    }
+    let stats = LayerStats {
+        kind: "conv2d",
+        macs: mac.total_macs(),
+        mac_cycles: mac.total_cycles(),
+        af_cost,
+        outputs: c.out_ch * oh * ow,
+        ..Default::default()
+    };
+    (out, stats)
+}
+
+#[cfg(test)]
+mod tests;

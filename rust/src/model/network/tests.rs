@@ -1,0 +1,157 @@
+//! Tests for the network container: FP32 vs CORDIC agreement, statistics,
+//! policy plumbing.
+
+use super::*;
+use crate::activation::ActFn;
+use crate::model::layer::Pool2dParams;
+use crate::pooling::sliding::{Pool2dConfig, PoolKind};
+use crate::testutil::Xoshiro256;
+
+/// Tiny deterministic dense network: 4 → 3 → 2 with tanh/softmax.
+fn tiny_mlp() -> Network {
+    let mut l1 = DenseParams::zeros(4, 3, ActFn::Tanh);
+    let mut rng = Xoshiro256::new(42);
+    for w in l1.weights.iter_mut() {
+        *w = rng.uniform(-0.9, 0.9);
+    }
+    for b in l1.biases.iter_mut() {
+        *b = rng.uniform(-0.2, 0.2);
+    }
+    let mut l2 = DenseParams::zeros(3, 2, ActFn::Identity);
+    for w in l2.weights.iter_mut() {
+        *w = rng.uniform(-0.9, 0.9);
+    }
+    Network::new(
+        "tiny",
+        &[4],
+        vec![Layer::Dense(l1), Layer::Dense(l2), Layer::Softmax],
+    )
+}
+
+/// Tiny conv network: 1×6×6 → conv(2,3×3) → pool(2×2) → flatten → dense.
+/// Weight scales keep inter-layer activations inside the (-1, 1) operand
+/// grid (trained networks do the same via normalisation).
+fn tiny_cnn() -> Network {
+    let mut rng = Xoshiro256::new(7);
+    let mut conv = Conv2dParams::zeros(1, 2, 3, 1, ActFn::Relu);
+    for w in conv.weights.iter_mut() {
+        *w = rng.uniform(-0.2, 0.2);
+    }
+    let pool = Pool2dParams {
+        config: Pool2dConfig { window: 2, stride: 2 },
+        kind: PoolKind::Max,
+    };
+    let mut dense = DenseParams::zeros(2 * 2 * 2, 3, ActFn::Identity);
+    for w in dense.weights.iter_mut() {
+        *w = rng.uniform(-0.5, 0.5);
+    }
+    Network::new(
+        "tinycnn",
+        &[1, 6, 6],
+        vec![Layer::Conv2d(conv), Layer::Pool2d(pool), Layer::Flatten, Layer::Dense(dense)],
+    )
+}
+
+#[test]
+fn compute_layers_counts_dense_and_conv_only() {
+    assert_eq!(tiny_mlp().compute_layers(), 2);
+    assert_eq!(tiny_cnn().compute_layers(), 2);
+}
+
+#[test]
+fn macs_per_layer_tracks_shapes() {
+    let m = tiny_mlp().macs_per_layer();
+    assert_eq!(m, vec![12, 6]);
+    let c = tiny_cnn().macs_per_layer();
+    // conv: 4*4 positions * 2 out * 9 = 288; dense: 8*3 = 24
+    assert_eq!(c, vec![288, 24]);
+}
+
+#[test]
+fn f64_forward_shapes() {
+    let net = tiny_mlp();
+    let x = Tensor::vector(&[0.5, -0.25, 0.75, 0.0]);
+    let y = net.forward_f64(&x);
+    assert_eq!(y.shape(), &[2]);
+    assert!((y.data().iter().sum::<f64>() - 1.0).abs() < 1e-9, "softmax sums to 1");
+}
+
+#[test]
+fn cordic_matches_f64_with_fxp16_accurate() {
+    let net = tiny_mlp();
+    let policy = PolicyTable::uniform(2, Precision::Fxp16, ExecMode::Accurate);
+    let x = Tensor::vector(&[0.5, -0.25, 0.75, 0.0]);
+    let y_ref = net.forward_f64(&x);
+    let (y_cordic, stats) = net.forward_cordic(&x, &policy);
+    for (a, b) in y_cordic.data().iter().zip(y_ref.data()) {
+        assert!((a - b).abs() < 0.02, "cordic {a} vs ref {b}");
+    }
+    assert_eq!(stats.total_macs(), 18);
+    assert_eq!(stats.total_mac_cycles(), 18 * 9, "FxP-16 accurate = 9 cyc/MAC");
+}
+
+#[test]
+fn approximate_mode_costs_fewer_cycles() {
+    let net = tiny_mlp();
+    let x = Tensor::vector(&[0.5, -0.25, 0.75, 0.0]);
+    let acc = PolicyTable::uniform(2, Precision::Fxp8, ExecMode::Accurate);
+    let app = PolicyTable::uniform(2, Precision::Fxp8, ExecMode::Approximate);
+    let (_, s_acc) = net.forward_cordic(&x, &acc);
+    let (_, s_app) = net.forward_cordic(&x, &app);
+    assert!(s_app.total_mac_cycles() < s_acc.total_mac_cycles());
+}
+
+#[test]
+fn cnn_cordic_close_to_f64() {
+    let net = tiny_cnn();
+    let mut rng = Xoshiro256::new(3);
+    let x = Tensor::from_vec(&[1, 6, 6], rng.uniform_vec(36, -0.8, 0.8));
+    let y_ref = net.forward_f64(&x);
+    let policy = PolicyTable::uniform(2, Precision::Fxp16, ExecMode::Accurate);
+    let (y_c, stats) = net.forward_cordic(&x, &policy);
+    assert_eq!(y_c.shape(), y_ref.shape());
+    for (a, b) in y_c.data().iter().zip(y_ref.data()) {
+        assert!((a - b).abs() < 0.05, "cordic {a} vs ref {b}");
+    }
+    // conv + pool + dense layers all produce stats entries
+    assert_eq!(stats.per_layer.len(), 3);
+    assert!(stats.total_pool_cycles() > 0);
+}
+
+#[test]
+fn accuracy_helpers_agree_on_trivial_set() {
+    let net = tiny_mlp();
+    let mut rng = Xoshiro256::new(11);
+    let inputs: Vec<Tensor> = (0..16).map(|_| Tensor::vector(&rng.uniform_vec(4, -1.0, 1.0))).collect();
+    // label with the network's own predictions -> accuracy must be 1.0
+    let labels: Vec<usize> = inputs.iter().map(|x| net.forward_f64(x).argmax()).collect();
+    assert_eq!(net.accuracy_f64(&inputs, &labels), 1.0);
+    // high-precision CORDIC should agree on nearly all
+    let policy = PolicyTable::uniform(2, Precision::Fxp16, ExecMode::Accurate);
+    assert!(net.accuracy_cordic(&inputs, &labels, &policy) >= 0.8);
+}
+
+#[test]
+#[should_panic(expected = "policy/compute-layer mismatch")]
+fn wrong_policy_length_panics() {
+    let net = tiny_mlp();
+    let policy = PolicyTable::uniform(5, Precision::Fxp8, ExecMode::Accurate);
+    net.forward_cordic(&Tensor::vector(&[0.0; 4]), &policy);
+}
+
+#[test]
+#[should_panic(expected = "input shape mismatch")]
+fn wrong_input_shape_panics() {
+    tiny_mlp().forward_f64(&Tensor::vector(&[0.0; 3]));
+}
+
+#[test]
+fn per_layer_stats_name_kinds() {
+    let net = tiny_cnn();
+    let mut rng = Xoshiro256::new(3);
+    let x = Tensor::from_vec(&[1, 6, 6], rng.uniform_vec(36, -1.0, 1.0));
+    let policy = PolicyTable::uniform(2, Precision::Fxp8, ExecMode::Approximate);
+    let (_, stats) = net.forward_cordic(&x, &policy);
+    let kinds: Vec<&str> = stats.per_layer.iter().map(|l| l.kind).collect();
+    assert_eq!(kinds, vec!["conv2d", "pool2d", "dense"]);
+}

@@ -1,0 +1,172 @@
+//! A minimal dense tensor (f64, row-major) for the reference path and the
+//! trainer. The fixed-point path re-quantises from these at layer
+//! boundaries, exactly where the hardware's memory interface sits.
+
+use std::fmt;
+
+/// Dense row-major f64 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f64>,
+}
+
+impl Tensor {
+    /// Zero-filled tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    /// From parts; panics if the element count mismatches the shape.
+    pub fn from_vec(shape: &[usize], data: Vec<f64>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "tensor shape {:?} does not match {} elements",
+            shape,
+            data.len()
+        );
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    /// 1-D tensor from a slice.
+    pub fn vector(data: &[f64]) -> Self {
+        Tensor { shape: vec![data.len()], data: data.to_vec() }
+    }
+
+    /// Shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Total element count.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Flat data view.
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Flat mutable data view.
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Consume into the flat vector.
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Reshape in place (same element count).
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            self.data.len(),
+            "reshape {:?} -> {:?} changes element count",
+            self.shape,
+            shape
+        );
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// 2-D index (row-major).
+    pub fn at2(&self, r: usize, c: usize) -> f64 {
+        debug_assert_eq!(self.shape.len(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// 3-D index `(c, h, w)` for CHW feature maps.
+    pub fn at3(&self, ch: usize, y: usize, x: usize) -> f64 {
+        debug_assert_eq!(self.shape.len(), 3);
+        let (_, h, w) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[ch * h * w + y * w + x]
+    }
+
+    /// Mutable 3-D index.
+    pub fn at3_mut(&mut self, ch: usize, y: usize, x: usize) -> &mut f64 {
+        debug_assert_eq!(self.shape.len(), 3);
+        let (h, w) = (self.shape[1], self.shape[2]);
+        &mut self.data[ch * h * w + y * w + x]
+    }
+
+    /// Index of the maximum element (argmax for classification).
+    pub fn argmax(&self) -> usize {
+        self.data
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .expect("argmax of empty tensor")
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f64) -> f64) -> Tensor {
+        Tensor { shape: self.shape.clone(), data: self.data.iter().map(|&v| f(v)).collect() }
+    }
+
+    /// Max absolute element.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0, |m, &v| m.max(v.abs()))
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Tensor{:?}", self.shape)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let t = Tensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(t.at2(0, 2), 3.0);
+        assert_eq!(t.at2(1, 0), 4.0);
+        assert_eq!(t.len(), 6);
+    }
+
+    #[test]
+    fn chw_indexing() {
+        let mut t = Tensor::zeros(&[2, 2, 2]);
+        *t.at3_mut(1, 0, 1) = 7.0;
+        assert_eq!(t.at3(1, 0, 1), 7.0);
+        assert_eq!(t.data()[5], 7.0);
+    }
+
+    #[test]
+    fn argmax_picks_first_max_index() {
+        let t = Tensor::vector(&[0.1, 0.9, 0.3]);
+        assert_eq!(t.argmax(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match")]
+    fn shape_mismatch_panics() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = Tensor::vector(&[1.0, 2.0, 3.0, 4.0]).reshape(&[2, 2]);
+        assert_eq!(t.at2(1, 1), 4.0);
+    }
+
+    #[test]
+    fn map_and_max_abs() {
+        let t = Tensor::vector(&[-3.0, 1.0]).map(|v| v * 2.0);
+        assert_eq!(t.data(), &[-6.0, 2.0]);
+        assert_eq!(t.max_abs(), 6.0);
+    }
+}

@@ -1,0 +1,130 @@
+//! Constructors for the trainable evaluation networks.
+
+use crate::activation::ActFn;
+use crate::model::layer::{Conv2dParams, DenseParams, Layer, Pool2dParams};
+use crate::model::Network;
+use crate::pooling::sliding::{Pool2dConfig, PoolKind};
+use crate::testutil::Xoshiro256;
+
+/// He-style initialisation scale for a fan-in.
+fn init_scale(fan_in: usize) -> f64 {
+    (2.0 / fan_in as f64).sqrt()
+}
+
+/// Generic MLP: `dims[0] → dims[1] → … → dims[n-1]`, hidden activation
+/// `act`, identity+softmax head, weights randomly initialised from `seed`.
+pub fn mlp(name: &str, dims: &[usize], act: ActFn, seed: u64) -> Network {
+    assert!(dims.len() >= 2, "mlp needs at least input and output dims");
+    let mut rng = Xoshiro256::new(seed);
+    let mut layers = Vec::new();
+    for i in 0..dims.len() - 1 {
+        let last = i == dims.len() - 2;
+        let mut d = DenseParams::zeros(dims[i], dims[i + 1], if last { ActFn::Identity } else { act });
+        let s = init_scale(dims[i]);
+        for w in d.weights.iter_mut() {
+            *w = rng.normal_ms(0.0, s);
+        }
+        for b in d.biases.iter_mut() {
+            *b = 0.0;
+        }
+        layers.push(Layer::Dense(d));
+    }
+    layers.push(Layer::Softmax);
+    Network::new(name, &[dims[0]], layers)
+}
+
+/// The paper's Table V network: 196-64-32-32-10 (also used by the
+/// prior-work rows it compares against).
+pub fn paper_mlp(seed: u64) -> Network {
+    mlp("mlp-196-64-32-32-10", &[196, 64, 32, 32, 10], ActFn::Sigmoid, seed)
+}
+
+/// A wider MLP variant for the Fig. 11 model sweep.
+pub fn wide_mlp(seed: u64) -> Network {
+    mlp("mlp-196-128-64-10", &[196, 128, 64, 10], ActFn::Tanh, seed)
+}
+
+/// Small LeNet-style CNN on 1×14×14 inputs:
+/// conv(8,3×3) → pool(2×2) → conv(16,3×3) → pool(2×2) → flatten → dense(10).
+///
+/// `pool` selects the pooling unit (the paper's AAD unit or a baseline).
+pub fn small_cnn(name: &str, pool: PoolKind, seed: u64) -> Network {
+    let mut rng = Xoshiro256::new(seed);
+    let mut conv1 = Conv2dParams::zeros(1, 8, 3, 1, ActFn::Relu);
+    let s1 = init_scale(9);
+    for w in conv1.weights.iter_mut() {
+        *w = rng.normal_ms(0.0, s1);
+    }
+    let mut conv2 = Conv2dParams::zeros(8, 16, 3, 1, ActFn::Relu);
+    let s2 = init_scale(8 * 9);
+    for w in conv2.weights.iter_mut() {
+        *w = rng.normal_ms(0.0, s2);
+    }
+    // 14 -> conv 12 -> pool 6 -> conv 4 -> pool 2 => 16*2*2 = 64
+    let mut dense = DenseParams::zeros(64, 10, ActFn::Identity);
+    let s3 = init_scale(64);
+    for w in dense.weights.iter_mut() {
+        *w = rng.normal_ms(0.0, s3);
+    }
+    let pool_layer = Pool2dParams { config: Pool2dConfig { window: 2, stride: 2 }, kind: pool };
+    Network::new(
+        name,
+        &[1, 14, 14],
+        vec![
+            Layer::Conv2d(conv1),
+            Layer::Pool2d(pool_layer),
+            Layer::Conv2d(conv2),
+            Layer::Pool2d(pool_layer),
+            Layer::Flatten,
+            Layer::Dense(dense),
+            Layer::Softmax,
+        ],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::Tensor;
+
+    #[test]
+    fn paper_mlp_shape() {
+        let net = paper_mlp(1);
+        assert_eq!(net.compute_layers(), 4);
+        assert_eq!(
+            net.macs_per_layer(),
+            vec![196 * 64, 64 * 32, 32 * 32, 32 * 10]
+        );
+        let y = net.forward_f64(&Tensor::zeros(&[196]));
+        assert_eq!(y.shape(), &[10]);
+    }
+
+    #[test]
+    fn small_cnn_shapes_compose() {
+        let net = small_cnn("cnn", PoolKind::Max, 2);
+        assert_eq!(net.compute_layers(), 3);
+        let y = net.forward_f64(&Tensor::zeros(&[1, 14, 14]));
+        assert_eq!(y.shape(), &[10]);
+    }
+
+    #[test]
+    fn mlp_initialisation_is_seeded() {
+        let a = mlp("a", &[8, 4, 2], ActFn::Relu, 5);
+        let b = mlp("b", &[8, 4, 2], ActFn::Relu, 5);
+        let c = mlp("c", &[8, 4, 2], ActFn::Relu, 6);
+        if let (crate::model::Layer::Dense(da), crate::model::Layer::Dense(db), crate::model::Layer::Dense(dc)) =
+            (&a.layers[0], &b.layers[0], &c.layers[0])
+        {
+            assert_eq!(da.weights, db.weights);
+            assert_ne!(da.weights, dc.weights);
+        } else {
+            panic!("expected dense layers");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "at least input and output")]
+    fn degenerate_mlp_panics() {
+        mlp("x", &[10], ActFn::Relu, 0);
+    }
+}

@@ -1,0 +1,19 @@
+//! The paper's evaluation workloads.
+//!
+//! * [`paper_mlp`] — the 196-64-32-32-10 MLP used in Table V (and by the
+//!!  prior-work rows it compares against);
+//! * [`mlp`] / [`small_cnn`] — trainable models for the Fig. 11 accuracy
+//!   sweep (trained from scratch on the synthetic dataset in
+//!   [`crate::train`]);
+//! * [`tinyyolo_trace`] — TinyYOLO-v3 layer trace for the Table IV FPGA
+//!   system-level comparison (object detection);
+//! * [`vgg16_trace`] — VGG-16 layer trace for the Fig. 13 layer-wise
+//!   execution-time/power breakdown.
+
+mod builders;
+mod traces;
+mod transformer;
+
+pub use builders::{mlp, paper_mlp, small_cnn, wide_mlp};
+pub use traces::{tinyyolo_trace, vgg16_trace, Trace, TraceKind, TraceLayer};
+pub use transformer::{transformer_mlp, transformer_trace, vit_tiny_mlp_trace};

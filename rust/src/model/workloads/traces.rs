@@ -1,0 +1,249 @@
+//! Layer traces of the large evaluation networks (TinyYOLO-v3, VGG-16).
+//!
+//! The paper uses these models for system-level timing/energy (Table IV,
+//! Fig. 13), not retraining, so what matters is exact layer shapes → MAC /
+//! activation / pooling op counts and parameter sizes. A [`Trace`] is that
+//! information in executable form; the vector-engine simulator schedules it.
+
+use crate::activation::ActFn;
+
+/// Layer category within a trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceKind {
+    /// Convolution layer.
+    Conv,
+    /// Fully connected layer.
+    Dense,
+    /// Pooling layer.
+    Pool,
+    /// Upsample / concat / reshape plumbing (no MACs).
+    Plumbing,
+}
+
+/// One layer of a traced workload.
+#[derive(Debug, Clone)]
+pub struct TraceLayer {
+    /// Human-readable name, e.g. `"conv5-3"`.
+    pub name: String,
+    /// Layer category.
+    pub kind: TraceKind,
+    /// MAC operations in one inference.
+    pub macs: u64,
+    /// Activation-function evaluations (count, function).
+    pub af_ops: u64,
+    /// Activation function applied.
+    pub af: ActFn,
+    /// Pooling windows evaluated (0 for non-pool layers).
+    pub pool_windows: u64,
+    /// Elements per pooling window.
+    pub pool_window_size: u32,
+    /// Output elements (feature-map size).
+    pub outputs: u64,
+    /// Weight + bias parameters (for memory traffic estimates).
+    pub params: u64,
+}
+
+impl TraceLayer {
+    fn conv(name: &str, h: u64, w: u64, cin: u64, cout: u64, k: u64, stride: u64, af: ActFn) -> Self {
+        let oh = (h - k) / stride + 1;
+        let ow = (w - k) / stride + 1;
+        // the evaluation nets use same-padding; model output dims as ceil
+        let oh = if k > 1 { h / stride } else { oh.max(h / stride) };
+        let ow = if k > 1 { w / stride } else { ow.max(w / stride) };
+        let outputs = oh * ow * cout;
+        TraceLayer {
+            name: name.to_string(),
+            kind: TraceKind::Conv,
+            macs: outputs * cin * k * k,
+            af_ops: outputs,
+            af,
+            pool_windows: 0,
+            pool_window_size: 0,
+            outputs,
+            params: cout * (cin * k * k + 1),
+        }
+    }
+
+    fn pool(name: &str, h: u64, w: u64, c: u64, window: u64, stride: u64) -> Self {
+        let oh = h / stride;
+        let ow = w / stride;
+        TraceLayer {
+            name: name.to_string(),
+            kind: TraceKind::Pool,
+            macs: 0,
+            af_ops: 0,
+            af: ActFn::Identity,
+            pool_windows: oh * ow * c,
+            pool_window_size: (window * window) as u32,
+            outputs: oh * ow * c,
+            params: 0,
+        }
+    }
+
+    fn dense(name: &str, inputs: u64, outputs: u64, af: ActFn) -> Self {
+        TraceLayer {
+            name: name.to_string(),
+            kind: TraceKind::Dense,
+            macs: inputs * outputs,
+            af_ops: outputs,
+            af,
+            pool_windows: 0,
+            pool_window_size: 0,
+            outputs,
+            params: outputs * (inputs + 1),
+        }
+    }
+
+    fn plumbing(name: &str, outputs: u64) -> Self {
+        TraceLayer {
+            name: name.to_string(),
+            kind: TraceKind::Plumbing,
+            macs: 0,
+            af_ops: 0,
+            af: ActFn::Identity,
+            pool_windows: 0,
+            pool_window_size: 0,
+            outputs,
+            params: 0,
+        }
+    }
+}
+
+/// A traced workload: ordered layers + metadata.
+#[derive(Debug, Clone)]
+pub struct Trace {
+    /// Workload name.
+    pub name: String,
+    /// Ordered layers.
+    pub layers: Vec<TraceLayer>,
+}
+
+impl Trace {
+    /// Total MACs per inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.macs).sum()
+    }
+
+    /// Total operations (2×MACs + AF + pooling element ops) — the GOP
+    /// number throughput metrics are normalised by.
+    pub fn total_ops(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| 2 * l.macs + l.af_ops + l.pool_windows * l.pool_window_size as u64)
+            .sum()
+    }
+
+    /// Total parameters.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.params).sum()
+    }
+
+    /// Layers that perform MACs.
+    pub fn compute_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.macs > 0).count()
+    }
+}
+
+/// TinyYOLO-v3 at 416×416×3 input (the Table IV object-detection workload).
+/// Standard backbone: 6 conv+maxpool stages, then the 13×13 detection head
+/// and the upsampled 26×26 branch. Leaky-ReLU modelled as ReLU (identical
+/// hardware path through the bypass buffer + small multiplier).
+pub fn tinyyolo_trace() -> Trace {
+    let mut l = Vec::new();
+    l.push(TraceLayer::conv("conv1", 416, 416, 3, 16, 3, 1, ActFn::Relu));
+    l.push(TraceLayer::pool("pool1", 416, 416, 16, 2, 2));
+    l.push(TraceLayer::conv("conv2", 208, 208, 16, 32, 3, 1, ActFn::Relu));
+    l.push(TraceLayer::pool("pool2", 208, 208, 32, 2, 2));
+    l.push(TraceLayer::conv("conv3", 104, 104, 32, 64, 3, 1, ActFn::Relu));
+    l.push(TraceLayer::pool("pool3", 104, 104, 64, 2, 2));
+    l.push(TraceLayer::conv("conv4", 52, 52, 64, 128, 3, 1, ActFn::Relu));
+    l.push(TraceLayer::pool("pool4", 52, 52, 128, 2, 2));
+    l.push(TraceLayer::conv("conv5", 26, 26, 128, 256, 3, 1, ActFn::Relu));
+    l.push(TraceLayer::pool("pool5", 26, 26, 256, 2, 2));
+    l.push(TraceLayer::conv("conv6", 13, 13, 256, 512, 3, 1, ActFn::Relu));
+    l.push(TraceLayer::pool("pool6", 13, 13, 512, 2, 1));
+    l.push(TraceLayer::conv("conv7", 13, 13, 512, 1024, 3, 1, ActFn::Relu));
+    l.push(TraceLayer::conv("conv8", 13, 13, 1024, 256, 1, 1, ActFn::Relu));
+    l.push(TraceLayer::conv("conv9", 13, 13, 256, 512, 3, 1, ActFn::Relu));
+    l.push(TraceLayer::conv("conv10-det1", 13, 13, 512, 255, 1, 1, ActFn::Identity));
+    // upsample branch
+    l.push(TraceLayer::conv("conv11", 13, 13, 256, 128, 1, 1, ActFn::Relu));
+    l.push(TraceLayer::plumbing("upsample", 26 * 26 * 128));
+    l.push(TraceLayer::conv("conv12", 26, 26, 384, 256, 3, 1, ActFn::Relu));
+    l.push(TraceLayer::conv("conv13-det2", 26, 26, 256, 255, 1, 1, ActFn::Identity));
+    Trace { name: "tinyyolo-v3".to_string(), layers: l }
+}
+
+/// VGG-16 at 224×224×3 (the Fig. 13 layer-wise breakdown workload).
+pub fn vgg16_trace() -> Trace {
+    let mut l = Vec::new();
+    let relu = ActFn::Relu;
+    l.push(TraceLayer::conv("conv1-1", 224, 224, 3, 64, 3, 1, relu));
+    l.push(TraceLayer::conv("conv1-2", 224, 224, 64, 64, 3, 1, relu));
+    l.push(TraceLayer::pool("pool1", 224, 224, 64, 2, 2));
+    l.push(TraceLayer::conv("conv2-1", 112, 112, 64, 128, 3, 1, relu));
+    l.push(TraceLayer::conv("conv2-2", 112, 112, 128, 128, 3, 1, relu));
+    l.push(TraceLayer::pool("pool2", 112, 112, 128, 2, 2));
+    l.push(TraceLayer::conv("conv3-1", 56, 56, 128, 256, 3, 1, relu));
+    l.push(TraceLayer::conv("conv3-2", 56, 56, 256, 256, 3, 1, relu));
+    l.push(TraceLayer::conv("conv3-3", 56, 56, 256, 256, 3, 1, relu));
+    l.push(TraceLayer::pool("pool3", 56, 56, 256, 2, 2));
+    l.push(TraceLayer::conv("conv4-1", 28, 28, 256, 512, 3, 1, relu));
+    l.push(TraceLayer::conv("conv4-2", 28, 28, 512, 512, 3, 1, relu));
+    l.push(TraceLayer::conv("conv4-3", 28, 28, 512, 512, 3, 1, relu));
+    l.push(TraceLayer::pool("pool4", 28, 28, 512, 2, 2));
+    l.push(TraceLayer::conv("conv5-1", 14, 14, 512, 512, 3, 1, relu));
+    l.push(TraceLayer::conv("conv5-2", 14, 14, 512, 512, 3, 1, relu));
+    l.push(TraceLayer::conv("conv5-3", 14, 14, 512, 512, 3, 1, relu));
+    l.push(TraceLayer::pool("pool5", 14, 14, 512, 2, 2));
+    l.push(TraceLayer::dense("fc6", 7 * 7 * 512, 4096, relu));
+    l.push(TraceLayer::dense("fc7", 4096, 4096, relu));
+    l.push(TraceLayer::dense("fc8", 4096, 1000, ActFn::Softmax));
+    Trace { name: "vgg-16".to_string(), layers: l }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tinyyolo_macs_in_published_range() {
+        let t = tinyyolo_trace();
+        // Tiny YOLOv3 at 416² is ~5.56 GFLOPs => ~2.7-2.9 G MACs
+        let gmacs = t.total_macs() as f64 / 1e9;
+        assert!((2.4..=3.2).contains(&gmacs), "tinyyolo GMACs = {gmacs}");
+        assert!(t.compute_layers() >= 13);
+    }
+
+    #[test]
+    fn vgg16_macs_match_published() {
+        let t = vgg16_trace();
+        // VGG-16 is ~15.5 GMACs (30.9 GFLOPs) at 224²
+        let gmacs = t.total_macs() as f64 / 1e9;
+        assert!((14.5..=16.0).contains(&gmacs), "vgg16 GMACs = {gmacs}");
+        assert_eq!(t.compute_layers(), 16, "13 conv + 3 fc");
+    }
+
+    #[test]
+    fn vgg16_params_about_138m() {
+        let t = vgg16_trace();
+        let m = t.total_params() as f64 / 1e6;
+        assert!((130.0..=145.0).contains(&m), "vgg16 params = {m}M");
+    }
+
+    #[test]
+    fn pool_layers_have_windows_not_macs() {
+        let t = vgg16_trace();
+        for l in t.layers.iter().filter(|l| l.kind == TraceKind::Pool) {
+            assert_eq!(l.macs, 0);
+            assert!(l.pool_windows > 0);
+            assert_eq!(l.pool_window_size, 4);
+        }
+    }
+
+    #[test]
+    fn total_ops_exceed_twice_macs() {
+        let t = tinyyolo_trace();
+        assert!(t.total_ops() > 2 * t.total_macs());
+    }
+}

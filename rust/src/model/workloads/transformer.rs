@@ -1,0 +1,156 @@
+//! Transformer-style MLP workload (paper Table I: "DNN, Transformers
+//! (MLP)" — the engine accelerates the MLP blocks of transformer layers,
+//! which dominate their FLOPs; attention itself is out of the paper's
+//! scope).
+//!
+//! Two artefacts:
+//! * [`transformer_mlp`] — a trainable GELU-MLP classifier in the
+//!   transformer-block shape (expand 4×, contract), for the Fig. 11-style
+//!   accuracy axis with the GELU datapath (the multi-AF block's most
+//!   complex function);
+//! * [`transformer_trace`] — a ViT-Tiny-scale trace of the MLP blocks
+//!   (12 layers × [d → 4d → d]) for the engine simulator.
+
+use crate::activation::ActFn;
+use crate::model::layer::{DenseParams, Layer};
+use crate::model::Network;
+use crate::testutil::Xoshiro256;
+
+use super::traces::{Trace, TraceKind, TraceLayer};
+
+/// GELU-MLP classifier in transformer-block shape:
+/// `196 → 4×64 expand → 64 contract → 10`, GELU hidden activations.
+pub fn transformer_mlp(seed: u64) -> Network {
+    let dims = [196usize, 256, 64, 10];
+    let mut rng = Xoshiro256::new(seed);
+    let mut layers = Vec::new();
+    for i in 0..dims.len() - 1 {
+        let last = i == dims.len() - 2;
+        let mut d = DenseParams::zeros(
+            dims[i],
+            dims[i + 1],
+            if last { ActFn::Identity } else { ActFn::Gelu },
+        );
+        let s = (2.0 / dims[i] as f64).sqrt();
+        for w in d.weights.iter_mut() {
+            *w = rng.normal_ms(0.0, s);
+        }
+        layers.push(Layer::Dense(d));
+    }
+    layers.push(Layer::Softmax);
+    Network::new("transformer-mlp-196-256-64-10", &[196], layers)
+}
+
+/// ViT-Tiny-scale MLP-block trace: `blocks` transformer layers over
+/// `tokens` tokens of width `d`, each block = dense(d→4d, GELU) +
+/// dense(4d→d), plus the classifier head. Attention layers appear as
+/// plumbing (their cost is not the engine's target).
+pub fn transformer_trace(blocks: u64, tokens: u64, d: u64) -> Trace {
+    let mut layers = Vec::new();
+    for b in 0..blocks {
+        layers.push(TraceLayer {
+            name: format!("blk{b}-attn(plumbing)"),
+            kind: TraceKind::Plumbing,
+            macs: 0,
+            af_ops: 0,
+            af: ActFn::Identity,
+            pool_windows: 0,
+            pool_window_size: 0,
+            outputs: tokens * d,
+            params: 0,
+        });
+        layers.push(TraceLayer {
+            name: format!("blk{b}-mlp-up"),
+            kind: TraceKind::Dense,
+            macs: tokens * d * 4 * d,
+            af_ops: tokens * 4 * d,
+            af: ActFn::Gelu,
+            pool_windows: 0,
+            pool_window_size: 0,
+            outputs: tokens * 4 * d,
+            params: 4 * d * (d + 1),
+        });
+        layers.push(TraceLayer {
+            name: format!("blk{b}-mlp-down"),
+            kind: TraceKind::Dense,
+            macs: tokens * 4 * d * d,
+            af_ops: tokens * d,
+            af: ActFn::Identity,
+            pool_windows: 0,
+            pool_window_size: 0,
+            outputs: tokens * d,
+            params: d * (4 * d + 1),
+        });
+    }
+    layers.push(TraceLayer {
+        name: "head".to_string(),
+        kind: TraceKind::Dense,
+        macs: d * 1000,
+        af_ops: 1000,
+        af: ActFn::Softmax,
+        pool_windows: 0,
+        pool_window_size: 0,
+        outputs: 1000,
+        params: 1000 * (d + 1),
+    });
+    Trace { name: format!("transformer-mlp-{blocks}x{tokens}x{d}"), layers }
+}
+
+/// ViT-Tiny MLP blocks: 12 blocks, 197 tokens, d=192.
+pub fn vit_tiny_mlp_trace() -> Trace {
+    transformer_trace(12, 197, 192)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::mac::ExecMode;
+    use crate::engine::{EngineConfig, VectorEngine};
+    use crate::model::Tensor;
+    use crate::quant::{PolicyTable, Precision};
+
+    #[test]
+    fn transformer_mlp_forward_shapes() {
+        let net = transformer_mlp(5);
+        assert_eq!(net.compute_layers(), 3);
+        let y = net.forward_f64(&Tensor::zeros(&[196]));
+        assert_eq!(y.shape(), &[10]);
+    }
+
+    #[test]
+    fn transformer_mlp_cordic_uses_gelu_datapath() {
+        let net = transformer_mlp(5);
+        let policy =
+            PolicyTable::uniform(net.compute_layers(), Precision::Fxp16, ExecMode::Accurate);
+        let mut rng = crate::testutil::Xoshiro256::new(2);
+        let x = Tensor::vector(&rng.uniform_vec(196, -0.5, 0.5));
+        let (y, stats) = net.forward_cordic(&x, &policy);
+        assert_eq!(y.shape(), &[10]);
+        // GELU runs on the aux multipliers: lin cycles must show up
+        let lin: u32 = stats.per_layer.iter().map(|l| l.af_cost.lin).sum();
+        assert!(lin > 0, "GELU should engage the small multipliers");
+    }
+
+    #[test]
+    fn vit_tiny_macs_in_published_range() {
+        let t = vit_tiny_mlp_trace();
+        // ViT-Tiny MLP blocks: 12 * 197 * 2 * 4 * 192² ≈ 0.70 GMACs
+        let gmacs = t.total_macs() as f64 / 1e9;
+        assert!((0.6..=0.8).contains(&gmacs), "vit-tiny MLP GMACs = {gmacs}");
+        assert_eq!(t.compute_layers(), 25, "24 MLP denses + head");
+    }
+
+    #[test]
+    fn trace_simulates_on_the_engine() {
+        let t = vit_tiny_mlp_trace();
+        let policy = PolicyTable::uniform(
+            t.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        );
+        let r = VectorEngine::new(EngineConfig::pe256()).run_trace(&t, &policy);
+        assert_eq!(r.per_layer.len(), t.layers.len());
+        assert!(r.total_cycles > 0);
+        assert!(r.mean_pe_utilization() > 0.9, "MLP blocks should saturate the lanes");
+    }
+}

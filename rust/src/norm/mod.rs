@@ -1,0 +1,185 @@
+//! Normalisation block (paper §II-E: "integrated pooling and normalisation
+//! blocks process partial sums before output generation").
+//!
+//! Two CORDIC-friendly normalisers are provided:
+//!
+//! * [`aad_normalize`] — centre by the running mean and scale by the AAD
+//!   dispersion measure (pairs naturally with the AAD pooling unit and
+//!   avoids the square root a variance-based normaliser would need);
+//! * [`batch_norm_inference`] — frozen-statistics batch norm, i.e. a
+//!   per-channel affine `y = g*x + b` folded at deployment time, executed
+//!   on the linear CORDIC datapath (one multiply + one add per element).
+
+use crate::cordic::{linear, CordicResult, GUARD_FRAC, ONE};
+
+/// Cycle cost of a normalisation pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NormCost {
+    /// Adder cycles (mean/AAD accumulation).
+    pub add_cycles: u32,
+    /// LV division cycles.
+    pub div_cycles: u32,
+    /// Linear-rotation multiply cycles.
+    pub mul_cycles: u32,
+}
+
+impl NormCost {
+    /// Total cycles.
+    pub fn total(&self) -> u32 {
+        self.add_cycles + self.div_cycles + self.mul_cycles
+    }
+}
+
+/// AAD-based normalisation: `y_i = (x_i - mean) / (aad + eps)` where `aad`
+/// is the mean absolute deviation *from the mean* (the register-accumulated
+/// form of the sliding-window unit).
+///
+/// Returns normalised values (guard format) + cost.
+pub fn aad_normalize(xs: &[i64], div_iters: u32) -> (Vec<i64>, NormCost) {
+    assert!(!xs.is_empty(), "normalise of empty slice");
+    let n = xs.len() as i64;
+    let mut cost = NormCost { add_cycles: 2 * (xs.len() as u32 - 1) + 2, ..Default::default() };
+
+    let sum: i64 = xs.iter().sum();
+    let mean = div_by_int(sum, n, div_iters, &mut cost);
+
+    let dev_sum: i64 = xs.iter().map(|&x| (x - mean).abs()).sum();
+    let aad = div_by_int(dev_sum, n, div_iters, &mut cost);
+    let denom = aad + (ONE >> 8); // eps = 2^-8 keeps the divider in range
+
+    let ys = xs
+        .iter()
+        .map(|&x| {
+            let r: CordicResult = linear::divide(x - mean, denom, div_iters);
+            cost.div_cycles += r.cycles;
+            r.value
+        })
+        .collect();
+    (ys, cost)
+}
+
+/// Frozen batch-norm: `y = gamma * x + beta` per element, gamma/beta in
+/// guard format, multiply on the linear CORDIC path with `mul_iters`.
+pub fn batch_norm_inference(
+    xs: &[i64],
+    gamma: i64,
+    beta: i64,
+    mul_iters: u32,
+) -> (Vec<i64>, NormCost) {
+    let mut cost = NormCost::default();
+    let ys = xs
+        .iter()
+        .map(|&x| {
+            let r = linear::mac(beta, x, gamma, mul_iters);
+            cost.mul_cycles += r.cycles;
+            r.value
+        })
+        .collect();
+    (ys, cost)
+}
+
+/// f64 reference for [`aad_normalize`].
+pub fn reference_aad_normalize(xs: &[f64]) -> Vec<f64> {
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let aad = xs.iter().map(|x| (x - mean).abs()).sum::<f64>() / n;
+    let denom = aad + 2f64.powi(-(8i32));
+    xs.iter().map(|x| (x - mean) / denom).collect()
+}
+
+/// Divide by a small integer: shifter when a power of two, LV otherwise.
+fn div_by_int(v: i64, n: i64, iters: u32, cost: &mut NormCost) -> i64 {
+    debug_assert!(n > 0);
+    if n.count_ones() == 1 {
+        cost.div_cycles += 1;
+        v >> n.trailing_zeros()
+    } else {
+        let r = linear::divide(v, n << GUARD_FRAC, iters);
+        cost.div_cycles += r.cycles;
+        r.value
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::{from_guard, to_guard};
+    use crate::testutil::{check_prop, max_abs_diff};
+
+    #[test]
+    fn aad_normalize_matches_reference() {
+        let vals = [1.0, -0.5, 2.0, 0.25, -1.75, 0.5];
+        let raw: Vec<i64> = vals.iter().map(|&v| to_guard(v)).collect();
+        let (ys, cost) = aad_normalize(&raw, 26);
+        let got: Vec<f64> = ys.iter().map(|&y| from_guard(y)).collect();
+        let want = reference_aad_normalize(&vals);
+        assert!(max_abs_diff(&got, &want) < 5e-3, "got {got:?} want {want:?}");
+        assert!(cost.div_cycles > 0);
+    }
+
+    #[test]
+    fn normalized_output_has_zero_mean() {
+        let vals = [3.0, 4.0, 5.0, 6.0];
+        let raw: Vec<i64> = vals.iter().map(|&v| to_guard(v)).collect();
+        let (ys, _) = aad_normalize(&raw, 26);
+        let mean: f64 = ys.iter().map(|&y| from_guard(y)).sum::<f64>() / 4.0;
+        assert!(mean.abs() < 1e-3, "mean {mean}");
+    }
+
+    #[test]
+    fn batch_norm_is_affine() {
+        let raw: Vec<i64> = [1.0, -2.0, 0.5].iter().map(|&v| to_guard(v)).collect();
+        let (ys, cost) = batch_norm_inference(&raw, to_guard(1.5), to_guard(0.25), 24);
+        let got: Vec<f64> = ys.iter().map(|&y| from_guard(y)).collect();
+        for (g, x) in got.iter().zip([1.0, -2.0, 0.5]) {
+            assert!((g - (1.5 * x + 0.25)).abs() < 1e-4, "bn({x}) = {g}");
+        }
+        assert!(cost.mul_cycles > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_input_panics() {
+        aad_normalize(&[], 8);
+    }
+
+    #[test]
+    fn prop_constant_input_normalises_to_zero() {
+        check_prop("constant vector -> all zeros", |rng| {
+            let c = rng.uniform(-4.0, 4.0);
+            let n = rng.int_in(2, 16) as usize;
+            let raw = vec![to_guard(c); n];
+            let (ys, _) = aad_normalize(&raw, 26);
+            for &y in &ys {
+                if from_guard(y).abs() > 1e-3 {
+                    return Err(format!("constant {c} -> {}", from_guard(y)));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_output_dispersion_is_unit() {
+        check_prop("post-norm AAD ~ 1", |rng| {
+            let n = rng.int_in(4, 16) as usize;
+            let vals: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            // skip near-constant draws (eps dominates)
+            let mean = vals.iter().sum::<f64>() / n as f64;
+            let disp = vals.iter().map(|v| (v - mean).abs()).sum::<f64>() / n as f64;
+            if disp < 0.05 {
+                return Ok(());
+            }
+            let raw: Vec<i64> = vals.iter().map(|&v| to_guard(v)).collect();
+            let (ys, _) = aad_normalize(&raw, 26);
+            let got: Vec<f64> = ys.iter().map(|&y| from_guard(y)).collect();
+            let gm = got.iter().sum::<f64>() / n as f64;
+            let gd = got.iter().map(|v| (v - gm).abs()).sum::<f64>() / n as f64;
+            if (gd - 1.0).abs() < 0.05 {
+                Ok(())
+            } else {
+                Err(format!("post-norm dispersion {gd}"))
+            }
+        });
+    }
+}

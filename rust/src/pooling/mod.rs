@@ -1,0 +1,250 @@
+//! Pooling blocks: AAD (Absolute Average Deviation) pooling (paper §III-C,
+//! Figs. 6–9) plus conventional max/average pooling baselines.
+//!
+//! AAD pooling replaces max/avg with the mean pairwise absolute deviation of
+//! the window — chosen by the paper for its "favourable accuracy
+//! characteristics for CORDIC-based computation" (0.5–1 % accuracy gain at
+//! lower complexity, after [26]). Three hardware organisations are modelled:
+//!
+//! * [`sa_module`] — the two-input subtraction-absolute unit of Fig. 6
+//!   (subtract → sign-compare + buffer → multiply → halve);
+//! * [`aad_parallel`] — Fig. 8/9: all pairs in parallel SA modules, adder
+//!   network, normalisation by `M = N(N-1)`;
+//! * [`AadSlidingWindow`] — Fig. 7: a window sliding with a configurable
+//!   stride, deviations accumulated in registers then normalised.
+
+pub mod sliding;
+
+pub use sliding::{AadSlidingWindow, Pool2dConfig};
+
+use crate::cordic::{linear, CordicResult};
+
+/// Cycle cost of a pooling evaluation (for the engine timing model).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolCost {
+    /// Subtract/compare/buffer cycles in the SA modules.
+    pub sa_cycles: u32,
+    /// Adder-network cycles.
+    pub add_cycles: u32,
+    /// Division (LV datapath) cycles.
+    pub div_cycles: u32,
+}
+
+impl PoolCost {
+    /// Total cycles.
+    pub fn total(&self) -> u32 {
+        self.sa_cycles + self.add_cycles + self.div_cycles
+    }
+
+    /// Merge two costs.
+    pub fn merge(self, o: PoolCost) -> PoolCost {
+        PoolCost {
+            sa_cycles: self.sa_cycles + o.sa_cycles,
+            add_cycles: self.add_cycles + o.add_cycles,
+            div_cycles: self.div_cycles + o.div_cycles,
+        }
+    }
+}
+
+/// Two-input SA module (Fig. 6): returns `|a - b| / 2`.
+///
+/// Faithful to the datapath: difference → (comparator sign ±1) × (buffered
+/// difference) → halve. The sign multiply is a conditional negate in
+/// hardware; we model it as such (no CORDIC involvement).
+pub fn sa_module(a: i64, b: i64) -> (i64, PoolCost) {
+    let diff = a - b;
+    let sign: i64 = if diff >= 0 { 1 } else { -1 };
+    let abs = sign * diff; // comparator output × buffered difference
+    // subtract(1) + compare/buffer(1) + multiply-by-sign(1) + halve(shift, 0)
+    (abs >> 1, PoolCost { sa_cycles: 3, ..Default::default() })
+}
+
+/// Parallel multi-input AAD (Figs. 8–9): mean pairwise absolute deviation
+/// `sum_{i<j} |x_i - x_j| / M`, `M = N(N-1)` (each unordered pair's
+/// deviation effectively counted twice, matching the paper's normaliser).
+///
+/// `div_iters` is the CORDIC LV budget for the final normalisation.
+pub fn aad_parallel(xs: &[i64], div_iters: u32) -> (i64, PoolCost) {
+    let n = xs.len();
+    assert!(n >= 2, "AAD needs at least two inputs");
+    let mut cost = PoolCost::default();
+    let mut sum: i64 = 0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let (d, c) = sa_module(xs[i], xs[j]);
+            // sa_module halves: d = |xi-xj|/2. The ordered-pair sum the
+            // paper normalises by M = N(N-1) counts each unordered pair
+            // twice, so each SA output contributes 2*|xi-xj| = 4d.
+            sum += 4 * d;
+            cost = cost.merge(c);
+        }
+    }
+    // adder network: ceil(log2(pairs)) levels
+    let pairs = (n * (n - 1) / 2) as u32;
+    cost.add_cycles += 32 - pairs.leading_zeros();
+    // normalise by M = N(N-1): power-of-two M uses the shifter, otherwise
+    // the LV divider
+    let m = (n * (n - 1)) as i64;
+    let value = if m.count_ones() == 1 {
+        sum >> m.trailing_zeros()
+    } else {
+        let r: CordicResult = linear::divide(sum, m << crate::cordic::GUARD_FRAC, div_iters);
+        cost.div_cycles += r.cycles;
+        r.value
+    };
+    // when M is a power of two the divide is free (barrel shift)
+    if m.count_ones() == 1 {
+        // one shift cycle
+        cost.div_cycles += 1;
+    }
+    (value, cost)
+}
+
+/// f64 reference AAD: `sum_{i != j} |x_i - x_j| / (N(N-1))`.
+pub fn reference_aad(xs: &[f64]) -> f64 {
+    let n = xs.len();
+    assert!(n >= 2);
+    let mut sum = 0.0;
+    for i in 0..n {
+        for j in 0..n {
+            if i != j {
+                sum += (xs[i] - xs[j]).abs();
+            }
+        }
+    }
+    sum / (n * (n - 1)) as f64
+}
+
+/// Max-pooling baseline (compare tree; for accuracy comparisons).
+pub fn max_pool(xs: &[i64]) -> (i64, PoolCost) {
+    assert!(!xs.is_empty());
+    let m = *xs.iter().max().unwrap();
+    (m, PoolCost { sa_cycles: xs.len() as u32 - 1, ..Default::default() })
+}
+
+/// Average-pooling baseline.
+pub fn avg_pool(xs: &[i64], div_iters: u32) -> (i64, PoolCost) {
+    assert!(!xs.is_empty());
+    let sum: i64 = xs.iter().sum();
+    let n = xs.len() as i64;
+    if n.count_ones() == 1 {
+        (
+            sum >> n.trailing_zeros(),
+            PoolCost { add_cycles: xs.len() as u32 - 1, div_cycles: 1, ..Default::default() },
+        )
+    } else {
+        let r = linear::divide(sum, n << crate::cordic::GUARD_FRAC, div_iters);
+        (
+            r.value,
+            PoolCost {
+                add_cycles: xs.len() as u32 - 1,
+                div_cycles: r.cycles,
+                ..Default::default()
+            },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::{from_guard, to_guard};
+    use crate::testutil::check_prop;
+
+    #[test]
+    fn sa_module_is_half_abs_diff() {
+        let (v, c) = sa_module(to_guard(3.0), to_guard(1.0));
+        assert!((from_guard(v) - 1.0).abs() < 1e-6);
+        assert_eq!(c.sa_cycles, 3);
+        // order-independent
+        let (v2, _) = sa_module(to_guard(1.0), to_guard(3.0));
+        assert_eq!(v, v2);
+    }
+
+    #[test]
+    fn aad_two_inputs_matches_reference() {
+        let xs = [to_guard(3.0), to_guard(1.0)];
+        let (v, _) = aad_parallel(&xs, 24);
+        // reference: (|3-1| + |1-3|) / 2 = 2
+        assert!((from_guard(v) - 2.0).abs() < 1e-4, "got {}", from_guard(v));
+    }
+
+    #[test]
+    fn aad_matches_reference_various_sizes() {
+        for n in [2usize, 3, 4, 5, 8] {
+            let vals: Vec<f64> = (0..n).map(|i| (i as f64) * 0.5 - 1.0).collect();
+            let raw: Vec<i64> = vals.iter().map(|&v| to_guard(v)).collect();
+            let (v, _) = aad_parallel(&raw, 26);
+            let want = reference_aad(&vals);
+            assert!(
+                (from_guard(v) - want).abs() < 2e-3 * (1.0 + want),
+                "n={n}: got {} want {want}",
+                from_guard(v)
+            );
+        }
+    }
+
+    #[test]
+    fn power_of_two_m_uses_shift() {
+        // n=2 -> M=2: shift path, div_cycles == 1
+        let (_, c) = aad_parallel(&[to_guard(1.0), to_guard(0.0)], 24);
+        assert_eq!(c.div_cycles, 1);
+        // n=3 -> M=6: LV divider engaged
+        let (_, c3) = aad_parallel(&[to_guard(1.0), to_guard(0.0), to_guard(2.0)], 24);
+        assert!(c3.div_cycles > 1);
+    }
+
+    #[test]
+    fn max_and_avg_baselines() {
+        let xs: Vec<i64> = [1.0, 4.0, 2.0, 3.0].iter().map(|&v| to_guard(v)).collect();
+        let (m, _) = max_pool(&xs);
+        assert!((from_guard(m) - 4.0).abs() < 1e-9);
+        let (a, _) = avg_pool(&xs, 24);
+        assert!((from_guard(a) - 2.5).abs() < 1e-4);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least two")]
+    fn aad_single_input_panics() {
+        aad_parallel(&[to_guard(1.0)], 8);
+    }
+
+    #[test]
+    fn prop_aad_nonnegative_and_shift_invariant() {
+        check_prop("AAD >= 0 and invariant to constant shift", |rng| {
+            let n = rng.int_in(2, 8) as usize;
+            let vals: Vec<f64> = (0..n).map(|_| rng.uniform(-2.0, 2.0)).collect();
+            let shift = rng.uniform(-1.0, 1.0);
+            let raw: Vec<i64> = vals.iter().map(|&v| to_guard(v)).collect();
+            let raws: Vec<i64> = vals.iter().map(|&v| to_guard(v + shift)).collect();
+            let (a, _) = aad_parallel(&raw, 26);
+            let (b, _) = aad_parallel(&raws, 26);
+            if from_guard(a) < -1e-9 {
+                return Err(format!("negative AAD {}", from_guard(a)));
+            }
+            if (from_guard(a) - from_guard(b)).abs() > 2e-3 {
+                return Err(format!("not shift invariant: {} vs {}", from_guard(a), from_guard(b)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_aad_scales_linearly() {
+        check_prop("AAD(c*x) == |c| * AAD(x)", |rng| {
+            let n = rng.int_in(2, 6) as usize;
+            let vals: Vec<f64> = (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect();
+            let c = rng.uniform(0.25, 2.0);
+            let raw: Vec<i64> = vals.iter().map(|&v| to_guard(v)).collect();
+            let scaled: Vec<i64> = vals.iter().map(|&v| to_guard(v * c)).collect();
+            let (a, _) = aad_parallel(&raw, 26);
+            let (b, _) = aad_parallel(&scaled, 26);
+            let want = from_guard(a) * c;
+            if (from_guard(b) - want).abs() < 5e-3 * (1.0 + want) {
+                Ok(())
+            } else {
+                Err(format!("scale {c}: {} vs {want}", from_guard(b)))
+            }
+        });
+    }
+}

@@ -1,0 +1,180 @@
+//! Sliding-window AAD pooling over 2-D feature maps (paper Fig. 7).
+//!
+//! "A sliding window technique, in which a window moves over the input data
+//! with a specified stride and pooling size, is used to simplify the
+//! hardware. Within each window, deviations between data points are
+//! computed, accumulated in registers, and normalised."
+
+use super::{aad_parallel, avg_pool, max_pool, PoolCost};
+
+/// 2-D pooling configuration.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pool2dConfig {
+    /// Window height/width (square windows, like the paper's examples).
+    pub window: usize,
+    /// Stride in both dimensions.
+    pub stride: usize,
+}
+
+impl Pool2dConfig {
+    /// Output dimension for an input dimension (no padding; floor mode).
+    pub fn out_dim(&self, in_dim: usize) -> usize {
+        if in_dim < self.window {
+            0
+        } else {
+            (in_dim - self.window) / self.stride + 1
+        }
+    }
+}
+
+/// Pooling operator selection for the sliding engine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    /// Absolute-average-deviation pooling (the paper's unit).
+    Aad,
+    /// Max pooling (baseline).
+    Max,
+    /// Average pooling (baseline).
+    Avg,
+}
+
+/// The sliding-window pooling engine over a row-major `h × w` channel.
+#[derive(Debug, Clone)]
+pub struct AadSlidingWindow {
+    config: Pool2dConfig,
+    kind: PoolKind,
+    div_iters: u32,
+    cost: PoolCost,
+}
+
+impl AadSlidingWindow {
+    /// New engine.
+    pub fn new(config: Pool2dConfig, kind: PoolKind, div_iters: u32) -> Self {
+        assert!(config.window >= 1 && config.stride >= 1, "degenerate pooling config");
+        AadSlidingWindow { config, kind, div_iters, cost: PoolCost::default() }
+    }
+
+    /// Pool one channel (guard-format words, row-major `h × w`).
+    /// Returns the pooled channel (row-major `oh × ow`).
+    pub fn pool_channel(&mut self, data: &[i64], h: usize, w: usize) -> Vec<i64> {
+        assert_eq!(data.len(), h * w, "channel shape mismatch");
+        let oh = self.config.out_dim(h);
+        let ow = self.config.out_dim(w);
+        let mut out = Vec::with_capacity(oh * ow);
+        let mut window = Vec::with_capacity(self.config.window * self.config.window);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                window.clear();
+                let (y0, x0) = (oy * self.config.stride, ox * self.config.stride);
+                for dy in 0..self.config.window {
+                    for dx in 0..self.config.window {
+                        window.push(data[(y0 + dy) * w + (x0 + dx)]);
+                    }
+                }
+                let (v, c) = match self.kind {
+                    PoolKind::Aad => {
+                        if window.len() >= 2 {
+                            aad_parallel(&window, self.div_iters)
+                        } else {
+                            (window[0], PoolCost::default())
+                        }
+                    }
+                    PoolKind::Max => max_pool(&window),
+                    PoolKind::Avg => avg_pool(&window, self.div_iters),
+                };
+                self.cost = self.cost.merge(c);
+                out.push(v);
+            }
+        }
+        out
+    }
+
+    /// Cumulative cost since construction.
+    pub fn total_cost(&self) -> PoolCost {
+        self.cost
+    }
+
+    /// The configuration.
+    pub fn config(&self) -> Pool2dConfig {
+        self.config
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::{from_guard, to_guard};
+    use crate::pooling::reference_aad;
+
+    fn guard_grid(vals: &[f64]) -> Vec<i64> {
+        vals.iter().map(|&v| to_guard(v)).collect()
+    }
+
+    #[test]
+    fn out_dims_floor_mode() {
+        let c = Pool2dConfig { window: 2, stride: 2 };
+        assert_eq!(c.out_dim(4), 2);
+        assert_eq!(c.out_dim(5), 2);
+        assert_eq!(c.out_dim(1), 0);
+        let c = Pool2dConfig { window: 3, stride: 1 };
+        assert_eq!(c.out_dim(5), 3);
+    }
+
+    #[test]
+    fn max_pool_2x2_stride_2() {
+        let data = guard_grid(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0, 11.0, 12.0,
+            13.0, 14.0, 15.0, 16.0]);
+        let mut eng =
+            AadSlidingWindow::new(Pool2dConfig { window: 2, stride: 2 }, PoolKind::Max, 20);
+        let out = eng.pool_channel(&data, 4, 4);
+        let got: Vec<f64> = out.iter().map(|&v| from_guard(v)).collect();
+        assert_eq!(got, vec![6.0, 8.0, 14.0, 16.0]);
+    }
+
+    #[test]
+    fn aad_pool_matches_reference_per_window() {
+        let vals = [0.5, -1.0, 2.0, 0.0, 1.5, -0.5, 0.25, 1.0, -2.0, 0.75, 0.1, -0.1, 1.0, 0.0,
+            0.5, -0.25];
+        let data = guard_grid(&vals);
+        let mut eng =
+            AadSlidingWindow::new(Pool2dConfig { window: 2, stride: 2 }, PoolKind::Aad, 26);
+        let out = eng.pool_channel(&data, 4, 4);
+        // reference window 0: elements (0,0),(0,1),(1,0),(1,1)
+        let w0 = [vals[0], vals[1], vals[4], vals[5]];
+        let want = reference_aad(&w0);
+        assert!(
+            (from_guard(out[0]) - want).abs() < 5e-3,
+            "got {} want {want}",
+            from_guard(out[0])
+        );
+        assert_eq!(out.len(), 4);
+    }
+
+    #[test]
+    fn overlapping_stride_one() {
+        let data = guard_grid(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0]);
+        let mut eng =
+            AadSlidingWindow::new(Pool2dConfig { window: 2, stride: 1 }, PoolKind::Max, 20);
+        let out = eng.pool_channel(&data, 3, 3);
+        let got: Vec<f64> = out.iter().map(|&v| from_guard(v)).collect();
+        assert_eq!(got, vec![5.0, 6.0, 8.0, 9.0]);
+    }
+
+    #[test]
+    fn cost_accumulates_across_windows() {
+        let data = guard_grid(&[0.0; 16]);
+        let mut eng =
+            AadSlidingWindow::new(Pool2dConfig { window: 2, stride: 2 }, PoolKind::Aad, 20);
+        eng.pool_channel(&data, 4, 4);
+        assert!(eng.total_cost().total() > 0);
+        assert!(eng.total_cost().sa_cycles > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn shape_mismatch_panics() {
+        let mut eng =
+            AadSlidingWindow::new(Pool2dConfig { window: 2, stride: 2 }, PoolKind::Max, 20);
+        eng.pool_channel(&[0i64; 10], 4, 4);
+    }
+}

@@ -1,0 +1,92 @@
+//! Quantisation and mixed-precision policy.
+//!
+//! Post-training quantisation of FP32 tensors into the datapath formats,
+//! plus the paper's **accuracy-sensitivity heuristic** (§II-B, §IV-A): rank
+//! layers by how much end-to-end accuracy degrades when *that* layer runs in
+//! approximate mode, then assign accurate mode to the most sensitive layers
+//! under a latency budget.
+
+mod policy;
+mod quantizer;
+mod sensitivity;
+
+pub use policy::{LayerPolicy, PolicyTable};
+pub use quantizer::{dequantize_vec, quantize_vec, QuantStats};
+pub use sensitivity::{all_approximate, assign_modes, describe, SensitivityReport};
+
+use crate::fxp::{Format, FXP16, FXP4, FXP8};
+
+/// The paper's supported operand precisions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// 4-bit fixed point (Q1.2) — accurate mode only.
+    Fxp4,
+    /// 8-bit fixed point (Q3.4).
+    Fxp8,
+    /// 16-bit fixed point (Q7.8).
+    Fxp16,
+}
+
+impl Precision {
+    /// All supported precisions, narrowest first.
+    pub const ALL: [Precision; 3] = [Precision::Fxp4, Precision::Fxp8, Precision::Fxp16];
+
+    /// The word format for this precision.
+    pub fn format(&self) -> Format {
+        match self {
+            Precision::Fxp4 => FXP4,
+            Precision::Fxp8 => FXP8,
+            Precision::Fxp16 => FXP16,
+        }
+    }
+
+    /// Word width in bits.
+    pub fn bits(&self) -> u32 {
+        self.format().total_bits
+    }
+
+    /// Parse from a CLI string like "fxp8" / "8".
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s.to_ascii_lowercase().as_str() {
+            "fxp4" | "4" => Some(Precision::Fxp4),
+            "fxp8" | "8" => Some(Precision::Fxp8),
+            "fxp16" | "16" => Some(Precision::Fxp16),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Precision::Fxp4 => write!(f, "FxP-4"),
+            Precision::Fxp8 => write!(f, "FxP-8"),
+            Precision::Fxp16 => write!(f, "FxP-16"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_formats() {
+        assert_eq!(Precision::Fxp4.bits(), 4);
+        assert_eq!(Precision::Fxp8.bits(), 8);
+        assert_eq!(Precision::Fxp16.bits(), 16);
+    }
+
+    #[test]
+    fn precision_parse() {
+        assert_eq!(Precision::parse("fxp8"), Some(Precision::Fxp8));
+        assert_eq!(Precision::parse("16"), Some(Precision::Fxp16));
+        assert_eq!(Precision::parse("FXP4"), Some(Precision::Fxp4));
+        assert_eq!(Precision::parse("fp32"), None);
+    }
+
+    #[test]
+    fn display_matches_paper_names() {
+        assert_eq!(format!("{}", Precision::Fxp8), "FxP-8");
+    }
+}

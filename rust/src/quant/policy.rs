@@ -1,0 +1,123 @@
+//! Per-layer precision/mode policy table — the configuration registers the
+//! control engine programs before each layer (paper §II-B).
+
+use super::Precision;
+use crate::cordic::mac::{ExecMode, MacConfig};
+
+/// The runtime configuration of one layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerPolicy {
+    /// Layer index within the network.
+    pub layer: usize,
+    /// Operand precision for this layer.
+    pub precision: Precision,
+    /// Approximate vs accurate CORDIC budget.
+    pub mode: ExecMode,
+}
+
+impl LayerPolicy {
+    /// The MAC configuration this policy programs.
+    pub fn mac_config(&self) -> MacConfig {
+        MacConfig::new(self.precision, self.mode)
+    }
+
+    /// Cycles per MAC under this policy.
+    pub fn cycles_per_mac(&self) -> u32 {
+        self.mac_config().cycles_per_mac()
+    }
+}
+
+/// A whole-network policy: one entry per layer, in order.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct PolicyTable {
+    entries: Vec<LayerPolicy>,
+}
+
+impl PolicyTable {
+    /// Uniform policy: every layer identical.
+    pub fn uniform(layers: usize, precision: Precision, mode: ExecMode) -> Self {
+        PolicyTable {
+            entries: (0..layers).map(|layer| LayerPolicy { layer, precision, mode }).collect(),
+        }
+    }
+
+    /// Build from explicit entries (must be densely indexed 0..n).
+    pub fn from_entries(entries: Vec<LayerPolicy>) -> Self {
+        for (i, e) in entries.iter().enumerate() {
+            assert_eq!(e.layer, i, "policy entries must be densely indexed");
+        }
+        PolicyTable { entries }
+    }
+
+    /// Number of layers covered.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True if no layers.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Policy for one layer.
+    pub fn layer(&self, idx: usize) -> LayerPolicy {
+        self.entries[idx]
+    }
+
+    /// Mutable access (the sensitivity assigner edits modes in place).
+    pub fn layer_mut(&mut self, idx: usize) -> &mut LayerPolicy {
+        &mut self.entries[idx]
+    }
+
+    /// Iterate entries in layer order.
+    pub fn iter(&self) -> impl Iterator<Item = &LayerPolicy> {
+        self.entries.iter()
+    }
+
+    /// Total MAC-cycle cost for a network whose layer `i` performs
+    /// `macs[i]` MAC operations (the policy's latency proxy).
+    pub fn total_mac_cycles(&self, macs: &[u64]) -> u64 {
+        assert_eq!(macs.len(), self.entries.len(), "macs/layers mismatch");
+        self.entries
+            .iter()
+            .zip(macs)
+            .map(|(p, &m)| m * p.cycles_per_mac() as u64)
+            .sum()
+    }
+
+    /// Count of layers in accurate mode.
+    pub fn accurate_layers(&self) -> usize {
+        self.entries.iter().filter(|e| e.mode == ExecMode::Accurate).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_policy_covers_all_layers() {
+        let p = PolicyTable::uniform(4, Precision::Fxp8, ExecMode::Approximate);
+        assert_eq!(p.len(), 4);
+        assert!(p.iter().all(|e| e.mode == ExecMode::Approximate));
+        assert_eq!(p.accurate_layers(), 0);
+    }
+
+    #[test]
+    fn total_cycles_uses_mode_table() {
+        let mut p = PolicyTable::uniform(2, Precision::Fxp8, ExecMode::Approximate);
+        p.layer_mut(1).mode = ExecMode::Accurate;
+        // layer0: 10 macs * 4 cyc, layer1: 10 macs * 5 cyc
+        assert_eq!(p.total_mac_cycles(&[10, 10]), 40 + 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "densely indexed")]
+    fn sparse_entries_rejected() {
+        PolicyTable::from_entries(vec![LayerPolicy {
+            layer: 3,
+            precision: Precision::Fxp8,
+            mode: ExecMode::Accurate,
+        }]);
+    }
+}

@@ -1,0 +1,116 @@
+//! Post-training quantisation of FP32 vectors into datapath formats.
+
+use super::Precision;
+use crate::fxp::{Fxp, Rounding};
+
+/// Statistics of a quantisation pass (for reporting and for the sensitivity
+/// heuristic's cheap proxy signal).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantStats {
+    /// Number of elements quantised.
+    pub count: usize,
+    /// Number of elements that saturated at the format bounds.
+    pub saturated: usize,
+    /// Max absolute quantisation error.
+    pub max_err: f64,
+    /// Root-mean-square quantisation error.
+    pub rmse: f64,
+}
+
+impl QuantStats {
+    /// Fraction of elements that saturated.
+    pub fn saturation_rate(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.saturated as f64 / self.count as f64
+        }
+    }
+}
+
+/// Quantise a float vector into `precision`, returning values + stats.
+pub fn quantize_vec(values: &[f64], precision: Precision) -> (Vec<Fxp>, QuantStats) {
+    let fmt = precision.format();
+    let mut saturated = 0usize;
+    let mut max_err = 0f64;
+    let mut sq_sum = 0f64;
+    let out: Vec<Fxp> = values
+        .iter()
+        .map(|&v| {
+            let q = Fxp::from_f64_round(v, fmt, Rounding::NearestEven);
+            if v > fmt.max_value() || v < fmt.min_value() {
+                saturated += 1;
+            }
+            let e = q.error_vs(v);
+            max_err = max_err.max(e);
+            sq_sum += e * e;
+            q
+        })
+        .collect();
+    let rmse = if values.is_empty() { 0.0 } else { (sq_sum / values.len() as f64).sqrt() };
+    (out, QuantStats { count: values.len(), saturated, max_err, rmse })
+}
+
+/// Dequantise back to f64.
+pub fn dequantize_vec(values: &[Fxp]) -> Vec<f64> {
+    values.iter().map(|v| v.to_f64()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testutil::{check_prop, Xoshiro256};
+
+    #[test]
+    fn in_range_values_have_small_error() {
+        let vals = vec![0.5, -0.25, 0.75, -0.9];
+        let (q, stats) = quantize_vec(&vals, Precision::Fxp8);
+        assert_eq!(q.len(), 4);
+        assert_eq!(stats.saturated, 0);
+        assert!(stats.max_err <= Precision::Fxp8.format().epsilon());
+    }
+
+    #[test]
+    fn saturation_is_counted() {
+        let vals = vec![2.0, -2.0, 0.0];
+        let (_, stats) = quantize_vec(&vals, Precision::Fxp8);
+        assert_eq!(stats.saturated, 2);
+        assert!((stats.saturation_rate() - 2.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_vec_is_fine() {
+        let (q, stats) = quantize_vec(&[], Precision::Fxp16);
+        assert!(q.is_empty());
+        assert_eq!(stats.count, 0);
+        assert_eq!(stats.rmse, 0.0);
+    }
+
+    #[test]
+    fn wider_formats_have_lower_rmse() {
+        let mut rng = Xoshiro256::new(5);
+        let vals = rng.uniform_vec(1000, -0.95, 0.95);
+        let (_, s4) = quantize_vec(&vals, Precision::Fxp4);
+        let (_, s8) = quantize_vec(&vals, Precision::Fxp8);
+        let (_, s16) = quantize_vec(&vals, Precision::Fxp16);
+        assert!(s16.rmse < s8.rmse);
+        assert!(s8.rmse < s4.rmse);
+    }
+
+    #[test]
+    fn prop_roundtrip_error_half_lsb() {
+        check_prop("quantise roundtrip error <= 0.5 LSB (nearest)", |rng| {
+            let p = Precision::ALL[rng.index(3)];
+            let fmt = p.format();
+            let vals = vec![rng.uniform(fmt.min_value(), fmt.max_value())];
+            let (q, _) = quantize_vec(&vals, p);
+            let back = dequantize_vec(&q);
+            let err = (back[0] - vals[0]).abs();
+            if err <= 0.5 * fmt.epsilon() + 1e-12 {
+                Ok(())
+            } else {
+                Err(format!("{p}: err {err} > half-LSB"))
+            }
+        });
+    }
+}

@@ -1,0 +1,170 @@
+//! The accuracy-sensitivity heuristic (paper §II-B / §IV-A).
+//!
+//! "The number of CORDIC iterations per layer is selected using an
+//! accuracy-sensitivity heuristic, which identifies numerically critical
+//! layers and assigns them to accurate execution modes, while non-critical
+//! layers operate in approximate mode."
+//!
+//! Implementation: measure, for each layer `i`, the end-to-end accuracy when
+//! *only* layer `i` runs approximate (all others accurate). The drop versus
+//! the all-accurate baseline is that layer's sensitivity. Layers are then
+//! switched to approximate mode greedily in ascending-sensitivity order
+//! while the projected accuracy drop stays within `max_drop`.
+//!
+//! The evaluator is passed as a closure so the heuristic is reusable across
+//! the Rust network evaluator, the simulator, and tests with synthetic
+//! accuracy surfaces.
+
+use super::{PolicyTable, Precision};
+use crate::cordic::mac::ExecMode;
+
+/// Outcome of a sensitivity analysis.
+#[derive(Debug, Clone)]
+pub struct SensitivityReport {
+    /// Accuracy with every layer accurate.
+    pub baseline_accuracy: f64,
+    /// Per-layer accuracy drop when that layer alone is approximate.
+    pub per_layer_drop: Vec<f64>,
+    /// The selected policy.
+    pub policy: PolicyTable,
+    /// Projected accuracy under the selected policy (sum-of-drops model).
+    pub projected_accuracy: f64,
+    /// Number of evaluator invocations spent.
+    pub evals: usize,
+}
+
+/// Run the heuristic.
+///
+/// * `layers` — number of layers.
+/// * `precision` — operand precision (fixed across layers here; the paper
+///   also varies it, which callers do by re-running per precision).
+/// * `max_drop` — maximum tolerated end-to-end accuracy drop vs baseline
+///   (e.g. 0.02 for the paper's ≈2 % approximate operating point).
+/// * `eval` — returns end-to-end accuracy (higher is better) for a policy.
+pub fn assign_modes<F>(
+    layers: usize,
+    precision: Precision,
+    max_drop: f64,
+    mut eval: F,
+) -> SensitivityReport
+where
+    F: FnMut(&PolicyTable) -> f64,
+{
+    assert!(layers > 0, "assign_modes: zero layers");
+    let mut evals = 0usize;
+
+    let accurate = PolicyTable::uniform(layers, precision, ExecMode::Accurate);
+    let baseline = eval(&accurate);
+    evals += 1;
+
+    // Leave-one-approximate probes.
+    let mut drops = Vec::with_capacity(layers);
+    for i in 0..layers {
+        let mut probe = accurate.clone();
+        probe.layer_mut(i).mode = ExecMode::Approximate;
+        let acc = eval(&probe);
+        evals += 1;
+        drops.push((baseline - acc).max(0.0));
+    }
+
+    // Greedy: flip least-sensitive layers to approximate while the additive
+    // drop model stays within budget.
+    let mut order: Vec<usize> = (0..layers).collect();
+    order.sort_by(|&a, &b| drops[a].partial_cmp(&drops[b]).unwrap());
+    let mut policy = accurate.clone();
+    let mut projected_drop = 0.0;
+    for &i in &order {
+        if projected_drop + drops[i] <= max_drop {
+            policy.layer_mut(i).mode = ExecMode::Approximate;
+            projected_drop += drops[i];
+        }
+    }
+
+    SensitivityReport {
+        baseline_accuracy: baseline,
+        per_layer_drop: drops,
+        policy,
+        projected_accuracy: baseline - projected_drop,
+        evals,
+    }
+}
+
+/// Convenience: uniform approximate policy (the paper's "approximate mode"
+/// end of the trade-off) for comparison rows.
+pub fn all_approximate(layers: usize, precision: Precision) -> PolicyTable {
+    PolicyTable::uniform(layers, precision, ExecMode::Approximate)
+}
+
+/// Convenience: describe a policy compactly, e.g. `"AAcAc"` (A=approx,
+/// c=accurate) for logs and EXPERIMENTS.md.
+pub fn describe(policy: &PolicyTable) -> String {
+    policy
+        .iter()
+        .map(|e| match e.mode {
+            ExecMode::Approximate => 'A',
+            ExecMode::Accurate => 'c',
+            ExecMode::Custom(_) => '#',
+        })
+        .collect()
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic accuracy surface: baseline 0.95; each approximate layer i
+    /// costs `cost[i]`, additively.
+    fn surface(costs: &'static [f64]) -> impl FnMut(&PolicyTable) -> f64 {
+        move |p: &PolicyTable| {
+            let mut acc = 0.95;
+            for (i, e) in p.iter().enumerate() {
+                if e.mode == ExecMode::Approximate {
+                    acc -= costs[i];
+                }
+            }
+            acc
+        }
+    }
+
+    #[test]
+    fn flips_cheap_layers_first() {
+        let costs: &[f64] = &[0.001, 0.05, 0.002, 0.0005];
+        let r = assign_modes(4, Precision::Fxp8, 0.01, surface(costs));
+        // layers 0, 2, 3 are cheap (total 0.0035 <= 0.01); layer 1 is not.
+        assert_eq!(r.policy.layer(0).mode, ExecMode::Approximate);
+        assert_eq!(r.policy.layer(1).mode, ExecMode::Accurate);
+        assert_eq!(r.policy.layer(2).mode, ExecMode::Approximate);
+        assert_eq!(r.policy.layer(3).mode, ExecMode::Approximate);
+        assert!((r.projected_accuracy - (0.95 - 0.0035)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_budget_keeps_everything_accurate() {
+        let costs: &[f64] = &[0.01, 0.01];
+        let r = assign_modes(2, Precision::Fxp8, 0.0, surface(costs));
+        assert_eq!(r.policy.accurate_layers(), 2);
+        assert_eq!(r.projected_accuracy, r.baseline_accuracy);
+    }
+
+    #[test]
+    fn huge_budget_flips_everything() {
+        let costs: &[f64] = &[0.01, 0.02, 0.03];
+        let r = assign_modes(3, Precision::Fxp8, 1.0, surface(costs));
+        assert_eq!(r.policy.accurate_layers(), 0);
+    }
+
+    #[test]
+    fn eval_count_is_layers_plus_one() {
+        let costs: &[f64] = &[0.0, 0.0, 0.0, 0.0, 0.0];
+        let r = assign_modes(5, Precision::Fxp8, 0.02, surface(costs));
+        assert_eq!(r.evals, 6);
+    }
+
+    #[test]
+    fn describe_renders_modes() {
+        let mut p = PolicyTable::uniform(3, Precision::Fxp8, ExecMode::Accurate);
+        p.layer_mut(1).mode = ExecMode::Approximate;
+        assert_eq!(describe(&p), "cAc");
+    }
+}

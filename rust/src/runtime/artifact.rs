@@ -1,0 +1,168 @@
+//! Artifact registry: parses `artifacts/manifest.tsv` (written by
+//! `python/compile/aot.py`) and resolves (precision, mode, batch) →
+//! artifact file.
+
+use crate::cordic::mac::ExecMode;
+use crate::quant::Precision;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// One artifact entry from the manifest.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArtifactSpec {
+    /// HLO text file path (absolute or registry-relative).
+    pub path: PathBuf,
+    /// Operand precision the artifact was lowered for.
+    pub precision: Precision,
+    /// Approximate vs accurate iteration budget.
+    pub mode: ExecMode,
+    /// Compiled batch size.
+    pub batch: usize,
+}
+
+/// The registry of available artifacts.
+#[derive(Debug, Clone, Default)]
+pub struct ArtifactRegistry {
+    entries: Vec<ArtifactSpec>,
+}
+
+fn parse_mode(s: &str) -> Option<ExecMode> {
+    match s {
+        "approx" | "approximate" => Some(ExecMode::Approximate),
+        "accurate" => Some(ExecMode::Accurate),
+        _ => None,
+    }
+}
+
+impl ArtifactRegistry {
+    /// Load `manifest.tsv` from an artifacts directory.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest)
+            .with_context(|| format!("reading {} (run `make artifacts`)", manifest.display()))?;
+        let mut entries = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                bail!("manifest line {} malformed: {line:?}", ln + 1);
+            }
+            let precision = Precision::parse(cols[1])
+                .with_context(|| format!("bad precision {:?} at line {}", cols[1], ln + 1))?;
+            let mode = parse_mode(cols[2])
+                .with_context(|| format!("bad mode {:?} at line {}", cols[2], ln + 1))?;
+            let batch: usize = cols[3]
+                .parse()
+                .with_context(|| format!("bad batch {:?} at line {}", cols[3], ln + 1))?;
+            let path = dir.join(cols[0]);
+            if !path.exists() {
+                bail!("manifest references missing artifact {}", path.display());
+            }
+            entries.push(ArtifactSpec { path, precision, mode, batch });
+        }
+        if entries.is_empty() {
+            bail!("manifest {} lists no artifacts", manifest.display());
+        }
+        Ok(ArtifactRegistry { entries })
+    }
+
+    /// All entries.
+    pub fn entries(&self) -> &[ArtifactSpec] {
+        &self.entries
+    }
+
+    /// Exact-match lookup.
+    pub fn find(&self, precision: Precision, mode: ExecMode, batch: usize) -> Option<&ArtifactSpec> {
+        self.entries
+            .iter()
+            .find(|e| e.precision == precision && e.mode == mode && e.batch == batch)
+    }
+
+    /// Smallest compiled batch ≥ `n` for a config (the batcher pads to it);
+    /// falls back to the largest available batch.
+    pub fn batch_for(&self, precision: Precision, mode: ExecMode, n: usize) -> Option<&ArtifactSpec> {
+        let mut candidates: Vec<&ArtifactSpec> = self
+            .entries
+            .iter()
+            .filter(|e| e.precision == precision && e.mode == mode)
+            .collect();
+        candidates.sort_by_key(|e| e.batch);
+        candidates
+            .iter()
+            .find(|e| e.batch >= n)
+            .copied()
+            .or_else(|| candidates.last().copied())
+    }
+
+    /// Distinct batch sizes available.
+    pub fn batches(&self) -> Vec<usize> {
+        let mut b: Vec<usize> = self.entries.iter().map(|e| e.batch).collect();
+        b.sort_unstable();
+        b.dedup();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn fake_registry(dir: &Path) -> ArtifactRegistry {
+        std::fs::create_dir_all(dir).unwrap();
+        for name in ["a.hlo.txt", "b.hlo.txt", "c.hlo.txt"] {
+            std::fs::File::create(dir.join(name)).unwrap();
+        }
+        let mut f = std::fs::File::create(dir.join("manifest.tsv")).unwrap();
+        writeln!(f, "# file\tprecision\tmode\tbatch").unwrap();
+        writeln!(f, "a.hlo.txt\tfxp8\tapprox\t1").unwrap();
+        writeln!(f, "b.hlo.txt\tfxp8\tapprox\t8").unwrap();
+        writeln!(f, "c.hlo.txt\tfxp16\taccurate\t8").unwrap();
+        ArtifactRegistry::load(dir).unwrap()
+    }
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir().join(format!("corvet-artifact-test-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    #[test]
+    fn loads_and_finds() {
+        let dir = tmpdir("load");
+        let r = fake_registry(&dir);
+        assert_eq!(r.entries().len(), 3);
+        assert!(r.find(Precision::Fxp8, ExecMode::Approximate, 8).is_some());
+        assert!(r.find(Precision::Fxp4, ExecMode::Approximate, 8).is_none());
+        assert_eq!(r.batches(), vec![1, 8]);
+    }
+
+    #[test]
+    fn batch_for_rounds_up_then_saturates() {
+        let dir = tmpdir("batch");
+        let r = fake_registry(&dir);
+        assert_eq!(r.batch_for(Precision::Fxp8, ExecMode::Approximate, 1).unwrap().batch, 1);
+        assert_eq!(r.batch_for(Precision::Fxp8, ExecMode::Approximate, 3).unwrap().batch, 8);
+        assert_eq!(r.batch_for(Precision::Fxp8, ExecMode::Approximate, 20).unwrap().batch, 8);
+        assert!(r.batch_for(Precision::Fxp16, ExecMode::Approximate, 1).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = tmpdir("missing");
+        std::fs::create_dir_all(&dir).unwrap();
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dir = tmpdir("dangling");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.tsv"), "x.hlo.txt\tfxp8\tapprox\t1\n").unwrap();
+        assert!(ArtifactRegistry::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,173 @@
+//! The PJRT client wrapper: compile-once, execute-many on the request path.
+
+use super::artifact::ArtifactSpec;
+use super::weights::ModelWeights;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Fixed-point guard format shared with the Python side
+/// (`python/compile/kernels/ref.py::GUARD_FRAC`).
+pub const GUARD_FRAC: u32 = 28;
+/// `1.0` in the guard format.
+pub const GUARD_ONE: i64 = 1 << GUARD_FRAC;
+
+/// A compiled artifact plus its metadata.
+struct LoadedModel {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The runtime: one PJRT CPU client, an executable cache, and the weight
+/// literals of the currently deployed model.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    models: HashMap<PathBuf, LoadedModel>,
+    weight_literals: Vec<xla::Literal>,
+    input_width: usize,
+    output_width: usize,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PjrtRuntime")
+            .field("models", &self.models.len())
+            .field("weights", &self.weight_literals.len())
+            .finish()
+    }
+}
+
+impl PjrtRuntime {
+    /// Create the CPU PJRT client.
+    pub fn new() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            models: HashMap::new(),
+            weight_literals: Vec::new(),
+            input_width: 0,
+            output_width: 0,
+        })
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an artifact (no-op if already cached).
+    pub fn load(&mut self, spec: &ArtifactSpec) -> Result<()> {
+        if self.models.contains_key(&spec.path) {
+            return Ok(());
+        }
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .with_context(|| format!("parsing HLO text {}", spec.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.path.display()))?;
+        self.models.insert(spec.path.clone(), LoadedModel { exe, spec: spec.clone() });
+        Ok(())
+    }
+
+    /// Number of compiled executables held.
+    pub fn loaded_count(&self) -> usize {
+        self.models.len()
+    }
+
+    /// Deploy a weight set: pre-builds the parameter literals fed to every
+    /// subsequent execution (the "load parameters over AXI" step of the
+    /// paper's co-design flow, §II-C).
+    pub fn deploy_weights(&mut self, weights: &ModelWeights) -> Result<()> {
+        if weights.layers.is_empty() {
+            bail!("empty weight set");
+        }
+        let mut lits = Vec::with_capacity(weights.layers.len() * 2);
+        for l in &weights.layers {
+            let w = xla::Literal::vec1(&l.w)
+                .reshape(&[l.inputs as i64, l.outputs as i64])
+                .context("reshaping weight literal")?;
+            let b = xla::Literal::vec1(&l.b);
+            lits.push(w);
+            lits.push(b);
+        }
+        self.input_width = weights.layers[0].inputs;
+        self.output_width = weights.layers.last().unwrap().outputs;
+        self.weight_literals = lits;
+        Ok(())
+    }
+
+    /// True once weights are deployed.
+    pub fn has_weights(&self) -> bool {
+        !self.weight_literals.is_empty()
+    }
+
+    /// Output width (classes) of the deployed model.
+    pub fn output_width(&self) -> usize {
+        self.output_width
+    }
+
+    /// Execute one batch through a loaded artifact.
+    ///
+    /// `x` is `rows × input_width` guard-format values, row-major, with
+    /// `rows <= spec.batch`; the batch is zero-padded to the compiled shape
+    /// and only the first `rows` outputs are returned (`rows × classes`
+    /// f32 logits).
+    pub fn execute(&self, path: &Path, x: &[i64], rows: usize) -> Result<Vec<f32>> {
+        let model = self
+            .models
+            .get(path)
+            .with_context(|| format!("artifact not loaded: {}", path.display()))?;
+        if !self.has_weights() {
+            bail!("no weights deployed");
+        }
+        let b = model.spec.batch;
+        if rows == 0 || rows > b {
+            bail!("rows {} out of range for compiled batch {}", rows, b);
+        }
+        if x.len() != rows * self.input_width {
+            bail!("input length {} != rows {} x width {}", x.len(), rows, self.input_width);
+        }
+        // zero-pad to the compiled batch (skip the copy when already full)
+        let x_lit = if rows == b {
+            xla::Literal::vec1(x)
+        } else {
+            let mut padded = vec![0i64; b * self.input_width];
+            padded[..x.len()].copy_from_slice(x);
+            xla::Literal::vec1(&padded)
+        }
+        .reshape(&[b as i64, self.input_width as i64])
+        .context("reshaping input literal")?;
+
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(1 + self.weight_literals.len());
+        args.push(&x_lit);
+        args.extend(self.weight_literals.iter());
+
+        let result = model.exe.execute::<&xla::Literal>(&args).context("PJRT execute")?;
+        let lit = result[0][0].to_literal_sync().context("fetching result")?;
+        let out = lit.to_tuple1().context("unwrapping 1-tuple result")?;
+        let all: Vec<f32> = out.to_vec().context("reading logits")?;
+        Ok(all[..rows * self.output_width].to_vec())
+    }
+
+    /// Convenience: execute through the best artifact for `rows` requests
+    /// under a (precision, mode) config, given a registry.
+    pub fn execute_via(
+        &mut self,
+        registry: &super::ArtifactRegistry,
+        precision: crate::quant::Precision,
+        mode: crate::cordic::mac::ExecMode,
+        x: &[i64],
+        rows: usize,
+    ) -> Result<Vec<f32>> {
+        let spec = registry
+            .batch_for(precision, mode, rows)
+            .with_context(|| format!("no artifact for {precision}/{mode:?}"))?
+            .clone();
+        self.load(&spec)?;
+        self.execute(&spec.path, x, rows)
+    }
+}
+
+// Integration tests that need built artifacts live in rust/tests/.

@@ -1,0 +1,15 @@
+//! PJRT runtime: load the AOT-compiled HLO text artifacts and execute them
+//! on the request path. Python never runs here — `make artifacts` is the
+//! only place Python executes, at build time.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** →
+//! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`
+//! → `executable.execute`. Compiled executables are cached per artifact.
+
+mod artifact;
+mod client;
+mod weights;
+
+pub use artifact::{ArtifactRegistry, ArtifactSpec};
+pub use client::{PjrtRuntime, GUARD_FRAC, GUARD_ONE};
+pub use weights::{quantize_input, quantize_network, ModelWeights};

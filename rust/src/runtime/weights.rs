@@ -1,0 +1,204 @@
+//! Model weights in the guard-format int64 layout the compiled artifacts
+//! expect, plus quantisation from a trained [`crate::model::Network`] and a
+//! simple text (de)serialisation for deployment.
+
+use crate::model::{Layer, Network};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+use super::client::{GUARD_FRAC, GUARD_ONE};
+
+/// Guard-format parameters of one dense layer, in the artifact layout:
+/// `w[j][n]` (input-major, matching the JAX `[J, N]` weight matrix).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerWeights {
+    /// Input width J.
+    pub inputs: usize,
+    /// Output width N.
+    pub outputs: usize,
+    /// Weights, `w[j * outputs + n]`, |w| < ONE.
+    pub w: Vec<i64>,
+    /// Biases, length N.
+    pub b: Vec<i64>,
+}
+
+/// All layers of the served MLP.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ModelWeights {
+    /// Layers in execution order.
+    pub layers: Vec<LayerWeights>,
+}
+
+impl ModelWeights {
+    /// Layer dimension chain, e.g. `[196, 64, 32, 32, 10]`.
+    pub fn dims(&self) -> Vec<usize> {
+        let mut d: Vec<usize> = self.layers.iter().map(|l| l.inputs).collect();
+        if let Some(last) = self.layers.last() {
+            d.push(last.outputs);
+        }
+        d
+    }
+
+    /// Save as a plain text format (deployment parameter file).
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut out = String::new();
+        out.push_str(&format!("corvet-weights v1 layers={}\n", self.layers.len()));
+        for l in &self.layers {
+            out.push_str(&format!("layer {} {}\n", l.inputs, l.outputs));
+            for chunk in [&l.w, &l.b] {
+                let strs: Vec<String> = chunk.iter().map(|v| v.to_string()).collect();
+                out.push_str(&strs.join(" "));
+                out.push('\n');
+            }
+        }
+        std::fs::write(path.as_ref(), out)
+            .with_context(|| format!("writing {}", path.as_ref().display()))
+    }
+
+    /// Load the text format.
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        let mut lines = text.lines();
+        let header = lines.next().context("empty weights file")?;
+        if !header.starts_with("corvet-weights v1") {
+            bail!("bad weights header: {header:?}");
+        }
+        let mut layers = Vec::new();
+        while let Some(line) = lines.next() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let parts: Vec<&str> = line.split_whitespace().collect();
+            if parts.len() != 3 || parts[0] != "layer" {
+                bail!("expected layer header, got {line:?}");
+            }
+            let inputs: usize = parts[1].parse()?;
+            let outputs: usize = parts[2].parse()?;
+            let w: Vec<i64> = lines
+                .next()
+                .context("missing weight row")?
+                .split_whitespace()
+                .map(|s| s.parse::<i64>().map_err(Into::into))
+                .collect::<Result<_>>()?;
+            let b: Vec<i64> = lines
+                .next()
+                .context("missing bias row")?
+                .split_whitespace()
+                .map(|s| s.parse::<i64>().map_err(Into::into))
+                .collect::<Result<_>>()?;
+            if w.len() != inputs * outputs || b.len() != outputs {
+                bail!("layer {inputs}x{outputs}: wrong element counts");
+            }
+            layers.push(LayerWeights { inputs, outputs, w, b });
+        }
+        Ok(ModelWeights { layers })
+    }
+}
+
+/// Quantise a trained dense [`Network`] into artifact weights.
+///
+/// Weights are clipped into the CORDIC multiplier's convergence range
+/// `(-1, 1)` (the hardware prescaler's contract; trained MLP weights sit
+/// well inside it — the returned clip count lets callers verify).
+/// Returns (weights, clipped_count).
+pub fn quantize_network(net: &Network) -> Result<(ModelWeights, usize)> {
+    let mut layers = Vec::new();
+    let mut clipped = 0usize;
+    let lim = GUARD_ONE - 1;
+    for layer in &net.layers {
+        match layer {
+            Layer::Dense(d) => {
+                // transpose neuron-major [N][J] -> input-major [J][N]
+                let mut w = vec![0i64; d.inputs * d.outputs];
+                for n in 0..d.outputs {
+                    for j in 0..d.inputs {
+                        let v = d.weights[n * d.inputs + j];
+                        let q = (v * GUARD_ONE as f64).round() as i64;
+                        let qc = q.clamp(-lim, lim);
+                        if q != qc {
+                            clipped += 1;
+                        }
+                        w[j * d.outputs + n] = qc;
+                    }
+                }
+                let b: Vec<i64> =
+                    d.biases.iter().map(|&v| (v * GUARD_ONE as f64).round() as i64).collect();
+                layers.push(LayerWeights { inputs: d.inputs, outputs: d.outputs, w, b });
+            }
+            Layer::Softmax => {} // handled host-side (argmax over logits)
+            other => bail!("served model must be dense-only, found {}", other.kind_name()),
+        }
+    }
+    if layers.is_empty() {
+        bail!("network has no dense layers");
+    }
+    Ok((ModelWeights { layers }, clipped))
+}
+
+/// Quantise an input vector (values in (-1, 1)) to guard format.
+pub fn quantize_input(x: &[f64]) -> Vec<i64> {
+    x.iter()
+        .map(|&v| {
+            let q = (v * GUARD_ONE as f64).round() as i64;
+            q.clamp(-(GUARD_ONE - 1), GUARD_ONE - 1)
+        })
+        .collect()
+}
+
+#[allow(unused)]
+fn _guard_frac_is_consistent() {
+    // compile-time-ish sanity: runtime guard format matches the CORDIC one
+    const _: () = assert!(GUARD_FRAC == crate::cordic::GUARD_FRAC);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::activation::ActFn;
+    use crate::model::workloads::paper_mlp;
+
+    #[test]
+    fn quantize_paper_mlp_layout() {
+        let net = paper_mlp(5);
+        let (w, clipped) = quantize_network(&net).unwrap();
+        assert_eq!(w.dims(), vec![196, 64, 32, 32, 10]);
+        assert_eq!(w.layers[0].w.len(), 196 * 64);
+        // He-init weights are comfortably below 1.0
+        assert_eq!(clipped, 0);
+        // transpose correctness: spot-check one element
+        if let Layer::Dense(d) = &net.layers[0] {
+            let n = 3;
+            let j = 17;
+            let expect = (d.weights[n * 196 + j] * GUARD_ONE as f64).round() as i64;
+            assert_eq!(w.layers[0].w[j * 64 + n], expect);
+        }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let net = crate::model::workloads::mlp("t", &[4, 3, 2], ActFn::Sigmoid, 1);
+        let (w, _) = quantize_network(&net).unwrap();
+        let path = std::env::temp_dir().join(format!("corvet-w-{}.txt", std::process::id()));
+        w.save(&path).unwrap();
+        let back = ModelWeights::load(&path).unwrap();
+        assert_eq!(w, back);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn non_dense_network_rejected() {
+        use crate::pooling::sliding::PoolKind;
+        let net = crate::model::workloads::small_cnn("c", PoolKind::Max, 1);
+        assert!(quantize_network(&net).is_err());
+    }
+
+    #[test]
+    fn quantize_input_clamps() {
+        let q = quantize_input(&[0.5, -2.0, 2.0]);
+        assert_eq!(q[0], GUARD_ONE / 2);
+        assert_eq!(q[1], -(GUARD_ONE - 1));
+        assert_eq!(q[2], GUARD_ONE - 1);
+    }
+}

@@ -1,0 +1,205 @@
+//! Figure regeneration: Fig. 11 (accuracy vs CORDIC iterations across
+//! models) and Fig. 13 (VGG-16 layer-wise execution time + power).
+
+use crate::cordic::mac::ExecMode;
+use crate::engine::EngineConfig;
+use crate::hwcost;
+use crate::model::workloads::{paper_mlp, small_cnn, vgg16_trace, wide_mlp};
+use crate::model::Network;
+use crate::pooling::sliding::PoolKind;
+use crate::quant::{PolicyTable, Precision};
+use crate::report::{fnum, Table};
+use crate::train::{train, Dataset, DatasetConfig, SgdConfig};
+
+/// One Fig. 11 data point.
+#[derive(Debug, Clone)]
+pub struct Fig11Point {
+    /// Model name.
+    pub model: String,
+    /// Operand precision.
+    pub precision: Precision,
+    /// Micro-rotations per MAC.
+    pub iterations: u32,
+    /// Test accuracy under bit-accurate CORDIC execution.
+    pub accuracy: f64,
+    /// FP32 reference accuracy of the same model.
+    pub fp32_accuracy: f64,
+}
+
+/// Train the Fig. 11 model zoo on the synthetic dataset.
+///
+/// `quick` shrinks dataset/epochs for test runs; the bench target uses the
+/// full setting.
+pub fn fig11_models(quick: bool) -> (Dataset, Vec<Network>) {
+    let data = Dataset::generate(DatasetConfig {
+        train: if quick { 400 } else { 2000 },
+        test: if quick { 120 } else { 400 },
+        noise: 0.2,
+        ..Default::default()
+    });
+    let sgd = SgdConfig {
+        epochs: if quick { 6 } else { 14 },
+        lr: 0.08,
+        ..Default::default()
+    };
+
+    let mut nets = Vec::new();
+    let mut m1 = paper_mlp(101);
+    train(&mut m1, &data.train_x, &data.train_y, sgd);
+    nets.push(m1);
+    let mut m2 = wide_mlp(102);
+    train(&mut m2, &data.train_x, &data.train_y, sgd);
+    nets.push(m2);
+    let mut m3 = small_cnn("cnn-8-16", PoolKind::Max, 103);
+    let chw = data.train_x_chw();
+    let cnn_n = if quick { 200 } else { 800 };
+    train(
+        &mut m3,
+        &chw[..cnn_n.min(chw.len())],
+        &data.train_y[..cnn_n.min(chw.len())],
+        SgdConfig { epochs: if quick { 3 } else { 6 }, lr: 0.05, ..Default::default() },
+    );
+    nets.push(m3);
+    (data, nets)
+}
+
+/// Fig. 11: accuracy of each trained model under bit-accurate CORDIC
+/// execution, sweeping the iteration budget. Returns the points and a
+/// rendered table.
+pub fn fig11(quick: bool) -> (Vec<Fig11Point>, Table) {
+    let (data, nets) = fig11_models(quick);
+    let iter_sweep: &[u32] = if quick { &[4, 8, 12, 18] } else { &[2, 4, 6, 8, 10, 12, 14, 18] };
+    let precisions = [Precision::Fxp8, Precision::Fxp16];
+    let eval_n = if quick { 60 } else { 200 };
+
+    let mut points = Vec::new();
+    for net in &nets {
+        let is_cnn = net.input_shape.len() == 3;
+        let (inputs, labels): (Vec<_>, Vec<_>) = if is_cnn {
+            (data.test_x_chw(), data.test_y.clone())
+        } else {
+            (data.test_x.clone(), data.test_y.clone())
+        };
+        let inputs = &inputs[..eval_n.min(inputs.len())];
+        let labels = &labels[..eval_n.min(labels.len())];
+        let fp32 = net.accuracy_f64(inputs, labels);
+        for &precision in &precisions {
+            for &iters in iter_sweep {
+                let policy = PolicyTable::uniform(
+                    net.compute_layers(),
+                    precision,
+                    ExecMode::Custom(iters),
+                );
+                let acc = net.accuracy_cordic(inputs, labels, &policy);
+                points.push(Fig11Point {
+                    model: net.name.clone(),
+                    precision,
+                    iterations: iters,
+                    accuracy: acc,
+                    fp32_accuracy: fp32,
+                });
+            }
+        }
+    }
+
+    let mut t = Table::new(
+        "Fig. 11 — DNN accuracy vs CORDIC iteration budget",
+        &["model", "precision", "iterations", "cordic acc", "fp32 acc", "drop"],
+    );
+    for p in &points {
+        t.row(vec![
+            p.model.clone(),
+            format!("{}", p.precision),
+            p.iterations.to_string(),
+            fnum(p.accuracy),
+            fnum(p.fp32_accuracy),
+            fnum(p.fp32_accuracy - p.accuracy),
+        ]);
+    }
+    (points, t)
+}
+
+/// Fig. 13: VGG-16 layer-wise execution time and power on the 256-PE
+/// engine with runtime precision switching (boundary layers accurate).
+pub fn fig13() -> Table {
+    let cfg = EngineConfig::pe256();
+    let asic = hwcost::engine_asic(&cfg, 4);
+    let clock_hz = asic.freq_ghz * 1e9;
+    let trace = vgg16_trace();
+    let mut policy =
+        PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    let n = policy.len();
+    policy.layer_mut(0).mode = ExecMode::Accurate;
+    policy.layer_mut(n - 1).mode = ExecMode::Accurate;
+    let report = crate::engine::VectorEngine::new(cfg).run_trace(&trace, &policy);
+
+    let mut t = Table::new(
+        "Fig. 13 — VGG-16 layer-wise execution time and power (256 PE)",
+        &["layer", "mode", "MACs (M)", "cycles (k)", "time ms", "power mW", "energy mJ", "PE util"],
+    );
+    for l in &report.per_layer {
+        let time_s = l.total_cycles as f64 / clock_hz;
+        // layer power: PE-array dynamic power scales with utilisation;
+        // the fixed terms (SRAM, leakage, peripherals) are always on
+        let util = l.pe_utilization;
+        let fixed = asic.power_mw * 0.35;
+        let dynamic = asic.power_mw * 0.65 * if l.macs > 0 { util } else { 0.15 };
+        let power = fixed + dynamic;
+        let mode = l
+            .policy
+            .map(|p| match p.mode {
+                ExecMode::Approximate => "approx",
+                ExecMode::Accurate => "accurate",
+                ExecMode::Custom(_) => "custom",
+            })
+            .unwrap_or("-");
+        t.row(vec![
+            l.name.clone(),
+            mode.to_string(),
+            fnum(l.macs as f64 / 1e6),
+            fnum(l.total_cycles as f64 / 1e3),
+            fnum(time_s * 1e3),
+            fnum(power),
+            fnum(time_s * power),
+            fnum(util),
+        ]);
+    }
+    let total_ms = report.time_ms(clock_hz);
+    t.row(vec![
+        "TOTAL".to_string(),
+        "mixed".to_string(),
+        fnum(report.total_macs as f64 / 1e6),
+        fnum(report.total_cycles as f64 / 1e3),
+        fnum(total_ms),
+        fnum(asic.power_mw),
+        fnum(total_ms * asic.power_mw / 1e3),
+        fnum(report.mean_pe_utilization()),
+    ]);
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig13_covers_all_vgg_layers() {
+        let t = fig13();
+        // 13 conv + 5 pool + 3 fc + total
+        assert_eq!(t.rows.len(), 22);
+        assert!(t.rows.iter().any(|r| r[0] == "conv5-3"));
+        assert_eq!(t.rows.last().unwrap()[0], "TOTAL");
+    }
+
+    #[test]
+    fn fig13_conv_layers_dominate_time() {
+        let t = fig13();
+        let time_of = |name: &str| -> f64 {
+            t.rows.iter().find(|r| r[0] == name).unwrap()[4].parse().unwrap()
+        };
+        assert!(time_of("conv2-1") > time_of("pool1"), "conv must dominate pooling");
+    }
+
+    // fig11 is exercised by the fig11_accuracy bench and the quick-mode
+    // integration test (it trains models, too slow for unit tests).
+}

@@ -1,0 +1,323 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (the per-experiment index lives in DESIGN.md §5).
+//!
+//! Each `table*` / `fig*` function returns a [`crate::report::Table`] whose
+//! "Proposed" rows come from *our* cost model / simulator / bit-accurate
+//! evaluator, alongside the paper's published rows and per-cell deltas.
+//! The CLI (`corvet table N`, `corvet fig N`) and the bench targets print
+//! these; EXPERIMENTS.md records the captured output.
+
+mod figs;
+pub mod sota;
+
+pub use figs::{fig11, fig13, Fig11Point};
+
+use crate::engine::EngineConfig;
+use crate::hwcost;
+use crate::model::workloads::tinyyolo_trace;
+use crate::quant::{PolicyTable, Precision};
+use crate::report::{delta_pct, fnum, Table};
+
+fn opt(v: f64) -> String {
+    if v.is_nan() {
+        "NR".to_string()
+    } else {
+        fnum(v)
+    }
+}
+
+/// Table I: qualitative SoTA feature matrix (static content; our row states
+/// what this reproduction implements).
+pub fn table1() -> Table {
+    let mut t = Table::new(
+        "Table I — SoTA design approaches and features",
+        &["design", "compute", "arch type", "scalable", "precision", "acc. loss", "NAFs", "applications"],
+    );
+    t.row_strs(&["Baseline", "Pipe-CORDIC", "Fully Parallel", "no", "FxP-8", "high", "ReLU", "ANN"]);
+    t.row_strs(&["ICIIS'25 [11]", "Pipe-CORDIC", "Layer-Reused", "yes", "FxP-8", "high", "ReLU", "ANN"]);
+    t.row_strs(&["IEEE Access'24 [2]", "PWL", "NAF-Reused", "no", "FxP-8", "high", "Sigmoid/Tanh", "ANN"]);
+    t.row_strs(&["TVLSI'25 [3]", "Pipe-CORDIC", "NAF-Reused", "no", "FxP-4/8/16/32", "medium", "Sigmoid,Tanh,SoftMax,ReLU", "DNN"]);
+    t.row_strs(&["ISCAS'25 [4]", "Log-Approx", "Systolic Array", "yes", "Posit-8/16/32", "low", "NA", "DNN,Transformers"]);
+    t.row_strs(&["ISVLSI'25 [5]", "Iter-CORDIC", "Layer-Reused", "no", "FxP-8", "medium", "Sigmoid/Tanh", "DNN"]);
+    t.row_strs(&[
+        "Proposed (this repo)",
+        "Iter-CORDIC",
+        "Vector Engine (reconfigurable)",
+        "yes (64-256 PE)",
+        "FxP-4/8/16",
+        "variable (low)",
+        "Sigmoid,Tanh,SoftMax,GELU,Swish,ReLU,SELU",
+        "DNN,Transformers(MLP)",
+    ]);
+    t
+}
+
+/// Table II: MAC-unit comparison. "Proposed (model)" rows regenerate from
+/// the calibrated structural model; the paper's proposed row and deltas are
+/// included for verification.
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "Table II — CORDIC-based MAC units (FPGA VC707 @100 MHz; ASIC 28 nm 0.9 V)",
+        &["design", "LUTs", "FFs", "fpga delay ns", "fpga mW", "fpga PDP pJ",
+          "asic µm²", "asic delay ns", "asic mW", "asic PDP pJ"],
+    );
+    for r in sota::MAC_ROWS {
+        let (l, f, d, p) = r.fpga;
+        let (a, ad, ap) = r.asic;
+        t.row(vec![
+            r.design.to_string(), opt(l), opt(f), opt(d), opt(p), opt(d * p),
+            opt(a), opt(ad), opt(ap), opt(ad * ap),
+        ]);
+    }
+    let paper = sota::MAC_PROPOSED_PAPER;
+    let (l, f, d, p) = paper.fpga;
+    let (a, ad, ap) = paper.asic;
+    t.row(vec![
+        paper.design.to_string(), fnum(l), fnum(f), fnum(d), fnum(p), fnum(d * p),
+        fnum(a), fnum(ad), fnum(ap), fnum(ad * ap),
+    ]);
+    let mf = hwcost::iterative_mac_fpga(Precision::Fxp8);
+    let ma = hwcost::iterative_mac_asic(Precision::Fxp8);
+    t.row(vec![
+        "Proposed Iter-MAC (model)".to_string(),
+        fnum(mf.luts), fnum(mf.ffs), fnum(mf.delay_ns), fnum(mf.power_mw), fnum(mf.pdp_pj()),
+        fnum(ma.area_um2), fnum(ma.delay_ns), fnum(ma.power_mw), fnum(ma.pdp_pj()),
+    ]);
+    t.row(vec![
+        "model vs paper".to_string(),
+        delta_pct(mf.luts, l), delta_pct(mf.ffs, f), delta_pct(mf.delay_ns, d),
+        delta_pct(mf.power_mw, p), delta_pct(mf.pdp_pj(), d * p),
+        delta_pct(ma.area_um2, a), delta_pct(ma.delay_ns, ad), delta_pct(ma.power_mw, ap),
+        delta_pct(ma.pdp_pj(), ad * ap),
+    ]);
+    // the unrolled ablation row the §III-A savings claims compare against
+    let pf = hwcost::pipelined_mac_fpga(Precision::Fxp8, 8);
+    let pa = hwcost::pipelined_mac_asic(Precision::Fxp8, 8);
+    t.row(vec![
+        "Pipelined CORDIC x8 (ablation model)".to_string(),
+        fnum(pf.luts), fnum(pf.ffs), fnum(pf.delay_ns), fnum(pf.power_mw), fnum(pf.pdp_pj()),
+        fnum(pa.area_um2), fnum(pa.delay_ns), fnum(pa.power_mw), fnum(pa.pdp_pj()),
+    ]);
+    t
+}
+
+/// Table III: AF-unit comparison with the regenerated multi-AF block row.
+pub fn table3() -> Table {
+    let mut t = Table::new(
+        "Table III — activation-function units (FPGA VC707 @100 MHz; ASIC 28 nm 0.9 V)",
+        &["design", "LUTs", "FFs", "fpga delay ns", "fpga mW",
+          "asic µm²", "asic delay ns", "asic mW"],
+    );
+    for r in sota::AF_ROWS {
+        let (l, f, d, p) = r.fpga;
+        let (a, ad, ap) = r.asic;
+        t.row(vec![
+            r.design.to_string(), opt(l), opt(f), opt(d), opt(p), opt(a), opt(ad), opt(ap),
+        ]);
+    }
+    let paper = sota::AF_PROPOSED_PAPER;
+    let (l, f, d, p) = paper.fpga;
+    let (a, ad, ap) = paper.asic;
+    t.row(vec![
+        paper.design.to_string(), fnum(l), fnum(f), fnum(d), fnum(p), fnum(a), fnum(ad), fnum(ap),
+    ]);
+    let af = hwcost::multi_af_fpga();
+    let aa = hwcost::multi_af_asic();
+    t.row(vec![
+        "Proposed multi-AF (model)".to_string(),
+        fnum(af.luts), fnum(af.ffs), fnum(af.delay_ns), fnum(af.power_mw),
+        fnum(aa.area_um2), fnum(aa.delay_ns), fnum(aa.power_mw),
+    ]);
+    t.row(vec![
+        "model vs paper".to_string(),
+        delta_pct(af.luts, l), delta_pct(af.ffs, f), delta_pct(af.delay_ns, d),
+        delta_pct(af.power_mw, p), delta_pct(aa.area_um2, a), delta_pct(aa.delay_ns, ad),
+        delta_pct(aa.power_mw, ap),
+    ]);
+    t
+}
+
+/// Table IV: FPGA system-level TinyYOLO-v3. The proposed row runs the full
+/// trace through the vector-engine simulator at the cost model's clock.
+pub fn table4() -> Table {
+    let mut t = Table::new(
+        "Table IV — FPGA object detection (TinyYOLO-v3)",
+        &["design", "platform", "precision", "kLUTs", "kFFs", "DSPs", "MHz",
+          "GOPS/W", "power W", "latency ms"],
+    );
+
+    // ours: 256-PE engine on the FPGA cost model, approximate FxP-8 policy
+    let cfg = EngineConfig::pe256();
+    let fpga = hwcost::engine_fpga(&cfg);
+    let trace = tinyyolo_trace();
+    let policy = PolicyTable::uniform(
+        trace.compute_layers(),
+        Precision::Fxp8,
+        crate::cordic::mac::ExecMode::Approximate,
+    );
+    let report = crate::engine::VectorEngine::new(cfg).run_trace(&trace, &policy);
+    let clock_hz = fpga.freq_mhz * 1e6;
+    let gops = report.gops(clock_hz);
+    let latency_ms = report.time_ms(clock_hz);
+    let gops_per_w = gops / fpga.power_w;
+
+    let paper = sota::SYSTEM_FPGA_PROPOSED_PAPER;
+    t.row(vec![
+        "Proposed (model)".to_string(), "VC707".to_string(), "4/8/16".to_string(),
+        fnum(fpga.kluts), fnum(fpga.kffs), "0".to_string(), fnum(fpga.freq_mhz),
+        fnum(gops_per_w), fnum(fpga.power_w), fnum(latency_ms),
+    ]);
+    t.row(vec![
+        paper.design.to_string(), paper.platform.to_string(), paper.precision.to_string(),
+        fnum(paper.resources.0), fnum(paper.resources.1), paper.resources.2.to_string(),
+        fnum(paper.freq_mhz), fnum(paper.gops_per_w), fnum(paper.power_w), "-".to_string(),
+    ]);
+    t.row(vec![
+        "model vs paper".to_string(), "-".to_string(), "-".to_string(),
+        delta_pct(fpga.kluts, paper.resources.0), delta_pct(fpga.kffs, paper.resources.1),
+        "-".to_string(), delta_pct(fpga.freq_mhz, paper.freq_mhz),
+        delta_pct(gops_per_w, paper.gops_per_w), delta_pct(fpga.power_w, paper.power_w),
+        "-".to_string(),
+    ]);
+    for r in sota::SYSTEM_FPGA_ROWS {
+        t.row(vec![
+            r.design.to_string(), r.platform.to_string(), r.precision.to_string(),
+            fnum(r.resources.0), fnum(r.resources.1), r.resources.2.to_string(),
+            fnum(r.freq_mhz), fnum(r.gops_per_w), fnum(r.power_w), "-".to_string(),
+        ]);
+    }
+    t
+}
+
+/// Table V: ASIC scalability (64 vs 256 PE) with the published comparison.
+pub fn table5() -> Table {
+    let mut t = Table::new(
+        "Table V — ASIC comparison (28 nm, 0.9 V), 8-bit operating point",
+        &["design", "arch", "datatype", "GHz", "mm²", "mW", "TOPS/W", "TOPS/mm²"],
+    );
+    for (cfg, paper) in [
+        (EngineConfig::pe64(), sota::SYSTEM_ASIC_PROPOSED_PAPER[0]),
+        (EngineConfig::pe256(), sota::SYSTEM_ASIC_PROPOSED_PAPER[1]),
+    ] {
+        let r = hwcost::engine_asic(&cfg, 4); // FxP-8 approximate
+        t.row(vec![
+            format!("Proposed {}xPE (model)", cfg.pes), "Vector Engine".to_string(),
+            "FxP-4/8/16".to_string(), fnum(r.freq_ghz), fnum(r.area_mm2), fnum(r.power_mw),
+            fnum(r.tops_per_w()), fnum(r.tops_per_mm2()),
+        ]);
+        t.row(vec![
+            paper.design.to_string(), paper.arch.to_string(), paper.datatype.to_string(),
+            fnum(paper.freq_ghz), fnum(paper.area_mm2), fnum(paper.power_mw),
+            fnum(paper.tops_per_w), fnum(paper.tops_per_mm2),
+        ]);
+        t.row(vec![
+            "model vs paper".to_string(), "-".to_string(), "-".to_string(),
+            delta_pct(r.freq_ghz, paper.freq_ghz), delta_pct(r.area_mm2, paper.area_mm2),
+            delta_pct(r.power_mw, paper.power_mw), delta_pct(r.tops_per_w(), paper.tops_per_w),
+            delta_pct(r.tops_per_mm2(), paper.tops_per_mm2),
+        ]);
+    }
+    for r in sota::SYSTEM_ASIC_ROWS {
+        t.row(vec![
+            r.design.to_string(), r.arch.to_string(), r.datatype.to_string(),
+            fnum(r.freq_ghz), fnum(r.area_mm2), fnum(r.power_mw), fnum(r.tops_per_w),
+            fnum(r.tops_per_mm2),
+        ]);
+    }
+    t
+}
+
+/// §V-F end-to-end comparison (the quantitative content of Fig. 12):
+/// our measured latency/power vs the published comparison points.
+/// `measured` = (latency_ms, power_w) from the e2e driver or the simulator.
+pub fn e2e_table(measured: Option<(f64, f64)>) -> Table {
+    let mut t = Table::new(
+        "End-to-end embedded deployment (object detection + classification)",
+        &["platform", "latency ms", "power W", "energy mJ"],
+    );
+    if let Some((ms, w)) = measured {
+        t.row(vec!["Proposed (this repo, measured)".to_string(), fnum(ms), fnum(w), fnum(ms * w)]);
+    }
+    let (name, ms, w) = sota::E2E_PROPOSED_PAPER;
+    t.row(vec![name.to_string(), fnum(ms), fnum(w), fnum(ms * w)]);
+    for &(name, ms, w) in sota::E2E_ROWS {
+        t.row(vec![name.to_string(), fnum(ms), fnum(w), fnum(ms * w)]);
+    }
+    t
+}
+
+/// Our simulator's e2e operating point for the comparison row: the
+/// TinyYOLO trace on the FPGA-clocked 256-PE engine with a
+/// sensitivity-style mixed policy.
+pub fn e2e_simulated() -> (f64, f64) {
+    let cfg = EngineConfig::pe256();
+    let fpga = hwcost::engine_fpga(&cfg);
+    let trace = tinyyolo_trace();
+    let mut policy = PolicyTable::uniform(
+        trace.compute_layers(),
+        Precision::Fxp8,
+        crate::cordic::mac::ExecMode::Approximate,
+    );
+    // numerically critical boundary layers run accurate (the heuristic's
+    // usual outcome: first conv + classifier head)
+    let n = policy.len();
+    policy.layer_mut(0).mode = crate::cordic::mac::ExecMode::Accurate;
+    policy.layer_mut(n - 1).mode = crate::cordic::mac::ExecMode::Accurate;
+    let report = crate::engine::VectorEngine::new(cfg).run_trace(&trace, &policy);
+    (report.time_ms(fpga.freq_mhz * 1e6), fpga.power_w)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tables_render() {
+        for t in [table1(), table2(), table3(), table4(), table5(), e2e_table(Some((100.0, 0.5)))] {
+            let text = t.render();
+            assert!(text.len() > 100, "table too small:\n{text}");
+            assert!(!t.rows.is_empty());
+        }
+    }
+
+    #[test]
+    fn table2_model_close_to_paper_proposed() {
+        let t = table2();
+        let delta_row = t.rows.iter().find(|r| r[0] == "model vs paper").unwrap();
+        for cell in &delta_row[1..] {
+            let v: f64 = cell.trim_end_matches('%').parse().unwrap();
+            assert!(v.abs() < 25.0, "Table II delta {cell} exceeds 25%");
+        }
+    }
+
+    #[test]
+    fn table5_both_configs_present_and_efficiency_improves() {
+        let t = table5();
+        let find = |label: &str| {
+            t.rows
+                .iter()
+                .find(|r| r[0].starts_with(label))
+                .unwrap_or_else(|| panic!("{label} row missing"))
+        };
+        let r64 = find("Proposed 64xPE (model)");
+        let r256 = find("Proposed 256xPE (model)");
+        let w64: f64 = r64[6].parse().unwrap();
+        let w256: f64 = r256[6].parse().unwrap();
+        assert!(w256 > w64, "TOPS/W must improve with scale");
+    }
+
+    #[test]
+    fn table4_has_no_dsps_for_proposed() {
+        let t = table4();
+        let ours = &t.rows[0];
+        assert!(ours[0].contains("Proposed"));
+        assert_eq!(ours[5], "0");
+    }
+
+    #[test]
+    fn e2e_simulated_in_sane_range() {
+        let (ms, w) = e2e_simulated();
+        assert!(ms > 1.0 && ms < 100_000.0, "latency {ms}");
+        assert!(w > 0.1 && w < 5.0, "power {w}");
+    }
+}

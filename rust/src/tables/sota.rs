@@ -1,0 +1,168 @@
+//! Published state-of-the-art comparison rows, carried as data.
+//!
+//! These numbers are quoted from the paper's own Tables II–V (which in turn
+//! quote the cited works). They are *inputs* to the comparison harness, not
+//! outputs of our model — only the "Proposed" rows are regenerated from the
+//! calibrated cost model / simulator, and EXPERIMENTS.md reports the deltas
+//! against the paper's proposed rows.
+
+/// A Table II row: MAC-unit metrics on FPGA (VC707, 100 MHz) and ASIC
+/// (28 nm, 0.9 V).
+#[derive(Debug, Clone, Copy)]
+pub struct MacRow {
+    /// Design label (venue'year + datatype).
+    pub design: &'static str,
+    /// FPGA LUTs / FFs / delay(ns) / power(mW).
+    pub fpga: (f64, f64, f64, f64),
+    /// ASIC area(µm²) / delay(ns) / power(mW).
+    pub asic: (f64, f64, f64),
+}
+
+/// Table II published rows (SoTA MAC units).
+pub const MAC_ROWS: &[MacRow] = &[
+    MacRow { design: "TCAS-II'24 FP32 [29]", fpga: (8065.0, 1072.0, 5.56, 378.0), asic: (10000.0, 679.0, 15.86) },
+    MacRow { design: "ISCAS'25 BF16 [4]", fpga: (3670.0, 324.0, 0.512, 136.0), asic: (4340.0, 295.0, 6.89) },
+    MacRow { design: "ISCAS'25 Posit-8 [4]", fpga: (467.0, 175.0, 2.68, 68.0), asic: (754.0, 40.6, 1.8) },
+    MacRow { design: "ICIIS'25 Vedic [11]", fpga: (160.0, 241.0, 4.5, 6.1), asic: (407.0, 6.38, 35.0) },
+    MacRow { design: "ICIIS'25 Wallace [11]", fpga: (106.0, 113.0, 2.6, 3.3), asic: (296.0, 5.62, 37.0) },
+    MacRow { design: "ICIIS'25 Booth [11]", fpga: (84.0, 59.0, 3.1, 3.1), asic: (271.0, 5.3, 12.8) },
+    MacRow { design: "ICIIS'25 Quant-MAC [11]", fpga: (72.0, 56.0, 5.4, 4.2), asic: (175.0, 3.58, 89.0) },
+    MacRow { design: "ICIIS'25 CORDIC [11]", fpga: (56.0, 72.0, 1.52, 8.3), asic: (264.0, 2.36, 24.5) },
+    MacRow { design: "TVLSI'25 MSDF-MAC [30]", fpga: (62.0, 45.0, 3.2, 5.8), asic: (286.0, 1.42, 6.7) },
+    MacRow { design: "TCAD'22 Acc-App-MAC [31]", fpga: (57.0, f64::NAN, 3.51, 6.9), asic: (259.0, 2.6, 12.4) },
+    MacRow { design: "TVLSI'25 CORDIC [3]", fpga: (45.0, 37.0, 4.5, 2.0), asic: (8570.0, 0.7, 1.5) },
+];
+
+/// The paper's own "Proposed Iter-MAC" row of Table II (our calibration
+/// target and delta reference).
+pub const MAC_PROPOSED_PAPER: MacRow = MacRow {
+    design: "Proposed Iter-MAC (paper)",
+    fpga: (24.0, 22.0, 9.1, 1.9),
+    asic: (108.0, 2.98, 6.3),
+};
+
+/// A Table III row: activation-function block metrics.
+#[derive(Debug, Clone, Copy)]
+pub struct AfRow {
+    /// Design label.
+    pub design: &'static str,
+    /// FPGA LUTs / FFs / delay(ns) / power(mW).
+    pub fpga: (f64, f64, f64, f64),
+    /// ASIC area(µm²) / delay(ns) / power(mW).
+    pub asic: (f64, f64, f64),
+}
+
+/// Table III published rows (SoTA AF units).
+pub const AF_ROWS: &[AfRow] = &[
+    AfRow { design: "ISQED'24 Softmax-FP32 [32]", fpga: (3217.0, f64::NAN, 92.0, 115.0), asic: (41536.0, 6.0, 75.0) },
+    AfRow { design: "ISQED'24 Softmax-FP16 [32]", fpga: (1137.0, f64::NAN, 43.0, 115.0), asic: (17289.0, 4.0, 40.0) },
+    AfRow { design: "ISQED'24 Softmax-BF16 [32]", fpga: (1263.0, f64::NAN, 45.0, 77.0), asic: (11301.0, 3.3, 25.0) },
+    AfRow { design: "TCAS-II'20 Softmax-FxP8/16 [33]", fpga: (2564.0, 2794.0, 2.3, f64::NAN), asic: (18392.0, 0.3, 51.6) },
+    AfRow { design: "TVLSI'23 Softmax-16b [34]", fpga: (1215.0, 1012.0, 3.32, 165.0), asic: (3819.0, 1.6, 1.6) },
+    AfRow { design: "ISQED'24 Tanh-FP32 [32]", fpga: (4298.0, f64::NAN, 56.0, 130.0), asic: (5060.0, 4.0, 8.75) },
+    AfRow { design: "ISQED'24 Tanh-FP16 [32]", fpga: (1530.0, f64::NAN, 34.0, 124.0), asic: (1180.0, 3.3, 3.0) },
+    AfRow { design: "ISQED'24 Tanh-BF16 [32]", fpga: (1513.0, f64::NAN, 38.0, 82.0), asic: (843.0, 3.4, 2.0) },
+    AfRow { design: "TC'23 Tanh/Sigmoid-16b [35]", fpga: (2395.0, 1503.0, 0.18, 681.0), asic: (870523.0, f64::NAN, 150.0) },
+    AfRow { design: "ISQED'24 Sigmoid-FP32 [32]", fpga: (5101.0, f64::NAN, 109.0, 121.0), asic: (2234.0, 7.6, 10.0) },
+    AfRow { design: "ISQED'24 Sigmoid-FP16 [32]", fpga: (1853.0, f64::NAN, 60.0, 118.0), asic: (1855.0, 4.4, 4.8) },
+    AfRow { design: "ISQED'24 Sigmoid-BF16 [32]", fpga: (1856.0, f64::NAN, 45.0, 83.0), asic: (1180.0, 3.26, 2.5) },
+    AfRow { design: "TVLSI'25 SSTp [3]", fpga: (897.0, 1231.0, 11.8, 59.0), asic: (49152.0, 2.3, 5.2) },
+];
+
+/// The paper's proposed multi-AF row of Table III.
+pub const AF_PROPOSED_PAPER: AfRow = AfRow {
+    design: "Proposed multi-AF FxP-4/8/16 (paper)",
+    fpga: (537.0, 468.0, 2.6, 30.0),
+    asic: (2138.0, 2.6, 60.0),
+};
+
+/// A Table IV row: FPGA system-level object detection (TinyYOLO-v3).
+#[derive(Debug, Clone, Copy)]
+pub struct SystemFpgaRow {
+    /// Design label.
+    pub design: &'static str,
+    /// Platform.
+    pub platform: &'static str,
+    /// Precision description.
+    pub precision: &'static str,
+    /// kLUTs / kFFs / DSPs.
+    pub resources: (f64, f64, u32),
+    /// Operating frequency, MHz.
+    pub freq_mhz: f64,
+    /// Energy efficiency, GOPS/W.
+    pub gops_per_w: f64,
+    /// Power, W.
+    pub power_w: f64,
+}
+
+/// Table IV published rows.
+pub const SYSTEM_FPGA_ROWS: &[SystemFpgaRow] = &[
+    SystemFpgaRow { design: "TVLSI'25 [3]", platform: "VC707", precision: "4/8/16/32", resources: (38.7, 17.4, 73), freq_mhz: 466.0, gops_per_w: 8.42, power_w: 2.24 },
+    SystemFpgaRow { design: "TCAS-I'24 [37]", platform: "ZU3EG", precision: "8", resources: (40.8, 45.5, 258), freq_mhz: 100.0, gops_per_w: 0.39, power_w: 2.2 },
+    SystemFpgaRow { design: "TCAS-II'23 [38]", platform: "XCVU9P", precision: "8", resources: (132.0, 39.5, 96), freq_mhz: 150.0, gops_per_w: 6.36, power_w: 5.52 },
+    SystemFpgaRow { design: "TVLSI'23 [39]", platform: "ZCU102", precision: "8", resources: (117.0, 74.0, 132), freq_mhz: 300.0, gops_per_w: 4.2, power_w: 6.58 },
+    SystemFpgaRow { design: "Access'24 [2]", platform: "VC707", precision: "4/8", resources: (19.8, 12.1, 39), freq_mhz: 136.0, gops_per_w: 0.68, power_w: 1.81 },
+    SystemFpgaRow { design: "ISCAS'25 [4]", platform: "VCU129", precision: "8/16/32", resources: (17.5, 14.8, 0), freq_mhz: 54.5, gops_per_w: 2.64, power_w: 1.6 },
+];
+
+/// The paper's proposed Table IV row.
+pub const SYSTEM_FPGA_PROPOSED_PAPER: SystemFpgaRow = SystemFpgaRow {
+    design: "Proposed (paper)",
+    platform: "VC707",
+    precision: "4/8/16",
+    resources: (26.7, 15.9, 0),
+    freq_mhz: 85.4,
+    gops_per_w: 6.43,
+    power_w: 0.53,
+};
+
+/// A Table V row: ASIC 8-bit accelerator comparison (28 nm, 0.9 V).
+#[derive(Debug, Clone, Copy)]
+pub struct SystemAsicRow {
+    /// Design label.
+    pub design: &'static str,
+    /// Architecture description.
+    pub arch: &'static str,
+    /// Datatype.
+    pub datatype: &'static str,
+    /// Frequency, GHz.
+    pub freq_ghz: f64,
+    /// Area, mm².
+    pub area_mm2: f64,
+    /// Power, mW.
+    pub power_mw: f64,
+    /// TOPS/W.
+    pub tops_per_w: f64,
+    /// TOPS/mm².
+    pub tops_per_mm2: f64,
+}
+
+/// Table V published rows.
+pub const SYSTEM_ASIC_ROWS: &[SystemAsicRow] = &[
+    SystemAsicRow { design: "TCAS-II'24 [29]", arch: "Vector Engine (64xMAC)", datatype: "FP8", freq_ghz: 1.47, area_mm2: 0.896, power_mw: 1622.0, tops_per_w: 7.24, tops_per_mm2: 2.39 },
+    SystemAsicRow { design: "TCAS-II'24 [29] (b)", arch: "Vector Engine (64xMAC)", datatype: "FP8", freq_ghz: 1.29, area_mm2: 1.18, power_mw: 1375.0, tops_per_w: 3.57, tops_per_mm2: 1.21 },
+    SystemAsicRow { design: "TCAS-I'22 [1]", arch: "Vector Engine (64xMAC)", datatype: "INT-8", freq_ghz: 0.4, area_mm2: 2.43, power_mw: 224.6, tops_per_w: 7.75, tops_per_mm2: 1.67 },
+    SystemAsicRow { design: "ISCAS'25 [4]", arch: "TREA (64xMAC)", datatype: "Posit-8", freq_ghz: 1.25, area_mm2: 6.73, power_mw: 230.4, tops_per_w: 7.55, tops_per_mm2: 0.16 },
+    SystemAsicRow { design: "TVLSI'25 [3]", arch: "Systolic Array (8x8)", datatype: "FxP8", freq_ghz: 0.44, area_mm2: 1.85, power_mw: 523.0, tops_per_w: 4.3, tops_per_mm2: 2.76 },
+    SystemAsicRow { design: "ICIIS'25 [11]", arch: "Layer-Reused (64xMAC)", datatype: "FxP8", freq_ghz: 0.25, area_mm2: 3.78, power_mw: 1540.0, tops_per_w: 4.28, tops_per_mm2: 2.07 },
+    SystemAsicRow { design: "Access'24 [2]", arch: "Shared Bank (256xMAC)", datatype: "FxP8", freq_ghz: 0.28, area_mm2: 1.58, power_mw: 499.7, tops_per_w: 6.87, tops_per_mm2: 1.18 },
+];
+
+/// The paper's proposed Table V rows (64 and 256 PE).
+pub const SYSTEM_ASIC_PROPOSED_PAPER: [SystemAsicRow; 2] = [
+    SystemAsicRow { design: "Proposed 64xPE (paper)", arch: "Vector Engine", datatype: "FxP-4/8/16", freq_ghz: 1.24, area_mm2: 0.43, power_mw: 329.0, tops_per_w: 3.84, tops_per_mm2: 1.52 },
+    SystemAsicRow { design: "Proposed 256xPE (paper)", arch: "Vector Engine", datatype: "FxP-4/8/16", freq_ghz: 0.96, area_mm2: 1.42, power_mw: 1186.0, tops_per_w: 11.67, tops_per_mm2: 4.83 },
+];
+
+/// End-to-end deployment comparison points (§V-F): latency (ms), power (W).
+pub const E2E_ROWS: &[(&str, f64, f64)] = &[
+    ("TVLSI'25 [3] (VC707)", 186.4, 2.24),
+    ("TRETS'23 [40] (VC707)", 772.0, 1.524),
+    ("ISCAS'25 [4] (Pynq-Z2)", 184.0, 0.93),
+    ("[6] (VCU102)", 163.7, 13.32),
+    ("NVIDIA Jetson Nano", 226.0, 1.34),
+    ("Raspberry Pi", 555.0, 2.7),
+];
+
+/// The paper's proposed e2e point: 84.6 ms @ 0.43 W on Pynq-Z2.
+pub const E2E_PROPOSED_PAPER: (&str, f64, f64) = ("Proposed (paper, Pynq-Z2)", 84.6, 0.43);

@@ -1,0 +1,43 @@
+//! Test utilities: deterministic PRNG and a small property-testing driver.
+//!
+//! The build environment vendors no `rand`/`proptest`, so this module
+//! provides the pieces the test suite (and the synthetic-data generators)
+//! need: a xoshiro256** generator with distribution helpers, and
+//! [`check_prop`], a minimalist property-based-testing loop with failure
+//! reporting and deterministic reseeding.
+
+mod prng;
+mod prop;
+
+pub use prng::Xoshiro256;
+pub use prop::{check_prop, check_prop_seeded, PropError, DEFAULT_CASES};
+
+/// Assert two f64 values are close (absolute + relative tolerance).
+///
+/// Mirrors `numpy.testing.assert_allclose` semantics:
+/// `|a-b| <= atol + rtol*|b|`.
+#[track_caller]
+pub fn assert_close(a: f64, b: f64, atol: f64, rtol: f64) {
+    let tol = atol + rtol * b.abs();
+    assert!(
+        (a - b).abs() <= tol,
+        "assert_close failed: a={a} b={b} |a-b|={} tol={tol}",
+        (a - b).abs()
+    );
+}
+
+/// Max absolute difference between two slices (panics on length mismatch).
+pub fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f64::max)
+}
+
+/// Root-mean-square error between two slices.
+pub fn rmse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len(), "length mismatch");
+    if a.is_empty() {
+        return 0.0;
+    }
+    let sum: f64 = a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum();
+    (sum / a.len() as f64).sqrt()
+}

@@ -1,0 +1,127 @@
+//! Minimal property-based-testing driver (proptest is not vendored).
+//!
+//! A property is a closure `FnMut(&mut Xoshiro256) -> Result<(), String>`
+//! that draws its own inputs from the PRNG and returns `Err(msg)` on
+//! violation. [`check_prop`] runs it `DEFAULT_CASES` times with distinct
+//! deterministic seeds and reports the first failing seed so the case can
+//! be replayed with [`check_prop_seeded`].
+
+use super::Xoshiro256;
+use std::fmt;
+
+/// Number of cases per property by default. Kept modest so the full suite
+/// stays fast; raise locally when hunting.
+pub const DEFAULT_CASES: u64 = 256;
+
+/// A property violation: which seed failed and why.
+#[derive(Debug)]
+pub struct PropError {
+    /// Seed of the failing case (replay with [`check_prop_seeded`]).
+    pub seed: u64,
+    /// Case index within the run.
+    pub case: u64,
+    /// The property's failure message.
+    pub message: String,
+}
+
+impl fmt::Display for PropError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "property failed at case {} (replay seed {}): {}",
+            self.case, self.seed, self.message
+        )
+    }
+}
+
+/// Run `prop` for [`DEFAULT_CASES`] deterministic cases derived from `name`.
+///
+/// Panics with a replayable seed on the first failure — intended to be
+/// called from `#[test]` fns.
+#[track_caller]
+pub fn check_prop<F>(name: &str, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+{
+    // Derive a base seed from the property name so distinct properties
+    // explore distinct streams but runs stay reproducible.
+    let base = fnv1a(name.as_bytes());
+    for case in 0..DEFAULT_CASES {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let mut rng = Xoshiro256::new(seed);
+        if let Err(message) = prop(&mut rng) {
+            panic!("{}", PropError { seed, case, message });
+        }
+    }
+}
+
+/// Replay a single case with an explicit seed (for debugging a failure).
+#[track_caller]
+pub fn check_prop_seeded<F>(seed: u64, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+{
+    let mut rng = Xoshiro256::new(seed);
+    if let Err(message) = prop(&mut rng) {
+        panic!("{}", PropError { seed, case: 0, message });
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check_prop("add commutes", |rng| {
+            let a = rng.int_in(-1000, 1000);
+            let b = rng.int_in(-1000, 1000);
+            if a + b == b + a {
+                Ok(())
+            } else {
+                Err(format!("{a} + {b} not commutative"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check_prop("always fails eventually", |rng| {
+            let x = rng.int_in(0, 10);
+            if x < 10 {
+                Ok(())
+            } else {
+                Err("hit 10".to_string())
+            }
+        });
+    }
+
+    #[test]
+    fn seeded_replay_is_deterministic() {
+        let mut first = None;
+        check_prop_seeded(12345, |rng| {
+            let v = rng.next_u64();
+            match first {
+                None => first = Some(v),
+                Some(_) => {}
+            }
+            Ok(())
+        });
+        let mut second = None;
+        check_prop_seeded(12345, |rng| {
+            second = Some(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,23 @@
+//! FP32 training substrate.
+//!
+//! The Fig. 11 accuracy-vs-iteration sweep needs *real trained weights* —
+//! quantisation error on random weights tells you nothing about application
+//! accuracy. The environment has no dataset downloads and no training
+//! framework, so this module provides both, from scratch:
+//!
+//! * [`dataset`] — a deterministic synthetic classification dataset
+//!   ("synthetic MNIST": 10 class prototypes on 14×14 images with
+//!   structured noise, the same spirit as the paper's MLP workloads);
+//! * [`trainer`] — plain SGD + momentum backpropagation over the
+//!   [`crate::model::Network`] layer types (dense, conv2d, max/avg pool,
+//!   flatten, softmax cross-entropy).
+//!
+//! Training always runs in FP32 (the paper quantises post-training; §IV-A:
+//! "observed accuracy differences are attributable solely to arithmetic
+//! approximation, not to changes in training").
+
+mod dataset;
+mod trainer;
+
+pub use dataset::{Dataset, DatasetConfig};
+pub use trainer::{train, SgdConfig, TrainReport};

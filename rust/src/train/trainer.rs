@@ -1,0 +1,480 @@
+//! SGD + momentum backpropagation over the `model::Layer` types.
+//!
+//! FP32 only (quantisation happens post-training). Supports Dense, Conv2d,
+//! Pool2d(max/avg), Flatten and a terminal Softmax trained with
+//! cross-entropy. AAD pooling is inference-only (the paper deploys it in
+//! hardware; training uses conventional pooling and the AAD unit is swapped
+//! in at deployment, which is also what our accuracy experiments do).
+
+use crate::activation::ActFn;
+use crate::model::{Layer, Network, Tensor};
+use crate::pooling::sliding::PoolKind;
+use crate::testutil::Xoshiro256;
+
+/// SGD hyperparameters.
+#[derive(Debug, Clone, Copy)]
+pub struct SgdConfig {
+    /// Learning rate.
+    pub lr: f64,
+    /// Momentum coefficient.
+    pub momentum: f64,
+    /// Epochs over the training set.
+    pub epochs: usize,
+    /// Minibatch size.
+    pub batch: usize,
+    /// Shuffling seed.
+    pub seed: u64,
+}
+
+impl Default for SgdConfig {
+    fn default() -> Self {
+        SgdConfig { lr: 0.05, momentum: 0.9, epochs: 10, batch: 32, seed: 99 }
+    }
+}
+
+/// Training outcome.
+#[derive(Debug, Clone)]
+pub struct TrainReport {
+    /// Mean cross-entropy loss per epoch.
+    pub loss_curve: Vec<f64>,
+    /// Final training accuracy.
+    pub train_accuracy: f64,
+}
+
+/// Activation derivative w.r.t. the pre-activation.
+fn act_grad(f: ActFn, z: f64) -> f64 {
+    match f {
+        ActFn::Identity => 1.0,
+        ActFn::Relu => {
+            if z > 0.0 {
+                1.0
+            } else {
+                0.0
+            }
+        }
+        ActFn::Sigmoid => {
+            let s = f.reference(z);
+            s * (1.0 - s)
+        }
+        ActFn::Tanh => {
+            let t = z.tanh();
+            1.0 - t * t
+        }
+        ActFn::Swish => {
+            let s = 1.0 / (1.0 + (-z).exp());
+            s + z * s * (1.0 - s)
+        }
+        ActFn::Gelu => {
+            // derivative of the tanh approximation
+            let c = (2.0 / std::f64::consts::PI).sqrt();
+            let u = c * (z + 0.044715 * z * z * z);
+            let t = u.tanh();
+            let du = c * (1.0 + 3.0 * 0.044715 * z * z);
+            0.5 * (1.0 + t) + 0.5 * z * (1.0 - t * t) * du
+        }
+        ActFn::Selu => {
+            const LAMBDA: f64 = 1.0507009873554805;
+            const ALPHA: f64 = 1.6732632423543772;
+            if z > 0.0 {
+                LAMBDA
+            } else {
+                LAMBDA * ALPHA * z.exp()
+            }
+        }
+        ActFn::Softmax => panic!("softmax handled at the loss"),
+    }
+}
+
+/// Per-layer forward cache for backprop.
+enum Cache {
+    Dense { input: Vec<f64>, pre: Vec<f64> },
+    Conv { input: Tensor, pre: Tensor },
+    Pool { input_shape: Vec<usize>, argmax: Vec<usize>, kind: PoolKind },
+    Flatten {
+        #[allow(dead_code)] // kept for debugging dumps of the cache chain
+        shape: Vec<usize>,
+    },
+    Softmax { probs: Vec<f64> },
+}
+
+/// Momentum buffers per parameterised layer.
+struct Velocity {
+    w: Vec<f64>,
+    b: Vec<f64>,
+}
+
+/// Train `net` in place; returns the loss curve.
+pub fn train(net: &mut Network, xs: &[Tensor], ys: &[usize], cfg: SgdConfig) -> TrainReport {
+    assert_eq!(xs.len(), ys.len());
+    assert!(!xs.is_empty(), "empty training set");
+    assert!(
+        matches!(net.layers.last(), Some(Layer::Softmax)),
+        "trainer requires a terminal softmax layer"
+    );
+    let mut rng = Xoshiro256::new(cfg.seed);
+    let mut vel: Vec<Option<Velocity>> = net
+        .layers
+        .iter()
+        .map(|l| match l {
+            Layer::Dense(d) => Some(Velocity {
+                w: vec![0.0; d.weights.len()],
+                b: vec![0.0; d.biases.len()],
+            }),
+            Layer::Conv2d(c) => Some(Velocity {
+                w: vec![0.0; c.weights.len()],
+                b: vec![0.0; c.biases.len()],
+            }),
+            _ => None,
+        })
+        .collect();
+
+    let mut loss_curve = Vec::with_capacity(cfg.epochs);
+    let mut order: Vec<usize> = (0..xs.len()).collect();
+    for _epoch in 0..cfg.epochs {
+        rng.shuffle(&mut order);
+        let mut epoch_loss = 0.0;
+        for chunk in order.chunks(cfg.batch) {
+            // accumulate gradients over the minibatch
+            let mut grads: Vec<Option<Velocity>> = net
+                .layers
+                .iter()
+                .map(|l| match l {
+                    Layer::Dense(d) => Some(Velocity {
+                        w: vec![0.0; d.weights.len()],
+                        b: vec![0.0; d.biases.len()],
+                    }),
+                    Layer::Conv2d(c) => Some(Velocity {
+                        w: vec![0.0; c.weights.len()],
+                        b: vec![0.0; c.biases.len()],
+                    }),
+                    _ => None,
+                })
+                .collect();
+            for &i in chunk {
+                epoch_loss += backprop_one(net, &xs[i], ys[i], &mut grads);
+            }
+            let scale = 1.0 / chunk.len() as f64;
+            // momentum update
+            for (layer, (v, g)) in net.layers.iter_mut().zip(vel.iter_mut().zip(&grads)) {
+                let (Some(v), Some(g)) = (v.as_mut(), g.as_ref()) else { continue };
+                match layer {
+                    Layer::Dense(d) => {
+                        update(&mut d.weights, &mut v.w, &g.w, cfg, scale);
+                        update(&mut d.biases, &mut v.b, &g.b, cfg, scale);
+                    }
+                    Layer::Conv2d(c) => {
+                        update(&mut c.weights, &mut v.w, &g.w, cfg, scale);
+                        update(&mut c.biases, &mut v.b, &g.b, cfg, scale);
+                    }
+                    _ => {}
+                }
+            }
+        }
+        loss_curve.push(epoch_loss / xs.len() as f64);
+    }
+    let train_accuracy = net.accuracy_f64(xs, ys);
+    TrainReport { loss_curve, train_accuracy }
+}
+
+fn update(params: &mut [f64], vel: &mut [f64], grad: &[f64], cfg: SgdConfig, scale: f64) {
+    for ((p, v), g) in params.iter_mut().zip(vel).zip(grad) {
+        *v = cfg.momentum * *v - cfg.lr * g * scale;
+        *p += *v;
+    }
+}
+
+/// Forward + backward for one sample; accumulates grads, returns the loss.
+fn backprop_one(net: &Network, x: &Tensor, y: usize, grads: &mut [Option<Velocity>]) -> f64 {
+    // ---- forward with caches
+    let mut caches: Vec<Cache> = Vec::with_capacity(net.layers.len());
+    let mut a = x.clone();
+    for layer in &net.layers {
+        match layer {
+            Layer::Dense(d) => {
+                let input = a.data().to_vec();
+                let mut pre = vec![0.0; d.outputs];
+                for (o, p) in pre.iter_mut().enumerate() {
+                    *p = d.neuron_weights(o).iter().zip(&input).map(|(w, x)| w * x).sum::<f64>()
+                        + d.biases[o];
+                }
+                let out: Vec<f64> = pre.iter().map(|&z| d.act.reference(z)).collect();
+                caches.push(Cache::Dense { input, pre });
+                a = Tensor::vector(&out);
+            }
+            Layer::Conv2d(c) => {
+                let input = a.clone();
+                let (h, w) = (input.shape()[1], input.shape()[2]);
+                let (oh, ow) = (c.out_dim(h), c.out_dim(w));
+                let mut pre = Tensor::zeros(&[c.out_ch, oh, ow]);
+                for o in 0..c.out_ch {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut s = c.biases[o];
+                            for i in 0..c.in_ch {
+                                for ky in 0..c.kernel {
+                                    for kx in 0..c.kernel {
+                                        s += c.weights[c.widx(o, i, ky, kx)]
+                                            * input.at3(i, oy * c.stride + ky, ox * c.stride + kx);
+                                    }
+                                }
+                            }
+                            *pre.at3_mut(o, oy, ox) = s;
+                        }
+                    }
+                }
+                let out = pre.map(|z| c.act.reference(z));
+                caches.push(Cache::Conv { input, pre });
+                a = out;
+            }
+            Layer::Pool2d(p) => {
+                assert!(
+                    p.kind != PoolKind::Aad,
+                    "AAD pooling is inference-only; train with max/avg"
+                );
+                let (ch, h, w) = (a.shape()[0], a.shape()[1], a.shape()[2]);
+                let (oh, ow) = (p.config.out_dim(h), p.config.out_dim(w));
+                let mut out = Tensor::zeros(&[ch, oh, ow]);
+                let mut argmax = Vec::with_capacity(ch * oh * ow);
+                for c in 0..ch {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let mut best = f64::NEG_INFINITY;
+                            let mut best_idx = 0usize;
+                            let mut sum = 0.0;
+                            for dy in 0..p.config.window {
+                                for dx in 0..p.config.window {
+                                    let yy = oy * p.config.stride + dy;
+                                    let xx = ox * p.config.stride + dx;
+                                    let v = a.at3(c, yy, xx);
+                                    sum += v;
+                                    if v > best {
+                                        best = v;
+                                        best_idx = c * h * w + yy * w + xx;
+                                    }
+                                }
+                            }
+                            *out.at3_mut(c, oy, ox) = match p.kind {
+                                PoolKind::Max => best,
+                                PoolKind::Avg => sum / (p.config.window * p.config.window) as f64,
+                                PoolKind::Aad => unreachable!(),
+                            };
+                            argmax.push(best_idx);
+                        }
+                    }
+                }
+                caches.push(Cache::Pool {
+                    input_shape: a.shape().to_vec(),
+                    argmax,
+                    kind: p.kind,
+                });
+                a = out;
+            }
+            Layer::Flatten => {
+                caches.push(Cache::Flatten { shape: a.shape().to_vec() });
+                let n = a.len();
+                a = a.reshape(&[n]);
+            }
+            Layer::Softmax => {
+                let probs = crate::activation::reference_softmax(a.data());
+                caches.push(Cache::Softmax { probs: probs.clone() });
+                a = Tensor::vector(&probs);
+            }
+        }
+    }
+
+    // ---- loss + backward
+    let mut loss = 0.0;
+    let mut grad: Vec<f64> = Vec::new(); // dL/d(input of layer being visited)
+    for (li, layer) in net.layers.iter().enumerate().rev() {
+        match (layer, &caches[li]) {
+            (Layer::Softmax, Cache::Softmax { probs }) => {
+                loss = -(probs[y].max(1e-12)).ln();
+                grad = probs.clone();
+                grad[y] -= 1.0; // dL/dz for softmax + CE
+            }
+            (Layer::Dense(d), Cache::Dense { input, pre }) => {
+                let g = grads[li].as_mut().unwrap();
+                let mut dx = vec![0.0; d.inputs];
+                for o in 0..d.outputs {
+                    let dz = grad[o] * act_grad(d.act, pre[o]);
+                    g.b[o] += dz;
+                    let row = o * d.inputs;
+                    for i in 0..d.inputs {
+                        g.w[row + i] += dz * input[i];
+                        dx[i] += d.weights[row + i] * dz;
+                    }
+                }
+                grad = dx;
+            }
+            (Layer::Conv2d(c), Cache::Conv { input, pre }) => {
+                let g = grads[li].as_mut().unwrap();
+                let (h, w) = (input.shape()[1], input.shape()[2]);
+                let (oh, ow) = (c.out_dim(h), c.out_dim(w));
+                let mut dx = vec![0.0; input.len()];
+                for o in 0..c.out_ch {
+                    for oy in 0..oh {
+                        for ox in 0..ow {
+                            let z = pre.at3(o, oy, ox);
+                            let dz = grad[(o * oh + oy) * ow + ox] * act_grad(c.act, z);
+                            g.b[o] += dz;
+                            for i in 0..c.in_ch {
+                                for ky in 0..c.kernel {
+                                    for kx in 0..c.kernel {
+                                        let iy = oy * c.stride + ky;
+                                        let ix = ox * c.stride + kx;
+                                        g.w[c.widx(o, i, ky, kx)] += dz * input.at3(i, iy, ix);
+                                        dx[i * h * w + iy * w + ix] +=
+                                            c.weights[c.widx(o, i, ky, kx)] * dz;
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                grad = dx;
+            }
+            (Layer::Pool2d(p), Cache::Pool { input_shape, argmax, kind }) => {
+                let n: usize = input_shape.iter().product();
+                let mut dx = vec![0.0; n];
+                match kind {
+                    PoolKind::Max => {
+                        for (out_idx, &in_idx) in argmax.iter().enumerate() {
+                            dx[in_idx] += grad[out_idx];
+                        }
+                    }
+                    PoolKind::Avg => {
+                        let (ch, h, w) = (input_shape[0], input_shape[1], input_shape[2]);
+                        let (oh, ow) = (p.config.out_dim(h), p.config.out_dim(w));
+                        let scale = 1.0 / (p.config.window * p.config.window) as f64;
+                        for c in 0..ch {
+                            for oy in 0..oh {
+                                for ox in 0..ow {
+                                    let gv = grad[(c * oh + oy) * ow + ox] * scale;
+                                    for dy in 0..p.config.window {
+                                        for dx_ in 0..p.config.window {
+                                            let yy = oy * p.config.stride + dy;
+                                            let xx = ox * p.config.stride + dx_;
+                                            dx[c * h * w + yy * w + xx] += gv;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    PoolKind::Aad => unreachable!(),
+                }
+                grad = dx;
+            }
+            (Layer::Flatten, Cache::Flatten { .. }) => { /* gradient is already flat */ }
+            _ => unreachable!("cache/layer mismatch"),
+        }
+    }
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workloads::{mlp, small_cnn};
+    use crate::train::{Dataset, DatasetConfig};
+
+    fn tiny_dataset() -> Dataset {
+        Dataset::generate(DatasetConfig {
+            train: 300,
+            test: 100,
+            noise: 0.15,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn mlp_loss_decreases_and_beats_chance() {
+        let data = tiny_dataset();
+        let mut net = mlp("t", &[196, 32, 10], ActFn::Tanh, 7);
+        let report = train(
+            &mut net,
+            &data.train_x,
+            &data.train_y,
+            SgdConfig { epochs: 8, lr: 0.08, ..Default::default() },
+        );
+        assert!(
+            report.loss_curve.last().unwrap() < &report.loss_curve[0],
+            "loss should fall: {:?}",
+            report.loss_curve
+        );
+        let acc = net.accuracy_f64(&data.test_x, &data.test_y);
+        assert!(acc > 0.6, "test accuracy {acc}");
+    }
+
+    #[test]
+    fn cnn_trains_above_chance() {
+        let data = tiny_dataset();
+        let mut net = small_cnn("c", PoolKind::Max, 3);
+        let xs = data.train_x_chw();
+        let report = train(
+            &mut net,
+            &xs[..200],
+            &data.train_y[..200],
+            SgdConfig { epochs: 4, lr: 0.05, ..Default::default() },
+        );
+        assert!(report.loss_curve.last().unwrap() < &report.loss_curve[0]);
+        let acc = net.accuracy_f64(&data.test_x_chw(), &data.test_y);
+        assert!(acc > 0.4, "cnn test accuracy {acc}");
+    }
+
+    #[test]
+    #[should_panic(expected = "terminal softmax")]
+    fn trainer_requires_softmax_head() {
+        let data = tiny_dataset();
+        let mut net = mlp("t", &[196, 10], ActFn::Tanh, 7);
+        net.layers.pop(); // drop softmax
+        train(&mut net, &data.train_x, &data.train_y, SgdConfig::default());
+    }
+
+    #[test]
+    fn gradient_check_dense() {
+        // numerical gradient check on a tiny dense net
+        let mut net = mlp("g", &[4, 3, 2], ActFn::Tanh, 11);
+        let x = Tensor::vector(&[0.3, -0.2, 0.5, 0.1]);
+        let y = 1usize;
+        let loss_of = |net: &Network| -> f64 {
+            let p = net.forward_f64(&x);
+            -(p.data()[y].max(1e-12)).ln()
+        };
+        // analytic grads
+        let mut grads: Vec<Option<Velocity>> = net
+            .layers
+            .iter()
+            .map(|l| match l {
+                Layer::Dense(d) => Some(Velocity {
+                    w: vec![0.0; d.weights.len()],
+                    b: vec![0.0; d.biases.len()],
+                }),
+                _ => None,
+            })
+            .collect();
+        backprop_one(&net, &x, y, &mut grads);
+        // numeric vs analytic on layer 0 weights
+        let eps = 1e-5;
+        for wi in 0..6 {
+            let orig = if let Layer::Dense(d) = &net.layers[0] { d.weights[wi] } else { 0.0 };
+            if let Layer::Dense(d) = &mut net.layers[0] {
+                d.weights[wi] = orig + eps;
+            }
+            let lp = loss_of(&net);
+            if let Layer::Dense(d) = &mut net.layers[0] {
+                d.weights[wi] = orig - eps;
+            }
+            let lm = loss_of(&net);
+            if let Layer::Dense(d) = &mut net.layers[0] {
+                d.weights[wi] = orig;
+            }
+            let numeric = (lp - lm) / (2.0 * eps);
+            let analytic = grads[0].as_ref().unwrap().w[wi];
+            assert!(
+                (numeric - analytic).abs() < 1e-5 * (1.0 + numeric.abs()),
+                "w[{wi}]: numeric {numeric} vs analytic {analytic}"
+            );
+        }
+    }
+}

@@ -1,0 +1,118 @@
+//! Cross-validation against Python-generated golden vectors — the §IV-B
+//! analogue ("RTL outputs are compared against the software emulation model
+//! for a wide range of randomised test vectors").
+//!
+//! `python/compile/golden.py` (run by `make artifacts`) generates vectors
+//! from the jnp fixed-point oracle that the Pallas kernels are bit-exact
+//! against; this test drives the *Rust* CORDIC model with the same inputs:
+//!
+//! * `mac` / `dot` — must match **bit-exactly** (identical linear-mode
+//!   algorithm on both sides);
+//! * `sigmoid` / `tanh` — must match within a tight tolerance (equivalent
+//!   but differently-factored HR/LV datapaths).
+
+use corvet::activation::funcs;
+use corvet::cordic::{linear, GUARD_FRAC, ONE};
+
+struct Vector {
+    kind: String,
+    iters: u32,
+    operands: Vec<i64>,
+    expected: i64,
+}
+
+fn load_vectors() -> Option<Vec<Vector>> {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/golden.tsv");
+    let text = std::fs::read_to_string(path).ok()?;
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let cols: Vec<&str> = line.split('\t').collect();
+        assert_eq!(cols.len(), 4, "malformed golden line: {line}");
+        out.push(Vector {
+            kind: cols[0].to_string(),
+            iters: cols[1].parse().unwrap(),
+            operands: cols[2].split(',').map(|v| v.parse().unwrap()).collect(),
+            expected: cols[3].parse().unwrap(),
+        });
+    }
+    Some(out)
+}
+
+#[test]
+fn mac_vectors_bit_exact() {
+    let Some(vectors) = load_vectors() else {
+        eprintln!("skipping: artifacts/golden.tsv not built");
+        return;
+    };
+    let mut checked = 0;
+    for v in vectors.iter().filter(|v| v.kind == "mac") {
+        let [acc, x, w] = v.operands[..] else { panic!("mac needs 3 operands") };
+        let r = linear::mac(acc, x, w, v.iters);
+        assert_eq!(
+            r.value, v.expected,
+            "mac(acc={acc}, x={x}, w={w}, iters={}) = {} != golden {}",
+            v.iters, r.value, v.expected
+        );
+        checked += 1;
+    }
+    assert!(checked >= 100, "too few mac vectors ({checked})");
+}
+
+#[test]
+fn dot_vectors_bit_exact() {
+    let Some(vectors) = load_vectors() else {
+        eprintln!("skipping: artifacts/golden.tsv not built");
+        return;
+    };
+    let mut checked = 0;
+    for v in vectors.iter().filter(|v| v.kind == "dot") {
+        // operands: j activations, j weights, 1 bias
+        let j = (v.operands.len() - 1) / 2;
+        let xs = &v.operands[..j];
+        let ws = &v.operands[j..2 * j];
+        let bias = v.operands[2 * j];
+        let mut acc = bias;
+        for (&x, &w) in xs.iter().zip(ws) {
+            acc = linear::mac(acc, x, w, v.iters).value;
+        }
+        assert_eq!(acc, v.expected, "dot j={j} iters={} mismatch", v.iters);
+        checked += 1;
+    }
+    assert!(checked >= 50, "too few dot vectors ({checked})");
+}
+
+#[test]
+fn af_vectors_within_tolerance() {
+    let Some(vectors) = load_vectors() else {
+        eprintln!("skipping: artifacts/golden.tsv not built");
+        return;
+    };
+    let mut checked = 0;
+    for v in vectors.iter().filter(|v| v.kind == "sigmoid" || v.kind == "tanh") {
+        let t = v.operands[0];
+        let (got, _) = match v.kind.as_str() {
+            "sigmoid" => funcs::sigmoid(t, v.iters),
+            "tanh" => funcs::tanh(t, v.iters),
+            _ => unreachable!(),
+        };
+        // independent factorings of the same datapath: agree to ~2^-(iters-3)
+        let tol = (ONE >> (v.iters.min(GUARD_FRAC) - 3)).max(1) as f64;
+        let diff = (got - v.expected).abs() as f64;
+        assert!(
+            diff <= tol,
+            "{}(t={t}, iters={}): rust {} vs python {} (|diff| {} > tol {})",
+            v.kind,
+            v.iters,
+            got,
+            v.expected,
+            diff,
+            tol
+        );
+        checked += 1;
+    }
+    assert!(checked >= 100, "too few AF vectors ({checked})");
+}

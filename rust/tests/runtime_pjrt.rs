@@ -1,0 +1,133 @@
+//! Integration test of the AOT → PJRT path: load the HLO text artifacts
+//! produced by `make artifacts`, execute them on the CPU PJRT client, and
+//! check numerics against the Rust-side float reference.
+//!
+//! Requires `artifacts/` to exist (the Makefile builds it before tests).
+
+use corvet::cordic::mac::ExecMode;
+use corvet::model::workloads::paper_mlp;
+use corvet::model::{Layer, Tensor};
+use corvet::quant::Precision;
+use corvet::runtime::{quantize_network, ArtifactRegistry, PjrtRuntime, GUARD_ONE};
+use corvet::testutil::Xoshiro256;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.tsv").exists()
+}
+
+/// Run the served model and the Rust float reference side by side.
+#[test]
+fn pjrt_executes_artifact_and_matches_reference() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let registry = ArtifactRegistry::load(artifacts_dir()).unwrap();
+    let mut rt = PjrtRuntime::new().unwrap();
+
+    // a deterministic "trained" network (weights only need |w|<1 here)
+    let net = paper_mlp(42);
+    let (weights, clipped) = quantize_network(&net).unwrap();
+    assert_eq!(clipped, 0);
+    rt.deploy_weights(&weights).unwrap();
+
+    let mut rng = Xoshiro256::new(9);
+    let x: Vec<f64> = (0..196).map(|_| rng.uniform(-0.9, 0.9)).collect();
+    let xq: Vec<i64> = x.iter().map(|&v| (v * GUARD_ONE as f64).round() as i64).collect();
+
+    let logits = rt
+        .execute_via(&registry, Precision::Fxp16, ExecMode::Accurate, &xq, 1)
+        .unwrap();
+    assert_eq!(logits.len(), 10);
+
+    // float reference: forward through the dense layers (pre-softmax)
+    let mut h = Tensor::vector(&x);
+    let mut reference = Vec::new();
+    for layer in &net.layers {
+        if let Layer::Dense(d) = layer {
+            let mut out = Vec::with_capacity(d.outputs);
+            for o in 0..d.outputs {
+                let s: f64 = d
+                    .neuron_weights(o)
+                    .iter()
+                    .zip(h.data())
+                    .map(|(w, x)| w * x)
+                    .sum::<f64>()
+                    + d.biases[o];
+                out.push(s);
+            }
+            // hidden sigmoid except last layer
+            reference = out.clone();
+            let is_last = d.outputs == 10;
+            h = Tensor::vector(
+                &out.iter()
+                    .map(|&v| if is_last { v } else { 1.0 / (1.0 + (-v).exp()) })
+                    .collect::<Vec<f64>>(),
+            );
+        }
+    }
+    for (g, r) in logits.iter().zip(&reference) {
+        assert!(
+            (f64::from(*g) - r).abs() < 0.02,
+            "pjrt logit {g} vs reference {r}"
+        );
+    }
+}
+
+#[test]
+fn batched_execution_pads_and_truncates() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let registry = ArtifactRegistry::load(artifacts_dir()).unwrap();
+    let mut rt = PjrtRuntime::new().unwrap();
+    let net = paper_mlp(7);
+    let (weights, _) = quantize_network(&net).unwrap();
+    rt.deploy_weights(&weights).unwrap();
+
+    let mut rng = Xoshiro256::new(3);
+    let rows = 3usize; // padded to the b8 artifact
+    let x: Vec<i64> = (0..rows * 196)
+        .map(|_| (rng.uniform(-0.9, 0.9) * GUARD_ONE as f64) as i64)
+        .collect();
+    let logits = rt
+        .execute_via(&registry, Precision::Fxp8, ExecMode::Approximate, &x, rows)
+        .unwrap();
+    assert_eq!(logits.len(), rows * 10);
+
+    // row 0 must equal the single-row execution of the same input
+    let single = rt
+        .execute_via(&registry, Precision::Fxp8, ExecMode::Approximate, &x[..196], 1)
+        .unwrap();
+    for (a, b) in logits[..10].iter().zip(&single) {
+        assert_eq!(a, b, "batch row 0 differs from single-row execution");
+    }
+}
+
+#[test]
+fn approx_and_accurate_artifacts_differ_but_agree_roughly() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let registry = ArtifactRegistry::load(artifacts_dir()).unwrap();
+    let mut rt = PjrtRuntime::new().unwrap();
+    let net = paper_mlp(11);
+    let (weights, _) = quantize_network(&net).unwrap();
+    rt.deploy_weights(&weights).unwrap();
+
+    let mut rng = Xoshiro256::new(5);
+    let x: Vec<i64> =
+        (0..196).map(|_| (rng.uniform(-0.9, 0.9) * GUARD_ONE as f64) as i64).collect();
+    let a = rt.execute_via(&registry, Precision::Fxp8, ExecMode::Approximate, &x, 1).unwrap();
+    let c = rt.execute_via(&registry, Precision::Fxp8, ExecMode::Accurate, &x, 1).unwrap();
+    assert_ne!(a, c, "modes should produce different fixed-point results");
+    for (x, y) in a.iter().zip(&c) {
+        assert!((x - y).abs() < 0.1, "modes disagree too much: {x} vs {y}");
+    }
+}

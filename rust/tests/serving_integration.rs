@@ -1,0 +1,141 @@
+//! Integration test: the full serving coordinator over real artifacts —
+//! batching, precision governor, metrics, graceful shutdown.
+
+use corvet::coordinator::{BatcherConfig, GovernorConfig, Server, ServerConfig};
+use corvet::cordic::mac::ExecMode;
+use corvet::model::workloads::paper_mlp;
+use corvet::quant::Precision;
+use corvet::runtime::quantize_network;
+use corvet::testutil::Xoshiro256;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.tsv").exists()
+}
+
+#[test]
+fn server_serves_batches_and_shuts_down() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = paper_mlp(3);
+    let (weights, _) = quantize_network(&net).unwrap();
+    let mut server = Server::start(artifacts_dir(), weights, ServerConfig::default()).unwrap();
+
+    let mut rng = Xoshiro256::new(1);
+    let pending: Vec<_> = (0..40)
+        .map(|_| server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap())
+        .collect();
+    for rx in pending {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.class < 10);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.completed, 40);
+    assert!(snap.batches >= 5, "expected multiple batches, got {}", snap.batches);
+    assert!(snap.mean_batch > 1.0, "batching should engage: {}", snap.mean_batch);
+    assert!(snap.latency.p99_ms < 5_000.0, "p99 {} ms", snap.latency.p99_ms);
+}
+
+#[test]
+fn governor_switches_to_approximate_under_pressure() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = paper_mlp(5);
+    let (weights, _) = quantize_network(&net).unwrap();
+    let config = ServerConfig {
+        precision: Precision::Fxp8,
+        batcher: BatcherConfig::default(),
+        governor: GovernorConfig { approx_threshold: 4, accurate_threshold: 0, pinned: None },
+    };
+    let mut server = Server::start(artifacts_dir(), weights, config).unwrap();
+
+    // flood: submit far more than the approx threshold before any drain
+    let mut rng = Xoshiro256::new(2);
+    let pending: Vec<_> = (0..120)
+        .map(|_| server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap())
+        .collect();
+    let mut approx = 0;
+    for rx in pending {
+        if rx.recv().unwrap().mode == ExecMode::Approximate {
+            approx += 1;
+        }
+    }
+    let snap = server.shutdown().unwrap();
+    assert!(approx > 0, "governor never engaged approximate mode");
+    assert_eq!(snap.approx_served as usize, approx);
+}
+
+#[test]
+fn pinned_governor_stays_accurate() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let net = paper_mlp(5);
+    let (weights, _) = quantize_network(&net).unwrap();
+    let config = ServerConfig {
+        precision: Precision::Fxp8,
+        batcher: BatcherConfig::default(),
+        governor: GovernorConfig {
+            approx_threshold: 1,
+            accurate_threshold: 0,
+            pinned: Some(ExecMode::Accurate),
+        },
+    };
+    let mut server = Server::start(artifacts_dir(), weights, config).unwrap();
+    let mut rng = Xoshiro256::new(3);
+    let pending: Vec<_> = (0..30)
+        .map(|_| server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap())
+        .collect();
+    for rx in pending {
+        assert_eq!(rx.recv().unwrap().mode, ExecMode::Accurate);
+    }
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.approx_served, 0);
+}
+
+#[test]
+fn served_results_match_direct_runtime_execution() {
+    if !have_artifacts() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    use corvet::runtime::{quantize_input, ArtifactRegistry, PjrtRuntime};
+    let net = paper_mlp(7);
+    let (weights, _) = quantize_network(&net).unwrap();
+
+    // direct path
+    let registry = ArtifactRegistry::load(artifacts_dir()).unwrap();
+    let mut rt = PjrtRuntime::new().unwrap();
+    rt.deploy_weights(&weights).unwrap();
+    let mut rng = Xoshiro256::new(4);
+    let input = rng.uniform_vec(196, -0.9, 0.9);
+    let xq = quantize_input(&input);
+    let direct = rt
+        .execute_via(&registry, Precision::Fxp8, ExecMode::Accurate, &xq, 1)
+        .unwrap();
+
+    // served path (pinned accurate so the artifact choice matches)
+    let config = ServerConfig {
+        precision: Precision::Fxp8,
+        batcher: BatcherConfig { max_batch: 1, ..Default::default() },
+        governor: GovernorConfig {
+            approx_threshold: usize::MAX,
+            accurate_threshold: 0,
+            pinned: Some(ExecMode::Accurate),
+        },
+    };
+    let mut server = Server::start(artifacts_dir(), weights, config).unwrap();
+    let resp = server.submit(input).unwrap().recv().unwrap();
+    server.shutdown().unwrap();
+
+    assert_eq!(resp.logits, direct, "served logits must equal direct execution");
+}
