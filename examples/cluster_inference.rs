@@ -1,0 +1,80 @@
+//! Cluster inference: shard one VGG-16 inference stream across four CORVET
+//! engines and price the resulting system.
+//!
+//! 1. Partition the trace layer-parallel (pipeline stages chosen from
+//!    per-layer MAC counts by the min-max planner).
+//! 2. Stream micro-batches through the threaded shard executor, with
+//!    interconnect transfers and double-buffered weight staging charged.
+//! 3. Compare against a single engine and price the 4-engine ASIC.
+//!
+//! Runs standalone (no artifacts needed):
+//! `cargo run --release --example cluster_inference`
+
+use corvet::cluster::{Cluster, ClusterConfig, InterconnectConfig, PartitionStrategy};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::EngineConfig;
+use corvet::hwcost;
+use corvet::model::workloads::vgg16_trace;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::fnum;
+
+fn main() {
+    let trace = vgg16_trace();
+    let policy = PolicyTable::uniform(
+        trace.compute_layers(),
+        Precision::Fxp8,
+        ExecMode::Approximate,
+    );
+    let engine = EngineConfig::pe256();
+    let batches = 16u64;
+
+    let single = Cluster::new(ClusterConfig::new(1, engine)).run_trace(&trace, &policy, batches);
+
+    let config = ClusterConfig {
+        shards: 4,
+        engine,
+        interconnect: InterconnectConfig::default(),
+        strategy: Some(PartitionStrategy::Pipeline),
+    };
+    let cluster = Cluster::new(config);
+    let plan = cluster.plan(&trace, &policy);
+    let report = corvet::cluster::ShardExecutor::new(engine, config.interconnect)
+        .run(&plan, batches);
+
+    let asic = hwcost::cluster_asic(&engine, 4, 4);
+    let clock = asic.freq_ghz * 1e9;
+
+    println!("workload    : {} ({:.1} GMACs/inference)", trace.name, trace.total_macs() as f64 / 1e9);
+    println!("cluster     : 4 x {}-PE engines, {} partition", engine.pes, report.strategy);
+    println!("planner     : MAC imbalance {}", fnum(plan.mac_imbalance()));
+    println!();
+    for s in &report.shards {
+        println!(
+            "  shard {} layers {:>2}..{:<2} : {:>9} cyc/batch (+{} comm), util {}, staging stall {}",
+            s.shard,
+            s.layer_span.0,
+            s.layer_span.1,
+            s.compute_cycles_per_batch,
+            s.comm_cycles_per_batch,
+            fnum(s.utilization),
+            s.prefetch.stall_cycles,
+        );
+    }
+    println!();
+    println!("single engine : {} cyc/inference", single.cycles_per_batch);
+    println!("4-shard       : {} cyc/inference (steady state)", report.cycles_per_batch);
+    println!("speedup       : {}x (interconnect included)", fnum(report.speedup_over(&single)));
+    println!(
+        "throughput    : {} -> {} inferences/s @ {:.2} GHz",
+        fnum(single.inferences_per_s(clock)),
+        fnum(report.inferences_per_s(clock)),
+        asic.freq_ghz
+    );
+    println!(
+        "silicon       : {} mm², {} mW, {} TOPS/W peak (NoC {} of area)",
+        fnum(asic.area_mm2),
+        fnum(asic.power_mw),
+        fnum(asic.tops_per_w()),
+        fnum(asic.noc_overhead_fraction()),
+    );
+}

@@ -1,0 +1,96 @@
+//! Bench: cluster throughput scaling — 1/2/4/8 engine shards × 64/256-PE
+//! engines × VGG-16 and transformer-MLP traces, interconnect overhead
+//! included. The headline the ROADMAP asks for: ≥3× cluster throughput at
+//! 4 shards vs 1 on VGG-16, with per-shard utilisation reported.
+
+use corvet::cluster::{
+    Cluster, ClusterConfig, ClusterReport, InterconnectConfig, PartitionStrategy,
+};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::EngineConfig;
+use corvet::model::workloads::{vgg16_trace, vit_tiny_mlp_trace, Trace};
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::{fnum, Table};
+
+const MICRO_BATCHES: u64 = 8;
+
+fn engine(pes: usize) -> EngineConfig {
+    let mut cfg = EngineConfig::pe256();
+    cfg.pes = pes;
+    cfg.af_blocks = (pes / 64).max(1);
+    cfg.pool_units = (pes / 8).max(1);
+    cfg
+}
+
+fn run(trace: &Trace, pes: usize, shards: usize, strategy: PartitionStrategy) -> ClusterReport {
+    let policy = PolicyTable::uniform(
+        trace.compute_layers(),
+        Precision::Fxp8,
+        ExecMode::Approximate,
+    );
+    let cluster = Cluster::new(ClusterConfig {
+        shards,
+        engine: engine(pes),
+        interconnect: InterconnectConfig::default(),
+        strategy: Some(strategy),
+    });
+    cluster.run_trace(trace, &policy, MICRO_BATCHES)
+}
+
+fn main() {
+    for trace in [vgg16_trace(), vit_tiny_mlp_trace()] {
+        for pes in [64usize, 256] {
+            let mut t = Table::new(
+                &format!(
+                    "cluster throughput — {} on {pes}-PE shards (pipeline, {} micro-batches)",
+                    trace.name, MICRO_BATCHES
+                ),
+                &["shards", "cyc/inf (M)", "speedup", "mean util", "min util", "max util",
+                  "icn cycles (M)"],
+            );
+            let base = run(&trace, pes, 1, PartitionStrategy::Pipeline);
+            for shards in [1usize, 2, 4, 8] {
+                let r = run(&trace, pes, shards, PartitionStrategy::Pipeline);
+                let utils: Vec<f64> = r.shards.iter().map(|s| s.utilization).collect();
+                let min_u = utils.iter().cloned().fold(f64::INFINITY, f64::min);
+                let max_u = utils.iter().cloned().fold(0.0, f64::max);
+                t.row(vec![
+                    shards.to_string(),
+                    fnum(r.cycles_per_batch as f64 / 1e6),
+                    fnum(r.speedup_over(&base)),
+                    fnum(r.mean_utilization()),
+                    fnum(min_u),
+                    fnum(max_u),
+                    fnum(r.interconnect_cycles as f64 / 1e6),
+                ]);
+            }
+            print!("{}", t.render());
+        }
+    }
+
+    // strategy face-off at the acceptance point: 4 shards on VGG-16
+    let vgg = vgg16_trace();
+    let base = run(&vgg, 64, 1, PartitionStrategy::Pipeline);
+    println!("\nstrategy comparison (VGG-16, 4 x 64-PE shards, speedup vs 1 shard):");
+    for strategy in [
+        PartitionStrategy::Pipeline,
+        PartitionStrategy::Tensor,
+        PartitionStrategy::Data,
+    ] {
+        let r = run(&vgg, 64, 4, strategy);
+        println!(
+            "  {strategy:<8} : {}x  (cyc/inf {} M, mean util {})",
+            fnum(r.speedup_over(&base)),
+            fnum(r.cycles_per_batch as f64 / 1e6),
+            fnum(r.mean_utilization()),
+        );
+    }
+
+    let r4 = run(&vgg, 64, 4, PartitionStrategy::Pipeline);
+    let speedup = r4.speedup_over(&base);
+    println!(
+        "\n4-shard VGG-16 throughput gain (interconnect included): {}x — target >= 3x: {}",
+        fnum(speedup),
+        if speedup >= 3.0 { "PASS" } else { "FAIL" }
+    );
+}

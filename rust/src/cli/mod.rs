@@ -85,6 +85,10 @@ COMMANDS:
   sensitivity [--quick] [--budget F] run the accuracy-sensitivity heuristic
   serve [--requests N] [--batch N] [--precision fxp8|fxp16]
         [--artifacts DIR] [--quick]  e2e serving demo over PJRT artifacts
+  cluster [--workload tinyyolo|vgg16|vit-mlp] [--shards M] [--pes N]
+          [--strategy pipeline|tensor|data] [--batches B] [--precision P]
+          [--mode approx|accurate] [--sweep] [--csv]
+                                     sharded multi-engine simulation
   utilization                        multi-AF time-multiplexing report
   info [--artifacts DIR]             platform + artifact inventory
 ";

@@ -1,0 +1,274 @@
+//! The async shard executor: one simulation thread per shard, plus the
+//! analytic schedule that assembles per-shard cycle counts into a cluster
+//! makespan.
+//!
+//! Each shard's cycle simulation is independent (the sub-traces are fixed
+//! by the plan), so the expensive part — `VectorEngine::run_trace` per
+//! shard — fans out across OS threads via `std::thread::scope`. The
+//! cross-shard schedule (pipeline fill/steady-state, collective serialising
+//! under tensor parallelism, micro-batch spreading under data parallelism)
+//! is then computed from the joined results, with cluster-level
+//! double-buffered weight staging modelled by [`crate::memory::Prefetcher`]:
+//! a shard's parameter stream is issued at cycle 0 and hides behind the
+//! pipeline fill of the stages ahead of it; whatever is not hidden shows up
+//! as a cold-start stall in the makespan and in the shard's
+//! [`PrefetchStats`](crate::memory::PrefetchStats).
+
+use super::interconnect::InterconnectConfig;
+use super::plan::{split_even, PartitionPlan, PartitionStrategy};
+use super::report::{ClusterReport, ShardReport};
+use crate::engine::{EngineConfig, VectorEngine};
+use crate::memory::Prefetcher;
+
+/// Runs a [`PartitionPlan`] on M simulated engines.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardExecutor {
+    /// Engine configuration every shard runs.
+    pub engine: EngineConfig,
+    /// Interconnect pricing.
+    pub interconnect: InterconnectConfig,
+}
+
+impl ShardExecutor {
+    /// New executor.
+    pub fn new(engine: EngineConfig, interconnect: InterconnectConfig) -> Self {
+        ShardExecutor { engine, interconnect }
+    }
+
+    /// Stream `micro_batches` inferences through the planned cluster and
+    /// report per-shard utilisation plus the cluster makespan.
+    pub fn run(&self, plan: &PartitionPlan, micro_batches: u64) -> ClusterReport {
+        assert!(micro_batches >= 1, "need at least one micro-batch");
+        assert!(!plan.is_empty(), "empty partition plan");
+        let n = plan.len();
+        let engine = self.engine;
+
+        // fan the per-shard cycle simulations out across threads
+        let reports: Vec<crate::engine::EngineReport> = std::thread::scope(|s| {
+            let handles: Vec<_> = plan
+                .shards
+                .iter()
+                .map(|sp| s.spawn(move || VectorEngine::new(engine).run_trace(&sp.trace, &sp.policy)))
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard simulation thread panicked"))
+                .collect()
+        });
+
+        let spans: Vec<u64> = reports.iter().map(|r| r.total_cycles).collect();
+        let costs: Vec<u64> = plan
+            .shards
+            .iter()
+            .zip(&spans)
+            .map(|(sp, &c)| c + sp.comm_cycles)
+            .collect();
+        let bottleneck = *costs.iter().max().unwrap();
+        let b = micro_batches;
+
+        // per-strategy schedule: when each shard first needs its weights
+        // resident (fill offset), how many batches it runs, and the
+        // steady-state + makespan structure
+        let (fill, batches, steady, makespan_base) = match plan.strategy {
+            PartitionStrategy::Pipeline => {
+                let mut fill = Vec::with_capacity(n);
+                let mut acc = 0u64;
+                for &c in &costs {
+                    fill.push(acc);
+                    acc += c;
+                }
+                let total_fill = acc; // first batch traverses every stage
+                (fill, vec![b; n], bottleneck, total_fill + (b - 1) * bottleneck)
+            }
+            PartitionStrategy::Tensor => {
+                // all shards advance in lockstep, separated by collectives
+                (vec![0u64; n], vec![b; n], bottleneck, b * bottleneck)
+            }
+            PartitionStrategy::Data => {
+                let batches: Vec<u64> =
+                    (0..n).map(|i| split_even(b, n as u64, i as u64)).collect();
+                let local = batches
+                    .iter()
+                    .zip(&spans)
+                    .map(|(&bi, &c)| bi * c)
+                    .max()
+                    .unwrap_or(0);
+                (vec![0u64; n], batches, bottleneck, local)
+            }
+        };
+
+        // cluster-level weight staging: every shard's parameter stream is
+        // issued at cycle 0 (double buffering against whatever ran before);
+        // stalls cascade down the pipeline
+        let mut delay = 0u64;
+        let mut prefetch = Vec::with_capacity(n);
+        for (i, sp) in plan.shards.iter().enumerate() {
+            let lat = self.interconnect.transfer_cycles(sp.weight_words);
+            let mut pf = Prefetcher::new(lat);
+            pf.issue(0);
+            let at = fill[i] + delay;
+            let start = pf.consume(at, spans[i]);
+            delay += start - at;
+            // consume() eagerly re-issues a next fetch, but each shard
+            // stages its parameters exactly once
+            let mut stats = pf.stats();
+            stats.fetches = stats.fetches.min(1);
+            prefetch.push(stats);
+        }
+        let makespan = makespan_base + delay;
+
+        let comm_per_batch = match plan.strategy {
+            // distinct point-to-point transfers: sum over stages
+            PartitionStrategy::Pipeline => plan.shards.iter().map(|sp| sp.comm_cycles).sum(),
+            // every shard runs the same collectives concurrently: count once
+            PartitionStrategy::Tensor => plan.shards[0].comm_cycles,
+            PartitionStrategy::Data => 0,
+        };
+
+        let shards: Vec<ShardReport> = plan
+            .shards
+            .iter()
+            .enumerate()
+            .map(|(i, sp)| {
+                let busy = batches[i] * spans[i];
+                ShardReport {
+                    shard: sp.shard,
+                    layer_span: sp.layer_span,
+                    compute_cycles_per_batch: spans[i],
+                    comm_cycles_per_batch: sp.comm_cycles,
+                    batches: batches[i],
+                    busy_cycles: busy,
+                    prefetch: prefetch[i],
+                    utilization: busy as f64 / makespan.max(1) as f64,
+                    mean_pe_utilization: reports[i].mean_pe_utilization(),
+                }
+            })
+            .collect();
+
+        let cycles_per_batch = match plan.strategy {
+            PartitionStrategy::Pipeline | PartitionStrategy::Tensor => steady,
+            // data parallelism completes batches on M replicas concurrently
+            PartitionStrategy::Data => makespan.div_ceil(b),
+        };
+
+        ClusterReport {
+            engine: self.engine,
+            strategy: plan.strategy,
+            shards,
+            micro_batches: b,
+            total_cycles: makespan,
+            cycles_per_batch,
+            total_macs: plan.total_macs,
+            total_ops: plan.total_ops,
+            interconnect_cycles: b * comm_per_batch + delay,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::plan::{plan, PartitionStrategy};
+    use crate::cordic::mac::ExecMode;
+    use crate::model::workloads::{tinyyolo_trace, vgg16_trace, Trace};
+    use crate::quant::{PolicyTable, Precision};
+
+    fn pol(t: &Trace) -> PolicyTable {
+        PolicyTable::uniform(t.compute_layers(), Precision::Fxp8, ExecMode::Approximate)
+    }
+
+    fn run(strategy: PartitionStrategy, shards: usize, batches: u64) -> ClusterReport {
+        let t = vgg16_trace();
+        let p = pol(&t);
+        let engine = EngineConfig::pe64();
+        let icn = InterconnectConfig::default();
+        let plan = plan(&t, &p, shards, &engine, &icn, strategy);
+        ShardExecutor::new(engine, icn).run(&plan, batches)
+    }
+
+    #[test]
+    fn one_shard_pipeline_steady_state_matches_engine() {
+        let t = vgg16_trace();
+        let p = pol(&t);
+        let engine = EngineConfig::pe64();
+        let single = VectorEngine::new(engine).run_trace(&t, &p);
+        let r = run(PartitionStrategy::Pipeline, 1, 4);
+        assert_eq!(r.cycles_per_batch, single.total_cycles);
+        assert_eq!(r.num_shards(), 1);
+        assert_eq!(r.shards[0].comm_cycles_per_batch, 0);
+    }
+
+    #[test]
+    fn pipeline_makespan_is_fill_plus_steady_plus_staging() {
+        let b = 6;
+        let r = run(PartitionStrategy::Pipeline, 4, b);
+        let fill: u64 = r
+            .shards
+            .iter()
+            .map(|s| s.compute_cycles_per_batch + s.comm_cycles_per_batch)
+            .sum();
+        let steady = r.cycles_per_batch;
+        let staging: u64 = r.shards.iter().map(|s| s.prefetch.stall_cycles).sum();
+        assert_eq!(r.total_cycles, fill + (b - 1) * steady + staging);
+    }
+
+    #[test]
+    fn utilizations_bounded_and_bottleneck_busy() {
+        let r = run(PartitionStrategy::Pipeline, 4, 16);
+        for s in &r.shards {
+            assert!(s.utilization > 0.0 && s.utilization <= 1.0, "util {}", s.utilization);
+        }
+        let hot = &r.shards[r.bottleneck_shard()];
+        assert!(hot.utilization > 0.6, "bottleneck util {}", hot.utilization);
+    }
+
+    #[test]
+    fn weight_staging_hides_behind_pipeline_fill() {
+        let r = run(PartitionStrategy::Pipeline, 4, 4);
+        // stage 0 has no fill to hide behind: it must stall for its weights
+        assert!(r.shards[0].prefetch.stall_cycles > 0);
+        // deep stages have a long fill: staging should be fully overlapped
+        let last = r.shards.last().unwrap();
+        assert_eq!(last.prefetch.stall_cycles, 0, "tail stage staging must hide");
+        assert!(last.prefetch.overlapped_cycles > 0);
+    }
+
+    #[test]
+    fn tensor_lockstep_schedule() {
+        let b = 5;
+        let r = run(PartitionStrategy::Tensor, 4, b);
+        let staging: u64 = r.shards.iter().map(|s| s.prefetch.stall_cycles).sum();
+        assert_eq!(r.total_cycles, b * r.cycles_per_batch + staging);
+        for s in &r.shards {
+            assert_eq!(s.batches, b);
+        }
+    }
+
+    #[test]
+    fn data_spreads_batches_across_replicas() {
+        let t = tinyyolo_trace();
+        let p = pol(&t);
+        let engine = EngineConfig::pe64();
+        let icn = InterconnectConfig::default();
+        let pl = plan(&t, &p, 4, &engine, &icn, PartitionStrategy::Data);
+        let r = ShardExecutor::new(engine, icn).run(&pl, 10);
+        let total: u64 = r.shards.iter().map(|s| s.batches).sum();
+        assert_eq!(total, 10);
+        for s in &r.shards {
+            assert!(s.batches == 2 || s.batches == 3);
+        }
+        // 4 replicas finish 10 batches ~2.5x faster than one replica would
+        let single = ShardExecutor::new(engine, icn)
+            .run(&plan(&t, &p, 1, &engine, &icn, PartitionStrategy::Data), 10);
+        assert!(r.total_cycles < single.total_cycles / 2);
+    }
+
+    #[test]
+    fn more_shards_do_not_slow_steady_state() {
+        let r1 = run(PartitionStrategy::Pipeline, 1, 4);
+        let r2 = run(PartitionStrategy::Pipeline, 2, 4);
+        let r4 = run(PartitionStrategy::Pipeline, 4, 4);
+        assert!(r2.cycles_per_batch <= r1.cycles_per_batch);
+        assert!(r4.cycles_per_batch <= r2.cycles_per_batch);
+    }
+}

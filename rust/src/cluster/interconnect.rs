@@ -1,0 +1,126 @@
+//! Inter-shard interconnect cost model.
+//!
+//! Engines in a cluster exchange three kinds of traffic: boundary
+//! activations between pipeline stages, partial-sum reductions /
+//! all-gathers under tensor parallelism, and the one-time weight staging
+//! each shard performs before serving. All three are priced in *cycles at
+//! the engine clock* from two parameters — per-link bandwidth and per-hop
+//! latency — so the timing model stays technology-independent, exactly like
+//! [`crate::engine`]; converting cluster cycles into seconds/watts happens
+//! in [`crate::hwcost`] (see `DESIGN.md` §8 for the calibration policy).
+//!
+//! Collectives assume the ring schedule (the standard bandwidth-optimal
+//! choice for small shard counts): an all-gather of `W` words over `M`
+//! shards moves `M-1` chunks of `ceil(W/M)` words, an all-reduce performs a
+//! reduce-scatter followed by an all-gather and therefore costs twice that.
+
+/// Interconnect configuration shared by every link of the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InterconnectConfig {
+    /// Words a link carries per engine cycle (bus width × SerDes factor).
+    /// Default matches the engine's external-memory burst width.
+    pub link_words_per_cycle: u64,
+    /// Fixed latency per transfer hop (serialisation + router traversal),
+    /// in engine cycles.
+    pub hop_latency: u64,
+}
+
+impl Default for InterconnectConfig {
+    fn default() -> Self {
+        InterconnectConfig { link_words_per_cycle: 32, hop_latency: 64 }
+    }
+}
+
+impl InterconnectConfig {
+    /// Cycles to move `words` across one link (point-to-point, e.g. a
+    /// pipeline-stage boundary or a weight-staging stream).
+    pub fn transfer_cycles(&self, words: u64) -> u64 {
+        if words == 0 {
+            return 0;
+        }
+        self.hop_latency + words.div_ceil(self.link_words_per_cycle.max(1))
+    }
+
+    /// Cycles for a ring all-gather of `words` total words across `shards`
+    /// engines (each shard contributes `ceil(words/shards)`).
+    pub fn allgather_cycles(&self, words: u64, shards: usize) -> u64 {
+        if shards <= 1 || words == 0 {
+            return 0;
+        }
+        let m = shards as u64;
+        let chunk = words.div_ceil(m);
+        (m - 1) * (self.hop_latency + chunk.div_ceil(self.link_words_per_cycle.max(1)))
+    }
+
+    /// Cycles for a ring all-reduce of `words` partial sums across `shards`
+    /// engines (reduce-scatter + all-gather: 2·(M−1) chunk steps).
+    pub fn allreduce_cycles(&self, words: u64, shards: usize) -> u64 {
+        2 * self.allgather_cycles(words, shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_words_cost_nothing() {
+        let icn = InterconnectConfig::default();
+        assert_eq!(icn.transfer_cycles(0), 0);
+        assert_eq!(icn.allgather_cycles(0, 4), 0);
+        assert_eq!(icn.allreduce_cycles(0, 4), 0);
+    }
+
+    #[test]
+    fn single_shard_collectives_are_free() {
+        let icn = InterconnectConfig::default();
+        assert_eq!(icn.allgather_cycles(1_000_000, 1), 0);
+        assert_eq!(icn.allreduce_cycles(1_000_000, 1), 0);
+    }
+
+    #[test]
+    fn transfer_is_latency_plus_serialisation() {
+        let icn = InterconnectConfig { link_words_per_cycle: 32, hop_latency: 64 };
+        assert_eq!(icn.transfer_cycles(1), 64 + 1);
+        assert_eq!(icn.transfer_cycles(32), 64 + 1);
+        assert_eq!(icn.transfer_cycles(33), 64 + 2);
+        assert_eq!(icn.transfer_cycles(3200), 64 + 100);
+    }
+
+    #[test]
+    fn transfer_monotone_in_words() {
+        let icn = InterconnectConfig::default();
+        let mut last = 0;
+        for words in [1u64, 10, 100, 1_000, 10_000, 1_000_000] {
+            let c = icn.transfer_cycles(words);
+            assert!(c >= last, "{words} words: {c} < {last}");
+            last = c;
+        }
+    }
+
+    #[test]
+    fn allreduce_is_twice_allgather() {
+        let icn = InterconnectConfig::default();
+        for m in [2usize, 4, 8] {
+            assert_eq!(
+                icn.allreduce_cycles(123_456, m),
+                2 * icn.allgather_cycles(123_456, m)
+            );
+        }
+    }
+
+    #[test]
+    fn ring_allgather_bandwidth_term_saturates_with_shards() {
+        // the (M-1)/M · W/bw bandwidth term grows toward W/bw; the hop term
+        // grows linearly — with a big payload the total stays within ~2x of
+        // the single-link serialisation cost for small rings
+        let icn = InterconnectConfig::default();
+        let words = 1 << 20;
+        let single = icn.transfer_cycles(words);
+        for m in [2usize, 4, 8] {
+            let c = icn.allgather_cycles(words, m);
+            assert!(c < 2 * single, "M={m}: {c} vs single {single}");
+            assert!(c > 0);
+        }
+    }
+}

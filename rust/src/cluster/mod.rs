@@ -1,0 +1,128 @@
+//! Sharded multi-engine execution: many CORVET vector engines cooperating
+//! on one workload.
+//!
+//! The paper scales a *single* engine from 64 to 256 PEs (Table V); this
+//! subsystem scales *out* instead, composing M engines into a cluster the
+//! way the ROADMAP's serving path needs: a [`plan::PartitionPlan`] splits a
+//! layer trace across shards (layer-parallel pipeline stages or
+//! output-channel tensor parallelism, chosen from per-layer MAC counts), an
+//! [`interconnect::InterconnectConfig`] prices every inter-shard byte in
+//! engine cycles, and the [`exec::ShardExecutor`] fans the per-shard cycle
+//! simulations out across OS threads and assembles the cluster makespan,
+//! reporting per-shard utilisation in a [`report::ClusterReport`] that
+//! mirrors [`crate::engine::EngineReport`].
+//!
+//! Downstream, [`crate::hwcost::cluster_asic`] prices multi-engine
+//! area/power (per-shard NoC routers + ring links on top of M engines),
+//! [`crate::tables::cluster_scaling`] emits the shard-scaling table, and
+//! the coordinator's [`crate::coordinator::ShardRouter`] spreads
+//! micro-batches across shards at serving time. See `DESIGN.md` §8 for the
+//! partition/interconnect model and its calibration policy.
+
+pub mod exec;
+pub mod interconnect;
+pub mod plan;
+pub mod report;
+
+pub use exec::ShardExecutor;
+pub use interconnect::InterconnectConfig;
+pub use plan::{auto_strategy, parse_strategy, PartitionPlan, PartitionStrategy, ShardPlan};
+pub use report::{ClusterReport, ShardReport};
+
+use crate::engine::EngineConfig;
+use crate::model::workloads::Trace;
+use crate::quant::PolicyTable;
+
+/// Cluster configuration: M identical engines plus the interconnect.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterConfig {
+    /// Number of engine shards.
+    pub shards: usize,
+    /// Configuration of each engine.
+    pub engine: EngineConfig,
+    /// Inter-shard link model.
+    pub interconnect: InterconnectConfig,
+    /// Partition strategy; `None` lets the planner choose per trace.
+    pub strategy: Option<PartitionStrategy>,
+}
+
+impl ClusterConfig {
+    /// A cluster of `shards` engines with default interconnect and
+    /// auto-chosen strategy.
+    pub fn new(shards: usize, engine: EngineConfig) -> Self {
+        ClusterConfig {
+            shards,
+            engine,
+            interconnect: InterconnectConfig::default(),
+            strategy: None,
+        }
+    }
+}
+
+/// The cluster facade, mirroring [`crate::engine::VectorEngine`].
+#[derive(Debug, Clone)]
+pub struct Cluster {
+    /// Configuration being simulated.
+    pub config: ClusterConfig,
+}
+
+impl Cluster {
+    /// New cluster.
+    pub fn new(config: ClusterConfig) -> Self {
+        assert!(config.shards >= 1, "cluster needs at least one shard");
+        Cluster { config }
+    }
+
+    /// Partition `trace` under this cluster's configuration.
+    pub fn plan(&self, trace: &Trace, policy: &PolicyTable) -> PartitionPlan {
+        let strategy = self
+            .config
+            .strategy
+            .unwrap_or_else(|| auto_strategy(trace, self.config.shards));
+        plan::plan(
+            trace,
+            policy,
+            self.config.shards,
+            &self.config.engine,
+            &self.config.interconnect,
+            strategy,
+        )
+    }
+
+    /// Plan and stream `micro_batches` inferences through the cluster.
+    pub fn run_trace(
+        &self,
+        trace: &Trace,
+        policy: &PolicyTable,
+        micro_batches: u64,
+    ) -> ClusterReport {
+        let plan = self.plan(trace, policy);
+        ShardExecutor::new(self.config.engine, self.config.interconnect).run(&plan, micro_batches)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::mac::ExecMode;
+    use crate::model::workloads::vgg16_trace;
+    use crate::quant::Precision;
+
+    #[test]
+    fn facade_auto_plans_and_runs() {
+        let t = vgg16_trace();
+        let p = PolicyTable::uniform(t.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+        let cluster = Cluster::new(ClusterConfig::new(2, EngineConfig::pe64()));
+        let r = cluster.run_trace(&t, &p, 4);
+        assert_eq!(r.num_shards(), 2);
+        assert_eq!(r.strategy, PartitionStrategy::Pipeline, "deep trace auto-pipelines");
+        assert_eq!(r.total_macs, t.total_macs());
+        assert!(r.total_cycles > 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_rejected() {
+        Cluster::new(ClusterConfig::new(0, EngineConfig::pe64()));
+    }
+}

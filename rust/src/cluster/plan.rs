@@ -1,0 +1,498 @@
+//! The partition planner: split one traced workload across M engines.
+//!
+//! Three strategies, chosen from the shape of the trace:
+//!
+//! * **Pipeline** (layer-parallel): contiguous layer ranges become pipeline
+//!   stages. The split minimises the *maximum* stage weight (classic
+//!   min-max contiguous partition, solved exactly by DP) where a layer's
+//!   weight is its simulated single-engine cycle cost — i.e. the split is
+//!   chosen from per-layer MAC counts as scheduled on the real engine
+//!   model. Stage boundaries pay a point-to-point activation transfer.
+//! * **Tensor** (output-channel-parallel): every layer is split across all
+//!   shards; convolutions all-gather their output slices, dense layers
+//!   all-reduce partial sums (ring collectives, priced by
+//!   [`InterconnectConfig`]).
+//! * **Data**: full replicas; micro-batches are spread across shards by the
+//!   coordinator's routing policy.
+//!
+//! Every shard also records the words of parameters it must stage before
+//! serving — the cluster-level double-buffered weight prefetch the
+//! executor models with [`crate::memory::Prefetcher`].
+
+use super::interconnect::InterconnectConfig;
+use crate::engine::{EngineConfig, VectorEngine};
+use crate::model::workloads::{Trace, TraceKind};
+use crate::quant::{LayerPolicy, PolicyTable};
+
+/// How work is divided across the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// Layer-parallel pipeline stages (contiguous layer ranges).
+    Pipeline,
+    /// Output-channel tensor parallelism with per-layer collectives.
+    Tensor,
+    /// Full replicas served data-parallel by the request router.
+    Data,
+}
+
+impl std::fmt::Display for PartitionStrategy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PartitionStrategy::Pipeline => write!(f, "pipeline"),
+            PartitionStrategy::Tensor => write!(f, "tensor"),
+            PartitionStrategy::Data => write!(f, "data"),
+        }
+    }
+}
+
+/// Parse a strategy from a CLI string.
+pub fn parse_strategy(s: &str) -> Option<PartitionStrategy> {
+    match s.to_ascii_lowercase().as_str() {
+        "pipeline" | "layer" => Some(PartitionStrategy::Pipeline),
+        "tensor" | "channel" => Some(PartitionStrategy::Tensor),
+        "data" | "replica" => Some(PartitionStrategy::Data),
+        _ => None,
+    }
+}
+
+/// Pick a sensible default strategy for a trace: deep traces pipeline well
+/// (plenty of boundaries to balance across), shallow ones are better split
+/// within each layer.
+pub fn auto_strategy(trace: &Trace, shards: usize) -> PartitionStrategy {
+    if shards <= 1 || trace.layers.len() >= 3 * shards {
+        PartitionStrategy::Pipeline
+    } else {
+        PartitionStrategy::Tensor
+    }
+}
+
+/// The slice of work one engine executes.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Shard index (pipeline order for the pipeline strategy).
+    pub shard: usize,
+    /// Layer range of the *original* trace covered (`(0, L)` when the shard
+    /// sees every layer, as under tensor/data parallelism).
+    pub layer_span: (usize, usize),
+    /// The sub-trace this shard simulates.
+    pub trace: Trace,
+    /// Per-compute-layer policy matching `trace`.
+    pub policy: PolicyTable,
+    /// Parameter words this shard stages before serving (weight prefetch).
+    pub weight_words: u64,
+    /// Activation words crossing to the next stage (pipeline only).
+    pub boundary_words: u64,
+    /// Interconnect cycles charged to this shard per micro-batch.
+    pub comm_cycles: u64,
+}
+
+/// A complete cluster partition.
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    /// Strategy used.
+    pub strategy: PartitionStrategy,
+    /// One entry per shard. May hold fewer shards than requested when the
+    /// trace has fewer layers than pipeline stages.
+    pub shards: Vec<ShardPlan>,
+    /// MACs of one full inference of the source trace.
+    pub total_macs: u64,
+    /// Operations of one full inference of the source trace.
+    pub total_ops: u64,
+}
+
+impl PartitionPlan {
+    /// Number of shards actually planned.
+    pub fn len(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// True when the plan is degenerate (should not happen for valid input).
+    pub fn is_empty(&self) -> bool {
+        self.shards.is_empty()
+    }
+
+    /// Ratio of the heaviest shard's MACs to the mean (1.0 = perfectly
+    /// balanced). Data-parallel replicas always report 1.0.
+    pub fn mac_imbalance(&self) -> f64 {
+        if self.shards.is_empty() {
+            return 1.0;
+        }
+        let per: Vec<u64> = self.shards.iter().map(|s| s.trace.total_macs()).collect();
+        let max = *per.iter().max().unwrap() as f64;
+        let mean = per.iter().sum::<u64>() as f64 / per.len() as f64;
+        if mean == 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Build a partition plan for `trace` across `shards` engines.
+///
+/// `policy` must cover the trace's compute layers (as for
+/// [`VectorEngine::run_trace`]); each shard receives the matching slice.
+pub fn plan(
+    trace: &Trace,
+    policy: &PolicyTable,
+    shards: usize,
+    engine: &EngineConfig,
+    interconnect: &InterconnectConfig,
+    strategy: PartitionStrategy,
+) -> PartitionPlan {
+    assert!(shards >= 1, "cluster needs at least one shard");
+    assert_eq!(
+        policy.len(),
+        trace.compute_layers(),
+        "policy must cover each compute layer of the trace"
+    );
+    match strategy {
+        PartitionStrategy::Pipeline => plan_pipeline(trace, policy, shards, engine, interconnect),
+        PartitionStrategy::Tensor => plan_tensor(trace, policy, shards, interconnect),
+        PartitionStrategy::Data => plan_data(trace, policy, shards),
+    }
+}
+
+/// `i`-th of `m` near-equal integer shares of `q` (shares sum to `q`).
+pub(crate) fn split_even(q: u64, m: u64, i: u64) -> u64 {
+    q / m + u64::from(i < q % m)
+}
+
+/// Policy entries for the compute layers inside `range`, reindexed densely.
+fn slice_policy(trace: &Trace, policy: &PolicyTable, range: (usize, usize)) -> PolicyTable {
+    let mut entries = Vec::new();
+    let mut pidx = 0usize;
+    for (idx, layer) in trace.layers.iter().enumerate() {
+        if matches!(layer.kind, TraceKind::Conv | TraceKind::Dense) {
+            if idx >= range.0 && idx < range.1 {
+                let mut lp: LayerPolicy = policy.layer(pidx);
+                lp.layer = entries.len();
+                entries.push(lp);
+            }
+            pidx += 1;
+        }
+    }
+    PolicyTable::from_entries(entries)
+}
+
+fn plan_pipeline(
+    trace: &Trace,
+    policy: &PolicyTable,
+    shards: usize,
+    engine: &EngineConfig,
+    interconnect: &InterconnectConfig,
+) -> PartitionPlan {
+    let nlayers = trace.layers.len();
+    let stages = shards.min(nlayers).max(1);
+
+    // layer weights = simulated single-engine per-layer cycles, so the split
+    // reflects MAC counts *and* the engine's AF/pool/memory scheduling
+    let report = VectorEngine::new(*engine).run_trace(trace, policy);
+    let w: Vec<u64> = report.per_layer.iter().map(|l| l.total_cycles.max(1)).collect();
+    let bounds = min_max_partition(&w, stages);
+
+    let mut plans = Vec::with_capacity(stages);
+    for s in 0..stages {
+        let (a, b) = (bounds[s], bounds[s + 1]);
+        let sub = Trace {
+            name: format!("{}/s{s}[{a}..{b}]", trace.name),
+            layers: trace.layers[a..b].to_vec(),
+        };
+        let boundary_words = if s + 1 < stages { trace.layers[b - 1].outputs } else { 0 };
+        plans.push(ShardPlan {
+            shard: s,
+            layer_span: (a, b),
+            policy: slice_policy(trace, policy, (a, b)),
+            weight_words: sub.total_params(),
+            boundary_words,
+            comm_cycles: interconnect.transfer_cycles(boundary_words),
+            trace: sub,
+        });
+    }
+    PartitionPlan {
+        strategy: PartitionStrategy::Pipeline,
+        shards: plans,
+        total_macs: trace.total_macs(),
+        total_ops: trace.total_ops(),
+    }
+}
+
+/// Exact min-max contiguous partition of `w` into `stages` non-empty parts.
+/// Returns `stages + 1` boundaries starting at 0 and ending at `w.len()`.
+fn min_max_partition(w: &[u64], stages: usize) -> Vec<usize> {
+    let l = w.len();
+    assert!(stages >= 1 && stages <= l);
+    let mut pre = vec![0u64; l + 1];
+    for i in 0..l {
+        pre[i + 1] = pre[i] + w[i];
+    }
+    let seg = |i: usize, j: usize| pre[j] - pre[i];
+
+    const INF: u64 = u64::MAX;
+    // dp[k][j]: minimal achievable max-stage-weight over the first j layers
+    // split into k stages; cut[k][j]: start of the k-th stage at the optimum
+    let mut dp = vec![vec![INF; l + 1]; stages + 1];
+    let mut cut = vec![vec![0usize; l + 1]; stages + 1];
+    dp[0][0] = 0;
+    for k in 1..=stages {
+        for j in k..=l {
+            for i in (k - 1)..j {
+                if dp[k - 1][i] == INF {
+                    continue;
+                }
+                let cand = dp[k - 1][i].max(seg(i, j));
+                if cand < dp[k][j] {
+                    dp[k][j] = cand;
+                    cut[k][j] = i;
+                }
+            }
+        }
+    }
+    let mut bounds = vec![l];
+    let mut j = l;
+    for k in (1..=stages).rev() {
+        j = cut[k][j];
+        bounds.push(j);
+    }
+    bounds.reverse();
+    debug_assert_eq!(bounds[0], 0);
+    bounds
+}
+
+fn plan_tensor(
+    trace: &Trace,
+    policy: &PolicyTable,
+    shards: usize,
+    interconnect: &InterconnectConfig,
+) -> PartitionPlan {
+    let m = shards as u64;
+    // every shard pays the same collectives: conv output slices all-gather,
+    // dense partial sums all-reduce
+    let comm: u64 = trace
+        .layers
+        .iter()
+        .map(|l| match l.kind {
+            TraceKind::Conv => interconnect.allgather_cycles(l.outputs, shards),
+            TraceKind::Dense => interconnect.allreduce_cycles(l.outputs, shards),
+            _ => 0,
+        })
+        .sum();
+
+    let mut plans = Vec::with_capacity(shards);
+    for i in 0..shards {
+        let layers = trace
+            .layers
+            .iter()
+            .map(|l| {
+                let mut s = l.clone();
+                let share = |q: u64| split_even(q, m, i as u64);
+                // compute layers keep >=1 MAC so policy/compute-layer
+                // bookkeeping is preserved on every shard
+                s.macs = match l.kind {
+                    TraceKind::Conv | TraceKind::Dense => share(l.macs).max(1),
+                    _ => 0,
+                };
+                s.af_ops = share(l.af_ops);
+                s.pool_windows = share(l.pool_windows);
+                s.outputs = share(l.outputs);
+                s.params = share(l.params);
+                s
+            })
+            .collect();
+        let sub = Trace { name: format!("{}/t{i}of{shards}", trace.name), layers };
+        plans.push(ShardPlan {
+            shard: i,
+            layer_span: (0, trace.layers.len()),
+            policy: policy.clone(),
+            weight_words: sub.total_params(),
+            boundary_words: 0,
+            comm_cycles: comm,
+            trace: sub,
+        });
+    }
+    PartitionPlan {
+        strategy: PartitionStrategy::Tensor,
+        shards: plans,
+        total_macs: trace.total_macs(),
+        total_ops: trace.total_ops(),
+    }
+}
+
+fn plan_data(trace: &Trace, policy: &PolicyTable, shards: usize) -> PartitionPlan {
+    let plans = (0..shards)
+        .map(|i| ShardPlan {
+            shard: i,
+            layer_span: (0, trace.layers.len()),
+            trace: Trace {
+                name: format!("{}/r{i}of{shards}", trace.name),
+                layers: trace.layers.clone(),
+            },
+            policy: policy.clone(),
+            weight_words: trace.total_params(),
+            boundary_words: 0,
+            comm_cycles: 0,
+        })
+        .collect();
+    PartitionPlan {
+        strategy: PartitionStrategy::Data,
+        shards: plans,
+        total_macs: trace.total_macs(),
+        total_ops: trace.total_ops(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cordic::mac::ExecMode;
+    use crate::model::workloads::{tinyyolo_trace, vgg16_trace};
+    use crate::quant::Precision;
+
+    fn pol(t: &Trace) -> PolicyTable {
+        PolicyTable::uniform(t.compute_layers(), Precision::Fxp8, ExecMode::Approximate)
+    }
+
+    #[test]
+    fn min_max_partition_known_case() {
+        // [9,1,1,1,9] into 3 -> {9},{1,1,1},{9}: bottleneck 9
+        let b = min_max_partition(&[9, 1, 1, 1, 9], 3);
+        assert_eq!(b.first(), Some(&0));
+        assert_eq!(b.last(), Some(&5));
+        let max_stage: u64 = (0..3)
+            .map(|s| (b[s]..b[s + 1]).map(|i| [9u64, 1, 1, 1, 9][i]).sum())
+            .max()
+            .unwrap();
+        assert_eq!(max_stage, 9);
+    }
+
+    #[test]
+    fn pipeline_stages_cover_trace_exactly_once() {
+        let t = vgg16_trace();
+        let p = pol(&t);
+        let plan = plan(
+            &t,
+            &p,
+            4,
+            &EngineConfig::pe64(),
+            &InterconnectConfig::default(),
+            PartitionStrategy::Pipeline,
+        );
+        assert_eq!(plan.len(), 4);
+        let mut covered = 0usize;
+        for (i, s) in plan.shards.iter().enumerate() {
+            assert_eq!(s.layer_span.0, covered, "stages must be contiguous");
+            covered = s.layer_span.1;
+            assert_eq!(s.trace.layers.len(), s.layer_span.1 - s.layer_span.0);
+            assert_eq!(s.policy.len(), s.trace.compute_layers());
+            if i + 1 < plan.len() {
+                assert!(s.boundary_words > 0, "interior stages ship activations");
+            } else {
+                assert_eq!(s.comm_cycles, 0, "last stage has no downstream transfer");
+            }
+        }
+        assert_eq!(covered, t.layers.len());
+        let macs: u64 = plan.shards.iter().map(|s| s.trace.total_macs()).sum();
+        assert_eq!(macs, t.total_macs(), "pipeline conserves MACs");
+    }
+
+    #[test]
+    fn pipeline_balances_vgg_reasonably() {
+        let t = vgg16_trace();
+        let p = pol(&t);
+        let plan = plan(
+            &t,
+            &p,
+            4,
+            &EngineConfig::pe64(),
+            &InterconnectConfig::default(),
+            PartitionStrategy::Pipeline,
+        );
+        // optimal contiguous split of VGG-16 keeps the heaviest stage well
+        // under 2x the mean
+        assert!(plan.mac_imbalance() < 1.6, "imbalance {}", plan.mac_imbalance());
+    }
+
+    #[test]
+    fn tensor_split_conserves_work_within_rounding() {
+        let t = tinyyolo_trace();
+        let p = pol(&t);
+        let m = 4usize;
+        let plan = plan(
+            &t,
+            &p,
+            m,
+            &EngineConfig::pe64(),
+            &InterconnectConfig::default(),
+            PartitionStrategy::Tensor,
+        );
+        assert_eq!(plan.len(), m);
+        let macs: u64 = plan.shards.iter().map(|s| s.trace.total_macs()).sum();
+        assert!(macs >= t.total_macs());
+        assert!(
+            macs <= t.total_macs() + (m * t.layers.len()) as u64,
+            "only the >=1-MAC guard may inflate the total"
+        );
+        for s in &plan.shards {
+            assert_eq!(s.trace.compute_layers(), t.compute_layers());
+            assert_eq!(s.policy.len(), p.len());
+            assert!(s.comm_cycles > 0, "tensor shards pay collectives");
+        }
+    }
+
+    #[test]
+    fn data_replicas_are_identical() {
+        let t = tinyyolo_trace();
+        let p = pol(&t);
+        let plan = plan(
+            &t,
+            &p,
+            3,
+            &EngineConfig::pe64(),
+            &InterconnectConfig::default(),
+            PartitionStrategy::Data,
+        );
+        for s in &plan.shards {
+            assert_eq!(s.trace.total_macs(), t.total_macs());
+            assert_eq!(s.comm_cycles, 0);
+            assert_eq!(s.weight_words, t.total_params());
+        }
+        assert!((plan.mac_imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn more_stages_than_layers_clamps() {
+        let t = Trace { name: "tiny".into(), layers: vgg16_trace().layers[..3].to_vec() };
+        let p = PolicyTable::uniform(
+            t.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        );
+        let plan = plan(
+            &t,
+            &p,
+            8,
+            &EngineConfig::pe64(),
+            &InterconnectConfig::default(),
+            PartitionStrategy::Pipeline,
+        );
+        assert_eq!(plan.len(), 3, "one stage per layer at most");
+    }
+
+    #[test]
+    fn auto_strategy_prefers_pipeline_for_deep_traces() {
+        let t = vgg16_trace(); // 23 layers
+        assert_eq!(auto_strategy(&t, 4), PartitionStrategy::Pipeline);
+        assert_eq!(auto_strategy(&t, 16), PartitionStrategy::Tensor);
+        assert_eq!(auto_strategy(&t, 1), PartitionStrategy::Pipeline);
+    }
+
+    #[test]
+    fn split_even_sums_back() {
+        for q in [0u64, 1, 7, 100, 12345] {
+            for m in [1u64, 2, 3, 8] {
+                let sum: u64 = (0..m).map(|i| split_even(q, m, i)).sum();
+                assert_eq!(sum, q);
+            }
+        }
+    }
+}

@@ -1,0 +1,169 @@
+//! Cluster-level reporting, mirroring [`crate::engine::EngineReport`] so
+//! the same downstream consumers (hwcost conversion, tables, CLI) can price
+//! multi-engine runs.
+
+use super::plan::PartitionStrategy;
+use crate::engine::EngineConfig;
+use crate::memory::PrefetchStats;
+
+/// Per-shard outcome of a cluster run.
+#[derive(Debug, Clone)]
+pub struct ShardReport {
+    /// Shard index.
+    pub shard: usize,
+    /// Original-trace layer range this shard executed.
+    pub layer_span: (usize, usize),
+    /// Engine cycles one micro-batch of this shard's work takes.
+    pub compute_cycles_per_batch: u64,
+    /// Interconnect cycles charged to this shard per micro-batch.
+    pub comm_cycles_per_batch: u64,
+    /// Micro-batches this shard executed.
+    pub batches: u64,
+    /// Total cycles the shard's PEs were busy computing.
+    pub busy_cycles: u64,
+    /// Weight-staging prefetch statistics (cluster-level double buffering).
+    pub prefetch: PrefetchStats,
+    /// Fraction of the cluster makespan this shard spent computing.
+    pub utilization: f64,
+    /// Mean PE utilisation inside the shard's MAC waves.
+    pub mean_pe_utilization: f64,
+}
+
+/// Whole-cluster simulation report.
+#[derive(Debug, Clone)]
+pub struct ClusterReport {
+    /// Engine configuration every shard runs.
+    pub engine: EngineConfig,
+    /// Partition strategy executed.
+    pub strategy: PartitionStrategy,
+    /// Per-shard breakdown.
+    pub shards: Vec<ShardReport>,
+    /// Micro-batches streamed through the cluster.
+    pub micro_batches: u64,
+    /// Cluster makespan: cycles from first weight fetch to last result.
+    pub total_cycles: u64,
+    /// Steady-state cycles between consecutive micro-batch completions —
+    /// the cluster's throughput bottleneck.
+    pub cycles_per_batch: u64,
+    /// MACs of one full inference (one micro-batch, whole model).
+    pub total_macs: u64,
+    /// Operations of one full inference.
+    pub total_ops: u64,
+    /// Total interconnect cycles charged (transfers, collectives, weight
+    /// staging stalls).
+    pub interconnect_cycles: u64,
+}
+
+impl ClusterReport {
+    /// Wall-clock for the whole micro-batch stream at a clock frequency.
+    pub fn time_ms(&self, clock_hz: f64) -> f64 {
+        self.total_cycles as f64 / clock_hz * 1e3
+    }
+
+    /// Sustained GOPS across the stream at a clock frequency.
+    pub fn gops(&self, clock_hz: f64) -> f64 {
+        let ops = self.total_ops as f64 * self.micro_batches as f64;
+        ops / (self.total_cycles as f64 / clock_hz) / 1e9
+    }
+
+    /// Steady-state inference throughput (inferences/s) at a clock
+    /// frequency, from the per-batch bottleneck.
+    pub fn inferences_per_s(&self, clock_hz: f64) -> f64 {
+        clock_hz / self.cycles_per_batch.max(1) as f64
+    }
+
+    /// Throughput speedup over a (usually single-shard) baseline run of the
+    /// same workload: ratio of steady-state per-batch cycles.
+    pub fn speedup_over(&self, baseline: &ClusterReport) -> f64 {
+        baseline.cycles_per_batch as f64 / self.cycles_per_batch.max(1) as f64
+    }
+
+    /// Mean per-shard utilisation (computing fraction of the makespan).
+    pub fn mean_utilization(&self) -> f64 {
+        if self.shards.is_empty() {
+            return 0.0;
+        }
+        self.shards.iter().map(|s| s.utilization).sum::<f64>() / self.shards.len() as f64
+    }
+
+    /// The shard limiting steady-state throughput.
+    pub fn bottleneck_shard(&self) -> usize {
+        self.shards
+            .iter()
+            .max_by_key(|s| s.compute_cycles_per_batch + s.comm_cycles_per_batch)
+            .map(|s| s.shard)
+            .unwrap_or(0)
+    }
+
+    /// Number of shards.
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(c: u64, comm: u64, util: f64) -> ShardReport {
+        ShardReport {
+            shard: 0,
+            layer_span: (0, 1),
+            compute_cycles_per_batch: c,
+            comm_cycles_per_batch: comm,
+            batches: 1,
+            busy_cycles: c,
+            prefetch: PrefetchStats::default(),
+            utilization: util,
+            mean_pe_utilization: 1.0,
+        }
+    }
+
+    fn report(shards: Vec<ShardReport>, per_batch: u64, makespan: u64, b: u64) -> ClusterReport {
+        ClusterReport {
+            engine: EngineConfig::pe64(),
+            strategy: PartitionStrategy::Pipeline,
+            shards,
+            micro_batches: b,
+            total_cycles: makespan,
+            cycles_per_batch: per_batch,
+            total_macs: 1000,
+            total_ops: 2000,
+            interconnect_cycles: 0,
+        }
+    }
+
+    #[test]
+    fn throughput_metrics_consistent() {
+        let r = report(vec![shard(100, 0, 0.5)], 100, 1000, 10);
+        let clock = 1e9;
+        assert!((r.inferences_per_s(clock) - 1e7).abs() < 1.0);
+        // gops: 2000 ops * 10 batches over 1000 cycles @1GHz = 20 GOPS
+        assert!((r.gops(clock) - 20.0).abs() < 1e-9);
+        assert!((r.time_ms(clock) - 1e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn speedup_is_per_batch_ratio() {
+        let base = report(vec![shard(400, 0, 1.0)], 400, 400, 1);
+        let fast = report(vec![shard(100, 0, 1.0)], 100, 100, 1);
+        assert!((fast.speedup_over(&base) - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bottleneck_includes_comm() {
+        let mut a = shard(100, 0, 1.0);
+        a.shard = 0;
+        let mut b = shard(90, 20, 1.0);
+        b.shard = 1;
+        let r = report(vec![a, b], 110, 110, 1);
+        assert_eq!(r.bottleneck_shard(), 1);
+    }
+
+    #[test]
+    fn mean_utilization_averages() {
+        let r = report(vec![shard(1, 0, 0.25), shard(1, 0, 0.75)], 1, 1, 1);
+        assert!((r.mean_utilization() - 0.5).abs() < 1e-12);
+        assert_eq!(report(vec![], 1, 1, 1).mean_utilization(), 0.0);
+    }
+}

@@ -15,16 +15,21 @@
 //!   exactly the paper's "dynamic reconfiguration between approximate and
 //!   accurate modes";
 //! * [`Server`] — worker thread owning the PJRT runtime, request channel,
-//!   response plumbing, metrics.
+//!   response plumbing, metrics;
+//! * [`ShardRouter`] / [`ShardedService`] — the cluster-serving layer:
+//!   spread micro-batches across M simulated engine shards
+//!   (round-robin or least-loaded), one worker thread per shard.
 //!
 //! No tokio in the vendored environment: std threads + mpsc channels.
 
 mod batcher;
 mod metrics;
 mod policy;
+mod router;
 mod server;
 
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use policy::{GovernorConfig, PrecisionGovernor};
+pub use router::{RoutePolicy, ShardRouter, ShardedResponse, ShardedService};
 pub use server::{InferenceRequest, InferenceResponse, Server, ServerConfig};

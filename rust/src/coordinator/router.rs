@@ -1,0 +1,235 @@
+//! Shard-aware request routing: spread micro-batches across a cluster of
+//! simulated engine shards.
+//!
+//! The single-engine serving path ([`super::Server`]) owns one runtime; a
+//! cluster deployment has M engine shards and needs a *placement* decision
+//! per micro-batch before batching/precision policies apply. That decision
+//! is [`ShardRouter`]: round-robin for uniform traffic, least-loaded for
+//! bursty traffic (backlog-driven, the same signal the precision governor
+//! watches). [`ShardedService`] wires the router to one worker thread per
+//! shard, each owning a [`VectorEngine`] that cycle-simulates its replica
+//! of the workload — the serving-side counterpart of
+//! [`crate::cluster::ShardExecutor`].
+
+use crate::cluster::PartitionPlan;
+use crate::engine::{EngineConfig, VectorEngine};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+
+/// Placement policy for micro-batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle through shards in order.
+    RoundRobin,
+    /// Send each micro-batch to the shard with the smallest backlog.
+    LeastLoaded,
+}
+
+/// Backlog-tracking micro-batch router.
+#[derive(Debug)]
+pub struct ShardRouter {
+    policy: RoutePolicy,
+    next: usize,
+    inflight: Arc<Vec<AtomicUsize>>,
+    routed: Vec<u64>,
+}
+
+impl ShardRouter {
+    /// New router over `shards` shards.
+    pub fn new(shards: usize, policy: RoutePolicy) -> Self {
+        assert!(shards >= 1, "router needs at least one shard");
+        ShardRouter {
+            policy,
+            next: 0,
+            inflight: Arc::new((0..shards).map(|_| AtomicUsize::new(0)).collect()),
+            routed: vec![0; shards],
+        }
+    }
+
+    /// Number of shards routed over.
+    pub fn shards(&self) -> usize {
+        self.inflight.len()
+    }
+
+    /// Choose a shard for the next micro-batch and account it as in flight.
+    pub fn pick(&mut self) -> usize {
+        let m = self.shards();
+        let shard = match self.policy {
+            RoutePolicy::RoundRobin => {
+                let s = self.next % m;
+                self.next = (self.next + 1) % m;
+                s
+            }
+            RoutePolicy::LeastLoaded => (0..m)
+                .min_by_key(|&s| self.inflight[s].load(Ordering::SeqCst))
+                .unwrap(),
+        };
+        self.inflight[shard].fetch_add(1, Ordering::SeqCst);
+        self.routed[shard] += 1;
+        shard
+    }
+
+    /// Mark one micro-batch on `shard` as completed.
+    pub fn complete(&self, shard: usize) {
+        self.inflight[shard].fetch_sub(1, Ordering::SeqCst);
+    }
+
+    /// Current in-flight micro-batches on `shard`.
+    pub fn backlog(&self, shard: usize) -> usize {
+        self.inflight[shard].load(Ordering::SeqCst)
+    }
+
+    /// Total in-flight micro-batches.
+    pub fn total_backlog(&self) -> usize {
+        (0..self.shards()).map(|s| self.backlog(s)).sum()
+    }
+
+    /// Micro-batches routed to `shard` so far.
+    pub fn routed(&self, shard: usize) -> u64 {
+        self.routed[shard]
+    }
+
+    /// Shared in-flight counters (for workers to decrement on completion).
+    fn counters(&self) -> Arc<Vec<AtomicUsize>> {
+        Arc::clone(&self.inflight)
+    }
+}
+
+/// One served micro-batch.
+#[derive(Debug, Clone)]
+pub struct ShardedResponse {
+    /// Micro-batch id (submission order).
+    pub id: u64,
+    /// Shard that served it.
+    pub shard: usize,
+    /// Requests in the micro-batch.
+    pub requests: usize,
+    /// Simulated engine cycles the micro-batch took on its shard.
+    pub sim_cycles: u64,
+}
+
+struct Job {
+    id: u64,
+    requests: usize,
+    respond: mpsc::Sender<ShardedResponse>,
+}
+
+/// A cluster-serving harness: M worker threads, each cycle-simulating one
+/// shard of a [`PartitionPlan`], fed through a [`ShardRouter`].
+///
+/// Intended for replica (data-parallel) plans, where every shard can serve
+/// any micro-batch; with other plans each worker simply simulates its own
+/// slice per routed batch.
+pub struct ShardedService {
+    txs: Vec<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<u64>>,
+    router: ShardRouter,
+    next_id: u64,
+}
+
+impl ShardedService {
+    /// Spawn one simulation worker per shard of `plan`.
+    pub fn start(plan: &PartitionPlan, engine: EngineConfig, policy: RoutePolicy) -> Self {
+        assert!(!plan.is_empty(), "empty partition plan");
+        let router = ShardRouter::new(plan.len(), policy);
+        let mut txs = Vec::with_capacity(plan.len());
+        let mut workers = Vec::with_capacity(plan.len());
+        for sp in &plan.shards {
+            let (tx, rx) = mpsc::channel::<Job>();
+            let trace = sp.trace.clone();
+            let pol = sp.policy.clone();
+            let shard = sp.shard;
+            let counters = router.counters();
+            let handle = std::thread::Builder::new()
+                .name(format!("corvet-shard-{shard}"))
+                .spawn(move || {
+                    // the per-inference cycle cost of this shard's slice is
+                    // deterministic: simulate once, then price each batch
+                    let report = VectorEngine::new(engine).run_trace(&trace, &pol);
+                    let mut served = 0u64;
+                    while let Ok(job) = rx.recv() {
+                        let sim_cycles = report.total_cycles * job.requests.max(1) as u64;
+                        served += 1;
+                        job.respond
+                            .send(ShardedResponse {
+                                id: job.id,
+                                shard,
+                                requests: job.requests,
+                                sim_cycles,
+                            })
+                            .ok();
+                        counters[shard].fetch_sub(1, Ordering::SeqCst);
+                    }
+                    served
+                })
+                .expect("spawning shard worker");
+            txs.push(tx);
+            workers.push(handle);
+        }
+        ShardedService { txs, workers, router, next_id: 0 }
+    }
+
+    /// Route one micro-batch of `requests` requests; returns the receiver
+    /// for its completion along with the shard chosen.
+    pub fn submit(&mut self, requests: usize) -> (usize, mpsc::Receiver<ShardedResponse>) {
+        let shard = self.router.pick();
+        let (tx, rx) = mpsc::channel();
+        self.next_id += 1;
+        self.txs[shard]
+            .send(Job { id: self.next_id, requests, respond: tx })
+            .expect("shard worker is down");
+        (shard, rx)
+    }
+
+    /// Router view (backlogs, routed counts).
+    pub fn router(&self) -> &ShardRouter {
+        &self.router
+    }
+
+    /// Drain the workers and return micro-batches served per shard.
+    pub fn shutdown(self) -> Vec<u64> {
+        drop(self.txs); // closes every worker's channel
+        self.workers
+            .into_iter()
+            .map(|h| h.join().expect("shard worker panicked"))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_cycles_evenly() {
+        let mut r = ShardRouter::new(3, RoutePolicy::RoundRobin);
+        let picks: Vec<usize> = (0..6).map(|_| r.pick()).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2]);
+        assert_eq!(r.total_backlog(), 6);
+        for s in 0..3 {
+            assert_eq!(r.routed(s), 2);
+            r.complete(s);
+            r.complete(s);
+        }
+        assert_eq!(r.total_backlog(), 0);
+    }
+
+    #[test]
+    fn least_loaded_avoids_busy_shards() {
+        let mut r = ShardRouter::new(2, RoutePolicy::LeastLoaded);
+        let a = r.pick();
+        assert_eq!(a, 0, "ties break to the lowest index");
+        // shard 0 busy -> next pick must go to shard 1
+        assert_eq!(r.pick(), 1);
+        // complete shard 0's work; it becomes least loaded again
+        r.complete(0);
+        assert_eq!(r.pick(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one shard")]
+    fn zero_shards_rejected() {
+        ShardRouter::new(0, RoutePolicy::RoundRobin);
+    }
+}

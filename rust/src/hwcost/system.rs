@@ -137,6 +137,80 @@ pub fn engine_fpga(cfg: &EngineConfig) -> SystemFpga {
     SystemFpga { kluts: luts / 1e3, kffs: ffs / 1e3, dsps: 0, freq_mhz, power_w }
 }
 
+/// Multi-engine cluster ASIC estimate: M engines plus the inter-shard NoC
+/// (one router and ring-link interface per shard).
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterAsic {
+    /// Engine shards composed.
+    pub shards: usize,
+    /// Per-engine estimate the cluster is built from.
+    pub engine: SystemAsic,
+    /// NoC (routers + links) area, mm².
+    pub noc_area_mm2: f64,
+    /// NoC power, mW.
+    pub noc_power_mw: f64,
+    /// Total die area, mm².
+    pub area_mm2: f64,
+    /// Total power, mW.
+    pub power_mw: f64,
+    /// Cluster clock, GHz (mesochronous links: the engine clock holds).
+    pub freq_ghz: f64,
+    /// Peak throughput, GOPS (M × engine peak).
+    pub peak_gops: f64,
+}
+
+impl ClusterAsic {
+    /// Energy efficiency in TOPS/W.
+    pub fn tops_per_w(&self) -> f64 {
+        (self.peak_gops / 1e3) / (self.power_mw / 1e3)
+    }
+
+    /// Compute density in TOPS/mm².
+    pub fn tops_per_mm2(&self) -> f64 {
+        (self.peak_gops / 1e3) / self.area_mm2
+    }
+
+    /// Fraction of total area spent on the interconnect.
+    pub fn noc_overhead_fraction(&self) -> f64 {
+        self.noc_area_mm2 / self.area_mm2
+    }
+}
+
+/// Per-shard NoC router area, µm² (5-port wormhole router, 256-bit flits —
+/// calibration policy in DESIGN.md §8: the NoC must stay a small fraction
+/// of engine area so scale-out efficiency tracks the single engine).
+const NOC_ROUTER_UM2: f64 = 9_000.0;
+/// Per-shard ring-link interface area, µm² (drivers + synchronisers).
+const NOC_LINK_UM2: f64 = 3_500.0;
+/// NoC switching activity relative to the typical-activity power constant.
+const NOC_ACTIVITY: f64 = 0.06;
+
+/// ASIC model of an M-shard cluster of identical engines. With `shards ==
+/// 1` this degenerates to [`engine_asic`] exactly (no NoC is instantiated).
+pub fn cluster_asic(cfg: &EngineConfig, shards: usize, cycles_per_mac: u32) -> ClusterAsic {
+    assert!(shards >= 1, "cluster needs at least one shard");
+    let c = AsicPrimitives::default();
+    let engine = engine_asic(cfg, cycles_per_mac);
+    let noc_um2 = if shards == 1 {
+        0.0
+    } else {
+        shards as f64 * (NOC_ROUTER_UM2 + NOC_LINK_UM2)
+    };
+    let freq_ghz = engine.freq_ghz;
+    let noc_power_mw =
+        noc_um2 * c.mw_per_um2_ghz * freq_ghz * NOC_ACTIVITY + noc_um2 * c.leak_mw_per_um2;
+    ClusterAsic {
+        shards,
+        engine,
+        noc_area_mm2: noc_um2 / 1e6,
+        noc_power_mw,
+        area_mm2: shards as f64 * engine.area_mm2 + noc_um2 / 1e6,
+        power_mw: shards as f64 * engine.power_mw + noc_power_mw,
+        freq_ghz,
+        peak_gops: shards as f64 * engine.peak_gops,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,5 +277,38 @@ mod tests {
         let r256 = engine_asic(&EngineConfig::pe256(), 4);
         let growth = r256.area_mm2 / r64.area_mm2;
         assert!(growth > 1.0 && growth < 4.0, "area growth {growth} for 4x PEs");
+    }
+
+    #[test]
+    fn single_shard_cluster_is_the_engine() {
+        let e = engine_asic(&EngineConfig::pe64(), 4);
+        let c = cluster_asic(&EngineConfig::pe64(), 1, 4);
+        assert_eq!(c.noc_area_mm2, 0.0);
+        assert_eq!(c.noc_power_mw, 0.0);
+        assert!((c.area_mm2 - e.area_mm2).abs() < 1e-12);
+        assert!((c.power_mw - e.power_mw).abs() < 1e-12);
+        assert!((c.peak_gops - e.peak_gops).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cluster_peak_scales_linearly() {
+        let c1 = cluster_asic(&EngineConfig::pe256(), 1, 4);
+        let c4 = cluster_asic(&EngineConfig::pe256(), 4, 4);
+        assert!((c4.peak_gops / c1.peak_gops - 4.0).abs() < 1e-9);
+        assert_eq!(c4.freq_ghz, c1.freq_ghz, "mesochronous links keep the engine clock");
+    }
+
+    #[test]
+    fn noc_overhead_small_and_efficiency_near_single_engine() {
+        for shards in [2usize, 4, 8] {
+            let c = cluster_asic(&EngineConfig::pe64(), shards, 4);
+            assert!(c.noc_overhead_fraction() < 0.05, "NoC {}", c.noc_overhead_fraction());
+            let single = cluster_asic(&EngineConfig::pe64(), 1, 4);
+            let eff_ratio = c.tops_per_w() / single.tops_per_w();
+            assert!(
+                (0.88..=1.0).contains(&eff_ratio),
+                "{shards} shards: efficiency ratio {eff_ratio}"
+            );
+        }
     }
 }

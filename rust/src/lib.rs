@@ -18,7 +18,8 @@
 //!   ([`activation`]), AAD pooling ([`pooling`]), normalisation ([`norm`]),
 //!   the eq.(1)–(5) memory-mapping scheme ([`memory`]), the layer-multiplexed
 //!   control engine ([`control`]), the vector-engine simulator ([`engine`]),
-//!   and the calibrated FPGA/ASIC cost model ([`hwcost`]).
+//!   the sharded multi-engine cluster layer ([`cluster`]), and the
+//!   calibrated FPGA/ASIC cost model ([`hwcost`]).
 //!
 //! See `DESIGN.md` for the paper→module inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results for every table and figure.
@@ -27,6 +28,7 @@ pub mod activation;
 pub mod baselines;
 pub mod bench_harness;
 pub mod cli;
+pub mod cluster;
 pub mod control;
 pub mod coordinator;
 pub mod cordic;
@@ -50,6 +52,7 @@ pub type Result<T> = anyhow::Result<T>;
 /// Commonly used items, re-exported for examples and benches.
 pub mod prelude {
     pub use crate::activation::{ActFn, MultiAfBlock};
+    pub use crate::cluster::{Cluster, ClusterConfig, ClusterReport, PartitionStrategy};
     pub use crate::cordic::mac::{CordicMac, ExecMode, MacConfig};
     pub use crate::cordic::CordicEngine;
     pub use crate::engine::{EngineConfig, VectorEngine};

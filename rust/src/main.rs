@@ -3,12 +3,13 @@
 
 use anyhow::{bail, Context, Result};
 use corvet::cli::{Args, USAGE};
+use corvet::cluster::{parse_strategy, Cluster, ClusterConfig, InterconnectConfig};
 use corvet::coordinator::{Server, ServerConfig};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::{EngineConfig, VectorEngine};
 use corvet::model::workloads::{paper_mlp, tinyyolo_trace, vgg16_trace, vit_tiny_mlp_trace};
 use corvet::quant::{assign_modes, describe, PolicyTable, Precision};
-use corvet::report::fnum;
+use corvet::report::{fnum, Table};
 use corvet::runtime::{quantize_network, ArtifactRegistry, ModelWeights};
 use corvet::tables;
 use corvet::testutil::Xoshiro256;
@@ -32,6 +33,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         "table" => cmd_table(&args),
         "fig" => cmd_fig(&args),
         "simulate" => cmd_simulate(&args),
+        "cluster" => cmd_cluster(&args),
         "train" => cmd_train(&args),
         "sensitivity" => cmd_sensitivity(&args),
         "serve" => cmd_serve(&args),
@@ -119,6 +121,100 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     println!("PE utilisation : {}", fnum(report.mean_pe_utilization()));
     println!("area/power     : {} mm² / {} mW", fnum(asic.area_mm2), fnum(asic.power_mw));
     println!("efficiency     : {} TOPS/W, {} TOPS/mm² (peak)", fnum(asic.tops_per_w()), fnum(asic.tops_per_mm2()));
+    Ok(())
+}
+
+fn cmd_cluster(args: &Args) -> Result<()> {
+    let workload = args.opt_or("workload", "vgg16");
+    let trace = match workload.as_str() {
+        "tinyyolo" => tinyyolo_trace(),
+        "vgg16" => vgg16_trace(),
+        "vit-mlp" | "transformer" => vit_tiny_mlp_trace(),
+        other => bail!("unknown workload {other:?} (tinyyolo|vgg16|vit-mlp)"),
+    };
+    let shards: usize = args.num_or("shards", 4usize)?;
+    let pes: usize = args.num_or("pes", 256usize)?;
+    let batches: u64 = args.num_or("batches", 8u64)?;
+    if shards == 0 || pes == 0 || batches == 0 {
+        bail!("--shards, --pes and --batches must all be >= 1");
+    }
+    let precision = Precision::parse(&args.opt_or("precision", "fxp8"))
+        .context("bad --precision")?;
+    let mode = parse_mode(&args.opt_or("mode", "approx"))?;
+    let strategy = match args.options.get("strategy") {
+        Some(s) => Some(parse_strategy(s).context("bad --strategy (pipeline|tensor|data)")?),
+        None => None,
+    };
+    let mut engine = EngineConfig { pes, ..EngineConfig::pe256() };
+    engine.af_blocks = (pes / 64).max(1);
+    engine.pool_units = (pes / 8).max(1);
+
+    let policy = PolicyTable::uniform(trace.compute_layers(), precision, mode);
+    let cluster = Cluster::new(ClusterConfig {
+        shards,
+        engine,
+        interconnect: InterconnectConfig::default(),
+        strategy,
+    });
+    let plan = cluster.plan(&trace, &policy);
+    let report = corvet::cluster::ShardExecutor::new(engine, cluster.config.interconnect)
+        .run(&plan, batches);
+    let asic = corvet::hwcost::cluster_asic(
+        &engine,
+        report.num_shards(),
+        policy.layer(0).cycles_per_mac(),
+    );
+    let clock = asic.freq_ghz * 1e9;
+
+    println!(
+        "workload       : {} ({} layers, {:.2} GMACs)",
+        trace.name,
+        trace.layers.len(),
+        trace.total_macs() as f64 / 1e9
+    );
+    println!(
+        "cluster        : {} x {pes}-PE engines @ {:.2} GHz, {} strategy",
+        report.num_shards(),
+        asic.freq_ghz,
+        report.strategy
+    );
+    println!("policy         : {precision} / {mode:?} ({} cyc/MAC)", policy.layer(0).cycles_per_mac());
+    println!("MAC imbalance  : {}", fnum(plan.mac_imbalance()));
+    println!("micro-batches  : {batches}");
+    println!("cycles/batch   : {} (steady state)", report.cycles_per_batch);
+    println!("makespan       : {} cycles ({} ms)", report.total_cycles, fnum(report.time_ms(clock)));
+    println!("throughput     : {} inf/s, {} GOPS", fnum(report.inferences_per_s(clock)), fnum(report.gops(clock)));
+    println!("mean util      : {}", fnum(report.mean_utilization()));
+    println!("interconnect   : {} cycles total", report.interconnect_cycles);
+    println!(
+        "area/power     : {} mm² / {} mW (NoC {} of area)",
+        fnum(asic.area_mm2),
+        fnum(asic.power_mw),
+        fnum(asic.noc_overhead_fraction())
+    );
+    println!("efficiency     : {} TOPS/W, {} TOPS/mm² (peak)", fnum(asic.tops_per_w()), fnum(asic.tops_per_mm2()));
+
+    let mut t = Table::new(
+        "per-shard breakdown",
+        &["shard", "layers", "cyc/batch", "comm/batch", "batches", "util", "PE util", "staging stall"],
+    );
+    for s in &report.shards {
+        t.row(vec![
+            s.shard.to_string(),
+            format!("{}..{}", s.layer_span.0, s.layer_span.1),
+            s.compute_cycles_per_batch.to_string(),
+            s.comm_cycles_per_batch.to_string(),
+            s.batches.to_string(),
+            fnum(s.utilization),
+            fnum(s.mean_pe_utilization),
+            s.prefetch.stall_cycles.to_string(),
+        ]);
+    }
+    emit(t, args.has_flag("csv"));
+
+    if args.has_flag("sweep") {
+        emit(tables::cluster_scaling(), args.has_flag("csv"));
+    }
     Ok(())
 }
 

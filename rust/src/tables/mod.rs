@@ -12,9 +12,10 @@ pub mod sota;
 
 pub use figs::{fig11, fig13, Fig11Point};
 
+use crate::cluster::{Cluster, ClusterConfig, ClusterReport, InterconnectConfig, PartitionStrategy};
 use crate::engine::EngineConfig;
 use crate::hwcost;
-use crate::model::workloads::tinyyolo_trace;
+use crate::model::workloads::{tinyyolo_trace, vgg16_trace};
 use crate::quant::{PolicyTable, Precision};
 use crate::report::{delta_pct, fnum, Table};
 
@@ -227,6 +228,55 @@ pub fn table5() -> Table {
     t
 }
 
+/// Cluster scaling table (beyond the paper's single-engine Table V): M
+/// engine shards on the VGG-16 trace under the pipeline partition, with
+/// steady-state throughput, per-run utilisation and the multi-engine ASIC
+/// cost from [`hwcost::cluster_asic`].
+pub fn cluster_scaling() -> Table {
+    let trace = vgg16_trace();
+    let policy = PolicyTable::uniform(
+        trace.compute_layers(),
+        Precision::Fxp8,
+        crate::cordic::mac::ExecMode::Approximate,
+    );
+    let mut t = Table::new(
+        "Cluster scaling — VGG-16, FxP-8 approximate, pipeline partition, 8 micro-batches",
+        &["engine", "shards", "cyc/inf (M)", "speedup", "mean util", "inf/s", "mm²", "TOPS/W"],
+    );
+    for (label, cfg) in [("64-PE", EngineConfig::pe64()), ("256-PE", EngineConfig::pe256())] {
+        let mut base: Option<ClusterReport> = None;
+        for shards in [1usize, 2, 4, 8] {
+            let cluster = Cluster::new(ClusterConfig {
+                shards,
+                engine: cfg,
+                interconnect: InterconnectConfig::default(),
+                strategy: Some(PartitionStrategy::Pipeline),
+            });
+            let r = cluster.run_trace(&trace, &policy, 8);
+            let asic = hwcost::cluster_asic(&cfg, shards, 4);
+            let clock_hz = asic.freq_ghz * 1e9;
+            let speedup = match &base {
+                Some(b) => r.speedup_over(b),
+                None => 1.0,
+            };
+            t.row(vec![
+                label.to_string(),
+                shards.to_string(),
+                fnum(r.cycles_per_batch as f64 / 1e6),
+                fnum(speedup),
+                fnum(r.mean_utilization()),
+                fnum(r.inferences_per_s(clock_hz)),
+                fnum(asic.area_mm2),
+                fnum(asic.tops_per_w()),
+            ]);
+            if base.is_none() {
+                base = Some(r);
+            }
+        }
+    }
+    t
+}
+
 /// §V-F end-to-end comparison (the quantitative content of Fig. 12):
 /// our measured latency/power vs the published comparison points.
 /// `measured` = (latency_ms, power_w) from the e2e driver or the simulator.
@@ -312,6 +362,19 @@ mod tests {
         let ours = &t.rows[0];
         assert!(ours[0].contains("Proposed"));
         assert_eq!(ours[5], "0");
+    }
+
+    #[test]
+    fn cluster_scaling_table_shows_3x_at_4_shards() {
+        let t = cluster_scaling();
+        assert_eq!(t.rows.len(), 8, "two engines x four shard counts");
+        let row = t
+            .rows
+            .iter()
+            .find(|r| r[0] == "64-PE" && r[1] == "4")
+            .expect("64-PE 4-shard row");
+        let speedup: f64 = row[3].parse().unwrap();
+        assert!(speedup >= 3.0, "4-shard speedup {speedup}");
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Integration tests for the sharded multi-engine layer: planner +
+//! executor + report against the single-engine simulator, and the
+//! coordinator's routing policy over live simulated shards.
+
+use corvet::cluster::{
+    Cluster, ClusterConfig, ClusterReport, InterconnectConfig, PartitionStrategy,
+};
+use corvet::coordinator::{RoutePolicy, ShardedService};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::model::workloads::{tinyyolo_trace, vgg16_trace, vit_tiny_mlp_trace, Trace};
+use corvet::quant::{PolicyTable, Precision};
+
+fn policy(t: &Trace) -> PolicyTable {
+    PolicyTable::uniform(t.compute_layers(), Precision::Fxp8, ExecMode::Approximate)
+}
+
+fn run_vgg(shards: usize, pes: usize, strategy: PartitionStrategy, batches: u64) -> ClusterReport {
+    let t = vgg16_trace();
+    let p = policy(&t);
+    let engine = EngineConfig {
+        pes,
+        af_blocks: (pes / 64).max(1),
+        pool_units: (pes / 8).max(1),
+        ..EngineConfig::pe256()
+    };
+    Cluster::new(ClusterConfig {
+        shards,
+        engine,
+        interconnect: InterconnectConfig::default(),
+        strategy: Some(strategy),
+    })
+    .run_trace(&t, &p, batches)
+}
+
+#[test]
+fn single_shard_cluster_matches_engine_simulator() {
+    let t = vgg16_trace();
+    let p = policy(&t);
+    let engine = VectorEngine::new(EngineConfig::pe64()).run_trace(&t, &p);
+    let cluster = run_vgg(1, 64, PartitionStrategy::Pipeline, 4);
+    assert_eq!(
+        cluster.cycles_per_batch, engine.total_cycles,
+        "one pipeline shard must degenerate to the single engine"
+    );
+    assert_eq!(cluster.total_macs, engine.total_macs);
+    assert_eq!(cluster.total_ops, engine.total_ops);
+}
+
+#[test]
+fn four_pipeline_shards_give_3x_throughput_on_vgg() {
+    // the acceptance headline: >=3x cluster throughput at 4 shards vs 1,
+    // interconnect overhead included, on both reported engine sizes
+    for pes in [64usize, 256] {
+        let r1 = run_vgg(1, pes, PartitionStrategy::Pipeline, 8);
+        let r4 = run_vgg(4, pes, PartitionStrategy::Pipeline, 8);
+        let speedup = r4.speedup_over(&r1);
+        assert!(speedup >= 3.0, "{pes}-PE shards: 4-shard speedup {speedup} < 3x");
+        assert!(r4.interconnect_cycles > 0, "interconnect must be charged");
+        assert_eq!(r4.num_shards(), 4);
+        for s in &r4.shards {
+            assert!(
+                s.utilization > 0.0 && s.utilization <= 1.0,
+                "shard {} utilisation {} out of range",
+                s.shard,
+                s.utilization
+            );
+        }
+    }
+}
+
+#[test]
+fn tensor_parallelism_also_scales_past_3x() {
+    let r1 = run_vgg(1, 64, PartitionStrategy::Tensor, 8);
+    let r4 = run_vgg(4, 64, PartitionStrategy::Tensor, 8);
+    let speedup = r4.speedup_over(&r1);
+    assert!(speedup >= 3.0, "tensor 4-shard speedup {speedup} < 3x");
+}
+
+#[test]
+fn steady_state_monotone_in_shard_count() {
+    let mut last = u64::MAX;
+    for shards in [1usize, 2, 4, 8] {
+        let r = run_vgg(shards, 64, PartitionStrategy::Pipeline, 4);
+        assert!(
+            r.cycles_per_batch <= last,
+            "{shards} shards: {} cyc/batch regressed over {last}",
+            r.cycles_per_batch
+        );
+        last = r.cycles_per_batch;
+    }
+}
+
+#[test]
+fn bottleneck_shard_runs_nearly_continuously() {
+    let r = run_vgg(4, 64, PartitionStrategy::Pipeline, 32);
+    let hot = &r.shards[r.bottleneck_shard()];
+    assert!(
+        hot.utilization > 0.8,
+        "bottleneck stage should be busy almost always, got {}",
+        hot.utilization
+    );
+    assert!(r.mean_utilization() > 0.4, "mean util {}", r.mean_utilization());
+}
+
+#[test]
+fn transformer_trace_clusters_with_auto_strategy() {
+    let t = vit_tiny_mlp_trace();
+    let p = policy(&t);
+    let cluster = Cluster::new(ClusterConfig::new(4, EngineConfig::pe256()));
+    let r = cluster.run_trace(&t, &p, 8);
+    assert_eq!(r.num_shards(), 4);
+    assert!(r.total_cycles > 0);
+    let single = Cluster::new(ClusterConfig::new(1, EngineConfig::pe256())).run_trace(&t, &p, 8);
+    assert!(
+        r.speedup_over(&single) > 2.0,
+        "transformer MLP blocks should scale well, got {}x",
+        r.speedup_over(&single)
+    );
+}
+
+#[test]
+fn sharded_service_serves_batches_across_two_shards() {
+    // the coordinator's routing policy over >=2 live simulated shards:
+    // every micro-batch is served, both shards participate
+    let t = tinyyolo_trace();
+    let p = policy(&t);
+    let engine = EngineConfig::pe64();
+    let icn = InterconnectConfig::default();
+    let plan = corvet::cluster::plan::plan(
+        &t,
+        &p,
+        2,
+        &engine,
+        &icn,
+        PartitionStrategy::Data,
+    );
+    let mut service = ShardedService::start(&plan, engine, RoutePolicy::RoundRobin);
+
+    let mut pending = Vec::new();
+    for _ in 0..12 {
+        let (shard, rx) = service.submit(4);
+        assert!(shard < 2);
+        pending.push(rx);
+    }
+    let mut per_shard = [0u64; 2];
+    for rx in pending {
+        let resp = rx.recv().expect("shard response");
+        assert_eq!(resp.requests, 4);
+        assert!(resp.sim_cycles > 0, "batch must cost engine cycles");
+        per_shard[resp.shard] += 1;
+    }
+    assert_eq!(per_shard, [6, 6], "round-robin spreads batches evenly");
+    assert_eq!(service.router().routed(0), 6);
+    assert_eq!(service.router().routed(1), 6);
+
+    let served = service.shutdown();
+    assert_eq!(served.iter().sum::<u64>(), 12);
+    assert!(served.iter().all(|&s| s > 0), "both shards must serve");
+}
+
+#[test]
+fn least_loaded_service_round_trips_every_batch() {
+    // (the deterministic least-loaded distribution property is covered by
+    // the router's unit tests; completions race with submissions here, so
+    // this test asserts end-to-end serving correctness only)
+    let t = tinyyolo_trace();
+    let p = policy(&t);
+    let engine = EngineConfig::pe64();
+    let plan = corvet::cluster::plan::plan(
+        &t,
+        &p,
+        2,
+        &engine,
+        &InterconnectConfig::default(),
+        PartitionStrategy::Data,
+    );
+    let mut service = ShardedService::start(&plan, engine, RoutePolicy::LeastLoaded);
+    let mut pending = Vec::new();
+    for _ in 0..8 {
+        let (shard, rx) = service.submit(2);
+        assert!(shard < 2);
+        pending.push(rx);
+    }
+    for rx in pending {
+        let resp = rx.recv().expect("shard response");
+        assert!(resp.shard < 2);
+        assert_eq!(resp.requests, 2);
+        assert!(resp.sim_cycles > 0);
+    }
+    let served = service.shutdown();
+    assert_eq!(served.iter().sum::<u64>(), 8);
+}

@@ -1,0 +1,125 @@
+//! Property tests for the engine simulator and the cluster layer (via
+//! `testutil::prop` — proptest is not vendored).
+//!
+//! The invariants the paper's throughput argument rests on:
+//! * adding PE lanes never makes an inference slower (latency hiding only
+//!   helps);
+//! * the 256-PE configuration sustains at least the 64-PE throughput on the
+//!   evaluation workloads, for every precision/mode policy;
+//! * the same two invariants lifted to the cluster: adding shards never
+//!   slows steady-state throughput for 1→4 shards.
+
+use corvet::cluster::{Cluster, ClusterConfig, InterconnectConfig, PartitionStrategy};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::model::workloads::{tinyyolo_trace, vgg16_trace, Trace};
+use corvet::quant::{PolicyTable, Precision};
+use corvet::testutil::{check_prop, Xoshiro256};
+
+fn rand_trace(rng: &mut Xoshiro256) -> Trace {
+    if rng.index(2) == 0 {
+        tinyyolo_trace()
+    } else {
+        vgg16_trace()
+    }
+}
+
+fn rand_mode(rng: &mut Xoshiro256) -> ExecMode {
+    match rng.index(3) {
+        0 => ExecMode::Approximate,
+        1 => ExecMode::Accurate,
+        _ => ExecMode::Custom(rng.int_in(2, 24) as u32),
+    }
+}
+
+fn rand_precision(rng: &mut Xoshiro256) -> Precision {
+    Precision::ALL[rng.index(Precision::ALL.len())]
+}
+
+#[test]
+fn prop_total_cycles_monotone_non_increasing_in_pes() {
+    check_prop("engine cycles monotone in PEs", |rng| {
+        let trace = rand_trace(rng);
+        let policy = PolicyTable::uniform(
+            trace.compute_layers(),
+            rand_precision(rng),
+            rand_mode(rng),
+        );
+        let lo = rng.int_in(1, 256) as usize;
+        let hi = lo + rng.int_in(1, 256) as usize;
+        let run = |pes: usize| {
+            let cfg = EngineConfig { pes, ..EngineConfig::default() };
+            VectorEngine::new(cfg).run_trace(&trace, &policy).total_cycles
+        };
+        let (c_lo, c_hi) = (run(lo), run(hi));
+        if c_hi <= c_lo {
+            Ok(())
+        } else {
+            Err(format!(
+                "{}: {hi} PEs took {c_hi} cycles > {lo} PEs at {c_lo}",
+                trace.name
+            ))
+        }
+    });
+}
+
+#[test]
+fn pe256_throughput_at_least_pe64_for_every_policy() {
+    let trace = vgg16_trace();
+    for precision in Precision::ALL {
+        for mode in [ExecMode::Approximate, ExecMode::Accurate, ExecMode::Custom(12)] {
+            let policy = PolicyTable::uniform(trace.compute_layers(), precision, mode);
+            let g64 = VectorEngine::new(EngineConfig::pe64())
+                .run_trace(&trace, &policy)
+                .gops(1e9);
+            let g256 = VectorEngine::new(EngineConfig::pe256())
+                .run_trace(&trace, &policy)
+                .gops(1e9);
+            assert!(
+                g256 >= g64,
+                "{precision} {mode:?}: pe256 {g256} GOPS < pe64 {g64} GOPS"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_cluster_throughput_monotone_1_to_4_shards() {
+    check_prop("cluster steady state monotone in shards", |rng| {
+        let trace = rand_trace(rng);
+        let policy = PolicyTable::uniform(
+            trace.compute_layers(),
+            Precision::Fxp8,
+            rand_mode(rng),
+        );
+        let pes = [64usize, 128, 256][rng.index(3)];
+        let strategy = if rng.index(2) == 0 {
+            PartitionStrategy::Pipeline
+        } else {
+            PartitionStrategy::Tensor
+        };
+        let engine = EngineConfig { pes, ..EngineConfig::pe256() };
+        let run = |shards: usize| {
+            Cluster::new(ClusterConfig {
+                shards,
+                engine,
+                interconnect: InterconnectConfig::default(),
+                strategy: Some(strategy),
+            })
+            .run_trace(&trace, &policy, 2)
+            .cycles_per_batch
+        };
+        let mut last = run(1);
+        for shards in [2usize, 4] {
+            let c = run(shards);
+            if c > last {
+                return Err(format!(
+                    "{} {strategy:?} {pes} PEs: {shards} shards at {c} cyc/batch > {last}",
+                    trace.name
+                ));
+            }
+            last = c;
+        }
+        Ok(())
+    });
+}
