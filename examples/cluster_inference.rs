@@ -14,21 +14,23 @@ use corvet::cluster::{Cluster, ClusterConfig, InterconnectConfig, PartitionStrat
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::EngineConfig;
 use corvet::hwcost;
-use corvet::model::workloads::vgg16_trace;
+use corvet::ir::workloads::vgg16;
 use corvet::quant::{PolicyTable, Precision};
 use corvet::report::fnum;
 
 fn main() {
-    let trace = vgg16_trace();
-    let policy = PolicyTable::uniform(
-        trace.compute_layers(),
+    // VGG-16 authored in the typed layer IR; annotate every compute layer
+    // with the FxP-8 approximate operating point
+    let graph = vgg16();
+    let graph = graph.with_policy(&PolicyTable::uniform(
+        graph.compute_layers(),
         Precision::Fxp8,
         ExecMode::Approximate,
-    );
+    ));
     let engine = EngineConfig::pe256();
     let batches = 16u64;
 
-    let single = Cluster::new(ClusterConfig::new(1, engine)).run_trace(&trace, &policy, batches);
+    let single = Cluster::new(ClusterConfig::new(1, engine)).run_ir(&graph, batches);
 
     let config = ClusterConfig {
         shards: 4,
@@ -37,14 +39,14 @@ fn main() {
         strategy: Some(PartitionStrategy::Pipeline),
     };
     let cluster = Cluster::new(config);
-    let plan = cluster.plan(&trace, &policy);
+    let plan = cluster.plan_ir(&graph);
     let report = corvet::cluster::ShardExecutor::new(engine, config.interconnect)
         .run(&plan, batches);
 
     let asic = hwcost::cluster_asic(&engine, 4, 4);
     let clock = asic.freq_ghz * 1e9;
 
-    println!("workload    : {} ({:.1} GMACs/inference)", trace.name, trace.total_macs() as f64 / 1e9);
+    println!("workload    : {} ({:.1} GMACs/inference)", graph.name, graph.total_macs() as f64 / 1e9);
     println!("cluster     : 4 x {}-PE engines, {} partition", engine.pes, report.strategy);
     println!("planner     : MAC imbalance {}", fnum(plan.mac_imbalance()));
     println!();

@@ -2,7 +2,7 @@
 //! Table IV / §V-F workload.
 //!
 //! Sweeps engine sizes and execution modes over the full TinyYOLO-v3 layer
-//! trace, reporting latency, throughput, power and efficiency from the
+//! graph (typed IR), reporting latency, throughput, power and efficiency from the
 //! calibrated cost model, plus the end-to-end comparison table against the
 //! published platforms (Jetson Nano, Raspberry Pi, prior FPGA designs).
 //!
@@ -11,20 +11,20 @@
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::{EngineConfig, VectorEngine};
 use corvet::hwcost;
-use corvet::model::workloads::tinyyolo_trace;
+use corvet::ir::workloads::tinyyolo;
 use corvet::quant::{PolicyTable, Precision};
 use corvet::report::{fnum, Table};
 use corvet::tables;
 
 fn main() -> anyhow::Result<()> {
-    let trace = tinyyolo_trace();
+    let graph = tinyyolo();
     println!(
         "workload: {} — {} layers, {} GMACs, {} Gops, {} M params",
-        trace.name,
-        trace.layers.len(),
-        fnum(trace.total_macs() as f64 / 1e9),
-        fnum(trace.total_ops() as f64 / 1e9),
-        fnum(trace.total_params() as f64 / 1e6),
+        graph.name,
+        graph.layers.len(),
+        fnum(graph.total_macs() as f64 / 1e9),
+        fnum(graph.total_ops() as f64 / 1e9),
+        fnum(graph.total_params() as f64 / 1e6),
     );
 
     let mut t = Table::new(
@@ -37,8 +37,8 @@ fn main() -> anyhow::Result<()> {
         cfg.af_blocks = (pes / 64).max(1);
         cfg.pool_units = (pes / 8).max(1);
         for mode in [ExecMode::Approximate, ExecMode::Accurate] {
-            let policy = PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, mode);
-            let report = VectorEngine::new(cfg).run_trace(&trace, &policy);
+            let policy = PolicyTable::uniform(graph.compute_layers(), Precision::Fxp8, mode);
+            let report = VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
             let asic = hwcost::engine_asic(&cfg, policy.layer(0).cycles_per_mac());
             let clock = asic.freq_ghz * 1e9;
             let ms = report.time_ms(clock);
@@ -62,11 +62,11 @@ fn main() -> anyhow::Result<()> {
     let cfg = EngineConfig::pe256();
     let fpga = hwcost::engine_fpga(&cfg);
     let policy = PolicyTable::uniform(
-        trace.compute_layers(),
+        graph.compute_layers(),
         Precision::Fxp8,
         ExecMode::Approximate,
     );
-    let report = VectorEngine::new(cfg).run_trace(&trace, &policy);
+    let report = VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
     let clock = fpga.freq_mhz * 1e6;
     println!(
         "FPGA point (VC707 model): {} kLUTs, {} MHz, {} W -> {} ms, {} GOPS/W",

@@ -1,0 +1,76 @@
+//! Bench: scalar vs wave-vectorised CORDIC forward pass.
+//!
+//! The wave executor runs the same bit-exact CORDIC arithmetic as
+//! `forward_cordic` but in PE-array-wide lane waves over pre-quantised
+//! guard-word banks (one weight fetch per wave, additive index arithmetic,
+//! no per-MAC `Fxp` wrapping). This bench verifies bit identity at runtime
+//! and reports the measured host speedup per model and operating point.
+//! Captured results belong in EXPERIMENTS.md §Perf.
+
+use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::EngineConfig;
+use corvet::model::workloads::{paper_mlp, small_cnn, transformer_mlp};
+use corvet::model::{Network, Tensor};
+use corvet::pooling::sliding::PoolKind;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::fnum;
+use corvet::testutil::Xoshiro256;
+
+fn input_for(net: &Network, rng: &mut Xoshiro256) -> Tensor {
+    if net.input_shape.len() == 3 {
+        let n: usize = net.input_shape.iter().product();
+        Tensor::from_vec(&net.input_shape, rng.uniform_vec(n, -0.8, 0.8))
+    } else {
+        Tensor::vector(&rng.uniform_vec(net.input_shape[0], -0.8, 0.8))
+    }
+}
+
+fn main() {
+    let mut rng = Xoshiro256::new(7);
+    let nets = [
+        paper_mlp(101),
+        transformer_mlp(102),
+        small_cnn("cnn-8-16", PoolKind::Aad, 103),
+    ];
+    let cfg = EngineConfig::pe256();
+    let b = Bencher { warmup: 2, samples: 10, iters_per_sample: 3 };
+
+    let mut rep = BenchReport::new();
+    println!("scalar vs wave forward pass (bit-identical outputs, 256 lanes):");
+    for net in &nets {
+        let x = input_for(net, &mut rng);
+        for (mode, tag) in [(ExecMode::Approximate, "approx"), (ExecMode::Accurate, "accurate")] {
+            let policy = PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, mode);
+
+            // runtime bit-identity check before timing anything
+            let (y_s, _) = net.forward_cordic(&x, &policy);
+            let (y_w, stats) = net.forward_wave(&x, &policy, &cfg);
+            assert_eq!(
+                y_s.data(),
+                y_w.data(),
+                "{}: wave output diverged from scalar",
+                net.name
+            );
+
+            let r_scalar = b.run(&format!("scalar {} {tag}", net.name), || {
+                net.forward_cordic(&x, &policy)
+            });
+            let r_wave = b.run(&format!("wave   {} {tag}", net.name), || {
+                net.forward_wave(&x, &policy, &cfg)
+            });
+            let speedup = r_scalar.mean_ns / r_wave.mean_ns;
+            println!(
+                "  {:28} {tag:8}: scalar {:>10} ns, wave {:>10} ns  ->  {}x ({} waves)",
+                net.name,
+                fnum(r_scalar.mean_ns),
+                fnum(r_wave.mean_ns),
+                fnum(speedup),
+                stats.total_waves(),
+            );
+            rep.push(r_scalar);
+            rep.push(r_wave);
+        }
+    }
+    print!("{}", rep.render("forward-pass hot path"));
+}

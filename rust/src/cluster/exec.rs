@@ -2,8 +2,8 @@
 //! analytic schedule that assembles per-shard cycle counts into a cluster
 //! makespan.
 //!
-//! Each shard's cycle simulation is independent (the sub-traces are fixed
-//! by the plan), so the expensive part — `VectorEngine::run_trace` per
+//! Each shard's cycle simulation is independent (the sub-graphs are fixed
+//! by the plan), so the expensive part — `VectorEngine::run_ir` per
 //! shard — fans out across OS threads via `std::thread::scope`. The
 //! cross-shard schedule (pipeline fill/steady-state, collective serialising
 //! under tensor parallelism, micro-batch spreading under data parallelism)
@@ -48,7 +48,7 @@ impl ShardExecutor {
             let handles: Vec<_> = plan
                 .shards
                 .iter()
-                .map(|sp| s.spawn(move || VectorEngine::new(engine).run_trace(&sp.trace, &sp.policy)))
+                .map(|sp| s.spawn(move || VectorEngine::new(engine).run_ir(&sp.ir)))
                 .collect();
             handles
                 .into_iter()
@@ -170,28 +170,31 @@ mod tests {
     use super::*;
     use crate::cluster::plan::{plan, PartitionStrategy};
     use crate::cordic::mac::ExecMode;
-    use crate::model::workloads::{tinyyolo_trace, vgg16_trace, Trace};
+    use crate::ir::workloads::{tinyyolo, vgg16};
+    use crate::ir::Graph;
     use crate::quant::{PolicyTable, Precision};
 
-    fn pol(t: &Trace) -> PolicyTable {
-        PolicyTable::uniform(t.compute_layers(), Precision::Fxp8, ExecMode::Approximate)
+    fn annotated(g: &Graph) -> Graph {
+        g.with_policy(&PolicyTable::uniform(
+            g.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        ))
     }
 
     fn run(strategy: PartitionStrategy, shards: usize, batches: u64) -> ClusterReport {
-        let t = vgg16_trace();
-        let p = pol(&t);
+        let g = annotated(&vgg16());
         let engine = EngineConfig::pe64();
         let icn = InterconnectConfig::default();
-        let plan = plan(&t, &p, shards, &engine, &icn, strategy);
+        let plan = plan(&g, shards, &engine, &icn, strategy);
         ShardExecutor::new(engine, icn).run(&plan, batches)
     }
 
     #[test]
     fn one_shard_pipeline_steady_state_matches_engine() {
-        let t = vgg16_trace();
-        let p = pol(&t);
+        let g = annotated(&vgg16());
         let engine = EngineConfig::pe64();
-        let single = VectorEngine::new(engine).run_trace(&t, &p);
+        let single = VectorEngine::new(engine).run_ir(&g);
         let r = run(PartitionStrategy::Pipeline, 1, 4);
         assert_eq!(r.cycles_per_batch, single.total_cycles);
         assert_eq!(r.num_shards(), 1);
@@ -246,11 +249,10 @@ mod tests {
 
     #[test]
     fn data_spreads_batches_across_replicas() {
-        let t = tinyyolo_trace();
-        let p = pol(&t);
+        let g = annotated(&tinyyolo());
         let engine = EngineConfig::pe64();
         let icn = InterconnectConfig::default();
-        let pl = plan(&t, &p, 4, &engine, &icn, PartitionStrategy::Data);
+        let pl = plan(&g, 4, &engine, &icn, PartitionStrategy::Data);
         let r = ShardExecutor::new(engine, icn).run(&pl, 10);
         let total: u64 = r.shards.iter().map(|s| s.batches).sum();
         assert_eq!(total, 10);
@@ -259,7 +261,7 @@ mod tests {
         }
         // 4 replicas finish 10 batches ~2.5x faster than one replica would
         let single = ShardExecutor::new(engine, icn)
-            .run(&plan(&t, &p, 1, &engine, &icn, PartitionStrategy::Data), 10);
+            .run(&plan(&g, 1, &engine, &icn, PartitionStrategy::Data), 10);
         assert!(r.total_cycles < single.total_cycles / 2);
     }
 

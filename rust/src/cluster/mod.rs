@@ -3,8 +3,8 @@
 //!
 //! The paper scales a *single* engine from 64 to 256 PEs (Table V); this
 //! subsystem scales *out* instead, composing M engines into a cluster the
-//! way the ROADMAP's serving path needs: a [`plan::PartitionPlan`] splits a
-//! layer trace across shards (layer-parallel pipeline stages or
+//! way the ROADMAP's serving path needs: a [`plan::PartitionPlan`] splits an
+//! annotated [`crate::ir::Graph`] across shards (layer-parallel pipeline stages or
 //! output-channel tensor parallelism, chosen from per-layer MAC counts), an
 //! [`interconnect::InterconnectConfig`] prices every inter-shard byte in
 //! engine cycles, and the [`exec::ShardExecutor`] fans the per-shard cycle
@@ -30,6 +30,7 @@ pub use plan::{auto_strategy, parse_strategy, PartitionPlan, PartitionStrategy, 
 pub use report::{ClusterReport, ShardReport};
 
 use crate::engine::EngineConfig;
+use crate::ir::Graph;
 use crate::model::workloads::Trace;
 use crate::quant::PolicyTable;
 
@@ -73,15 +74,14 @@ impl Cluster {
         Cluster { config }
     }
 
-    /// Partition `trace` under this cluster's configuration.
-    pub fn plan(&self, trace: &Trace, policy: &PolicyTable) -> PartitionPlan {
+    /// Partition an annotated IR graph under this cluster's configuration.
+    pub fn plan_ir(&self, graph: &Graph) -> PartitionPlan {
         let strategy = self
             .config
             .strategy
-            .unwrap_or_else(|| auto_strategy(trace, self.config.shards));
+            .unwrap_or_else(|| auto_strategy(graph, self.config.shards));
         plan::plan(
-            trace,
-            policy,
+            graph,
             self.config.shards,
             &self.config.engine,
             &self.config.interconnect,
@@ -89,15 +89,28 @@ impl Cluster {
         )
     }
 
-    /// Plan and stream `micro_batches` inferences through the cluster.
+    /// Plan and stream `micro_batches` inferences of an annotated IR graph
+    /// through the cluster.
+    pub fn run_ir(&self, graph: &Graph, micro_batches: u64) -> ClusterReport {
+        let plan = self.plan_ir(graph);
+        ShardExecutor::new(self.config.engine, self.config.interconnect).run(&plan, micro_batches)
+    }
+
+    /// Compatibility shim: lift a legacy trace + policy table into the IR
+    /// and partition it.
+    pub fn plan(&self, trace: &Trace, policy: &PolicyTable) -> PartitionPlan {
+        self.plan_ir(&Graph::from_trace(trace).with_policy(policy))
+    }
+
+    /// Compatibility shim: plan and stream `micro_batches` inferences of a
+    /// legacy trace.
     pub fn run_trace(
         &self,
         trace: &Trace,
         policy: &PolicyTable,
         micro_batches: u64,
     ) -> ClusterReport {
-        let plan = self.plan(trace, policy);
-        ShardExecutor::new(self.config.engine, self.config.interconnect).run(&plan, micro_batches)
+        self.run_ir(&Graph::from_trace(trace).with_policy(policy), micro_batches)
     }
 }
 

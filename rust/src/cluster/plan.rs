@@ -1,6 +1,6 @@
-//! The partition planner: split one traced workload across M engines.
+//! The partition planner: split one IR workload across M engines.
 //!
-//! Three strategies, chosen from the shape of the trace:
+//! Three strategies, chosen from the shape of the graph:
 //!
 //! * **Pipeline** (layer-parallel): contiguous layer ranges become pipeline
 //!   stages. The split minimises the *maximum* stage weight (classic
@@ -15,14 +15,17 @@
 //! * **Data**: full replicas; micro-batches are spread across shards by the
 //!   coordinator's routing policy.
 //!
-//! Every shard also records the words of parameters it must stage before
-//! serving — the cluster-level double-buffered weight prefetch the
-//! executor models with [`crate::memory::Prefetcher`].
+//! The planner consumes an annotated [`Graph`]: per-layer precision/mode
+//! ride along inside the IR, so pipeline slices and tensor shards need no
+//! policy re-indexing bookkeeping. Every shard also records the words of
+//! parameters it must stage before serving — the cluster-level
+//! double-buffered weight prefetch the executor models with
+//! [`crate::memory::Prefetcher`].
 
 use super::interconnect::InterconnectConfig;
 use crate::engine::{EngineConfig, VectorEngine};
-use crate::model::workloads::{Trace, TraceKind};
-use crate::quant::{LayerPolicy, PolicyTable};
+use crate::ir::Graph;
+use crate::model::workloads::TraceKind;
 
 /// How work is divided across the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,11 +58,11 @@ pub fn parse_strategy(s: &str) -> Option<PartitionStrategy> {
     }
 }
 
-/// Pick a sensible default strategy for a trace: deep traces pipeline well
+/// Pick a sensible default strategy for a graph: deep graphs pipeline well
 /// (plenty of boundaries to balance across), shallow ones are better split
 /// within each layer.
-pub fn auto_strategy(trace: &Trace, shards: usize) -> PartitionStrategy {
-    if shards <= 1 || trace.layers.len() >= 3 * shards {
+pub fn auto_strategy(graph: &Graph, shards: usize) -> PartitionStrategy {
+    if shards <= 1 || graph.layers.len() >= 3 * shards {
         PartitionStrategy::Pipeline
     } else {
         PartitionStrategy::Tensor
@@ -71,13 +74,11 @@ pub fn auto_strategy(trace: &Trace, shards: usize) -> PartitionStrategy {
 pub struct ShardPlan {
     /// Shard index (pipeline order for the pipeline strategy).
     pub shard: usize,
-    /// Layer range of the *original* trace covered (`(0, L)` when the shard
+    /// Layer range of the *original* graph covered (`(0, L)` when the shard
     /// sees every layer, as under tensor/data parallelism).
     pub layer_span: (usize, usize),
-    /// The sub-trace this shard simulates.
-    pub trace: Trace,
-    /// Per-compute-layer policy matching `trace`.
-    pub policy: PolicyTable,
+    /// The annotated sub-graph this shard simulates (policies ride along).
+    pub ir: Graph,
     /// Parameter words this shard stages before serving (weight prefetch).
     pub weight_words: u64,
     /// Activation words crossing to the next stage (pipeline only).
@@ -92,11 +93,11 @@ pub struct PartitionPlan {
     /// Strategy used.
     pub strategy: PartitionStrategy,
     /// One entry per shard. May hold fewer shards than requested when the
-    /// trace has fewer layers than pipeline stages.
+    /// graph has fewer layers than pipeline stages.
     pub shards: Vec<ShardPlan>,
-    /// MACs of one full inference of the source trace.
+    /// MACs of one full inference of the source graph.
     pub total_macs: u64,
-    /// Operations of one full inference of the source trace.
+    /// Operations of one full inference of the source graph.
     pub total_ops: u64,
 }
 
@@ -117,7 +118,7 @@ impl PartitionPlan {
         if self.shards.is_empty() {
             return 1.0;
         }
-        let per: Vec<u64> = self.shards.iter().map(|s| s.trace.total_macs()).collect();
+        let per: Vec<u64> = self.shards.iter().map(|s| s.ir.total_macs()).collect();
         let max = *per.iter().max().unwrap() as f64;
         let mean = per.iter().sum::<u64>() as f64 / per.len() as f64;
         if mean == 0.0 {
@@ -128,28 +129,25 @@ impl PartitionPlan {
     }
 }
 
-/// Build a partition plan for `trace` across `shards` engines.
-///
-/// `policy` must cover the trace's compute layers (as for
-/// [`VectorEngine::run_trace`]); each shard receives the matching slice.
+/// Build a partition plan for an annotated `graph` across `shards` engines.
 pub fn plan(
-    trace: &Trace,
-    policy: &PolicyTable,
+    graph: &Graph,
     shards: usize,
     engine: &EngineConfig,
     interconnect: &InterconnectConfig,
     strategy: PartitionStrategy,
 ) -> PartitionPlan {
     assert!(shards >= 1, "cluster needs at least one shard");
-    assert_eq!(
-        policy.len(),
-        trace.compute_layers(),
-        "policy must cover each compute layer of the trace"
+    // an unannotated graph would silently plan at the engine default
+    // (Fxp16/Accurate) — the successor of the old policy-length assert
+    assert!(
+        graph.is_annotated(),
+        "planner needs a fully annotated graph (use Graph::with_policy)"
     );
     match strategy {
-        PartitionStrategy::Pipeline => plan_pipeline(trace, policy, shards, engine, interconnect),
-        PartitionStrategy::Tensor => plan_tensor(trace, policy, shards, interconnect),
-        PartitionStrategy::Data => plan_data(trace, policy, shards),
+        PartitionStrategy::Pipeline => plan_pipeline(graph, shards, engine, interconnect),
+        PartitionStrategy::Tensor => plan_tensor(graph, shards, interconnect),
+        PartitionStrategy::Data => plan_data(graph, shards),
     }
 }
 
@@ -158,62 +156,40 @@ pub(crate) fn split_even(q: u64, m: u64, i: u64) -> u64 {
     q / m + u64::from(i < q % m)
 }
 
-/// Policy entries for the compute layers inside `range`, reindexed densely.
-fn slice_policy(trace: &Trace, policy: &PolicyTable, range: (usize, usize)) -> PolicyTable {
-    let mut entries = Vec::new();
-    let mut pidx = 0usize;
-    for (idx, layer) in trace.layers.iter().enumerate() {
-        if matches!(layer.kind, TraceKind::Conv | TraceKind::Dense) {
-            if idx >= range.0 && idx < range.1 {
-                let mut lp: LayerPolicy = policy.layer(pidx);
-                lp.layer = entries.len();
-                entries.push(lp);
-            }
-            pidx += 1;
-        }
-    }
-    PolicyTable::from_entries(entries)
-}
-
 fn plan_pipeline(
-    trace: &Trace,
-    policy: &PolicyTable,
+    graph: &Graph,
     shards: usize,
     engine: &EngineConfig,
     interconnect: &InterconnectConfig,
 ) -> PartitionPlan {
-    let nlayers = trace.layers.len();
+    let nlayers = graph.layers.len();
     let stages = shards.min(nlayers).max(1);
 
     // layer weights = simulated single-engine per-layer cycles, so the split
     // reflects MAC counts *and* the engine's AF/pool/memory scheduling
-    let report = VectorEngine::new(*engine).run_trace(trace, policy);
+    let report = VectorEngine::new(*engine).run_ir(graph);
     let w: Vec<u64> = report.per_layer.iter().map(|l| l.total_cycles.max(1)).collect();
     let bounds = min_max_partition(&w, stages);
 
     let mut plans = Vec::with_capacity(stages);
     for s in 0..stages {
         let (a, b) = (bounds[s], bounds[s + 1]);
-        let sub = Trace {
-            name: format!("{}/s{s}[{a}..{b}]", trace.name),
-            layers: trace.layers[a..b].to_vec(),
-        };
-        let boundary_words = if s + 1 < stages { trace.layers[b - 1].outputs } else { 0 };
+        let sub = graph.slice((a, b), &format!("s{s}[{a}..{b}]"));
+        let boundary_words = if s + 1 < stages { graph.layers[b - 1].cost.outputs } else { 0 };
         plans.push(ShardPlan {
             shard: s,
             layer_span: (a, b),
-            policy: slice_policy(trace, policy, (a, b)),
             weight_words: sub.total_params(),
             boundary_words,
             comm_cycles: interconnect.transfer_cycles(boundary_words),
-            trace: sub,
+            ir: sub,
         });
     }
     PartitionPlan {
         strategy: PartitionStrategy::Pipeline,
         shards: plans,
-        total_macs: trace.total_macs(),
-        total_ops: trace.total_ops(),
+        total_macs: graph.total_macs(),
+        total_ops: graph.total_ops(),
     }
 }
 
@@ -260,84 +236,74 @@ fn min_max_partition(w: &[u64], stages: usize) -> Vec<usize> {
 }
 
 fn plan_tensor(
-    trace: &Trace,
-    policy: &PolicyTable,
+    graph: &Graph,
     shards: usize,
     interconnect: &InterconnectConfig,
 ) -> PartitionPlan {
     let m = shards as u64;
     // every shard pays the same collectives: conv output slices all-gather,
     // dense partial sums all-reduce
-    let comm: u64 = trace
+    let comm: u64 = graph
         .layers
         .iter()
-        .map(|l| match l.kind {
-            TraceKind::Conv => interconnect.allgather_cycles(l.outputs, shards),
-            TraceKind::Dense => interconnect.allreduce_cycles(l.outputs, shards),
+        .map(|l| match l.kind() {
+            TraceKind::Conv => interconnect.allgather_cycles(l.cost.outputs, shards),
+            TraceKind::Dense => interconnect.allreduce_cycles(l.cost.outputs, shards),
             _ => 0,
         })
         .sum();
 
     let mut plans = Vec::with_capacity(shards);
     for i in 0..shards {
-        let layers = trace
-            .layers
-            .iter()
-            .map(|l| {
-                let mut s = l.clone();
-                let share = |q: u64| split_even(q, m, i as u64);
-                // compute layers keep >=1 MAC so policy/compute-layer
-                // bookkeeping is preserved on every shard
-                s.macs = match l.kind {
-                    TraceKind::Conv | TraceKind::Dense => share(l.macs).max(1),
-                    _ => 0,
-                };
-                s.af_ops = share(l.af_ops);
-                s.pool_windows = share(l.pool_windows);
-                s.outputs = share(l.outputs);
-                s.params = share(l.params);
-                s
-            })
-            .collect();
-        let sub = Trace { name: format!("{}/t{i}of{shards}", trace.name), layers };
+        let mut sub = graph.clone();
+        sub.name = format!("{}/t{i}of{shards}", graph.name);
+        for l in sub.layers.iter_mut() {
+            let share = |q: u64| split_even(q, m, i as u64);
+            // compute layers keep >=1 MAC so policy/compute-layer
+            // bookkeeping is preserved on every shard
+            l.cost.macs = if l.is_compute() { share(l.cost.macs).max(1) } else { 0 };
+            l.cost.af_ops = share(l.cost.af_ops);
+            l.cost.pool_windows = share(l.cost.pool_windows);
+            l.cost.outputs = share(l.cost.outputs);
+            l.cost.params = share(l.cost.params);
+        }
         plans.push(ShardPlan {
             shard: i,
-            layer_span: (0, trace.layers.len()),
-            policy: policy.clone(),
+            layer_span: (0, graph.layers.len()),
             weight_words: sub.total_params(),
             boundary_words: 0,
             comm_cycles: comm,
-            trace: sub,
+            ir: sub,
         });
     }
     PartitionPlan {
         strategy: PartitionStrategy::Tensor,
         shards: plans,
-        total_macs: trace.total_macs(),
-        total_ops: trace.total_ops(),
+        total_macs: graph.total_macs(),
+        total_ops: graph.total_ops(),
     }
 }
 
-fn plan_data(trace: &Trace, policy: &PolicyTable, shards: usize) -> PartitionPlan {
+fn plan_data(graph: &Graph, shards: usize) -> PartitionPlan {
     let plans = (0..shards)
-        .map(|i| ShardPlan {
-            shard: i,
-            layer_span: (0, trace.layers.len()),
-            trace: Trace {
-                name: format!("{}/r{i}of{shards}", trace.name),
-                layers: trace.layers.clone(),
-            },
-            policy: policy.clone(),
-            weight_words: trace.total_params(),
-            boundary_words: 0,
-            comm_cycles: 0,
+        .map(|i| {
+            let mut sub = graph.clone();
+            sub.name = format!("{}/r{i}of{shards}", graph.name);
+            ShardPlan {
+                shard: i,
+                layer_span: (0, graph.layers.len()),
+                ir: sub,
+                weight_words: graph.total_params(),
+                boundary_words: 0,
+                comm_cycles: 0,
+            }
         })
         .collect();
     PartitionPlan {
         strategy: PartitionStrategy::Data,
         shards: plans,
-        total_macs: trace.total_macs(),
-        total_ops: trace.total_ops(),
+        total_macs: graph.total_macs(),
+        total_ops: graph.total_ops(),
     }
 }
 
@@ -345,11 +311,15 @@ fn plan_data(trace: &Trace, policy: &PolicyTable, shards: usize) -> PartitionPla
 mod tests {
     use super::*;
     use crate::cordic::mac::ExecMode;
-    use crate::model::workloads::{tinyyolo_trace, vgg16_trace};
-    use crate::quant::Precision;
+    use crate::ir::workloads::{tinyyolo, vgg16};
+    use crate::quant::{PolicyTable, Precision};
 
-    fn pol(t: &Trace) -> PolicyTable {
-        PolicyTable::uniform(t.compute_layers(), Precision::Fxp8, ExecMode::Approximate)
+    fn annotated(g: &Graph) -> Graph {
+        g.with_policy(&PolicyTable::uniform(
+            g.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        ))
     }
 
     #[test]
@@ -366,12 +336,10 @@ mod tests {
     }
 
     #[test]
-    fn pipeline_stages_cover_trace_exactly_once() {
-        let t = vgg16_trace();
-        let p = pol(&t);
+    fn pipeline_stages_cover_graph_exactly_once() {
+        let g = annotated(&vgg16());
         let plan = plan(
-            &t,
-            &p,
+            &g,
             4,
             &EngineConfig::pe64(),
             &InterconnectConfig::default(),
@@ -382,26 +350,25 @@ mod tests {
         for (i, s) in plan.shards.iter().enumerate() {
             assert_eq!(s.layer_span.0, covered, "stages must be contiguous");
             covered = s.layer_span.1;
-            assert_eq!(s.trace.layers.len(), s.layer_span.1 - s.layer_span.0);
-            assert_eq!(s.policy.len(), s.trace.compute_layers());
+            assert_eq!(s.ir.layers.len(), s.layer_span.1 - s.layer_span.0);
+            assert!(s.ir.is_annotated(), "annotations must ride along");
+            assert_eq!(s.ir.policy_table().len(), s.ir.compute_layers());
             if i + 1 < plan.len() {
                 assert!(s.boundary_words > 0, "interior stages ship activations");
             } else {
                 assert_eq!(s.comm_cycles, 0, "last stage has no downstream transfer");
             }
         }
-        assert_eq!(covered, t.layers.len());
-        let macs: u64 = plan.shards.iter().map(|s| s.trace.total_macs()).sum();
-        assert_eq!(macs, t.total_macs(), "pipeline conserves MACs");
+        assert_eq!(covered, g.layers.len());
+        let macs: u64 = plan.shards.iter().map(|s| s.ir.total_macs()).sum();
+        assert_eq!(macs, g.total_macs(), "pipeline conserves MACs");
     }
 
     #[test]
     fn pipeline_balances_vgg_reasonably() {
-        let t = vgg16_trace();
-        let p = pol(&t);
+        let g = annotated(&vgg16());
         let plan = plan(
-            &t,
-            &p,
+            &g,
             4,
             &EngineConfig::pe64(),
             &InterconnectConfig::default(),
@@ -414,62 +381,53 @@ mod tests {
 
     #[test]
     fn tensor_split_conserves_work_within_rounding() {
-        let t = tinyyolo_trace();
-        let p = pol(&t);
+        let g = annotated(&tinyyolo());
         let m = 4usize;
         let plan = plan(
-            &t,
-            &p,
+            &g,
             m,
             &EngineConfig::pe64(),
             &InterconnectConfig::default(),
             PartitionStrategy::Tensor,
         );
         assert_eq!(plan.len(), m);
-        let macs: u64 = plan.shards.iter().map(|s| s.trace.total_macs()).sum();
-        assert!(macs >= t.total_macs());
+        let macs: u64 = plan.shards.iter().map(|s| s.ir.total_macs()).sum();
+        assert!(macs >= g.total_macs());
         assert!(
-            macs <= t.total_macs() + (m * t.layers.len()) as u64,
+            macs <= g.total_macs() + (m * g.layers.len()) as u64,
             "only the >=1-MAC guard may inflate the total"
         );
         for s in &plan.shards {
-            assert_eq!(s.trace.compute_layers(), t.compute_layers());
-            assert_eq!(s.policy.len(), p.len());
+            assert_eq!(s.ir.compute_layers(), g.compute_layers());
+            assert!(s.ir.is_annotated(), "tensor shards keep annotations");
             assert!(s.comm_cycles > 0, "tensor shards pay collectives");
         }
     }
 
     #[test]
     fn data_replicas_are_identical() {
-        let t = tinyyolo_trace();
-        let p = pol(&t);
+        let g = annotated(&tinyyolo());
         let plan = plan(
-            &t,
-            &p,
+            &g,
             3,
             &EngineConfig::pe64(),
             &InterconnectConfig::default(),
             PartitionStrategy::Data,
         );
         for s in &plan.shards {
-            assert_eq!(s.trace.total_macs(), t.total_macs());
+            assert_eq!(s.ir.total_macs(), g.total_macs());
             assert_eq!(s.comm_cycles, 0);
-            assert_eq!(s.weight_words, t.total_params());
+            assert_eq!(s.weight_words, g.total_params());
         }
         assert!((plan.mac_imbalance() - 1.0).abs() < 1e-12);
     }
 
     #[test]
     fn more_stages_than_layers_clamps() {
-        let t = Trace { name: "tiny".into(), layers: vgg16_trace().layers[..3].to_vec() };
-        let p = PolicyTable::uniform(
-            t.compute_layers(),
-            Precision::Fxp8,
-            ExecMode::Approximate,
-        );
+        let full = annotated(&vgg16());
+        let g = full.slice((0, 3), "tiny");
         let plan = plan(
-            &t,
-            &p,
+            &g,
             8,
             &EngineConfig::pe64(),
             &InterconnectConfig::default(),
@@ -479,11 +437,11 @@ mod tests {
     }
 
     #[test]
-    fn auto_strategy_prefers_pipeline_for_deep_traces() {
-        let t = vgg16_trace(); // 23 layers
-        assert_eq!(auto_strategy(&t, 4), PartitionStrategy::Pipeline);
-        assert_eq!(auto_strategy(&t, 16), PartitionStrategy::Tensor);
-        assert_eq!(auto_strategy(&t, 1), PartitionStrategy::Pipeline);
+    fn auto_strategy_prefers_pipeline_for_deep_graphs() {
+        let g = vgg16(); // 21 layers
+        assert_eq!(auto_strategy(&g, 4), PartitionStrategy::Pipeline);
+        assert_eq!(auto_strategy(&g, 16), PartitionStrategy::Tensor);
+        assert_eq!(auto_strategy(&g, 1), PartitionStrategy::Pipeline);
     }
 
     #[test]

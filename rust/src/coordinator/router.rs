@@ -137,8 +137,7 @@ impl ShardedService {
         let mut workers = Vec::with_capacity(plan.len());
         for sp in &plan.shards {
             let (tx, rx) = mpsc::channel::<Job>();
-            let trace = sp.trace.clone();
-            let pol = sp.policy.clone();
+            let graph = sp.ir.clone();
             let shard = sp.shard;
             let counters = router.counters();
             let handle = std::thread::Builder::new()
@@ -146,7 +145,7 @@ impl ShardedService {
                 .spawn(move || {
                     // the per-inference cycle cost of this shard's slice is
                     // deterministic: simulate once, then price each batch
-                    let report = VectorEngine::new(engine).run_trace(&trace, &pol);
+                    let report = VectorEngine::new(engine).run_ir(&graph);
                     let mut served = 0u64;
                     while let Ok(job) = rx.recv() {
                         let sim_cycles = report.total_cycles * job.requests.max(1) as u64;

@@ -172,15 +172,16 @@ impl CordicMac {
     }
 }
 
-/// Datapath-format value → guard-format raw.
+/// Datapath-format value → guard-format raw (public so the wave-vectorised
+/// executor quantises operand banks exactly like the scalar MAC does).
 #[inline]
-fn to_guard_raw(v: Fxp) -> i64 {
+pub fn to_guard_raw(v: Fxp) -> i64 {
     v.raw() << (GUARD_FRAC - v.format().frac_bits)
 }
 
 /// Guard-format raw → datapath-format value (truncating, saturating).
 #[inline]
-fn from_guard_raw(g: i64, fmt: Format) -> Fxp {
+pub fn from_guard_raw(g: i64, fmt: Format) -> Fxp {
     let raw = g >> (GUARD_FRAC - fmt.frac_bits);
     Fxp::from_raw(raw, fmt)
 }

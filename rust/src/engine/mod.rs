@@ -17,8 +17,24 @@ mod sim;
 
 pub use sim::{EngineReport, LayerTiming};
 
+use crate::ir::Graph;
 use crate::model::workloads::Trace;
 use crate::quant::PolicyTable;
+
+/// MAC waves needed to retire `macs` MAC slots on `pes` lock-stepped lanes
+/// (each wave issues one slot to every PE).
+#[inline]
+pub fn mac_waves(macs: u64, pes: usize) -> u64 {
+    macs.div_ceil(pes.max(1) as u64)
+}
+
+/// Cycles of the MAC phase for `macs` MACs on `pes` lanes at
+/// `cycles_per_mac` — the wave cycle law shared by the trace simulator and
+/// the wave-vectorised functional executor, so the two paths cannot drift.
+#[inline]
+pub fn mac_wave_cycles(macs: u64, pes: usize, cycles_per_mac: u32) -> u64 {
+    mac_waves(macs, pes) * cycles_per_mac as u64
+}
 
 /// Vector-engine configuration.
 #[derive(Debug, Clone, Copy)]
@@ -76,9 +92,17 @@ impl VectorEngine {
         VectorEngine { config }
     }
 
-    /// Simulate one inference of a traced workload under a per-compute-layer
-    /// policy. `policy.len()` must equal `trace.compute_layers()`.
+    /// Simulate one inference of an IR graph. Per-layer precision/mode come
+    /// from the graph's [`crate::ir::ExecPolicy`] annotations (unannotated
+    /// compute layers run the engine default).
+    pub fn run_ir(&self, graph: &Graph) -> EngineReport {
+        sim::run(self.config, graph)
+    }
+
+    /// Compatibility shim for trace-based callers: lift the trace into the
+    /// IR, fold the policy table in as annotations, and simulate.
+    /// `policy.len()` must equal `trace.compute_layers()`.
     pub fn run_trace(&self, trace: &Trace, policy: &PolicyTable) -> EngineReport {
-        sim::run(self.config, trace, policy)
+        self.run_ir(&Graph::from_trace(trace).with_policy(policy))
     }
 }

@@ -1,13 +1,20 @@
-//! Trace-driven cycle-approximate simulation of the vector engine.
+//! IR-driven cycle-approximate simulation of the vector engine.
+//!
+//! The simulator consumes the typed layer IR ([`crate::ir::Graph`]); legacy
+//! traces enter through [`crate::ir::Graph::from_trace`] (see
+//! [`super::VectorEngine::run_trace`]). MAC-phase cycles come from the
+//! shared wave law [`super::mac_wave_cycles`], which the wave-vectorised
+//! functional executor ([`crate::ir::WaveExecutor`]) uses too.
 
-use super::EngineConfig;
+use super::{mac_waves, EngineConfig};
 use crate::activation::funcs;
 use crate::activation::ActFn;
 use crate::cordic::to_guard;
+use crate::ir::{Graph, LayerIr};
 use crate::memory::Prefetcher;
 use crate::model::network::af_iters;
-use crate::model::workloads::{Trace, TraceKind, TraceLayer};
-use crate::quant::{LayerPolicy, PolicyTable};
+use crate::model::workloads::TraceKind;
+use crate::quant::LayerPolicy;
 
 /// Per-layer timing outcome.
 #[derive(Debug, Clone)]
@@ -102,44 +109,36 @@ fn pool_window_cycles(k: u32) -> u64 {
     3 + (32 - pairs.leading_zeros()) as u64 + 1
 }
 
-/// Run the simulation.
-pub fn run(config: EngineConfig, trace: &Trace, policy: &PolicyTable) -> EngineReport {
-    assert_eq!(
-        policy.len(),
-        trace.compute_layers(),
-        "policy must cover each compute layer of the trace"
-    );
+/// Run the simulation over an IR graph.
+pub fn run(config: EngineConfig, graph: &Graph) -> EngineReport {
     let mut prefetch = Prefetcher::new(config.fetch_latency);
     prefetch.preload();
-    let mut per_layer = Vec::with_capacity(trace.layers.len());
+    let mut per_layer = Vec::with_capacity(graph.layers.len());
     let mut now = 0u64;
     let mut pidx = 0usize;
-    let mut current_mode = crate::cordic::mac::ExecMode::Accurate;
 
-    for layer in &trace.layers {
-        let timing = match layer.kind {
+    for layer in &graph.layers {
+        let timing = match layer.kind() {
             TraceKind::Conv | TraceKind::Dense => {
-                let lp = policy.layer(pidx);
+                let lp = layer.policy.unwrap_or_default().to_layer_policy(pidx);
                 pidx += 1;
-                current_mode = lp.mode;
                 sim_compute_layer(&config, layer, lp, &mut prefetch, now)
             }
             TraceKind::Pool => sim_pool_layer(&config, layer),
             TraceKind::Plumbing => LayerTiming {
                 name: layer.name.clone(),
-                kind: layer.kind,
+                kind: layer.kind(),
                 macs: 0,
                 mac_cycles: 0,
                 af_cycles: 0,
                 pool_cycles: 0,
                 mem_stall_cycles: 0,
                 // a pass over the outputs on the broadcast bus
-                total_cycles: layer.outputs / config.burst_words.max(1) + 1,
+                total_cycles: layer.cost.outputs / config.burst_words.max(1) + 1,
                 pe_utilization: 0.0,
                 policy: None,
             },
         };
-        let _ = current_mode;
         now += timing.total_cycles;
         per_layer.push(timing);
     }
@@ -147,33 +146,35 @@ pub fn run(config: EngineConfig, trace: &Trace, policy: &PolicyTable) -> EngineR
     EngineReport {
         config,
         total_cycles: now,
-        total_macs: trace.total_macs(),
-        total_ops: trace.total_ops(),
+        total_macs: graph.total_macs(),
+        total_ops: graph.total_ops(),
         per_layer,
     }
 }
 
 fn sim_compute_layer(
     config: &EngineConfig,
-    layer: &TraceLayer,
+    layer: &LayerIr,
     lp: LayerPolicy,
     prefetch: &mut Prefetcher,
     now: u64,
 ) -> LayerTiming {
+    let macs = layer.cost.macs;
     let cyc_per_mac = lp.cycles_per_mac() as u64;
-    // MAC waves: each wave issues one MAC slot to every PE.
-    let waves = layer.macs.div_ceil(config.pes as u64);
+    // MAC waves: each wave issues one MAC slot to every PE (the same wave
+    // law the functional wave executor accounts with).
+    let waves = mac_waves(macs, config.pes);
     let mac_cycles = waves * cyc_per_mac;
     let pe_utilization = if waves == 0 {
         0.0
     } else {
-        layer.macs as f64 / (waves * config.pes as u64) as f64
+        macs as f64 / (waves * config.pes as u64) as f64
     };
 
     // AF work on the shared block(s); overlapped with MAC waves when enabled.
     let iters = af_iters(lp.mode);
     let per_op = af_cost_cycles(layer.af, iters);
-    let af_total = (layer.af_ops * per_op).div_ceil(config.af_blocks as u64);
+    let af_total = (layer.cost.af_ops * per_op).div_ceil(config.af_blocks as u64);
     let (af_cycles, compute_span) = if config.af_overlap {
         // AF drains behind the MAC waves; only the non-hidden tail counts.
         let tail = af_total.saturating_sub(mac_cycles);
@@ -184,7 +185,7 @@ fn sim_compute_layer(
 
     // Parameter fetch for the layer (weights stream once per inference);
     // the prefetcher hides bursts behind compute.
-    let bursts = layer.params.div_ceil(config.burst_words.max(1));
+    let bursts = layer.cost.params.div_ceil(config.burst_words.max(1));
     let fetch_cycles = bursts.div_ceil(8); // 8 bursts in flight per slot
     let mut fetcher = core::mem::replace(prefetch, Prefetcher::new(config.fetch_latency));
     fetcher.fetch_latency = fetch_cycles.max(1);
@@ -194,8 +195,8 @@ fn sim_compute_layer(
 
     LayerTiming {
         name: layer.name.clone(),
-        kind: layer.kind,
-        macs: layer.macs,
+        kind: layer.kind(),
+        macs,
         mac_cycles,
         af_cycles,
         pool_cycles: 0,
@@ -206,12 +207,13 @@ fn sim_compute_layer(
     }
 }
 
-fn sim_pool_layer(config: &EngineConfig, layer: &TraceLayer) -> LayerTiming {
-    let per_window = pool_window_cycles(layer.pool_window_size);
-    let pool_cycles = (layer.pool_windows * per_window).div_ceil(config.pool_units as u64);
+fn sim_pool_layer(config: &EngineConfig, layer: &LayerIr) -> LayerTiming {
+    let per_window = pool_window_cycles(layer.cost.pool_window_size);
+    let pool_cycles =
+        (layer.cost.pool_windows * per_window).div_ceil(config.pool_units as u64);
     LayerTiming {
         name: layer.name.clone(),
-        kind: layer.kind,
+        kind: layer.kind(),
         macs: 0,
         mac_cycles: 0,
         af_cycles: 0,
@@ -227,8 +229,8 @@ fn sim_pool_layer(config: &EngineConfig, layer: &TraceLayer) -> LayerTiming {
 mod tests {
     use super::*;
     use crate::cordic::mac::ExecMode;
-    use crate::model::workloads::{tinyyolo_trace, vgg16_trace};
-    use crate::quant::Precision;
+    use crate::model::workloads::{tinyyolo_trace, vgg16_trace, Trace};
+    use crate::quant::{PolicyTable, Precision};
 
     fn uniform_policy(trace: &Trace, mode: ExecMode) -> PolicyTable {
         PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, mode)

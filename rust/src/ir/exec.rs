@@ -1,0 +1,304 @@
+//! The wave-vectorised CORDIC executor.
+//!
+//! The scalar reference path ([`Network::forward_cordic`]) walks one output
+//! element at a time — `for o in 0..outputs { dot(...) }` — wrapping every
+//! operand in an [`crate::fxp::Fxp`] and recomputing operand indices per
+//! MAC. This executor runs the same bit-exact CORDIC arithmetic in
+//! **PE-array-wide waves**: output elements are chunked into lanes of
+//! [`EngineConfig::pes`], operand banks are quantised into guard-format
+//! `i64` words once, and each weight (conv) / activation (dense) word is
+//! fetched once per wave and broadcast across the lanes — exactly the
+//! vector engine's lock-stepped broadcast structure (paper §III-B).
+//!
+//! Two guarantees, both tested (`tests/ir_parity.rs`):
+//!
+//! * **Bit identity** — every lane performs the same guard-word
+//!   [`linear::mac`] sequence (bias first, then operands in scalar order),
+//!   so outputs equal the scalar path's bit-for-bit across all
+//!   precisions/modes.
+//! * **Unified cycle accounting** — MAC-phase cycles come from
+//!   [`crate::engine::mac_wave_cycles`], the same wave law the trace
+//!   simulator uses, so the functional and simulated paths can no longer
+//!   drift.
+//!
+//! On the host the wave layout is also measurably faster than the scalar
+//! loop (no per-MAC `Fxp` wrapping, additive index arithmetic, one weight
+//! fetch per wave): `benches/forward_wave.rs` reports the speedup.
+
+use crate::activation::funcs::AfCost;
+use crate::activation::MultiAfBlock;
+use crate::cordic::mac::{to_guard_raw, MacConfig};
+use crate::cordic::{from_guard, linear};
+use crate::engine::{mac_wave_cycles, mac_waves, EngineConfig};
+use crate::fxp::Fxp;
+use crate::model::network::{af_iters, pool_cordic, softmax_cordic, LayerStats};
+use crate::model::{Conv2dParams, DenseParams, Layer, Network, Tensor};
+use crate::pooling::PoolCost;
+use crate::quant::{LayerPolicy, PolicyTable, Precision};
+
+/// Per-layer statistics from a wave-vectorised forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct WaveLayerStats {
+    /// Layer kind.
+    pub kind: &'static str,
+    /// MAC operations.
+    pub macs: u64,
+    /// MAC waves issued across the PE array.
+    pub waves: u64,
+    /// MAC-phase cycles under the engine's wave law (waves × cycles/MAC).
+    pub mac_cycles: u64,
+    /// Activation datapath cost.
+    pub af_cost: AfCost,
+    /// Pooling datapath cost.
+    pub pool_cost: PoolCost,
+    /// Output element count.
+    pub outputs: usize,
+}
+
+impl WaveLayerStats {
+    fn from_scalar(st: LayerStats) -> Self {
+        WaveLayerStats {
+            kind: st.kind,
+            macs: st.macs,
+            waves: 0,
+            mac_cycles: 0,
+            af_cost: st.af_cost,
+            pool_cost: st.pool_cost,
+            outputs: st.outputs,
+        }
+    }
+}
+
+/// Aggregate statistics from a wave-vectorised forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct WaveRunStats {
+    /// PE lanes the waves were scheduled over.
+    pub pes: usize,
+    /// Per-layer breakdown.
+    pub per_layer: Vec<WaveLayerStats>,
+}
+
+impl WaveRunStats {
+    /// Total MAC operations.
+    pub fn total_macs(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.macs).sum()
+    }
+
+    /// Total MAC waves.
+    pub fn total_waves(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.waves).sum()
+    }
+
+    /// Total MAC-phase cycles (wave law — comparable to the simulator's
+    /// per-layer `mac_cycles`).
+    pub fn total_mac_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.mac_cycles).sum()
+    }
+
+    /// Total activation cycles.
+    pub fn total_af_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.af_cost.total() as u64).sum()
+    }
+
+    /// Total pooling cycles.
+    pub fn total_pool_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.pool_cost.total() as u64).sum()
+    }
+}
+
+/// Executes a [`Network`] in PE-array-wide MAC waves.
+#[derive(Debug, Clone, Copy)]
+pub struct WaveExecutor {
+    /// Engine configuration supplying the lane count.
+    pub config: EngineConfig,
+}
+
+impl WaveExecutor {
+    /// New executor.
+    pub fn new(config: EngineConfig) -> Self {
+        assert!(config.pes > 0, "wave executor needs at least one PE lane");
+        WaveExecutor { config }
+    }
+
+    /// Bit-accurate forward pass under a per-layer policy. Outputs are
+    /// bit-identical to [`Network::forward_cordic`]; MAC cycles are
+    /// accounted with the engine's wave law.
+    pub fn forward(
+        &self,
+        net: &Network,
+        input: &Tensor,
+        policy: &PolicyTable,
+    ) -> (Tensor, WaveRunStats) {
+        assert_eq!(input.shape(), &net.input_shape[..], "input shape mismatch");
+        assert_eq!(policy.len(), net.compute_layers(), "policy/compute-layer mismatch");
+        let pes = self.config.pes;
+        let mut x = input.clone();
+        let mut stats = WaveRunStats { pes, ..Default::default() };
+        let mut pidx = 0usize;
+        let mut current: LayerPolicy = if policy.is_empty() {
+            LayerPolicy { layer: 0, precision: Precision::Fxp16, mode: crate::cordic::mac::ExecMode::Accurate }
+        } else {
+            policy.layer(0)
+        };
+        for layer in &net.layers {
+            match layer {
+                Layer::Dense(d) => {
+                    current = policy.layer(pidx);
+                    pidx += 1;
+                    let (y, st) = wave_dense(d, &x, current, pes);
+                    x = y;
+                    stats.per_layer.push(st);
+                }
+                Layer::Conv2d(c) => {
+                    current = policy.layer(pidx);
+                    pidx += 1;
+                    let (y, st) = wave_conv(c, &x, current, pes);
+                    x = y;
+                    stats.per_layer.push(st);
+                }
+                Layer::Pool2d(p) => {
+                    let (y, st) = pool_cordic(p, &x, af_iters(current.mode));
+                    x = y;
+                    stats.per_layer.push(WaveLayerStats::from_scalar(st));
+                }
+                Layer::Flatten => {
+                    let n = x.len();
+                    x = x.reshape(&[n]);
+                }
+                Layer::Softmax => {
+                    let (y, st) = softmax_cordic(&x, af_iters(current.mode));
+                    x = y;
+                    stats.per_layer.push(WaveLayerStats::from_scalar(st));
+                }
+            }
+        }
+        (x, stats)
+    }
+}
+
+/// Quantise an f64 bank into guard-format words through the datapath
+/// format — the exact quantisation the scalar path applies per element.
+fn quantize_bank(values: &[f64], policy: LayerPolicy) -> Vec<i64> {
+    let fmt = policy.precision.format();
+    values.iter().map(|&v| to_guard_raw(Fxp::from_f64(v, fmt))).collect()
+}
+
+fn wave_dense(
+    d: &DenseParams,
+    x: &Tensor,
+    policy: LayerPolicy,
+    pes: usize,
+) -> (Tensor, WaveLayerStats) {
+    assert_eq!(x.len(), d.inputs, "dense input width mismatch");
+    let cfg = MacConfig::new(policy.precision, policy.mode);
+    let iters = cfg.iterations();
+    let mut af = MultiAfBlock::new(af_iters(policy.mode));
+    let xg = quantize_bank(x.data(), policy);
+    let wg = quantize_bank(&d.weights, policy);
+    let bg = quantize_bank(&d.biases, policy);
+
+    let mut out = Vec::with_capacity(d.outputs);
+    let mut af_cost = AfCost::default();
+    let mut acc = vec![0i64; pes];
+    let mut o0 = 0usize;
+    while o0 < d.outputs {
+        let lanes = pes.min(d.outputs - o0);
+        // biases enter the wide accumulators directly (plain adder input)
+        acc[..lanes].copy_from_slice(&bg[o0..o0 + lanes]);
+        // each input activation is fetched once and broadcast to every
+        // lane; lane l's weight row advances with stride `inputs`
+        for (i, &xv) in xg.iter().enumerate() {
+            let mut widx = o0 * d.inputs + i;
+            for a in acc[..lanes].iter_mut() {
+                *a = linear::mac(*a, xv, wg[widx], iters).value;
+                widx += d.inputs;
+            }
+        }
+        // wide accumulate-then-activate, lane order = scalar output order
+        for &a in &acc[..lanes] {
+            let (y, c) = af.apply_raw(d.act, a);
+            af_cost = af_cost.merge(c);
+            out.push(from_guard(y));
+        }
+        o0 += lanes;
+    }
+
+    let macs = (d.inputs * d.outputs) as u64;
+    let stats = WaveLayerStats {
+        kind: "dense",
+        macs,
+        waves: mac_waves(macs, pes),
+        mac_cycles: mac_wave_cycles(macs, pes, cfg.cycles_per_mac()),
+        af_cost,
+        outputs: d.outputs,
+        ..Default::default()
+    };
+    (Tensor::vector(&out), stats)
+}
+
+fn wave_conv(
+    c: &Conv2dParams,
+    x: &Tensor,
+    policy: LayerPolicy,
+    pes: usize,
+) -> (Tensor, WaveLayerStats) {
+    let (in_ch, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
+    assert_eq!(in_ch, c.in_ch, "conv input channels mismatch");
+    let cfg = MacConfig::new(policy.precision, policy.mode);
+    let iters = cfg.iterations();
+    let mut af = MultiAfBlock::new(af_iters(policy.mode));
+    let (oh, ow) = (c.out_dim(h), c.out_dim(w));
+    let positions = oh * ow;
+    let xg = quantize_bank(x.data(), policy);
+    let wg = quantize_bank(&c.weights, policy);
+    let bg = quantize_bank(&c.biases, policy);
+
+    let mut out = Tensor::zeros(&[c.out_ch, oh, ow]);
+    let mut af_cost = AfCost::default();
+    let mut acc = vec![0i64; pes];
+    let mut base = vec![0usize; pes];
+    for o in 0..c.out_ch {
+        let mut p0 = 0usize;
+        while p0 < positions {
+            let lanes = pes.min(positions - p0);
+            for (l, b) in base[..lanes].iter_mut().enumerate() {
+                let p = p0 + l;
+                *b = (p / ow) * c.stride * w + (p % ow) * c.stride;
+            }
+            acc[..lanes].fill(bg[o]);
+            // one kernel weight is fetched per wave and broadcast across
+            // the lanes; each lane gathers its own input window word
+            for i in 0..c.in_ch {
+                for ky in 0..c.kernel {
+                    let row = i * h * w + ky * w;
+                    for kx in 0..c.kernel {
+                        let off = row + kx;
+                        let wv = wg[c.widx(o, i, ky, kx)];
+                        for (a, &b) in acc[..lanes].iter_mut().zip(&base[..lanes]) {
+                            *a = linear::mac(*a, xg[off + b], wv, iters).value;
+                        }
+                    }
+                }
+            }
+            let dst = &mut out.data_mut()[o * positions + p0..o * positions + p0 + lanes];
+            for (l, &a) in acc[..lanes].iter().enumerate() {
+                let (y, cst) = af.apply_raw(c.act, a);
+                af_cost = af_cost.merge(cst);
+                dst[l] = from_guard(y);
+            }
+            p0 += lanes;
+        }
+    }
+
+    let macs = (positions * c.out_ch * c.in_ch * c.kernel * c.kernel) as u64;
+    let stats = WaveLayerStats {
+        kind: "conv2d",
+        macs,
+        waves: mac_waves(macs, pes),
+        mac_cycles: mac_wave_cycles(macs, pes, cfg.cycles_per_mac()),
+        af_cost,
+        outputs: c.out_ch * positions,
+        ..Default::default()
+    };
+    (out, stats)
+}

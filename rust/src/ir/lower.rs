@@ -1,0 +1,99 @@
+//! Lowerings in and out of the IR.
+//!
+//! * [`Graph::from_network`] — lift a weight-carrying [`Network`] into the
+//!   IR by re-typing its layers as [`Op`]s and running shape inference
+//!   (this replaces the shape walk `Network::macs_per_layer` used to carry).
+//! * [`Graph::to_trace`] — lower to the legacy [`Trace`] record: a thin
+//!   projection of each layer's [`super::LayerCost`], kept so trace-based
+//!   tools and the golden hand-written traces keep working.
+//! * [`Graph::from_trace`] — lift a hand-written [`Trace`]: op parameters
+//!   are unknown ([`Op::Traced`]), the per-layer costs are carried
+//!   verbatim, so the engine/cluster consumers schedule it identically.
+
+use super::{Graph, LayerCost, LayerIr, NodeSpec, Op, Padding};
+use crate::model::workloads::{Trace, TraceLayer};
+use crate::model::{Layer, Network};
+
+impl Graph {
+    /// Lift a [`Network`] into the IR (shapes and costs re-derived by the
+    /// IR's shape inference from the declared input shape).
+    pub fn from_network(net: &Network) -> Graph {
+        let specs = net
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(i, layer)| {
+                let op = match layer {
+                    Layer::Dense(d) => {
+                        Op::Dense { inputs: d.inputs, outputs: d.outputs, act: d.act }
+                    }
+                    Layer::Conv2d(c) => Op::Conv2d {
+                        in_ch: c.in_ch,
+                        out_ch: c.out_ch,
+                        kernel: c.kernel,
+                        stride: c.stride,
+                        padding: Padding::Valid,
+                        act: c.act,
+                    },
+                    Layer::Pool2d(p) => Op::Pool2d {
+                        window: p.config.window,
+                        stride: p.config.stride,
+                        padding: Padding::Valid,
+                        kind: p.kind,
+                    },
+                    Layer::Flatten => Op::Flatten,
+                    Layer::Softmax => Op::Softmax,
+                };
+                NodeSpec::new(&format!("l{i}-{}", layer.kind_name()), op)
+            })
+            .collect();
+        Graph::build(&net.name, &net.input_shape, specs)
+    }
+
+    /// Lower to the legacy [`Trace`] record (thin projection of the
+    /// per-layer costs).
+    pub fn to_trace(&self) -> Trace {
+        let layers = self
+            .layers
+            .iter()
+            .map(|l| TraceLayer {
+                name: l.name.clone(),
+                kind: l.kind(),
+                macs: l.cost.macs,
+                af_ops: l.cost.af_ops,
+                af: l.af,
+                pool_windows: l.cost.pool_windows,
+                pool_window_size: l.cost.pool_window_size,
+                outputs: l.cost.outputs,
+                params: l.cost.params,
+            })
+            .collect();
+        Trace { name: self.name.clone(), layers }
+    }
+
+    /// Lift a hand-written [`Trace`] (op parameters unknown; costs carried
+    /// verbatim so scheduling is unchanged).
+    pub fn from_trace(trace: &Trace) -> Graph {
+        let layers = trace
+            .layers
+            .iter()
+            .map(|l| LayerIr {
+                name: l.name.clone(),
+                op: Op::Traced(l.kind),
+                input_shape: Vec::new(),
+                output_shape: vec![l.outputs as usize],
+                af: l.af,
+                cost: LayerCost {
+                    macs: l.macs,
+                    af_ops: l.af_ops,
+                    pool_windows: l.pool_windows,
+                    pool_window_size: l.pool_window_size,
+                    outputs: l.outputs,
+                    params: l.params,
+                },
+                policy: None,
+            })
+            .collect();
+        Graph { name: trace.name.clone(), input_shape: Vec::new(), layers }
+    }
+}

@@ -1,0 +1,418 @@
+//! The typed layer-graph IR — the single representation of a workload that
+//! every consumer (bit-accurate execution, engine simulation, cluster
+//! planning, sensitivity analysis, table regeneration) reads.
+//!
+//! The paper's co-design story hinges on *one* description of a network
+//! driving both accuracy evaluation and cycle/hardware costing. Before this
+//! module the repo carried two disjoint representations — weight-carrying
+//! [`crate::model::Network`] and shape-only [`crate::model::workloads::Trace`]
+//! — with the per-layer shape/MAC math duplicated between them. The IR
+//! unifies them:
+//!
+//! ```text
+//!   Network ──to_ir()──▶ Graph ──to_trace()──▶ Trace   (thin lowering)
+//!   Trace ──Graph::from_trace()──▶ Graph               (lifting, for
+//!                                                       hand-written traces)
+//! ```
+//!
+//! A [`Graph`] is an ordered list of [`LayerIr`]s: a typed [`Op`], the
+//! inferred input/output shapes, the derived [`LayerCost`] (MACs, AF ops,
+//! pooling windows, parameters — computed in **one** place,
+//! [`Graph::build`]'s shape inference), and an optional per-layer
+//! [`ExecPolicy`] annotation carrying what [`crate::quant::PolicyTable`]
+//! holds externally. Consumers:
+//!
+//! * [`crate::engine::VectorEngine::run_ir`] — cycle simulation;
+//! * [`crate::cluster::plan`] — partition planning (sub-graphs keep their
+//!   annotations, so no policy re-slicing bookkeeping);
+//! * [`crate::quant::assign_modes_ir`] — sensitivity probes as annotated
+//!   graphs;
+//! * [`exec::WaveExecutor`] — the wave-vectorised bit-accurate executor,
+//!   sharing the engine's MAC-wave cycle law.
+//!
+//! See DESIGN.md §9 for the lowering inventory.
+
+pub mod exec;
+mod lower;
+pub mod workloads;
+
+#[cfg(test)]
+mod tests;
+
+pub use exec::{WaveExecutor, WaveLayerStats, WaveRunStats};
+
+use crate::activation::ActFn;
+use crate::cordic::mac::{ExecMode, MacConfig};
+use crate::model::workloads::TraceKind;
+use crate::pooling::sliding::PoolKind;
+use crate::quant::{LayerPolicy, PolicyTable, Precision};
+
+/// Convolution / pooling boundary handling.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Padding {
+    /// No padding: `out = (in - k) / stride + 1` (the trainable networks).
+    Valid,
+    /// Same padding: `out = ceil(in / stride)` (the evaluation traces).
+    Same,
+}
+
+impl Padding {
+    /// Output spatial dim for an input dim under kernel/window `k`.
+    pub fn out_dim(&self, in_dim: usize, k: usize, stride: usize) -> usize {
+        match self {
+            Padding::Valid => {
+                assert!(in_dim >= k, "valid padding: input {in_dim} smaller than kernel {k}");
+                (in_dim - k) / stride + 1
+            }
+            Padding::Same => in_dim.div_ceil(stride),
+        }
+    }
+}
+
+/// A typed layer operator.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    /// Fully connected: `inputs → outputs` with activation `act`.
+    Dense {
+        /// Input width J(l).
+        inputs: usize,
+        /// Neuron count N(l).
+        outputs: usize,
+        /// Activation applied to the pre-activations.
+        act: ActFn,
+    },
+    /// 2-D convolution over a CHW feature map.
+    Conv2d {
+        /// Input channels.
+        in_ch: usize,
+        /// Output channels.
+        out_ch: usize,
+        /// Square kernel size.
+        kernel: usize,
+        /// Stride (both dims).
+        stride: usize,
+        /// Boundary handling.
+        padding: Padding,
+        /// Activation.
+        act: ActFn,
+    },
+    /// 2-D pooling over each channel.
+    Pool2d {
+        /// Square window size.
+        window: usize,
+        /// Stride (both dims).
+        stride: usize,
+        /// Boundary handling.
+        padding: Padding,
+        /// AAD / max / avg.
+        kind: PoolKind,
+    },
+    /// CHW → flat vector (a view; no datapath work).
+    Flatten,
+    /// Softmax over the (flat) input.
+    Softmax,
+    /// Upsample / concat / reshape plumbing with an explicit output size.
+    Plumbing {
+        /// Output elements.
+        outputs: u64,
+    },
+    /// Lifted from a hand-written [`crate::model::workloads::Trace`] layer:
+    /// the op parameters are unknown, the [`LayerCost`] is carried verbatim.
+    Traced(TraceKind),
+}
+
+/// Scheduling-relevant derived quantities of one layer. Filled by
+/// [`Graph::build`]'s shape inference — the single derivation site for the
+/// per-layer shape/MAC math — or copied verbatim when lifting a
+/// hand-written trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LayerCost {
+    /// MAC operations in one inference.
+    pub macs: u64,
+    /// Activation-function evaluations.
+    pub af_ops: u64,
+    /// Pooling windows evaluated (0 for non-pool layers).
+    pub pool_windows: u64,
+    /// Elements per pooling window.
+    pub pool_window_size: u32,
+    /// Output elements.
+    pub outputs: u64,
+    /// Weight + bias parameters (memory traffic).
+    pub params: u64,
+}
+
+/// Per-layer execution annotation: what [`crate::quant::PolicyTable`]
+/// carries externally, folded into the IR so transformed graphs (pipeline
+/// slices, tensor shards) keep their policies without re-indexing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecPolicy {
+    /// Operand precision for this layer.
+    pub precision: Precision,
+    /// Approximate vs accurate CORDIC budget.
+    pub mode: ExecMode,
+}
+
+impl Default for ExecPolicy {
+    /// The conservative default the control engine boots with (matches the
+    /// empty-policy fallback of the bit-accurate network path).
+    fn default() -> Self {
+        ExecPolicy { precision: Precision::Fxp16, mode: ExecMode::Accurate }
+    }
+}
+
+impl ExecPolicy {
+    /// The MAC configuration this annotation programs.
+    pub fn mac_config(&self) -> MacConfig {
+        MacConfig::new(self.precision, self.mode)
+    }
+
+    /// Cycles per MAC under this annotation.
+    pub fn cycles_per_mac(&self) -> u32 {
+        self.mac_config().cycles_per_mac()
+    }
+
+    /// As a [`LayerPolicy`] at a dense compute-layer index.
+    pub fn to_layer_policy(&self, layer: usize) -> LayerPolicy {
+        LayerPolicy { layer, precision: self.precision, mode: self.mode }
+    }
+}
+
+/// One layer of a [`Graph`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct LayerIr {
+    /// Human-readable name, e.g. `"conv5-3"`.
+    pub name: String,
+    /// The typed operator.
+    pub op: Op,
+    /// Input tensor shape (empty when lifted from a trace).
+    pub input_shape: Vec<usize>,
+    /// Output tensor shape.
+    pub output_shape: Vec<usize>,
+    /// Activation evaluated by the multi-AF block for this layer.
+    pub af: ActFn,
+    /// Derived scheduling quantities.
+    pub cost: LayerCost,
+    /// Execution annotation (compute layers; `None` = engine default).
+    pub policy: Option<ExecPolicy>,
+}
+
+impl LayerIr {
+    /// Layer category (the lowering target's kind).
+    pub fn kind(&self) -> TraceKind {
+        match self.op {
+            Op::Dense { .. } => TraceKind::Dense,
+            Op::Conv2d { .. } => TraceKind::Conv,
+            Op::Pool2d { .. } => TraceKind::Pool,
+            Op::Flatten | Op::Softmax | Op::Plumbing { .. } => TraceKind::Plumbing,
+            Op::Traced(k) => k,
+        }
+    }
+
+    /// Whether this layer performs MACs and consumes a policy slot.
+    pub fn is_compute(&self) -> bool {
+        matches!(self.kind(), TraceKind::Dense | TraceKind::Conv)
+    }
+}
+
+/// A build-time node: an op plus an optional explicit input shape. The
+/// explicit input marks a branch re-entry (a tap off an earlier tensor, or
+/// a concat), where sequential shape chaining does not apply.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeSpec {
+    /// Layer name.
+    pub name: String,
+    /// Operator.
+    pub op: Op,
+    /// Explicit input shape override (branch/concat re-entry points).
+    pub input: Option<Vec<usize>>,
+}
+
+impl NodeSpec {
+    /// Sequential node: input is the previous node's output.
+    pub fn new(name: &str, op: Op) -> Self {
+        NodeSpec { name: name.to_string(), op, input: None }
+    }
+
+    /// Branch node: reads a tensor of the given shape (tap/concat).
+    pub fn tap(name: &str, op: Op, input: &[usize]) -> Self {
+        NodeSpec { name: name.to_string(), op, input: Some(input.to_vec()) }
+    }
+}
+
+/// A typed layer graph: ordered layers + metadata. The single source of
+/// truth every scheduling consumer reads.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Graph {
+    /// Workload name.
+    pub name: String,
+    /// Declared input shape (empty when lifted from a trace).
+    pub input_shape: Vec<usize>,
+    /// Ordered layers.
+    pub layers: Vec<LayerIr>,
+}
+
+/// Shape inference for one op — THE per-layer shape/MAC/param derivation.
+fn infer(name: &str, op: &Op, input: &[usize]) -> (Vec<usize>, ActFn, LayerCost) {
+    match *op {
+        Op::Dense { inputs, outputs, act } => {
+            let n: usize = input.iter().product();
+            assert_eq!(n, inputs, "{name}: dense input width mismatch ({n} != {inputs})");
+            let cost = LayerCost {
+                macs: (inputs * outputs) as u64,
+                af_ops: outputs as u64,
+                outputs: outputs as u64,
+                params: (outputs * (inputs + 1)) as u64,
+                ..Default::default()
+            };
+            (vec![outputs], act, cost)
+        }
+        Op::Conv2d { in_ch, out_ch, kernel, stride, padding, act } => {
+            assert_eq!(input.len(), 3, "{name}: conv input must be CHW, got {input:?}");
+            let (c, h, w) = (input[0], input[1], input[2]);
+            assert_eq!(c, in_ch, "{name}: conv input channels mismatch ({c} != {in_ch})");
+            let oh = padding.out_dim(h, kernel, stride);
+            let ow = padding.out_dim(w, kernel, stride);
+            let outputs = (oh * ow * out_ch) as u64;
+            let cost = LayerCost {
+                macs: outputs * (in_ch * kernel * kernel) as u64,
+                af_ops: outputs,
+                outputs,
+                params: (out_ch * (in_ch * kernel * kernel + 1)) as u64,
+                ..Default::default()
+            };
+            (vec![out_ch, oh, ow], act, cost)
+        }
+        Op::Pool2d { window, stride, padding, .. } => {
+            assert_eq!(input.len(), 3, "{name}: pool input must be CHW, got {input:?}");
+            let (c, h, w) = (input[0], input[1], input[2]);
+            let oh = padding.out_dim(h, window, stride);
+            let ow = padding.out_dim(w, window, stride);
+            let outputs = (oh * ow * c) as u64;
+            let cost = LayerCost {
+                pool_windows: outputs,
+                pool_window_size: (window * window) as u32,
+                outputs,
+                ..Default::default()
+            };
+            (vec![c, oh, ow], ActFn::Identity, cost)
+        }
+        Op::Flatten => {
+            let n: usize = input.iter().product();
+            (vec![n], ActFn::Identity, LayerCost { outputs: n as u64, ..Default::default() })
+        }
+        Op::Softmax => {
+            let n: usize = input.iter().product();
+            let cost = LayerCost { af_ops: n as u64, outputs: n as u64, ..Default::default() };
+            (input.to_vec(), ActFn::Softmax, cost)
+        }
+        Op::Plumbing { outputs } => (
+            vec![outputs as usize],
+            ActFn::Identity,
+            LayerCost { outputs, ..Default::default() },
+        ),
+        Op::Traced(_) => panic!("{name}: Op::Traced cannot be shape-inferred (use from_trace)"),
+    }
+}
+
+impl Graph {
+    /// Build a graph from typed ops, running shape inference to derive each
+    /// layer's output shape and [`LayerCost`]. Panics (with the layer name)
+    /// when shapes do not chain.
+    pub fn build(name: &str, input_shape: &[usize], specs: Vec<NodeSpec>) -> Graph {
+        let mut current = input_shape.to_vec();
+        let mut layers = Vec::with_capacity(specs.len());
+        for spec in specs {
+            let input = spec.input.unwrap_or_else(|| current.clone());
+            let (output_shape, af, cost) = infer(&spec.name, &spec.op, &input);
+            current = output_shape.clone();
+            layers.push(LayerIr {
+                name: spec.name,
+                op: spec.op,
+                input_shape: input,
+                output_shape,
+                af,
+                cost,
+                policy: None,
+            });
+        }
+        Graph { name: name.to_string(), input_shape: input_shape.to_vec(), layers }
+    }
+
+    /// Number of compute (MAC-performing) layers — the policy table length.
+    pub fn compute_layers(&self) -> usize {
+        self.layers.iter().filter(|l| l.is_compute()).count()
+    }
+
+    /// Total MACs per inference.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.cost.macs).sum()
+    }
+
+    /// Total operations (2×MACs + AF + pooling element ops) — the GOP
+    /// number throughput metrics are normalised by.
+    pub fn total_ops(&self) -> u64 {
+        self.layers
+            .iter()
+            .map(|l| 2 * l.cost.macs + l.cost.af_ops + l.cost.pool_windows * l.cost.pool_window_size as u64)
+            .sum()
+    }
+
+    /// Total parameters.
+    pub fn total_params(&self) -> u64 {
+        self.layers.iter().map(|l| l.cost.params).sum()
+    }
+
+    /// MACs of each compute layer, in order.
+    pub fn macs_per_compute_layer(&self) -> Vec<u64> {
+        self.layers.iter().filter(|l| l.is_compute()).map(|l| l.cost.macs).collect()
+    }
+
+    /// Fold a [`PolicyTable`] into per-layer annotations (compute layers in
+    /// order). Panics unless the table covers every compute layer.
+    pub fn annotate(&mut self, policy: &PolicyTable) {
+        assert_eq!(
+            policy.len(),
+            self.compute_layers(),
+            "policy must cover each compute layer of the trace"
+        );
+        let mut pidx = 0usize;
+        for layer in self.layers.iter_mut().filter(|l| l.is_compute()) {
+            let lp = policy.layer(pidx);
+            pidx += 1;
+            layer.policy = Some(ExecPolicy { precision: lp.precision, mode: lp.mode });
+        }
+    }
+
+    /// Annotated copy (see [`Self::annotate`]).
+    pub fn with_policy(&self, policy: &PolicyTable) -> Graph {
+        let mut g = self.clone();
+        g.annotate(policy);
+        g
+    }
+
+    /// Extract the annotations back into a [`PolicyTable`] (unannotated
+    /// compute layers report the engine default).
+    pub fn policy_table(&self) -> PolicyTable {
+        let entries = self
+            .layers
+            .iter()
+            .filter(|l| l.is_compute())
+            .enumerate()
+            .map(|(i, l)| l.policy.unwrap_or_default().to_layer_policy(i))
+            .collect();
+        PolicyTable::from_entries(entries)
+    }
+
+    /// True when every compute layer carries an explicit annotation.
+    pub fn is_annotated(&self) -> bool {
+        self.layers.iter().filter(|l| l.is_compute()).all(|l| l.policy.is_some())
+    }
+
+    /// Contiguous sub-graph over `layers[range.0..range.1]` (annotations
+    /// ride along — pipeline shards need no policy re-slicing).
+    pub fn slice(&self, range: (usize, usize), suffix: &str) -> Graph {
+        let layers = self.layers[range.0..range.1].to_vec();
+        let input_shape = layers.first().map(|l| l.input_shape.clone()).unwrap_or_default();
+        Graph { name: format!("{}/{}", self.name, suffix), input_shape, layers }
+    }
+}

@@ -1,0 +1,147 @@
+//! Unit tests for the IR core: shape inference, annotations, lowerings,
+//! slicing. Cross-representation parity (IR vs hand-written traces, wave
+//! vs scalar executor) lives in `tests/ir_parity.rs`.
+
+use super::*;
+use crate::model::workloads::{paper_mlp, small_cnn, vgg16_trace};
+use crate::pooling::sliding::PoolKind;
+use crate::quant::{PolicyTable, Precision};
+
+#[test]
+fn dense_chain_infers_shapes_and_costs() {
+    let g = Graph::build(
+        "mlp",
+        &[4],
+        vec![
+            NodeSpec::new("fc1", Op::Dense { inputs: 4, outputs: 3, act: ActFn::Tanh }),
+            NodeSpec::new("fc2", Op::Dense { inputs: 3, outputs: 2, act: ActFn::Identity }),
+            NodeSpec::new("sm", Op::Softmax),
+        ],
+    );
+    assert_eq!(g.compute_layers(), 2);
+    assert_eq!(g.total_macs(), 4 * 3 + 3 * 2);
+    assert_eq!(g.macs_per_compute_layer(), vec![12, 6]);
+    assert_eq!(g.layers[0].output_shape, vec![3]);
+    assert_eq!(g.layers[1].cost.params, 2 * (3 + 1));
+    assert_eq!(g.layers[2].kind(), TraceKind::Plumbing);
+    assert_eq!(g.layers[2].af, ActFn::Softmax);
+    assert_eq!(g.layers[2].cost.af_ops, 2);
+}
+
+#[test]
+fn conv_padding_modes_differ() {
+    let valid = infer_conv(Padding::Valid);
+    let same = infer_conv(Padding::Same);
+    // 14×14 input, 3×3 kernel stride 1: valid → 12×12, same → 14×14
+    assert_eq!(valid.layers[0].output_shape, vec![8, 12, 12]);
+    assert_eq!(same.layers[0].output_shape, vec![8, 14, 14]);
+    assert_eq!(valid.layers[0].cost.macs, 12 * 12 * 8 * 9);
+    assert_eq!(same.layers[0].cost.macs, 14 * 14 * 8 * 9);
+}
+
+fn infer_conv(padding: Padding) -> Graph {
+    Graph::build(
+        "c",
+        &[1, 14, 14],
+        vec![NodeSpec::new(
+            "conv",
+            Op::Conv2d { in_ch: 1, out_ch: 8, kernel: 3, stride: 1, padding, act: ActFn::Relu },
+        )],
+    )
+}
+
+#[test]
+fn pool_windows_counted() {
+    let g = Graph::build(
+        "p",
+        &[2, 8, 8],
+        vec![NodeSpec::new(
+            "pool",
+            Op::Pool2d { window: 2, stride: 2, padding: Padding::Valid, kind: PoolKind::Aad },
+        )],
+    );
+    assert_eq!(g.layers[0].output_shape, vec![2, 4, 4]);
+    assert_eq!(g.layers[0].cost.pool_windows, 2 * 4 * 4);
+    assert_eq!(g.layers[0].cost.pool_window_size, 4);
+    assert_eq!(g.layers[0].cost.macs, 0);
+}
+
+#[test]
+#[should_panic(expected = "dense input width mismatch")]
+fn mismatched_dense_width_panics() {
+    Graph::build(
+        "bad",
+        &[4],
+        vec![NodeSpec::new("fc", Op::Dense { inputs: 5, outputs: 2, act: ActFn::Relu })],
+    );
+}
+
+#[test]
+fn network_lifts_with_identical_mac_counts() {
+    for net in [paper_mlp(3), small_cnn("cnn", PoolKind::Max, 4)] {
+        let g = net.to_ir();
+        assert_eq!(g.compute_layers(), net.compute_layers());
+        assert_eq!(g.macs_per_compute_layer(), net.macs_per_layer());
+        // total ops must exceed 2×MACs (AF work exists)
+        assert!(g.total_ops() > 2 * g.total_macs());
+    }
+}
+
+#[test]
+fn annotations_round_trip_through_policy_table() {
+    let mut g = workloads::vgg16();
+    assert!(!g.is_annotated());
+    let mut p = PolicyTable::uniform(g.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    p.layer_mut(0).mode = ExecMode::Accurate;
+    g.annotate(&p);
+    assert!(g.is_annotated());
+    assert_eq!(g.policy_table(), p);
+}
+
+#[test]
+#[should_panic(expected = "policy must cover")]
+fn short_policy_rejected() {
+    let mut g = workloads::vgg16();
+    g.annotate(&PolicyTable::uniform(2, Precision::Fxp8, ExecMode::Accurate));
+}
+
+#[test]
+fn slices_carry_annotations_and_cover_costs() {
+    let g = workloads::tinyyolo().with_policy(&PolicyTable::uniform(
+        workloads::tinyyolo().compute_layers(),
+        Precision::Fxp8,
+        ExecMode::Approximate,
+    ));
+    let a = g.slice((0, 8), "head");
+    let b = g.slice((8, g.layers.len()), "tail");
+    assert_eq!(a.layers.len() + b.layers.len(), g.layers.len());
+    assert_eq!(a.total_macs() + b.total_macs(), g.total_macs());
+    assert!(a.is_annotated() && b.is_annotated());
+    assert_eq!(a.policy_table().len(), a.compute_layers());
+}
+
+#[test]
+fn trace_round_trip_preserves_costs() {
+    let t = vgg16_trace();
+    let g = Graph::from_trace(&t);
+    assert_eq!(g.compute_layers(), t.compute_layers());
+    assert_eq!(g.total_macs(), t.total_macs());
+    assert_eq!(g.total_ops(), t.total_ops());
+    assert_eq!(g.total_params(), t.total_params());
+    let back = g.to_trace();
+    assert_eq!(back.total_macs(), t.total_macs());
+    assert_eq!(back.layers.len(), t.layers.len());
+    for (a, b) in back.layers.iter().zip(&t.layers) {
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.macs, b.macs);
+        assert_eq!(a.outputs, b.outputs);
+    }
+}
+
+#[test]
+fn default_annotation_is_conservative() {
+    let d = ExecPolicy::default();
+    assert_eq!(d.precision, Precision::Fxp16);
+    assert_eq!(d.mode, ExecMode::Accurate);
+    assert_eq!(d.cycles_per_mac(), 9);
+}

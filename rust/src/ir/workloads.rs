@@ -1,0 +1,125 @@
+//! The evaluation workloads authored directly in the IR.
+//!
+//! These are the typed twins of the hand-written layer traces in
+//! [`crate::model::workloads`]: the layer lists here carry *ops and
+//! shapes*, and every MAC / parameter / pooling count is derived by the
+//! IR's shape inference instead of being written out by hand. The parity
+//! tests (`tests/ir_parity.rs`) hold `vgg16().to_trace()` and
+//! `tinyyolo().to_trace()` bit-equal to the golden hand-written traces, so
+//! the one derivation site is continuously checked against published
+//! numbers (VGG-16 ≈ 15.5 GMACs, TinyYOLO-v3 ≈ 2.8 GMACs).
+
+use super::{Graph, NodeSpec, Op, Padding};
+use crate::activation::ActFn;
+use crate::pooling::sliding::PoolKind;
+
+/// Same-padded stride-1 convolution (the evaluation nets' conv idiom).
+fn conv(name: &str, in_ch: usize, out_ch: usize, kernel: usize, act: ActFn) -> NodeSpec {
+    NodeSpec::new(
+        name,
+        Op::Conv2d { in_ch, out_ch, kernel, stride: 1, padding: Padding::Same, act },
+    )
+}
+
+/// Same-padded max pooling.
+fn pool(name: &str, window: usize, stride: usize) -> NodeSpec {
+    NodeSpec::new(
+        name,
+        Op::Pool2d { window, stride, padding: Padding::Same, kind: PoolKind::Max },
+    )
+}
+
+/// Dense layer.
+fn dense(name: &str, inputs: usize, outputs: usize, act: ActFn) -> NodeSpec {
+    NodeSpec::new(name, Op::Dense { inputs, outputs, act })
+}
+
+/// TinyYOLO-v3 at 416×416×3 (the Table IV object-detection workload).
+/// Branches (the 26×26 detection head taps conv8's output and concats with
+/// the upsampled map) are explicit [`NodeSpec::tap`] re-entry points.
+pub fn tinyyolo() -> Graph {
+    let relu = ActFn::Relu;
+    let id = ActFn::Identity;
+    Graph::build(
+        "tinyyolo-v3",
+        &[3, 416, 416],
+        vec![
+            conv("conv1", 3, 16, 3, relu),
+            pool("pool1", 2, 2),
+            conv("conv2", 16, 32, 3, relu),
+            pool("pool2", 2, 2),
+            conv("conv3", 32, 64, 3, relu),
+            pool("pool3", 2, 2),
+            conv("conv4", 64, 128, 3, relu),
+            pool("pool4", 2, 2),
+            conv("conv5", 128, 256, 3, relu),
+            pool("pool5", 2, 2),
+            conv("conv6", 256, 512, 3, relu),
+            pool("pool6", 2, 1),
+            conv("conv7", 512, 1024, 3, relu),
+            conv("conv8", 1024, 256, 1, relu),
+            conv("conv9", 256, 512, 3, relu),
+            conv("conv10-det1", 512, 255, 1, id),
+            // upsample branch: tap conv8's 13×13×256 output
+            NodeSpec::tap(
+                "conv11",
+                Op::Conv2d {
+                    in_ch: 256,
+                    out_ch: 128,
+                    kernel: 1,
+                    stride: 1,
+                    padding: Padding::Same,
+                    act: relu,
+                },
+                &[256, 13, 13],
+            ),
+            NodeSpec::new("upsample", Op::Plumbing { outputs: 26 * 26 * 128 }),
+            // concat(upsample 128ch, conv5 256ch) = 384 channels at 26×26
+            NodeSpec::tap(
+                "conv12",
+                Op::Conv2d {
+                    in_ch: 384,
+                    out_ch: 256,
+                    kernel: 3,
+                    stride: 1,
+                    padding: Padding::Same,
+                    act: relu,
+                },
+                &[384, 26, 26],
+            ),
+            conv("conv13-det2", 256, 255, 1, id),
+        ],
+    )
+}
+
+/// VGG-16 at 224×224×3 (the Fig. 13 layer-wise breakdown workload).
+pub fn vgg16() -> Graph {
+    let relu = ActFn::Relu;
+    Graph::build(
+        "vgg-16",
+        &[3, 224, 224],
+        vec![
+            conv("conv1-1", 3, 64, 3, relu),
+            conv("conv1-2", 64, 64, 3, relu),
+            pool("pool1", 2, 2),
+            conv("conv2-1", 64, 128, 3, relu),
+            conv("conv2-2", 128, 128, 3, relu),
+            pool("pool2", 2, 2),
+            conv("conv3-1", 128, 256, 3, relu),
+            conv("conv3-2", 256, 256, 3, relu),
+            conv("conv3-3", 256, 256, 3, relu),
+            pool("pool3", 2, 2),
+            conv("conv4-1", 256, 512, 3, relu),
+            conv("conv4-2", 512, 512, 3, relu),
+            conv("conv4-3", 512, 512, 3, relu),
+            pool("pool4", 2, 2),
+            conv("conv5-1", 512, 512, 3, relu),
+            conv("conv5-2", 512, 512, 3, relu),
+            conv("conv5-3", 512, 512, 3, relu),
+            pool("pool5", 2, 2),
+            dense("fc6", 7 * 7 * 512, 4096, relu),
+            dense("fc7", 4096, 4096, relu),
+            dense("fc8", 4096, 1000, ActFn::Softmax),
+        ],
+    )
+}

@@ -19,7 +19,10 @@
 //!   the eq.(1)–(5) memory-mapping scheme ([`memory`]), the layer-multiplexed
 //!   control engine ([`control`]), the vector-engine simulator ([`engine`]),
 //!   the sharded multi-engine cluster layer ([`cluster`]), and the
-//!   calibrated FPGA/ASIC cost model ([`hwcost`]).
+//!   calibrated FPGA/ASIC cost model ([`hwcost`]) — all driven by one typed
+//!   layer-graph IR ([`ir`]): networks and hand-written traces lower into
+//!   it, and the simulator, cluster planner, sensitivity heuristic, tables
+//!   and the wave-vectorised executor consume it.
 //!
 //! See `DESIGN.md` for the paper→module inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results for every table and figure.
@@ -35,6 +38,7 @@ pub mod cordic;
 pub mod engine;
 pub mod fxp;
 pub mod hwcost;
+pub mod ir;
 pub mod memory;
 pub mod model;
 pub mod norm;
@@ -58,6 +62,7 @@ pub mod prelude {
     pub use crate::engine::{EngineConfig, VectorEngine};
     pub use crate::fxp::{Format, Fxp};
     pub use crate::hwcost::{AsicReport, FpgaReport};
+    pub use crate::ir::{Graph, WaveExecutor};
     pub use crate::model::{Network, Tensor};
     pub use crate::quant::Precision;
 }

@@ -7,8 +7,9 @@ use corvet::cluster::{parse_strategy, Cluster, ClusterConfig, InterconnectConfig
 use corvet::coordinator::{Server, ServerConfig};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::{EngineConfig, VectorEngine};
-use corvet::model::workloads::{paper_mlp, tinyyolo_trace, vgg16_trace, vit_tiny_mlp_trace};
-use corvet::quant::{assign_modes, describe, PolicyTable, Precision};
+use corvet::ir::{self, Graph};
+use corvet::model::workloads::{paper_mlp, vit_tiny_mlp_trace};
+use corvet::quant::{assign_modes_ir, describe, PolicyTable, Precision};
 use corvet::report::{fnum, Table};
 use corvet::runtime::{quantize_network, ArtifactRegistry, ModelWeights};
 use corvet::tables;
@@ -92,14 +93,20 @@ fn parse_mode(s: &str) -> Result<ExecMode> {
     }
 }
 
+/// Resolve a CLI workload name to its IR graph (the transformer workload is
+/// authored as a trace and lifted).
+fn workload_graph(workload: &str) -> Result<Graph> {
+    Ok(match workload {
+        "tinyyolo" => ir::workloads::tinyyolo(),
+        "vgg16" => ir::workloads::vgg16(),
+        "vit-mlp" | "transformer" => Graph::from_trace(&vit_tiny_mlp_trace()),
+        other => bail!("unknown workload {other:?} (tinyyolo|vgg16|vit-mlp)"),
+    })
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let workload = args.opt_or("workload", "tinyyolo");
-    let trace = match workload.as_str() {
-        "tinyyolo" => tinyyolo_trace(),
-        "vgg16" => vgg16_trace(),
-        "vit-mlp" | "transformer" => vit_tiny_mlp_trace(),
-        other => bail!("unknown workload {other:?} (tinyyolo|vgg16|vit-mlp)"),
-    };
+    let graph = workload_graph(&workload)?;
     let pes: usize = args.num_or("pes", 256usize)?;
     let precision = Precision::parse(&args.opt_or("precision", "fxp8"))
         .context("bad --precision")?;
@@ -107,12 +114,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig { pes, ..EngineConfig::pe256() };
     cfg.af_blocks = (pes / 64).max(1);
     cfg.pool_units = (pes / 8).max(1);
-    let policy = PolicyTable::uniform(trace.compute_layers(), precision, mode);
-    let report = VectorEngine::new(cfg).run_trace(&trace, &policy);
+    let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
+    let report = VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
     let asic = corvet::hwcost::engine_asic(&cfg, policy.layer(0).cycles_per_mac());
     let clock = asic.freq_ghz * 1e9;
 
-    println!("workload       : {} ({} layers, {:.2} GMACs)", trace.name, trace.layers.len(), trace.total_macs() as f64 / 1e9);
+    println!("workload       : {} ({} layers, {:.2} GMACs)", graph.name, graph.layers.len(), graph.total_macs() as f64 / 1e9);
     println!("engine         : {pes} PEs @ {:.2} GHz, {} AF blocks", asic.freq_ghz, cfg.af_blocks);
     println!("policy         : {precision} / {mode:?} ({} cyc/MAC)", policy.layer(0).cycles_per_mac());
     println!("cycles         : {}", report.total_cycles);
@@ -126,12 +133,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_cluster(args: &Args) -> Result<()> {
     let workload = args.opt_or("workload", "vgg16");
-    let trace = match workload.as_str() {
-        "tinyyolo" => tinyyolo_trace(),
-        "vgg16" => vgg16_trace(),
-        "vit-mlp" | "transformer" => vit_tiny_mlp_trace(),
-        other => bail!("unknown workload {other:?} (tinyyolo|vgg16|vit-mlp)"),
-    };
+    let graph = workload_graph(&workload)?;
     let shards: usize = args.num_or("shards", 4usize)?;
     let pes: usize = args.num_or("pes", 256usize)?;
     let batches: u64 = args.num_or("batches", 8u64)?;
@@ -149,14 +151,15 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     engine.af_blocks = (pes / 64).max(1);
     engine.pool_units = (pes / 8).max(1);
 
-    let policy = PolicyTable::uniform(trace.compute_layers(), precision, mode);
+    let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
+    let annotated = graph.with_policy(&policy);
     let cluster = Cluster::new(ClusterConfig {
         shards,
         engine,
         interconnect: InterconnectConfig::default(),
         strategy,
     });
-    let plan = cluster.plan(&trace, &policy);
+    let plan = cluster.plan_ir(&annotated);
     let report = corvet::cluster::ShardExecutor::new(engine, cluster.config.interconnect)
         .run(&plan, batches);
     let asic = corvet::hwcost::cluster_asic(
@@ -168,9 +171,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 
     println!(
         "workload       : {} ({} layers, {:.2} GMACs)",
-        trace.name,
-        trace.layers.len(),
-        trace.total_macs() as f64 / 1e9
+        graph.name,
+        graph.layers.len(),
+        graph.total_macs() as f64 / 1e9
     );
     println!(
         "cluster        : {} x {pes}-PE engines @ {:.2} GHz, {} strategy",
@@ -265,8 +268,12 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
     let eval_n = if quick { 60 } else { 200 };
     let inputs = &data.test_x[..eval_n];
     let labels = &data.test_y[..eval_n];
-    let report = assign_modes(net.compute_layers(), Precision::Fxp8, budget, |policy| {
-        net.accuracy_cordic(inputs, labels, policy)
+    // probes are annotated IR graphs, evaluated on the wave executor
+    // (bit-identical to the scalar path, faster on the host)
+    let graph = net.to_ir();
+    let engine = EngineConfig::default();
+    let report = assign_modes_ir(&graph, Precision::Fxp8, budget, |g| {
+        net.accuracy_wave(inputs, labels, &g.policy_table(), &engine)
     });
     println!("baseline (all accurate) accuracy : {}", fnum(report.baseline_accuracy));
     for (i, d) in report.per_layer_drop.iter().enumerate() {

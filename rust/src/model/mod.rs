@@ -10,9 +10,15 @@
 //!   execution through [`crate::cordic::mac`], [`crate::activation`] and
 //!   [`crate::pooling`], under a per-layer [`crate::quant::PolicyTable`].
 //!
+//! A third, wave-vectorised path ([`Network::forward_wave`]) produces
+//! bit-identical outputs to the CORDIC path in PE-array-wide lane waves —
+//! see [`crate::ir::WaveExecutor`].
+//!
 //! Large evaluation networks (TinyYOLO-v3, VGG-16) are represented as
 //! [`workloads::Trace`]s — exact layer shapes and op counts — because the
-//! paper uses them for timing/energy, not for retraining.
+//! paper uses them for timing/energy, not for retraining. Traces are a thin
+//! lowering target of the typed layer IR ([`crate::ir`]); networks lift
+//! into the IR with [`Network::to_ir`].
 
 mod layer;
 pub mod network;

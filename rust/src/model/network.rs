@@ -1,12 +1,14 @@
 //! Network container with the FP32 reference path and the bit-accurate
 //! CORDIC fixed-point path.
 
-use super::layer::{Conv2dParams, DenseParams, Layer};
+use super::layer::{Conv2dParams, DenseParams, Layer, Pool2dParams};
 use super::tensor::Tensor;
 use crate::activation::{funcs::AfCost, MultiAfBlock};
 use crate::cordic::mac::{CordicMac, ExecMode, MacConfig};
 use crate::cordic::{from_guard, to_guard};
+use crate::engine::EngineConfig;
 use crate::fxp::Fxp;
+use crate::ir::{Graph, WaveExecutor, WaveRunStats};
 use crate::pooling::sliding::AadSlidingWindow;
 use crate::pooling::PoolCost;
 use crate::quant::{LayerPolicy, PolicyTable, Precision};
@@ -92,35 +94,15 @@ impl Network {
         self.layers.iter().filter(|l| l.is_compute()).count()
     }
 
+    /// Lift this network into the typed layer IR (shapes and op counts
+    /// derived by the IR's shape inference — the single derivation site).
+    pub fn to_ir(&self) -> Graph {
+        Graph::from_network(self)
+    }
+
     /// MACs per compute layer for an input of the declared shape.
     pub fn macs_per_layer(&self) -> Vec<u64> {
-        let mut shape = self.input_shape.clone();
-        let mut out = Vec::new();
-        for layer in &self.layers {
-            match layer {
-                Layer::Dense(d) => {
-                    out.push(d.macs());
-                    shape = vec![d.outputs];
-                }
-                Layer::Conv2d(c) => {
-                    let (h, w) = (shape[1], shape[2]);
-                    out.push(c.macs(h, w));
-                    shape = vec![c.out_ch, c.out_dim(h), c.out_dim(w)];
-                }
-                Layer::Pool2d(p) => {
-                    shape = vec![
-                        shape[0],
-                        p.config.out_dim(shape[1]),
-                        p.config.out_dim(shape[2]),
-                    ];
-                }
-                Layer::Flatten => {
-                    shape = vec![shape.iter().product()];
-                }
-                Layer::Softmax => {}
-            }
-        }
-        out
+        self.to_ir().macs_per_compute_layer()
     }
 
     /// FP32 reference forward pass.
@@ -178,43 +160,35 @@ impl Network {
                     stats.per_layer.push(st);
                 }
                 Layer::Pool2d(p) => {
-                    let iters = af_iters(current.mode);
-                    let raw: Vec<i64> = x.data().iter().map(|&v| to_guard(v)).collect();
-                    let shape = x.shape().to_vec();
-                    let (ch, h, w) = (shape[0], shape[1], shape[2]);
-                    let mut eng = AadSlidingWindow::new(p.config, p.kind, iters);
-                    let (oh, ow) = (p.config.out_dim(h), p.config.out_dim(w));
-                    let mut out = Vec::with_capacity(ch * oh * ow);
-                    for c in 0..ch {
-                        let chan = &raw[c * h * w..(c + 1) * h * w];
-                        out.extend(eng.pool_channel(chan, h, w).iter().map(|&v| from_guard(v)));
-                    }
-                    stats.per_layer.push(LayerStats {
-                        kind: "pool2d",
-                        pool_cost: eng.total_cost(),
-                        outputs: out.len(),
-                        ..Default::default()
-                    });
-                    x = Tensor::from_vec(&[ch, oh, ow], out);
+                    let (y, st) = pool_cordic(p, &x, af_iters(current.mode));
+                    x = y;
+                    stats.per_layer.push(st);
                 }
                 Layer::Flatten => {
                     let n = x.len();
                     x = x.reshape(&[n]);
                 }
                 Layer::Softmax => {
-                    let mut block = MultiAfBlock::new(af_iters(current.mode));
-                    let (ys, cost) = block.softmax_f64(x.data());
-                    stats.per_layer.push(LayerStats {
-                        kind: "softmax",
-                        af_cost: cost,
-                        outputs: ys.len(),
-                        ..Default::default()
-                    });
-                    x = Tensor::vector(&ys);
+                    let (y, st) = softmax_cordic(&x, af_iters(current.mode));
+                    x = y;
+                    stats.per_layer.push(st);
                 }
             }
         }
         (x, stats)
+    }
+
+    /// Wave-vectorised CORDIC forward pass: bit-identical outputs to
+    /// [`Self::forward_cordic`], executed in PE-array-wide lane waves
+    /// mirroring `config.pes`, with cycle accounting from the engine's
+    /// shared wave law. See [`crate::ir::WaveExecutor`].
+    pub fn forward_wave(
+        &self,
+        input: &Tensor,
+        policy: &PolicyTable,
+        config: &EngineConfig,
+    ) -> (Tensor, WaveRunStats) {
+        WaveExecutor::new(*config).forward(self, input, policy)
     }
 
     /// Classification accuracy of the FP32 path over a labelled set.
@@ -230,6 +204,19 @@ impl Network {
         policy: &PolicyTable,
     ) -> f64 {
         accuracy_of(inputs, labels, |x| self.forward_cordic(x, policy).0)
+    }
+
+    /// Classification accuracy via the wave executor — bit-identical to
+    /// [`Self::accuracy_cordic`], faster on the host.
+    pub fn accuracy_wave(
+        &self,
+        inputs: &[Tensor],
+        labels: &[usize],
+        policy: &PolicyTable,
+        config: &EngineConfig,
+    ) -> f64 {
+        let exec = WaveExecutor::new(*config);
+        accuracy_of(inputs, labels, |x| exec.forward(self, x, policy).0)
     }
 }
 
@@ -307,6 +294,43 @@ fn pool_f64(p: &super::layer::Pool2dParams, x: &Tensor) -> Tensor {
 }
 
 // ---- CORDIC layer implementations ------------------------------------------
+
+/// Pooling on the AAD sliding-window datapath — shared by the scalar
+/// reference path and the wave executor (one implementation, one cost
+/// model).
+pub(crate) fn pool_cordic(p: &Pool2dParams, x: &Tensor, iters: u32) -> (Tensor, LayerStats) {
+    let raw: Vec<i64> = x.data().iter().map(|&v| to_guard(v)).collect();
+    let shape = x.shape().to_vec();
+    let (ch, h, w) = (shape[0], shape[1], shape[2]);
+    let mut eng = AadSlidingWindow::new(p.config, p.kind, iters);
+    let (oh, ow) = (p.config.out_dim(h), p.config.out_dim(w));
+    let mut out = Vec::with_capacity(ch * oh * ow);
+    for c in 0..ch {
+        let chan = &raw[c * h * w..(c + 1) * h * w];
+        out.extend(eng.pool_channel(chan, h, w).iter().map(|&v| from_guard(v)));
+    }
+    let stats = LayerStats {
+        kind: "pool2d",
+        pool_cost: eng.total_cost(),
+        outputs: out.len(),
+        ..Default::default()
+    };
+    (Tensor::from_vec(&[ch, oh, ow], out), stats)
+}
+
+/// Softmax on the multi-AF block — shared by the scalar reference path and
+/// the wave executor.
+pub(crate) fn softmax_cordic(x: &Tensor, iters: u32) -> (Tensor, LayerStats) {
+    let mut block = MultiAfBlock::new(iters);
+    let (ys, cost) = block.softmax_f64(x.data());
+    let stats = LayerStats {
+        kind: "softmax",
+        af_cost: cost,
+        outputs: ys.len(),
+        ..Default::default()
+    };
+    (Tensor::vector(&ys), stats)
+}
 
 fn dense_cordic(d: &DenseParams, x: &Tensor, policy: LayerPolicy) -> (Tensor, LayerStats) {
     assert_eq!(x.len(), d.inputs, "dense input width mismatch");

@@ -1,7 +1,7 @@
 //! The paper's evaluation workloads.
 //!
 //! * [`paper_mlp`] — the 196-64-32-32-10 MLP used in Table V (and by the
-//!!  prior-work rows it compares against);
+//!   prior-work rows it compares against);
 //! * [`mlp`] / [`small_cnn`] — trainable models for the Fig. 11 accuracy
 //!   sweep (trained from scratch on the synthetic dataset in
 //!   [`crate::train`]);

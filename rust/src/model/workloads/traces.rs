@@ -3,7 +3,15 @@
 //! The paper uses these models for system-level timing/energy (Table IV,
 //! Fig. 13), not retraining, so what matters is exact layer shapes → MAC /
 //! activation / pooling op counts and parameter sizes. A [`Trace`] is that
-//! information in executable form; the vector-engine simulator schedules it.
+//! information in executable form.
+//!
+//! Since the IR refactor, [`Trace`] is a **thin lowering target** of the
+//! typed layer IR: the simulator and cluster planner consume
+//! [`crate::ir::Graph`] (traces enter via [`crate::ir::Graph::from_trace`]),
+//! and the typed twins of these workloads live in
+//! [`crate::ir::workloads`]. The hand-written counts below are kept as the
+//! golden reference the IR's shape inference is property-tested against
+//! (`tests/ir_parity.rs`).
 
 use crate::activation::ActFn;
 

@@ -12,7 +12,7 @@ mod sensitivity;
 
 pub use policy::{LayerPolicy, PolicyTable};
 pub use quantizer::{dequantize_vec, quantize_vec, QuantStats};
-pub use sensitivity::{all_approximate, assign_modes, describe, SensitivityReport};
+pub use sensitivity::{all_approximate, assign_modes, assign_modes_ir, describe, SensitivityReport};
 
 use crate::fxp::{Format, FXP16, FXP4, FXP8};
 

@@ -17,6 +17,7 @@
 
 use super::{PolicyTable, Precision};
 use crate::cordic::mac::ExecMode;
+use crate::ir::Graph;
 
 /// Outcome of a sensitivity analysis.
 #[derive(Debug, Clone)]
@@ -89,6 +90,24 @@ where
     }
 }
 
+/// IR-aware heuristic: probes are **annotated graphs** instead of bare
+/// policy tables, so the evaluator sees exactly what the engine simulator
+/// and the wave executor consume. The layer count comes from the graph's
+/// own compute-layer census — no separate bookkeeping to keep in sync.
+pub fn assign_modes_ir<F>(
+    graph: &Graph,
+    precision: Precision,
+    max_drop: f64,
+    mut eval: F,
+) -> SensitivityReport
+where
+    F: FnMut(&Graph) -> f64,
+{
+    assign_modes(graph.compute_layers(), precision, max_drop, |policy| {
+        eval(&graph.with_policy(policy))
+    })
+}
+
 /// Convenience: uniform approximate policy (the paper's "approximate mode"
 /// end of the trade-off) for comparison rows.
 pub fn all_approximate(layers: usize, precision: Precision) -> PolicyTable {
@@ -159,6 +178,17 @@ mod tests {
         let costs: &[f64] = &[0.0, 0.0, 0.0, 0.0, 0.0];
         let r = assign_modes(5, Precision::Fxp8, 0.02, surface(costs));
         assert_eq!(r.evals, 6);
+    }
+
+    #[test]
+    fn ir_variant_agrees_with_policy_variant() {
+        let graph = crate::model::workloads::paper_mlp(1).to_ir();
+        let costs: &[f64] = &[0.001, 0.05, 0.002, 0.0005];
+        let via_policy = assign_modes(4, Precision::Fxp8, 0.01, surface(costs));
+        let mut eval = surface(costs);
+        let via_ir = assign_modes_ir(&graph, Precision::Fxp8, 0.01, |g| eval(&g.policy_table()));
+        assert_eq!(via_ir.policy, via_policy.policy);
+        assert_eq!(via_ir.evals, 5, "baseline + one probe per compute layer");
     }
 
     #[test]

@@ -4,7 +4,8 @@
 use crate::cordic::mac::ExecMode;
 use crate::engine::EngineConfig;
 use crate::hwcost;
-use crate::model::workloads::{paper_mlp, small_cnn, vgg16_trace, wide_mlp};
+use crate::ir::workloads::vgg16;
+use crate::model::workloads::{paper_mlp, small_cnn, wide_mlp};
 use crate::model::Network;
 use crate::pooling::sliding::PoolKind;
 use crate::quant::{PolicyTable, Precision};
@@ -90,7 +91,8 @@ pub fn fig11(quick: bool) -> (Vec<Fig11Point>, Table) {
                     precision,
                     ExecMode::Custom(iters),
                 );
-                let acc = net.accuracy_cordic(inputs, labels, &policy);
+                // wave executor: bit-identical to forward_cordic, faster
+                let acc = net.accuracy_wave(inputs, labels, &policy, &EngineConfig::default());
                 points.push(Fig11Point {
                     model: net.name.clone(),
                     precision,
@@ -125,13 +127,13 @@ pub fn fig13() -> Table {
     let cfg = EngineConfig::pe256();
     let asic = hwcost::engine_asic(&cfg, 4);
     let clock_hz = asic.freq_ghz * 1e9;
-    let trace = vgg16_trace();
+    let graph = vgg16();
     let mut policy =
-        PolicyTable::uniform(trace.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+        PolicyTable::uniform(graph.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
     let n = policy.len();
     policy.layer_mut(0).mode = ExecMode::Accurate;
     policy.layer_mut(n - 1).mode = ExecMode::Accurate;
-    let report = crate::engine::VectorEngine::new(cfg).run_trace(&trace, &policy);
+    let report = crate::engine::VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
 
     let mut t = Table::new(
         "Fig. 13 — VGG-16 layer-wise execution time and power (256 PE)",

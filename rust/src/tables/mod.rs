@@ -15,7 +15,7 @@ pub use figs::{fig11, fig13, Fig11Point};
 use crate::cluster::{Cluster, ClusterConfig, ClusterReport, InterconnectConfig, PartitionStrategy};
 use crate::engine::EngineConfig;
 use crate::hwcost;
-use crate::model::workloads::{tinyyolo_trace, vgg16_trace};
+use crate::ir::workloads::{tinyyolo, vgg16};
 use crate::quant::{PolicyTable, Precision};
 use crate::report::{delta_pct, fnum, Table};
 
@@ -150,13 +150,13 @@ pub fn table4() -> Table {
     // ours: 256-PE engine on the FPGA cost model, approximate FxP-8 policy
     let cfg = EngineConfig::pe256();
     let fpga = hwcost::engine_fpga(&cfg);
-    let trace = tinyyolo_trace();
+    let graph = tinyyolo();
     let policy = PolicyTable::uniform(
-        trace.compute_layers(),
+        graph.compute_layers(),
         Precision::Fxp8,
         crate::cordic::mac::ExecMode::Approximate,
     );
-    let report = crate::engine::VectorEngine::new(cfg).run_trace(&trace, &policy);
+    let report = crate::engine::VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
     let clock_hz = fpga.freq_mhz * 1e6;
     let gops = report.gops(clock_hz);
     let latency_ms = report.time_ms(clock_hz);
@@ -233,12 +233,12 @@ pub fn table5() -> Table {
 /// steady-state throughput, per-run utilisation and the multi-engine ASIC
 /// cost from [`hwcost::cluster_asic`].
 pub fn cluster_scaling() -> Table {
-    let trace = vgg16_trace();
-    let policy = PolicyTable::uniform(
-        trace.compute_layers(),
+    let graph = vgg16();
+    let graph = graph.with_policy(&PolicyTable::uniform(
+        graph.compute_layers(),
         Precision::Fxp8,
         crate::cordic::mac::ExecMode::Approximate,
-    );
+    ));
     let mut t = Table::new(
         "Cluster scaling — VGG-16, FxP-8 approximate, pipeline partition, 8 micro-batches",
         &["engine", "shards", "cyc/inf (M)", "speedup", "mean util", "inf/s", "mm²", "TOPS/W"],
@@ -252,7 +252,7 @@ pub fn cluster_scaling() -> Table {
                 interconnect: InterconnectConfig::default(),
                 strategy: Some(PartitionStrategy::Pipeline),
             });
-            let r = cluster.run_trace(&trace, &policy, 8);
+            let r = cluster.run_ir(&graph, 8);
             let asic = hwcost::cluster_asic(&cfg, shards, 4);
             let clock_hz = asic.freq_ghz * 1e9;
             let speedup = match &base {
@@ -302,9 +302,9 @@ pub fn e2e_table(measured: Option<(f64, f64)>) -> Table {
 pub fn e2e_simulated() -> (f64, f64) {
     let cfg = EngineConfig::pe256();
     let fpga = hwcost::engine_fpga(&cfg);
-    let trace = tinyyolo_trace();
+    let graph = tinyyolo();
     let mut policy = PolicyTable::uniform(
-        trace.compute_layers(),
+        graph.compute_layers(),
         Precision::Fxp8,
         crate::cordic::mac::ExecMode::Approximate,
     );
@@ -313,7 +313,7 @@ pub fn e2e_simulated() -> (f64, f64) {
     let n = policy.len();
     policy.layer_mut(0).mode = crate::cordic::mac::ExecMode::Accurate;
     policy.layer_mut(n - 1).mode = crate::cordic::mac::ExecMode::Accurate;
-    let report = crate::engine::VectorEngine::new(cfg).run_trace(&trace, &policy);
+    let report = crate::engine::VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
     (report.time_ms(fpga.freq_mhz * 1e6), fpga.power_w)
 }
 

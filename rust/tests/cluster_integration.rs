@@ -125,16 +125,10 @@ fn sharded_service_serves_batches_across_two_shards() {
     // every micro-batch is served, both shards participate
     let t = tinyyolo_trace();
     let p = policy(&t);
+    let g = corvet::ir::Graph::from_trace(&t).with_policy(&p);
     let engine = EngineConfig::pe64();
     let icn = InterconnectConfig::default();
-    let plan = corvet::cluster::plan::plan(
-        &t,
-        &p,
-        2,
-        &engine,
-        &icn,
-        PartitionStrategy::Data,
-    );
+    let plan = corvet::cluster::plan::plan(&g, 2, &engine, &icn, PartitionStrategy::Data);
     let mut service = ShardedService::start(&plan, engine, RoutePolicy::RoundRobin);
 
     let mut pending = Vec::new();
@@ -166,10 +160,10 @@ fn least_loaded_service_round_trips_every_batch() {
     // this test asserts end-to-end serving correctness only)
     let t = tinyyolo_trace();
     let p = policy(&t);
+    let g = corvet::ir::Graph::from_trace(&t).with_policy(&p);
     let engine = EngineConfig::pe64();
     let plan = corvet::cluster::plan::plan(
-        &t,
-        &p,
+        &g,
         2,
         &engine,
         &InterconnectConfig::default(),
