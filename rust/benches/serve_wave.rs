@@ -1,0 +1,113 @@
+//! Bench: batched MAC waves and the native wave serving path — end-to-end
+//! throughput vs batch size. Captured results belong in EXPERIMENTS.md
+//! §serve_wave. Needs no artifacts: everything runs through the batched
+//! wave executor.
+//!
+//! Three sections:
+//!
+//! 1. `forward_batch` vs `B ×` single-sample `forward_wave` on the host,
+//!    with the lane occupancy each batch size recovers on the narrow final
+//!    dense layers;
+//! 2. the analytic occupancy-vs-batch table for VGG-16's dense head
+//!    (`ir::exec::graph_batch_occupancy` — the model is far too large to
+//!    execute functionally on the host);
+//! 3. end-to-end `Server` + `WaveBackend` requests/s vs `max_batch`.
+
+use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::coordinator::{BatcherConfig, Server, ServerConfig};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::EngineConfig;
+use corvet::ir::{graph_batch_occupancy, workloads};
+use corvet::model::workloads::paper_mlp;
+use corvet::model::Tensor;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::fnum;
+use corvet::testutil::Xoshiro256;
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Xoshiro256::new(7);
+    let net = paper_mlp(11);
+    let cfg = EngineConfig::pe64();
+    let policy =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    let b = Bencher { warmup: 2, samples: 8, iters_per_sample: 2 };
+
+    // --- 1. batched vs serial single-sample waves
+    println!("batched MAC waves, {} PEs ({}):", cfg.pes, net.name);
+    let mut rep = BenchReport::new();
+    for batch in [1usize, 3, 8, cfg.pes, cfg.pes + 7] {
+        let inputs: Vec<Tensor> =
+            (0..batch).map(|_| Tensor::vector(&rng.uniform_vec(196, -0.9, 0.9))).collect();
+        let (_, stats) = net.forward_batch(&inputs, &policy, &cfg);
+        let final_occ = stats
+            .per_layer
+            .iter()
+            .rev()
+            .find(|l| l.kind == "dense")
+            .map(|l| l.occupancy())
+            .unwrap_or(0.0);
+        let r_serial = b.run(&format!("serial  b{batch}"), || {
+            for x in &inputs {
+                net.forward_wave(x, &policy, &cfg);
+            }
+        });
+        let r_batch = b.run(&format!("batched b{batch}"), || {
+            net.forward_batch(&inputs, &policy, &cfg)
+        });
+        println!(
+            "  B={batch:>3}: serial {:>10} ns, batched {:>10} ns ({}x) | \
+             occupancy mean {} final-dense {}",
+            fnum(r_serial.mean_ns),
+            fnum(r_batch.mean_ns),
+            fnum(r_serial.mean_ns / r_batch.mean_ns),
+            fnum(stats.mean_occupancy()),
+            fnum(final_occ),
+        );
+        rep.push(r_serial);
+        rep.push(r_batch);
+    }
+    print!("{}", rep.render("batched wave forward"));
+
+    // --- 2. analytic occupancy for VGG-16's dense head (256 lanes)
+    let vgg = workloads::vgg16();
+    println!("\nVGG-16 dense-head lane occupancy vs batch (256 PEs, analytic):");
+    println!("  {:>5} {:>8} {:>8} {:>8}", "B", "fc6", "fc7", "fc8");
+    for batch in [1usize, 2, 4, 8, 16, 32] {
+        let occ = graph_batch_occupancy(&vgg, 256, batch);
+        let get = |name: &str| {
+            occ.iter().find(|(n, _)| n == name).map(|(_, o)| *o).unwrap_or(0.0)
+        };
+        println!(
+            "  {batch:>5} {:>8} {:>8} {:>8}",
+            fnum(get("fc6")),
+            fnum(get("fc7")),
+            fnum(get("fc8"))
+        );
+    }
+
+    // --- 3. end-to-end server throughput through the wave backend
+    println!("\nend-to-end Server/WaveBackend (256 requests):");
+    let data_rng = &mut Xoshiro256::new(9);
+    let inputs: Vec<Vec<f64>> =
+        (0..256).map(|_| data_rng.uniform_vec(196, -0.9, 0.9)).collect();
+    for max_batch in [1usize, 8, 32] {
+        let mut config = ServerConfig { precision: Precision::Fxp8, ..Default::default() };
+        config.batcher = BatcherConfig { max_batch, ..Default::default() };
+        let mut server = Server::start_wave(net.clone(), cfg, config)?;
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> =
+            inputs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
+        for rx in pending {
+            rx.recv()?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let snap = server.shutdown()?;
+        println!(
+            "  max_batch={max_batch:>2}: {} req/s, mean latency {} ms, mean batch {}",
+            fnum(256.0 / wall),
+            fnum(snap.latency.mean_ms),
+            fnum(snap.mean_batch)
+        );
+    }
+    Ok(())
+}

@@ -84,11 +84,14 @@ COMMANDS:
   train [--quick] [--out FILE]       train the MLP on synthetic data (FP32)
   sensitivity [--quick] [--budget F] run the accuracy-sensitivity heuristic
   serve [--requests N] [--batch N] [--precision fxp8|fxp16]
-        [--artifacts DIR] [--quick]  e2e serving demo over PJRT artifacts
+        [--backend pjrt|wave] [--pes N]
+        [--artifacts DIR] [--quick]  e2e serving demo: PJRT artifacts or the
+                                     native batched wave backend (no artifacts)
   cluster [--workload tinyyolo|vgg16|vit-mlp] [--shards M] [--pes N]
-          [--strategy pipeline|tensor|data] [--batches B] [--precision P]
-          [--mode approx|accurate] [--sweep] [--csv]
+          [--strategy pipeline|tensor|data] [--batches B] [--batch S]
+          [--precision P] [--mode approx|accurate] [--sweep] [--csv]
                                      sharded multi-engine simulation
+                                     (S samples per micro-batch, packed waves)
   utilization                        multi-AF time-multiplexing report
   info [--artifacts DIR]             platform + artifact inventory
 ";

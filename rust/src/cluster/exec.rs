@@ -15,7 +15,7 @@
 //! [`PrefetchStats`](crate::memory::PrefetchStats).
 
 use super::interconnect::InterconnectConfig;
-use super::plan::{split_even, PartitionPlan, PartitionStrategy};
+use super::plan::{split_even, PartitionPlan, PartitionStrategy, ShardPlan};
 use super::report::{ClusterReport, ShardReport};
 use crate::engine::{EngineConfig, VectorEngine};
 use crate::memory::Prefetcher;
@@ -107,13 +107,11 @@ impl ShardExecutor {
             let mut pf = Prefetcher::new(lat);
             pf.issue(0);
             let at = fill[i] + delay;
-            let start = pf.consume(at, spans[i]);
+            // acquire (not consume): each shard stages its parameters
+            // exactly once, so no refill is issued behind the compute
+            let start = pf.acquire(at);
             delay += start - at;
-            // consume() eagerly re-issues a next fetch, but each shard
-            // stages its parameters exactly once
-            let mut stats = pf.stats();
-            stats.fetches = stats.fetches.min(1);
-            prefetch.push(stats);
+            prefetch.push(pf.stats());
         }
         let makespan = makespan_base + delay;
 
@@ -156,12 +154,57 @@ impl ShardExecutor {
             strategy: plan.strategy,
             shards,
             micro_batches: b,
+            samples_per_batch: 1,
             total_cycles: makespan,
             cycles_per_batch,
             total_macs: plan.total_macs,
             total_ops: plan.total_ops,
             interconnect_cycles: b * comm_per_batch + delay,
         }
+    }
+
+    /// Stream `micro_batches` dispatches of `batch` samples each: every
+    /// shard executes its slice as packed multi-sample waves
+    /// ([`Graph::with_batch`](crate::ir::Graph::with_batch)), so per-batch
+    /// cycles grow sub-linearly in `batch` (weight streams are fetched once
+    /// per dispatch, waves pack `batch ×` more elements). Pipeline boundary
+    /// activations ship as one fused transfer; tensor collectives run
+    /// per-sample (not fused).
+    pub fn run_batched(
+        &self,
+        plan: &PartitionPlan,
+        micro_batches: u64,
+        batch: usize,
+    ) -> ClusterReport {
+        assert!(batch >= 1, "need at least one sample per micro-batch");
+        if batch == 1 {
+            return self.run(plan, micro_batches);
+        }
+        let b = batch as u64;
+        let shards = plan
+            .shards
+            .iter()
+            .map(|sp| ShardPlan {
+                ir: sp.ir.with_batch(batch),
+                comm_cycles: match plan.strategy {
+                    PartitionStrategy::Pipeline => {
+                        self.interconnect.transfer_cycles(sp.boundary_words * b)
+                    }
+                    PartitionStrategy::Tensor => sp.comm_cycles * b,
+                    PartitionStrategy::Data => 0,
+                },
+                ..sp.clone()
+            })
+            .collect();
+        let scaled = PartitionPlan {
+            strategy: plan.strategy,
+            shards,
+            total_macs: plan.total_macs * b,
+            total_ops: plan.total_ops * b,
+        };
+        let mut report = self.run(&scaled, micro_batches);
+        report.samples_per_batch = b;
+        report
     }
 }
 
@@ -263,6 +306,85 @@ mod tests {
         let single = ShardExecutor::new(engine, icn)
             .run(&plan(&g, 1, &engine, &icn, PartitionStrategy::Data), 10);
         assert!(r.total_cycles < single.total_cycles / 2);
+    }
+
+    #[test]
+    fn data_parallel_fewer_batches_than_shards() {
+        // micro_batches < shards: some replicas get zero batches and must
+        // report sane (zeroed) utilisation without breaking the schedule
+        let g = annotated(&tinyyolo());
+        let engine = EngineConfig::pe64();
+        let icn = InterconnectConfig::default();
+        let pl = plan(&g, 4, &engine, &icn, PartitionStrategy::Data);
+        let b = 2u64;
+        let r = ShardExecutor::new(engine, icn).run(&pl, b);
+
+        assert_eq!(r.micro_batches, b);
+        let total: u64 = r.shards.iter().map(|s| s.batches).sum();
+        assert_eq!(total, b, "every micro-batch lands on exactly one replica");
+        assert_eq!(
+            r.shards.iter().filter(|s| s.batches == 0).count(),
+            2,
+            "split_even gives 1,1,0,0"
+        );
+        for s in &r.shards {
+            assert!((0.0..=1.0).contains(&s.utilization), "util {}", s.utilization);
+            assert_eq!(s.busy_cycles, s.batches * s.compute_cycles_per_batch);
+            if s.batches == 0 {
+                assert_eq!(s.busy_cycles, 0);
+                assert_eq!(s.utilization, 0.0, "idle replica has zero utilisation");
+            } else {
+                assert!(s.utilization > 0.0);
+            }
+            assert_eq!(s.prefetch.fetches, 1, "each replica stages weights exactly once");
+        }
+        // data parallelism completes b batches concurrently: div_ceil law
+        assert_eq!(r.cycles_per_batch, r.total_cycles.div_ceil(b));
+        assert!(r.bottleneck_shard() < r.num_shards());
+        assert!(r.mean_utilization() > 0.0 && r.mean_utilization() <= 1.0);
+    }
+
+    #[test]
+    fn single_staging_fetch_without_workaround() {
+        // regression for the deleted `fetches.min(1)` clamp: the executor
+        // acquires each shard's parameters exactly once
+        for strategy in [
+            PartitionStrategy::Pipeline,
+            PartitionStrategy::Tensor,
+            PartitionStrategy::Data,
+        ] {
+            let r = run(strategy, 4, 4);
+            for s in &r.shards {
+                assert_eq!(s.prefetch.fetches, 1, "{strategy:?} shard {}", s.shard);
+            }
+        }
+    }
+
+    #[test]
+    fn batched_dispatches_amortise_per_sample_cost() {
+        let g = annotated(&vgg16());
+        let engine = EngineConfig::pe64();
+        let icn = InterconnectConfig::default();
+        let exec = ShardExecutor::new(engine, icn);
+        let pl = plan(&g, 4, &engine, &icn, PartitionStrategy::Data);
+
+        // 4 dispatches x 8 packed samples vs 32 per-sample dispatches
+        let batched = exec.run_batched(&pl, 4, 8);
+        let serial = exec.run(&pl, 32);
+        assert_eq!(batched.samples_per_batch, 8);
+        // total_macs is per micro-batch: 8 packed samples vs 1
+        assert_eq!(batched.total_macs, serial.total_macs * 8);
+        assert!(
+            batched.total_cycles < serial.total_cycles,
+            "packed waves beat per-sample dispatch: {} vs {}",
+            batched.total_cycles,
+            serial.total_cycles
+        );
+        // batch == 1 degenerates to the per-sample path exactly
+        let one = exec.run_batched(&pl, 4, 1);
+        let base = exec.run(&pl, 4);
+        assert_eq!(one.total_cycles, base.total_cycles);
+        assert_eq!(one.samples_per_batch, 1);
     }
 
     #[test]

@@ -40,6 +40,9 @@ pub struct ClusterReport {
     pub shards: Vec<ShardReport>,
     /// Micro-batches streamed through the cluster.
     pub micro_batches: u64,
+    /// Samples each micro-batch carried (1 = per-sample dispatch; >1 =
+    /// packed multi-sample waves via `ShardExecutor::run_batched`).
+    pub samples_per_batch: u64,
     /// Cluster makespan: cycles from first weight fetch to last result.
     pub total_cycles: u64,
     /// Steady-state cycles between consecutive micro-batch completions —
@@ -70,6 +73,12 @@ impl ClusterReport {
     /// frequency, from the per-batch bottleneck.
     pub fn inferences_per_s(&self, clock_hz: f64) -> f64 {
         clock_hz / self.cycles_per_batch.max(1) as f64
+    }
+
+    /// Steady-state *sample* throughput (samples/s): each micro-batch
+    /// dispatch completes `samples_per_batch` inferences.
+    pub fn samples_per_s(&self, clock_hz: f64) -> f64 {
+        self.samples_per_batch.max(1) as f64 * self.inferences_per_s(clock_hz)
     }
 
     /// Throughput speedup over a (usually single-shard) baseline run of the
@@ -125,6 +134,7 @@ mod tests {
             strategy: PartitionStrategy::Pipeline,
             shards,
             micro_batches: b,
+            samples_per_batch: 1,
             total_cycles: makespan,
             cycles_per_batch: per_batch,
             total_macs: 1000,

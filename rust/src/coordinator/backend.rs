@@ -1,0 +1,212 @@
+//! Serving execution backends: where a dispatched batch actually runs.
+//!
+//! The coordinator's request path (batcher → precision governor →
+//! dispatch) is backend-agnostic: [`ExecBackend`] is the execution seam.
+//! Two implementations ship:
+//!
+//! * [`PjrtBackend`] — the AOT path: compiled HLO artifacts executed
+//!   through the PJRT CPU client (needs `artifacts/` on disk, dense MLPs
+//!   only);
+//! * [`WaveBackend`] — the native path: any [`Network`] executed through
+//!   the batched wave executor ([`WaveExecutor::forward_batch`]),
+//!   bit-identical to the scalar CORDIC reference and needing **no**
+//!   artifacts. The governor's mode switches map directly onto CORDIC
+//!   iteration counts (approximate = 4-cycle MACs, accurate = full budget).
+//!
+//! Backends are constructed *inside* the server worker thread (the PJRT
+//! client is not shareable across threads), so [`super::Server`] takes a
+//! `Send` factory rather than a built backend.
+
+use crate::cordic::mac::ExecMode;
+use crate::engine::EngineConfig;
+use crate::ir::WaveExecutor;
+use crate::model::{Network, Tensor};
+use crate::quant::{PolicyTable, Precision};
+use crate::runtime::{quantize_input, ArtifactRegistry, ModelWeights, PjrtRuntime};
+use anyhow::{ensure, Context, Result};
+use std::path::Path;
+
+/// One batch-execution engine behind the serving loop.
+pub trait ExecBackend {
+    /// Flat input width every request must match.
+    fn input_width(&self) -> usize;
+
+    /// Logit count per request (classes).
+    fn output_width(&self) -> usize;
+
+    /// Execute one batch: `batch` rows of `input_width` values in (-1, 1),
+    /// under the governor-chosen execution mode. Returns row-major
+    /// `batch.len() × output_width` logits.
+    fn execute(&mut self, batch: &[&[f64]], mode: ExecMode) -> Result<Vec<f32>>;
+
+    /// Human-readable descriptor for logs/metrics.
+    fn describe(&self) -> String;
+}
+
+/// The AOT path: compiled HLO artifacts through the PJRT CPU client.
+pub struct PjrtBackend {
+    registry: ArtifactRegistry,
+    rt: PjrtRuntime,
+    precision: Precision,
+    input_width: usize,
+}
+
+impl PjrtBackend {
+    /// Load the artifact registry, pre-compile every batch shape of both
+    /// modes at `precision` (compile happens once, off the steady-state
+    /// path) and deploy the weights.
+    pub fn new(
+        dir: impl AsRef<Path>,
+        weights: &ModelWeights,
+        precision: Precision,
+    ) -> Result<Self> {
+        ensure!(!weights.layers.is_empty(), "empty weight set");
+        let registry = ArtifactRegistry::load(dir.as_ref())?;
+        let mut rt = PjrtRuntime::new()?;
+        for mode in [ExecMode::Approximate, ExecMode::Accurate] {
+            for b in registry.batches() {
+                if let Some(spec) = registry.find(precision, mode, b) {
+                    rt.load(spec)?;
+                }
+            }
+        }
+        rt.deploy_weights(weights)?;
+        Ok(PjrtBackend { registry, rt, precision, input_width: weights.layers[0].inputs })
+    }
+}
+
+impl ExecBackend for PjrtBackend {
+    fn input_width(&self) -> usize {
+        self.input_width
+    }
+
+    fn output_width(&self) -> usize {
+        self.rt.output_width()
+    }
+
+    fn execute(&mut self, batch: &[&[f64]], mode: ExecMode) -> Result<Vec<f32>> {
+        let rows = batch.len();
+        let mut x = Vec::with_capacity(rows * self.input_width);
+        for row in batch {
+            ensure!(
+                row.len() == self.input_width,
+                "input width {} != {}",
+                row.len(),
+                self.input_width
+            );
+            x.extend(quantize_input(row));
+        }
+        self.rt.execute_via(&self.registry, self.precision, mode, &x, rows)
+    }
+
+    fn describe(&self) -> String {
+        format!("pjrt({}, {} artifacts)", self.precision, self.rt.loaded_count())
+    }
+}
+
+/// The native path: batched CORDIC waves over the model itself.
+pub struct WaveBackend {
+    net: Network,
+    exec: WaveExecutor,
+    precision: Precision,
+    input_width: usize,
+    output_width: usize,
+}
+
+impl WaveBackend {
+    /// Wrap a network for native serving on `engine.pes` lanes.
+    pub fn new(net: Network, engine: EngineConfig, precision: Precision) -> Result<Self> {
+        ensure!(!net.layers.is_empty(), "empty network");
+        let input_width = net.input_shape.iter().product();
+        let graph = net.to_ir();
+        let output_width =
+            graph.layers.last().context("network lowered to an empty graph")?.cost.outputs
+                as usize;
+        Ok(WaveBackend {
+            exec: WaveExecutor::new(engine),
+            net,
+            precision,
+            input_width,
+            output_width,
+        })
+    }
+
+    /// The per-layer policy a governor mode programs: uniform at the
+    /// backend precision, mode straight from the governor — the serving
+    /// knob *is* the CORDIC iteration budget.
+    fn policy(&self, mode: ExecMode) -> PolicyTable {
+        PolicyTable::uniform(self.net.compute_layers(), self.precision, mode)
+    }
+}
+
+impl ExecBackend for WaveBackend {
+    fn input_width(&self) -> usize {
+        self.input_width
+    }
+
+    fn output_width(&self) -> usize {
+        self.output_width
+    }
+
+    fn execute(&mut self, batch: &[&[f64]], mode: ExecMode) -> Result<Vec<f32>> {
+        let inputs: Vec<Tensor> = batch
+            .iter()
+            .map(|row| {
+                ensure!(
+                    row.len() == self.input_width,
+                    "input width {} != {}",
+                    row.len(),
+                    self.input_width
+                );
+                Ok(Tensor::from_vec(&self.net.input_shape, row.to_vec()))
+            })
+            .collect::<Result<_>>()?;
+        let (outs, _) = self.exec.forward_batch(&self.net, &inputs, &self.policy(mode));
+        Ok(outs
+            .iter()
+            .flat_map(|t| t.data().iter().map(|&v| v as f32))
+            .collect())
+    }
+
+    fn describe(&self) -> String {
+        format!("wave({}, {} PEs, {})", self.precision, self.exec.config.pes, self.net.name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::workloads::paper_mlp;
+    use crate::testutil::Xoshiro256;
+
+    #[test]
+    fn wave_backend_matches_scalar_reference() {
+        let net = paper_mlp(21);
+        let mut backend =
+            WaveBackend::new(net.clone(), EngineConfig::pe64(), Precision::Fxp8).unwrap();
+        assert_eq!(backend.input_width(), 196);
+        assert_eq!(backend.output_width(), 10);
+
+        let mut rng = Xoshiro256::new(5);
+        let rows: Vec<Vec<f64>> = (0..3).map(|_| rng.uniform_vec(196, -0.9, 0.9)).collect();
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        let logits = backend.execute(&refs, ExecMode::Accurate).unwrap();
+        assert_eq!(logits.len(), 3 * 10);
+
+        let policy =
+            PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+        for (i, row) in rows.iter().enumerate() {
+            let (y, _) = net.forward_cordic(&Tensor::vector(row), &policy);
+            let expect: Vec<f32> = y.data().iter().map(|&v| v as f32).collect();
+            assert_eq!(&logits[i * 10..(i + 1) * 10], &expect[..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn wave_backend_rejects_bad_width() {
+        let mut backend =
+            WaveBackend::new(paper_mlp(1), EngineConfig::pe64(), Precision::Fxp8).unwrap();
+        let short = vec![0.0f64; 10];
+        assert!(backend.execute(&[&short], ExecMode::Accurate).is_err());
+    }
+}

@@ -42,8 +42,15 @@ impl<T> DynamicBatcher<T> {
     }
 
     /// Enqueue a request at time `now`.
+    ///
+    /// Arrival times are caller-stamped and channel delivery can reorder
+    /// them, so the queue is kept sorted by arrival: `queue.first()` is
+    /// genuinely the oldest request and a reordered push can never extend
+    /// its deadline. Equal timestamps keep push order (stable insert), and
+    /// in-order arrivals append in O(1).
     pub fn push(&mut self, item: T, now: Instant) {
-        self.queue.push(Pending { item, arrived: now });
+        let at = self.queue.iter().rposition(|p| p.arrived <= now).map_or(0, |i| i + 1);
+        self.queue.insert(at, Pending { item, arrived: now });
     }
 
     /// Queue depth.
@@ -157,6 +164,24 @@ mod tests {
         let d = b.time_to_deadline(t0 + Duration::from_millis(4)).unwrap();
         assert!(d <= Duration::from_millis(6));
         assert!(b.time_to_deadline(t0 + Duration::from_millis(60)).unwrap().is_zero());
+    }
+
+    #[test]
+    fn out_of_order_push_cannot_extend_oldest_deadline() {
+        // regression: ready()/time_to_deadline() trusted queue.first(), so a
+        // push whose caller-stamped Instant was older than the head (channel
+        // reordering) silently extended the oldest request's deadline
+        let mut b = DynamicBatcher::new(cfg(8, 10));
+        let t0 = Instant::now();
+        b.push("late", t0 + Duration::from_millis(6));
+        b.push("early", t0); // delivered after, but stamped before
+        assert!(
+            b.ready(t0 + Duration::from_millis(10)),
+            "the t0 request hit its deadline regardless of delivery order"
+        );
+        let d = b.time_to_deadline(t0 + Duration::from_millis(3)).unwrap();
+        assert!(d <= Duration::from_millis(7), "deadline measured from t0, got {d:?}");
+        assert_eq!(b.take_batch(), vec!["early", "late"], "drained in arrival order");
     }
 
     #[test]

@@ -11,10 +11,14 @@
 //!   overhead — the software analogue of the engine's vectorised,
 //!   time-multiplexed execution;
 //! * [`PrecisionGovernor`] — the runtime accuracy–latency knob: switches
-//!   between approximate and accurate artifacts from queue pressure,
+//!   between approximate and accurate execution from queue pressure,
 //!   exactly the paper's "dynamic reconfiguration between approximate and
 //!   accurate modes";
-//! * [`Server`] — worker thread owning the PJRT runtime, request channel,
+//! * [`ExecBackend`] — the execution seam: [`PjrtBackend`] runs compiled
+//!   HLO artifacts over PJRT, [`WaveBackend`] runs any network natively as
+//!   batched CORDIC waves (bit-exact, no artifacts needed), with the
+//!   governor's mode mapping straight onto CORDIC iteration counts;
+//! * [`Server`] — worker thread owning one backend, request channel,
 //!   response plumbing, metrics;
 //! * [`ShardRouter`] / [`ShardedService`] — the cluster-serving layer:
 //!   spread micro-batches across M simulated engine shards
@@ -22,12 +26,14 @@
 //!
 //! No tokio in the vendored environment: std threads + mpsc channels.
 
+mod backend;
 mod batcher;
 mod metrics;
 mod policy;
 mod router;
 mod server;
 
+pub use backend::{ExecBackend, PjrtBackend, WaveBackend};
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use policy::{GovernorConfig, PrecisionGovernor};

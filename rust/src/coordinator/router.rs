@@ -13,6 +13,7 @@
 
 use crate::cluster::PartitionPlan;
 use crate::engine::{EngineConfig, VectorEngine};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
@@ -143,12 +144,17 @@ impl ShardedService {
             let handle = std::thread::Builder::new()
                 .name(format!("corvet-shard-{shard}"))
                 .spawn(move || {
-                    // the per-inference cycle cost of this shard's slice is
-                    // deterministic: simulate once, then price each batch
-                    let report = VectorEngine::new(engine).run_ir(&graph);
+                    // a micro-batch of B requests executes as packed
+                    // multi-sample waves (Graph::with_batch), so its cycle
+                    // cost is deterministic per batch size but sub-linear
+                    // in B: simulate each size once and cache
+                    let mut cycles_by_batch: HashMap<usize, u64> = HashMap::new();
                     let mut served = 0u64;
                     while let Ok(job) = rx.recv() {
-                        let sim_cycles = report.total_cycles * job.requests.max(1) as u64;
+                        let b = job.requests.max(1);
+                        let sim_cycles = *cycles_by_batch.entry(b).or_insert_with(|| {
+                            VectorEngine::new(engine).run_ir_batch(&graph, b).total_cycles
+                        });
                         served += 1;
                         job.respond
                             .send(ShardedResponse {
@@ -230,5 +236,37 @@ mod tests {
     #[should_panic(expected = "at least one shard")]
     fn zero_shards_rejected() {
         ShardRouter::new(0, RoutePolicy::RoundRobin);
+    }
+
+    #[test]
+    fn batched_micro_batches_price_sublinearly() {
+        use crate::cluster::plan::{plan, PartitionStrategy};
+        use crate::cordic::mac::ExecMode;
+        use crate::model::workloads::paper_mlp;
+        use crate::quant::{PolicyTable, Precision};
+
+        let net = paper_mlp(3);
+        let graph = net.to_ir().with_policy(&PolicyTable::uniform(
+            net.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        ));
+        let engine = EngineConfig::pe64();
+        let icn = crate::cluster::InterconnectConfig::default();
+        let pl = plan(&graph, 2, &engine, &icn, PartitionStrategy::Data);
+        let mut svc = ShardedService::start(&pl, engine, RoutePolicy::RoundRobin);
+
+        let (_, rx1) = svc.submit(1);
+        let c1 = rx1.recv().unwrap().sim_cycles;
+        let (_, rx8) = svc.submit(8);
+        let c8 = rx8.recv().unwrap().sim_cycles;
+        svc.shutdown();
+
+        assert!(c8 > c1, "more samples cost more cycles ({c8} vs {c1})");
+        assert!(
+            c8 < 8 * c1,
+            "packed waves amortise the per-dispatch cost: b8 {c8} vs 8 x b1 {}",
+            8 * c1
+        );
     }
 }

@@ -1,17 +1,22 @@
 //! The serving loop: request channel → dynamic batcher → precision
-//! governor → PJRT execute → responses.
+//! governor → [`ExecBackend`] execute → responses.
 //!
-//! One worker thread owns the [`PjrtRuntime`] (PJRT clients are not
-//! shareable across threads in the vendored crate, and a single CPU client
-//! saturates the host anyway); clients talk to it through an mpsc channel
-//! and get responses on per-request channels.
+//! One worker thread owns the backend (the PJRT client is not shareable
+//! across threads in the vendored crate, and a single CPU client saturates
+//! the host anyway — the wave backend simply inherits the same layout);
+//! clients talk to it through an mpsc channel and get responses on
+//! per-request channels. Backends are therefore constructed *inside* the
+//! worker from a `Send` factory.
 
+use super::backend::{ExecBackend, PjrtBackend, WaveBackend};
 use super::batcher::{BatcherConfig, DynamicBatcher};
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::policy::{GovernorConfig, PrecisionGovernor};
 use crate::cordic::mac::ExecMode;
+use crate::engine::EngineConfig;
+use crate::model::Network;
 use crate::quant::Precision;
-use crate::runtime::{ArtifactRegistry, ModelWeights, PjrtRuntime};
+use crate::runtime::ModelWeights;
 use anyhow::{Context, Result};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -46,7 +51,7 @@ pub struct InferenceResponse {
 /// Server configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
-    /// Operand precision of the deployed artifacts.
+    /// Operand precision the backend serves at.
     pub precision: Precision,
     /// Batching policy.
     pub batcher: BatcherConfig,
@@ -73,41 +78,88 @@ enum Control {
 /// Handle to a running server.
 pub struct Server {
     tx: mpsc::Sender<Control>,
-    worker: Option<JoinHandle<Result<()>>>,
+    worker: Option<JoinHandle<Result<MetricsSnapshot>>>,
+    backend_descriptor: String,
     next_id: u64,
 }
 
 impl Server {
-    /// Start the worker: loads artifacts for both modes of the configured
-    /// precision, deploys the weights, then serves until shutdown.
+    /// Start a worker over any backend. The factory runs *inside* the
+    /// worker thread (backends need not be `Send`); `start` blocks until it
+    /// returns, so request latency reflects the steady state, not cold
+    /// compilation.
+    pub fn start_with_backend(
+        make: impl FnOnce() -> Result<Box<dyn ExecBackend>> + Send + 'static,
+        config: ServerConfig,
+    ) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Control>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<String>>();
+        let worker = std::thread::Builder::new()
+            .name("corvet-server".to_string())
+            .spawn(move || {
+                let backend = match make() {
+                    Ok(b) => {
+                        ready_tx.send(Ok(b.describe())).ok();
+                        b
+                    }
+                    Err(e) => {
+                        ready_tx.send(Err(anyhow::anyhow!("{e:#}"))).ok();
+                        return Err(e);
+                    }
+                };
+                serve_loop(backend, config, rx)
+            })
+            .context("spawning server thread")?;
+        match ready_rx.recv() {
+            Ok(Ok(descriptor)) => Ok(Server {
+                tx,
+                worker: Some(worker),
+                backend_descriptor: descriptor,
+                next_id: 0,
+            }),
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                Err(e)
+            }
+            Err(_) => match worker.join() {
+                Ok(Err(e)) => Err(e.context("server died during startup")),
+                _ => Err(anyhow::anyhow!("server died during startup")),
+            },
+        }
+    }
+
+    /// Descriptor of the backend serving this server (for logs/CLI).
+    pub fn backend_descriptor(&self) -> &str {
+        &self.backend_descriptor
+    }
+
+    /// Start over the PJRT backend: loads artifacts for both modes of the
+    /// configured precision and deploys the weights.
     pub fn start(
         artifacts_dir: impl Into<std::path::PathBuf>,
         weights: ModelWeights,
         config: ServerConfig,
     ) -> Result<Self> {
         let dir = artifacts_dir.into();
-        let (tx, rx) = mpsc::channel::<Control>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let worker = std::thread::Builder::new()
-            .name("corvet-server".to_string())
-            .spawn(move || serve_loop(dir, weights, config, rx, ready_tx))
-            .context("spawning server thread")?;
-        // block until artifacts are compiled and weights deployed, so
-        // request latency reflects the steady state, not cold compilation
-        match ready_rx.recv() {
-            Ok(Ok(())) => Ok(Server { tx, worker: Some(worker), next_id: 0 }),
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                Err(e)
-            }
-            Err(_) => {
-                let join = worker.join();
-                match join {
-                    Ok(Err(e)) => Err(e.context("server died during startup")),
-                    _ => Err(anyhow::anyhow!("server died during startup")),
-                }
-            }
-        }
+        Self::start_with_backend(
+            move || {
+                let b = PjrtBackend::new(&dir, &weights, config.precision)?;
+                Ok(Box::new(b) as Box<dyn ExecBackend>)
+            },
+            config,
+        )
+    }
+
+    /// Start over the native wave backend: any [`Network`], executed as
+    /// batched CORDIC waves on `engine.pes` lanes — no artifacts needed.
+    pub fn start_wave(net: Network, engine: EngineConfig, config: ServerConfig) -> Result<Self> {
+        Self::start_with_backend(
+            move || {
+                let b = WaveBackend::new(net, engine, config.precision)?;
+                Ok(Box::new(b) as Box<dyn ExecBackend>)
+            },
+            config,
+        )
     }
 
     /// Submit a request; returns the receiver for its response.
@@ -128,14 +180,13 @@ impl Server {
         rx.recv().context("server dropped snapshot request")
     }
 
-    /// Graceful shutdown (drains the queue first).
+    /// Graceful shutdown: drains the queue, then returns the worker's
+    /// **post-drain** snapshot — requests served during the drain are
+    /// counted (snapshotting before the drain used to drop them).
     pub fn shutdown(mut self) -> Result<MetricsSnapshot> {
-        let snap = self.metrics()?;
         self.tx.send(Control::Shutdown).ok();
-        if let Some(h) = self.worker.take() {
-            h.join().map_err(|_| anyhow::anyhow!("server thread panicked"))??;
-        }
-        Ok(snap)
+        let worker = self.worker.take().expect("worker present until shutdown/drop");
+        worker.join().map_err(|_| anyhow::anyhow!("server thread panicked"))?
     }
 }
 
@@ -154,39 +205,10 @@ struct QueuedReq {
 }
 
 fn serve_loop(
-    dir: std::path::PathBuf,
-    weights: ModelWeights,
+    mut backend: Box<dyn ExecBackend>,
     config: ServerConfig,
     rx: mpsc::Receiver<Control>,
-    ready: mpsc::Sender<Result<()>>,
-) -> Result<()> {
-    // pre-compile every batch shape of both modes (compile happens once,
-    // off the steady-state path), then signal readiness
-    let setup = (|| -> Result<(ArtifactRegistry, PjrtRuntime)> {
-        let registry = ArtifactRegistry::load(&dir)?;
-        let mut rt = PjrtRuntime::new()?;
-        for mode in [ExecMode::Approximate, ExecMode::Accurate] {
-            for b in registry.batches() {
-                if let Some(spec) = registry.find(config.precision, mode, b) {
-                    rt.load(spec)?;
-                }
-            }
-        }
-        rt.deploy_weights(&weights)?;
-        Ok((registry, rt))
-    })();
-    let (registry, mut rt) = match setup {
-        Ok(v) => {
-            ready.send(Ok(())).ok();
-            v
-        }
-        Err(e) => {
-            ready.send(Err(anyhow::anyhow!("{e:#}"))).ok();
-            return Err(e);
-        }
-    };
-    let input_width = weights.layers[0].inputs;
-
+) -> Result<MetricsSnapshot> {
     let mut batcher: DynamicBatcher<QueuedReq> = DynamicBatcher::new(config.batcher);
     let mut governor = PrecisionGovernor::new(config.governor);
     let mut metrics = Metrics::new();
@@ -250,7 +272,7 @@ fn serve_loop(
         }
 
         if shutting_down && batcher.is_empty() {
-            return Ok(());
+            return Ok(metrics.snapshot());
         }
 
         let now = Instant::now();
@@ -261,27 +283,35 @@ fn serve_loop(
         // dispatch one batch
         let mode = governor.observe(batcher.len());
         let batch = batcher.take_batch();
+
+        // drop malformed requests here, with their id — the response
+        // channel closes, surfacing the failure to that caller alone, and
+        // one bad request cannot kill the dispatch or the worker (backends
+        // still assert width as their own API contract)
+        let width = backend.input_width();
+        let batch: Vec<QueuedReq> = batch
+            .into_iter()
+            .filter(|q| {
+                let ok = q.req.input.len() == width;
+                if !ok {
+                    eprintln!(
+                        "corvet-server: dropping request {}: input width {} != {}",
+                        q.req.id,
+                        q.req.input.len(),
+                        width
+                    );
+                }
+                ok
+            })
+            .collect();
         if batch.is_empty() {
             continue;
         }
         metrics.record_batch(batch.len());
 
-        // pack inputs
-        let rows = batch.len();
-        let mut x = Vec::with_capacity(rows * input_width);
-        for q in &batch {
-            anyhow::ensure!(
-                q.req.input.len() == input_width,
-                "request {} input width {} != {}",
-                q.req.id,
-                q.req.input.len(),
-                input_width
-            );
-            x.extend(crate::runtime::quantize_input(&q.req.input));
-        }
-
-        let logits = rt.execute_via(&registry, config.precision, mode, &x, rows)?;
-        let classes = rt.output_width();
+        let rows: Vec<&[f64]> = batch.iter().map(|q| q.req.input.as_slice()).collect();
+        let logits = backend.execute(&rows, mode)?;
+        let classes = backend.output_width();
         let done = Instant::now();
         for (i, q) in batch.into_iter().enumerate() {
             let l = logits[i * classes..(i + 1) * classes].to_vec();

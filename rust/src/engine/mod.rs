@@ -99,6 +99,19 @@ impl VectorEngine {
         sim::run(self.config, graph)
     }
 
+    /// Simulate one dispatch of `batch` samples executed as packed
+    /// multi-sample waves ([`Graph::with_batch`]): MAC/AF/pool work scales
+    /// with the batch, the per-layer weight stream is fetched once — so
+    /// cycles grow sub-linearly in `batch`. `batch == 1` is exactly
+    /// [`Self::run_ir`].
+    pub fn run_ir_batch(&self, graph: &Graph, batch: usize) -> EngineReport {
+        if batch <= 1 {
+            self.run_ir(graph)
+        } else {
+            sim::run(self.config, &graph.with_batch(batch))
+        }
+    }
+
     /// Compatibility shim for trace-based callers: lift the trace into the
     /// IR, fold the policy table in as annotations, and simulate.
     /// `policy.len()` must equal `trace.compute_layers()`.

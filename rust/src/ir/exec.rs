@@ -24,6 +24,15 @@
 //! On the host the wave layout is also measurably faster than the scalar
 //! loop (no per-MAC `Fxp` wrapping, additive index arithmetic, one weight
 //! fetch per wave): `benches/forward_wave.rs` reports the speedup.
+//!
+//! [`WaveExecutor::forward_batch`] extends the same structure with a
+//! **batch dimension**: the `B × outputs` elements of each layer are
+//! flattened into one lane stream, so a layer whose output count is
+//! smaller than the PE array (the under-occupancy case of §III-B) still
+//! fills `min(pes, B·outputs)` lanes per issue chunk. Per-sample outputs
+//! stay bit-identical to the scalar path — lanes are independent, and each
+//! keeps the scalar operand order — while [`BatchRunStats`] reports the
+//! occupancy the batching recovered.
 
 use crate::activation::funcs::AfCost;
 use crate::activation::MultiAfBlock;
@@ -31,6 +40,7 @@ use crate::cordic::mac::{to_guard_raw, MacConfig};
 use crate::cordic::{from_guard, linear};
 use crate::engine::{mac_wave_cycles, mac_waves, EngineConfig};
 use crate::fxp::Fxp;
+use crate::ir::Graph;
 use crate::model::network::{af_iters, pool_cordic, softmax_cordic, LayerStats};
 use crate::model::{Conv2dParams, DenseParams, Layer, Network, Tensor};
 use crate::pooling::PoolCost;
@@ -106,6 +116,124 @@ impl WaveRunStats {
     }
 }
 
+/// Per-layer statistics from a batched (multi-sample) wave forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct BatchLayerStats {
+    /// Layer kind.
+    pub kind: &'static str,
+    /// MAC operations across the whole batch.
+    pub macs: u64,
+    /// MAC waves under the engine's wave law (`mac_waves(macs, pes)`).
+    pub waves: u64,
+    /// MAC-phase cycles under the engine's wave law, for the whole batch.
+    pub mac_cycles: u64,
+    /// Output elements scheduled on the lanes (`B × outputs`; 0 for
+    /// non-MAC layers, which bypass the PE array).
+    pub elements: u64,
+    /// PE-wide issue chunks the elements were packed into
+    /// (`ceil(elements / pes)`).
+    pub chunks: u64,
+    /// Lane slots those chunks offered (`chunks × pes`).
+    pub lane_slots: u64,
+    /// Activation datapath cost across the batch.
+    pub af_cost: AfCost,
+    /// Pooling datapath cost across the batch.
+    pub pool_cost: PoolCost,
+    /// Output element count **per sample**.
+    pub outputs: usize,
+}
+
+impl BatchLayerStats {
+    /// Fraction of offered lane slots that carried an output element —
+    /// the under-occupancy batching recovers (1.0 = every lane busy in
+    /// every chunk). 0.0 for layers that bypass the PE array.
+    pub fn occupancy(&self) -> f64 {
+        if self.lane_slots == 0 {
+            0.0
+        } else {
+            self.elements as f64 / self.lane_slots as f64
+        }
+    }
+
+    /// Fold one sample's scalar-path layer stats into the batch aggregate
+    /// (pooling / softmax layers run per sample on their own datapaths).
+    fn merge_scalar(&mut self, st: &LayerStats) {
+        self.kind = st.kind;
+        self.af_cost = self.af_cost.merge(st.af_cost);
+        self.pool_cost = self.pool_cost.merge(st.pool_cost);
+        self.outputs = st.outputs;
+    }
+}
+
+/// Aggregate statistics from a batched wave forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct BatchRunStats {
+    /// PE lanes the waves were scheduled over.
+    pub pes: usize,
+    /// Samples packed per wave stream.
+    pub batch: usize,
+    /// Per-layer breakdown.
+    pub per_layer: Vec<BatchLayerStats>,
+}
+
+impl BatchRunStats {
+    /// Total MAC operations across the batch.
+    pub fn total_macs(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.macs).sum()
+    }
+
+    /// Total MAC waves.
+    pub fn total_waves(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.waves).sum()
+    }
+
+    /// Total MAC-phase cycles (wave law, whole batch).
+    pub fn total_mac_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.mac_cycles).sum()
+    }
+
+    /// Total activation cycles across the batch.
+    pub fn total_af_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.af_cost.total() as u64).sum()
+    }
+
+    /// Total pooling cycles across the batch.
+    pub fn total_pool_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.pool_cost.total() as u64).sum()
+    }
+
+    /// Lane occupancy over every MAC issue chunk of the run (weighted by
+    /// offered lane slots).
+    pub fn mean_occupancy(&self) -> f64 {
+        let slots: u64 = self.per_layer.iter().map(|l| l.lane_slots).sum();
+        if slots == 0 {
+            return 0.0;
+        }
+        let elements: u64 = self.per_layer.iter().map(|l| l.elements).sum();
+        elements as f64 / slots as f64
+    }
+}
+
+/// The analytic lane-occupancy law of the batched executor over an IR
+/// graph: per compute layer, `batch × outputs` elements pack into
+/// `ceil(·/pes)` PE-wide chunks. No functional execution — usable on
+/// workloads far too large to run on the host (the VGG-16 occupancy table
+/// in EXPERIMENTS.md), and exactly what [`BatchLayerStats::occupancy`]
+/// reports when the layer *is* executed.
+pub fn graph_batch_occupancy(graph: &Graph, pes: usize, batch: usize) -> Vec<(String, f64)> {
+    assert!(pes > 0 && batch > 0, "need at least one lane and one sample");
+    graph
+        .layers
+        .iter()
+        .filter(|l| l.is_compute())
+        .map(|l| {
+            let elements = l.cost.outputs * batch as u64;
+            let chunks = elements.div_ceil(pes as u64).max(1);
+            (l.name.clone(), elements as f64 / (chunks * pes as u64) as f64)
+        })
+        .collect()
+}
+
 /// Executes a [`Network`] in PE-array-wide MAC waves.
 #[derive(Debug, Clone, Copy)]
 pub struct WaveExecutor {
@@ -173,6 +301,84 @@ impl WaveExecutor {
             }
         }
         (x, stats)
+    }
+
+    /// Bit-accurate **batched** forward pass: the `B × outputs` elements of
+    /// each compute layer are flattened into one lane stream, so every
+    /// issue chunk fills `min(pes, B·outputs)` lanes — layers narrower than
+    /// the PE array no longer leave lanes idle. Per-sample outputs are
+    /// bit-identical to [`Network::forward_cordic`] (each lane keeps the
+    /// scalar operand order: bias first, then operands in scalar order);
+    /// MAC cycles come from the shared engine wave law over the whole
+    /// batch. Pooling / softmax layers run per sample (they bypass the PE
+    /// array), with costs summed.
+    pub fn forward_batch(
+        &self,
+        net: &Network,
+        inputs: &[Tensor],
+        policy: &PolicyTable,
+    ) -> (Vec<Tensor>, BatchRunStats) {
+        assert!(!inputs.is_empty(), "forward_batch needs at least one sample");
+        for x in inputs {
+            assert_eq!(x.shape(), &net.input_shape[..], "input shape mismatch");
+        }
+        assert_eq!(policy.len(), net.compute_layers(), "policy/compute-layer mismatch");
+        let pes = self.config.pes;
+        let mut xs: Vec<Tensor> = inputs.to_vec();
+        let mut stats = BatchRunStats { pes, batch: inputs.len(), ..Default::default() };
+        let mut pidx = 0usize;
+        let mut current: LayerPolicy = if policy.is_empty() {
+            LayerPolicy {
+                layer: 0,
+                precision: Precision::Fxp16,
+                mode: crate::cordic::mac::ExecMode::Accurate,
+            }
+        } else {
+            policy.layer(0)
+        };
+        for layer in &net.layers {
+            match layer {
+                Layer::Dense(d) => {
+                    current = policy.layer(pidx);
+                    pidx += 1;
+                    let (ys, st) = batch_dense(d, &xs, current, pes);
+                    xs = ys;
+                    stats.per_layer.push(st);
+                }
+                Layer::Conv2d(c) => {
+                    current = policy.layer(pidx);
+                    pidx += 1;
+                    let (ys, st) = batch_conv(c, &xs, current, pes);
+                    xs = ys;
+                    stats.per_layer.push(st);
+                }
+                Layer::Pool2d(p) => {
+                    let mut agg = BatchLayerStats::default();
+                    for x in xs.iter_mut() {
+                        let (y, st) = pool_cordic(p, x, af_iters(current.mode));
+                        *x = y;
+                        agg.merge_scalar(&st);
+                    }
+                    stats.per_layer.push(agg);
+                }
+                Layer::Flatten => {
+                    for x in xs.iter_mut() {
+                        let n = x.len();
+                        *x = std::mem::replace(x, Tensor::zeros(&[0])).reshape(&[n]);
+                    }
+                }
+                Layer::Softmax => {
+                    let mut agg = BatchLayerStats::default();
+                    for x in xs.iter_mut() {
+                        let (y, st) = softmax_cordic(x, af_iters(current.mode));
+                        *x = y;
+                        agg.merge_scalar(&st);
+                    }
+                    stats.per_layer.push(agg);
+                }
+            }
+        }
+        (xs, stats)
     }
 }
 
@@ -298,6 +504,180 @@ fn wave_conv(
         mac_cycles: mac_wave_cycles(macs, pes, cfg.cycles_per_mac()),
         af_cost,
         outputs: c.out_ch * positions,
+        ..Default::default()
+    };
+    (out, stats)
+}
+
+// ---- batched (multi-sample) wave kernels -----------------------------------
+//
+// The batch dimension is flattened into the lane stream: chunk `l`'s lanes
+// cover consecutive global elements `e = sample · per_sample + local`, so a
+// chunk can straddle samples and a layer narrower than the PE array still
+// fills `min(pes, B · outputs)` lanes. Each lane runs the scalar path's
+// exact guard-word MAC sequence for its element, so per-sample outputs are
+// bit-identical to `forward_cordic` regardless of how elements are packed.
+//
+// These deliberately do NOT replace `wave_dense`/`wave_conv`: the
+// single-sample kernels broadcast one operand word per wave with additive
+// index arithmetic (the fig11/sensitivity hot path), while the batched
+// kernels pay per-lane indirection (`sample[l]`, `neuron[l]`/`och[l]`) to
+// straddle samples. The pairing is held in lockstep by
+// `tests/ir_parity.rs::prop_forward_batch_bit_identical_per_sample`, which
+// asserts batch == wave == scalar across random nets/policies/lane counts.
+
+fn batch_dense(
+    d: &DenseParams,
+    xs: &[Tensor],
+    policy: LayerPolicy,
+    pes: usize,
+) -> (Vec<Tensor>, BatchLayerStats) {
+    let bsz = xs.len();
+    let cfg = MacConfig::new(policy.precision, policy.mode);
+    let iters = cfg.iterations();
+    let mut af = MultiAfBlock::new(af_iters(policy.mode));
+    let wg = quantize_bank(&d.weights, policy);
+    let bg = quantize_bank(&d.biases, policy);
+    let xg: Vec<Vec<i64>> = xs
+        .iter()
+        .map(|x| {
+            assert_eq!(x.len(), d.inputs, "dense input width mismatch");
+            quantize_bank(x.data(), policy)
+        })
+        .collect();
+
+    let elements = bsz * d.outputs;
+    let mut out = vec![Vec::with_capacity(d.outputs); bsz];
+    let mut af_cost = AfCost::default();
+    let mut acc = vec![0i64; pes];
+    let mut sample = vec![0usize; pes];
+    let mut neuron = vec![0usize; pes];
+    let mut chunks = 0u64;
+    let mut e0 = 0usize;
+    while e0 < elements {
+        let lanes = pes.min(elements - e0);
+        chunks += 1;
+        for l in 0..lanes {
+            let e = e0 + l;
+            sample[l] = e / d.outputs;
+            neuron[l] = e % d.outputs;
+            acc[l] = bg[neuron[l]];
+        }
+        // one wave per input index: lane l reads its own sample's
+        // activation word and its own neuron's weight row
+        for i in 0..d.inputs {
+            for l in 0..lanes {
+                let wv = wg[neuron[l] * d.inputs + i];
+                acc[l] = linear::mac(acc[l], xg[sample[l]][i], wv, iters).value;
+            }
+        }
+        // elements are sample-major, so pushes land in scalar output order
+        for l in 0..lanes {
+            let (y, c) = af.apply_raw(d.act, acc[l]);
+            af_cost = af_cost.merge(c);
+            out[sample[l]].push(from_guard(y));
+        }
+        e0 += lanes;
+    }
+
+    let macs = (elements * d.inputs) as u64;
+    let stats = BatchLayerStats {
+        kind: "dense",
+        macs,
+        waves: mac_waves(macs, pes),
+        mac_cycles: mac_wave_cycles(macs, pes, cfg.cycles_per_mac()),
+        elements: elements as u64,
+        chunks,
+        lane_slots: chunks * pes as u64,
+        af_cost,
+        outputs: d.outputs,
+        ..Default::default()
+    };
+    (out.iter().map(|o| Tensor::vector(o)).collect(), stats)
+}
+
+fn batch_conv(
+    c: &Conv2dParams,
+    xs: &[Tensor],
+    policy: LayerPolicy,
+    pes: usize,
+) -> (Vec<Tensor>, BatchLayerStats) {
+    let bsz = xs.len();
+    let (in_ch, h, w) = (xs[0].shape()[0], xs[0].shape()[1], xs[0].shape()[2]);
+    assert_eq!(in_ch, c.in_ch, "conv input channels mismatch");
+    let cfg = MacConfig::new(policy.precision, policy.mode);
+    let iters = cfg.iterations();
+    let mut af = MultiAfBlock::new(af_iters(policy.mode));
+    let (oh, ow) = (c.out_dim(h), c.out_dim(w));
+    let positions = oh * ow;
+    let per_sample = c.out_ch * positions;
+    let wg = quantize_bank(&c.weights, policy);
+    let bg = quantize_bank(&c.biases, policy);
+    let xg: Vec<Vec<i64>> = xs
+        .iter()
+        .map(|x| {
+            assert_eq!(x.shape(), xs[0].shape(), "batch samples must share a shape");
+            quantize_bank(x.data(), policy)
+        })
+        .collect();
+
+    let elements = bsz * per_sample;
+    let mut out = vec![Tensor::zeros(&[c.out_ch, oh, ow]); bsz];
+    let mut af_cost = AfCost::default();
+    let mut acc = vec![0i64; pes];
+    let mut sample = vec![0usize; pes];
+    let mut och = vec![0usize; pes];
+    let mut ridx = vec![0usize; pes]; // o * positions + p: the flat output index
+    let mut base = vec![0usize; pes];
+    let mut chunks = 0u64;
+    let mut e0 = 0usize;
+    while e0 < elements {
+        let lanes = pes.min(elements - e0);
+        chunks += 1;
+        for l in 0..lanes {
+            let e = e0 + l;
+            sample[l] = e / per_sample;
+            let r = e % per_sample;
+            let p = r % positions;
+            och[l] = r / positions;
+            ridx[l] = r;
+            base[l] = (p / ow) * c.stride * w + (p % ow) * c.stride;
+            acc[l] = bg[och[l]];
+        }
+        // one wave per kernel tap: lane l gathers its own sample's input
+        // window word against its own output channel's kernel word
+        for i in 0..c.in_ch {
+            for ky in 0..c.kernel {
+                let row = i * h * w + ky * w;
+                for kx in 0..c.kernel {
+                    let off = row + kx;
+                    for l in 0..lanes {
+                        let wv = wg[c.widx(och[l], i, ky, kx)];
+                        acc[l] =
+                            linear::mac(acc[l], xg[sample[l]][off + base[l]], wv, iters).value;
+                    }
+                }
+            }
+        }
+        for l in 0..lanes {
+            let (y, cst) = af.apply_raw(c.act, acc[l]);
+            af_cost = af_cost.merge(cst);
+            out[sample[l]].data_mut()[ridx[l]] = from_guard(y);
+        }
+        e0 += lanes;
+    }
+
+    let macs = (elements * c.in_ch * c.kernel * c.kernel) as u64;
+    let stats = BatchLayerStats {
+        kind: "conv2d",
+        macs,
+        waves: mac_waves(macs, pes),
+        mac_cycles: mac_wave_cycles(macs, pes, cfg.cycles_per_mac()),
+        elements: elements as u64,
+        chunks,
+        lane_slots: chunks * pes as u64,
+        af_cost,
+        outputs: per_sample,
         ..Default::default()
     };
     (out, stats)

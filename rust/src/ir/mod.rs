@@ -39,7 +39,10 @@ pub mod workloads;
 #[cfg(test)]
 mod tests;
 
-pub use exec::{WaveExecutor, WaveLayerStats, WaveRunStats};
+pub use exec::{
+    graph_batch_occupancy, BatchLayerStats, BatchRunStats, WaveExecutor, WaveLayerStats,
+    WaveRunStats,
+};
 
 use crate::activation::ActFn;
 use crate::cordic::mac::{ExecMode, MacConfig};
@@ -406,6 +409,29 @@ impl Graph {
     /// True when every compute layer carries an explicit annotation.
     pub fn is_annotated(&self) -> bool {
         self.layers.iter().filter(|l| l.is_compute()).all(|l| l.policy.is_some())
+    }
+
+    /// Cost-scaled copy modelling one dispatch of `batch` samples executed
+    /// as packed multi-sample waves: MAC / AF / pooling / output work
+    /// multiplies by `batch`, but **parameters do not** — one weight stream
+    /// serves every sample in the wave, which is exactly the batching
+    /// amortisation the engine's vectorised execution buys (paper §III-B).
+    /// Op parameters and annotations are untouched, so shape-dependent
+    /// consumers still see the per-sample layer.
+    pub fn with_batch(&self, batch: usize) -> Graph {
+        assert!(batch >= 1, "batch must be at least 1");
+        let b = batch as u64;
+        let mut g = self.clone();
+        if batch > 1 {
+            g.name = format!("{}xb{batch}", self.name);
+        }
+        for l in g.layers.iter_mut() {
+            l.cost.macs *= b;
+            l.cost.af_ops *= b;
+            l.cost.pool_windows *= b;
+            l.cost.outputs *= b;
+        }
+        g
     }
 
     /// Contiguous sub-graph over `layers[range.0..range.1]` (annotations

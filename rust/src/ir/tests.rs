@@ -121,6 +121,29 @@ fn slices_carry_annotations_and_cover_costs() {
 }
 
 #[test]
+fn with_batch_scales_work_not_parameters() {
+    let g = workloads::tinyyolo().with_policy(&PolicyTable::uniform(
+        workloads::tinyyolo().compute_layers(),
+        Precision::Fxp8,
+        ExecMode::Approximate,
+    ));
+    let b = g.with_batch(6);
+    assert_eq!(b.total_macs(), 6 * g.total_macs());
+    assert_eq!(b.total_ops(), 6 * g.total_ops());
+    assert_eq!(b.total_params(), g.total_params(), "one weight stream serves the wave");
+    assert_eq!(b.compute_layers(), g.compute_layers());
+    assert!(b.is_annotated(), "annotations ride along");
+    for (bl, gl) in b.layers.iter().zip(&g.layers) {
+        assert_eq!(bl.cost.outputs, 6 * gl.cost.outputs);
+        assert_eq!(bl.cost.pool_windows, 6 * gl.cost.pool_windows);
+        assert_eq!(bl.cost.pool_window_size, gl.cost.pool_window_size);
+        assert_eq!(bl.op, gl.op, "op parameters stay per-sample");
+    }
+    // batch == 1 is the identity
+    assert_eq!(g.with_batch(1), g);
+}
+
+#[test]
 fn trace_round_trip_preserves_costs() {
     let t = vgg16_trace();
     let g = Graph::from_trace(&t);

@@ -10,8 +10,11 @@
 //! * **Layer 2** (build time, Python): a quantised JAX model
 //!   (`python/compile/model.py`) that calls the L1 kernels, AOT-lowered to
 //!   HLO text artifacts under `artifacts/`.
-//! * **Layer 3** (this crate): the deployable coordinator — PJRT runtime
-//!   ([`runtime`]), request router / dynamic batcher ([`coordinator`]) — plus
+//! * **Layer 3** (this crate): the deployable coordinator — a
+//!   backend-abstracted serving path ([`coordinator`]: dynamic batcher,
+//!   precision governor, and an `ExecBackend` seam dispatching either to
+//!   the PJRT runtime ([`runtime`]) or natively to the batched wave
+//!   executor) — plus
 //!   every hardware substrate the paper depends on, as bit-accurate,
 //!   cycle-accountable Rust models: fixed point ([`fxp`]), the iterative
 //!   CORDIC engine ([`cordic`]), the time-multiplexed multi-activation block

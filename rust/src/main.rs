@@ -137,8 +137,9 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let shards: usize = args.num_or("shards", 4usize)?;
     let pes: usize = args.num_or("pes", 256usize)?;
     let batches: u64 = args.num_or("batches", 8u64)?;
-    if shards == 0 || pes == 0 || batches == 0 {
-        bail!("--shards, --pes and --batches must all be >= 1");
+    let batch: usize = args.num_or("batch", 1usize)?;
+    if shards == 0 || pes == 0 || batches == 0 || batch == 0 {
+        bail!("--shards, --pes, --batches and --batch must all be >= 1");
     }
     let precision = Precision::parse(&args.opt_or("precision", "fxp8"))
         .context("bad --precision")?;
@@ -161,7 +162,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     });
     let plan = cluster.plan_ir(&annotated);
     let report = corvet::cluster::ShardExecutor::new(engine, cluster.config.interconnect)
-        .run(&plan, batches);
+        .run_batched(&plan, batches, batch);
     let asic = corvet::hwcost::cluster_asic(
         &engine,
         report.num_shards(),
@@ -183,10 +184,10 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     );
     println!("policy         : {precision} / {mode:?} ({} cyc/MAC)", policy.layer(0).cycles_per_mac());
     println!("MAC imbalance  : {}", fnum(plan.mac_imbalance()));
-    println!("micro-batches  : {batches}");
+    println!("micro-batches  : {batches} x {batch} sample(s), packed waves");
     println!("cycles/batch   : {} (steady state)", report.cycles_per_batch);
     println!("makespan       : {} cycles ({} ms)", report.total_cycles, fnum(report.time_ms(clock)));
-    println!("throughput     : {} inf/s, {} GOPS", fnum(report.inferences_per_s(clock)), fnum(report.gops(clock)));
+    println!("throughput     : {} inf/s, {} GOPS", fnum(report.samples_per_s(clock)), fnum(report.gops(clock)));
     println!("mean util      : {}", fnum(report.mean_utilization()));
     println!("interconnect   : {} cycles total", report.interconnect_cycles);
     println!(
@@ -295,18 +296,30 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let quick = args.has_flag("quick");
     let artifacts = args.opt_or("artifacts", "artifacts");
+    let backend = args.opt_or("backend", "pjrt");
     let n_requests: usize = args.num_or("requests", if quick { 64 } else { 512 })?;
     let precision = Precision::parse(&args.opt_or("precision", "fxp8"))
         .context("bad --precision")?;
     let max_batch: usize = args.num_or("batch", 8usize)?;
+    let pes: usize = args.num_or("pes", 64usize)?;
 
     let (data, net) = trained_mlp(quick);
     let fp32_acc = net.accuracy_f64(&data.test_x, &data.test_y);
-    let (weights, _) = quantize_network(&net)?;
 
     let mut config = ServerConfig { precision, ..Default::default() };
     config.batcher.max_batch = max_batch;
-    let mut server = Server::start(&artifacts, weights, config)?;
+    let mut server = match backend.as_str() {
+        "pjrt" => {
+            let (weights, _) = quantize_network(&net)?;
+            Server::start(&artifacts, weights, config)?
+        }
+        "wave" => {
+            let engine = EngineConfig { pes, ..EngineConfig::default() };
+            Server::start_wave(net.clone(), engine, config)?
+        }
+        other => bail!("unknown backend {other:?} (pjrt|wave)"),
+    };
+    let server_descriptor = server.backend_descriptor().to_string();
 
     // replay the test set as a request stream and check served accuracy
     let mut rng = Xoshiro256::new(77);
@@ -329,6 +342,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let wall = t0.elapsed();
     let snap = server.shutdown()?;
 
+    println!("backend             : {}", server_descriptor);
     println!("requests            : {n_requests}");
     println!("served accuracy     : {}", fnum(correct as f64 / n_requests as f64));
     println!("fp32 accuracy       : {}", fnum(fp32_acc));

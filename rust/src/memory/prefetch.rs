@@ -56,37 +56,46 @@ impl Prefetcher {
         }
     }
 
+    /// Wait for the next chunk at `now` **without** issuing a refill — the
+    /// single-shot staging path (e.g. a cluster shard's parameters are
+    /// fetched exactly once). Returns the cycle at which the data is ready.
+    /// A preloaded front buffer satisfies the acquire immediately and leaves
+    /// any in-flight fetch untouched.
+    pub fn acquire(&mut self, now: u64) -> u64 {
+        if self.front_valid {
+            self.front_valid = false;
+            return now;
+        }
+        match self.inflight_done.take() {
+            Some(done) if done <= now => {
+                // fetch finished during previous compute: fully hidden
+                self.stats.overlapped_cycles += self.fetch_latency;
+                now
+            }
+            Some(done) => {
+                // partially hidden: stall for the remainder
+                let stall = done - now;
+                self.stats.stall_cycles += stall;
+                self.stats.overlapped_cycles += self.fetch_latency - stall;
+                done
+            }
+            None => {
+                // nothing in flight: pay full latency
+                self.stats.fetches += 1;
+                self.stats.stall_cycles += self.fetch_latency;
+                now + self.fetch_latency
+            }
+        }
+    }
+
     /// Compute side wants the next chunk at `now`, and will be busy for
     /// `compute_cycles` once it has data. Returns the cycle at which
     /// compute can start (== `now` when the prefetch was fully hidden).
     pub fn consume(&mut self, now: u64, compute_cycles: u64) -> u64 {
-        let start = if self.front_valid {
-            now
-        } else {
-            match self.inflight_done.take() {
-                Some(done) if done <= now => {
-                    // fetch finished during previous compute: fully hidden
-                    self.stats.overlapped_cycles += self.fetch_latency;
-                    now
-                }
-                Some(done) => {
-                    // partially hidden: stall for the remainder
-                    let stall = done - now;
-                    self.stats.stall_cycles += stall;
-                    self.stats.overlapped_cycles += self.fetch_latency - stall;
-                    done
-                }
-                None => {
-                    // nothing in flight: pay full latency
-                    self.stats.fetches += 1;
-                    self.stats.stall_cycles += self.fetch_latency;
-                    now + self.fetch_latency
-                }
-            }
-        };
-        self.front_valid = false;
-        // immediately start fetching the next chunk behind this compute
-        self.inflight_done = None;
+        let start = self.acquire(now);
+        // start fetching the next chunk behind this compute; a fetch that
+        // is already in flight (preload + issue) keeps its original
+        // completion clock — issuing again must not cancel and restart it
         self.issue(start);
         let _ = compute_cycles;
         start
@@ -149,5 +158,34 @@ mod tests {
     fn overlap_fraction_zero_when_unused() {
         let p = Prefetcher::new(10);
         assert_eq!(p.stats().overlap_fraction(), 0.0);
+    }
+
+    #[test]
+    fn preload_issue_consume_preserves_inflight_fetch() {
+        // regression: consume() used to cancel a live in-flight fetch after
+        // serving from the preloaded front buffer, re-issuing it (inflating
+        // stats.fetches) and restarting its latency clock
+        let mut p = Prefetcher::new(100);
+        p.preload();
+        p.issue(0); // in flight, completes at cycle 100
+        assert_eq!(p.consume(30, 10), 30, "preloaded buffer serves immediately");
+        assert_eq!(p.stats().fetches, 1, "live in-flight fetch must be preserved");
+        // the fetch issued at 0 still completes at 100, not 130
+        assert_eq!(p.consume(40, 10), 100, "original completion clock kept");
+        assert_eq!(p.stats().stall_cycles, 60);
+        assert_eq!(p.stats().overlapped_cycles, 40);
+    }
+
+    #[test]
+    fn acquire_does_not_refill() {
+        let mut p = Prefetcher::new(50);
+        p.issue(0);
+        assert_eq!(p.stats().fetches, 1);
+        assert_eq!(p.acquire(80), 80, "fetch done at 50 is fully hidden by 80");
+        assert_eq!(p.stats().fetches, 1, "acquire stages exactly once");
+        assert_eq!(p.stats().overlapped_cycles, 50);
+        // nothing in flight now: a further acquire is a demand fetch
+        assert_eq!(p.acquire(80), 130);
+        assert_eq!(p.stats().fetches, 2);
     }
 }

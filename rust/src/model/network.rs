@@ -8,7 +8,7 @@ use crate::cordic::mac::{CordicMac, ExecMode, MacConfig};
 use crate::cordic::{from_guard, to_guard};
 use crate::engine::EngineConfig;
 use crate::fxp::Fxp;
-use crate::ir::{Graph, WaveExecutor, WaveRunStats};
+use crate::ir::{BatchRunStats, Graph, WaveExecutor, WaveRunStats};
 use crate::pooling::sliding::AadSlidingWindow;
 use crate::pooling::PoolCost;
 use crate::quant::{LayerPolicy, PolicyTable, Precision};
@@ -189,6 +189,18 @@ impl Network {
         config: &EngineConfig,
     ) -> (Tensor, WaveRunStats) {
         WaveExecutor::new(*config).forward(self, input, policy)
+    }
+
+    /// Batched wave-vectorised forward pass: `inputs.len()` samples packed
+    /// into one lane stream per layer, per-sample bit-identical to
+    /// [`Self::forward_cordic`]. See [`WaveExecutor::forward_batch`].
+    pub fn forward_batch(
+        &self,
+        inputs: &[Tensor],
+        policy: &PolicyTable,
+        config: &EngineConfig,
+    ) -> (Vec<Tensor>, BatchRunStats) {
+        WaveExecutor::new(*config).forward_batch(self, inputs, policy)
     }
 
     /// Classification accuracy of the FP32 path over a labelled set.

@@ -2,6 +2,11 @@
 //! on the request path. Python never runs here — `make artifacts` is the
 //! only place Python executes, at build time.
 //!
+//! This is one of two serving execution engines: the coordinator reaches
+//! it through [`crate::coordinator::PjrtBackend`] (an
+//! [`crate::coordinator::ExecBackend`]); the other is the artifact-free
+//! native wave backend over the batched CORDIC executor.
+//!
 //! Wraps the `xla` crate (PJRT C API, CPU plugin): HLO **text** →
 //! `HloModuleProto::from_text_file` → `XlaComputation` → `client.compile`
 //! → `executable.execute`. Compiled executables are cached per artifact.

@@ -206,6 +206,176 @@ fn wave_bit_identical_across_named_operating_points() {
     }
 }
 
+/// Every sample of a batched run must be bit-identical to its own scalar
+/// and single-sample wave runs — regardless of how the batch dimension
+/// packed elements into lanes.
+fn assert_batch_bit_identical(net: &Network, xs: &[Tensor], policy: &PolicyTable, pes: usize) {
+    let cfg = EngineConfig { pes, ..EngineConfig::default() };
+    let (ys, stats) = net.forward_batch(xs, policy, &cfg);
+    assert_eq!(ys.len(), xs.len());
+    assert_eq!(stats.batch, xs.len());
+    assert_eq!(stats.pes, pes);
+    for (i, (x, yb)) in xs.iter().zip(&ys).enumerate() {
+        let (y_scalar, _) = net.forward_cordic(x, policy);
+        let (y_wave, _) = net.forward_wave(x, policy, &cfg);
+        assert_eq!(y_scalar.shape(), yb.shape());
+        for (j, (a, b)) in y_scalar.data().iter().zip(yb.data()).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{} pes={pes} B={}: sample {i} output {j}: scalar {a} batch {b}",
+                net.name,
+                xs.len()
+            );
+        }
+        for (j, (a, b)) in y_wave.data().iter().zip(yb.data()).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{} pes={pes} B={}: sample {i} output {j}: wave {a} batch {b}",
+                net.name,
+                xs.len()
+            );
+        }
+    }
+}
+
+fn inputs_for(net: &Network, rng: &mut Xoshiro256, n: usize) -> Vec<Tensor> {
+    let len: usize = net.input_shape.iter().product();
+    (0..n)
+        .map(|_| Tensor::from_vec(&net.input_shape, rng.uniform_vec(len, -0.9, 0.9)))
+        .collect()
+}
+
+#[test]
+fn prop_forward_batch_bit_identical_per_sample() {
+    let acts = [ActFn::Tanh, ActFn::Sigmoid, ActFn::Relu, ActFn::Gelu, ActFn::Swish];
+    check_prop("forward_batch == per-sample forward_cordic", |rng| {
+        let net = if rng.chance(0.5) {
+            let dims = vec![
+                rng.int_in(3, 12) as usize,
+                rng.int_in(2, 10) as usize,
+                rng.int_in(2, 6) as usize,
+            ];
+            let act = acts[rng.index(acts.len())];
+            mlp("randmlp", &dims, act, rng.int_in(0, 10_000) as u64)
+        } else {
+            // the small random CNN exercises the conv/pool batched paths
+            rand_cnn(rng)
+        };
+        let policy = rand_policy(rng, net.compute_layers());
+        let pes = [1usize, 3, 16, 64][rng.index(4)];
+        let b = [1usize, 2, 3, 5][rng.index(4)];
+        let xs = inputs_for(&net, rng, b);
+        assert_batch_bit_identical(&net, &xs, &policy, pes);
+        Ok(())
+    });
+}
+
+#[test]
+fn forward_batch_bit_identical_across_precisions_modes_and_sizes() {
+    // the acceptance matrix: every (precision, mode, B in {1, 3, pes, pes+7})
+    let pes = 8usize;
+    let mut rng = Xoshiro256::new(23);
+    let net = mlp("accept-mlp", &[12, 9, 5], ActFn::Sigmoid, 77);
+    for precision in Precision::ALL {
+        for mode in [ExecMode::Approximate, ExecMode::Accurate, ExecMode::Custom(12)] {
+            let policy = PolicyTable::uniform(net.compute_layers(), precision, mode);
+            for b in [1usize, 3, pes, pes + 7] {
+                let xs = inputs_for(&net, &mut rng, b);
+                assert_batch_bit_identical(&net, &xs, &policy, pes);
+            }
+        }
+    }
+}
+
+#[test]
+fn batch_occupancy_beats_single_sample_on_narrow_dense_layers() {
+    // functional: paper_mlp's 10-wide output layer fills 10/64 lanes alone,
+    // but a batch packs min(pes, B*outputs) lanes per chunk
+    let net = paper_mlp(31);
+    let cfg = EngineConfig::pe64();
+    let policy =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    let mut rng = Xoshiro256::new(8);
+    let one = inputs_for(&net, &mut rng, 1);
+    let many = inputs_for(&net, &mut rng, 8);
+    let (_, s1) = net.forward_batch(&one, &policy, &cfg);
+    let (_, s8) = net.forward_batch(&many, &policy, &cfg);
+    let last = |s: &corvet::ir::BatchRunStats| {
+        s.per_layer.iter().rev().find(|l| l.kind == "dense").unwrap().occupancy()
+    };
+    assert!((last(&s1) - 10.0 / 64.0).abs() < 1e-12, "B=1 final dense occupancy");
+    assert!((last(&s8) - 80.0 / 128.0).abs() < 1e-12, "B=8 packs two 64-lane chunks");
+    assert!(last(&s8) > last(&s1));
+    assert!(s8.mean_occupancy() > s1.mean_occupancy());
+}
+
+#[test]
+fn batch_occupancy_improves_on_vgg16_final_dense_layers() {
+    // analytic law over the real VGG-16 IR (far too large to execute
+    // functionally): batching must raise lane occupancy on the dense head
+    use corvet::ir::graph_batch_occupancy;
+    let g = workloads::vgg16();
+    let occ = |b: usize, name: &str| -> f64 {
+        graph_batch_occupancy(&g, 256, b)
+            .into_iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, o)| o)
+            .unwrap()
+    };
+    // fc8 (1000 outputs) underfills 256-lane chunks alone; B=16 packs them
+    assert!(occ(1, "fc8") < 0.98);
+    assert!(occ(16, "fc8") > occ(1, "fc8"), "batching raises fc8 occupancy");
+    // fc6/fc7 (4096 outputs) are already chunk-aligned: batching never hurts
+    assert!(occ(16, "fc6") >= occ(1, "fc6"));
+    assert!(occ(16, "fc7") >= occ(1, "fc7"));
+}
+
+#[test]
+fn batch_stats_share_the_wave_cycle_law() {
+    // B samples' MAC cycles follow mac_wave_cycles over the batch total —
+    // the same law the simulator uses on a batch-scaled graph
+    use corvet::engine::mac_wave_cycles;
+    let net = small_cnn("cnn", PoolKind::Max, 5);
+    let policy =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    let cfg = EngineConfig::pe64();
+    let mut rng = Xoshiro256::new(13);
+    let xs = inputs_for(&net, &mut rng, 4);
+    let (_, batch) = net.forward_batch(&xs, &policy, &cfg);
+    let (_, single) = net.forward_wave(&xs[0], &policy, &cfg);
+    for (bl, sl) in batch
+        .per_layer
+        .iter()
+        .filter(|l| l.macs > 0)
+        .zip(single.per_layer.iter().filter(|l| l.macs > 0))
+    {
+        assert_eq!(bl.macs, 4 * sl.macs, "{}: batch MAC census", bl.kind);
+        let cpm = corvet::cordic::mac::MacConfig::new(Precision::Fxp8, ExecMode::Approximate)
+            .cycles_per_mac();
+        assert_eq!(
+            bl.mac_cycles,
+            mac_wave_cycles(bl.macs, cfg.pes, cpm),
+            "{}: wave law over the batch total",
+            bl.kind
+        );
+    }
+    // the simulator agrees through Graph::with_batch
+    let sim = VectorEngine::new(cfg).run_ir(&net.to_ir().with_policy(&policy).with_batch(4));
+    let sim_mac: Vec<u64> = sim
+        .per_layer
+        .iter()
+        .filter(|l| matches!(l.kind, TraceKind::Conv | TraceKind::Dense))
+        .map(|l| l.mac_cycles)
+        .collect();
+    let batch_mac: Vec<u64> = batch
+        .per_layer
+        .iter()
+        .filter(|l| l.macs > 0)
+        .map(|l| l.mac_cycles)
+        .collect();
+    assert_eq!(batch_mac, sim_mac, "functional and simulated batched paths share the law");
+}
+
 #[test]
 fn wave_cycle_accounting_matches_engine_simulator() {
     // functional and simulated paths share the MAC wave law: per compute

@@ -1,10 +1,14 @@
-//! Integration test: the full serving coordinator over real artifacts —
-//! batching, precision governor, metrics, graceful shutdown.
+//! Integration tests for the serving coordinator: the native wave-backend
+//! path (always runs — no artifacts needed) and the PJRT artifact path
+//! (skips gracefully when artifacts are not built) — batching, precision
+//! governor, metrics, graceful shutdown.
 
 use corvet::coordinator::{BatcherConfig, GovernorConfig, Server, ServerConfig};
 use corvet::cordic::mac::ExecMode;
+use corvet::engine::EngineConfig;
 use corvet::model::workloads::paper_mlp;
-use corvet::quant::Precision;
+use corvet::model::Tensor;
+use corvet::quant::{PolicyTable, Precision};
 use corvet::runtime::quantize_network;
 use corvet::testutil::Xoshiro256;
 
@@ -100,6 +104,110 @@ fn pinned_governor_stays_accurate() {
     }
     let snap = server.shutdown().unwrap();
     assert_eq!(snap.approx_served, 0);
+}
+
+#[test]
+fn wave_backend_serves_correct_classes_without_artifacts() {
+    // the native serving path: no PJRT artifacts anywhere on disk — every
+    // response's argmax class must equal the bit-exact scalar CORDIC path's
+    let net = paper_mlp(13);
+    let config = ServerConfig {
+        precision: Precision::Fxp8,
+        batcher: BatcherConfig::default(),
+        governor: GovernorConfig {
+            approx_threshold: usize::MAX,
+            accurate_threshold: 0,
+            pinned: Some(ExecMode::Accurate),
+        },
+    };
+    let mut server = Server::start_wave(net.clone(), EngineConfig::pe64(), config).unwrap();
+
+    let policy =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+    let mut rng = Xoshiro256::new(6);
+    let inputs: Vec<Vec<f64>> = (0..24).map(|_| rng.uniform_vec(196, -0.9, 0.9)).collect();
+    let pending: Vec<_> =
+        inputs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
+    for (input, rx) in inputs.iter().zip(pending) {
+        let resp = rx.recv().expect("response");
+        assert_eq!(resp.logits.len(), 10);
+        assert_eq!(resp.mode, ExecMode::Accurate);
+        let (y, _) = net.forward_cordic(&Tensor::vector(input), &policy);
+        assert_eq!(resp.class, y.argmax(), "served argmax must match the scalar path");
+        let expect: Vec<f32> = y.data().iter().map(|&v| v as f32).collect();
+        assert_eq!(resp.logits, expect, "served logits are the bit-exact wave outputs");
+    }
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.completed, 24);
+}
+
+#[test]
+fn wave_backend_governor_maps_modes_onto_cordic_budgets() {
+    // flood the wave server past the approx threshold: the governor's mode
+    // switch must reach the CORDIC iteration budget (mode in the response)
+    let net = paper_mlp(17);
+    let config = ServerConfig {
+        precision: Precision::Fxp8,
+        batcher: BatcherConfig::default(),
+        governor: GovernorConfig { approx_threshold: 4, accurate_threshold: 0, pinned: None },
+    };
+    let mut server = Server::start_wave(net, EngineConfig::pe64(), config).unwrap();
+    let mut rng = Xoshiro256::new(7);
+    let pending: Vec<_> = (0..96)
+        .map(|_| server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap())
+        .collect();
+    let approx = pending
+        .into_iter()
+        .filter(|rx| rx.recv().unwrap().mode == ExecMode::Approximate)
+        .count();
+    let snap = server.shutdown().unwrap();
+    assert!(approx > 0, "governor never engaged approximate mode");
+    assert_eq!(snap.approx_served as usize, approx);
+}
+
+#[test]
+fn malformed_request_is_dropped_without_killing_the_server() {
+    let net = paper_mlp(23);
+    let mut server =
+        Server::start_wave(net, EngineConfig::pe64(), ServerConfig::default()).unwrap();
+    let mut rng = Xoshiro256::new(11);
+    let good_before = server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap();
+    let bad = server.submit(vec![0.1; 10]).unwrap(); // wrong width
+    let good_after = server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap();
+
+    assert!(good_before.recv().is_ok(), "valid request before the bad one is served");
+    assert!(good_after.recv().is_ok(), "server survives the malformed request");
+    assert!(bad.recv().is_err(), "malformed request's channel closes unanswered");
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.completed, 2, "only the two valid requests complete");
+}
+
+#[test]
+fn shutdown_snapshot_counts_requests_served_during_drain() {
+    // regression: shutdown() used to snapshot metrics *before* sending
+    // Control::Shutdown, so requests served during the drain were missing
+    // from the "final" snapshot
+    let net = paper_mlp(19);
+    let config = ServerConfig {
+        precision: Precision::Fxp8,
+        batcher: BatcherConfig { max_batch: 4, ..Default::default() },
+        governor: GovernorConfig::default(),
+    };
+    let mut server = Server::start_wave(net, EngineConfig::pe64(), config).unwrap();
+    let mut rng = Xoshiro256::new(9);
+    let n = 32;
+    let pending: Vec<_> = (0..n)
+        .map(|_| server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap())
+        .collect();
+    // shut down immediately: the queue drains during shutdown, and the
+    // post-drain snapshot must count every response
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.completed, n as u64, "drained requests must be in the final snapshot");
+    assert!(snap.batches >= (n / 4) as u64);
+    for rx in pending {
+        let resp = rx.recv().expect("drained response delivered");
+        assert!(resp.class < 10);
+    }
 }
 
 #[test]
