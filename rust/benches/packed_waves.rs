@@ -1,0 +1,102 @@
+//! Bench: precision-packed sub-word lanes — the paper's "up to 4×
+//! throughput within the same hardware resources" claim, A/B'd end to end.
+//! Captured results belong in EXPERIMENTS.md §packed_throughput.
+//!
+//! Three sections:
+//!
+//! 1. the packed-throughput table (`tables::packed_throughput`): pack
+//!    factors, slot counts and same-hardware throughput ratios, priced by
+//!    `hwcost::engine_asic_at`;
+//! 2. simulated VGG-16 inference cycles per precision with packing on vs
+//!    off (the whole-model view of the 4× law: MAC phases shrink by the
+//!    pack factor, AF/pool/memory terms do not);
+//! 3. host-executed `forward_batch` with packing on vs off — bit-identity
+//!    spot-checked inline, occupancy and wall-clock reported.
+
+use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::{pack_factor, EngineConfig, VectorEngine};
+use corvet::ir::workloads;
+use corvet::model::workloads::paper_mlp;
+use corvet::model::Tensor;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::fnum;
+use corvet::tables;
+use corvet::testutil::Xoshiro256;
+
+fn main() {
+    // --- 1. the packed-throughput table (the 4x / 2x / 1x golden ratios)
+    print!("{}", tables::packed_throughput().render());
+
+    // --- 2. simulated whole-model A/B on VGG-16
+    let graph = workloads::vgg16();
+    println!("\nVGG-16, 256-PE engine, accurate mode — packing A/B (simulated):");
+    println!(
+        "  {:>8} {:>6} {:>12} {:>12} {:>10} {:>10}",
+        "prec", "pack", "cyc on (M)", "cyc off (M)", "speedup", "MAC x"
+    );
+    for precision in [Precision::Fxp16, Precision::Fxp8, Precision::Fxp4] {
+        let policy =
+            PolicyTable::uniform(graph.compute_layers(), precision, ExecMode::Accurate);
+        let annotated = graph.with_policy(&policy);
+        let mut on = EngineConfig::pe256();
+        on.packing = true;
+        let mut off = on;
+        off.packing = false;
+        let r_on = VectorEngine::new(on).run_ir(&annotated);
+        let r_off = VectorEngine::new(off).run_ir(&annotated);
+        let mac = |r: &corvet::engine::EngineReport| -> u64 {
+            r.per_layer.iter().map(|l| l.mac_cycles).sum()
+        };
+        println!(
+            "  {:>8} {:>6} {:>12} {:>12} {:>10} {:>10}",
+            precision.to_string(),
+            pack_factor(precision),
+            fnum(r_on.total_cycles as f64 / 1e6),
+            fnum(r_off.total_cycles as f64 / 1e6),
+            fnum(r_off.total_cycles as f64 / r_on.total_cycles as f64),
+            fnum(mac(&r_off) as f64 / mac(&r_on) as f64),
+        );
+    }
+
+    // --- 3. host-executed batched waves, packing on vs off
+    let net = paper_mlp(41);
+    let mut rng = Xoshiro256::new(5);
+    let inputs: Vec<Tensor> =
+        (0..8).map(|_| Tensor::vector(&rng.uniform_vec(196, -0.9, 0.9))).collect();
+    let b = Bencher { warmup: 2, samples: 8, iters_per_sample: 2 };
+    let mut rep = BenchReport::new();
+    println!("\nhost-executed forward_batch (B=8, 64 PEs, {}):", net.name);
+    for precision in [Precision::Fxp16, Precision::Fxp8, Precision::Fxp4] {
+        let policy =
+            PolicyTable::uniform(net.compute_layers(), precision, ExecMode::Accurate);
+        let mut on = EngineConfig::pe64();
+        on.packing = true;
+        let mut off = on;
+        off.packing = false;
+        let (y_on, s_on) = net.forward_batch(&inputs, &policy, &on);
+        let (y_off, s_off) = net.forward_batch(&inputs, &policy, &off);
+        for (a, c) in y_on.iter().zip(&y_off) {
+            assert_eq!(a.data(), c.data(), "packing must be functionally invisible");
+        }
+        let r_on = b.run(&format!("packed   {precision}"), || {
+            net.forward_batch(&inputs, &policy, &on)
+        });
+        let r_off = b.run(&format!("unpacked {precision}"), || {
+            net.forward_batch(&inputs, &policy, &off)
+        });
+        println!(
+            "  {:>8}: waves {:>5} vs {:>5} | occupancy {} vs {} | {:>9} ns vs {:>9} ns",
+            precision.to_string(),
+            s_on.total_waves(),
+            s_off.total_waves(),
+            fnum(s_on.mean_occupancy()),
+            fnum(s_off.mean_occupancy()),
+            fnum(r_on.mean_ns),
+            fnum(r_off.mean_ns),
+        );
+        rep.push(r_on);
+        rep.push(r_off);
+    }
+    print!("{}", rep.render("packed waves forward_batch"));
+}

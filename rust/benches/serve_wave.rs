@@ -68,12 +68,14 @@ fn main() -> anyhow::Result<()> {
     }
     print!("{}", rep.render("batched wave forward"));
 
-    // --- 2. analytic occupancy for VGG-16's dense head (256 lanes)
+    // --- 2. analytic occupancy for VGG-16's dense head (256 PEs; the
+    // unannotated graph prices at the engine default FxP-16, pack 1)
     let vgg = workloads::vgg16();
+    let occ_cfg = EngineConfig::pe256();
     println!("\nVGG-16 dense-head lane occupancy vs batch (256 PEs, analytic):");
     println!("  {:>5} {:>8} {:>8} {:>8}", "B", "fc6", "fc7", "fc8");
     for batch in [1usize, 2, 4, 8, 16, 32] {
-        let occ = graph_batch_occupancy(&vgg, 256, batch);
+        let occ = graph_batch_occupancy(&vgg, &occ_cfg, batch);
         let get = |name: &str| {
             occ.iter().find(|(n, _)| n == name).map(|(_, o)| *o).unwrap_or(0.0)
         };

@@ -203,6 +203,29 @@ mod tests {
     }
 
     #[test]
+    fn wave_backend_packing_is_functionally_invisible() {
+        // sub-word packing reorders lane assignment only: the served logits
+        // must be bit-equal with packing on and off, for every governor
+        // mode, at the narrowest (most-packed) precision
+        let net = paper_mlp(33);
+        let mut on_cfg = EngineConfig::pe64();
+        on_cfg.packing = true;
+        let mut off_cfg = on_cfg;
+        off_cfg.packing = false;
+        let mut packed = WaveBackend::new(net.clone(), on_cfg, Precision::Fxp4).unwrap();
+        let mut unpacked = WaveBackend::new(net, off_cfg, Precision::Fxp4).unwrap();
+
+        let mut rng = Xoshiro256::new(9);
+        let rows: Vec<Vec<f64>> = (0..5).map(|_| rng.uniform_vec(196, -0.9, 0.9)).collect();
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        for mode in [ExecMode::Approximate, ExecMode::Accurate, ExecMode::Custom(6)] {
+            let a = packed.execute(&refs, mode).unwrap();
+            let b = unpacked.execute(&refs, mode).unwrap();
+            assert_eq!(a, b, "mode {mode:?}: packing changed served logits");
+        }
+    }
+
+    #[test]
     fn wave_backend_rejects_bad_width() {
         let mut backend =
             WaveBackend::new(paper_mlp(1), EngineConfig::pe64(), Precision::Fxp8).unwrap();

@@ -239,6 +239,41 @@ mod tests {
     }
 
     #[test]
+    fn sharded_service_cached_pricing_consumes_the_pack_law() {
+        // the per-batch-size cycle cache prices through VectorEngine, which
+        // derives effective lanes from the engine pack law — a packed FxP-8
+        // service must quote fewer simulated cycles than an unpacked one
+        use crate::cluster::plan::{plan, PartitionStrategy};
+        use crate::cordic::mac::ExecMode;
+        use crate::model::workloads::paper_mlp;
+        use crate::quant::{PolicyTable, Precision};
+
+        let net = paper_mlp(13);
+        let graph = net.to_ir().with_policy(&PolicyTable::uniform(
+            net.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        ));
+        let icn = crate::cluster::InterconnectConfig::default();
+        let quote = |packing: bool| -> u64 {
+            let mut engine = EngineConfig::pe64();
+            engine.packing = packing;
+            let pl = plan(&graph, 2, &engine, &icn, PartitionStrategy::Data);
+            let mut svc = ShardedService::start(&pl, engine, RoutePolicy::RoundRobin);
+            let (_, rx) = svc.submit(4);
+            let c = rx.recv().unwrap().sim_cycles;
+            svc.shutdown();
+            c
+        };
+        let packed = quote(true);
+        let unpacked = quote(false);
+        assert!(
+            packed < unpacked,
+            "packed FxP-8 serving must be cheaper: {packed} vs {unpacked}"
+        );
+    }
+
+    #[test]
     fn batched_micro_batches_price_sublinearly() {
         use crate::cluster::plan::{plan, PartitionStrategy};
         use crate::cordic::mac::ExecMode;

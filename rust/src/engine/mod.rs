@@ -19,21 +19,52 @@ pub use sim::{EngineReport, LayerTiming};
 
 use crate::ir::Graph;
 use crate::model::workloads::Trace;
-use crate::quant::PolicyTable;
+use crate::quant::{PolicyTable, Precision};
 
-/// MAC waves needed to retire `macs` MAC slots on `pes` lock-stepped lanes
-/// (each wave issues one slot to every PE).
+/// Native word width of one PE datapath in bits. The engine is built as a
+/// 16-bit design; narrower precisions sub-divide the word instead of
+/// wasting it (paper abstract: "up to 4× throughput improvement within the
+/// same hardware resources ... flexible precision scaling").
+pub const PE_DATAPATH_BITS: u32 = 16;
+
+/// Sub-word element streams one 16-bit PE lane carries at `precision`:
+/// FxP-16 → 1, FxP-8 → 2, FxP-4 → 4. **The** pack law — every consumer
+/// (simulator, wave executor, occupancy accounting, hwcost pricing,
+/// cluster/serving repricing) derives its effective lane count from this
+/// one function.
 #[inline]
-pub fn mac_waves(macs: u64, pes: usize) -> u64 {
-    macs.div_ceil(pes.max(1) as u64)
+pub fn pack_factor(precision: Precision) -> u32 {
+    PE_DATAPATH_BITS / precision.bits()
 }
 
-/// Cycles of the MAC phase for `macs` MACs on `pes` lanes at
+/// Element slots one wave offers across the PE array: `pes × pack_factor`
+/// with packing enabled, `pes` on the unpacked (one-element-per-lane)
+/// datapath. Packing only changes how many independent element streams the
+/// array schedules per wave — each stream still runs the scalar CORDIC
+/// recurrence, so functional outputs are unaffected.
+#[inline]
+pub fn packed_lanes(pes: usize, precision: Precision, packing: bool) -> usize {
+    if packing {
+        pes * pack_factor(precision) as usize
+    } else {
+        pes
+    }
+}
+
+/// MAC waves needed to retire `macs` MAC slots on `lanes` lock-stepped
+/// element slots (each wave issues one slot to every lane; pass
+/// [`EngineConfig::lane_slots`] for the precision-packed count).
+#[inline]
+pub fn mac_waves(macs: u64, lanes: usize) -> u64 {
+    macs.div_ceil(lanes.max(1) as u64)
+}
+
+/// Cycles of the MAC phase for `macs` MACs on `lanes` element slots at
 /// `cycles_per_mac` — the wave cycle law shared by the trace simulator and
 /// the wave-vectorised functional executor, so the two paths cannot drift.
 #[inline]
-pub fn mac_wave_cycles(macs: u64, pes: usize, cycles_per_mac: u32) -> u64 {
-    mac_waves(macs, pes) * cycles_per_mac as u64
+pub fn mac_wave_cycles(macs: u64, lanes: usize, cycles_per_mac: u32) -> u64 {
+    mac_waves(macs, lanes) * cycles_per_mac as u64
 }
 
 /// Vector-engine configuration.
@@ -51,6 +82,10 @@ pub struct EngineConfig {
     pub burst_words: u64,
     /// Overlap AF execution with MAC computation (paper: yes).
     pub af_overlap: bool,
+    /// Pack sub-word element streams into each 16-bit lane
+    /// ([`pack_factor`]); `false` models the one-element-per-lane datapath
+    /// for A/B comparison (`--packing off`).
+    pub packing: bool,
 }
 
 impl Default for EngineConfig {
@@ -62,11 +97,19 @@ impl Default for EngineConfig {
             fetch_latency: 64,
             burst_words: 32,
             af_overlap: true,
+            packing: true,
         }
     }
 }
 
 impl EngineConfig {
+    /// Element slots per wave at `precision` under this configuration —
+    /// the single effective-lane law ([`packed_lanes`]) every cycle and
+    /// occupancy computation consumes.
+    pub fn lane_slots(&self, precision: Precision) -> usize {
+        packed_lanes(self.pes, precision, self.packing)
+    }
+
     /// The paper's two reported ASIC configurations.
     pub fn pe64() -> Self {
         EngineConfig { pes: 64, ..Default::default() }
@@ -117,5 +160,45 @@ impl VectorEngine {
     /// `policy.len()` must equal `trace.compute_layers()`.
     pub fn run_trace(&self, trace: &Trace, policy: &PolicyTable) -> EngineReport {
         self.run_ir(&Graph::from_trace(trace).with_policy(policy))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_law_matches_paper_ratios() {
+        assert_eq!(pack_factor(Precision::Fxp16), 1);
+        assert_eq!(pack_factor(Precision::Fxp8), 2);
+        assert_eq!(pack_factor(Precision::Fxp4), 4);
+        for p in Precision::ALL {
+            assert_eq!(pack_factor(p) * p.bits(), PE_DATAPATH_BITS, "{p}: full word used");
+        }
+    }
+
+    #[test]
+    fn lane_slots_consume_the_pack_law() {
+        let cfg = EngineConfig::pe64();
+        assert_eq!(cfg.lane_slots(Precision::Fxp16), 64);
+        assert_eq!(cfg.lane_slots(Precision::Fxp8), 128);
+        assert_eq!(cfg.lane_slots(Precision::Fxp4), 256);
+        let mut off = cfg;
+        off.packing = false;
+        for p in Precision::ALL {
+            assert_eq!(off.lane_slots(p), 64, "{p}: unpacked datapath is one slot per PE");
+        }
+    }
+
+    #[test]
+    fn wave_law_over_packed_slots() {
+        // ceil(elements / (pes·pack)): the analytic law the executors and
+        // the simulator share
+        let slots = packed_lanes(64, Precision::Fxp4, true);
+        assert_eq!(slots, 256);
+        assert_eq!(mac_waves(1, slots), 1);
+        assert_eq!(mac_waves(256, slots), 1);
+        assert_eq!(mac_waves(257, slots), 2);
+        assert_eq!(mac_wave_cycles(512, slots, 4), 8);
     }
 }

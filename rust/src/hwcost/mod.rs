@@ -25,7 +25,10 @@ mod system;
 pub use af::{aux_overhead_fraction, multi_af_asic, multi_af_fpga};
 pub use mac::{iterative_mac_asic, iterative_mac_fpga, pipelined_mac_asic, pipelined_mac_fpga};
 pub use primitives::{AsicPrimitives, FpgaPrimitives};
-pub use system::{cluster_asic, engine_asic, engine_fpga, ClusterAsic, SystemAsic, SystemFpga};
+pub use system::{
+    cluster_asic, cluster_asic_at, engine_asic, engine_asic_at, engine_fpga, ClusterAsic,
+    SystemAsic, SystemFpga,
+};
 
 /// FPGA post-P&R style resource/timing/power estimate for one block
 /// (VC707-class device, 100 MHz methodology as in the paper §IV-C).

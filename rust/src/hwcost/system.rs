@@ -10,6 +10,7 @@
 
 use super::primitives::{AsicPrimitives, FpgaPrimitives};
 use super::{af, mac};
+use crate::cordic::mac::{ExecMode, MacConfig};
 use crate::engine::EngineConfig;
 use crate::quant::Precision;
 
@@ -101,6 +102,22 @@ pub fn engine_asic(cfg: &EngineConfig, cycles_per_mac: u32) -> SystemAsic {
     let peak_gops = pes / cycles_per_mac as f64 * 2.0 * freq_ghz;
 
     SystemAsic { area_mm2, freq_ghz, power_mw, peak_gops }
+}
+
+/// ASIC model of the engine at a named `(precision, mode)` operating point
+/// with the **packed sub-word lane law** applied: area, frequency and
+/// power are the 16-bit datapath's — packing reuses the same hardware,
+/// which is the paper's "within the same hardware resources" — while peak
+/// throughput counts [`EngineConfig::lane_slots`] element slots per wave.
+/// With `packing` disabled on the config this degenerates to
+/// [`engine_asic`] at the operating point's cycles/MAC exactly, so the
+/// packed column of the throughput tables is an A/B of the one pack law,
+/// not a second pricing model.
+pub fn engine_asic_at(cfg: &EngineConfig, precision: Precision, mode: ExecMode) -> SystemAsic {
+    let cpm = MacConfig::new(precision, mode).cycles_per_mac();
+    let mut r = engine_asic(cfg, cpm);
+    r.peak_gops = cfg.lane_slots(precision) as f64 / cpm as f64 * 2.0 * r.freq_ghz;
+    r
 }
 
 /// FPGA model of the engine (Table IV row; the paper's FPGA build maps the
@@ -211,6 +228,23 @@ pub fn cluster_asic(cfg: &EngineConfig, shards: usize, cycles_per_mac: u32) -> C
     }
 }
 
+/// ASIC model of an M-shard cluster at a `(precision, mode)` operating
+/// point — [`cluster_asic`] with every shard's peak repriced through the
+/// packed lane law ([`engine_asic_at`]). Area, power and clock are
+/// unchanged: packing reuses the same silicon.
+pub fn cluster_asic_at(
+    cfg: &EngineConfig,
+    shards: usize,
+    precision: Precision,
+    mode: ExecMode,
+) -> ClusterAsic {
+    let cpm = MacConfig::new(precision, mode).cycles_per_mac();
+    let mut c = cluster_asic(cfg, shards, cpm);
+    c.engine = engine_asic_at(cfg, precision, mode);
+    c.peak_gops = shards as f64 * c.engine.peak_gops;
+    c
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -277,6 +311,49 @@ mod tests {
         let r256 = engine_asic(&EngineConfig::pe256(), 4);
         let growth = r256.area_mm2 / r64.area_mm2;
         assert!(growth > 1.0 && growth < 4.0, "area growth {growth} for 4x PEs");
+    }
+
+    #[test]
+    fn packed_pricing_multiplies_peak_by_the_pack_factor() {
+        // same silicon, same clock, same power — peak throughput scales
+        // with the sub-word pack factor (the paper's 4x claim, priced)
+        use crate::engine::pack_factor;
+        let cfg = EngineConfig::pe64();
+        for mode in [ExecMode::Approximate, ExecMode::Accurate] {
+            for precision in Precision::ALL {
+                let packed = engine_asic_at(&cfg, precision, mode);
+                let mut off = cfg;
+                off.packing = false;
+                let unpacked = engine_asic_at(&off, precision, mode);
+                assert_eq!(packed.area_mm2, unpacked.area_mm2, "same hardware");
+                assert_eq!(packed.power_mw, unpacked.power_mw, "same power");
+                assert_eq!(packed.freq_ghz, unpacked.freq_ghz, "same clock");
+                let ratio = packed.peak_gops / unpacked.peak_gops;
+                assert!(
+                    (ratio - pack_factor(precision) as f64).abs() < 1e-12,
+                    "{precision} {mode:?}: packed/unpacked peak {ratio}"
+                );
+                // unpacked pricing degenerates to the raw per-slot model
+                let cpm = MacConfig::new(precision, mode).cycles_per_mac();
+                let raw = engine_asic(&off, cpm);
+                assert!((unpacked.peak_gops - raw.peak_gops).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn cluster_pricing_consumes_the_same_pack_law() {
+        let cfg = EngineConfig::pe64();
+        for shards in [1usize, 4] {
+            let c = cluster_asic_at(&cfg, shards, Precision::Fxp4, ExecMode::Accurate);
+            let e = engine_asic_at(&cfg, Precision::Fxp4, ExecMode::Accurate);
+            assert!((c.peak_gops - shards as f64 * e.peak_gops).abs() < 1e-9);
+            let base = cluster_asic(&cfg, shards, 4);
+            assert_eq!(c.area_mm2, base.area_mm2, "packing adds no silicon");
+            assert_eq!(c.power_mw, base.power_mw);
+            // FxP-4 packs 4 streams per lane at the same 4 cycles/MAC
+            assert!((c.peak_gops / base.peak_gops - 4.0).abs() < 1e-12);
+        }
     }
 
     #[test]

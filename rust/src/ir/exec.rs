@@ -4,8 +4,11 @@
 //! element at a time — `for o in 0..outputs { dot(...) }` — wrapping every
 //! operand in an [`crate::fxp::Fxp`] and recomputing operand indices per
 //! MAC. This executor runs the same bit-exact CORDIC arithmetic in
-//! **PE-array-wide waves**: output elements are chunked into lanes of
-//! [`EngineConfig::pes`], operand banks are quantised into guard-format
+//! **PE-array-wide waves**: output elements are chunked into the array's
+//! element slots ([`EngineConfig::lane_slots`] — `pes × pack_factor`, the
+//! precision-packed sub-word lane law; packing only widens the chunk, each
+//! stream still runs the scalar guard-word MAC sequence, so outputs are
+//! bit-identical with packing on or off), operand banks are quantised into
 //! `i64` words once, and each weight (conv) / activation (dense) word is
 //! fetched once per wave and broadcast across the lanes — exactly the
 //! vector engine's lock-stepped broadcast structure (paper §III-B).
@@ -29,10 +32,11 @@
 //! **batch dimension**: the `B × outputs` elements of each layer are
 //! flattened into one lane stream, so a layer whose output count is
 //! smaller than the PE array (the under-occupancy case of §III-B) still
-//! fills `min(pes, B·outputs)` lanes per issue chunk. Per-sample outputs
-//! stay bit-identical to the scalar path — lanes are independent, and each
-//! keeps the scalar operand order — while [`BatchRunStats`] reports the
-//! occupancy the batching recovered.
+//! fills `min(lane_slots, B·outputs)` slots per issue chunk. Per-sample
+//! outputs stay bit-identical to the scalar path — lanes are independent,
+//! and each keeps the scalar operand order — while [`BatchRunStats`]
+//! reports the occupancy the batching recovered, measured against the
+//! packed slot capacity.
 
 use crate::activation::funcs::AfCost;
 use crate::activation::MultiAfBlock;
@@ -123,17 +127,19 @@ pub struct BatchLayerStats {
     pub kind: &'static str,
     /// MAC operations across the whole batch.
     pub macs: u64,
-    /// MAC waves under the engine's wave law (`mac_waves(macs, pes)`).
+    /// MAC waves under the engine's wave law (`mac_waves(macs,
+    /// lane_slots)` — packed element slots, not raw PEs).
     pub waves: u64,
     /// MAC-phase cycles under the engine's wave law, for the whole batch.
     pub mac_cycles: u64,
     /// Output elements scheduled on the lanes (`B × outputs`; 0 for
     /// non-MAC layers, which bypass the PE array).
     pub elements: u64,
-    /// PE-wide issue chunks the elements were packed into
-    /// (`ceil(elements / pes)`).
+    /// Array-wide issue chunks the elements were packed into
+    /// (`ceil(elements / (pes × pack))` — the packed-lane analytic law).
     pub chunks: u64,
-    /// Lane slots those chunks offered (`chunks × pes`).
+    /// Element slots those chunks offered (`chunks × pes × pack` with
+    /// packing on; `chunks × pes` off).
     pub lane_slots: u64,
     /// Activation datapath cost across the batch.
     pub af_cost: AfCost,
@@ -170,6 +176,9 @@ impl BatchLayerStats {
 pub struct BatchRunStats {
     /// PE lanes the waves were scheduled over.
     pub pes: usize,
+    /// Whether sub-word precision packing was enabled (occupancy and wave
+    /// counts are then measured against `pes × pack_factor` slots).
+    pub packing: bool,
     /// Samples packed per wave stream.
     pub batch: usize,
     /// Per-layer breakdown.
@@ -216,20 +225,28 @@ impl BatchRunStats {
 
 /// The analytic lane-occupancy law of the batched executor over an IR
 /// graph: per compute layer, `batch × outputs` elements pack into
-/// `ceil(·/pes)` PE-wide chunks. No functional execution — usable on
-/// workloads far too large to run on the host (the VGG-16 occupancy table
-/// in EXPERIMENTS.md), and exactly what [`BatchLayerStats::occupancy`]
-/// reports when the layer *is* executed.
-pub fn graph_batch_occupancy(graph: &Graph, pes: usize, batch: usize) -> Vec<(String, f64)> {
-    assert!(pes > 0 && batch > 0, "need at least one lane and one sample");
+/// `ceil(·/slots)` array-wide chunks, where `slots` is the layer's
+/// precision-packed capacity ([`EngineConfig::lane_slots`] at the layer's
+/// annotated precision; unannotated layers price at the engine default).
+/// No functional execution — usable on workloads far too large to run on
+/// the host (the VGG-16 occupancy table in EXPERIMENTS.md), and exactly
+/// what [`BatchLayerStats::occupancy`] reports when the layer *is*
+/// executed (parity tested in `tests/ir_parity.rs`).
+pub fn graph_batch_occupancy(
+    graph: &Graph,
+    config: &EngineConfig,
+    batch: usize,
+) -> Vec<(String, f64)> {
+    assert!(config.pes > 0 && batch > 0, "need at least one lane and one sample");
     graph
         .layers
         .iter()
         .filter(|l| l.is_compute())
         .map(|l| {
+            let slots = config.lane_slots(l.policy.unwrap_or_default().precision) as u64;
             let elements = l.cost.outputs * batch as u64;
-            let chunks = elements.div_ceil(pes as u64).max(1);
-            (l.name.clone(), elements as f64 / (chunks * pes as u64) as f64)
+            let chunks = elements.div_ceil(slots).max(1);
+            (l.name.clone(), elements as f64 / (chunks * slots) as f64)
         })
         .collect()
 }
@@ -259,9 +276,9 @@ impl WaveExecutor {
     ) -> (Tensor, WaveRunStats) {
         assert_eq!(input.shape(), &net.input_shape[..], "input shape mismatch");
         assert_eq!(policy.len(), net.compute_layers(), "policy/compute-layer mismatch");
-        let pes = self.config.pes;
+        let cfg = &self.config;
         let mut x = input.clone();
-        let mut stats = WaveRunStats { pes, ..Default::default() };
+        let mut stats = WaveRunStats { pes: cfg.pes, ..Default::default() };
         let mut pidx = 0usize;
         let mut current: LayerPolicy = if policy.is_empty() {
             LayerPolicy { layer: 0, precision: Precision::Fxp16, mode: crate::cordic::mac::ExecMode::Accurate }
@@ -273,14 +290,14 @@ impl WaveExecutor {
                 Layer::Dense(d) => {
                     current = policy.layer(pidx);
                     pidx += 1;
-                    let (y, st) = wave_dense(d, &x, current, pes);
+                    let (y, st) = wave_dense(d, &x, current, cfg);
                     x = y;
                     stats.per_layer.push(st);
                 }
                 Layer::Conv2d(c) => {
                     current = policy.layer(pidx);
                     pidx += 1;
-                    let (y, st) = wave_conv(c, &x, current, pes);
+                    let (y, st) = wave_conv(c, &x, current, cfg);
                     x = y;
                     stats.per_layer.push(st);
                 }
@@ -305,13 +322,14 @@ impl WaveExecutor {
 
     /// Bit-accurate **batched** forward pass: the `B × outputs` elements of
     /// each compute layer are flattened into one lane stream, so every
-    /// issue chunk fills `min(pes, B·outputs)` lanes — layers narrower than
-    /// the PE array no longer leave lanes idle. Per-sample outputs are
-    /// bit-identical to [`Network::forward_cordic`] (each lane keeps the
-    /// scalar operand order: bias first, then operands in scalar order);
-    /// MAC cycles come from the shared engine wave law over the whole
-    /// batch. Pooling / softmax layers run per sample (they bypass the PE
-    /// array), with costs summed.
+    /// issue chunk fills `min(lane_slots, B·outputs)` element slots —
+    /// layers narrower than the (precision-packed) PE array no longer
+    /// leave slots idle. Per-sample outputs are bit-identical to
+    /// [`Network::forward_cordic`] (each lane keeps the scalar operand
+    /// order: bias first, then operands in scalar order); MAC cycles come
+    /// from the shared engine wave law over the whole batch. Pooling /
+    /// softmax layers run per sample (they bypass the PE array), with
+    /// costs summed.
     pub fn forward_batch(
         &self,
         net: &Network,
@@ -323,9 +341,14 @@ impl WaveExecutor {
             assert_eq!(x.shape(), &net.input_shape[..], "input shape mismatch");
         }
         assert_eq!(policy.len(), net.compute_layers(), "policy/compute-layer mismatch");
-        let pes = self.config.pes;
+        let cfg = &self.config;
         let mut xs: Vec<Tensor> = inputs.to_vec();
-        let mut stats = BatchRunStats { pes, batch: inputs.len(), ..Default::default() };
+        let mut stats = BatchRunStats {
+            pes: cfg.pes,
+            packing: cfg.packing,
+            batch: inputs.len(),
+            ..Default::default()
+        };
         let mut pidx = 0usize;
         let mut current: LayerPolicy = if policy.is_empty() {
             LayerPolicy {
@@ -341,14 +364,14 @@ impl WaveExecutor {
                 Layer::Dense(d) => {
                     current = policy.layer(pidx);
                     pidx += 1;
-                    let (ys, st) = batch_dense(d, &xs, current, pes);
+                    let (ys, st) = batch_dense(d, &xs, current, cfg);
                     xs = ys;
                     stats.per_layer.push(st);
                 }
                 Layer::Conv2d(c) => {
                     current = policy.layer(pidx);
                     pidx += 1;
-                    let (ys, st) = batch_conv(c, &xs, current, pes);
+                    let (ys, st) = batch_conv(c, &xs, current, cfg);
                     xs = ys;
                     stats.per_layer.push(st);
                 }
@@ -393,11 +416,14 @@ fn wave_dense(
     d: &DenseParams,
     x: &Tensor,
     policy: LayerPolicy,
-    pes: usize,
+    engine: &EngineConfig,
 ) -> (Tensor, WaveLayerStats) {
     assert_eq!(x.len(), d.inputs, "dense input width mismatch");
     let cfg = MacConfig::new(policy.precision, policy.mode);
     let iters = cfg.iterations();
+    // sub-word packing widens the issue chunk to pes × pack element slots;
+    // each slot still runs the scalar guard-word MAC sequence
+    let slots = engine.lane_slots(policy.precision);
     let mut af = MultiAfBlock::new(af_iters(policy.mode));
     let xg = quantize_bank(x.data(), policy);
     let wg = quantize_bank(&d.weights, policy);
@@ -405,10 +431,10 @@ fn wave_dense(
 
     let mut out = Vec::with_capacity(d.outputs);
     let mut af_cost = AfCost::default();
-    let mut acc = vec![0i64; pes];
+    let mut acc = vec![0i64; slots];
     let mut o0 = 0usize;
     while o0 < d.outputs {
-        let lanes = pes.min(d.outputs - o0);
+        let lanes = slots.min(d.outputs - o0);
         // biases enter the wide accumulators directly (plain adder input)
         acc[..lanes].copy_from_slice(&bg[o0..o0 + lanes]);
         // each input activation is fetched once and broadcast to every
@@ -433,8 +459,8 @@ fn wave_dense(
     let stats = WaveLayerStats {
         kind: "dense",
         macs,
-        waves: mac_waves(macs, pes),
-        mac_cycles: mac_wave_cycles(macs, pes, cfg.cycles_per_mac()),
+        waves: mac_waves(macs, slots),
+        mac_cycles: mac_wave_cycles(macs, slots, cfg.cycles_per_mac()),
         af_cost,
         outputs: d.outputs,
         ..Default::default()
@@ -446,12 +472,13 @@ fn wave_conv(
     c: &Conv2dParams,
     x: &Tensor,
     policy: LayerPolicy,
-    pes: usize,
+    engine: &EngineConfig,
 ) -> (Tensor, WaveLayerStats) {
     let (in_ch, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
     assert_eq!(in_ch, c.in_ch, "conv input channels mismatch");
     let cfg = MacConfig::new(policy.precision, policy.mode);
     let iters = cfg.iterations();
+    let slots = engine.lane_slots(policy.precision);
     let mut af = MultiAfBlock::new(af_iters(policy.mode));
     let (oh, ow) = (c.out_dim(h), c.out_dim(w));
     let positions = oh * ow;
@@ -461,12 +488,12 @@ fn wave_conv(
 
     let mut out = Tensor::zeros(&[c.out_ch, oh, ow]);
     let mut af_cost = AfCost::default();
-    let mut acc = vec![0i64; pes];
-    let mut base = vec![0usize; pes];
+    let mut acc = vec![0i64; slots];
+    let mut base = vec![0usize; slots];
     for o in 0..c.out_ch {
         let mut p0 = 0usize;
         while p0 < positions {
-            let lanes = pes.min(positions - p0);
+            let lanes = slots.min(positions - p0);
             for (l, b) in base[..lanes].iter_mut().enumerate() {
                 let p = p0 + l;
                 *b = (p / ow) * c.stride * w + (p % ow) * c.stride;
@@ -500,8 +527,8 @@ fn wave_conv(
     let stats = WaveLayerStats {
         kind: "conv2d",
         macs,
-        waves: mac_waves(macs, pes),
-        mac_cycles: mac_wave_cycles(macs, pes, cfg.cycles_per_mac()),
+        waves: mac_waves(macs, slots),
+        mac_cycles: mac_wave_cycles(macs, slots, cfg.cycles_per_mac()),
         af_cost,
         outputs: c.out_ch * positions,
         ..Default::default()
@@ -514,7 +541,8 @@ fn wave_conv(
 // The batch dimension is flattened into the lane stream: chunk `l`'s lanes
 // cover consecutive global elements `e = sample · per_sample + local`, so a
 // chunk can straddle samples and a layer narrower than the PE array still
-// fills `min(pes, B · outputs)` lanes. Each lane runs the scalar path's
+// fills `min(lane_slots, B · outputs)` element slots (lane_slots = pes ×
+// pack under sub-word precision packing). Each slot runs the scalar path's
 // exact guard-word MAC sequence for its element, so per-sample outputs are
 // bit-identical to `forward_cordic` regardless of how elements are packed.
 //
@@ -530,11 +558,12 @@ fn batch_dense(
     d: &DenseParams,
     xs: &[Tensor],
     policy: LayerPolicy,
-    pes: usize,
+    engine: &EngineConfig,
 ) -> (Vec<Tensor>, BatchLayerStats) {
     let bsz = xs.len();
     let cfg = MacConfig::new(policy.precision, policy.mode);
     let iters = cfg.iterations();
+    let slots = engine.lane_slots(policy.precision);
     let mut af = MultiAfBlock::new(af_iters(policy.mode));
     let wg = quantize_bank(&d.weights, policy);
     let bg = quantize_bank(&d.biases, policy);
@@ -549,13 +578,13 @@ fn batch_dense(
     let elements = bsz * d.outputs;
     let mut out = vec![Vec::with_capacity(d.outputs); bsz];
     let mut af_cost = AfCost::default();
-    let mut acc = vec![0i64; pes];
-    let mut sample = vec![0usize; pes];
-    let mut neuron = vec![0usize; pes];
+    let mut acc = vec![0i64; slots];
+    let mut sample = vec![0usize; slots];
+    let mut neuron = vec![0usize; slots];
     let mut chunks = 0u64;
     let mut e0 = 0usize;
     while e0 < elements {
-        let lanes = pes.min(elements - e0);
+        let lanes = slots.min(elements - e0);
         chunks += 1;
         for l in 0..lanes {
             let e = e0 + l;
@@ -584,11 +613,11 @@ fn batch_dense(
     let stats = BatchLayerStats {
         kind: "dense",
         macs,
-        waves: mac_waves(macs, pes),
-        mac_cycles: mac_wave_cycles(macs, pes, cfg.cycles_per_mac()),
+        waves: mac_waves(macs, slots),
+        mac_cycles: mac_wave_cycles(macs, slots, cfg.cycles_per_mac()),
         elements: elements as u64,
         chunks,
-        lane_slots: chunks * pes as u64,
+        lane_slots: chunks * slots as u64,
         af_cost,
         outputs: d.outputs,
         ..Default::default()
@@ -600,13 +629,14 @@ fn batch_conv(
     c: &Conv2dParams,
     xs: &[Tensor],
     policy: LayerPolicy,
-    pes: usize,
+    engine: &EngineConfig,
 ) -> (Vec<Tensor>, BatchLayerStats) {
     let bsz = xs.len();
     let (in_ch, h, w) = (xs[0].shape()[0], xs[0].shape()[1], xs[0].shape()[2]);
     assert_eq!(in_ch, c.in_ch, "conv input channels mismatch");
     let cfg = MacConfig::new(policy.precision, policy.mode);
     let iters = cfg.iterations();
+    let slots = engine.lane_slots(policy.precision);
     let mut af = MultiAfBlock::new(af_iters(policy.mode));
     let (oh, ow) = (c.out_dim(h), c.out_dim(w));
     let positions = oh * ow;
@@ -624,15 +654,15 @@ fn batch_conv(
     let elements = bsz * per_sample;
     let mut out = vec![Tensor::zeros(&[c.out_ch, oh, ow]); bsz];
     let mut af_cost = AfCost::default();
-    let mut acc = vec![0i64; pes];
-    let mut sample = vec![0usize; pes];
-    let mut och = vec![0usize; pes];
-    let mut ridx = vec![0usize; pes]; // o * positions + p: the flat output index
-    let mut base = vec![0usize; pes];
+    let mut acc = vec![0i64; slots];
+    let mut sample = vec![0usize; slots];
+    let mut och = vec![0usize; slots];
+    let mut ridx = vec![0usize; slots]; // o * positions + p: the flat output index
+    let mut base = vec![0usize; slots];
     let mut chunks = 0u64;
     let mut e0 = 0usize;
     while e0 < elements {
-        let lanes = pes.min(elements - e0);
+        let lanes = slots.min(elements - e0);
         chunks += 1;
         for l in 0..lanes {
             let e = e0 + l;
@@ -671,11 +701,11 @@ fn batch_conv(
     let stats = BatchLayerStats {
         kind: "conv2d",
         macs,
-        waves: mac_waves(macs, pes),
-        mac_cycles: mac_wave_cycles(macs, pes, cfg.cycles_per_mac()),
+        waves: mac_waves(macs, slots),
+        mac_cycles: mac_wave_cycles(macs, slots, cfg.cycles_per_mac()),
         elements: elements as u64,
         chunks,
-        lane_slots: chunks * pes as u64,
+        lane_slots: chunks * slots as u64,
         af_cost,
         outputs: per_sample,
         ..Default::default()

@@ -174,9 +174,11 @@ impl ExecPolicy {
         self.mac_config().cycles_per_mac()
     }
 
-    /// As a [`LayerPolicy`] at a dense compute-layer index.
+    /// As a [`LayerPolicy`] at a dense compute-layer index — normalised,
+    /// so a hand-set `(Fxp4, Approximate)` annotation reads back as the
+    /// canonical accurate operating point just like a policy table does.
     pub fn to_layer_policy(&self, layer: usize) -> LayerPolicy {
-        LayerPolicy { layer, precision: self.precision, mode: self.mode }
+        LayerPolicy { layer, precision: self.precision, mode: self.mode }.normalised()
     }
 }
 

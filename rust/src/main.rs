@@ -57,17 +57,28 @@ fn emit(table: corvet::report::Table, csv: bool) {
 }
 
 fn cmd_table(args: &Args) -> Result<()> {
-    let n: u32 = args.pos(1, "table number")?.parse().context("table number")?;
-    let t = match n {
-        1 => tables::table1(),
-        2 => tables::table2(),
-        3 => tables::table3(),
-        4 => tables::table4(),
-        5 => tables::table5(),
-        _ => bail!("tables 1-5 exist"),
+    let which = args.pos(1, "table number")?;
+    let t = match which {
+        "1" => tables::table1(),
+        "2" => tables::table2(),
+        "3" => tables::table3(),
+        "4" => tables::table4(),
+        "5" => tables::table5(),
+        "packed" => tables::packed_throughput(),
+        _ => bail!("tables 1-5 and `packed` exist"),
     };
     emit(t, args.has_flag("csv"));
     Ok(())
+}
+
+/// Parse the `--packing on|off` A/B knob (default: on — the paper's
+/// sub-word packed datapath).
+fn parse_packing(args: &Args) -> Result<bool> {
+    match args.opt_or("packing", "on").as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("bad --packing value {other:?} (on|off)"),
+    }
 }
 
 fn cmd_fig(args: &Args) -> Result<()> {
@@ -114,14 +125,20 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let mut cfg = EngineConfig { pes, ..EngineConfig::pe256() };
     cfg.af_blocks = (pes / 64).max(1);
     cfg.pool_units = (pes / 8).max(1);
+    cfg.packing = parse_packing(args)?;
     let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
     let report = VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
-    let asic = corvet::hwcost::engine_asic(&cfg, policy.layer(0).cycles_per_mac());
+    let asic = corvet::hwcost::engine_asic_at(&cfg, precision, policy.layer(0).mode);
     let clock = asic.freq_ghz * 1e9;
 
     println!("workload       : {} ({} layers, {:.2} GMACs)", graph.name, graph.layers.len(), graph.total_macs() as f64 / 1e9);
     println!("engine         : {pes} PEs @ {:.2} GHz, {} AF blocks", asic.freq_ghz, cfg.af_blocks);
     println!("policy         : {precision} / {mode:?} ({} cyc/MAC)", policy.layer(0).cycles_per_mac());
+    println!(
+        "packing        : {} ({} element slots/wave)",
+        if cfg.packing { "on" } else { "off" },
+        cfg.lane_slots(precision)
+    );
     println!("cycles         : {}", report.total_cycles);
     println!("latency        : {} ms", fnum(report.time_ms(clock)));
     println!("throughput     : {} GOPS", fnum(report.gops(clock)));
@@ -151,6 +168,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let mut engine = EngineConfig { pes, ..EngineConfig::pe256() };
     engine.af_blocks = (pes / 64).max(1);
     engine.pool_units = (pes / 8).max(1);
+    engine.packing = parse_packing(args)?;
 
     let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
     let annotated = graph.with_policy(&policy);
@@ -163,10 +181,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     let plan = cluster.plan_ir(&annotated);
     let report = corvet::cluster::ShardExecutor::new(engine, cluster.config.interconnect)
         .run_batched(&plan, batches, batch);
-    let asic = corvet::hwcost::cluster_asic(
+    let asic = corvet::hwcost::cluster_asic_at(
         &engine,
         report.num_shards(),
-        policy.layer(0).cycles_per_mac(),
+        precision,
+        policy.layer(0).mode,
     );
     let clock = asic.freq_ghz * 1e9;
 
@@ -183,6 +202,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         report.strategy
     );
     println!("policy         : {precision} / {mode:?} ({} cyc/MAC)", policy.layer(0).cycles_per_mac());
+    println!(
+        "packing        : {} ({} element slots/wave per shard)",
+        if engine.packing { "on" } else { "off" },
+        engine.lane_slots(precision)
+    );
     println!("MAC imbalance  : {}", fnum(plan.mac_imbalance()));
     println!("micro-batches  : {batches} x {batch} sample(s), packed waves");
     println!("cycles/batch   : {} (steady state)", report.cycles_per_batch);
@@ -314,7 +338,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             Server::start(&artifacts, weights, config)?
         }
         "wave" => {
-            let engine = EngineConfig { pes, ..EngineConfig::default() };
+            let mut engine = EngineConfig { pes, ..EngineConfig::default() };
+            engine.packing = parse_packing(args)?;
             Server::start_wave(net.clone(), engine, config)?
         }
         other => bail!("unknown backend {other:?} (pjrt|wave)"),

@@ -19,7 +19,10 @@ use crate::fxp::{Format, FXP16, FXP4, FXP8};
 /// The paper's supported operand precisions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Precision {
-    /// 4-bit fixed point (Q1.2) — accurate mode only.
+    /// 4-bit fixed point (Q1.2) — accurate mode only: policy tables
+    /// canonicalise `(Fxp4, Approximate)` to accurate at construction and
+    /// on read ([`LayerPolicy::normalised`]), so the contradictory pair
+    /// never reaches the engine.
     Fxp4,
     /// 8-bit fixed point (Q3.4).
     Fxp8,

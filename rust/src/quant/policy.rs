@@ -16,9 +16,24 @@ pub struct LayerPolicy {
 }
 
 impl LayerPolicy {
+    /// Canonical form of the policy. FxP-4 has a single iteration budget
+    /// ("accurate mode only", [`Precision::Fxp4`]), so `(Fxp4,
+    /// Approximate)` normalises to `(Fxp4, Accurate)`: before this, the
+    /// MAC silently ran the accurate budget
+    /// ([`MacConfig::iterations`]) while the AF block honoured the
+    /// approximate mode — a contradictory operating point the engine
+    /// should never see. Explicit `Custom` budgets pass through.
+    pub fn normalised(mut self) -> LayerPolicy {
+        if self.precision == Precision::Fxp4 && self.mode == ExecMode::Approximate {
+            self.mode = ExecMode::Accurate;
+        }
+        self
+    }
+
     /// The MAC configuration this policy programs.
     pub fn mac_config(&self) -> MacConfig {
-        MacConfig::new(self.precision, self.mode)
+        let n = self.normalised();
+        MacConfig::new(n.precision, n.mode)
     }
 
     /// Cycles per MAC under this policy.
@@ -28,25 +43,33 @@ impl LayerPolicy {
 }
 
 /// A whole-network policy: one entry per layer, in order.
+///
+/// Entries are normalised ([`LayerPolicy::normalised`]) at construction
+/// *and* on every read, so the invalid `(Fxp4, Approximate)` pair can
+/// never reach the engine — not even through [`Self::layer_mut`]
+/// mutation (the sensitivity assigner flips modes in place).
 #[derive(Debug, Clone, PartialEq, Eq, Default)]
 pub struct PolicyTable {
     entries: Vec<LayerPolicy>,
 }
 
 impl PolicyTable {
-    /// Uniform policy: every layer identical.
+    /// Uniform policy: every layer identical (normalised).
     pub fn uniform(layers: usize, precision: Precision, mode: ExecMode) -> Self {
         PolicyTable {
-            entries: (0..layers).map(|layer| LayerPolicy { layer, precision, mode }).collect(),
+            entries: (0..layers)
+                .map(|layer| LayerPolicy { layer, precision, mode }.normalised())
+                .collect(),
         }
     }
 
-    /// Build from explicit entries (must be densely indexed 0..n).
+    /// Build from explicit entries (must be densely indexed 0..n; entries
+    /// are normalised).
     pub fn from_entries(entries: Vec<LayerPolicy>) -> Self {
         for (i, e) in entries.iter().enumerate() {
             assert_eq!(e.layer, i, "policy entries must be densely indexed");
         }
-        PolicyTable { entries }
+        PolicyTable { entries: entries.into_iter().map(LayerPolicy::normalised).collect() }
     }
 
     /// Number of layers covered.
@@ -59,19 +82,21 @@ impl PolicyTable {
         self.entries.is_empty()
     }
 
-    /// Policy for one layer.
+    /// Policy for one layer (normalised — the only form the executors and
+    /// the simulator ever read).
     pub fn layer(&self, idx: usize) -> LayerPolicy {
-        self.entries[idx]
+        self.entries[idx].normalised()
     }
 
     /// Mutable access (the sensitivity assigner edits modes in place).
+    /// Whatever is written here is canonicalised again on read.
     pub fn layer_mut(&mut self, idx: usize) -> &mut LayerPolicy {
         &mut self.entries[idx]
     }
 
-    /// Iterate entries in layer order.
-    pub fn iter(&self) -> impl Iterator<Item = &LayerPolicy> {
-        self.entries.iter()
+    /// Iterate entries in layer order (normalised).
+    pub fn iter(&self) -> impl Iterator<Item = LayerPolicy> + '_ {
+        self.entries.iter().map(|e| e.normalised())
     }
 
     /// Total MAC-cycle cost for a network whose layer `i` performs
@@ -85,9 +110,9 @@ impl PolicyTable {
             .sum()
     }
 
-    /// Count of layers in accurate mode.
+    /// Count of layers in accurate mode (normalised view).
     pub fn accurate_layers(&self) -> usize {
-        self.entries.iter().filter(|e| e.mode == ExecMode::Accurate).count()
+        self.iter().filter(|e| e.mode == ExecMode::Accurate).count()
     }
 }
 
@@ -109,6 +134,34 @@ mod tests {
         p.layer_mut(1).mode = ExecMode::Accurate;
         // layer0: 10 macs * 4 cyc, layer1: 10 macs * 5 cyc
         assert_eq!(p.total_mac_cycles(&[10, 10]), 40 + 50);
+    }
+
+    #[test]
+    fn fxp4_approximate_normalises_to_accurate() {
+        // regression: (Fxp4, Approximate) used to reach the engine with the
+        // MAC silently on the accurate budget but the AF block approximate
+        let p = PolicyTable::uniform(3, Precision::Fxp4, ExecMode::Approximate);
+        assert!(p.iter().all(|e| e.mode == ExecMode::Accurate));
+        assert_eq!(p.accurate_layers(), 3);
+        // the canonical pair is indistinguishable from asking for it
+        assert_eq!(p, PolicyTable::uniform(3, Precision::Fxp4, ExecMode::Accurate));
+        // explicit custom budgets are an intentional knob and pass through
+        let c = PolicyTable::uniform(1, Precision::Fxp4, ExecMode::Custom(6));
+        assert_eq!(c.layer(0).mode, ExecMode::Custom(6));
+        // other precisions keep their approximate mode
+        let p8 = PolicyTable::uniform(1, Precision::Fxp8, ExecMode::Approximate);
+        assert_eq!(p8.layer(0).mode, ExecMode::Approximate);
+    }
+
+    #[test]
+    fn layer_mut_cannot_smuggle_the_invalid_pair_past_reads() {
+        // the sensitivity assigner mutates modes through layer_mut; reads
+        // must still canonicalise
+        let mut p = PolicyTable::uniform(2, Precision::Fxp4, ExecMode::Accurate);
+        p.layer_mut(1).mode = ExecMode::Approximate;
+        assert_eq!(p.layer(1).mode, ExecMode::Accurate);
+        assert_eq!(p.iter().nth(1).unwrap().mode, ExecMode::Accurate);
+        assert_eq!(p.accurate_layers(), 2);
     }
 
     #[test]

@@ -228,6 +228,71 @@ pub fn table5() -> Table {
     t
 }
 
+/// Same-hardware throughput ratio of each precision vs FxP-16 under the
+/// packed sub-word lane law, isolated from iteration-count differences:
+/// wave cycles for a slot-aligned reference MAC census at one fixed
+/// per-MAC budget, through the engine's own wave law
+/// ([`crate::engine::mac_wave_cycles`] over
+/// [`crate::engine::EngineConfig::lane_slots`]). The ratios come out
+/// exactly 1.0 / 2.0 / 4.0 — the paper's "up to 4× throughput improvement
+/// within the same hardware resources", reproduced rather than restated
+/// (golden-tested in `tests/golden_crossval.rs`).
+pub fn packed_throughput_ratios(cfg: &EngineConfig) -> Vec<(Precision, f64)> {
+    // slot-aligned for every pack factor at pe64..pe256, and one shared
+    // cycles/MAC so only the lane packing differs between precisions
+    const REF_MACS: u64 = 1 << 24;
+    const REF_CYCLES_PER_MAC: u32 = 4;
+    let base = crate::engine::mac_wave_cycles(
+        REF_MACS,
+        cfg.lane_slots(Precision::Fxp16),
+        REF_CYCLES_PER_MAC,
+    );
+    Precision::ALL
+        .iter()
+        .map(|&p| {
+            let c =
+                crate::engine::mac_wave_cycles(REF_MACS, cfg.lane_slots(p), REF_CYCLES_PER_MAC);
+            (p, base as f64 / c as f64)
+        })
+        .collect()
+}
+
+/// The packed-throughput table: per precision, the pack factor, the
+/// element slots the 256-PE array offers, cycles/MAC, packed and unpacked
+/// peak GOPS (same silicon, same clock — [`hwcost::engine_asic_at`]), and
+/// the same-hardware throughput ratio vs FxP-16.
+pub fn packed_throughput() -> Table {
+    use crate::cordic::mac::{ExecMode, MacConfig};
+    use crate::engine::pack_factor;
+    let cfg = EngineConfig::pe256();
+    let mut unpacked_cfg = cfg;
+    unpacked_cfg.packing = false;
+    let ratios = packed_throughput_ratios(&cfg);
+    let mut t = Table::new(
+        "Packed sub-word lanes — same-hardware throughput, 256-PE engine, accurate mode",
+        &["precision", "bits", "pack", "lane slots", "cyc/MAC", "peak GOPS (packed)",
+          "peak GOPS (unpacked)", "same-HW throughput x vs FxP-16"],
+    );
+    // widest first so the table builds from the 1x baseline to the 4x claim
+    for precision in [Precision::Fxp16, Precision::Fxp8, Precision::Fxp4] {
+        let mode = ExecMode::Accurate;
+        let packed = hwcost::engine_asic_at(&cfg, precision, mode);
+        let unpacked = hwcost::engine_asic_at(&unpacked_cfg, precision, mode);
+        let ratio = ratios.iter().find(|(p, _)| *p == precision).unwrap().1;
+        t.row(vec![
+            precision.to_string(),
+            precision.bits().to_string(),
+            pack_factor(precision).to_string(),
+            cfg.lane_slots(precision).to_string(),
+            MacConfig::new(precision, mode).cycles_per_mac().to_string(),
+            fnum(packed.peak_gops),
+            fnum(unpacked.peak_gops),
+            fnum(ratio),
+        ]);
+    }
+    t
+}
+
 /// Cluster scaling table (beyond the paper's single-engine Table V): M
 /// engine shards on the VGG-16 trace under the pipeline partition, with
 /// steady-state throughput, per-run utilisation and the multi-engine ASIC
@@ -323,7 +388,15 @@ mod tests {
 
     #[test]
     fn all_tables_render() {
-        for t in [table1(), table2(), table3(), table4(), table5(), e2e_table(Some((100.0, 0.5)))] {
+        for t in [
+            table1(),
+            table2(),
+            table3(),
+            table4(),
+            table5(),
+            packed_throughput(),
+            e2e_table(Some((100.0, 0.5))),
+        ] {
             let text = t.render();
             assert!(text.len() > 100, "table too small:\n{text}");
             assert!(!t.rows.is_empty());
@@ -362,6 +435,27 @@ mod tests {
         let ours = &t.rows[0];
         assert!(ours[0].contains("Proposed"));
         assert_eq!(ours[5], "0");
+    }
+
+    #[test]
+    fn packed_throughput_table_builds_to_4x() {
+        let t = packed_throughput();
+        assert_eq!(t.rows.len(), 3);
+        let ratio = |prec: &str| -> f64 {
+            t.rows.iter().find(|r| r[0] == prec).unwrap()[7].parse().unwrap()
+        };
+        assert_eq!(ratio("FxP-16"), 1.0);
+        assert_eq!(ratio("FxP-8"), 2.0);
+        assert_eq!(ratio("FxP-4"), 4.0);
+        // pricing column consumes the same law: packed/unpacked GOPS ratio
+        // equals the pack column for every row (tolerance covers the
+        // table's rounded rendering only)
+        for r in &t.rows {
+            let pack: f64 = r[2].parse().unwrap();
+            let packed: f64 = r[5].parse().unwrap();
+            let unpacked: f64 = r[6].parse().unwrap();
+            assert!((packed / unpacked - pack).abs() < 0.02, "row {:?}", r[0]);
+        }
     }
 
     #[test]

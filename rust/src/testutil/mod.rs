@@ -10,7 +10,7 @@ mod prng;
 mod prop;
 
 pub use prng::Xoshiro256;
-pub use prop::{check_prop, check_prop_seeded, PropError, DEFAULT_CASES};
+pub use prop::{check_prop, check_prop_seeded, PropError, DEFAULT_CASES, PROP_SEED_ENV};
 
 /// Assert two f64 values are close (absolute + relative tolerance).
 ///

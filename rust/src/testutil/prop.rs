@@ -4,7 +4,9 @@
 //! that draws its own inputs from the PRNG and returns `Err(msg)` on
 //! violation. [`check_prop`] runs it `DEFAULT_CASES` times with distinct
 //! deterministic seeds and reports the first failing seed so the case can
-//! be replayed with [`check_prop_seeded`].
+//! be replayed with [`check_prop_seeded`] — or, without touching the test
+//! source, by re-running the test with `CORVET_PROP_SEED=<seed>` in the
+//! environment (the failure message prints the exact one-liner).
 
 use super::Xoshiro256;
 use std::fmt;
@@ -28,21 +30,45 @@ impl fmt::Display for PropError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(
             f,
-            "property failed at case {} (replay seed {}): {}",
-            self.case, self.seed, self.message
+            "property failed at case {} (replay seed {}): {}\n\
+             replay this exact case with: CORVET_PROP_SEED={} cargo test <this test>",
+            self.case, self.seed, self.message, self.seed
         )
     }
 }
 
+/// Environment variable that replays one property case: set it to a failing
+/// seed (printed in the failure message) and every `check_prop` call runs
+/// only that seed instead of its case sweep.
+pub const PROP_SEED_ENV: &str = "CORVET_PROP_SEED";
+
 /// Run `prop` for [`DEFAULT_CASES`] deterministic cases derived from `name`.
 ///
 /// Panics with a replayable seed on the first failure — intended to be
-/// called from `#[test]` fns.
+/// called from `#[test]` fns. When [`PROP_SEED_ENV`] is set, replays that
+/// single seed instead (the one-liner debugging loop for packed-lane
+/// property failures and friends).
 #[track_caller]
-pub fn check_prop<F>(name: &str, mut prop: F)
+pub fn check_prop<F>(name: &str, prop: F)
 where
     F: FnMut(&mut Xoshiro256) -> Result<(), String>,
 {
+    let seed_override = std::env::var(PROP_SEED_ENV).ok().map(|v| {
+        v.trim()
+            .parse::<u64>()
+            .unwrap_or_else(|_| panic!("{PROP_SEED_ENV} must be a u64 seed, got {v:?}"))
+    });
+    check_prop_inner(name, seed_override, prop)
+}
+
+#[track_caller]
+fn check_prop_inner<F>(name: &str, seed_override: Option<u64>, mut prop: F)
+where
+    F: FnMut(&mut Xoshiro256) -> Result<(), String>,
+{
+    if let Some(seed) = seed_override {
+        return check_prop_seeded(seed, prop);
+    }
     // Derive a base seed from the property name so distinct properties
     // explore distinct streams but runs stay reproducible.
     let base = fnv1a(name.as_bytes());
@@ -104,6 +130,32 @@ mod tests {
                 Err("hit 10".to_string())
             }
         });
+    }
+
+    #[test]
+    fn seed_override_replays_exactly_one_case() {
+        // the CORVET_PROP_SEED path, driven through the internal hook so
+        // the test does not mutate process-global env state
+        let mut seeds_seen = Vec::new();
+        check_prop_inner("any name", Some(424242), |rng| {
+            seeds_seen.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seeds_seen.len(), 1, "override runs a single case");
+        let mut expect = None;
+        check_prop_seeded(424242, |rng| {
+            expect = Some(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(seeds_seen[0], expect.unwrap(), "same stream as check_prop_seeded");
+    }
+
+    #[test]
+    fn failure_message_prints_the_replay_one_liner() {
+        let err = PropError { seed: 77, case: 3, message: "boom".into() };
+        let text = err.to_string();
+        assert!(text.contains("replay seed 77"), "{text}");
+        assert!(text.contains("CORVET_PROP_SEED=77"), "{text}");
     }
 
     #[test]

@@ -84,6 +84,45 @@ fn pe256_throughput_at_least_pe64_for_every_policy() {
 }
 
 #[test]
+fn prop_packing_never_slows_and_bounds_mac_speedup() {
+    // sub-word packing multiplies wave slots by the pack factor without
+    // touching any other engine resource: whole-inference cycles can only
+    // shrink, and the MAC phase shrinks by at most the pack factor
+    check_prop("packing monotone and bounded", |rng| {
+        let trace = rand_trace(rng);
+        let precision = rand_precision(rng);
+        let policy =
+            PolicyTable::uniform(trace.compute_layers(), precision, rand_mode(rng));
+        let pes = rng.int_in(1, 512) as usize;
+        let mut on = EngineConfig { pes, ..EngineConfig::default() };
+        on.packing = true;
+        let mut off = on;
+        off.packing = false;
+        let r_on = VectorEngine::new(on).run_trace(&trace, &policy);
+        let r_off = VectorEngine::new(off).run_trace(&trace, &policy);
+        if r_on.total_cycles > r_off.total_cycles {
+            return Err(format!(
+                "{} {precision} {pes} PEs: packed {} cycles > unpacked {}",
+                trace.name, r_on.total_cycles, r_off.total_cycles
+            ));
+        }
+        let mac = |r: &corvet::engine::EngineReport| -> u64 {
+            r.per_layer.iter().map(|l| l.mac_cycles).sum()
+        };
+        let pack = corvet::engine::pack_factor(precision) as u64;
+        if mac(&r_off) > mac(&r_on) * pack {
+            return Err(format!(
+                "{} {precision}: MAC speedup exceeds pack factor {pack}: {} vs {}",
+                trace.name,
+                mac(&r_off),
+                mac(&r_on)
+            ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_cluster_throughput_monotone_1_to_4_shards() {
     check_prop("cluster steady state monotone in shards", |rng| {
         let trace = rand_trace(rng);

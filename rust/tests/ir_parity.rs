@@ -7,9 +7,13 @@
 //!    shapes — the IR's shape inference is the single derivation site, and
 //!    it must reproduce the published numbers.
 //! 2. The wave-vectorised executor is **bit-identical** to the scalar
-//!    `forward_cordic` path across precisions, modes and lane counts.
+//!    `forward_cordic` path across precisions, modes and lane counts —
+//!    with sub-word precision packing on *and* off (packing only reorders
+//!    lane assignment, so it must be functionally invisible).
 //! 3. The functional (wave) and simulated (engine) paths agree on MAC
-//!    cycle accounting — both use the engine's wave law.
+//!    cycle accounting — both use the engine's wave law over the packed
+//!    element-slot count, and wave/chunk counts follow the analytic
+//!    `ceil(elements / (pes·pack))` law exactly.
 
 use corvet::activation::ActFn;
 use corvet::cordic::mac::ExecMode;
@@ -104,16 +108,20 @@ fn rand_policy(rng: &mut Xoshiro256, layers: usize) -> PolicyTable {
 }
 
 fn assert_bit_identical(net: &Network, x: &Tensor, policy: &PolicyTable, pes: usize) {
-    let cfg = EngineConfig { pes, ..EngineConfig::default() };
     let (y_scalar, _) = net.forward_cordic(x, policy);
-    let (y_wave, _) = net.forward_wave(x, policy, &cfg);
-    assert_eq!(y_scalar.shape(), y_wave.shape());
-    for (i, (a, b)) in y_scalar.data().iter().zip(y_wave.data()).enumerate() {
-        assert!(
-            a.to_bits() == b.to_bits(),
-            "{} pes={pes}: output {i} differs: scalar {a} wave {b}",
-            net.name
-        );
+    // sub-word packing widens the issue chunk (2x/4x element slots for
+    // FxP-8/FxP-4) but must be functionally invisible: check both datapaths
+    for packing in [true, false] {
+        let cfg = EngineConfig { pes, packing, ..EngineConfig::default() };
+        let (y_wave, _) = net.forward_wave(x, policy, &cfg);
+        assert_eq!(y_scalar.shape(), y_wave.shape());
+        for (i, (a, b)) in y_scalar.data().iter().zip(y_wave.data()).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{} pes={pes} packing={packing}: output {i} differs: scalar {a} wave {b}",
+                net.name
+            );
+        }
     }
 }
 
@@ -208,33 +216,60 @@ fn wave_bit_identical_across_named_operating_points() {
 
 /// Every sample of a batched run must be bit-identical to its own scalar
 /// and single-sample wave runs — regardless of how the batch dimension
-/// packed elements into lanes.
+/// packed elements into lanes, and with sub-word precision packing on or
+/// off. Packed chunk/wave counts must also follow the analytic law
+/// `ceil(elements / (pes·pack))`.
 fn assert_batch_bit_identical(net: &Network, xs: &[Tensor], policy: &PolicyTable, pes: usize) {
-    let cfg = EngineConfig { pes, ..EngineConfig::default() };
-    let (ys, stats) = net.forward_batch(xs, policy, &cfg);
-    assert_eq!(ys.len(), xs.len());
-    assert_eq!(stats.batch, xs.len());
-    assert_eq!(stats.pes, pes);
-    for (i, (x, yb)) in xs.iter().zip(&ys).enumerate() {
-        let (y_scalar, _) = net.forward_cordic(x, policy);
-        let (y_wave, _) = net.forward_wave(x, policy, &cfg);
-        assert_eq!(y_scalar.shape(), yb.shape());
-        for (j, (a, b)) in y_scalar.data().iter().zip(yb.data()).enumerate() {
-            assert!(
-                a.to_bits() == b.to_bits(),
-                "{} pes={pes} B={}: sample {i} output {j}: scalar {a} batch {b}",
-                net.name,
-                xs.len()
-            );
+    for packing in [true, false] {
+        let cfg = EngineConfig { pes, packing, ..EngineConfig::default() };
+        let (ys, stats) = net.forward_batch(xs, policy, &cfg);
+        assert_eq!(ys.len(), xs.len());
+        assert_eq!(stats.batch, xs.len());
+        assert_eq!(stats.pes, pes);
+        assert_eq!(stats.packing, packing);
+        assert_batch_counts_follow_packed_law(&stats, &cfg, policy);
+        for (i, (x, yb)) in xs.iter().zip(&ys).enumerate() {
+            let (y_scalar, _) = net.forward_cordic(x, policy);
+            let (y_wave, _) = net.forward_wave(x, policy, &cfg);
+            assert_eq!(y_scalar.shape(), yb.shape());
+            for (j, (a, b)) in y_scalar.data().iter().zip(yb.data()).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{} pes={pes} packing={packing} B={}: sample {i} output {j}: \
+                     scalar {a} batch {b}",
+                    net.name,
+                    xs.len()
+                );
+            }
+            for (j, (a, b)) in y_wave.data().iter().zip(yb.data()).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{} pes={pes} packing={packing} B={}: sample {i} output {j}: \
+                     wave {a} batch {b}",
+                    net.name,
+                    xs.len()
+                );
+            }
         }
-        for (j, (a, b)) in y_wave.data().iter().zip(yb.data()).enumerate() {
-            assert!(
-                a.to_bits() == b.to_bits(),
-                "{} pes={pes} B={}: sample {i} output {j}: wave {a} batch {b}",
-                net.name,
-                xs.len()
-            );
-        }
+    }
+}
+
+/// The analytic packed-lane law, asserted against executed stats: per
+/// compute layer, `chunks == ceil(elements / (pes·pack))`, `waves ==
+/// ceil(macs / (pes·pack))`, and occupancy equals what
+/// `graph_batch_occupancy` computes without executing anything.
+fn assert_batch_counts_follow_packed_law(
+    stats: &corvet::ir::BatchRunStats,
+    cfg: &EngineConfig,
+    policy: &PolicyTable,
+) {
+    let mut pidx = 0usize;
+    for l in stats.per_layer.iter().filter(|l| l.macs > 0) {
+        let slots = cfg.lane_slots(policy.layer(pidx).precision) as u64;
+        pidx += 1;
+        assert_eq!(l.chunks, l.elements.div_ceil(slots), "{}: chunk law", l.kind);
+        assert_eq!(l.waves, l.macs.div_ceil(slots), "{}: wave law", l.kind);
+        assert_eq!(l.lane_slots, l.chunks * slots, "{}: offered slots", l.kind);
     }
 }
 
@@ -273,6 +308,8 @@ fn prop_forward_batch_bit_identical_per_sample() {
 #[test]
 fn forward_batch_bit_identical_across_precisions_modes_and_sizes() {
     // the acceptance matrix: every (precision, mode, B in {1, 3, pes, pes+7})
+    // — and, through the helper, sub-word packing on AND off for each cell,
+    // with chunk/wave counts checked against ceil(elements / (pes·pack))
     let pes = 8usize;
     let mut rng = Xoshiro256::new(23);
     let net = mlp("accept-mlp", &[12, 9, 5], ActFn::Sigmoid, 77);
@@ -289,10 +326,14 @@ fn forward_batch_bit_identical_across_precisions_modes_and_sizes() {
 
 #[test]
 fn batch_occupancy_beats_single_sample_on_narrow_dense_layers() {
-    // functional: paper_mlp's 10-wide output layer fills 10/64 lanes alone,
-    // but a batch packs min(pes, B*outputs) lanes per chunk
+    // functional: paper_mlp's 10-wide output layer fills 10 of the 128
+    // packed FxP-8 slots of a 64-PE array alone, but a batch packs
+    // min(lane_slots, B*outputs) slots per chunk; with packing off the
+    // slot capacity is the raw PE count (the pre-packing numbers)
     let net = paper_mlp(31);
-    let cfg = EngineConfig::pe64();
+    let cfg = EngineConfig::pe64(); // packing on: 64 PEs x pack 2 = 128 slots
+    let mut unpacked = cfg;
+    unpacked.packing = false;
     let policy =
         PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
     let mut rng = Xoshiro256::new(8);
@@ -303,20 +344,29 @@ fn batch_occupancy_beats_single_sample_on_narrow_dense_layers() {
     let last = |s: &corvet::ir::BatchRunStats| {
         s.per_layer.iter().rev().find(|l| l.kind == "dense").unwrap().occupancy()
     };
-    assert!((last(&s1) - 10.0 / 64.0).abs() < 1e-12, "B=1 final dense occupancy");
-    assert!((last(&s8) - 80.0 / 128.0).abs() < 1e-12, "B=8 packs two 64-lane chunks");
+    assert!((last(&s1) - 10.0 / 128.0).abs() < 1e-12, "B=1 final dense occupancy (packed)");
+    assert!((last(&s8) - 80.0 / 128.0).abs() < 1e-12, "B=8 fills one 128-slot chunk");
     assert!(last(&s8) > last(&s1));
     assert!(s8.mean_occupancy() > s1.mean_occupancy());
+
+    // A/B: the unpacked datapath reports the pre-packing capacities
+    let (_, u1) = net.forward_batch(&one, &policy, &unpacked);
+    let (_, u8) = net.forward_batch(&many, &policy, &unpacked);
+    assert!((last(&u1) - 10.0 / 64.0).abs() < 1e-12, "B=1 final dense occupancy (unpacked)");
+    assert!((last(&u8) - 80.0 / 128.0).abs() < 1e-12, "B=8 packs two 64-lane chunks");
 }
 
 #[test]
 fn batch_occupancy_improves_on_vgg16_final_dense_layers() {
     // analytic law over the real VGG-16 IR (far too large to execute
-    // functionally): batching must raise lane occupancy on the dense head
+    // functionally): batching must raise lane occupancy on the dense head.
+    // The unannotated graph prices at the engine default (FxP-16, pack 1),
+    // so 256 PEs offer exactly 256 slots — the historical numbers.
     use corvet::ir::graph_batch_occupancy;
     let g = workloads::vgg16();
+    let cfg = EngineConfig::pe256();
     let occ = |b: usize, name: &str| -> f64 {
-        graph_batch_occupancy(&g, 256, b)
+        graph_batch_occupancy(&g, &cfg, b)
             .into_iter()
             .find(|(n, _)| n == name)
             .map(|(_, o)| o)
@@ -354,8 +404,8 @@ fn batch_stats_share_the_wave_cycle_law() {
             .cycles_per_mac();
         assert_eq!(
             bl.mac_cycles,
-            mac_wave_cycles(bl.macs, cfg.pes, cpm),
-            "{}: wave law over the batch total",
+            mac_wave_cycles(bl.macs, cfg.lane_slots(Precision::Fxp8), cpm),
+            "{}: wave law over the batch total, packed slots",
             bl.kind
         );
     }
@@ -374,6 +424,85 @@ fn batch_stats_share_the_wave_cycle_law() {
         .map(|l| l.mac_cycles)
         .collect();
     assert_eq!(batch_mac, sim_mac, "functional and simulated batched paths share the law");
+}
+
+#[test]
+fn executed_occupancy_matches_the_analytic_packed_law() {
+    // graph_batch_occupancy (no execution) and BatchRunStats (executed)
+    // must report the same per-layer occupancy for every precision, with
+    // packing on and off — one law, two derivations
+    let net = paper_mlp(17);
+    let mut rng = Xoshiro256::new(19);
+    let xs = inputs_for(&net, &mut rng, 3);
+    for precision in Precision::ALL {
+        for packing in [true, false] {
+            let cfg = EngineConfig { packing, ..EngineConfig::pe64() };
+            let policy =
+                PolicyTable::uniform(net.compute_layers(), precision, ExecMode::Accurate);
+            let (_, stats) = net.forward_batch(&xs, &policy, &cfg);
+            let analytic =
+                corvet::ir::graph_batch_occupancy(&net.to_ir().with_policy(&policy), &cfg, 3);
+            let executed: Vec<f64> = stats
+                .per_layer
+                .iter()
+                .filter(|l| l.macs > 0)
+                .map(|l| l.occupancy())
+                .collect();
+            assert_eq!(analytic.len(), executed.len());
+            for ((name, a), e) in analytic.iter().zip(&executed) {
+                assert!(
+                    (a - e).abs() < 1e-12,
+                    "{name} {precision} packing={packing}: analytic {a} vs executed {e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_sample_wave_counts_follow_the_packed_law() {
+    // forward_wave's per-layer wave counts obey ceil(macs / (pes·pack))
+    let net = small_cnn("cnn", PoolKind::Max, 21);
+    let mut rng = Xoshiro256::new(77);
+    let x = Tensor::from_vec(&[1, 14, 14], rng.uniform_vec(196, -0.8, 0.8));
+    for precision in Precision::ALL {
+        for packing in [true, false] {
+            let cfg = EngineConfig { packing, ..EngineConfig::pe64() };
+            let policy =
+                PolicyTable::uniform(net.compute_layers(), precision, ExecMode::Accurate);
+            let slots = cfg.lane_slots(precision) as u64;
+            let (_, wave) = net.forward_wave(&x, &policy, &cfg);
+            for l in wave.per_layer.iter().filter(|l| l.macs > 0) {
+                assert_eq!(
+                    l.waves,
+                    l.macs.div_ceil(slots),
+                    "{} {precision} packing={packing}: wave law",
+                    l.kind
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fxp4_approximate_policy_is_the_accurate_operating_point() {
+    // quant::policy normalises (Fxp4, Approximate) at construction/read, so
+    // the two spellings are the same operating point, bit for bit, on the
+    // scalar, wave and batched paths
+    let net = paper_mlp(29);
+    let mut rng = Xoshiro256::new(3);
+    let x = Tensor::vector(&rng.uniform_vec(196, -0.9, 0.9));
+    let asked =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp4, ExecMode::Approximate);
+    let canonical =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp4, ExecMode::Accurate);
+    assert_eq!(asked, canonical, "construction canonicalises the pair");
+    let (ya, _) = net.forward_cordic(&x, &asked);
+    let (yc, _) = net.forward_cordic(&x, &canonical);
+    for (a, c) in ya.data().iter().zip(yc.data()) {
+        assert_eq!(a.to_bits(), c.to_bits());
+    }
+    assert_bit_identical(&net, &x, &asked, 64);
 }
 
 #[test]
