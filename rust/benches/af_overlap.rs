@@ -1,0 +1,93 @@
+//! Bench: the overlap-scheduled multi-AF/pool/norm wave pipeline — how many
+//! non-MAC cycles the fused schedule (DESIGN.md §12) hides behind MAC
+//! waves. Captured results belong in EXPERIMENTS.md §af_overlap.
+//!
+//! Three sections:
+//!
+//! 1. the AF-overlap A/B table (`tables::af_overlap`): serial vs
+//!    overlapped simulated cycles per workload × operating point, the
+//!    hidden-cycle fraction, and the sustained GOPS both schedules price
+//!    to (`hwcost::engine_asic_at` + `sustained_gops`);
+//! 2. host-executed wave runs with the `AfScheduler` threaded through:
+//!    pipeline-law vs serial cycle totals (bit-identity of the outputs
+//!    spot-checked inline — the schedule never touches the arithmetic),
+//!    AF-block occupancy and HR/LV structural utilisation;
+//! 3. wall-clock of `forward_wave` with overlap on vs off — the schedule
+//!    is bookkeeping, so host time should be flat while modelled cycles
+//!    drop.
+
+use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::EngineConfig;
+use corvet::model::workloads::{paper_mlp, small_cnn};
+use corvet::model::Tensor;
+use corvet::pooling::sliding::PoolKind;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::fnum;
+use corvet::tables;
+use corvet::testutil::Xoshiro256;
+
+fn main() {
+    // --- 1. the simulated A/B across workloads and operating points
+    print!("{}", tables::af_overlap().render());
+
+    // --- 2. host-executed overlap accounting (scheduler threaded through)
+    let mut rng = Xoshiro256::new(17);
+    println!("\nhost-executed wave runs, 64 PEs — overlap law vs serial:");
+    println!(
+        "  {:>12} {:>10} {:>12} {:>12} {:>8} {:>10} {:>8} {:>8}",
+        "model", "policy", "serial cyc", "overlap cyc", "hidden", "AF occ", "HR util", "waits"
+    );
+    let cnn = small_cnn("cnn", PoolKind::Aad, 7);
+    let mlp = paper_mlp(23);
+    for (net, x) in [
+        (&cnn, Tensor::from_vec(&[1, 14, 14], rng.uniform_vec(196, -0.8, 0.8))),
+        (&mlp, Tensor::vector(&rng.uniform_vec(196, -0.9, 0.9))),
+    ] {
+        for (precision, mode) in [
+            (Precision::Fxp8, ExecMode::Approximate),
+            (Precision::Fxp4, ExecMode::Accurate),
+        ] {
+            let policy = PolicyTable::uniform(net.compute_layers(), precision, mode);
+            let mut on = EngineConfig::pe64();
+            on.af_overlap = true;
+            let mut off = on;
+            off.af_overlap = false;
+            let (y_on, s_on) = net.forward_wave(&x, &policy, &on);
+            let (y_off, s_off) = net.forward_wave(&x, &policy, &off);
+            assert_eq!(
+                y_on.data(),
+                y_off.data(),
+                "overlap scheduling must be functionally invisible"
+            );
+            assert!(s_on.total_pipeline_cycles() <= s_off.total_pipeline_cycles());
+            assert_eq!(s_off.total_pipeline_cycles(), s_off.total_serial_cycles());
+            println!(
+                "  {:>12} {:>10} {:>12} {:>12} {:>8} {:>10} {:>8} {:>8}",
+                net.name,
+                format!("{precision}"),
+                s_off.total_serial_cycles(),
+                s_on.total_pipeline_cycles(),
+                fnum(s_on.hidden_fraction()),
+                fnum(s_on.af_util.busy_fraction()),
+                fnum(s_on.af_util.hr_utilization),
+                fnum(s_on.af_util.mean_wait),
+            );
+        }
+    }
+
+    // --- 3. wall-clock: the schedule is bookkeeping, not arithmetic
+    let policy =
+        PolicyTable::uniform(mlp.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    let x = Tensor::vector(&rng.uniform_vec(196, -0.9, 0.9));
+    let b = Bencher { warmup: 2, samples: 10, iters_per_sample: 2 };
+    let mut rep = BenchReport::new();
+    for overlap in [true, false] {
+        let mut cfg = EngineConfig::pe64();
+        cfg.af_overlap = overlap;
+        let name = if overlap { "forward_wave overlap=on" } else { "forward_wave overlap=off" };
+        rep.push(b.run(name, || mlp.forward_wave(&x, &policy, &cfg)));
+    }
+    println!();
+    print!("{}", rep.render("af_overlap host wall-clock (paper_mlp, 64 PEs)"));
+}

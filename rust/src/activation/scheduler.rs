@@ -133,6 +133,46 @@ impl UtilizationReport {
             busy as f64 / total as f64
         }
     }
+
+    /// Combine two reports (e.g. per-layer snapshots taken with
+    /// [`AfScheduler::take_report`]): cycle and request counters add, the
+    /// weighted averages (`hr_utilization`, `lv_utilization`, `mean_wait`)
+    /// recombine under their original weights — so merging per-layer
+    /// snapshots reproduces the continuous-run report exactly, which is
+    /// the regression contract for cross-layer scheduler reuse.
+    pub fn merge(self, other: UtilizationReport) -> UtilizationReport {
+        let wavg = |a: f64, wa: u64, b: f64, wb: u64| -> f64 {
+            // zero-weight sides drop out exactly (merging with an empty
+            // report is the identity, bit for bit)
+            match (wa, wb) {
+                (0, 0) => 0.0,
+                (_, 0) => a,
+                (0, _) => b,
+                _ => (a * wa as f64 + b * wb as f64) / (wa + wb) as f64,
+            }
+        };
+        UtilizationReport {
+            hr_cycles: self.hr_cycles + other.hr_cycles,
+            lv_cycles: self.lv_cycles + other.lv_cycles,
+            lin_cycles: self.lin_cycles + other.lin_cycles,
+            bypass_cycles: self.bypass_cycles + other.bypass_cycles,
+            idle_cycles: self.idle_cycles + other.idle_cycles,
+            hr_utilization: wavg(
+                self.hr_utilization,
+                self.hr_cycles,
+                other.hr_utilization,
+                other.hr_cycles,
+            ),
+            lv_utilization: wavg(
+                self.lv_utilization,
+                self.lv_cycles,
+                other.lv_utilization,
+                other.lv_cycles,
+            ),
+            served: self.served + other.served,
+            mean_wait: wavg(self.mean_wait, self.served, other.mean_wait, other.served),
+        }
+    }
 }
 
 /// Serialising scheduler for the shared block.
@@ -219,6 +259,36 @@ impl AfScheduler {
     /// Cycle at which the block is next free.
     pub fn free_at(&self) -> u64 {
         self.free_at
+    }
+
+    /// Reset the utilisation accumulators to zero **without** touching the
+    /// block's timing state (`free_at`, the queue, the idle-gap anchor) —
+    /// the explicit per-layer reset point for schedulers reused across
+    /// layers. Before this API the reset only happened implicitly in the
+    /// scalar path (a fresh block per layer); reusing one scheduler across
+    /// layers and summing `report()` snapshots double-counted every prior
+    /// layer's cycles. `take_report` + [`UtilizationReport::merge`] is the
+    /// non-double-counting idiom (regression-tested).
+    pub fn reset_stats(&mut self) {
+        self.hr = 0;
+        self.lv = 0;
+        self.lin = 0;
+        self.bypass = 0;
+        self.idle = 0;
+        self.served = 0;
+        self.wait_sum = 0;
+        self.hr_weighted = 0.0;
+        self.lv_weighted = 0.0;
+    }
+
+    /// Snapshot the report **and** reset the accumulators (timing state is
+    /// preserved, so service continues seamlessly): per-layer snapshots
+    /// taken this way [`merge`](UtilizationReport::merge) back into exactly
+    /// the continuous-run report.
+    pub fn take_report(&mut self) -> UtilizationReport {
+        let r = self.report();
+        self.reset_stats();
+        r
     }
 
     /// Snapshot the utilisation report.
@@ -344,5 +414,84 @@ mod tests {
     #[should_panic(expected = "empty AF queue")]
     fn serve_empty_panics() {
         AfScheduler::new().serve(0, AfCost::default());
+    }
+
+    /// Drive `layers × per_layer` requests through a scheduler, optionally
+    /// taking (and resetting) a snapshot after each layer.
+    fn drive(s: &mut AfScheduler, layers: usize, per_layer: usize) -> Vec<UtilizationReport> {
+        let mut snaps = Vec::new();
+        for layer in 0..layers {
+            for i in 0..per_layer {
+                let f = if i % 2 == 0 { ActFn::Tanh } else { ActFn::Gelu };
+                s.submit(req(i % 8, f, s.free_at()));
+                let now = s.free_at();
+                s.serve(now, AfCost { hr: 10, lv: 8, lin: 4, ..Default::default() });
+            }
+            let _ = layer;
+            snaps.push(s.take_report());
+        }
+        snaps
+    }
+
+    #[test]
+    fn cross_layer_reuse_cannot_double_count() {
+        // regression: reusing one scheduler across layers and summing raw
+        // report() snapshots double-counts layer 1's cycles in layer 2's
+        // snapshot. take_report() resets the accumulators, and merging the
+        // per-layer snapshots reproduces the continuous twin exactly.
+        let mut continuous = AfScheduler::new();
+        for i in 0..40 {
+            let f = if i % 2 == 0 { ActFn::Tanh } else { ActFn::Gelu };
+            continuous.submit(req(i % 8, f, continuous.free_at()));
+            let now = continuous.free_at();
+            continuous.serve(now, AfCost { hr: 10, lv: 8, lin: 4, ..Default::default() });
+        }
+        let full = continuous.report();
+
+        let mut per_layer = AfScheduler::new();
+        let snaps = drive(&mut per_layer, 2, 20);
+        assert_eq!(snaps.len(), 2);
+        // each snapshot covers only its own layer...
+        assert_eq!(snaps[0].served, 20);
+        assert_eq!(snaps[1].served, 20, "second layer must not re-count the first");
+        assert_eq!(snaps[0].hr_cycles + snaps[1].hr_cycles, full.hr_cycles);
+        // ...and the merged snapshots equal the continuous run
+        let merged = snaps[0].merge(snaps[1]);
+        assert_eq!(merged.hr_cycles, full.hr_cycles);
+        assert_eq!(merged.lv_cycles, full.lv_cycles);
+        assert_eq!(merged.lin_cycles, full.lin_cycles);
+        assert_eq!(merged.served, full.served);
+        assert!((merged.hr_utilization - full.hr_utilization).abs() < 1e-12);
+        assert!((merged.lv_utilization - full.lv_utilization).abs() < 1e-12);
+        assert!((merged.mean_wait - full.mean_wait).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_stats_preserves_timing_state() {
+        let mut s = AfScheduler::new();
+        s.submit(req(0, ActFn::Tanh, 0));
+        let free = s.serve(0, cost_hr_lv(10, 10));
+        s.reset_stats();
+        assert_eq!(s.free_at(), free, "reset must not release the block early");
+        let r = s.report();
+        assert_eq!(r.served, 0);
+        assert_eq!(r.hr_cycles + r.lv_cycles + r.idle_cycles, 0);
+        // a request arriving before free_at still queues behind the block
+        s.submit(req(1, ActFn::Tanh, 0));
+        let t = s.serve(0, cost_hr_lv(10, 10));
+        assert_eq!(t, free + 20, "service stays serialised across the reset");
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut s = AfScheduler::new();
+        for i in 0..5 {
+            s.submit(req(i, ActFn::Sigmoid, 0));
+            let now = s.free_at();
+            s.serve(now, cost_hr_lv(6, 6));
+        }
+        let r = s.report();
+        let merged = r.merge(UtilizationReport::default());
+        assert_eq!(merged, r);
     }
 }

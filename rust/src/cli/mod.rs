@@ -77,13 +77,15 @@ corvet — CORDIC-powered vector engine (paper reproduction)
 USAGE: corvet <command> [options]
 
 COMMANDS:
-  table <1|2|3|4|5|packed> [--csv]   regenerate a paper table (`packed` =
-                                     sub-word lane throughput: the 4x claim)
+  table <1|2|3|4|5|packed|af> [--csv] regenerate a paper table (`packed` =
+                                     sub-word lane throughput: the 4x claim;
+                                     `af` = AF-overlap hidden-cycle A/B)
   fig <11|13> [--quick] [--csv]      regenerate a paper figure's data
   simulate [--workload tinyyolo|vgg16|vit-mlp] [--pes N] [--precision fxp4|8|16]
-           [--mode approx|accurate] [--packing on|off]
+           [--mode approx|accurate] [--packing on|off] [--overlap on|off]
                                      run the vector-engine simulator
-                                     (--packing off = one element per lane A/B)
+                                     (--packing off = one element per lane A/B;
+                                     --overlap off = serial MAC-then-AF A/B)
   train [--quick] [--out FILE]       train the MLP on synthetic data (FP32)
   sensitivity [--quick] [--budget F] run the accuracy-sensitivity heuristic
   serve [--requests N] [--batch N] [--precision fxp8|fxp16]
@@ -93,7 +95,8 @@ COMMANDS:
   cluster [--workload tinyyolo|vgg16|vit-mlp] [--shards M] [--pes N]
           [--strategy pipeline|tensor|data] [--batches B] [--batch S]
           [--precision P] [--mode approx|accurate] [--packing on|off]
-          [--sweep] [--csv]          sharded multi-engine simulation
+          [--overlap on|off] [--sweep] [--csv]
+                                     sharded multi-engine simulation
                                      (S samples per micro-batch, packed waves)
   utilization                        multi-AF time-multiplexing report
   info [--artifacts DIR]             platform + artifact inventory

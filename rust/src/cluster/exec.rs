@@ -388,6 +388,34 @@ mod tests {
     }
 
     #[test]
+    fn overlap_law_reprices_the_whole_cluster_schedule() {
+        // shard latencies come from the engine simulator, which prices
+        // layer makespans through ir::exec::layer_pipeline_cycles — so the
+        // pipeline DP boundaries, the steady-state bottleneck and the
+        // makespan must all reflow when the overlap schedule is toggled,
+        // and overlapped serving can never be slower than serial
+        let g = annotated(&vgg16());
+        let icn = InterconnectConfig::default();
+        let mut on = EngineConfig::pe64();
+        on.af_overlap = true;
+        let mut off = on;
+        off.af_overlap = false;
+        for strategy in [PartitionStrategy::Pipeline, PartitionStrategy::Tensor] {
+            let plan_on = plan(&g, 4, &on, &icn, strategy);
+            let plan_off = plan(&g, 4, &off, &icn, strategy);
+            let r_on = ShardExecutor::new(on, icn).run(&plan_on, 8);
+            let r_off = ShardExecutor::new(off, icn).run(&plan_off, 8);
+            assert!(
+                r_on.cycles_per_batch < r_off.cycles_per_batch,
+                "{strategy:?}: overlapped steady state {} must beat serial {}",
+                r_on.cycles_per_batch,
+                r_off.cycles_per_batch
+            );
+            assert!(r_on.total_cycles < r_off.total_cycles, "{strategy:?}: makespan");
+        }
+    }
+
+    #[test]
     fn more_shards_do_not_slow_steady_state() {
         let r1 = run(PartitionStrategy::Pipeline, 1, 4);
         let r2 = run(PartitionStrategy::Pipeline, 2, 4);

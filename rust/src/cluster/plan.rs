@@ -7,7 +7,11 @@
 //!   min-max contiguous partition, solved exactly by DP) where a layer's
 //!   weight is its simulated single-engine cycle cost — i.e. the split is
 //!   chosen from per-layer MAC counts as scheduled on the real engine
-//!   model. Stage boundaries pay a point-to-point activation transfer.
+//!   model, which since the fused AF pipeline (DESIGN.md §12) means the DP
+//!   boundaries see **overlapped** stage times: a layer whose AF drain
+//!   hides behind its MAC waves weighs its pipeline-law makespan
+//!   ([`crate::ir::exec::layer_pipeline_cycles`]), not the serial sum.
+//!   Stage boundaries pay a point-to-point activation transfer.
 //! * **Tensor** (output-channel-parallel): every layer is split across all
 //!   shards; convolutions all-gather their output slices, dense layers
 //!   all-reduce partial sums (ring collectives, priced by

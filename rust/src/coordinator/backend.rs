@@ -18,7 +18,7 @@
 //! `Send` factory rather than a built backend.
 
 use crate::cordic::mac::ExecMode;
-use crate::engine::EngineConfig;
+use crate::engine::{EngineConfig, VectorEngine};
 use crate::ir::WaveExecutor;
 use crate::model::{Network, Tensor};
 use crate::quant::{PolicyTable, Precision};
@@ -137,6 +137,24 @@ impl WaveBackend {
     fn policy(&self, mode: ExecMode) -> PolicyTable {
         PolicyTable::uniform(self.net.compute_layers(), self.precision, mode)
     }
+
+    /// Simulated engine cycles for one `batch`-sample dispatch under
+    /// governor `mode` — the wave backend's latency estimate for capacity
+    /// planning (printed by `corvet serve --backend wave`; per-request
+    /// admission would want the [`ShardedService`](super::ShardedService)
+    /// cached-pricing pattern, as this re-lowers and re-simulates per
+    /// call). Priced by the engine simulator on the backend's own
+    /// configuration, so the estimate inherits the packed lane law *and*
+    /// the AF-overlap pipeline law
+    /// ([`crate::ir::exec::layer_pipeline_cycles`]): turning `af_overlap`
+    /// off on the engine config raises the estimate, exactly as it raises
+    /// the simulated serving price.
+    pub fn estimated_batch_cycles(&self, batch: usize, mode: ExecMode) -> u64 {
+        let graph = self.net.to_ir().with_policy(&self.policy(mode));
+        VectorEngine::new(self.exec.config)
+            .run_ir_batch(&graph, batch.max(1))
+            .total_cycles
+    }
 }
 
 impl ExecBackend for WaveBackend {
@@ -223,6 +241,30 @@ mod tests {
             let b = unpacked.execute(&refs, mode).unwrap();
             assert_eq!(a, b, "mode {mode:?}: packing changed served logits");
         }
+    }
+
+    #[test]
+    fn wave_backend_latency_estimate_inherits_the_overlap_law() {
+        let net = paper_mlp(13);
+        let mut on_cfg = EngineConfig::pe64();
+        on_cfg.af_overlap = true;
+        let mut off_cfg = on_cfg;
+        off_cfg.af_overlap = false;
+        let on = WaveBackend::new(net.clone(), on_cfg, Precision::Fxp8).unwrap();
+        let off = WaveBackend::new(net, off_cfg, Precision::Fxp8).unwrap();
+        for mode in [ExecMode::Approximate, ExecMode::Accurate] {
+            let e_on = on.estimated_batch_cycles(8, mode);
+            let e_off = off.estimated_batch_cycles(8, mode);
+            assert!(e_on > 0);
+            assert!(
+                e_on <= e_off,
+                "{mode:?}: overlapped estimate {e_on} must not exceed serial {e_off}"
+            );
+        }
+        // batching amortises: 8 packed samples cost less than 8 dispatches
+        let b8 = on.estimated_batch_cycles(8, ExecMode::Approximate);
+        let b1 = on.estimated_batch_cycles(1, ExecMode::Approximate);
+        assert!(b8 < 8 * b1, "packed dispatch must be sub-linear: {b8} vs 8x{b1}");
     }
 
     #[test]

@@ -32,6 +32,21 @@ pub const PE_DATAPATH_BITS: u32 = 16;
 /// (simulator, wave executor, occupancy accounting, hwcost pricing,
 /// cluster/serving repricing) derives its effective lane count from this
 /// one function.
+///
+/// The doctest is the DESIGN.md §11 formula, executable so it cannot
+/// drift from the code:
+///
+/// ```
+/// use corvet::engine::{pack_factor, PE_DATAPATH_BITS};
+/// use corvet::quant::Precision;
+/// assert_eq!(pack_factor(Precision::Fxp16), 1);
+/// assert_eq!(pack_factor(Precision::Fxp8), 2);
+/// assert_eq!(pack_factor(Precision::Fxp4), 4);
+/// // every precision fills the 16-bit word exactly — no slack bits
+/// for p in Precision::ALL {
+///     assert_eq!(pack_factor(p) * p.bits(), PE_DATAPATH_BITS);
+/// }
+/// ```
 #[inline]
 pub fn pack_factor(precision: Precision) -> u32 {
     PE_DATAPATH_BITS / precision.bits()
@@ -62,6 +77,22 @@ pub fn mac_waves(macs: u64, lanes: usize) -> u64 {
 /// Cycles of the MAC phase for `macs` MACs on `lanes` element slots at
 /// `cycles_per_mac` — the wave cycle law shared by the trace simulator and
 /// the wave-vectorised functional executor, so the two paths cannot drift.
+/// The overlap twin pricing the layer's non-MAC drain against this phase
+/// is [`crate::ir::exec::layer_pipeline_cycles`] (DESIGN.md §12).
+///
+/// The doctest is the DESIGN.md §9 formula
+/// `cycles = ceil(macs / lanes) × cycles_per_mac`, executable so it cannot
+/// drift from the code:
+///
+/// ```
+/// use corvet::engine::mac_wave_cycles;
+/// // 1000 MACs on 64 lanes at 4 cycles/MAC: ceil(1000/64) = 16 waves
+/// assert_eq!(mac_wave_cycles(1000, 64, 4), 16 * 4);
+/// // a slot-aligned census divides exactly
+/// assert_eq!(mac_wave_cycles(1024, 64, 4), 64);
+/// // one straggler MAC still costs a full wave
+/// assert_eq!(mac_wave_cycles(1025, 64, 4), 68);
+/// ```
 #[inline]
 pub fn mac_wave_cycles(macs: u64, lanes: usize, cycles_per_mac: u32) -> u64 {
     mac_waves(macs, lanes) * cycles_per_mac as u64

@@ -38,6 +38,17 @@ impl SystemAsic {
     pub fn tops_per_mm2(&self) -> f64 {
         (self.peak_gops / 1e3) / self.area_mm2
     }
+
+    /// Sustained (not peak) GOPS of this operating point on a simulated
+    /// workload: the report's op census over its total cycles at this
+    /// design's clock. Because the simulator prices layer makespans through
+    /// the shared overlap law ([`crate::ir::exec::layer_pipeline_cycles`]),
+    /// this is where AF-block overlap reaches the hwcost operating points:
+    /// the same workload sustains strictly more GOPS with `af_overlap` on
+    /// than off on AF-bearing layers (`tables::af_overlap` prints both).
+    pub fn sustained_gops(&self, report: &crate::engine::EngineReport) -> f64 {
+        report.gops(self.freq_ghz * 1e9)
+    }
 }
 
 /// Whole-engine FPGA estimate.
@@ -354,6 +365,36 @@ mod tests {
             // FxP-4 packs 4 streams per lane at the same 4 cycles/MAC
             assert!((c.peak_gops / base.peak_gops - 4.0).abs() < 1e-12);
         }
+    }
+
+    #[test]
+    fn sustained_pricing_reflects_the_overlap_law() {
+        // the operating point's sustained GOPS must reprice through the
+        // simulator's overlap schedule: overlap-on sustains strictly more
+        // than overlap-off on an AF-bearing workload, at identical silicon
+        use crate::engine::VectorEngine;
+        use crate::ir::workloads::vgg16;
+        use crate::quant::PolicyTable;
+        let mut on = EngineConfig::pe64();
+        on.af_overlap = true;
+        let mut off = on;
+        off.af_overlap = false;
+        let g = vgg16().with_policy(&PolicyTable::uniform(
+            16,
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        ));
+        let asic_on = engine_asic_at(&on, Precision::Fxp8, ExecMode::Approximate);
+        let asic_off = engine_asic_at(&off, Precision::Fxp8, ExecMode::Approximate);
+        assert_eq!(asic_on.area_mm2, asic_off.area_mm2, "overlap adds no silicon");
+        assert_eq!(asic_on.power_mw, asic_off.power_mw);
+        let r_on = VectorEngine::new(on).run_ir(&g);
+        let r_off = VectorEngine::new(off).run_ir(&g);
+        let g_on = asic_on.sustained_gops(&r_on);
+        let g_off = asic_off.sustained_gops(&r_off);
+        assert!(g_on > g_off, "overlap must sustain more: {g_on} vs {g_off}");
+        // consistency: sustained == the report's own GOPS at the asic clock
+        assert!((g_on - r_on.gops(asic_on.freq_ghz * 1e9)).abs() < 1e-12);
     }
 
     #[test]

@@ -37,9 +37,34 @@
 //! and each keeps the scalar operand order — while [`BatchRunStats`]
 //! reports the occupancy the batching recovered, measured against the
 //! packed slot capacity.
+//!
+//! **Overlap-scheduled layer pipeline** (DESIGN.md §12). The paper couples
+//! the MAC array with "a time-multiplexed multi-AF block and a lightweight
+//! pooling and normalisation unit": the non-MAC datapaths share one block
+//! whose drain hides behind the MAC waves. Both executors model that fused
+//! schedule: the shared block drains chunk *k*'s outputs while chunk
+//! *k + 1*'s MAC waves issue, and pooling/softmax(/norm) costs schedule
+//! through the same block. The analytic makespan is
+//! [`layer_pipeline_cycles`] — the overlap twin of
+//! [`crate::engine::mac_wave_cycles`], the same function the engine
+//! simulator prices with, so the *law* cannot drift between the paths —
+//! and an [`AfScheduler`] threads through each run to measure AF-block
+//! occupancy, per-mode utilisation and queue waits
+//! ([`WaveRunStats::af_util`] / [`BatchRunStats::af_util`]). The two
+//! paths feed the law different drain operands by design: the executors
+//! model the paper's **single** time-multiplexed block (one scheduler
+//! queue) over *measured*, data-dependent per-element costs, while the
+//! simulator prices *probed* per-op costs divided across its
+//! `af_blocks` instances — so per-layer makespans coincide with the
+//! simulator exactly at `af_blocks = 1` with matching costs (what the
+//! parity tests pin), not at the multi-block configs.
+//! [`EngineConfig::af_overlap`] (CLI `--overlap on|off`) A/Bs the
+//! schedule; outputs are bit-identical either way because the schedule
+//! never touches the arithmetic.
 
 use crate::activation::funcs::AfCost;
-use crate::activation::MultiAfBlock;
+use crate::activation::scheduler::{AfRequest, AfScheduler, UtilizationReport};
+use crate::activation::{ActFn, MultiAfBlock};
 use crate::cordic::mac::{to_guard_raw, MacConfig};
 use crate::cordic::{from_guard, linear};
 use crate::engine::{mac_wave_cycles, mac_waves, EngineConfig};
@@ -50,6 +75,58 @@ use crate::model::{Conv2dParams, DenseParams, Layer, Network, Tensor};
 use crate::pooling::PoolCost;
 use crate::quant::{LayerPolicy, PolicyTable, Precision};
 
+/// The analytic overlap law: makespan of one layer whose MAC waves and
+/// shared-block (AF/pool/norm) drain run as a fused two-stage pipeline.
+///
+/// The shared block drains chunk *k*'s outputs while chunk *k + 1*'s MAC
+/// waves issue, so the layer costs `max(mac, af + ramp)`: the MAC phase
+/// when it dominates (the whole drain hides behind it), otherwise the
+/// serialised drain plus the pipeline-fill `ramp` — the MAC cycles of one
+/// issue chunk, the time before the first outputs exist (see
+/// [`pipeline_ramp_cycles`]). The `ramp` is clamped to `mac` so a layer
+/// that fits in a single chunk degenerates to the serial sum `mac + af`
+/// (there is no second chunk to overlap with), and `af == 0` degenerates
+/// to the MAC wave law exactly. The law is the overlap twin of
+/// [`crate::engine::mac_wave_cycles`]: the wave executors account with it
+/// and the engine simulator prices with it, so the two cannot drift
+/// (parity-tested in `tests/ir_parity.rs`).
+///
+/// ```
+/// use corvet::ir::exec::layer_pipeline_cycles;
+/// // MAC-bound layer: the whole AF drain hides behind later MAC waves.
+/// assert_eq!(layer_pipeline_cycles(1000, 400, 36), 1000);
+/// // AF-bound layer: MAC waves hide behind the drain after one chunk fill.
+/// assert_eq!(layer_pipeline_cycles(400, 1000, 36), 1036);
+/// // Zero AF cost degenerates to the MAC wave law exactly.
+/// assert_eq!(layer_pipeline_cycles(1000, 0, 36), 1000);
+/// // Single-chunk layer (ramp clamps to mac): nothing to overlap with.
+/// assert_eq!(layer_pipeline_cycles(400, 1000, 4000), 1400);
+/// // Never worse than the serial sum.
+/// assert!(layer_pipeline_cycles(1000, 400, 36) <= 1000 + 400);
+/// ```
+#[inline]
+pub fn layer_pipeline_cycles(mac_cycles: u64, nonmac_cycles: u64, ramp_cycles: u64) -> u64 {
+    let ramp = ramp_cycles.min(mac_cycles);
+    mac_cycles.max(nonmac_cycles.saturating_add(ramp))
+}
+
+/// The ramp (pipeline-fill) term of [`layer_pipeline_cycles`]: MAC cycles
+/// of one issue chunk — every output element needs `ceil(macs / outputs)`
+/// operand waves, and a chunk's outputs retire together after that many
+/// waves, so the shared block idles exactly this long before the first
+/// drain can start. Deliberately independent of the lane count: wider
+/// arrays retire *more* elements per chunk, not earlier ones, which is why
+/// total cycles stay monotone non-increasing in PEs under the overlap
+/// schedule (property-tested). Returns 0 when `outputs == 0` (the law then
+/// reduces to `max(mac, af)`, the pure tail model).
+#[inline]
+pub fn pipeline_ramp_cycles(macs: u64, outputs: u64, cycles_per_mac: u32) -> u64 {
+    if outputs == 0 {
+        return 0;
+    }
+    macs.div_ceil(outputs).saturating_mul(cycles_per_mac as u64)
+}
+
 /// Per-layer statistics from a wave-vectorised forward pass.
 #[derive(Debug, Clone, Default)]
 pub struct WaveLayerStats {
@@ -59,19 +136,33 @@ pub struct WaveLayerStats {
     pub macs: u64,
     /// MAC waves issued across the PE array.
     pub waves: u64,
+    /// Array-wide issue chunks the output elements were packed into
+    /// (`ceil(outputs / lane_slots)` for dense; per output channel for the
+    /// host conv kernel). 0 for non-MAC layers.
+    pub chunks: u64,
     /// MAC-phase cycles under the engine's wave law (waves × cycles/MAC).
     pub mac_cycles: u64,
     /// Activation datapath cost.
     pub af_cost: AfCost,
     /// Pooling datapath cost.
     pub pool_cost: PoolCost,
+    /// Layer makespan under the active schedule: the overlap law
+    /// ([`layer_pipeline_cycles`]) with `af_overlap` on, the serial sum
+    /// ([`Self::serial_cycles`]) with it off.
+    pub pipeline_cycles: u64,
     /// Output element count.
     pub outputs: usize,
 }
 
 impl WaveLayerStats {
+    /// The un-overlapped layer cost: MAC phase plus the full shared-block
+    /// drain run back to back.
+    pub fn serial_cycles(&self) -> u64 {
+        self.mac_cycles + self.af_cost.total() as u64 + self.pool_cost.total() as u64
+    }
+
     fn from_scalar(st: LayerStats) -> Self {
-        WaveLayerStats {
+        let mut s = WaveLayerStats {
             kind: st.kind,
             macs: st.macs,
             waves: 0,
@@ -79,7 +170,12 @@ impl WaveLayerStats {
             af_cost: st.af_cost,
             pool_cost: st.pool_cost,
             outputs: st.outputs,
-        }
+            ..Default::default()
+        };
+        // no MAC phase to hide behind: pool/softmax layers run serially on
+        // the shared block under either schedule
+        s.pipeline_cycles = s.serial_cycles();
+        s
     }
 }
 
@@ -88,6 +184,13 @@ impl WaveLayerStats {
 pub struct WaveRunStats {
     /// PE lanes the waves were scheduled over.
     pub pes: usize,
+    /// Whether the fused MAC/AF overlap schedule was active
+    /// ([`EngineConfig::af_overlap`]).
+    pub overlap: bool,
+    /// Shared AF-block report from the [`AfScheduler`] threaded through the
+    /// run: occupancy ([`UtilizationReport::busy_fraction`]), HR/LV
+    /// structural utilisation and queue waits under the active schedule.
+    pub af_util: UtilizationReport,
     /// Per-layer breakdown.
     pub per_layer: Vec<WaveLayerStats>,
 }
@@ -118,6 +221,39 @@ impl WaveRunStats {
     pub fn total_pool_cycles(&self) -> u64 {
         self.per_layer.iter().map(|l| l.pool_cost.total() as u64).sum()
     }
+
+    /// Total layer makespans under the active schedule (overlap law when
+    /// `overlap`, serial sums otherwise).
+    pub fn total_pipeline_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.pipeline_cycles).sum()
+    }
+
+    /// Total un-overlapped cycles (MAC + AF + pool back to back) — the
+    /// `--overlap off` baseline.
+    pub fn total_serial_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.serial_cycles()).sum()
+    }
+
+    /// Scheduled-over-serial cycle ratio (1.0 = nothing hidden; always in
+    /// (0, 1] since the overlap law never exceeds the serial sum).
+    pub fn overlap_ratio(&self) -> f64 {
+        overlap_ratio_of(self.total_pipeline_cycles(), self.total_serial_cycles())
+    }
+
+    /// Fraction of the serial cycle total the overlap schedule hid behind
+    /// MAC waves (`1 − overlap_ratio`).
+    pub fn hidden_fraction(&self) -> f64 {
+        1.0 - self.overlap_ratio()
+    }
+}
+
+/// Scheduled-over-serial ratio shared by the single-sample and batched
+/// run stats (1.0 when there is nothing to schedule).
+fn overlap_ratio_of(pipeline_cycles: u64, serial_cycles: u64) -> f64 {
+    if serial_cycles == 0 {
+        return 1.0;
+    }
+    pipeline_cycles as f64 / serial_cycles as f64
 }
 
 /// Per-layer statistics from a batched (multi-sample) wave forward pass.
@@ -145,6 +281,10 @@ pub struct BatchLayerStats {
     pub af_cost: AfCost,
     /// Pooling datapath cost across the batch.
     pub pool_cost: PoolCost,
+    /// Layer makespan across the batch under the active schedule: the
+    /// overlap law ([`layer_pipeline_cycles`]) with `af_overlap` on, the
+    /// serial sum with it off.
+    pub pipeline_cycles: u64,
     /// Output element count **per sample**.
     pub outputs: usize,
 }
@@ -161,12 +301,20 @@ impl BatchLayerStats {
         }
     }
 
+    /// The un-overlapped layer cost across the batch (MAC + AF + pool back
+    /// to back).
+    pub fn serial_cycles(&self) -> u64 {
+        self.mac_cycles + self.af_cost.total() as u64 + self.pool_cost.total() as u64
+    }
+
     /// Fold one sample's scalar-path layer stats into the batch aggregate
-    /// (pooling / softmax layers run per sample on their own datapaths).
+    /// (pooling / softmax layers run per sample on their own datapaths,
+    /// serially on the shared block — no MAC phase to hide behind).
     fn merge_scalar(&mut self, st: &LayerStats) {
         self.kind = st.kind;
         self.af_cost = self.af_cost.merge(st.af_cost);
         self.pool_cost = self.pool_cost.merge(st.pool_cost);
+        self.pipeline_cycles += st.af_cost.total() as u64 + st.pool_cost.total() as u64;
         self.outputs = st.outputs;
     }
 }
@@ -179,8 +327,14 @@ pub struct BatchRunStats {
     /// Whether sub-word precision packing was enabled (occupancy and wave
     /// counts are then measured against `pes × pack_factor` slots).
     pub packing: bool,
+    /// Whether the fused MAC/AF overlap schedule was active
+    /// ([`EngineConfig::af_overlap`]).
+    pub overlap: bool,
     /// Samples packed per wave stream.
     pub batch: usize,
+    /// Shared AF-block report from the [`AfScheduler`] threaded through the
+    /// run (occupancy, HR/LV utilisation, queue waits).
+    pub af_util: UtilizationReport,
     /// Per-layer breakdown.
     pub per_layer: Vec<BatchLayerStats>,
 }
@@ -209,6 +363,27 @@ impl BatchRunStats {
     /// Total pooling cycles across the batch.
     pub fn total_pool_cycles(&self) -> u64 {
         self.per_layer.iter().map(|l| l.pool_cost.total() as u64).sum()
+    }
+
+    /// Total layer makespans under the active schedule (overlap law when
+    /// `overlap`, serial sums otherwise).
+    pub fn total_pipeline_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.pipeline_cycles).sum()
+    }
+
+    /// Total un-overlapped cycles — the `--overlap off` baseline.
+    pub fn total_serial_cycles(&self) -> u64 {
+        self.per_layer.iter().map(|l| l.serial_cycles()).sum()
+    }
+
+    /// Scheduled-over-serial cycle ratio (1.0 = nothing hidden).
+    pub fn overlap_ratio(&self) -> f64 {
+        overlap_ratio_of(self.total_pipeline_cycles(), self.total_serial_cycles())
+    }
+
+    /// Fraction of the serial cycle total hidden behind MAC waves.
+    pub fn hidden_fraction(&self) -> f64 {
+        1.0 - self.overlap_ratio()
     }
 
     /// Lane occupancy over every MAC issue chunk of the run (weighted by
@@ -251,6 +426,106 @@ pub fn graph_batch_occupancy(
         .collect()
 }
 
+/// Books one wave kernel's chunk drains on the shared block: the AF cost
+/// accumulated over a chunk's lanes is submitted to the [`AfScheduler`]
+/// when the chunk's MAC waves retire (at the overlap schedule's arrival
+/// clock — `t0 + k·ramp`, capped at the layer's MAC phase; at the end of
+/// the MAC phase with overlap off) and served in queue order, so the
+/// scheduler's report measures real AF-block occupancy and queue waits
+/// without touching the arithmetic.
+struct ChunkDrain<'a> {
+    sched: &'a mut AfScheduler,
+    act: ActFn,
+    t0: u64,
+    ramp: u64,
+    mac_cycles: u64,
+    overlap: bool,
+    chunk: u64,
+    pending: AfCost,
+    layer_total: AfCost,
+}
+
+impl<'a> ChunkDrain<'a> {
+    fn new(
+        sched: &'a mut AfScheduler,
+        act: ActFn,
+        t0: u64,
+        ramp: u64,
+        mac_cycles: u64,
+        overlap: bool,
+    ) -> Self {
+        ChunkDrain {
+            sched,
+            act,
+            t0,
+            ramp,
+            mac_cycles,
+            overlap,
+            chunk: 0,
+            pending: AfCost::default(),
+            layer_total: AfCost::default(),
+        }
+    }
+
+    /// Accumulate one lane's AF cost into the current chunk (and the layer
+    /// total — one accumulator, so the stats and the scheduler cannot
+    /// drift).
+    fn absorb(&mut self, cost: AfCost) {
+        self.pending = self.pending.merge(cost);
+        self.layer_total = self.layer_total.merge(cost);
+    }
+
+    /// Close the current chunk: its outputs have retired, so its drain is
+    /// booked on the shared block.
+    fn retire(&mut self, lanes: usize) {
+        let cost = std::mem::take(&mut self.pending);
+        self.chunk += 1;
+        if cost.total() == 0 {
+            return; // bypass-free chunk (Identity): nothing occupies the block
+        }
+        let arrival = if self.overlap {
+            self.t0 + self.mac_cycles.min(self.chunk.saturating_mul(self.ramp))
+        } else {
+            self.t0 + self.mac_cycles
+        };
+        self.sched.submit(AfRequest {
+            pe: (self.chunk - 1) as usize,
+            func: self.act,
+            issue_cycle: arrival,
+            elements: lanes,
+        });
+        self.sched.serve(arrival, cost);
+    }
+
+    /// Chunks retired so far.
+    fn chunks(&self) -> u64 {
+        self.chunk
+    }
+
+    /// The layer's whole drain cost, and the layer makespan it prices to
+    /// under the active schedule — the one place the kernels derive both.
+    fn finish(&self) -> (AfCost, u64) {
+        let af = self.layer_total.total() as u64;
+        let pipeline = if self.overlap {
+            layer_pipeline_cycles(self.mac_cycles, af, self.ramp)
+        } else {
+            self.mac_cycles + af
+        };
+        (self.layer_total, pipeline)
+    }
+}
+
+/// Book a non-MAC layer's whole drain (pooling / softmax / norm costs,
+/// expressed as shared-block cycles) at engine clock `at` — serially:
+/// there is no MAC phase of its own to hide behind.
+fn drain_block(sched: &mut AfScheduler, func: ActFn, at: u64, cost: AfCost) {
+    if cost.total() == 0 {
+        return;
+    }
+    sched.submit(AfRequest { pe: 0, func, issue_cycle: at, elements: cost.total() as usize });
+    sched.serve(at, cost);
+}
+
 /// Executes a [`Network`] in PE-array-wide MAC waves.
 #[derive(Debug, Clone, Copy)]
 pub struct WaveExecutor {
@@ -278,7 +553,10 @@ impl WaveExecutor {
         assert_eq!(policy.len(), net.compute_layers(), "policy/compute-layer mismatch");
         let cfg = &self.config;
         let mut x = input.clone();
-        let mut stats = WaveRunStats { pes: cfg.pes, ..Default::default() };
+        let mut stats =
+            WaveRunStats { pes: cfg.pes, overlap: cfg.af_overlap, ..Default::default() };
+        let mut sched = AfScheduler::new();
+        let mut clock = 0u64;
         let mut pidx = 0usize;
         let mut current: LayerPolicy = if policy.is_empty() {
             LayerPolicy { layer: 0, precision: Precision::Fxp16, mode: crate::cordic::mac::ExecMode::Accurate }
@@ -290,21 +568,26 @@ impl WaveExecutor {
                 Layer::Dense(d) => {
                     current = policy.layer(pidx);
                     pidx += 1;
-                    let (y, st) = wave_dense(d, &x, current, cfg);
+                    let (y, st) = wave_dense(d, &x, current, cfg, &mut sched, clock);
                     x = y;
+                    clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
                 }
                 Layer::Conv2d(c) => {
                     current = policy.layer(pidx);
                     pidx += 1;
-                    let (y, st) = wave_conv(c, &x, current, cfg);
+                    let (y, st) = wave_conv(c, &x, current, cfg, &mut sched, clock);
                     x = y;
+                    clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
                 }
                 Layer::Pool2d(p) => {
                     let (y, st) = pool_cordic(p, &x, af_iters(current.mode));
                     x = y;
-                    stats.per_layer.push(WaveLayerStats::from_scalar(st));
+                    let wst = WaveLayerStats::from_scalar(st);
+                    drain_block(&mut sched, ActFn::Identity, clock, wst.pool_cost.as_af_cost());
+                    clock += wst.pipeline_cycles;
+                    stats.per_layer.push(wst);
                 }
                 Layer::Flatten => {
                     let n = x.len();
@@ -313,10 +596,14 @@ impl WaveExecutor {
                 Layer::Softmax => {
                     let (y, st) = softmax_cordic(&x, af_iters(current.mode));
                     x = y;
-                    stats.per_layer.push(WaveLayerStats::from_scalar(st));
+                    let wst = WaveLayerStats::from_scalar(st);
+                    drain_block(&mut sched, ActFn::Softmax, clock, wst.af_cost);
+                    clock += wst.pipeline_cycles;
+                    stats.per_layer.push(wst);
                 }
             }
         }
+        stats.af_util = sched.report();
         (x, stats)
     }
 
@@ -346,9 +633,12 @@ impl WaveExecutor {
         let mut stats = BatchRunStats {
             pes: cfg.pes,
             packing: cfg.packing,
+            overlap: cfg.af_overlap,
             batch: inputs.len(),
             ..Default::default()
         };
+        let mut sched = AfScheduler::new();
+        let mut clock = 0u64;
         let mut pidx = 0usize;
         let mut current: LayerPolicy = if policy.is_empty() {
             LayerPolicy {
@@ -364,15 +654,17 @@ impl WaveExecutor {
                 Layer::Dense(d) => {
                     current = policy.layer(pidx);
                     pidx += 1;
-                    let (ys, st) = batch_dense(d, &xs, current, cfg);
+                    let (ys, st) = batch_dense(d, &xs, current, cfg, &mut sched, clock);
                     xs = ys;
+                    clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
                 }
                 Layer::Conv2d(c) => {
                     current = policy.layer(pidx);
                     pidx += 1;
-                    let (ys, st) = batch_conv(c, &xs, current, cfg);
+                    let (ys, st) = batch_conv(c, &xs, current, cfg, &mut sched, clock);
                     xs = ys;
+                    clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
                 }
                 Layer::Pool2d(p) => {
@@ -380,8 +672,10 @@ impl WaveExecutor {
                     for x in xs.iter_mut() {
                         let (y, st) = pool_cordic(p, x, af_iters(current.mode));
                         *x = y;
+                        drain_block(&mut sched, ActFn::Identity, clock, st.pool_cost.as_af_cost());
                         agg.merge_scalar(&st);
                     }
+                    clock += agg.pipeline_cycles;
                     stats.per_layer.push(agg);
                 }
                 Layer::Flatten => {
@@ -395,12 +689,15 @@ impl WaveExecutor {
                     for x in xs.iter_mut() {
                         let (y, st) = softmax_cordic(x, af_iters(current.mode));
                         *x = y;
+                        drain_block(&mut sched, ActFn::Softmax, clock, st.af_cost);
                         agg.merge_scalar(&st);
                     }
+                    clock += agg.pipeline_cycles;
                     stats.per_layer.push(agg);
                 }
             }
         }
+        stats.af_util = sched.report();
         (xs, stats)
     }
 }
@@ -417,6 +714,8 @@ fn wave_dense(
     x: &Tensor,
     policy: LayerPolicy,
     engine: &EngineConfig,
+    sched: &mut AfScheduler,
+    t0: u64,
 ) -> (Tensor, WaveLayerStats) {
     assert_eq!(x.len(), d.inputs, "dense input width mismatch");
     let cfg = MacConfig::new(policy.precision, policy.mode);
@@ -429,8 +728,13 @@ fn wave_dense(
     let wg = quantize_bank(&d.weights, policy);
     let bg = quantize_bank(&d.biases, policy);
 
+    let macs = (d.inputs * d.outputs) as u64;
+    let mac_cycles = mac_wave_cycles(macs, slots, cfg.cycles_per_mac());
+    let ramp = pipeline_ramp_cycles(macs, d.outputs as u64, cfg.cycles_per_mac());
+    let mut drain =
+        ChunkDrain::new(sched, d.act, t0, ramp, mac_cycles, engine.af_overlap);
+
     let mut out = Vec::with_capacity(d.outputs);
-    let mut af_cost = AfCost::default();
     let mut acc = vec![0i64; slots];
     let mut o0 = 0usize;
     while o0 < d.outputs {
@@ -449,19 +753,23 @@ fn wave_dense(
         // wide accumulate-then-activate, lane order = scalar output order
         for &a in &acc[..lanes] {
             let (y, c) = af.apply_raw(d.act, a);
-            af_cost = af_cost.merge(c);
+            drain.absorb(c);
             out.push(from_guard(y));
         }
+        drain.retire(lanes);
         o0 += lanes;
     }
 
-    let macs = (d.inputs * d.outputs) as u64;
+    let chunks = drain.chunks();
+    let (af_cost, pipeline_cycles) = drain.finish();
     let stats = WaveLayerStats {
         kind: "dense",
         macs,
         waves: mac_waves(macs, slots),
-        mac_cycles: mac_wave_cycles(macs, slots, cfg.cycles_per_mac()),
+        chunks,
+        mac_cycles,
         af_cost,
+        pipeline_cycles,
         outputs: d.outputs,
         ..Default::default()
     };
@@ -473,6 +781,8 @@ fn wave_conv(
     x: &Tensor,
     policy: LayerPolicy,
     engine: &EngineConfig,
+    sched: &mut AfScheduler,
+    t0: u64,
 ) -> (Tensor, WaveLayerStats) {
     let (in_ch, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
     assert_eq!(in_ch, c.in_ch, "conv input channels mismatch");
@@ -486,8 +796,14 @@ fn wave_conv(
     let wg = quantize_bank(&c.weights, policy);
     let bg = quantize_bank(&c.biases, policy);
 
+    let macs = (positions * c.out_ch * c.in_ch * c.kernel * c.kernel) as u64;
+    let mac_cycles = mac_wave_cycles(macs, slots, cfg.cycles_per_mac());
+    let ramp =
+        pipeline_ramp_cycles(macs, (c.out_ch * positions) as u64, cfg.cycles_per_mac());
+    let mut drain =
+        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap);
+
     let mut out = Tensor::zeros(&[c.out_ch, oh, ow]);
-    let mut af_cost = AfCost::default();
     let mut acc = vec![0i64; slots];
     let mut base = vec![0usize; slots];
     for o in 0..c.out_ch {
@@ -516,20 +832,24 @@ fn wave_conv(
             let dst = &mut out.data_mut()[o * positions + p0..o * positions + p0 + lanes];
             for (l, &a) in acc[..lanes].iter().enumerate() {
                 let (y, cst) = af.apply_raw(c.act, a);
-                af_cost = af_cost.merge(cst);
+                drain.absorb(cst);
                 dst[l] = from_guard(y);
             }
+            drain.retire(lanes);
             p0 += lanes;
         }
     }
 
-    let macs = (positions * c.out_ch * c.in_ch * c.kernel * c.kernel) as u64;
+    let chunks = drain.chunks();
+    let (af_cost, pipeline_cycles) = drain.finish();
     let stats = WaveLayerStats {
         kind: "conv2d",
         macs,
         waves: mac_waves(macs, slots),
-        mac_cycles: mac_wave_cycles(macs, slots, cfg.cycles_per_mac()),
+        chunks,
+        mac_cycles,
         af_cost,
+        pipeline_cycles,
         outputs: c.out_ch * positions,
         ..Default::default()
     };
@@ -559,6 +879,8 @@ fn batch_dense(
     xs: &[Tensor],
     policy: LayerPolicy,
     engine: &EngineConfig,
+    sched: &mut AfScheduler,
+    t0: u64,
 ) -> (Vec<Tensor>, BatchLayerStats) {
     let bsz = xs.len();
     let cfg = MacConfig::new(policy.precision, policy.mode);
@@ -576,16 +898,18 @@ fn batch_dense(
         .collect();
 
     let elements = bsz * d.outputs;
+    let macs = (elements * d.inputs) as u64;
+    let mac_cycles = mac_wave_cycles(macs, slots, cfg.cycles_per_mac());
+    let ramp = pipeline_ramp_cycles(macs, elements as u64, cfg.cycles_per_mac());
+    let mut drain =
+        ChunkDrain::new(sched, d.act, t0, ramp, mac_cycles, engine.af_overlap);
     let mut out = vec![Vec::with_capacity(d.outputs); bsz];
-    let mut af_cost = AfCost::default();
     let mut acc = vec![0i64; slots];
     let mut sample = vec![0usize; slots];
     let mut neuron = vec![0usize; slots];
-    let mut chunks = 0u64;
     let mut e0 = 0usize;
     while e0 < elements {
         let lanes = slots.min(elements - e0);
-        chunks += 1;
         for l in 0..lanes {
             let e = e0 + l;
             sample[l] = e / d.outputs;
@@ -603,22 +927,25 @@ fn batch_dense(
         // elements are sample-major, so pushes land in scalar output order
         for l in 0..lanes {
             let (y, c) = af.apply_raw(d.act, acc[l]);
-            af_cost = af_cost.merge(c);
+            drain.absorb(c);
             out[sample[l]].push(from_guard(y));
         }
+        drain.retire(lanes);
         e0 += lanes;
     }
 
-    let macs = (elements * d.inputs) as u64;
+    let chunks = drain.chunks();
+    let (af_cost, pipeline_cycles) = drain.finish();
     let stats = BatchLayerStats {
         kind: "dense",
         macs,
         waves: mac_waves(macs, slots),
-        mac_cycles: mac_wave_cycles(macs, slots, cfg.cycles_per_mac()),
+        mac_cycles,
         elements: elements as u64,
         chunks,
         lane_slots: chunks * slots as u64,
         af_cost,
+        pipeline_cycles,
         outputs: d.outputs,
         ..Default::default()
     };
@@ -630,6 +957,8 @@ fn batch_conv(
     xs: &[Tensor],
     policy: LayerPolicy,
     engine: &EngineConfig,
+    sched: &mut AfScheduler,
+    t0: u64,
 ) -> (Vec<Tensor>, BatchLayerStats) {
     let bsz = xs.len();
     let (in_ch, h, w) = (xs[0].shape()[0], xs[0].shape()[1], xs[0].shape()[2]);
@@ -652,18 +981,20 @@ fn batch_conv(
         .collect();
 
     let elements = bsz * per_sample;
+    let macs = (elements * c.in_ch * c.kernel * c.kernel) as u64;
+    let mac_cycles = mac_wave_cycles(macs, slots, cfg.cycles_per_mac());
+    let ramp = pipeline_ramp_cycles(macs, elements as u64, cfg.cycles_per_mac());
+    let mut drain =
+        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap);
     let mut out = vec![Tensor::zeros(&[c.out_ch, oh, ow]); bsz];
-    let mut af_cost = AfCost::default();
     let mut acc = vec![0i64; slots];
     let mut sample = vec![0usize; slots];
     let mut och = vec![0usize; slots];
     let mut ridx = vec![0usize; slots]; // o * positions + p: the flat output index
     let mut base = vec![0usize; slots];
-    let mut chunks = 0u64;
     let mut e0 = 0usize;
     while e0 < elements {
         let lanes = slots.min(elements - e0);
-        chunks += 1;
         for l in 0..lanes {
             let e = e0 + l;
             sample[l] = e / per_sample;
@@ -691,22 +1022,25 @@ fn batch_conv(
         }
         for l in 0..lanes {
             let (y, cst) = af.apply_raw(c.act, acc[l]);
-            af_cost = af_cost.merge(cst);
+            drain.absorb(cst);
             out[sample[l]].data_mut()[ridx[l]] = from_guard(y);
         }
+        drain.retire(lanes);
         e0 += lanes;
     }
 
-    let macs = (elements * c.in_ch * c.kernel * c.kernel) as u64;
+    let chunks = drain.chunks();
+    let (af_cost, pipeline_cycles) = drain.finish();
     let stats = BatchLayerStats {
         kind: "conv2d",
         macs,
         waves: mac_waves(macs, slots),
-        mac_cycles: mac_wave_cycles(macs, slots, cfg.cycles_per_mac()),
+        mac_cycles,
         elements: elements as u64,
         chunks,
         lane_slots: chunks * slots as u64,
         af_cost,
+        pipeline_cycles,
         outputs: per_sample,
         ..Default::default()
     };

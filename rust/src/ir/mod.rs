@@ -40,8 +40,8 @@ pub mod workloads;
 mod tests;
 
 pub use exec::{
-    graph_batch_occupancy, BatchLayerStats, BatchRunStats, WaveExecutor, WaveLayerStats,
-    WaveRunStats,
+    graph_batch_occupancy, layer_pipeline_cycles, pipeline_ramp_cycles, BatchLayerStats,
+    BatchRunStats, WaveExecutor, WaveLayerStats, WaveRunStats,
 };
 
 use crate::activation::ActFn;

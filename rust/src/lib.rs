@@ -30,6 +30,12 @@
 //! See `DESIGN.md` for the paper→module inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results for every table and figure.
 
+// Every public item carries rustdoc; CI enforces a clean
+// `cargo doc --no-deps` with `RUSTDOCFLAGS="-D warnings"` and runs the
+// doctests (the cycle laws are executable documentation), so the docs are
+// a checked interface, not advisory prose.
+#![warn(missing_docs)]
+
 pub mod activation;
 pub mod baselines;
 pub mod bench_harness;

@@ -65,20 +65,32 @@ fn cmd_table(args: &Args) -> Result<()> {
         "4" => tables::table4(),
         "5" => tables::table5(),
         "packed" => tables::packed_throughput(),
-        _ => bail!("tables 1-5 and `packed` exist"),
+        "af" | "overlap" => tables::af_overlap(),
+        _ => bail!("tables 1-5, `packed` and `af` exist"),
     };
     emit(t, args.has_flag("csv"));
     Ok(())
 }
 
+/// Parse an `on|off` A/B knob with a default.
+fn parse_switch(args: &Args, key: &str, default: &str) -> Result<bool> {
+    match args.opt_or(key, default).as_str() {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => bail!("bad --{key} value {other:?} (on|off)"),
+    }
+}
+
 /// Parse the `--packing on|off` A/B knob (default: on — the paper's
 /// sub-word packed datapath).
 fn parse_packing(args: &Args) -> Result<bool> {
-    match args.opt_or("packing", "on").as_str() {
-        "on" | "true" | "1" => Ok(true),
-        "off" | "false" | "0" => Ok(false),
-        other => bail!("bad --packing value {other:?} (on|off)"),
-    }
+    parse_switch(args, "packing", "on")
+}
+
+/// Parse the `--overlap on|off` A/B knob (default: on — the fused
+/// MAC/AF overlap schedule of DESIGN.md §12; off = serial MAC-then-AF).
+fn parse_overlap(args: &Args) -> Result<bool> {
+    parse_switch(args, "overlap", "on")
 }
 
 fn cmd_fig(args: &Args) -> Result<()> {
@@ -126,6 +138,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.af_blocks = (pes / 64).max(1);
     cfg.pool_units = (pes / 8).max(1);
     cfg.packing = parse_packing(args)?;
+    cfg.af_overlap = parse_overlap(args)?;
     let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
     let report = VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
     let asic = corvet::hwcost::engine_asic_at(&cfg, precision, policy.layer(0).mode);
@@ -138,6 +151,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "packing        : {} ({} element slots/wave)",
         if cfg.packing { "on" } else { "off" },
         cfg.lane_slots(precision)
+    );
+    println!(
+        "overlap        : {} (AF drain {} MAC waves)",
+        if cfg.af_overlap { "on" } else { "off" },
+        if cfg.af_overlap { "hidden behind" } else { "serialised after" }
     );
     println!("cycles         : {}", report.total_cycles);
     println!("latency        : {} ms", fnum(report.time_ms(clock)));
@@ -169,6 +187,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     engine.af_blocks = (pes / 64).max(1);
     engine.pool_units = (pes / 8).max(1);
     engine.packing = parse_packing(args)?;
+    engine.af_overlap = parse_overlap(args)?;
 
     let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
     let annotated = graph.with_policy(&policy);
@@ -206,6 +225,11 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         "packing        : {} ({} element slots/wave per shard)",
         if engine.packing { "on" } else { "off" },
         engine.lane_slots(precision)
+    );
+    println!(
+        "overlap        : {} (stage times {} the AF pipeline law)",
+        if engine.af_overlap { "on" } else { "off" },
+        if engine.af_overlap { "priced through" } else { "serialised, bypassing" }
     );
     println!("MAC imbalance  : {}", fnum(plan.mac_imbalance()));
     println!("micro-batches  : {batches} x {batch} sample(s), packed waves");
@@ -340,6 +364,20 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "wave" => {
             let mut engine = EngineConfig { pes, ..EngineConfig::default() };
             engine.packing = parse_packing(args)?;
+            // capacity planning before the server spins up: the simulated
+            // per-dispatch price at the configured max batch, through the
+            // packed-lane and AF-overlap laws
+            let estimator = corvet::coordinator::WaveBackend::new(
+                net.clone(),
+                engine,
+                precision,
+            )?;
+            eprintln!(
+                "wave backend estimate: {} cyc/dispatch approx, {} accurate (batch {})",
+                estimator.estimated_batch_cycles(max_batch, ExecMode::Approximate),
+                estimator.estimated_batch_cycles(max_batch, ExecMode::Accurate),
+                max_batch
+            );
             Server::start_wave(net.clone(), engine, config)?
         }
         other => bail!("unknown backend {other:?} (pjrt|wave)"),

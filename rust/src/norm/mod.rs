@@ -28,6 +28,24 @@ impl NormCost {
     pub fn total(&self) -> u32 {
         self.add_cycles + self.div_cycles + self.mul_cycles
     }
+
+    /// This cost expressed on the shared non-MAC block's datapaths, so a
+    /// caller running a normalisation pass between layers can book it on
+    /// the [`crate::activation::AfScheduler`] exactly like the executor
+    /// books pooling drains (DESIGN.md §12 — [`crate::model::Network`] has
+    /// no norm layer yet, so unlike `PoolCost::as_af_cost` this conversion
+    /// is not wired into the wave executors themselves): divisions on the
+    /// LV divider, multiplies on the small linear-rotation multipliers,
+    /// accumulation on the bypass/adder path. Cycle totals are preserved
+    /// exactly.
+    pub fn as_af_cost(&self) -> crate::activation::AfCost {
+        crate::activation::AfCost {
+            lv: self.div_cycles,
+            lin: self.mul_cycles,
+            bypass: self.add_cycles,
+            ..Default::default()
+        }
+    }
 }
 
 /// AAD-based normalisation: `y_i = (x_i - mean) / (aad + eps)` where `aad`
@@ -141,6 +159,23 @@ mod tests {
     #[should_panic(expected = "empty")]
     fn empty_input_panics() {
         aad_normalize(&[], 8);
+    }
+
+    #[test]
+    fn norm_cost_maps_onto_the_shared_block_exactly() {
+        // normalisation schedules through the shared non-MAC block in the
+        // fused layer pipeline (DESIGN.md §12): cycles conserve, divisions
+        // go to LV, the affine multiplies to the small multipliers
+        let raw: Vec<i64> = [1.0, -0.5, 2.0].iter().map(|&v| to_guard(v)).collect();
+        let (_, cost) = aad_normalize(&raw, 26);
+        let af = cost.as_af_cost();
+        assert_eq!(af.total(), cost.total(), "conversion conserves cycles");
+        assert_eq!(af.lv, cost.div_cycles);
+        assert_eq!(af.bypass, cost.add_cycles);
+
+        let (_, bn) = batch_norm_inference(&raw, to_guard(1.5), to_guard(0.25), 24);
+        assert_eq!(bn.as_af_cost().lin, bn.mul_cycles, "affine multiplies are LIN work");
+        assert_eq!(bn.as_af_cost().total(), bn.total());
     }
 
     #[test]

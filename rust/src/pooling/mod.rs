@@ -44,6 +44,20 @@ impl PoolCost {
             div_cycles: self.div_cycles + o.div_cycles,
         }
     }
+
+    /// This cost expressed on the shared non-MAC block's datapaths, for
+    /// scheduling through the [`crate::activation::AfScheduler`] (the
+    /// paper's pooling/normalisation unit drains in the same non-MAC
+    /// window as the multi-AF block — DESIGN.md §12): divisions run on the
+    /// LV divider, SA/adder work on the bypass/adder path. Cycle totals
+    /// are preserved exactly.
+    pub fn as_af_cost(&self) -> crate::activation::AfCost {
+        crate::activation::AfCost {
+            lv: self.div_cycles,
+            bypass: self.sa_cycles + self.add_cycles,
+            ..Default::default()
+        }
+    }
 }
 
 /// Two-input SA module (Fig. 6): returns `|a - b| / 2`.
@@ -207,6 +221,20 @@ mod tests {
     #[should_panic(expected = "at least two")]
     fn aad_single_input_panics() {
         aad_parallel(&[to_guard(1.0)], 8);
+    }
+
+    #[test]
+    fn pool_cost_maps_onto_the_shared_block_exactly() {
+        // the fused layer pipeline (DESIGN.md §12) schedules pooling drains
+        // through the shared non-MAC block: the conversion must conserve
+        // cycles and route divisions to the LV datapath
+        let xs: Vec<i64> = [1.0, 0.0, 2.0].iter().map(|&v| to_guard(v)).collect();
+        let (_, cost) = aad_parallel(&xs, 24);
+        let af = cost.as_af_cost();
+        assert_eq!(af.total(), cost.total(), "conversion conserves cycles");
+        assert_eq!(af.lv, cost.div_cycles, "divisions land on the LV divider");
+        assert_eq!(af.hr, 0, "pooling never touches the hyperbolic path");
+        assert_eq!(af.bypass, cost.sa_cycles + cost.add_cycles);
     }
 
     #[test]

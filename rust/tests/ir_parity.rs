@@ -110,17 +110,73 @@ fn rand_policy(rng: &mut Xoshiro256, layers: usize) -> PolicyTable {
 fn assert_bit_identical(net: &Network, x: &Tensor, policy: &PolicyTable, pes: usize) {
     let (y_scalar, _) = net.forward_cordic(x, policy);
     // sub-word packing widens the issue chunk (2x/4x element slots for
-    // FxP-8/FxP-4) but must be functionally invisible: check both datapaths
+    // FxP-8/FxP-4) and the overlap schedule re-times the shared-block
+    // drain — both must be functionally invisible: check all four corners
     for packing in [true, false] {
-        let cfg = EngineConfig { pes, packing, ..EngineConfig::default() };
-        let (y_wave, _) = net.forward_wave(x, policy, &cfg);
-        assert_eq!(y_scalar.shape(), y_wave.shape());
-        for (i, (a, b)) in y_scalar.data().iter().zip(y_wave.data()).enumerate() {
-            assert!(
-                a.to_bits() == b.to_bits(),
-                "{} pes={pes} packing={packing}: output {i} differs: scalar {a} wave {b}",
-                net.name
-            );
+        for af_overlap in [true, false] {
+            let cfg = EngineConfig { pes, packing, af_overlap, ..EngineConfig::default() };
+            let (y_wave, stats) = net.forward_wave(x, policy, &cfg);
+            assert_eq!(y_scalar.shape(), y_wave.shape());
+            assert_eq!(stats.overlap, af_overlap);
+            for (i, (a, b)) in y_scalar.data().iter().zip(y_wave.data()).enumerate() {
+                assert!(
+                    a.to_bits() == b.to_bits(),
+                    "{} pes={pes} packing={packing} overlap={af_overlap}: \
+                     output {i} differs: scalar {a} wave {b}",
+                    net.name
+                );
+            }
+            assert_wave_stats_follow_the_pipeline_law(&stats, &cfg, policy);
+        }
+    }
+}
+
+/// The executed wave stats must reproduce the analytic pipeline law from
+/// their own aggregates: with overlap on, every compute layer's
+/// `pipeline_cycles` equals `layer_pipeline_cycles(mac, af, ramp)`; with
+/// overlap off it equals the serial sum; and overlap never exceeds serial,
+/// strictly beating it exactly when the layer drains AF work across more
+/// than one issue chunk.
+fn assert_wave_stats_follow_the_pipeline_law(
+    stats: &corvet::ir::WaveRunStats,
+    cfg: &EngineConfig,
+    policy: &PolicyTable,
+) {
+    use corvet::cordic::mac::MacConfig;
+    use corvet::ir::{layer_pipeline_cycles, pipeline_ramp_cycles};
+    let mut pidx = 0usize;
+    for l in stats.per_layer.iter().filter(|l| l.macs > 0) {
+        let lp = policy.layer(pidx);
+        pidx += 1;
+        let cpm = MacConfig::new(lp.precision, lp.mode).cycles_per_mac();
+        let af = l.af_cost.total() as u64;
+        let ramp = pipeline_ramp_cycles(l.macs, l.outputs as u64, cpm);
+        let expect = if cfg.af_overlap {
+            layer_pipeline_cycles(l.mac_cycles, af, ramp)
+        } else {
+            l.mac_cycles + af
+        };
+        assert_eq!(l.pipeline_cycles, expect, "{}: pipeline law", l.kind);
+        assert!(l.pipeline_cycles <= l.serial_cycles(), "{}: overlap <= serial", l.kind);
+        // strict exactly when there is AF work to hide AND the one-chunk
+        // fill is shorter than the whole MAC phase (a single-chunk layer
+        // has nothing to overlap with: the ramp clamps to mac and the law
+        // degenerates to the serial sum)
+        if cfg.af_overlap && af > 0 {
+            if ramp < l.mac_cycles {
+                assert!(
+                    l.pipeline_cycles < l.serial_cycles(),
+                    "{}: multi-chunk AF drain must hide cycles",
+                    l.kind
+                );
+            } else {
+                assert_eq!(
+                    l.pipeline_cycles,
+                    l.serial_cycles(),
+                    "{}: single-chunk layers run serial",
+                    l.kind
+                );
+            }
         }
     }
 }
@@ -216,41 +272,72 @@ fn wave_bit_identical_across_named_operating_points() {
 
 /// Every sample of a batched run must be bit-identical to its own scalar
 /// and single-sample wave runs — regardless of how the batch dimension
-/// packed elements into lanes, and with sub-word precision packing on or
-/// off. Packed chunk/wave counts must also follow the analytic law
-/// `ceil(elements / (pes·pack))`.
+/// packed elements into lanes, with sub-word precision packing on or off,
+/// and with the AF-overlap schedule on or off. Packed chunk/wave counts
+/// must also follow the analytic law `ceil(elements / (pes·pack))`, and
+/// the per-layer makespans the shared pipeline law.
 fn assert_batch_bit_identical(net: &Network, xs: &[Tensor], policy: &PolicyTable, pes: usize) {
     for packing in [true, false] {
-        let cfg = EngineConfig { pes, packing, ..EngineConfig::default() };
-        let (ys, stats) = net.forward_batch(xs, policy, &cfg);
-        assert_eq!(ys.len(), xs.len());
-        assert_eq!(stats.batch, xs.len());
-        assert_eq!(stats.pes, pes);
-        assert_eq!(stats.packing, packing);
-        assert_batch_counts_follow_packed_law(&stats, &cfg, policy);
-        for (i, (x, yb)) in xs.iter().zip(&ys).enumerate() {
-            let (y_scalar, _) = net.forward_cordic(x, policy);
-            let (y_wave, _) = net.forward_wave(x, policy, &cfg);
-            assert_eq!(y_scalar.shape(), yb.shape());
-            for (j, (a, b)) in y_scalar.data().iter().zip(yb.data()).enumerate() {
-                assert!(
-                    a.to_bits() == b.to_bits(),
-                    "{} pes={pes} packing={packing} B={}: sample {i} output {j}: \
-                     scalar {a} batch {b}",
-                    net.name,
-                    xs.len()
-                );
-            }
-            for (j, (a, b)) in y_wave.data().iter().zip(yb.data()).enumerate() {
-                assert!(
-                    a.to_bits() == b.to_bits(),
-                    "{} pes={pes} packing={packing} B={}: sample {i} output {j}: \
-                     wave {a} batch {b}",
-                    net.name,
-                    xs.len()
-                );
+        for af_overlap in [true, false] {
+            let cfg = EngineConfig { pes, packing, af_overlap, ..EngineConfig::default() };
+            let (ys, stats) = net.forward_batch(xs, policy, &cfg);
+            assert_eq!(ys.len(), xs.len());
+            assert_eq!(stats.batch, xs.len());
+            assert_eq!(stats.pes, pes);
+            assert_eq!(stats.packing, packing);
+            assert_eq!(stats.overlap, af_overlap);
+            assert_batch_counts_follow_packed_law(&stats, &cfg, policy);
+            assert_batch_stats_follow_the_pipeline_law(&stats, &cfg, policy);
+            for (i, (x, yb)) in xs.iter().zip(&ys).enumerate() {
+                let (y_scalar, _) = net.forward_cordic(x, policy);
+                let (y_wave, _) = net.forward_wave(x, policy, &cfg);
+                assert_eq!(y_scalar.shape(), yb.shape());
+                for (j, (a, b)) in y_scalar.data().iter().zip(yb.data()).enumerate() {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{} pes={pes} packing={packing} overlap={af_overlap} B={}: \
+                         sample {i} output {j}: scalar {a} batch {b}",
+                        net.name,
+                        xs.len()
+                    );
+                }
+                for (j, (a, b)) in y_wave.data().iter().zip(yb.data()).enumerate() {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{} pes={pes} packing={packing} overlap={af_overlap} B={}: \
+                         sample {i} output {j}: wave {a} batch {b}",
+                        net.name,
+                        xs.len()
+                    );
+                }
             }
         }
+    }
+}
+
+/// Batched twin of [`assert_wave_stats_follow_the_pipeline_law`]: executed
+/// per-layer makespans equal the analytic law over the batch aggregates.
+fn assert_batch_stats_follow_the_pipeline_law(
+    stats: &corvet::ir::BatchRunStats,
+    cfg: &EngineConfig,
+    policy: &PolicyTable,
+) {
+    use corvet::cordic::mac::MacConfig;
+    use corvet::ir::{layer_pipeline_cycles, pipeline_ramp_cycles};
+    let mut pidx = 0usize;
+    for l in stats.per_layer.iter().filter(|l| l.macs > 0) {
+        let lp = policy.layer(pidx);
+        pidx += 1;
+        let cpm = MacConfig::new(lp.precision, lp.mode).cycles_per_mac();
+        let af = l.af_cost.total() as u64;
+        let expect = if cfg.af_overlap {
+            let ramp = pipeline_ramp_cycles(l.macs, l.elements, cpm);
+            layer_pipeline_cycles(l.mac_cycles, af, ramp)
+        } else {
+            l.mac_cycles + af
+        };
+        assert_eq!(l.pipeline_cycles, expect, "{}: batched pipeline law", l.kind);
+        assert!(l.pipeline_cycles <= l.serial_cycles(), "{}: overlap <= serial", l.kind);
     }
 }
 
@@ -503,6 +590,109 @@ fn fxp4_approximate_policy_is_the_accurate_operating_point() {
         assert_eq!(a.to_bits(), c.to_bits());
     }
     assert_bit_identical(&net, &x, &asked, 64);
+}
+
+#[test]
+fn overlap_never_exceeds_serial_and_hides_on_multichunk_layers() {
+    // whole-run inequality on a net whose AF-bearing layers span several
+    // issue chunks at 8 PEs: the fused schedule must strictly hide cycles;
+    // serial is exactly the overlap-off total
+    let net = mlp("wide-mlp", &[12, 40, 40, 5], ActFn::Sigmoid, 91);
+    let mut rng = Xoshiro256::new(41);
+    let x = Tensor::vector(&rng.uniform_vec(12, -0.9, 0.9));
+    for precision in Precision::ALL {
+        let policy =
+            PolicyTable::uniform(net.compute_layers(), precision, ExecMode::Accurate);
+        let mut on = EngineConfig { pes: 8, ..EngineConfig::default() };
+        on.af_overlap = true;
+        let mut off = on;
+        off.af_overlap = false;
+        let (_, s_on) = net.forward_wave(&x, &policy, &on);
+        let (_, s_off) = net.forward_wave(&x, &policy, &off);
+        assert_eq!(
+            s_off.total_pipeline_cycles(),
+            s_off.total_serial_cycles(),
+            "{precision}: overlap off prices serially"
+        );
+        assert_eq!(
+            s_on.total_serial_cycles(),
+            s_off.total_serial_cycles(),
+            "{precision}: the serial baseline is schedule-independent"
+        );
+        assert!(
+            s_on.total_pipeline_cycles() < s_off.total_pipeline_cycles(),
+            "{precision}: overlap must hide cycles on multi-chunk AF layers"
+        );
+        assert!(s_on.hidden_fraction() > 0.0 && s_on.hidden_fraction() < 1.0);
+        // the threaded scheduler saw every drain: occupancy is a real
+        // fraction and requests were actually served
+        assert!(s_on.af_util.served > 0, "{precision}: scheduler must see the drains");
+        let occ = s_on.af_util.busy_fraction();
+        assert!((0.0..=1.0).contains(&occ) && occ > 0.0, "{precision}: occupancy {occ}");
+    }
+}
+
+#[test]
+fn overlap_equals_serial_exactly_when_af_cost_is_zero() {
+    // Identity activations cost zero on the shared block: the overlap law
+    // degenerates to the MAC wave law, so the schedules price identically
+    let mut d1 = DenseParams::zeros(12, 40, ActFn::Identity);
+    let mut d2 = DenseParams::zeros(40, 6, ActFn::Identity);
+    let mut rng = Xoshiro256::new(53);
+    for w in d1.weights.iter_mut().chain(d2.weights.iter_mut()) {
+        *w = rng.uniform(-0.4, 0.4);
+    }
+    let net = Network::new("id-mlp", &[12], vec![Layer::Dense(d1), Layer::Dense(d2)]);
+    let x = Tensor::vector(&rng.uniform_vec(12, -0.9, 0.9));
+    let policy =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    let mut on = EngineConfig { pes: 8, ..EngineConfig::default() };
+    on.af_overlap = true;
+    let mut off = on;
+    off.af_overlap = false;
+    let (_, s_on) = net.forward_wave(&x, &policy, &on);
+    let (_, s_off) = net.forward_wave(&x, &policy, &off);
+    assert_eq!(s_on.total_af_cycles(), 0, "identity drains nothing");
+    assert_eq!(s_on.total_pipeline_cycles(), s_off.total_pipeline_cycles());
+    assert_eq!(s_on.total_pipeline_cycles(), s_on.total_mac_cycles());
+    assert_eq!(s_on.hidden_fraction(), 0.0);
+    assert_eq!(s_on.af_util.served, 0, "nothing to schedule on the shared block");
+}
+
+#[test]
+fn simulator_overlap_never_exceeds_serial_on_evaluation_workloads() {
+    // the simulator consumes the same law: on the real traces the
+    // overlapped total must stay at or under serial at every named
+    // operating point, strictly under at the packed narrow precisions
+    // (MAC compresses, the ReLU drain does not — the af_overlap table)
+    for graph in [workloads::vgg16(), workloads::tinyyolo()] {
+        for precision in Precision::ALL {
+            for mode in [ExecMode::Approximate, ExecMode::Accurate] {
+                let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
+                let annotated = graph.with_policy(&policy);
+                let mut on = EngineConfig::pe256();
+                on.af_overlap = true;
+                let mut off = on;
+                off.af_overlap = false;
+                let r_on = VectorEngine::new(on).run_ir(&annotated);
+                let r_off = VectorEngine::new(off).run_ir(&annotated);
+                assert!(
+                    r_on.total_cycles <= r_off.total_cycles,
+                    "{} {precision} {mode:?}: overlap {} > serial {}",
+                    graph.name,
+                    r_on.total_cycles,
+                    r_off.total_cycles
+                );
+                if precision != Precision::Fxp16 {
+                    assert!(
+                        r_on.total_cycles < r_off.total_cycles,
+                        "{} {precision} {mode:?}: packed MAC phases must expose a drain",
+                        graph.name
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]

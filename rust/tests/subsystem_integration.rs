@@ -93,8 +93,11 @@ fn engine_sim_cycles_lower_bounded_by_ideal_parallel_macs() {
         ExecMode::Approximate,
     );
     let r = VectorEngine::new(cfg).run_trace(&trace, &policy);
-    // ideal: every MAC retired at full parallelism, nothing else
-    let ideal = trace.total_macs() * 4 / 256;
+    // ideal: every MAC retired at full parallelism, nothing else. The
+    // parallel width is the *packed* element-slot capacity (FxP-8 packs two
+    // streams per 16-bit lane — DESIGN.md §11), not the raw PE count: the
+    // pre-packing bound was stale and sat above the simulated total.
+    let ideal = trace.total_macs() * 4 / cfg.lane_slots(Precision::Fxp8) as u64;
     assert!(
         r.total_cycles >= ideal,
         "simulated {} cycles below ideal bound {}",
