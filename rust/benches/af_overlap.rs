@@ -80,7 +80,7 @@ fn main() {
     let policy =
         PolicyTable::uniform(mlp.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
     let x = Tensor::vector(&rng.uniform_vec(196, -0.9, 0.9));
-    let b = Bencher { warmup: 2, samples: 10, iters_per_sample: 2 };
+    let b = Bencher::from_env(Bencher { warmup: 2, samples: 10, iters_per_sample: 2 });
     let mut rep = BenchReport::new();
     for overlap in [true, false] {
         let mut cfg = EngineConfig::pe64();
@@ -90,4 +90,8 @@ fn main() {
     }
     println!();
     print!("{}", rep.render("af_overlap host wall-clock (paper_mlp, 64 PEs)"));
+    match corvet::bench_harness::write_bench_json("af_overlap", &rep) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench JSON not written: {e}"),
+    }
 }

@@ -7,8 +7,9 @@
 //! and reports the measured host speedup per model and operating point.
 //! Captured results belong in EXPERIMENTS.md §Perf.
 
-use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::bench_harness::{write_bench_json, BenchReport, Bencher};
 use corvet::cordic::mac::ExecMode;
+use corvet::telemetry::{self, MemorySink};
 use corvet::engine::EngineConfig;
 use corvet::model::workloads::{paper_mlp, small_cnn, transformer_mlp};
 use corvet::model::{Network, Tensor};
@@ -34,7 +35,7 @@ fn main() {
         small_cnn("cnn-8-16", PoolKind::Aad, 103),
     ];
     let cfg = EngineConfig::pe256();
-    let b = Bencher { warmup: 2, samples: 10, iters_per_sample: 3 };
+    let b = Bencher::from_env(Bencher { warmup: 2, samples: 10, iters_per_sample: 3 });
 
     let mut rep = BenchReport::new();
     println!("scalar vs wave forward pass (bit-identical outputs, 256 lanes):");
@@ -72,5 +73,30 @@ fn main() {
             rep.push(r_wave);
         }
     }
+    // telemetry overhead A/B on the same workload (EXPERIMENTS.md
+    // §telemetry): disabled hooks vs live spans into a memory sink. The
+    // disabled run *is* the `wave` row above — re-measured here so both
+    // rows come from the same process state.
+    let net = &nets[0];
+    let x = input_for(net, &mut rng);
+    let policy =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    let r_off = b.run("wave   paper-mlp telemetry-off", || net.forward_wave(&x, &policy, &cfg));
+    telemetry::global().enable_with_sink(Box::new(MemorySink::new()));
+    let r_on = b.run("wave   paper-mlp telemetry-on", || net.forward_wave(&x, &policy, &cfg));
+    telemetry::global().disable();
+    println!(
+        "telemetry overhead (paper-mlp approx): off {} ns, on {} ns ({}x)",
+        fnum(r_off.mean_ns),
+        fnum(r_on.mean_ns),
+        fnum(r_on.mean_ns / r_off.mean_ns),
+    );
+    rep.push(r_off);
+    rep.push(r_on);
+
     print!("{}", rep.render("forward-pass hot path"));
+    match write_bench_json("forward_wave", &rep) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench JSON not written: {e}"),
+    }
 }

@@ -13,7 +13,7 @@
 //! 3. host-executed `forward_batch` with packing on vs off — bit-identity
 //!    spot-checked inline, occupancy and wall-clock reported.
 
-use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::bench_harness::{write_bench_json, BenchReport, Bencher};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::{pack_factor, EngineConfig, VectorEngine};
 use corvet::ir::workloads;
@@ -64,7 +64,7 @@ fn main() {
     let mut rng = Xoshiro256::new(5);
     let inputs: Vec<Tensor> =
         (0..8).map(|_| Tensor::vector(&rng.uniform_vec(196, -0.9, 0.9))).collect();
-    let b = Bencher { warmup: 2, samples: 8, iters_per_sample: 2 };
+    let b = Bencher::from_env(Bencher { warmup: 2, samples: 8, iters_per_sample: 2 });
     let mut rep = BenchReport::new();
     println!("\nhost-executed forward_batch (B=8, 64 PEs, {}):", net.name);
     for precision in [Precision::Fxp16, Precision::Fxp8, Precision::Fxp4] {
@@ -99,4 +99,8 @@ fn main() {
         rep.push(r_off);
     }
     print!("{}", rep.render("packed waves forward_batch"));
+    match write_bench_json("packed_waves", &rep) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench JSON not written: {e}"),
+    }
 }

@@ -13,7 +13,7 @@
 //!    execute functionally on the host);
 //! 3. end-to-end `Server` + `WaveBackend` requests/s vs `max_batch`.
 
-use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::bench_harness::{write_bench_json, BenchReport, Bencher};
 use corvet::coordinator::{BatcherConfig, Server, ServerConfig};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::EngineConfig;
@@ -30,7 +30,7 @@ fn main() -> anyhow::Result<()> {
     let cfg = EngineConfig::pe64();
     let policy =
         PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
-    let b = Bencher { warmup: 2, samples: 8, iters_per_sample: 2 };
+    let b = Bencher::from_env(Bencher { warmup: 2, samples: 8, iters_per_sample: 2 });
 
     // --- 1. batched vs serial single-sample waves
     println!("batched MAC waves, {} PEs ({}):", cfg.pes, net.name);
@@ -67,6 +67,10 @@ fn main() -> anyhow::Result<()> {
         rep.push(r_batch);
     }
     print!("{}", rep.render("batched wave forward"));
+    match write_bench_json("serve_wave", &rep) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench JSON not written: {e}"),
+    }
 
     // --- 2. analytic occupancy for VGG-16's dense head (256 PEs; the
     // unannotated graph prices at the engine default FxP-16, pack 1)

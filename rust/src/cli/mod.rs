@@ -90,16 +90,23 @@ COMMANDS:
   sensitivity [--quick] [--budget F] run the accuracy-sensitivity heuristic
   serve [--requests N] [--batch N] [--precision fxp8|fxp16]
         [--backend pjrt|wave] [--pes N] [--packing on|off]
-        [--artifacts DIR] [--quick]  e2e serving demo: PJRT artifacts or the
+        [--artifacts DIR] [--quick] [--trace-out FILE]
+                                     e2e serving demo: PJRT artifacts or the
                                      native batched wave backend (no artifacts)
   cluster [--workload tinyyolo|vgg16|vit-mlp] [--shards M] [--pes N]
           [--strategy pipeline|tensor|data] [--batches B] [--batch S]
           [--precision P] [--mode approx|accurate] [--packing on|off]
-          [--overlap on|off] [--sweep] [--csv]
+          [--overlap on|off] [--sweep] [--csv] [--trace-out FILE]
                                      sharded multi-engine simulation
                                      (S samples per micro-batch, packed waves)
+  metrics [--requests N] [--pes N]   run a short wave-serving workload and
+                                     print the Prometheus text exposition
   utilization                        multi-AF time-multiplexing report
   info [--artifacts DIR]             platform + artifact inventory
+
+Observability: `--trace-out FILE` (on simulate / serve / cluster) streams a
+JSON-lines span trace of the run; `corvet metrics` dumps the same counters
+and histograms in Prometheus text format (DESIGN.md §13).
 ";
 
 #[cfg(test)]

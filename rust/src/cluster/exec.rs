@@ -19,6 +19,7 @@ use super::plan::{split_even, PartitionPlan, PartitionStrategy, ShardPlan};
 use super::report::{ClusterReport, ShardReport};
 use crate::engine::{EngineConfig, VectorEngine};
 use crate::memory::Prefetcher;
+use crate::telemetry;
 
 /// Runs a [`PartitionPlan`] on M simulated engines.
 #[derive(Debug, Clone, Copy)]
@@ -43,12 +44,30 @@ impl ShardExecutor {
         let n = plan.len();
         let engine = self.engine;
 
-        // fan the per-shard cycle simulations out across threads
+        let mut run_span = telemetry::span("cluster.run");
+        run_span.field_u64("shards", n as u64);
+        run_span.field_u64("micro_batches", micro_batches);
+        if run_span.is_recording() {
+            run_span.field_str("strategy", &format!("{:?}", plan.strategy));
+        }
+
+        // fan the per-shard cycle simulations out across threads; each
+        // worker opens its own span (spans nest per thread, so these are
+        // trace roots carrying the shard index)
         let reports: Vec<crate::engine::EngineReport> = std::thread::scope(|s| {
             let handles: Vec<_> = plan
                 .shards
                 .iter()
-                .map(|sp| s.spawn(move || VectorEngine::new(engine).run_ir(&sp.ir)))
+                .map(|sp| {
+                    s.spawn(move || {
+                        let mut shard_span = telemetry::span("cluster.shard");
+                        shard_span.field_u64("shard", sp.shard as u64);
+                        let r = VectorEngine::new(engine).run_ir(&sp.ir);
+                        shard_span.field_u64("total_cycles", r.total_cycles);
+                        shard_span.field_u64("total_macs", r.total_macs);
+                        r
+                    })
+                })
                 .collect();
             handles
                 .into_iter()
@@ -149,6 +168,17 @@ impl ShardExecutor {
             PartitionStrategy::Data => makespan.div_ceil(b),
         };
 
+        let interconnect_cycles = b * comm_per_batch + delay;
+        if telemetry::global().is_enabled() {
+            // interconnect pressure and staging stalls, as counters the
+            // Prometheus dump accumulates across runs
+            let tel = telemetry::global();
+            tel.counter("cluster.boundary_transfer_cycles").add(b * comm_per_batch);
+            tel.counter("cluster.prefetch_wait_cycles").add(delay);
+        }
+        run_span.field_u64("makespan_cycles", makespan);
+        run_span.field_u64("interconnect_cycles", interconnect_cycles);
+
         ClusterReport {
             engine: self.engine,
             strategy: plan.strategy,
@@ -159,7 +189,7 @@ impl ShardExecutor {
             cycles_per_batch,
             total_macs: plan.total_macs,
             total_ops: plan.total_ops,
-            interconnect_cycles: b * comm_per_batch + delay,
+            interconnect_cycles,
         }
     }
 

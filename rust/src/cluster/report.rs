@@ -5,6 +5,7 @@
 use super::plan::PartitionStrategy;
 use crate::engine::EngineConfig;
 use crate::memory::PrefetchStats;
+use crate::report::json::{Json, ToJson};
 
 /// Per-shard outcome of a cluster run.
 #[derive(Debug, Clone)]
@@ -110,6 +111,53 @@ impl ClusterReport {
     }
 }
 
+impl ToJson for ShardReport {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("shard", Json::U64(self.shard as u64)),
+            (
+                "layer_span",
+                Json::Arr(vec![
+                    Json::U64(self.layer_span.0 as u64),
+                    Json::U64(self.layer_span.1 as u64),
+                ]),
+            ),
+            ("compute_cycles_per_batch", Json::U64(self.compute_cycles_per_batch)),
+            ("comm_cycles_per_batch", Json::U64(self.comm_cycles_per_batch)),
+            ("batches", Json::U64(self.batches)),
+            ("busy_cycles", Json::U64(self.busy_cycles)),
+            ("prefetch_stall_cycles", Json::U64(self.prefetch.stall_cycles)),
+            ("prefetch_overlapped_cycles", Json::U64(self.prefetch.overlapped_cycles)),
+            ("utilization", Json::F64(self.utilization)),
+            ("mean_pe_utilization", Json::F64(self.mean_pe_utilization)),
+        ])
+    }
+}
+
+impl ToJson for ClusterReport {
+    /// The common `report::json` envelope (`corvet.report.v1`, kind
+    /// `cluster_report`) shared with `MetricsSnapshot` / `EngineReport`.
+    fn to_json(&self) -> Json {
+        crate::report::json::envelope(
+            crate::report::REPORT_SCHEMA,
+            "cluster_report",
+            Json::obj(vec![
+                ("strategy", Json::Str(format!("{:?}", self.strategy))),
+                ("pes", Json::U64(self.engine.pes as u64)),
+                ("shards", Json::Arr(self.shards.iter().map(|s| s.to_json()).collect())),
+                ("micro_batches", Json::U64(self.micro_batches)),
+                ("samples_per_batch", Json::U64(self.samples_per_batch)),
+                ("total_cycles", Json::U64(self.total_cycles)),
+                ("cycles_per_batch", Json::U64(self.cycles_per_batch)),
+                ("total_macs", Json::U64(self.total_macs)),
+                ("total_ops", Json::U64(self.total_ops)),
+                ("interconnect_cycles", Json::U64(self.interconnect_cycles)),
+                ("mean_utilization", Json::F64(self.mean_utilization())),
+            ]),
+        )
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -168,6 +216,20 @@ mod tests {
         b.shard = 1;
         let r = report(vec![a, b], 110, 110, 1);
         assert_eq!(r.bottleneck_shard(), 1);
+    }
+
+    #[test]
+    fn cluster_report_exports_the_common_envelope() {
+        let r = report(vec![shard(100, 5, 0.5)], 100, 1000, 10);
+        let j = r.to_json();
+        assert_eq!(
+            j.get("schema").and_then(|v| v.as_str()),
+            Some(crate::report::REPORT_SCHEMA)
+        );
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("cluster_report"));
+        assert_eq!(j.get("total_cycles").and_then(|v| v.as_f64()), Some(1000.0));
+        let text = j.render();
+        assert!(crate::report::json::parse(&text).is_some(), "report JSON must parse");
     }
 
     #[test]

@@ -1,27 +1,78 @@
-//! Serving metrics: latency distribution, throughput, batch statistics.
+//! Serving metrics: latency distributions, throughput, batch statistics.
+//!
+//! Backed by the telemetry layer's [`LogHistogram`] (DESIGN.md §13), so the
+//! accumulator is **bounded memory** under sustained load — the old
+//! implementation pushed every latency into a `Vec<u64>` that grew forever
+//! and was cloned + sorted on every `snapshot()`. Percentiles inherit the
+//! histogram's documented error bound
+//! ([`MAX_RELATIVE_ERROR`](crate::telemetry::MAX_RELATIVE_ERROR) ≈ 3.1 %);
+//! `count`, `mean`, and `max` stay exact.
+//!
+//! Throughput is anchored at **server start** (or an explicit anchor via
+//! [`Metrics::anchored`]): `completed / (last_completion - start)`. The old
+//! span ran first-completion → last-completion, so a single completed
+//! request — or any burst completing in the same instant — reported
+//! 0 req/s.
 
+use crate::report::json::{Json, ToJson};
+use crate::telemetry::{
+    write_prometheus_counter, write_prometheus_gauge, write_prometheus_histogram, LogHistogram,
+};
 use std::time::{Duration, Instant};
 
 /// Latency summary over a set of samples.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LatencyStats {
-    /// Samples observed.
+    /// Samples observed (exact).
     pub count: u64,
-    /// Mean latency (ms).
+    /// Mean latency (ms, exact).
     pub mean_ms: f64,
-    /// Median (ms).
+    /// Median (ms, within histogram bucket error).
     pub p50_ms: f64,
-    /// 99th percentile (ms).
+    /// 99th percentile (ms, within histogram bucket error).
     pub p99_ms: f64,
-    /// Max (ms).
+    /// 99.9th percentile (ms, within histogram bucket error).
+    pub p999_ms: f64,
+    /// Max (ms, exact).
     pub max_ms: f64,
+}
+
+impl LatencyStats {
+    /// Summarise a latency histogram recorded in µs.
+    pub fn from_histogram(h: &LogHistogram) -> LatencyStats {
+        LatencyStats {
+            count: h.count(),
+            mean_ms: h.mean() / 1e3,
+            p50_ms: h.quantile(0.50) as f64 / 1e3,
+            p99_ms: h.quantile(0.99) as f64 / 1e3,
+            p999_ms: h.quantile(0.999) as f64 / 1e3,
+            max_ms: h.max() as f64 / 1e3,
+        }
+    }
+}
+
+impl ToJson for LatencyStats {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::U64(self.count)),
+            ("mean_ms", Json::F64(self.mean_ms)),
+            ("p50_ms", Json::F64(self.p50_ms)),
+            ("p99_ms", Json::F64(self.p99_ms)),
+            ("p999_ms", Json::F64(self.p999_ms)),
+            ("max_ms", Json::F64(self.max_ms)),
+        ])
+    }
 }
 
 /// A point-in-time snapshot of the server's metrics.
 #[derive(Debug, Clone)]
 pub struct MetricsSnapshot {
-    /// Request latency stats.
+    /// End-to-end request latency stats (enqueue → response).
     pub latency: LatencyStats,
+    /// Queue-stage latency stats (enqueue → batch dispatch).
+    pub queue: LatencyStats,
+    /// Execute-stage latency stats (one sample per dispatched batch).
+    pub execute: LatencyStats,
     /// Requests completed.
     pub completed: u64,
     /// Batches dispatched.
@@ -30,47 +81,90 @@ pub struct MetricsSnapshot {
     pub mean_batch: f64,
     /// Requests served in approximate mode.
     pub approx_served: u64,
-    /// Wall-clock throughput (requests/s) since first request.
+    /// Wall-clock throughput (requests/s) over start → last completion.
     pub throughput_rps: f64,
+    /// Seconds since the metrics anchor (server start) at snapshot time.
+    pub uptime_s: f64,
+}
+
+impl ToJson for MetricsSnapshot {
+    /// The common `report::json` envelope (`corvet.report.v1`, kind
+    /// `metrics_snapshot`) shared with `ClusterReport` / `EngineReport`.
+    fn to_json(&self) -> Json {
+        crate::report::json::envelope(
+            crate::report::REPORT_SCHEMA,
+            "metrics_snapshot",
+            Json::obj(vec![
+                ("latency", self.latency.to_json()),
+                ("queue", self.queue.to_json()),
+                ("execute", self.execute.to_json()),
+                ("completed", Json::U64(self.completed)),
+                ("batches", Json::U64(self.batches)),
+                ("mean_batch", Json::F64(self.mean_batch)),
+                ("approx_served", Json::U64(self.approx_served)),
+                ("throughput_rps", Json::F64(self.throughput_rps)),
+                ("uptime_s", Json::F64(self.uptime_s)),
+            ]),
+        )
+    }
 }
 
 /// Metrics accumulator (single-threaded: owned by the server loop).
-#[derive(Debug)]
+/// Memory is fixed-size regardless of request volume.
+#[derive(Debug, Clone)]
 pub struct Metrics {
-    latencies_us: Vec<u64>,
+    latency_us: LogHistogram,
+    queue_us: LogHistogram,
+    execute_us: LogHistogram,
     completed: u64,
     batches: u64,
     batched_items: u64,
     approx_served: u64,
-    first: Option<Instant>,
+    started: Instant,
     last: Option<Instant>,
 }
 
 impl Metrics {
-    /// Empty accumulator.
+    /// Empty accumulator anchored at the current instant (server start).
     pub fn new() -> Self {
+        Self::anchored(Instant::now())
+    }
+
+    /// Empty accumulator with an explicit throughput anchor — the instant
+    /// the server started (or first admitted work). Tests use this for
+    /// deterministic throughput arithmetic.
+    pub fn anchored(started: Instant) -> Self {
         Metrics {
-            latencies_us: Vec::new(),
+            latency_us: LogHistogram::new(),
+            queue_us: LogHistogram::new(),
+            execute_us: LogHistogram::new(),
             completed: 0,
             batches: 0,
             batched_items: 0,
             approx_served: 0,
-            first: None,
+            started,
             last: None,
         }
     }
 
     /// Record one completed request.
     pub fn record(&mut self, latency: Duration, approx: bool, now: Instant) {
-        self.latencies_us.push(latency.as_micros() as u64);
+        self.latency_us.record(latency.as_micros() as u64);
         self.completed += 1;
         if approx {
             self.approx_served += 1;
         }
-        if self.first.is_none() {
-            self.first = Some(now);
-        }
         self.last = Some(now);
+    }
+
+    /// Record one request's time spent queued (enqueue → batch dispatch).
+    pub fn record_queue(&mut self, queued: Duration) {
+        self.queue_us.record(queued.as_micros() as u64);
+    }
+
+    /// Record one batch's backend execute duration.
+    pub fn record_execute(&mut self, execute: Duration) {
+        self.execute_us.record(execute.as_micros() as u64);
     }
 
     /// Record one dispatched batch.
@@ -79,34 +173,19 @@ impl Metrics {
         self.batched_items += size as u64;
     }
 
-    /// Summarise.
+    /// Summarise. O(buckets), no allocation proportional to request count.
     pub fn snapshot(&self) -> MetricsSnapshot {
-        let mut sorted = self.latencies_us.clone();
-        sorted.sort_unstable();
-        let pct = |p: f64| -> f64 {
-            if sorted.is_empty() {
-                return 0.0;
-            }
-            let idx = ((sorted.len() as f64 - 1.0) * p).round() as usize;
-            sorted[idx] as f64 / 1e3
-        };
-        let mean_ms = if sorted.is_empty() {
-            0.0
-        } else {
-            sorted.iter().sum::<u64>() as f64 / sorted.len() as f64 / 1e3
-        };
-        let span = match (self.first, self.last) {
-            (Some(a), Some(b)) if b > a => b.duration_since(a).as_secs_f64(),
-            _ => 0.0,
-        };
+        // span runs from the anchor (server start) to the last completion,
+        // so a single completed request reports a real rate instead of the
+        // old last-minus-first 0 req/s degenerate case
+        let span = self
+            .last
+            .map(|l| l.saturating_duration_since(self.started).as_secs_f64())
+            .unwrap_or(0.0);
         MetricsSnapshot {
-            latency: LatencyStats {
-                count: sorted.len() as u64,
-                mean_ms,
-                p50_ms: pct(0.50),
-                p99_ms: pct(0.99),
-                max_ms: sorted.last().map(|&v| v as f64 / 1e3).unwrap_or(0.0),
-            },
+            latency: LatencyStats::from_histogram(&self.latency_us),
+            queue: LatencyStats::from_histogram(&self.queue_us),
+            execute: LatencyStats::from_histogram(&self.execute_us),
             completed: self.completed,
             batches: self.batches,
             mean_batch: if self.batches == 0 {
@@ -116,7 +195,23 @@ impl Metrics {
             },
             approx_served: self.approx_served,
             throughput_rps: if span > 0.0 { self.completed as f64 / span } else { 0.0 },
+            uptime_s: self.started.elapsed().as_secs_f64(),
         }
+    }
+
+    /// Render the accumulator as Prometheus text exposition — the payload
+    /// behind `Server::prometheus()` and the CLI's `corvet metrics`.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        write_prometheus_histogram(&mut out, "corvet_request_latency_us", &self.latency_us);
+        write_prometheus_histogram(&mut out, "corvet_request_queue_us", &self.queue_us);
+        write_prometheus_histogram(&mut out, "corvet_batch_execute_us", &self.execute_us);
+        write_prometheus_counter(&mut out, "corvet_requests_completed", self.completed);
+        write_prometheus_counter(&mut out, "corvet_batches_dispatched", self.batches);
+        write_prometheus_counter(&mut out, "corvet_requests_approx", self.approx_served);
+        let snap_rps = self.snapshot().throughput_rps;
+        write_prometheus_gauge(&mut out, "corvet_throughput_rps", snap_rps);
+        out
     }
 }
 
@@ -129,6 +224,7 @@ impl Default for Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::telemetry::MAX_RELATIVE_ERROR;
 
     #[test]
     fn percentiles_on_known_distribution() {
@@ -139,10 +235,15 @@ mod tests {
         }
         let s = m.snapshot();
         assert_eq!(s.latency.count, 100);
-        assert!((s.latency.p50_ms - 50.0).abs() <= 1.0, "p50 {}", s.latency.p50_ms);
-        assert!((s.latency.p99_ms - 99.0).abs() <= 1.0, "p99 {}", s.latency.p99_ms);
-        assert_eq!(s.latency.max_ms, 100.0);
-        assert!((s.latency.mean_ms - 50.5).abs() < 0.01);
+        // percentile tolerance = the histogram's documented bucket error
+        // (MAX_RELATIVE_ERROR of the true value) plus one sample width for
+        // the rank convention
+        let tol = |v: f64| v * MAX_RELATIVE_ERROR + 1.0;
+        assert!((s.latency.p50_ms - 50.0).abs() <= tol(50.0), "p50 {}", s.latency.p50_ms);
+        assert!((s.latency.p99_ms - 99.0).abs() <= tol(99.0), "p99 {}", s.latency.p99_ms);
+        assert!((s.latency.p999_ms - 100.0).abs() <= tol(100.0), "p999 {}", s.latency.p999_ms);
+        assert_eq!(s.latency.max_ms, 100.0, "max is exact");
+        assert!((s.latency.mean_ms - 50.5).abs() < 0.01, "mean is exact");
     }
 
     #[test]
@@ -170,5 +271,93 @@ mod tests {
         m.record(Duration::from_millis(1), true, t);
         m.record(Duration::from_millis(1), false, t);
         assert_eq!(m.snapshot().approx_served, 1);
+    }
+
+    #[test]
+    fn single_request_reports_nonzero_throughput() {
+        // regression: the old first→last completion span collapsed to zero
+        // for one request (or any all-equal completion timestamps)
+        let t0 = Instant::now();
+        let mut m = Metrics::anchored(t0);
+        m.record(Duration::from_millis(5), false, t0 + Duration::from_millis(100));
+        let s = m.snapshot();
+        assert!(
+            (s.throughput_rps - 10.0).abs() < 1e-9,
+            "1 req over 100ms since start = 10 rps, got {}",
+            s.throughput_rps
+        );
+    }
+
+    #[test]
+    fn equal_completion_timestamps_report_nonzero_throughput() {
+        let t0 = Instant::now();
+        let mut m = Metrics::anchored(t0);
+        let done = t0 + Duration::from_millis(200);
+        for _ in 0..8 {
+            m.record(Duration::from_millis(1), false, done);
+        }
+        let s = m.snapshot();
+        assert!((s.throughput_rps - 40.0).abs() < 1e-9, "8 reqs / 0.2s, got {}", s.throughput_rps);
+    }
+
+    #[test]
+    fn stage_histograms_land_in_the_snapshot() {
+        let mut m = Metrics::new();
+        m.record_queue(Duration::from_micros(300));
+        m.record_queue(Duration::from_micros(500));
+        m.record_execute(Duration::from_millis(2));
+        let s = m.snapshot();
+        assert_eq!(s.queue.count, 2);
+        assert_eq!(s.execute.count, 1);
+        assert!((s.execute.max_ms - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_is_bounded_under_sustained_load() {
+        // the whole point of the histogram backing: a million records, one
+        // fixed-size accumulator (this used to be a million-entry Vec)
+        let mut m = Metrics::new();
+        let t = Instant::now();
+        for i in 0..1_000_000u64 {
+            m.record(Duration::from_micros(i % 10_000), false, t);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 1_000_000);
+        assert_eq!(std::mem::size_of_val(&m), std::mem::size_of::<Metrics>());
+    }
+
+    #[test]
+    fn prometheus_payload_has_the_expected_families() {
+        let mut m = Metrics::new();
+        let t = Instant::now();
+        m.record(Duration::from_millis(3), true, t);
+        m.record_batch(1);
+        let text = m.prometheus();
+        for family in [
+            "corvet_request_latency_us",
+            "corvet_request_queue_us",
+            "corvet_batch_execute_us",
+            "corvet_requests_completed",
+            "corvet_batches_dispatched",
+            "corvet_requests_approx",
+            "corvet_throughput_rps",
+        ] {
+            assert!(text.contains(family), "missing {family} in:\n{text}");
+        }
+        assert!(text.contains("corvet_requests_completed 1"));
+    }
+
+    #[test]
+    fn snapshot_exports_the_common_json_envelope() {
+        let s = Metrics::new().snapshot();
+        let j = s.to_json();
+        assert_eq!(
+            j.get("schema").and_then(|v| v.as_str()),
+            Some(crate::report::REPORT_SCHEMA)
+        );
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("metrics_snapshot"));
+        assert!(j.get("latency").is_some());
+        let text = j.render();
+        assert!(crate::report::json::parse(&text).is_some(), "snapshot JSON must parse");
     }
 }

@@ -17,6 +17,7 @@ use crate::engine::EngineConfig;
 use crate::model::Network;
 use crate::quant::Precision;
 use crate::runtime::ModelWeights;
+use crate::telemetry;
 use anyhow::{Context, Result};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
@@ -72,6 +73,7 @@ impl Default for ServerConfig {
 enum Control {
     Request(Box<InferenceRequest>, Instant),
     Snapshot(mpsc::Sender<MetricsSnapshot>),
+    Prometheus(mpsc::Sender<String>),
     Shutdown,
 }
 
@@ -180,6 +182,14 @@ impl Server {
         rx.recv().context("server dropped snapshot request")
     }
 
+    /// Fetch the live metrics as Prometheus text exposition (the payload
+    /// behind `corvet metrics`).
+    pub fn prometheus(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx.send(Control::Prometheus(tx)).map_err(|_| anyhow::anyhow!("server is down"))?;
+        rx.recv().context("server dropped prometheus request")
+    }
+
     /// Graceful shutdown: drains the queue, then returns the worker's
     /// **post-drain** snapshot — requests served during the drain are
     /// counted (snapshotting before the drain used to drop them).
@@ -252,6 +262,9 @@ fn serve_loop(
                             Ok(Control::Snapshot(tx)) => {
                                 tx.send(metrics.snapshot()).ok();
                             }
+                            Ok(Control::Prometheus(tx)) => {
+                                tx.send(metrics.prometheus()).ok();
+                            }
                             Ok(Control::Shutdown) => {
                                 shutting_down = true;
                                 break;
@@ -262,6 +275,10 @@ fn serve_loop(
                 }
                 Some(Control::Snapshot(tx)) => {
                     tx.send(metrics.snapshot()).ok();
+                    continue;
+                }
+                Some(Control::Prometheus(tx)) => {
+                    tx.send(metrics.prometheus()).ok();
                     continue;
                 }
                 Some(Control::Shutdown) => {
@@ -309,10 +326,25 @@ fn serve_loop(
         }
         metrics.record_batch(batch.len());
 
+        let mut batch_span = telemetry::span("serve.batch");
+        batch_span.field_u64("batch", batch.len() as u64);
+        batch_span.field_str("mode", if mode == ExecMode::Approximate { "approx" } else { "accurate" });
+
+        // queue stage: enqueue → this dispatch, one sample per request
+        let dispatched = Instant::now();
+        for q in &batch {
+            metrics.record_queue(dispatched.duration_since(q.enqueued));
+        }
+
         let rows: Vec<&[f64]> = batch.iter().map(|q| q.req.input.as_slice()).collect();
-        let logits = backend.execute(&rows, mode)?;
+        let logits = {
+            let _exec_span = telemetry::span("serve.execute");
+            backend.execute(&rows, mode)?
+        };
         let classes = backend.output_width();
         let done = Instant::now();
+        metrics.record_execute(done.duration_since(dispatched));
+        let _reply_span = telemetry::span("serve.reply");
         for (i, q) in batch.into_iter().enumerate() {
             let l = logits[i * classes..(i + 1) * classes].to_vec();
             let class = l

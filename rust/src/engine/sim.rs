@@ -19,6 +19,8 @@ use crate::memory::Prefetcher;
 use crate::model::network::af_iters;
 use crate::model::workloads::TraceKind;
 use crate::quant::LayerPolicy;
+use crate::report::json::{Json, ToJson};
+use crate::telemetry;
 
 /// Per-layer timing outcome.
 #[derive(Debug, Clone)]
@@ -89,6 +91,42 @@ impl EngineReport {
     }
 }
 
+impl ToJson for LayerTiming {
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("kind", Json::Str(format!("{:?}", self.kind))),
+            ("macs", Json::U64(self.macs)),
+            ("mac_cycles", Json::U64(self.mac_cycles)),
+            ("af_cycles", Json::U64(self.af_cycles)),
+            ("pool_cycles", Json::U64(self.pool_cycles)),
+            ("mem_stall_cycles", Json::U64(self.mem_stall_cycles)),
+            ("total_cycles", Json::U64(self.total_cycles)),
+            ("pe_utilization", Json::F64(self.pe_utilization)),
+        ])
+    }
+}
+
+impl ToJson for EngineReport {
+    /// The common `report::json` envelope (`corvet.report.v1`, kind
+    /// `engine_report`) shared with `MetricsSnapshot` / `ClusterReport`.
+    fn to_json(&self) -> Json {
+        crate::report::json::envelope(
+            crate::report::REPORT_SCHEMA,
+            "engine_report",
+            Json::obj(vec![
+                ("pes", Json::U64(self.config.pes as u64)),
+                ("af_blocks", Json::U64(self.config.af_blocks as u64)),
+                ("total_cycles", Json::U64(self.total_cycles)),
+                ("total_macs", Json::U64(self.total_macs)),
+                ("total_ops", Json::U64(self.total_ops)),
+                ("mean_pe_utilization", Json::F64(self.mean_pe_utilization())),
+                ("per_layer", Json::Arr(self.per_layer.iter().map(|l| l.to_json()).collect())),
+            ]),
+        )
+    }
+}
+
 /// Cycles for one scalar AF evaluation of `f` under `mode`-budget iterations
 /// (deterministic representative-input probe of the datapath cost).
 fn af_cost_cycles(f: ActFn, iters: u32) -> u64 {
@@ -118,6 +156,11 @@ fn pool_window_cycles(k: u32) -> u64 {
 
 /// Run the simulation over an IR graph.
 pub fn run(config: EngineConfig, graph: &Graph) -> EngineReport {
+    let mut run_span = telemetry::span("engine.run");
+    if run_span.is_recording() {
+        run_span.field_str("graph", &graph.name);
+        run_span.field_u64("pes", config.pes as u64);
+    }
     let mut prefetch = Prefetcher::new(config.fetch_latency);
     prefetch.preload();
     let mut per_layer = Vec::with_capacity(graph.layers.len());
@@ -150,6 +193,8 @@ pub fn run(config: EngineConfig, graph: &Graph) -> EngineReport {
         per_layer.push(timing);
     }
 
+    run_span.field_u64("total_cycles", now);
+    run_span.field_u64("total_macs", graph.total_macs());
     EngineReport {
         config,
         total_cycles: now,
@@ -417,6 +462,25 @@ mod tests {
             );
             assert!(r_on.total_cycles <= r_off.total_cycles, "{precision}: packing never slows");
         }
+    }
+
+    #[test]
+    fn engine_report_exports_the_common_envelope() {
+        let t = tinyyolo_trace();
+        let r = super::super::VectorEngine::new(EngineConfig::pe64())
+            .run_trace(&t, &uniform_policy(&t, ExecMode::Approximate));
+        let j = r.to_json();
+        assert_eq!(
+            j.get("schema").and_then(|v| v.as_str()),
+            Some(crate::report::REPORT_SCHEMA)
+        );
+        assert_eq!(j.get("kind").and_then(|v| v.as_str()), Some("engine_report"));
+        assert_eq!(
+            j.get("total_cycles").and_then(|v| v.as_f64()),
+            Some(r.total_cycles as f64)
+        );
+        let text = j.render();
+        assert!(crate::report::json::parse(&text).is_some(), "report JSON must parse");
     }
 
     #[test]

@@ -74,6 +74,7 @@ use crate::model::network::{af_iters, pool_cordic, softmax_cordic, LayerStats};
 use crate::model::{Conv2dParams, DenseParams, Layer, Network, Tensor};
 use crate::pooling::PoolCost;
 use crate::quant::{LayerPolicy, PolicyTable, Precision};
+use crate::telemetry;
 
 /// The analytic overlap law: makespan of one layer whose MAC waves and
 /// shared-block (AF/pool/norm) drain run as a fused two-stage pipeline.
@@ -552,6 +553,8 @@ impl WaveExecutor {
         assert_eq!(input.shape(), &net.input_shape[..], "input shape mismatch");
         assert_eq!(policy.len(), net.compute_layers(), "policy/compute-layer mismatch");
         let cfg = &self.config;
+        let mut run_span = telemetry::span("wave.forward");
+        run_span.field_u64("pes", cfg.pes as u64);
         let mut x = input.clone();
         let mut stats =
             WaveRunStats { pes: cfg.pes, overlap: cfg.af_overlap, ..Default::default() };
@@ -564,6 +567,8 @@ impl WaveExecutor {
             policy.layer(0)
         };
         for layer in &net.layers {
+            let mut layer_span = telemetry::span("wave.layer");
+            let before = stats.per_layer.len();
             match layer {
                 Layer::Dense(d) => {
                     current = policy.layer(pidx);
@@ -602,8 +607,30 @@ impl WaveExecutor {
                     stats.per_layer.push(wst);
                 }
             }
+            if layer_span.is_recording() {
+                // fields come straight off the stats struct the kernel just
+                // filled — never recomputed here
+                if let Some(st) = stats.per_layer.get(before) {
+                    layer_span.field_str("kind", st.kind);
+                    layer_span.field_u64("macs", st.macs);
+                    layer_span.field_u64("waves", st.waves);
+                    layer_span.field_u64("mac_cycles", st.mac_cycles);
+                    layer_span.field_u64("af_cycles", st.af_cost.total() as u64);
+                    layer_span.field_u64("pool_cycles", st.pool_cost.total() as u64);
+                    layer_span.field_u64("pipeline_cycles", st.pipeline_cycles);
+                } else {
+                    layer_span.field_str("kind", "reshape");
+                }
+            }
         }
         stats.af_util = sched.report();
+        if run_span.is_recording() {
+            run_span.field_u64("total_macs", stats.total_macs());
+            run_span.field_u64("total_mac_cycles", stats.total_mac_cycles());
+            run_span.field_u64("total_pipeline_cycles", stats.total_pipeline_cycles());
+            run_span.field_f64("hidden_fraction", stats.hidden_fraction());
+            run_span.field_f64("af_occupancy", stats.af_util.busy_fraction());
+        }
         (x, stats)
     }
 
@@ -629,6 +656,9 @@ impl WaveExecutor {
         }
         assert_eq!(policy.len(), net.compute_layers(), "policy/compute-layer mismatch");
         let cfg = &self.config;
+        let mut run_span = telemetry::span("wave.batch");
+        run_span.field_u64("pes", cfg.pes as u64);
+        run_span.field_u64("batch", inputs.len() as u64);
         let mut xs: Vec<Tensor> = inputs.to_vec();
         let mut stats = BatchRunStats {
             pes: cfg.pes,
@@ -650,6 +680,8 @@ impl WaveExecutor {
             policy.layer(0)
         };
         for layer in &net.layers {
+            let mut layer_span = telemetry::span("batch.layer");
+            let before = stats.per_layer.len();
             match layer {
                 Layer::Dense(d) => {
                     current = policy.layer(pidx);
@@ -696,8 +728,34 @@ impl WaveExecutor {
                     stats.per_layer.push(agg);
                 }
             }
+            if layer_span.is_recording() {
+                // sourced from the stats struct the kernel just filled
+                if let Some(st) = stats.per_layer.get(before) {
+                    layer_span.field_str("kind", st.kind);
+                    layer_span.field_u64("macs", st.macs);
+                    layer_span.field_u64("waves", st.waves);
+                    layer_span.field_u64("mac_cycles", st.mac_cycles);
+                    layer_span.field_u64("af_cycles", st.af_cost.total() as u64);
+                    layer_span.field_u64("pool_cycles", st.pool_cost.total() as u64);
+                    layer_span.field_u64("pipeline_cycles", st.pipeline_cycles);
+                    layer_span.field_u64("elements", st.elements);
+                    layer_span.field_u64("lane_slots", st.lane_slots);
+                    layer_span.field_f64("occupancy", st.occupancy());
+                } else {
+                    layer_span.field_str("kind", "reshape");
+                }
+            }
         }
         stats.af_util = sched.report();
+        if run_span.is_recording() {
+            run_span.field_u64("total_macs", stats.total_macs());
+            run_span.field_u64("total_mac_cycles", stats.total_mac_cycles());
+            run_span.field_u64("total_pipeline_cycles", stats.total_pipeline_cycles());
+            run_span.field_f64("hidden_fraction", stats.hidden_fraction());
+            run_span.field_f64("mean_occupancy", stats.mean_occupancy());
+            run_span.field_u64("packing", stats.packing as u64);
+            run_span.field_f64("af_occupancy", stats.af_util.busy_fraction());
+        }
         (xs, stats)
     }
 }

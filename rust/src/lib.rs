@@ -27,6 +27,12 @@
 //!   it, and the simulator, cluster planner, sensitivity heuristic, tables
 //!   and the wave-vectorised executor consume it.
 //!
+//! A crate-wide observability layer ([`telemetry`]) threads nested spans
+//! and log-bucketed streaming histograms through the serving, cluster and
+//! wave paths — exported as JSON-lines traces (`--trace-out`), Prometheus
+//! text exposition (`corvet metrics`), and machine-readable
+//! `BENCH_*.json` perf records through one JSON schema ([`report::json`]).
+//!
 //! See `DESIGN.md` for the paper→module inventory and `EXPERIMENTS.md` for
 //! paper-vs-measured results for every table and figure.
 
@@ -56,6 +62,7 @@ pub mod quant;
 pub mod report;
 pub mod runtime;
 pub mod tables;
+pub mod telemetry;
 pub mod testutil;
 pub mod train;
 

@@ -13,6 +13,7 @@ use corvet::quant::{assign_modes_ir, describe, PolicyTable, Precision};
 use corvet::report::{fnum, Table};
 use corvet::runtime::{quantize_network, ArtifactRegistry, ModelWeights};
 use corvet::tables;
+use corvet::telemetry;
 use corvet::testutil::Xoshiro256;
 use corvet::train::{train, Dataset, DatasetConfig, SgdConfig};
 
@@ -38,6 +39,7 @@ fn run(raw: Vec<String>) -> Result<()> {
         "train" => cmd_train(&args),
         "sensitivity" => cmd_sensitivity(&args),
         "serve" => cmd_serve(&args),
+        "metrics" => cmd_metrics(&args),
         "utilization" => cmd_utilization(),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -70,6 +72,29 @@ fn cmd_table(args: &Args) -> Result<()> {
     };
     emit(t, args.has_flag("csv"));
     Ok(())
+}
+
+/// Enable the global span trace when `--trace-out FILE` is present; the
+/// returned guard flushes and disables it when the command finishes.
+struct TraceGuard(bool);
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        if self.0 {
+            telemetry::global().disable();
+        }
+    }
+}
+
+fn init_trace(args: &Args) -> Result<TraceGuard> {
+    match args.options.get("trace-out") {
+        Some(path) => {
+            telemetry::global().enable_jsonl(std::path::Path::new(path))?;
+            eprintln!("tracing spans to {path}");
+            Ok(TraceGuard(true))
+        }
+        None => Ok(TraceGuard(false)),
+    }
 }
 
 /// Parse an `on|off` A/B knob with a default.
@@ -128,6 +153,7 @@ fn workload_graph(workload: &str) -> Result<Graph> {
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {
+    let _trace = init_trace(args)?;
     let workload = args.opt_or("workload", "tinyyolo");
     let graph = workload_graph(&workload)?;
     let pes: usize = args.num_or("pes", 256usize)?;
@@ -167,6 +193,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
+    let _trace = init_trace(args)?;
     let workload = args.opt_or("workload", "vgg16");
     let graph = workload_graph(&workload)?;
     let shards: usize = args.num_or("shards", 4usize)?;
@@ -342,6 +369,7 @@ fn cmd_sensitivity(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
+    let _trace = init_trace(args)?;
     let quick = args.has_flag("quick");
     let artifacts = args.opt_or("artifacts", "artifacts");
     let backend = args.opt_or("backend", "pjrt");
@@ -417,6 +445,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     let (sim_ms, sim_w) = tables::e2e_simulated();
     emit(tables::e2e_table(Some((sim_ms, sim_w))), args.has_flag("csv"));
+    Ok(())
+}
+
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let n_requests: usize = args.num_or("requests", 64usize)?;
+    let pes: usize = args.num_or("pes", 64usize)?;
+    let tel = telemetry::global();
+    tel.enable();
+
+    // a short wave-serving workload so every family has data: untrained
+    // weights are fine — the exposition, not the accuracy, is the product
+    let net = paper_mlp(7);
+    let width: usize = net.input_shape.iter().product();
+    let engine = EngineConfig { pes, ..EngineConfig::default() };
+    let mut server = Server::start_wave(net, engine, ServerConfig::default())?;
+    let mut rng = Xoshiro256::new(11);
+    let mut pending = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let input: Vec<f64> = (0..width).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        pending.push(server.submit(input)?);
+    }
+    for rx in pending {
+        rx.recv().context("response channel closed")?;
+    }
+
+    // serving metrics first (latency/queue/execute histograms, counters),
+    // then the global registry (span.<name>.us duration histograms)
+    print!("{}", server.prometheus()?);
+    print!("{}", tel.registry().render_prometheus());
+    server.shutdown()?;
+    tel.disable();
     Ok(())
 }
 

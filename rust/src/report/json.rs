@@ -1,0 +1,419 @@
+//! Hand-rolled JSON tree, renderer, and parser (serde is not vendored).
+//!
+//! One [`Json`] value type plus the [`ToJson`] trait give every report
+//! struct in the crate — `MetricsSnapshot`, `ClusterReport`, `EngineReport`,
+//! bench results — a single machine-readable export path (DESIGN.md §13),
+//! all sharing the [`envelope`] shape: a `"schema"` version tag and a
+//! `"kind"` discriminator first, then the body. Rendering is deterministic:
+//! object keys keep insertion order, floats use Rust's shortest round-trip
+//! formatting, and non-finite floats serialise as `null` (JSON has no
+//! NaN/Inf). The parser exists so tests can round-trip rendered output and
+//! so tools can validate `BENCH_*.json` / trace lines without serde.
+
+use std::fmt::Write as _;
+
+/// A JSON value tree.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Unsigned integer (rendered without a decimal point).
+    U64(u64),
+    /// Signed integer.
+    I64(i64),
+    /// Float; non-finite values render as `null`.
+    F64(f64),
+    /// String (escaped on render).
+    Str(String),
+    /// Array.
+    Arr(Vec<Json>),
+    /// Object; key order is preserved, so output is deterministic.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Shorthand for a string value.
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    /// Build an object from `(key, value)` pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render to a compact JSON string.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        self.write(&mut out);
+        out
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::U64(v) => {
+                let _ = write!(out, "{v}");
+            }
+            Json::I64(v) => {
+                let _ = write!(out, "{v}");
+            }
+            Json::F64(v) => {
+                if v.is_finite() {
+                    // shortest round-trip formatting; integral floats print
+                    // without a dot, which is still a valid JSON number
+                    let _ = write!(out, "{v}");
+                } else {
+                    out.push_str("null");
+                }
+            }
+            Json::Str(s) => write_escaped(out, s),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(pairs) => {
+                out.push('{');
+                for (i, (k, v)) in pairs.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(out, k);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+
+    /// Fetch an object field by key (first match), if any.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(pairs) => pairs.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The value as f64 if it is any numeric variant.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::U64(v) => Some(*v as f64),
+            Json::I64(v) => Some(*v as f64),
+            Json::F64(v) => Some(*v),
+            _ => None,
+        }
+    }
+
+    /// The value as a string slice if it is a string.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+}
+
+fn write_escaped(out: &mut String, s: &str) {
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+}
+
+/// Types that export themselves as a [`Json`] tree.
+///
+/// Implemented by the crate's report structs so the CLI, benches, and the
+/// CI bench gate consume one schema instead of one per struct.
+pub trait ToJson {
+    /// Convert to a JSON value.
+    fn to_json(&self) -> Json;
+}
+
+/// Wrap a report body in the crate's common export envelope: `"schema"`
+/// (version tag, e.g. `"corvet.bench.v1"`) and `"kind"` (struct
+/// discriminator) come first so every consumer dispatches on one shape.
+/// A non-object body is nested under a `"body"` key.
+pub fn envelope(schema: &str, kind: &str, body: Json) -> Json {
+    let mut pairs =
+        vec![("schema".to_string(), Json::str(schema)), ("kind".to_string(), Json::str(kind))];
+    match body {
+        Json::Obj(mut fields) => pairs.append(&mut fields),
+        other => pairs.push(("body".to_string(), other)),
+    }
+    Json::Obj(pairs)
+}
+
+/// Parse a JSON document (the whole string must be one value plus optional
+/// surrounding whitespace). Returns `None` on any syntax error.
+///
+/// Integers without fraction/exponent parse as `U64`/`I64`; everything else
+/// numeric parses as `F64` — matching what [`Json::render`] emits, so
+/// render→parse round-trips.
+pub fn parse(s: &str) -> Option<Json> {
+    let bytes = s.as_bytes();
+    let mut pos = 0usize;
+    skip_ws(bytes, &mut pos);
+    let v = parse_value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos == bytes.len() {
+        Some(v)
+    } else {
+        None
+    }
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && matches!(b[*pos], b' ' | b'\t' | b'\n' | b'\r') {
+        *pos += 1;
+    }
+}
+
+fn parse_value(b: &[u8], pos: &mut usize) -> Option<Json> {
+    match b.get(*pos)? {
+        b'n' => parse_lit(b, pos, "null", Json::Null),
+        b't' => parse_lit(b, pos, "true", Json::Bool(true)),
+        b'f' => parse_lit(b, pos, "false", Json::Bool(false)),
+        b'"' => parse_string(b, pos).map(Json::Str),
+        b'[' => {
+            *pos += 1;
+            let mut items = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b']') {
+                *pos += 1;
+                return Some(Json::Arr(items));
+            }
+            loop {
+                skip_ws(b, pos);
+                items.push(parse_value(b, pos)?);
+                skip_ws(b, pos);
+                match b.get(*pos)? {
+                    b',' => *pos += 1,
+                    b']' => {
+                        *pos += 1;
+                        return Some(Json::Arr(items));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        b'{' => {
+            *pos += 1;
+            let mut pairs = Vec::new();
+            skip_ws(b, pos);
+            if b.get(*pos) == Some(&b'}') {
+                *pos += 1;
+                return Some(Json::Obj(pairs));
+            }
+            loop {
+                skip_ws(b, pos);
+                let key = parse_string(b, pos)?;
+                skip_ws(b, pos);
+                if b.get(*pos)? != &b':' {
+                    return None;
+                }
+                *pos += 1;
+                skip_ws(b, pos);
+                pairs.push((key, parse_value(b, pos)?));
+                skip_ws(b, pos);
+                match b.get(*pos)? {
+                    b',' => *pos += 1,
+                    b'}' => {
+                        *pos += 1;
+                        return Some(Json::Obj(pairs));
+                    }
+                    _ => return None,
+                }
+            }
+        }
+        _ => parse_number(b, pos),
+    }
+}
+
+fn parse_lit(b: &[u8], pos: &mut usize, lit: &str, v: Json) -> Option<Json> {
+    if b[*pos..].starts_with(lit.as_bytes()) {
+        *pos += lit.len();
+        Some(v)
+    } else {
+        None
+    }
+}
+
+fn parse_string(b: &[u8], pos: &mut usize) -> Option<String> {
+    if b.get(*pos)? != &b'"' {
+        return None;
+    }
+    *pos += 1;
+    let mut out = String::new();
+    loop {
+        match b.get(*pos)? {
+            b'"' => {
+                *pos += 1;
+                return Some(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                match b.get(*pos)? {
+                    b'"' => out.push('"'),
+                    b'\\' => out.push('\\'),
+                    b'/' => out.push('/'),
+                    b'n' => out.push('\n'),
+                    b'r' => out.push('\r'),
+                    b't' => out.push('\t'),
+                    b'b' => out.push('\u{8}'),
+                    b'f' => out.push('\u{c}'),
+                    b'u' => {
+                        let hex = b.get(*pos + 1..*pos + 5)?;
+                        let code =
+                            u32::from_str_radix(std::str::from_utf8(hex).ok()?, 16).ok()?;
+                        // lone surrogates become U+FFFD; we never emit them
+                        out.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        *pos += 4;
+                    }
+                    _ => return None,
+                }
+                *pos += 1;
+            }
+            _ => {
+                // consume one UTF-8 char
+                let rest = std::str::from_utf8(&b[*pos..]).ok()?;
+                let c = rest.chars().next()?;
+                out.push(c);
+                *pos += c.len_utf8();
+            }
+        }
+    }
+}
+
+fn parse_number(b: &[u8], pos: &mut usize) -> Option<Json> {
+    let start = *pos;
+    if b.get(*pos) == Some(&b'-') {
+        *pos += 1;
+    }
+    let mut float = false;
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'0'..=b'9' => *pos += 1,
+            b'.' | b'e' | b'E' | b'+' | b'-' => {
+                float = true;
+                *pos += 1;
+            }
+            _ => break,
+        }
+    }
+    let text = std::str::from_utf8(&b[start..*pos]).ok()?;
+    if text.is_empty() || text == "-" {
+        return None;
+    }
+    if !float {
+        if let Ok(v) = text.parse::<u64>() {
+            return Some(Json::U64(v));
+        }
+        if let Ok(v) = text.parse::<i64>() {
+            return Some(Json::I64(v));
+        }
+    }
+    text.parse::<f64>().ok().filter(|v| v.is_finite()).map(Json::F64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_nested_structures() {
+        let v = Json::obj(vec![
+            ("a", Json::U64(1)),
+            ("b", Json::Arr(vec![Json::Bool(true), Json::Null])),
+            ("c", Json::obj(vec![("d", Json::str("x"))])),
+        ]);
+        assert_eq!(v.render(), r#"{"a":1,"b":[true,null],"c":{"d":"x"}}"#);
+    }
+
+    #[test]
+    fn escapes_strings() {
+        let v = Json::str("a\"b\\c\nd\te\u{1}");
+        assert_eq!(v.render(), r#""a\"b\\c\nd\te\u0001""#);
+    }
+
+    #[test]
+    fn non_finite_floats_are_null() {
+        assert_eq!(Json::F64(f64::NAN).render(), "null");
+        assert_eq!(Json::F64(f64::INFINITY).render(), "null");
+        assert_eq!(Json::F64(1.5).render(), "1.5");
+    }
+
+    #[test]
+    fn envelope_puts_schema_and_kind_first() {
+        let v = envelope("corvet.test.v1", "demo", Json::obj(vec![("x", Json::U64(3))]));
+        assert_eq!(v.render(), r#"{"schema":"corvet.test.v1","kind":"demo","x":3}"#);
+        assert_eq!(v.get("schema").and_then(|s| s.as_str()), Some("corvet.test.v1"));
+    }
+
+    #[test]
+    fn envelope_wraps_non_object_bodies() {
+        let v = envelope("s", "k", Json::U64(7));
+        assert_eq!(v.render(), r#"{"schema":"s","kind":"k","body":7}"#);
+    }
+
+    #[test]
+    fn parse_round_trips_render() {
+        let v = Json::obj(vec![
+            ("name", Json::str("wave \"x\"\n")),
+            ("n", Json::U64(u64::MAX)),
+            ("neg", Json::I64(-42)),
+            ("f", Json::F64(0.125)),
+            ("arr", Json::Arr(vec![Json::Null, Json::Bool(false), Json::F64(-1.5e-3)])),
+            ("empty", Json::Obj(vec![])),
+        ]);
+        let text = v.render();
+        let back = parse(&text).expect("rendered JSON must parse");
+        assert_eq!(back.render(), text);
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        for bad in ["", "{", "[1,", "{\"a\" 1}", "tru", "1.2.3", "{} extra", "\"unterminated"] {
+            assert!(parse(bad).is_none(), "{bad:?} should not parse");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_whitespace_and_unicode_escapes() {
+        let v = parse(" { \"a\" : [ 1 , -2 , 3.5 ] , \"s\" : \"\\u0041\" } ").unwrap();
+        assert_eq!(v.get("s").and_then(|s| s.as_str()), Some("A"));
+        assert_eq!(v.get("a").unwrap(), &Json::Arr(vec![
+            Json::U64(1),
+            Json::I64(-2),
+            Json::F64(3.5)
+        ]));
+    }
+
+    #[test]
+    fn numeric_accessor_spans_variants() {
+        assert_eq!(Json::U64(3).as_f64(), Some(3.0));
+        assert_eq!(Json::I64(-3).as_f64(), Some(-3.0));
+        assert_eq!(Json::F64(0.5).as_f64(), Some(0.5));
+        assert_eq!(Json::str("x").as_f64(), None);
+    }
+}

@@ -1,8 +1,18 @@
-//! Report emitters: aligned text tables, CSV, and simple key-value blocks
-//! (serde is not vendored; these cover everything the benches, tables and
-//! CLI need to print or dump).
+//! Report emitters: aligned text tables, CSV, simple key-value blocks, and
+//! the crate-wide JSON export path ([`json`]) — serde is not vendored;
+//! these cover everything the benches, tables and CLI need to print or
+//! dump, and give `MetricsSnapshot` / `ClusterReport` / `EngineReport` /
+//! bench results one machine-readable schema (DESIGN.md §13).
+
+pub mod json;
 
 use std::fmt::Write as _;
+
+/// Schema tag stamped on every unified report export
+/// (`MetricsSnapshot` / `ClusterReport` / `EngineReport` via
+/// [`json::envelope`]). Bench results carry their own
+/// `bench_harness::BENCH_SCHEMA`.
+pub const REPORT_SCHEMA: &str = "corvet.report.v1";
 
 /// A renderable table.
 #[derive(Debug, Clone, PartialEq, Eq)]

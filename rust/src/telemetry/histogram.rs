@@ -1,0 +1,381 @@
+//! Log-bucketed streaming histogram: bounded memory, exact merges, and a
+//! documented quantile error of at most one bucket width (DESIGN.md §13).
+//!
+//! The layout is HdrHistogram-like: values below [`BUCKETS_PER_OCTAVE`]
+//! land in exact unit buckets; above that, each power-of-two octave is cut
+//! into [`BUCKETS_PER_OCTAVE`] equal sub-buckets, so bucket width never
+//! exceeds [`MAX_RELATIVE_ERROR`] (= 1/32 ≈ 3.125 %) of the values it
+//! holds. Total footprint is a fixed [`NUM_BUCKETS`] `u64` counters
+//! (~15 KiB) regardless of how many samples stream in — this is what backs
+//! `coordinator::Metrics` so sustained serving load no longer grows an
+//! unbounded `Vec`.
+
+use crate::report::json::{Json, ToJson};
+
+/// Sub-buckets per power-of-two octave. Must be a power of two.
+pub const BUCKETS_PER_OCTAVE: u64 = 32;
+
+/// log2([`BUCKETS_PER_OCTAVE`]).
+const SUB_BITS: u32 = 5;
+
+/// Total bucket count: 32 exact unit buckets + 32 sub-buckets for each of
+/// the 59 remaining octaves of the `u64` range.
+pub const NUM_BUCKETS: usize = 1920;
+
+/// Worst-case width of any bucket relative to the smallest value it can
+/// hold: `1 / BUCKETS_PER_OCTAVE`. Values below [`BUCKETS_PER_OCTAVE`]
+/// are bucketed exactly (zero error).
+pub const MAX_RELATIVE_ERROR: f64 = 1.0 / BUCKETS_PER_OCTAVE as f64;
+
+/// A streaming histogram over `u64` samples (latencies in µs, cycle
+/// counts, …) with logarithmic buckets.
+///
+/// # Bucketing law
+///
+/// `bucket_index(v) = v` for `v < 32`; otherwise with
+/// `oct = 63 - v.leading_zeros()` the index is
+/// `(oct - 4) * 32 + ((v >> (oct - 5)) & 31)`. Every bucket at or above 32
+/// spans `2^(oct-5)` consecutive values starting at `(32 + sub) << (oct-5)`,
+/// so its width is at most 1/32 of its lower bound:
+///
+/// ```
+/// use corvet::telemetry::LogHistogram;
+///
+/// // values below 32 land in exact unit buckets
+/// assert_eq!(LogHistogram::bucket_index(7), 7);
+/// let (lo, hi) = LogHistogram::bucket_bounds(LogHistogram::bucket_index(7));
+/// assert_eq!((lo, hi), (7, 7));
+///
+/// // above that: the bucket contains the value and spans ≤ lo/32 values
+/// for v in [32u64, 1000, 123_456, u64::MAX] {
+///     let (lo, hi) = LogHistogram::bucket_bounds(LogHistogram::bucket_index(v));
+///     assert!(lo <= v && v <= hi);
+///     assert!((hi - lo + 1) as f64 <= lo as f64 / 32.0);
+/// }
+/// ```
+///
+/// # Quantile error bound
+///
+/// [`quantile`](LogHistogram::quantile) reports the midpoint of the bucket
+/// holding the rank-`⌈p·n⌉` sample (clamped to the observed `[min, max]`),
+/// so it differs from the exact-sort quantile by **less than one bucket
+/// width**: zero for values below 32, and under
+/// [`MAX_RELATIVE_ERROR`] × the exact quantile otherwise. `p = 0` and
+/// `p = 1` return the exact observed min/max, and `count`/`sum`/`mean` are
+/// exact at all times.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    counts: Box<[u64]>,
+    count: u64,
+    sum: u128,
+    /// `u64::MAX` while empty so `min(other.min)` merges stay exact.
+    min: u64,
+    max: u64,
+}
+
+impl LogHistogram {
+    /// New empty histogram (all counters zero).
+    pub fn new() -> Self {
+        LogHistogram {
+            counts: vec![0u64; NUM_BUCKETS].into_boxed_slice(),
+            count: 0,
+            sum: 0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    /// The bucket index a value lands in (see the type-level bucketing law).
+    pub fn bucket_index(v: u64) -> usize {
+        if v < BUCKETS_PER_OCTAVE {
+            v as usize
+        } else {
+            let oct = 63 - v.leading_zeros();
+            let sub = ((v >> (oct - SUB_BITS)) & (BUCKETS_PER_OCTAVE - 1)) as usize;
+            (oct - SUB_BITS + 1) as usize * BUCKETS_PER_OCTAVE as usize + sub
+        }
+    }
+
+    /// Inclusive `(lo, hi)` value range of a bucket.
+    pub fn bucket_bounds(idx: usize) -> (u64, u64) {
+        assert!(idx < NUM_BUCKETS, "bucket index {idx} out of range");
+        if idx < BUCKETS_PER_OCTAVE as usize {
+            (idx as u64, idx as u64)
+        } else {
+            let oct = (idx as u64 / BUCKETS_PER_OCTAVE) as u32 + SUB_BITS - 1;
+            let sub = idx as u64 % BUCKETS_PER_OCTAVE;
+            let shift = oct - SUB_BITS;
+            let lo = (BUCKETS_PER_OCTAVE + sub) << shift;
+            (lo, lo + ((1u64 << shift) - 1))
+        }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.record_n(v, 1);
+    }
+
+    /// Record `n` identical samples at once.
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        if n == 0 {
+            return;
+        }
+        self.counts[Self::bucket_index(v)] += n;
+        self.count += n;
+        self.sum += v as u128 * n as u128;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    /// Samples recorded (exact).
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// True when no samples have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Sum of all samples (exact; `u128` so 2⁶⁴ samples of any value fit).
+    pub fn sum(&self) -> u128 {
+        self.sum
+    }
+
+    /// Exact mean, or 0 when empty.
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Exact minimum observed sample, or 0 when empty.
+    pub fn min(&self) -> u64 {
+        if self.count == 0 {
+            0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact maximum observed sample, or 0 when empty.
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Quantile estimate at `p ∈ [0, 1]` — see the type-level error bound.
+    /// Returns 0 when empty.
+    pub fn quantile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        if p <= 0.0 {
+            return self.min();
+        }
+        if p >= 1.0 {
+            return self.max;
+        }
+        let rank = ((p * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                let (lo, hi) = Self::bucket_bounds(idx);
+                return (lo + (hi - lo) / 2).clamp(self.min, self.max);
+            }
+        }
+        self.max // unreachable: ranks are ≤ count
+    }
+
+    /// Merge two histograms by summing their counters — exact, so the
+    /// operation is associative, commutative, and merging with an empty
+    /// histogram is the identity, bit for bit (the same laws
+    /// `activation::UtilizationReport::merge` keeps for scheduler reports).
+    pub fn merge(mut self, other: LogHistogram) -> LogHistogram {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += *b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+        self
+    }
+
+    /// Non-empty buckets as `(inclusive upper bound, count)`, ascending —
+    /// the shape Prometheus histogram exposition consumes.
+    pub fn nonzero_buckets(&self) -> impl Iterator<Item = (u64, u64)> + '_ {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| (Self::bucket_bounds(i).1, c))
+    }
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ToJson for LogHistogram {
+    /// Summary export: exact count/sum/min/max/mean plus the standard
+    /// quantiles (each subject to the documented bucket-width error).
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::U64(self.count)),
+            ("sum", Json::F64(self.sum as f64)),
+            ("min", Json::U64(self.min())),
+            ("max", Json::U64(self.max())),
+            ("mean", Json::F64(self.mean())),
+            ("p50", Json::U64(self.quantile(0.50))),
+            ("p99", Json::U64(self.quantile(0.99))),
+            ("p999", Json::U64(self.quantile(0.999))),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = LogHistogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        for p in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let exact = if p <= 0.0 {
+                0
+            } else {
+                ((p * 32.0).ceil() as u64).clamp(1, 32) - 1
+            };
+            assert_eq!(h.quantile(p), exact, "p={p}");
+        }
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 31);
+        assert_eq!(h.count(), 32);
+    }
+
+    #[test]
+    fn bucket_bounds_invert_bucket_index() {
+        for idx in 0..NUM_BUCKETS {
+            let (lo, hi) = LogHistogram::bucket_bounds(idx);
+            assert!(lo <= hi);
+            assert_eq!(LogHistogram::bucket_index(lo), idx);
+            assert_eq!(LogHistogram::bucket_index(hi), idx);
+            if idx + 1 < NUM_BUCKETS {
+                let (next_lo, _) = LogHistogram::bucket_bounds(idx + 1);
+                assert_eq!(next_lo, hi.wrapping_add(1), "buckets must tile the range");
+            } else {
+                assert_eq!(hi, u64::MAX, "last bucket ends the u64 range");
+            }
+        }
+    }
+
+    #[test]
+    fn point_mass_quantiles_are_the_point() {
+        let mut h = LogHistogram::new();
+        h.record_n(123_456, 10_000);
+        for p in [0.0, 0.001, 0.5, 0.999, 1.0] {
+            assert_eq!(h.quantile(p), 123_456, "p={p}");
+        }
+        assert_eq!(h.mean(), 123_456.0);
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = LogHistogram::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.min(), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+        assert!(h.is_empty());
+        assert_eq!(h.nonzero_buckets().count(), 0);
+    }
+
+    #[test]
+    fn merge_with_empty_is_identity() {
+        let mut h = LogHistogram::new();
+        for v in [1u64, 50, 999, 1_000_000] {
+            h.record(v);
+        }
+        assert_eq!(h.clone().merge(LogHistogram::new()), h);
+        assert_eq!(LogHistogram::new().merge(h.clone()), h);
+    }
+
+    #[test]
+    fn merge_equals_recording_the_union() {
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut whole = LogHistogram::new();
+        for v in 0..1000u64 {
+            let v = v * v + 7;
+            if v % 3 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            whole.record(v);
+        }
+        assert_eq!(a.merge(b), whole);
+    }
+
+    #[test]
+    fn quantile_error_is_within_one_bucket_width() {
+        // deterministic pseudo-uniform samples over several octaves
+        let mut h = LogHistogram::new();
+        let mut values: Vec<u64> = Vec::new();
+        let mut x = 88172645463325252u64;
+        for _ in 0..10_000 {
+            // xorshift64
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            let v = x % 1_000_000;
+            values.push(v);
+            h.record(v);
+        }
+        values.sort_unstable();
+        for p in [0.01, 0.1, 0.5, 0.9, 0.99, 0.999] {
+            let rank = ((p * values.len() as f64).ceil() as usize).clamp(1, values.len());
+            let exact = values[rank - 1];
+            let approx = h.quantile(p);
+            let tol = (exact as f64 * MAX_RELATIVE_ERROR).max(1.0);
+            assert!(
+                (approx as f64 - exact as f64).abs() <= tol,
+                "p={p}: approx {approx} vs exact {exact} (tol {tol})"
+            );
+        }
+    }
+
+    #[test]
+    fn nonzero_buckets_cover_the_count() {
+        let mut h = LogHistogram::new();
+        for v in [3u64, 3, 40, 5000, 5001] {
+            h.record(v);
+        }
+        let total: u64 = h.nonzero_buckets().map(|(_, c)| c).sum();
+        assert_eq!(total, h.count());
+        let ubs: Vec<u64> = h.nonzero_buckets().map(|(ub, _)| ub).collect();
+        let mut sorted = ubs.clone();
+        sorted.sort_unstable();
+        assert_eq!(ubs, sorted, "buckets iterate in ascending value order");
+    }
+
+    #[test]
+    fn json_summary_has_exact_aggregates() {
+        let mut h = LogHistogram::new();
+        h.record(10);
+        h.record(20);
+        let j = h.to_json();
+        assert_eq!(j.get("count").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(j.get("sum").and_then(|v| v.as_f64()), Some(30.0));
+        assert_eq!(j.get("min").and_then(|v| v.as_f64()), Some(10.0));
+        assert_eq!(j.get("max").and_then(|v| v.as_f64()), Some(20.0));
+    }
+}

@@ -1,0 +1,416 @@
+//! Crate-wide observability substrate (DESIGN.md §13): one [`Registry`] of
+//! named counters/gauges/log-bucketed histograms, lightweight nested
+//! [`Span`]s, and pluggable exporters — JSON-lines traces ([`JsonlSink`],
+//! the CLI's `--trace-out FILE`), Prometheus text exposition
+//! ([`Registry::render_prometheus`], the CLI's `corvet metrics`), and the
+//! in-memory capture sink tests use ([`MemorySink`]).
+//!
+//! The coordinator's serve loop, the cluster shard executor, and the
+//! wave/batch executors all instrument through the process-global handle
+//! ([`global`] / [`span`]). A governor can only adapt to what it can
+//! measure (POLARON-style precision reconfiguration presupposes exactly
+//! this feedback plumbing — see PAPERS.md), so the hot paths publish the
+//! cycle laws they already compute — MAC/AF/pipeline cycles, lane
+//! occupancy, pack factor, overlap hidden-fraction — as span fields rather
+//! than recomputing anything.
+//!
+//! # Disabled mode
+//!
+//! Telemetry starts **disabled**: [`Telemetry::span`] performs one relaxed
+//! atomic load and returns an inert guard — no allocation, no timestamp,
+//! no lock — and every field setter on an inert span is a no-op. The
+//! instrumentation never touches the data path, so wave-executor outputs
+//! are bit-identical with telemetry on or off (`tests/ir_parity.rs` pins
+//! this A/B), and the measured overhead of the disabled hooks on
+//! `forward_wave` is below run-to-run noise (EXPERIMENTS.md §telemetry).
+//!
+//! # Span model
+//!
+//! Spans nest per thread: a span opened while another is live on the same
+//! thread records it as its parent, and guards must drop in LIFO order
+//! (the natural scoping). Each span emits a start and an end
+//! [`TraceEvent`]; the end event carries the duration and any attached
+//! `key=value` fields, and the duration also lands in a registry histogram
+//! named `span.<name>.us`, so every instrumented region gets p50/p99/p999
+//! for free in the Prometheus dump.
+
+mod histogram;
+mod registry;
+mod sink;
+
+pub use histogram::{LogHistogram, BUCKETS_PER_OCTAVE, MAX_RELATIVE_ERROR, NUM_BUCKETS};
+pub use registry::{
+    prometheus_sanitize, write_prometheus_counter, write_prometheus_gauge,
+    write_prometheus_histogram, Counter, Gauge, Histogram, Registry,
+};
+pub use sink::{EventKind, EventSink, FieldValue, JsonlSink, MemorySink, TraceEvent};
+
+use once_cell::sync::Lazy;
+use std::cell::RefCell;
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+struct Inner {
+    enabled: AtomicBool,
+    epoch: Instant,
+    next_span: AtomicU64,
+    registry: Registry,
+    sink: Mutex<Option<Box<dyn EventSink>>>,
+}
+
+/// A telemetry handle: cheap to clone, shareable across threads. Most code
+/// uses the process-global one via [`global`] / [`span`]; tests construct
+/// private handles to make assertions without cross-test interference.
+#[derive(Clone)]
+pub struct Telemetry {
+    inner: Arc<Inner>,
+}
+
+impl std::fmt::Debug for Telemetry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Telemetry").field("enabled", &self.is_enabled()).finish()
+    }
+}
+
+impl Default for Telemetry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Telemetry {
+    /// New handle, disabled, with an empty registry and no sink.
+    pub fn new() -> Self {
+        Telemetry {
+            inner: Arc::new(Inner {
+                enabled: AtomicBool::new(false),
+                epoch: Instant::now(),
+                next_span: AtomicU64::new(1),
+                registry: Registry::new(),
+                sink: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Is instrumentation live?
+    pub fn is_enabled(&self) -> bool {
+        self.inner.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Enable without a sink: spans run (feeding the registry's
+    /// `span.<name>.us` histograms) but no trace events are exported.
+    pub fn enable(&self) {
+        self.inner.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Enable and install an event sink (replacing any previous one, which
+    /// is flushed first).
+    pub fn enable_with_sink(&self, sink: Box<dyn EventSink>) {
+        let mut slot = self.inner.sink.lock().expect("sink lock");
+        if let Some(old) = slot.as_mut() {
+            old.flush();
+        }
+        *slot = Some(sink);
+        drop(slot);
+        self.inner.enabled.store(true, Ordering::Relaxed);
+    }
+
+    /// Enable with a JSON-lines trace file at `path` (the `--trace-out`
+    /// wiring).
+    pub fn enable_jsonl(&self, path: &Path) -> crate::Result<()> {
+        let sink = JsonlSink::create(path)
+            .map_err(|e| anyhow::anyhow!("creating trace file {}: {e}", path.display()))?;
+        self.enable_with_sink(Box::new(sink));
+        Ok(())
+    }
+
+    /// Disable instrumentation and drop the sink (flushed first). The
+    /// registry and its accumulated metrics survive.
+    pub fn disable(&self) {
+        self.inner.enabled.store(false, Ordering::Relaxed);
+        let mut slot = self.inner.sink.lock().expect("sink lock");
+        if let Some(old) = slot.as_mut() {
+            old.flush();
+        }
+        *slot = None;
+    }
+
+    /// Flush the sink, if any.
+    pub fn flush(&self) {
+        if let Some(sink) = self.inner.sink.lock().expect("sink lock").as_mut() {
+            sink.flush();
+        }
+    }
+
+    /// The handle's metric registry.
+    pub fn registry(&self) -> &Registry {
+        &self.inner.registry
+    }
+
+    /// Get or create a counter (shorthand for `registry().counter`).
+    pub fn counter(&self, name: &str) -> Counter {
+        self.inner.registry.counter(name)
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        self.inner.registry.gauge(name)
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        self.inner.registry.histogram(name)
+    }
+
+    /// Microseconds since this handle was created.
+    pub fn now_us(&self) -> u64 {
+        self.inner.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Open a span. Disabled handles return an inert guard after a single
+    /// relaxed atomic load — the whole cost of dormant instrumentation.
+    pub fn span(&self, name: &'static str) -> Span {
+        if !self.is_enabled() {
+            return Span { active: None };
+        }
+        let id = self.inner.next_span.fetch_add(1, Ordering::Relaxed);
+        let parent = SPAN_STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            let parent = stack.last().copied();
+            stack.push(id);
+            parent
+        });
+        let t_us = self.now_us();
+        self.emit(&TraceEvent {
+            kind: EventKind::Start,
+            id,
+            parent,
+            name,
+            t_us,
+            dur_us: None,
+            fields: Vec::new(),
+        });
+        Span {
+            active: Some(ActiveSpan {
+                tel: self.clone(),
+                id,
+                parent,
+                name,
+                started: Instant::now(),
+                fields: Vec::new(),
+            }),
+        }
+    }
+
+    fn emit(&self, ev: &TraceEvent) {
+        if let Some(sink) = self.inner.sink.lock().expect("sink lock").as_mut() {
+            sink.emit(ev);
+        }
+    }
+}
+
+thread_local! {
+    static SPAN_STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+struct ActiveSpan {
+    tel: Telemetry,
+    id: u64,
+    parent: Option<u64>,
+    name: &'static str,
+    started: Instant,
+    fields: Vec<(&'static str, FieldValue)>,
+}
+
+/// An RAII span guard: created by [`Telemetry::span`] / [`span`], emits the
+/// end event (with duration and fields) on drop. Inert — every method a
+/// no-op — when telemetry was disabled at creation time.
+#[derive(Debug)]
+pub struct Span {
+    active: Option<ActiveSpan>,
+}
+
+impl std::fmt::Debug for ActiveSpan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ActiveSpan").field("id", &self.id).field("name", &self.name).finish()
+    }
+}
+
+impl Span {
+    /// Is this span live (telemetry was enabled when it opened)?
+    pub fn is_recording(&self) -> bool {
+        self.active.is_some()
+    }
+
+    /// Attach an unsigned-integer field (cycle counts, batch sizes, …).
+    pub fn field_u64(&mut self, key: &'static str, v: u64) {
+        if let Some(a) = &mut self.active {
+            a.fields.push((key, FieldValue::U64(v)));
+        }
+    }
+
+    /// Attach a signed-integer field.
+    pub fn field_i64(&mut self, key: &'static str, v: i64) {
+        if let Some(a) = &mut self.active {
+            a.fields.push((key, FieldValue::I64(v)));
+        }
+    }
+
+    /// Attach a float field (occupancies, fractions, …).
+    pub fn field_f64(&mut self, key: &'static str, v: f64) {
+        if let Some(a) = &mut self.active {
+            a.fields.push((key, FieldValue::F64(v)));
+        }
+    }
+
+    /// Attach a string field (layer names, strategies, modes, …).
+    pub fn field_str(&mut self, key: &'static str, v: &str) {
+        if let Some(a) = &mut self.active {
+            a.fields.push((key, FieldValue::Str(v.to_string())));
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(a) = self.active.take() else { return };
+        SPAN_STACK.with(|s| {
+            let mut stack = s.borrow_mut();
+            // LIFO in the common case; tolerate out-of-order drops by
+            // removing this id wherever it sits
+            if let Some(pos) = stack.iter().rposition(|&x| x == a.id) {
+                stack.remove(pos);
+            }
+        });
+        let dur_us = a.started.elapsed().as_micros() as u64;
+        a.tel.histogram(&format!("span.{}.us", a.name)).record(dur_us);
+        a.tel.emit(&TraceEvent {
+            kind: EventKind::End,
+            id: a.id,
+            parent: a.parent,
+            name: a.name,
+            t_us: a.tel.now_us(),
+            dur_us: Some(dur_us),
+            fields: a.fields,
+        });
+    }
+}
+
+static GLOBAL: Lazy<Telemetry> = Lazy::new(Telemetry::new);
+
+/// The process-global telemetry handle all built-in instrumentation uses.
+/// Starts disabled; the CLI enables it for `--trace-out` / `corvet
+/// metrics`, and tests enable it around captures.
+pub fn global() -> &'static Telemetry {
+    &GLOBAL
+}
+
+/// Open a span on the [`global`] handle — the one-liner hot paths call:
+/// `let mut sp = telemetry::span("serve.batch");`.
+pub fn span(name: &'static str) -> Span {
+    GLOBAL.span(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_spans_are_inert() {
+        let tel = Telemetry::new();
+        let mut sp = tel.span("never");
+        assert!(!sp.is_recording());
+        sp.field_u64("x", 1); // must not panic or record
+        drop(sp);
+        assert!(tel.registry().names().is_empty(), "no metrics from inert spans");
+    }
+
+    #[test]
+    fn spans_emit_start_end_pairs_with_nesting() {
+        let tel = Telemetry::new();
+        let sink = MemorySink::new();
+        tel.enable_with_sink(Box::new(sink.clone()));
+        {
+            let mut outer = tel.span("outer");
+            outer.field_str("who", "test");
+            {
+                let mut inner = tel.span("inner");
+                inner.field_u64("n", 3);
+            }
+        }
+        tel.disable();
+        let evs = sink.events();
+        assert_eq!(evs.len(), 4, "start+end for both spans");
+        let outer_start = &evs[0];
+        let inner_start = &evs[1];
+        let inner_end = &evs[2];
+        let outer_end = &evs[3];
+        assert_eq!(outer_start.kind, EventKind::Start);
+        assert_eq!(outer_start.parent, None);
+        assert_eq!(inner_start.parent, Some(outer_start.id), "nesting records the parent");
+        assert_eq!(inner_end.name, "inner");
+        assert_eq!(outer_end.name, "outer");
+        assert!(outer_end.dur_us.is_some());
+        assert_eq!(
+            outer_end.fields,
+            vec![("who", FieldValue::Str("test".to_string()))]
+        );
+    }
+
+    #[test]
+    fn span_durations_feed_the_registry() {
+        let tel = Telemetry::new();
+        tel.enable();
+        drop(tel.span("timed"));
+        drop(tel.span("timed"));
+        let h = tel.histogram("span.timed.us").snapshot();
+        assert_eq!(h.count(), 2);
+        tel.disable();
+    }
+
+    #[test]
+    fn disable_keeps_registry_but_drops_sink() {
+        let tel = Telemetry::new();
+        let sink = MemorySink::new();
+        tel.enable_with_sink(Box::new(sink.clone()));
+        drop(tel.span("once"));
+        tel.disable();
+        let before = sink.events().len();
+        drop(tel.span("after-disable"));
+        assert_eq!(sink.events().len(), before, "no events after disable");
+        assert!(tel.histogram("span.once.us").snapshot().count() == 1);
+    }
+
+    #[test]
+    fn global_handle_is_shared() {
+        // don't enable the global here (other tests may run concurrently);
+        // just pin that repeated calls hand back the same registry
+        let a = global().counter("test.global.shared");
+        a.add(2);
+        assert!(global().counter("test.global.shared").get() >= 2);
+    }
+
+    #[test]
+    fn sibling_spans_share_a_parent() {
+        let tel = Telemetry::new();
+        let sink = MemorySink::new();
+        tel.enable_with_sink(Box::new(sink.clone()));
+        {
+            let _root = tel.span("root");
+            drop(tel.span("a"));
+            drop(tel.span("b"));
+        }
+        tel.disable();
+        let evs = sink.events();
+        let root_id = evs.iter().find(|e| e.name == "root").unwrap().id;
+        for name in ["a", "b"] {
+            let e = evs
+                .iter()
+                .find(|e| e.name == name && e.kind == EventKind::Start)
+                .unwrap();
+            assert_eq!(e.parent, Some(root_id), "{name} nests under root");
+        }
+    }
+}

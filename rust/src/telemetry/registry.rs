@@ -1,0 +1,318 @@
+//! Named-metric registry: counters, gauges, and log-bucketed histograms,
+//! with Prometheus text exposition and JSON export (DESIGN.md §13).
+//!
+//! Handles ([`Counter`], [`Gauge`], [`Histogram`]) are cheap clones over
+//! shared atomics / a mutexed [`LogHistogram`], so hot paths fetch a handle
+//! once and update it lock-free (counters, gauges) or with one short lock
+//! (histograms). Metric names are free-form dotted strings
+//! (`"serve.latency_us"`); [`Registry::render_prometheus`] sanitises them
+//! into the `[a-zA-Z_:][a-zA-Z0-9_:]*` charset the exposition format
+//! requires.
+
+use super::histogram::LogHistogram;
+use crate::report::json::{Json, ToJson};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Monotonically increasing counter handle.
+#[derive(Debug, Clone, Default)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    /// Increment by one.
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Increment by `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value-wins gauge handle (stores an `f64` in atomic bits).
+#[derive(Debug, Clone, Default)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    /// Set the gauge.
+    pub fn set(&self, v: f64) {
+        self.0.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.0.load(Ordering::Relaxed))
+    }
+}
+
+/// Shared handle to a [`LogHistogram`].
+#[derive(Debug, Clone, Default)]
+pub struct Histogram(Arc<Mutex<LogHistogram>>);
+
+impl Histogram {
+    /// Record one sample.
+    pub fn record(&self, v: u64) {
+        self.0.lock().expect("histogram lock").record(v);
+    }
+
+    /// Record `n` identical samples.
+    pub fn record_n(&self, v: u64, n: u64) {
+        self.0.lock().expect("histogram lock").record_n(v, n);
+    }
+
+    /// Clone out the current state (for quantiles, merging, exposition).
+    pub fn snapshot(&self) -> LogHistogram {
+        self.0.lock().expect("histogram lock").clone()
+    }
+}
+
+#[derive(Debug, Clone)]
+enum Metric {
+    Counter(Counter),
+    Gauge(Gauge),
+    Histogram(Histogram),
+}
+
+impl Metric {
+    fn kind(&self) -> &'static str {
+        match self {
+            Metric::Counter(_) => "counter",
+            Metric::Gauge(_) => "gauge",
+            Metric::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// A registry of named metrics. Get-or-create is idempotent per name;
+/// asking for an existing name with a different metric type panics (it is
+/// a programming error, like two conflicting `static` definitions).
+#[derive(Debug, Default)]
+pub struct Registry {
+    metrics: Mutex<BTreeMap<String, Metric>>,
+}
+
+impl Registry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Get or create a counter.
+    pub fn counter(&self, name: &str) -> Counter {
+        let mut m = self.metrics.lock().expect("registry lock");
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Counter(Counter::default()))
+        {
+            Metric::Counter(c) => c.clone(),
+            other => panic!("metric {name:?} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Get or create a gauge.
+    pub fn gauge(&self, name: &str) -> Gauge {
+        let mut m = self.metrics.lock().expect("registry lock");
+        match m.entry(name.to_string()).or_insert_with(|| Metric::Gauge(Gauge::default())) {
+            Metric::Gauge(g) => g.clone(),
+            other => panic!("metric {name:?} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Get or create a histogram.
+    pub fn histogram(&self, name: &str) -> Histogram {
+        let mut m = self.metrics.lock().expect("registry lock");
+        match m
+            .entry(name.to_string())
+            .or_insert_with(|| Metric::Histogram(Histogram::default()))
+        {
+            Metric::Histogram(h) => h.clone(),
+            other => panic!("metric {name:?} already registered as a {}", other.kind()),
+        }
+    }
+
+    /// Registered metric names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.metrics.lock().expect("registry lock").keys().cloned().collect()
+    }
+
+    /// Render every metric in Prometheus text exposition format, sorted by
+    /// name. Histograms emit cumulative `_bucket{le="..."}` series over
+    /// their non-empty buckets plus the `le="+Inf"` / `_sum` / `_count`
+    /// triplet the format requires.
+    pub fn render_prometheus(&self) -> String {
+        let metrics = self.metrics.lock().expect("registry lock").clone();
+        let mut out = String::new();
+        for (name, metric) in &metrics {
+            match metric {
+                Metric::Counter(c) => write_prometheus_counter(&mut out, name, c.get()),
+                Metric::Gauge(g) => write_prometheus_gauge(&mut out, name, g.get()),
+                Metric::Histogram(h) => {
+                    write_prometheus_histogram(&mut out, name, &h.snapshot())
+                }
+            }
+        }
+        out
+    }
+}
+
+impl ToJson for Registry {
+    /// Every metric keyed by its raw (unsanitised) name; histograms export
+    /// their summary object, counters/gauges their value.
+    fn to_json(&self) -> Json {
+        let metrics = self.metrics.lock().expect("registry lock").clone();
+        Json::Obj(
+            metrics
+                .iter()
+                .map(|(name, metric)| {
+                    let v = match metric {
+                        Metric::Counter(c) => Json::U64(c.get()),
+                        Metric::Gauge(g) => Json::F64(g.get()),
+                        Metric::Histogram(h) => h.snapshot().to_json(),
+                    };
+                    (name.clone(), v)
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Sanitise a metric name into the Prometheus charset
+/// (`[a-zA-Z_:][a-zA-Z0-9_:]*`): invalid characters become `_`, and a
+/// leading digit gets a `_` prefix.
+pub fn prometheus_sanitize(name: &str) -> String {
+    let mut out = String::with_capacity(name.len());
+    for (i, c) in name.chars().enumerate() {
+        let ok = c == '_' || c == ':' || c.is_ascii_alphabetic() || (i > 0 && c.is_ascii_digit());
+        if i == 0 && c.is_ascii_digit() {
+            out.push('_');
+            out.push(c);
+        } else if ok {
+            out.push(c);
+        } else {
+            out.push('_');
+        }
+    }
+    if out.is_empty() {
+        out.push('_');
+    }
+    out
+}
+
+/// Append one counter in exposition format.
+pub fn write_prometheus_counter(out: &mut String, name: &str, v: u64) {
+    let n = prometheus_sanitize(name);
+    let _ = writeln!(out, "# TYPE {n} counter");
+    let _ = writeln!(out, "{n} {v}");
+}
+
+/// Append one gauge in exposition format.
+pub fn write_prometheus_gauge(out: &mut String, name: &str, v: f64) {
+    let n = prometheus_sanitize(name);
+    let _ = writeln!(out, "# TYPE {n} gauge");
+    let _ = writeln!(out, "{n} {v}");
+}
+
+/// Append one histogram in exposition format: cumulative buckets over the
+/// non-empty [`LogHistogram`] buckets, then `+Inf`, `_sum`, `_count`.
+pub fn write_prometheus_histogram(out: &mut String, name: &str, h: &LogHistogram) {
+    let n = prometheus_sanitize(name);
+    let _ = writeln!(out, "# TYPE {n} histogram");
+    let mut acc = 0u64;
+    for (ub, c) in h.nonzero_buckets() {
+        acc += c;
+        let _ = writeln!(out, "{n}_bucket{{le=\"{ub}\"}} {acc}");
+    }
+    let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{n}_sum {}", h.sum());
+    let _ = writeln!(out, "{n}_count {}", h.count());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_round_trip() {
+        let r = Registry::new();
+        let c = r.counter("requests.total");
+        c.inc();
+        c.add(4);
+        assert_eq!(r.counter("requests.total").get(), 5, "same handle by name");
+        let g = r.gauge("queue.depth");
+        g.set(2.5);
+        assert_eq!(r.gauge("queue.depth").get(), 2.5);
+    }
+
+    #[test]
+    fn histogram_handle_shares_state() {
+        let r = Registry::new();
+        r.histogram("lat").record(100);
+        r.histogram("lat").record(200);
+        let snap = r.histogram("lat").snapshot();
+        assert_eq!(snap.count(), 2);
+        assert_eq!(snap.max(), 200);
+    }
+
+    #[test]
+    #[should_panic(expected = "already registered")]
+    fn type_conflict_panics() {
+        let r = Registry::new();
+        r.counter("x");
+        r.gauge("x");
+    }
+
+    #[test]
+    fn sanitize_maps_to_prometheus_charset() {
+        assert_eq!(prometheus_sanitize("serve.batch.latency_us"), "serve_batch_latency_us");
+        assert_eq!(prometheus_sanitize("9lives"), "_9lives");
+        assert_eq!(prometheus_sanitize("a:b_c1"), "a:b_c1");
+        assert_eq!(prometheus_sanitize("Ünicode-x"), "_nicode_x");
+    }
+
+    #[test]
+    fn renders_valid_exposition_lines() {
+        let r = Registry::new();
+        r.counter("reqs.total").add(3);
+        r.gauge("depth").set(1.5);
+        let h = r.histogram("lat.us");
+        h.record(10);
+        h.record(10);
+        h.record(5000);
+        let text = r.render_prometheus();
+        assert!(text.contains("# TYPE reqs_total counter\nreqs_total 3\n"));
+        assert!(text.contains("# TYPE depth gauge\ndepth 1.5\n"));
+        assert!(text.contains("# TYPE lat_us histogram"));
+        assert!(text.contains("lat_us_bucket{le=\"10\"} 2"));
+        assert!(text.contains("lat_us_bucket{le=\"+Inf\"} 3"));
+        assert!(text.contains("lat_us_sum 5020"));
+        assert!(text.contains("lat_us_count 3"));
+        assert!(text.ends_with('\n'));
+        // cumulative bucket counts are monotone non-decreasing
+        let mut prev = 0u64;
+        for line in text.lines().filter(|l| l.starts_with("lat_us_bucket")) {
+            let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert!(v >= prev, "{line}");
+            prev = v;
+        }
+    }
+
+    #[test]
+    fn json_export_covers_all_metric_kinds() {
+        let r = Registry::new();
+        r.counter("c").add(2);
+        r.gauge("g").set(0.5);
+        r.histogram("h").record(7);
+        let j = r.to_json();
+        assert_eq!(j.get("c").and_then(|v| v.as_f64()), Some(2.0));
+        assert_eq!(j.get("g").and_then(|v| v.as_f64()), Some(0.5));
+        assert_eq!(j.get("h").and_then(|h| h.get("count")).and_then(|v| v.as_f64()), Some(1.0));
+    }
+}

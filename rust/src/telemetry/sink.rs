@@ -1,0 +1,220 @@
+//! Trace events and the sinks they flow into (DESIGN.md §13).
+//!
+//! Spans emit [`TraceEvent`]s; a [`EventSink`] decides where they go:
+//! [`JsonlSink`] appends one JSON object per line (the `--trace-out FILE`
+//! format), [`MemorySink`] buffers them for tests. Events are plain data —
+//! sinks never see the telemetry handle, so a sink can be swapped or
+//! dropped without touching instrumented code.
+
+use crate::report::json::{Json, ToJson};
+use std::io::Write as _;
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+/// A span field value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FieldValue {
+    /// Unsigned integer.
+    U64(u64),
+    /// Signed integer.
+    I64(i64),
+    /// Float.
+    F64(f64),
+    /// String.
+    Str(String),
+}
+
+impl ToJson for FieldValue {
+    fn to_json(&self) -> Json {
+        match self {
+            FieldValue::U64(v) => Json::U64(*v),
+            FieldValue::I64(v) => Json::I64(*v),
+            FieldValue::F64(v) => Json::F64(*v),
+            FieldValue::Str(s) => Json::str(s),
+        }
+    }
+}
+
+/// Whether an event opens or closes a span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EventKind {
+    /// Span entry.
+    Start,
+    /// Span exit (carries duration and fields).
+    End,
+}
+
+/// One trace event, emitted at span start and end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    /// Start or end.
+    pub kind: EventKind,
+    /// Span id, unique per telemetry handle.
+    pub id: u64,
+    /// Enclosing span's id, if this span was opened inside another on the
+    /// same thread.
+    pub parent: Option<u64>,
+    /// Span name (a static label like `"serve.batch"`).
+    pub name: &'static str,
+    /// Microseconds since the telemetry epoch.
+    pub t_us: u64,
+    /// Span duration in µs — end events only.
+    pub dur_us: Option<u64>,
+    /// Attached key=value fields — end events only.
+    pub fields: Vec<(&'static str, FieldValue)>,
+}
+
+impl ToJson for TraceEvent {
+    /// The JSON-lines trace shape: `ev`/`name`/`id`/`parent`/`t_us`, plus
+    /// `dur_us` and a `fields` object on end events.
+    fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("ev", Json::str(match self.kind {
+                EventKind::Start => "start",
+                EventKind::End => "end",
+            })),
+            ("name", Json::str(self.name)),
+            ("id", Json::U64(self.id)),
+            ("parent", self.parent.map(Json::U64).unwrap_or(Json::Null)),
+            ("t_us", Json::U64(self.t_us)),
+        ];
+        if let Some(d) = self.dur_us {
+            pairs.push(("dur_us", Json::U64(d)));
+        }
+        if self.kind == EventKind::End {
+            pairs.push((
+                "fields",
+                Json::Obj(
+                    self.fields
+                        .iter()
+                        .map(|(k, v)| (k.to_string(), v.to_json()))
+                        .collect(),
+                ),
+            ));
+        }
+        Json::obj(pairs)
+    }
+}
+
+/// Where trace events go. Implementations must be `Send` (the sink lives
+/// behind the telemetry handle's mutex and is written from any thread).
+pub trait EventSink: Send {
+    /// Consume one event.
+    fn emit(&mut self, ev: &TraceEvent);
+    /// Flush buffered output (no-op by default).
+    fn flush(&mut self) {}
+}
+
+/// JSON-lines file sink: one [`TraceEvent`] object per line, buffered.
+#[derive(Debug)]
+pub struct JsonlSink {
+    w: std::io::BufWriter<std::fs::File>,
+}
+
+impl JsonlSink {
+    /// Create (truncate) the trace file.
+    pub fn create(path: &Path) -> std::io::Result<JsonlSink> {
+        Ok(JsonlSink { w: std::io::BufWriter::new(std::fs::File::create(path)?) })
+    }
+}
+
+impl EventSink for JsonlSink {
+    fn emit(&mut self, ev: &TraceEvent) {
+        let _ = writeln!(self.w, "{}", ev.to_json().render());
+    }
+
+    fn flush(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+impl Drop for JsonlSink {
+    fn drop(&mut self) {
+        let _ = self.w.flush();
+    }
+}
+
+/// In-memory sink for tests: clone the handle before installing it, then
+/// read the captured events back through the clone.
+#[derive(Debug, Clone, Default)]
+pub struct MemorySink {
+    events: Arc<Mutex<Vec<TraceEvent>>>,
+}
+
+impl MemorySink {
+    /// New empty sink.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Copy of the captured events.
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().expect("memory sink lock").clone()
+    }
+
+    /// Drain the captured events.
+    pub fn take(&self) -> Vec<TraceEvent> {
+        std::mem::take(&mut *self.events.lock().expect("memory sink lock"))
+    }
+}
+
+impl EventSink for MemorySink {
+    fn emit(&mut self, ev: &TraceEvent) {
+        self.events.lock().expect("memory sink lock").push(ev.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::report::json::parse;
+
+    fn ev(kind: EventKind) -> TraceEvent {
+        TraceEvent {
+            kind,
+            id: 7,
+            parent: Some(3),
+            name: "unit.test",
+            t_us: 1000,
+            dur_us: if kind == EventKind::End { Some(250) } else { None },
+            fields: if kind == EventKind::End {
+                vec![("macs", FieldValue::U64(42)), ("occ", FieldValue::F64(0.5))]
+            } else {
+                vec![]
+            },
+        }
+    }
+
+    #[test]
+    fn events_render_as_parseable_json() {
+        for kind in [EventKind::Start, EventKind::End] {
+            let line = ev(kind).to_json().render();
+            let back = parse(&line).expect("event line must be valid JSON");
+            assert_eq!(back.get("name").and_then(|v| v.as_str()), Some("unit.test"));
+            assert_eq!(back.get("id").and_then(|v| v.as_f64()), Some(7.0));
+        }
+    }
+
+    #[test]
+    fn end_events_carry_duration_and_fields() {
+        let j = ev(EventKind::End).to_json();
+        assert_eq!(j.get("ev").and_then(|v| v.as_str()), Some("end"));
+        assert_eq!(j.get("dur_us").and_then(|v| v.as_f64()), Some(250.0));
+        let fields = j.get("fields").expect("fields object");
+        assert_eq!(fields.get("macs").and_then(|v| v.as_f64()), Some(42.0));
+        let start = ev(EventKind::Start).to_json();
+        assert!(start.get("dur_us").is_none());
+        assert!(start.get("fields").is_none());
+    }
+
+    #[test]
+    fn memory_sink_captures_and_drains() {
+        let sink = MemorySink::new();
+        let mut writer = sink.clone();
+        writer.emit(&ev(EventKind::Start));
+        writer.emit(&ev(EventKind::End));
+        assert_eq!(sink.events().len(), 2);
+        assert_eq!(sink.take().len(), 2);
+        assert!(sink.events().is_empty());
+    }
+}

@@ -696,6 +696,52 @@ fn simulator_overlap_never_exceeds_serial_on_evaluation_workloads() {
 }
 
 #[test]
+fn telemetry_on_off_outputs_are_bit_identical() {
+    // the observability layer must never touch the data path: forward_wave
+    // and forward_batch outputs with the global telemetry live (spans +
+    // memory sink) are bit-for-bit the outputs with it disabled, and the
+    // per-layer cycle stats agree too (spans only *read* the stats structs)
+    use corvet::telemetry::{self, MemorySink};
+    let net = paper_mlp(67);
+    let cfg = EngineConfig::pe64();
+    let policy =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+    let mut rng = Xoshiro256::new(55);
+    let x = Tensor::vector(&rng.uniform_vec(196, -0.9, 0.9));
+    let xs = inputs_for(&net, &mut rng, 5);
+
+    let (y_off, s_off) = net.forward_wave(&x, &policy, &cfg);
+    let (yb_off, sb_off) = net.forward_batch(&xs, &policy, &cfg);
+
+    let sink = MemorySink::new();
+    telemetry::global().enable_with_sink(Box::new(sink.clone()));
+    let (y_on, s_on) = net.forward_wave(&x, &policy, &cfg);
+    let (yb_on, sb_on) = net.forward_batch(&xs, &policy, &cfg);
+    telemetry::global().disable();
+
+    for (a, b) in y_off.data().iter().zip(y_on.data()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "forward_wave output drifted under telemetry");
+    }
+    for (sa, sb) in yb_off.iter().zip(&yb_on) {
+        for (a, b) in sa.data().iter().zip(sb.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "forward_batch output drifted under telemetry");
+        }
+    }
+    assert_eq!(s_off.total_pipeline_cycles(), s_on.total_pipeline_cycles());
+    assert_eq!(sb_off.total_pipeline_cycles(), sb_on.total_pipeline_cycles());
+
+    // the instrumentation did run: run + per-layer spans landed in the sink
+    let evs = sink.events();
+    assert!(evs.iter().any(|e| e.name == "wave.forward"), "run span recorded");
+    assert!(evs.iter().any(|e| e.name == "wave.batch"), "batch run span recorded");
+    let layer_ends = evs
+        .iter()
+        .filter(|e| e.name == "wave.layer" && e.dur_us.is_some())
+        .count();
+    assert!(layer_ends >= net.compute_layers(), "per-layer spans recorded");
+}
+
+#[test]
 fn wave_cycle_accounting_matches_engine_simulator() {
     // functional and simulated paths share the MAC wave law: per compute
     // layer, the wave executor's mac_cycles equal the simulator's

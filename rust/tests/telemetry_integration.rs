@@ -1,0 +1,318 @@
+//! Integration tests for the telemetry subsystem (DESIGN.md §13): the
+//! log-bucketed histogram's quantile error bound against exact sorted
+//! quantiles on real sample distributions, the merge algebra, the
+//! Prometheus text exposition, and the JSON-lines trace format end to end
+//! (file round-trip through `report::json::parse`).
+
+use corvet::report::json::parse;
+use corvet::telemetry::{
+    LogHistogram, Registry, Telemetry, MAX_RELATIVE_ERROR, NUM_BUCKETS,
+};
+use corvet::testutil::{check_prop, Xoshiro256};
+
+/// One-bucket-width tolerance at value `v` (the documented quantile error
+/// law), plus 1 for the integer sub-32 buckets.
+fn tol(v: f64) -> f64 {
+    v * MAX_RELATIVE_ERROR + 1.0
+}
+
+/// Exact quantile with the histogram's own rank convention
+/// (`rank = ceil(p·n)`, clamped to [1, n]) over a sorted sample set.
+fn exact_quantile(sorted: &[u64], p: f64) -> u64 {
+    let n = sorted.len();
+    let rank = ((p * n as f64).ceil() as usize).clamp(1, n);
+    sorted[rank - 1]
+}
+
+fn assert_quantiles_within_bound(samples: &[u64], what: &str) {
+    let mut h = LogHistogram::new();
+    for &v in samples {
+        h.record(v);
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_unstable();
+    for p in [0.01, 0.1, 0.25, 0.5, 0.9, 0.99, 0.999] {
+        let exact = exact_quantile(&sorted, p) as f64;
+        let approx = h.quantile(p) as f64;
+        assert!(
+            (approx - exact).abs() <= tol(exact),
+            "{what}: p{p}: approx {approx} vs exact {exact} (tol {})",
+            tol(exact)
+        );
+    }
+    assert_eq!(h.count(), samples.len() as u64);
+    assert_eq!(h.min(), sorted[0]);
+    assert_eq!(h.max(), *sorted.last().unwrap());
+    assert_eq!(h.quantile(0.0), h.min(), "{what}: p0 is the exact min");
+    assert_eq!(h.quantile(1.0), h.max(), "{what}: p1 is the exact max");
+}
+
+#[test]
+fn quantiles_track_exact_sort_on_uniform_samples() {
+    let mut rng = Xoshiro256::new(4242);
+    let samples: Vec<u64> =
+        (0..10_000).map(|_| rng.uniform(0.0, 1_000_000.0) as u64).collect();
+    assert_quantiles_within_bound(&samples, "uniform[0, 1e6]");
+}
+
+#[test]
+fn quantiles_track_exact_sort_on_exponential_samples() {
+    // heavy tail spanning many octaves — the case log bucketing exists for
+    let mut rng = Xoshiro256::new(777);
+    let samples: Vec<u64> = (0..10_000)
+        .map(|_| {
+            let u: f64 = rng.uniform(1e-12, 1.0);
+            (-u.ln() * 50_000.0) as u64
+        })
+        .collect();
+    assert_quantiles_within_bound(&samples, "exponential(50k)");
+}
+
+#[test]
+fn quantiles_are_exact_on_a_point_mass() {
+    // every sample identical: min==max clamp makes every quantile exact
+    let samples = vec![123_456u64; 10_000];
+    let mut h = LogHistogram::new();
+    for &v in &samples {
+        h.record(v);
+    }
+    for p in [0.0, 0.001, 0.5, 0.999, 1.0] {
+        assert_eq!(h.quantile(p), 123_456, "point mass must be exact at p{p}");
+    }
+    assert_quantiles_within_bound(&samples, "point mass");
+}
+
+#[test]
+fn quantiles_handle_mixed_magnitudes() {
+    // a bimodal set: fast path ~100, slow path ~1e7 — p50 and p99 must land
+    // on the right mode despite the 5-decade spread
+    let mut samples = vec![100u64; 9_000];
+    samples.resize(10_000, 10_000_000u64);
+    let mut h = LogHistogram::new();
+    for &v in &samples {
+        h.record(v);
+    }
+    assert!((h.quantile(0.5) as f64 - 100.0).abs() <= tol(100.0));
+    assert!((h.quantile(0.995) as f64 - 1e7).abs() <= tol(1e7));
+}
+
+fn random_histogram(rng: &mut Xoshiro256) -> LogHistogram {
+    let n = rng.index(200);
+    let mut h = LogHistogram::new();
+    for _ in 0..n {
+        // span many octaves, including 0 and the sub-32 exact range
+        let v = match rng.index(4) {
+            0 => rng.index(32) as u64,
+            1 => rng.uniform(0.0, 1e3) as u64,
+            2 => rng.uniform(0.0, 1e9) as u64,
+            _ => u64::MAX - rng.index(1000) as u64,
+        };
+        h.record(v);
+    }
+    h
+}
+
+#[test]
+fn prop_merge_is_commutative_associative_with_empty_identity() {
+    check_prop("histogram merge algebra", |rng| {
+        let a = random_histogram(rng);
+        let b = random_histogram(rng);
+        let c = random_histogram(rng);
+        let ab = a.clone().merge(b.clone());
+        let ba = b.clone().merge(a.clone());
+        if ab != ba {
+            return Err("merge must be commutative".to_string());
+        }
+        let ab_c = ab.merge(c.clone());
+        let a_bc = a.clone().merge(b.clone().merge(c.clone()));
+        if ab_c != a_bc {
+            return Err("merge must be associative".to_string());
+        }
+        if a.clone().merge(LogHistogram::new()) != a {
+            return Err("empty histogram must be the merge identity".to_string());
+        }
+        if LogHistogram::new().merge(a.clone()) != a {
+            return Err("empty histogram must be a left identity too".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_merge_equals_recording_the_union() {
+    // merging two histograms is indistinguishable from one histogram that
+    // saw both sample streams
+    check_prop("merge == union of streams", |rng| {
+        let n1 = rng.index(100);
+        let n2 = rng.index(100);
+        let s1: Vec<u64> = (0..n1).map(|_| rng.uniform(0.0, 1e8) as u64).collect();
+        let s2: Vec<u64> = (0..n2).map(|_| rng.uniform(0.0, 1e8) as u64).collect();
+        let mut a = LogHistogram::new();
+        let mut b = LogHistogram::new();
+        let mut both = LogHistogram::new();
+        for &v in &s1 {
+            a.record(v);
+            both.record(v);
+        }
+        for &v in &s2 {
+            b.record(v);
+            both.record(v);
+        }
+        if a.merge(b) != both {
+            return Err("merge must equal recording the union".to_string());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_bucket_bounds_contain_their_values() {
+    check_prop("bucket bounds contain values within relative error", |rng| {
+        let v = match rng.index(3) {
+            0 => rng.index(4096) as u64,
+            1 => rng.uniform(0.0, 1e15) as u64,
+            _ => u64::MAX - rng.index(1_000_000) as u64,
+        };
+        let idx = LogHistogram::bucket_index(v);
+        if idx >= NUM_BUCKETS {
+            return Err(format!("index {idx} out of range for {v}"));
+        }
+        let (lo, hi) = LogHistogram::bucket_bounds(idx);
+        if !(lo <= v && v <= hi) {
+            return Err(format!("value {v} outside bucket [{lo}, {hi}]"));
+        }
+        if v >= 32 && (hi - lo) as f64 + 1.0 > lo as f64 * MAX_RELATIVE_ERROR + 1.0 {
+            return Err(format!("bucket [{lo}, {hi}] wider than the error law allows"));
+        }
+        Ok(())
+    });
+}
+
+/// A minimal Prometheus text-format validator: every line is a comment or
+/// `name[{labels}] value`, every `# TYPE` precedes its family's samples,
+/// and histogram families end with `_count` / `_sum` and a `+Inf` bucket.
+fn assert_valid_prometheus(text: &str) {
+    let mut typed: Vec<String> = Vec::new();
+    for line in text.lines() {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            let family = it.next().expect("TYPE line names a family");
+            let kind = it.next().expect("TYPE line carries a kind");
+            assert!(
+                ["counter", "gauge", "histogram"].contains(&kind),
+                "unknown TYPE {kind} in {line:?}"
+            );
+            typed.push(family.to_string());
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        let (name_part, value_part) = match line.find(' ') {
+            Some(sp) => line.split_at(sp),
+            None => panic!("sample line without value: {line:?}"),
+        };
+        let name = name_part.split('{').next().unwrap();
+        assert!(
+            name.chars()
+                .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == ':'),
+            "bad metric name {name:?}"
+        );
+        assert!(
+            typed.iter().any(|f| name.starts_with(f.as_str())),
+            "sample {name} appears before its TYPE line"
+        );
+        let v = value_part.trim();
+        assert!(
+            v == "+Inf" || v.parse::<f64>().is_ok(),
+            "bad sample value {v:?} in {line:?}"
+        );
+    }
+}
+
+#[test]
+fn registry_renders_valid_prometheus() {
+    let reg = Registry::new();
+    reg.counter("requests_total").add(42);
+    reg.gauge("throughput_rps").set(123.5);
+    let h = reg.histogram("latency.us");
+    for v in [10u64, 100, 1000, 10_000, 100_000] {
+        h.record(v);
+    }
+    let text = reg.render_prometheus();
+    assert_valid_prometheus(&text);
+    assert!(text.contains("# TYPE requests_total counter"));
+    assert!(text.contains("requests_total 42"));
+    assert!(text.contains("# TYPE latency_us histogram"));
+    assert!(text.contains("latency_us_count 5"));
+    assert!(text.contains("le=\"+Inf\""));
+}
+
+#[test]
+fn jsonl_trace_file_round_trips_through_the_parser() {
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("corvet-trace-{}.jsonl", std::process::id()));
+    let tel = Telemetry::new();
+    tel.enable_jsonl(&path).expect("trace file creatable");
+    {
+        let mut outer = tel.span("test.outer");
+        outer.field_u64("cycles", 1234);
+        outer.field_f64("occupancy", 0.75);
+        let _inner = tel.span("test.inner");
+    }
+    tel.disable(); // flushes and closes the sink
+
+    let text = std::fs::read_to_string(&path).expect("trace file readable");
+    std::fs::remove_file(&path).ok();
+    let lines: Vec<&str> = text.lines().collect();
+    assert_eq!(lines.len(), 4, "start+end per span");
+    let parsed: Vec<_> = lines
+        .iter()
+        .map(|l| parse(l).unwrap_or_else(|| panic!("trace line must parse: {l:?}")))
+        .collect();
+    assert_eq!(parsed[0].get("ev").and_then(|v| v.as_str()), Some("start"));
+    assert_eq!(parsed[0].get("name").and_then(|v| v.as_str()), Some("test.outer"));
+    let outer_id = parsed[0].get("id").and_then(|v| v.as_f64()).unwrap();
+    assert_eq!(
+        parsed[1].get("parent").and_then(|v| v.as_f64()),
+        Some(outer_id),
+        "inner span records its parent in the trace"
+    );
+    let outer_end = &parsed[3];
+    assert_eq!(outer_end.get("ev").and_then(|v| v.as_str()), Some("end"));
+    let fields = outer_end.get("fields").expect("end event carries fields");
+    assert_eq!(fields.get("cycles").and_then(|v| v.as_f64()), Some(1234.0));
+    assert_eq!(fields.get("occupancy").and_then(|v| v.as_f64()), Some(0.75));
+}
+
+#[test]
+fn span_durations_land_in_named_histograms() {
+    let tel = Telemetry::new();
+    tel.enable();
+    for _ in 0..32 {
+        drop(tel.span("hot.path"));
+    }
+    tel.disable();
+    let h = tel.histogram("span.hot.path.us").snapshot();
+    assert_eq!(h.count(), 32);
+    assert!(h.quantile(0.99) >= h.quantile(0.5));
+}
+
+#[test]
+fn memory_stays_bounded_under_sustained_recording() {
+    // the fixed-size bucket array is the whole state: a million records
+    // cannot grow it (this is the un-bounded Vec<u64> regression guard at
+    // the histogram level; coordinator::Metrics has its own twin)
+    let mut h = LogHistogram::new();
+    let mut rng = Xoshiro256::new(99);
+    for _ in 0..1_000_000 {
+        h.record(rng.uniform(0.0, 1e12) as u64);
+    }
+    assert_eq!(h.count(), 1_000_000);
+    assert!(h.quantile(0.5) > 0);
+    // NUM_BUCKETS is compile-time fixed; nothing else accumulates
+    assert!(NUM_BUCKETS < 4096);
+}

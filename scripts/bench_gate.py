@@ -1,0 +1,165 @@
+#!/usr/bin/env python3
+"""Validate and regression-gate the BENCH_*.json records the benches emit.
+
+Usage:
+    python3 scripts/bench_gate.py BENCH_DIR [BASELINE_DIR]
+
+Every bench built on `corvet::bench_harness` writes a `BENCH_<name>.json`
+envelope (schema tag `corvet.bench.v1`, see DESIGN.md §13) into
+`$CORVET_BENCH_JSON_DIR`. This gate:
+
+  1. cross-checks the schema tag in every file against the
+     `pub const BENCH_SCHEMA` literal in rust/src/bench_harness/mod.rs,
+     so the Rust constant and the checked-in artifacts cannot drift apart
+     silently;
+  2. validates the envelope structure and numeric sanity of every result
+     row (min <= median <= max, mean > 0, samples >= 1);
+  3. optionally compares mean_ns per result name against a checked-in
+     baseline directory (default scripts/bench_baseline/). A result that
+     regresses by more than the threshold fails the gate. Smoke-mode runs
+     (CORVET_BENCH_SMOKE=1, `"smoke": true` in the envelope) use a much
+     looser threshold because 3-sample timings are noisy; they only catch
+     order-of-magnitude blowups. When no baseline exists the comparison
+     is skipped (tolerant bootstrap) -- copy the bench-json artifacts into
+     the baseline directory to arm the gate.
+
+Exit status 0 when everything passes, 1 otherwise. Stdlib only.
+"""
+
+import json
+import os
+import pathlib
+import re
+import sys
+
+# Mean-ns regression thresholds, in percent. Overridable via env for
+# one-off investigations without editing CI.
+THRESHOLD_PCT = float(os.environ.get("BENCH_GATE_THRESHOLD_PCT", "25"))
+SMOKE_THRESHOLD_PCT = float(os.environ.get("BENCH_GATE_SMOKE_THRESHOLD_PCT", "400"))
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+HARNESS_SRC = REPO_ROOT / "rust" / "src" / "bench_harness" / "mod.rs"
+
+NUMERIC_FIELDS = ("mean_ns", "median_ns", "stddev_ns", "min_ns", "max_ns", "samples")
+
+
+def rust_bench_schema() -> str:
+    """Read the BENCH_SCHEMA constant straight out of the Rust source."""
+    text = HARNESS_SRC.read_text()
+    m = re.search(r'pub const BENCH_SCHEMA: &str = "([^"]+)"', text)
+    if not m:
+        sys.exit(f"bench_gate: BENCH_SCHEMA const not found in {HARNESS_SRC}")
+    return m.group(1)
+
+
+def fail(errors, path, msg):
+    errors.append(f"{path.name}: {msg}")
+
+
+def check_file(path: pathlib.Path, schema: str, errors: list) -> dict | None:
+    try:
+        doc = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        fail(errors, path, f"unreadable JSON ({e})")
+        return None
+    if not isinstance(doc, dict):
+        fail(errors, path, "top level is not an object")
+        return None
+    if doc.get("schema") != schema:
+        fail(errors, path, f'schema {doc.get("schema")!r} != {schema!r}')
+    if doc.get("kind") != "bench_report":
+        fail(errors, path, f'kind {doc.get("kind")!r} != "bench_report"')
+    expected_name = path.stem.removeprefix("BENCH_")
+    if doc.get("name") != expected_name:
+        fail(errors, path, f'name {doc.get("name")!r} != {expected_name!r}')
+    results = doc.get("results")
+    if not isinstance(results, list) or not results:
+        fail(errors, path, "results missing or empty")
+        return doc
+    for r in results:
+        if not isinstance(r, dict) or not isinstance(r.get("name"), str):
+            fail(errors, path, f"malformed result row {r!r}")
+            continue
+        rname = r["name"]
+        bad = [f for f in NUMERIC_FIELDS if not isinstance(r.get(f), (int, float))]
+        if bad:
+            fail(errors, path, f"{rname!r}: non-numeric fields {bad}")
+            continue
+        if not r["min_ns"] <= r["median_ns"] <= r["max_ns"]:
+            fail(errors, path, f"{rname!r}: min/median/max out of order")
+        if not r["mean_ns"] > 0:
+            fail(errors, path, f"{rname!r}: mean_ns {r['mean_ns']} not positive")
+        if r["samples"] < 1:
+            fail(errors, path, f"{rname!r}: samples {r['samples']} < 1")
+        if r["stddev_ns"] < 0:
+            fail(errors, path, f"{rname!r}: negative stddev")
+    return doc
+
+
+def compare_to_baseline(doc: dict, base_path: pathlib.Path, errors: list):
+    try:
+        base = json.loads(base_path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"  baseline {base_path.name} unreadable ({e}); skipping comparison")
+        return
+    smoke = bool(doc.get("smoke"))
+    threshold = SMOKE_THRESHOLD_PCT if smoke else THRESHOLD_PCT
+    base_means = {
+        r["name"]: r["mean_ns"]
+        for r in base.get("results", [])
+        if isinstance(r, dict) and isinstance(r.get("mean_ns"), (int, float))
+    }
+    for r in doc.get("results", []):
+        name, mean = r.get("name"), r.get("mean_ns")
+        old = base_means.get(name)
+        if old is None or not isinstance(mean, (int, float)) or old <= 0:
+            continue
+        delta_pct = 100.0 * (mean - old) / old
+        tag = " (smoke)" if smoke else ""
+        if delta_pct > threshold:
+            errors.append(
+                f"{doc.get('name')}/{name}: mean_ns regressed "
+                f"{delta_pct:+.1f}%{tag} ({old:.0f} -> {mean:.0f}, "
+                f"threshold {threshold:.0f}%)"
+            )
+        elif abs(delta_pct) > threshold / 2:
+            print(f"  note: {doc.get('name')}/{name} moved {delta_pct:+.1f}%{tag}")
+
+
+def main(argv: list) -> int:
+    if len(argv) < 2 or len(argv) > 3:
+        sys.exit(__doc__.strip().splitlines()[0] + "\n\n" + "usage: bench_gate.py BENCH_DIR [BASELINE_DIR]")
+    bench_dir = pathlib.Path(argv[1])
+    baseline_dir = pathlib.Path(argv[2]) if len(argv) == 3 else REPO_ROOT / "scripts" / "bench_baseline"
+
+    files = sorted(bench_dir.glob("BENCH_*.json"))
+    if not files:
+        print(f"bench_gate: no BENCH_*.json files in {bench_dir}")
+        return 1
+    schema = rust_bench_schema()
+    print(f"bench_gate: {len(files)} file(s), schema {schema!r}")
+
+    errors: list = []
+    for path in files:
+        doc = check_file(path, schema, errors)
+        n = len(doc.get("results", [])) if isinstance(doc, dict) else 0
+        print(f"  {path.name}: {n} result row(s)")
+        if doc is None:
+            continue
+        base_path = baseline_dir / path.name
+        if base_path.is_file():
+            compare_to_baseline(doc, base_path, errors)
+        else:
+            print(f"  no baseline for {path.name}; validation only")
+
+    if errors:
+        print("\nbench_gate: FAIL")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print("bench_gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
