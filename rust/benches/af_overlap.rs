@@ -16,7 +16,7 @@
 //!    is bookkeeping, so host time should be flat while modelled cycles
 //!    drop.
 
-use corvet::bench_harness::{BenchReport, Bencher};
+use corvet::bench_harness::{bench_threads, BenchReport, Bencher};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::EngineConfig;
 use corvet::model::workloads::{paper_mlp, small_cnn};
@@ -50,6 +50,7 @@ fn main() {
         ] {
             let policy = PolicyTable::uniform(net.compute_layers(), precision, mode);
             let mut on = EngineConfig::pe64();
+            on.threads = bench_threads();
             on.af_overlap = true;
             let mut off = on;
             off.af_overlap = false;
@@ -84,6 +85,7 @@ fn main() {
     let mut rep = BenchReport::new();
     for overlap in [true, false] {
         let mut cfg = EngineConfig::pe64();
+        cfg.threads = bench_threads();
         cfg.af_overlap = overlap;
         let name = if overlap { "forward_wave overlap=on" } else { "forward_wave overlap=off" };
         rep.push(b.run(name, || mlp.forward_wave(&x, &policy, &cfg)));

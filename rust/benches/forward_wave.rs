@@ -7,7 +7,7 @@
 //! and reports the measured host speedup per model and operating point.
 //! Captured results belong in EXPERIMENTS.md §Perf.
 
-use corvet::bench_harness::{write_bench_json, BenchReport, Bencher};
+use corvet::bench_harness::{bench_threads, write_bench_json, BenchReport, Bencher};
 use corvet::cordic::mac::ExecMode;
 use corvet::telemetry::{self, MemorySink};
 use corvet::engine::EngineConfig;
@@ -34,7 +34,8 @@ fn main() {
         transformer_mlp(102),
         small_cnn("cnn-8-16", PoolKind::Aad, 103),
     ];
-    let cfg = EngineConfig::pe256();
+    let mut cfg = EngineConfig::pe256();
+    cfg.threads = bench_threads();
     let b = Bencher::from_env(Bencher { warmup: 2, samples: 10, iters_per_sample: 3 });
 
     let mut rep = BenchReport::new();

@@ -13,7 +13,7 @@
 //! 3. host-executed `forward_batch` with packing on vs off — bit-identity
 //!    spot-checked inline, occupancy and wall-clock reported.
 
-use corvet::bench_harness::{write_bench_json, BenchReport, Bencher};
+use corvet::bench_harness::{bench_threads, write_bench_json, BenchReport, Bencher};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::{pack_factor, EngineConfig, VectorEngine};
 use corvet::ir::workloads;
@@ -40,6 +40,7 @@ fn main() {
             PolicyTable::uniform(graph.compute_layers(), precision, ExecMode::Accurate);
         let annotated = graph.with_policy(&policy);
         let mut on = EngineConfig::pe256();
+        on.threads = bench_threads();
         on.packing = true;
         let mut off = on;
         off.packing = false;
@@ -71,6 +72,7 @@ fn main() {
         let policy =
             PolicyTable::uniform(net.compute_layers(), precision, ExecMode::Accurate);
         let mut on = EngineConfig::pe64();
+        on.threads = bench_threads();
         on.packing = true;
         let mut off = on;
         off.packing = false;

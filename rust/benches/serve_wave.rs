@@ -13,7 +13,7 @@
 //!    execute functionally on the host);
 //! 3. end-to-end `Server` + `WaveBackend` requests/s vs `max_batch`.
 
-use corvet::bench_harness::{write_bench_json, BenchReport, Bencher};
+use corvet::bench_harness::{bench_threads, write_bench_json, BenchReport, Bencher};
 use corvet::coordinator::{BatcherConfig, Server, ServerConfig};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::EngineConfig;
@@ -27,7 +27,8 @@ use corvet::testutil::Xoshiro256;
 fn main() -> anyhow::Result<()> {
     let mut rng = Xoshiro256::new(7);
     let net = paper_mlp(11);
-    let cfg = EngineConfig::pe64();
+    let mut cfg = EngineConfig::pe64();
+    cfg.threads = bench_threads();
     let policy =
         PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
     let b = Bencher::from_env(Bencher { warmup: 2, samples: 8, iters_per_sample: 2 });

@@ -193,6 +193,16 @@ pub fn smoke_mode() -> bool {
     std::env::var("CORVET_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
 }
 
+/// Worker-thread knob for bench mains: `CORVET_BENCH_THREADS` parsed as
+/// the [`EngineConfig::threads`](crate::engine::EngineConfig::threads)
+/// value (`0` = auto, `1` = serial, `n` = cap). Unset or unparsable
+/// defaults to `1` — benches measure single-thread kernel speed unless the
+/// caller (CI's threads axis, a local sweep) explicitly opts into
+/// parallelism, keeping baseline comparisons machine-width independent.
+pub fn bench_threads() -> usize {
+    std::env::var("CORVET_BENCH_THREADS").ok().and_then(|v| v.parse().ok()).unwrap_or(1)
+}
+
 /// Write `BENCH_<name>.json` for a finished suite — into
 /// `$CORVET_BENCH_JSON_DIR` when set, the working directory otherwise.
 /// Returns the path written. Every bench main calls this after rendering

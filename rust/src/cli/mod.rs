@@ -83,23 +83,25 @@ COMMANDS:
   fig <11|13> [--quick] [--csv]      regenerate a paper figure's data
   simulate [--workload tinyyolo|vgg16|vit-mlp] [--pes N] [--precision fxp4|8|16]
            [--mode approx|accurate] [--packing on|off] [--overlap on|off]
-                                     run the vector-engine simulator
+           [--threads T]             run the vector-engine simulator
                                      (--packing off = one element per lane A/B;
-                                     --overlap off = serial MAC-then-AF A/B)
+                                     --overlap off = serial MAC-then-AF A/B;
+                                     --threads 0 = auto, 1 = serial host)
   train [--quick] [--out FILE]       train the MLP on synthetic data (FP32)
   sensitivity [--quick] [--budget F] run the accuracy-sensitivity heuristic
   serve [--requests N] [--batch N] [--precision fxp8|fxp16]
-        [--backend pjrt|wave] [--pes N] [--packing on|off]
+        [--backend pjrt|wave] [--pes N] [--packing on|off] [--threads T]
         [--artifacts DIR] [--quick] [--trace-out FILE]
                                      e2e serving demo: PJRT artifacts or the
                                      native batched wave backend (no artifacts)
   cluster [--workload tinyyolo|vgg16|vit-mlp] [--shards M] [--pes N]
           [--strategy pipeline|tensor|data] [--batches B] [--batch S]
           [--precision P] [--mode approx|accurate] [--packing on|off]
-          [--overlap on|off] [--sweep] [--csv] [--trace-out FILE]
+          [--overlap on|off] [--threads T] [--sweep] [--csv] [--trace-out FILE]
                                      sharded multi-engine simulation
                                      (S samples per micro-batch, packed waves)
-  metrics [--requests N] [--pes N]   run a short wave-serving workload and
+  metrics [--requests N] [--pes N] [--threads T]
+                                     run a short wave-serving workload and
                                      print the Prometheus text exposition
   utilization                        multi-AF time-multiplexing report
   info [--artifacts DIR]             platform + artifact inventory

@@ -51,29 +51,38 @@ impl ShardExecutor {
             run_span.field_str("strategy", &format!("{:?}", plan.strategy));
         }
 
-        // fan the per-shard cycle simulations out across threads; each
-        // worker opens its own span (spans nest per thread, so these are
-        // trace roots carrying the shard index)
-        let reports: Vec<crate::engine::EngineReport> = std::thread::scope(|s| {
-            let handles: Vec<_> = plan
-                .shards
-                .iter()
-                .map(|sp| {
-                    s.spawn(move || {
-                        let mut shard_span = telemetry::span("cluster.shard");
-                        shard_span.field_u64("shard", sp.shard as u64);
-                        let r = VectorEngine::new(engine).run_ir(&sp.ir);
-                        shard_span.field_u64("total_cycles", r.total_cycles);
-                        shard_span.field_u64("total_macs", r.total_macs);
-                        r
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .map(|h| h.join().expect("shard simulation thread panicked"))
-                .collect()
-        });
+        // fan the per-shard cycle simulations out across threads, capped at
+        // the configured worker budget (`EngineConfig::threads`): shards are
+        // split into contiguous groups, one thread per group, and the joined
+        // group results concatenate back into shard order — so the report is
+        // deterministic at any worker count. Each simulation opens its own
+        // span (spans nest per thread, so these are trace roots carrying the
+        // shard index).
+        let workers = engine.resolved_threads().clamp(1, n);
+        let group = n.div_ceil(workers);
+        let simulate = |sp: &ShardPlan| {
+            let mut shard_span = telemetry::span("cluster.shard");
+            shard_span.field_u64("shard", sp.shard as u64);
+            let r = VectorEngine::new(engine).run_ir(&sp.ir);
+            shard_span.field_u64("total_cycles", r.total_cycles);
+            shard_span.field_u64("total_macs", r.total_macs);
+            r
+        };
+        let reports: Vec<crate::engine::EngineReport> = if workers == 1 {
+            plan.shards.iter().map(simulate).collect()
+        } else {
+            std::thread::scope(|s| {
+                let handles: Vec<_> = plan
+                    .shards
+                    .chunks(group)
+                    .map(|sps| s.spawn(|| sps.iter().map(simulate).collect::<Vec<_>>()))
+                    .collect();
+                handles
+                    .into_iter()
+                    .flat_map(|h| h.join().expect("shard simulation thread panicked"))
+                    .collect()
+            })
+        };
 
         let spans: Vec<u64> = reports.iter().map(|r| r.total_cycles).collect();
         let costs: Vec<u64> = plan

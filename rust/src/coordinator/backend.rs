@@ -122,6 +122,23 @@ impl WaveBackend {
         let output_width =
             graph.layers.last().context("network lowered to an empty graph")?.cost.outputs
                 as usize;
+        // prewarm the quantise-once banks so the first served request pays
+        // no quantisation latency (the governor only switches modes, never
+        // precisions, so this is the one precision serving will touch)
+        let mut pidx = 0usize;
+        for layer in &net.layers {
+            match layer {
+                crate::model::Layer::Dense(d) => {
+                    net.weight_cache().dense_bank(pidx, d, precision);
+                    pidx += 1;
+                }
+                crate::model::Layer::Conv2d(c) => {
+                    net.weight_cache().conv_bank(pidx, c, precision);
+                    pidx += 1;
+                }
+                _ => {}
+            }
+        }
         Ok(WaveBackend {
             exec: WaveExecutor::new(engine),
             net,

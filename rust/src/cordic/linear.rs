@@ -176,6 +176,224 @@ pub fn shl_sat(v: i64, k: u32) -> i64 {
     }
 }
 
+// --- fused row kernels -----------------------------------------------------
+//
+// The wave executor's inner loop is `acc += x * w` across a whole lane run.
+// Calling [`mac`] per element re-enters the micro-rotation loop per MAC; the
+// kernels below hoist that loop so one pass over the iterations serves the
+// entire run. Per-lane operand sequences are machine-checkably identical to
+// [`mac`] (lanes never interact), so results are bit-identical — the
+// property tests at the bottom of this file and `tests/ir_parity.rs` pin
+// that down.
+
+/// True when `z` takes [`mac`]'s direct rotate-from-accumulator path: the
+/// fast path plus the `k == 0` normalisation case, i.e. `-1 <= z < 1` in
+/// guard format. Row kernels fuse exactly these lanes; anything outside
+/// falls back to per-lane [`mac`].
+#[inline]
+pub fn direct_mac_range(z: i64) -> bool {
+    (-ONE..ONE).contains(&z)
+}
+
+/// Iteration-outer fused rotation for a lane run sharing the broadcast
+/// operand `x`: each lane carries its own angle in `z` (pre-seeded) and its
+/// own accumulator. Per-lane this performs exactly [`rotate_raw`]'s adds in
+/// the same order.
+#[inline]
+fn rotate_run(acc: &mut [i64], z: &mut [i64], x: i64, iters: u32) {
+    #[inline(always)]
+    fn run<const N: u32>(acc: &mut [i64], z: &mut [i64], x: i64) {
+        let mut i = 0u32;
+        while i < N {
+            let e = if i <= GUARD_FRAC { 1i64 << (GUARD_FRAC - i) } else { 0 };
+            let xv = x >> i;
+            for (a, zl) in acc.iter_mut().zip(z.iter_mut()) {
+                let m = *zl >> 63;
+                *a += (xv ^ m) - m;
+                *zl -= (e ^ m) - m;
+            }
+            i += 1;
+        }
+    }
+    #[inline(always)]
+    fn run_dyn(acc: &mut [i64], z: &mut [i64], x: i64, iters: u32) {
+        for i in 0..iters {
+            let e = if i <= GUARD_FRAC { 1i64 << (GUARD_FRAC - i) } else { 0 };
+            let xv = x >> i;
+            for (a, zl) in acc.iter_mut().zip(z.iter_mut()) {
+                let m = *zl >> 63;
+                *a += (xv ^ m) - m;
+                *zl -= (e ^ m) - m;
+            }
+        }
+    }
+    match iters {
+        8 => run::<8>(acc, z, x),
+        10 => run::<10>(acc, z, x),
+        14 => run::<14>(acc, z, x),
+        18 => run::<18>(acc, z, x),
+        n => run_dyn(acc, z, x, n),
+    }
+}
+
+/// Fused MAC row with a broadcast activation: `acc[l] += x * ws[l]` for the
+/// whole run. `z` is caller-owned scratch with `z.len() >= ws.len()`,
+/// reused across rows so the hot loop never allocates. Lanes whose weight
+/// lies outside the direct range (`|w| >= 1`, possible for Q3.4 / Q7.8
+/// words) fall back to per-lane [`mac`]; either way every lane sees the
+/// exact [`mac`] operand sequence.
+pub fn mac_bx_row(acc: &mut [i64], z: &mut [i64], x: i64, ws: &[i64], iters: u32) {
+    debug_assert!(acc.len() == ws.len() && z.len() >= ws.len());
+    let n = ws.len();
+    let mut l = 0;
+    while l < n {
+        if !direct_mac_range(ws[l]) {
+            acc[l] = mac(acc[l], x, ws[l], iters).value;
+            l += 1;
+            continue;
+        }
+        let mut r = l + 1;
+        while r < n && direct_mac_range(ws[r]) {
+            r += 1;
+        }
+        z[l..r].copy_from_slice(&ws[l..r]);
+        rotate_run(&mut acc[l..r], &mut z[l..r], x, iters);
+        l = r;
+    }
+}
+
+/// Mask-sequence capacity for [`mac_bw_row`]; budgets beyond this (only
+/// reachable via `ExecMode::Custom`) fall back to per-lane [`mac`].
+const MASK_CAP: usize = 64;
+
+/// Fused MAC row with a broadcast weight: `acc[l] += xs[l] * w`. The angle
+/// recurrence depends only on `z`, so the per-iteration sign decisions are
+/// computed once and replayed across the run as branchless masks — the
+/// software analogue of driving one angle sequencer into every PE of a
+/// wave. Out-of-range weights rescale through the same
+/// `acc + shl_sat(y, k)` path as [`mac`].
+pub fn mac_bw_row(acc: &mut [i64], xs: &[i64], w: i64, iters: u32) {
+    debug_assert_eq!(acc.len(), xs.len());
+    if iters as usize > MASK_CAP {
+        for (a, &xv) in acc.iter_mut().zip(xs.iter()) {
+            *a = mac(*a, xv, w, iters).value;
+        }
+        return;
+    }
+    let (zn, k) = if direct_mac_range(w) { (w, 0) } else { normalize_z(w) };
+    let mut masks = [0i64; MASK_CAP];
+    let mut z = zn;
+    for i in 0..iters {
+        let e = if i <= GUARD_FRAC { 1i64 << (GUARD_FRAC - i) } else { 0 };
+        let m = z >> 63;
+        masks[i as usize] = m;
+        z -= (e ^ m) - m;
+    }
+    if k == 0 {
+        for i in 0..iters {
+            let m = masks[i as usize];
+            for (a, &xv) in acc.iter_mut().zip(xs.iter()) {
+                *a += ((xv >> i) ^ m) - m;
+            }
+        }
+    } else {
+        for (a, &xv) in acc.iter_mut().zip(xs.iter()) {
+            let mut y = 0i64;
+            for i in 0..iters {
+                let m = masks[i as usize];
+                y += ((xv >> i) ^ m) - m;
+            }
+            *a += shl_sat(y, k);
+        }
+    }
+}
+
+// --- packed sub-word kernel ------------------------------------------------
+//
+// PR 4's pack law (`pack_factor = 16 / bits`) models FxP-8/4 words sharing
+// one 16-bit PE datapath. The kernel below maps that law onto actual packed
+// arithmetic: four angle recurrences run as 16-bit fields of one u64 word.
+// Exactness argument (verified exhaustively over every admissible raw word
+// in the pre-implementation harness, and property-tested below):
+//
+//  * scale `z' = z >> S` with `S = 29 - iters`: every rotation constant
+//    `e_i = 2^(28-i)`, `i < iters`, has `28 - i >= S`, and a bank word from
+//    `to_guard_raw` is `raw << (28 - frac)` — divisible by `2^S` whenever
+//    `iters >= frac + 1`. The scaled recurrence is then *exact* and its
+//    sign sequence equals the unscaled one.
+//  * range: `|z| < 2` in guard format during rotation means
+//    `|z'| < 2^iters <= 2^15` for `iters <= 15` — a 16-bit two's-complement
+//    field never wraps in value terms.
+//
+// FxP-8 (Q3.4, budgets 8/10) and FxP-4 (Q1.2, budget 8) qualify; FxP-16's
+// pack factor is 1 so nothing is lost excluding its 18-iteration budget.
+
+/// Lanes packed per 64-bit word by [`mac_bx_row_packed`].
+pub const SWAR_LANES: usize = 4;
+
+/// Gate for the packed kernel over a whole quantised bank: every word must
+/// sit in the direct range (`all_direct`) and be divisible by
+/// `2^(29 - iters)` (`min_tz` = minimum trailing-zero count across the
+/// bank, 63 for an all-zero bank), with `iters` small enough for 16-bit
+/// scaled angles.
+#[inline]
+pub fn swar_mac_ok(all_direct: bool, min_tz: u32, iters: u32) -> bool {
+    all_direct && (1..=15).contains(&iters) && 29 - iters <= min_tz
+}
+
+/// Field sign bits of the four packed 16-bit angle lanes.
+const SWAR_H: u64 = 0x8000_8000_8000_8000;
+/// Per-field LSB replication constant.
+const SWAR_L: u64 = 0x0001_0001_0001_0001;
+
+/// Carry-free addition of four independent 16-bit fields.
+#[inline]
+fn swar_fieldadd(a: u64, b: u64) -> u64 {
+    ((a & !SWAR_H).wrapping_add(b & !SWAR_H)) ^ ((a ^ b) & SWAR_H)
+}
+
+/// [`mac_bx_row`] with the angle recurrences packed four-per-u64 — the
+/// sub-word arithmetic realisation of the FxP-8/4 pack law. Caller must
+/// have checked [`swar_mac_ok`] for the bank the row comes from; the
+/// remainder lanes (`ws.len() % 4`) run through the unpacked fused loop
+/// using the `z` scratch. Bit-identical to per-lane [`mac`].
+pub fn mac_bx_row_packed(acc: &mut [i64], z: &mut [i64], x: i64, ws: &[i64], iters: u32) {
+    debug_assert!(acc.len() == ws.len() && z.len() >= ws.len());
+    debug_assert!((1..=15).contains(&iters));
+    let s = 29 - iters;
+    debug_assert!(ws
+        .iter()
+        .all(|&w| direct_mac_range(w) && w & ((1i64 << s) - 1) == 0));
+    let n = ws.len();
+    let mut l = 0;
+    while l + SWAR_LANES <= n {
+        let mut zp = 0u64;
+        for j in 0..SWAR_LANES {
+            zp |= (((ws[l + j] >> s) as u64) & 0xFFFF) << (16 * j);
+        }
+        for i in 0..iters {
+            let xv = x >> i;
+            // per-lane accumulator update from the packed sign bits
+            for j in 0..SWAR_LANES {
+                let m = -(((zp >> (16 * j + 15)) & 1) as i64);
+                acc[l + j] += (xv ^ m) - m;
+            }
+            // packed angle update z -= ±e': add e' to negative fields and
+            // the two's complement of e' to non-negative ones
+            let e = (1u64 << (iters - 1 - i)).wrapping_mul(SWAR_L);
+            let mneg = ((zp & SWAR_H) >> 15).wrapping_mul(0xFFFF);
+            let ones_pos = ((!zp) & SWAR_H) >> 15;
+            let t = swar_fieldadd(e ^ !mneg, ones_pos);
+            zp = swar_fieldadd(zp, t);
+        }
+        l += SWAR_LANES;
+    }
+    if l < n {
+        z[l..n].copy_from_slice(&ws[l..n]);
+        rotate_run(&mut acc[l..n], &mut z[l..n], x, iters);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -311,6 +529,100 @@ mod tests {
         assert_eq!(shl_sat(-1, 63), i64::MIN + 1);
         assert_eq!(shl_sat(3, 2), 12);
         assert_eq!(shl_sat(0, 63), 0);
+    }
+
+    /// Draw a guard word as a quantised raw at `frac` fractional bits —
+    /// exactly what `to_guard_raw` produces for a bank word.
+    fn bank_word(rng: &mut crate::testutil::Xoshiro256, frac: u32, direct_only: bool) -> i64 {
+        let span = if direct_only { 1i64 << frac } else { 1i64 << (frac + 3) };
+        rng.int_in(-span, span - 1) << (GUARD_FRAC - frac)
+    }
+
+    #[test]
+    fn prop_mac_bx_row_bit_identical_to_mac() {
+        check_prop("mac_bx_row == per-lane mac", |rng| {
+            let n = rng.int_in(1, 17) as usize;
+            let iters = *[8u32, 10, 14, 18, 7, 25][rng.index(6)];
+            let frac = *[2u32, 4, 8][rng.index(3)];
+            let x = rng.int_in(-(1 << 33), 1 << 33);
+            let acc0: Vec<i64> = (0..n).map(|_| rng.int_in(-(1 << 40), 1 << 40)).collect();
+            // mix direct-range and out-of-range weights to hit the fallback
+            let ws: Vec<i64> =
+                (0..n).map(|_| bank_word(rng, frac, rng.chance(0.7))).collect();
+            let want: Vec<i64> =
+                acc0.iter().zip(&ws).map(|(&a, &w)| mac(a, x, w, iters).value).collect();
+            let mut acc = acc0.clone();
+            let mut z = vec![0i64; n];
+            mac_bx_row(&mut acc, &mut z, x, &ws, iters);
+            if acc == want {
+                Ok(())
+            } else {
+                Err(format!("iters={iters} ws={ws:?}: {acc:?} != {want:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mac_bw_row_bit_identical_to_mac() {
+        check_prop("mac_bw_row == per-lane mac", |rng| {
+            let n = rng.int_in(1, 17) as usize;
+            let iters = *[8u32, 10, 14, 18, 7, 25, 70][rng.index(7)];
+            let frac = *[2u32, 4, 8][rng.index(3)];
+            let w = bank_word(rng, frac, rng.chance(0.5));
+            let xs: Vec<i64> = (0..n).map(|_| rng.int_in(-(1 << 33), 1 << 33)).collect();
+            let acc0: Vec<i64> = (0..n).map(|_| rng.int_in(-(1 << 40), 1 << 40)).collect();
+            let want: Vec<i64> =
+                acc0.iter().zip(&xs).map(|(&a, &xv)| mac(a, xv, w, iters).value).collect();
+            let mut acc = acc0.clone();
+            mac_bw_row(&mut acc, &xs, w, iters);
+            if acc == want {
+                Ok(())
+            } else {
+                Err(format!("iters={iters} w={w}: {acc:?} != {want:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn prop_mac_bx_row_packed_bit_identical_to_mac() {
+        check_prop("packed SWAR row == per-lane mac", |rng| {
+            // the bank shapes that pass swar_mac_ok: Q3.4 at 8/10 iters,
+            // Q1.2 at 8 iters (pack factors 2 and 4)
+            let (frac, iters) = *[(4u32, 8u32), (4, 10), (2, 8)][rng.index(3)];
+            assert!(swar_mac_ok(true, GUARD_FRAC - frac, iters));
+            let n = rng.int_in(1, 19) as usize;
+            let x = rng.int_in(-(1 << 33), 1 << 33);
+            let ws: Vec<i64> = (0..n).map(|_| bank_word(rng, frac, true)).collect();
+            let acc0: Vec<i64> = (0..n).map(|_| rng.int_in(-(1 << 40), 1 << 40)).collect();
+            let want: Vec<i64> =
+                acc0.iter().zip(&ws).map(|(&a, &w)| mac(a, x, w, iters).value).collect();
+            let mut acc = acc0.clone();
+            let mut z = vec![0i64; n];
+            mac_bx_row_packed(&mut acc, &mut z, x, &ws, iters);
+            if acc == want {
+                Ok(())
+            } else {
+                Err(format!("frac={frac} iters={iters} ws={ws:?}: {acc:?} != {want:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn packed_gate_covers_exactly_the_exact_shapes() {
+        // -ONE (raw = -2^frac) is admissible: the k == 0 path is the same
+        // rotate-from-acc and the scaled angle -2^(iters-1) fits 16 bits
+        let mut acc = [7i64; 4];
+        let mut z = [0i64; 4];
+        let ws = [-ONE, 0, ONE - (1 << 24), -(1 << 24)];
+        let want: Vec<i64> = acc.iter().zip(&ws).map(|(&a, &w)| mac(a, 12345, w, 8).value).collect();
+        mac_bx_row_packed(&mut acc, &mut z, 12345, &ws, 8);
+        assert_eq!(acc.to_vec(), want);
+        // gate: FxP-16 accurate (18 iters) is out; zero-bank always in
+        assert!(!swar_mac_ok(true, 20, 18));
+        assert!(swar_mac_ok(true, 63, 8));
+        assert!(!swar_mac_ok(false, 63, 8));
+        assert!(!swar_mac_ok(true, 20, 8), "needs 21 trailing zeros at 8 iters");
+        assert!(swar_mac_ok(true, 21, 8));
     }
 
     #[test]

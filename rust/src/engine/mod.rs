@@ -117,6 +117,11 @@ pub struct EngineConfig {
     /// ([`pack_factor`]); `false` models the one-element-per-lane datapath
     /// for A/B comparison (`--packing off`).
     pub packing: bool,
+    /// Host worker threads for the wave executors' data-parallel phase
+    /// (`0` = auto-detect from the machine, `1` = serial, `n` = cap at
+    /// `n`). Purely a host-speed knob: thread count never changes output
+    /// bits, statistics, or cycle accounting (DESIGN.md §14).
+    pub threads: usize,
 }
 
 impl Default for EngineConfig {
@@ -129,6 +134,7 @@ impl Default for EngineConfig {
             burst_words: 32,
             af_overlap: true,
             packing: true,
+            threads: 0,
         }
     }
 }
@@ -139,6 +145,17 @@ impl EngineConfig {
     /// occupancy computation consumes.
     pub fn lane_slots(&self, precision: Precision) -> usize {
         packed_lanes(self.pes, precision, self.packing)
+    }
+
+    /// Resolve the [`threads`](Self::threads) knob into a concrete worker
+    /// count: `0` asks the OS for the available parallelism (falling back
+    /// to serial when the query fails), anything else is taken literally
+    /// (floored at one worker).
+    pub fn resolved_threads(&self) -> usize {
+        match self.threads {
+            0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+            n => n.max(1),
+        }
     }
 
     /// The paper's two reported ASIC configurations.

@@ -28,6 +28,18 @@
 //! loop (no per-MAC `Fxp` wrapping, additive index arithmetic, one weight
 //! fetch per wave): `benches/forward_wave.rs` reports the speedup.
 //!
+//! **Hot-path architecture** (DESIGN.md §14): parameter banks quantise
+//! once per `(layer, precision)` into the network-owned
+//! [`super::wcache::WeightCache`] (dense banks transposed to input-major
+//! order so every broadcast reads one contiguous row); the inner loops run
+//! the fused row kernels of [`crate::cordic::linear`] — including the
+//! packed sub-word SWAR variant for FxP-8/4 banks — instead of per-element
+//! [`linear::mac`] calls; and each kernel splits into a data-parallel
+//! pre-activation phase (threadable via [`EngineConfig::threads`]) and a
+//! serial canonical-order chunk replay, so outputs, stats and cycle-law
+//! numbers are bit-identical to the original per-element loop at any
+//! thread count.
+//!
 //! [`WaveExecutor::forward_batch`] extends the same structure with a
 //! **batch dimension**: the `B × outputs` elements of each layer are
 //! flattened into one lane stream, so a layer whose output count is
@@ -65,10 +77,10 @@
 use crate::activation::funcs::AfCost;
 use crate::activation::scheduler::{AfRequest, AfScheduler, UtilizationReport};
 use crate::activation::{ActFn, MultiAfBlock};
-use crate::cordic::mac::{to_guard_raw, MacConfig};
+use crate::cordic::mac::MacConfig;
 use crate::cordic::{from_guard, linear};
-use crate::engine::{mac_wave_cycles, mac_waves, EngineConfig};
-use crate::fxp::Fxp;
+use crate::engine::{mac_wave_cycles, mac_waves, pack_factor, EngineConfig};
+use crate::ir::wcache::LayerBank;
 use crate::ir::Graph;
 use crate::model::network::{af_iters, pool_cordic, softmax_cordic, LayerStats};
 use crate::model::{Conv2dParams, DenseParams, Layer, Network, Tensor};
@@ -572,16 +584,18 @@ impl WaveExecutor {
             match layer {
                 Layer::Dense(d) => {
                     current = policy.layer(pidx);
+                    let bank = net.weight_cache().dense_bank(pidx, d, current.precision);
                     pidx += 1;
-                    let (y, st) = wave_dense(d, &x, current, cfg, &mut sched, clock);
+                    let (y, st) = wave_dense(d, &bank, &x, current, cfg, &mut sched, clock);
                     x = y;
                     clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
                 }
                 Layer::Conv2d(c) => {
                     current = policy.layer(pidx);
+                    let bank = net.weight_cache().conv_bank(pidx, c, current.precision);
                     pidx += 1;
-                    let (y, st) = wave_conv(c, &x, current, cfg, &mut sched, clock);
+                    let (y, st) = wave_conv(c, &bank, &x, current, cfg, &mut sched, clock);
                     x = y;
                     clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
@@ -685,16 +699,20 @@ impl WaveExecutor {
             match layer {
                 Layer::Dense(d) => {
                     current = policy.layer(pidx);
+                    // one shared bank above the sample loop: the whole
+                    // batch quantises each layer's parameters exactly once
+                    let bank = net.weight_cache().dense_bank(pidx, d, current.precision);
                     pidx += 1;
-                    let (ys, st) = batch_dense(d, &xs, current, cfg, &mut sched, clock);
+                    let (ys, st) = batch_dense(d, &bank, &xs, current, cfg, &mut sched, clock);
                     xs = ys;
                     clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
                 }
                 Layer::Conv2d(c) => {
                     current = policy.layer(pidx);
+                    let bank = net.weight_cache().conv_bank(pidx, c, current.precision);
                     pidx += 1;
-                    let (ys, st) = batch_conv(c, &xs, current, cfg, &mut sched, clock);
+                    let (ys, st) = batch_conv(c, &bank, &xs, current, cfg, &mut sched, clock);
                     xs = ys;
                     clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
@@ -762,13 +780,77 @@ impl WaveExecutor {
 
 /// Quantise an f64 bank into guard-format words through the datapath
 /// format — the exact quantisation the scalar path applies per element.
+/// Delegates to [`super::wcache::quantize_bank`], the one quantisation
+/// routine: parameter banks additionally cache their quantised form per
+/// `(layer, precision)` ([`WeightCache`]), input activations quantise here
+/// per call.
 fn quantize_bank(values: &[f64], policy: LayerPolicy) -> Vec<i64> {
-    let fmt = policy.precision.format();
-    values.iter().map(|&v| to_guard_raw(Fxp::from_f64(v, fmt))).collect()
+    super::wcache::quantize_bank(values, policy.precision)
+}
+
+// ---- phase-split fused kernels ---------------------------------------------
+//
+// Each kernel runs in two phases (DESIGN.md §14):
+//
+//  * **phase A** computes every pre-activation accumulator with the fused
+//    row kernels ([`linear::mac_bx_row`] / [`linear::mac_bw_row`] /
+//    [`linear::mac_bx_row_packed`]) over the cached quantised bank. Lanes
+//    are data-parallel with no cross-lane state, so phase A may split
+//    across scoped threads ([`par_lanes`], `EngineConfig::threads`) at any
+//    partition without changing a single output bit.
+//  * **phase B** replays the issue chunks serially in canonical order:
+//    AF application, [`ChunkDrain`] bookkeeping and output writes — so
+//    the AF scheduler's clocks, the chunk stats and the cycle laws are
+//    *identical at any thread count* (pinned by `tests/ir_parity.rs`).
+
+/// Minimum MACs a worker must keep before phase A spawns another thread —
+/// below this, spawn overhead beats the win and the kernel stays serial.
+const PAR_MIN_MACS_PER_WORKER: u64 = 16 * 1024;
+
+/// Workers phase A actually uses for a layer of `macs` MACs given the
+/// resolved thread budget.
+fn worker_count(threads: usize, macs: u64) -> usize {
+    threads.clamp(1, (macs / PAR_MIN_MACS_PER_WORKER).max(1) as usize)
+}
+
+/// Run `f(start, span)` over disjoint contiguous spans of `acc`, on scoped
+/// threads when `workers > 1` (serially otherwise). Every lane's value
+/// depends only on its own index, so any partition computes the exact
+/// serial result.
+fn par_lanes(acc: &mut [i64], workers: usize, f: impl Fn(usize, &mut [i64]) + Sync) {
+    let n = acc.len();
+    let w = workers.clamp(1, n.max(1));
+    if w == 1 {
+        f(0, acc);
+        return;
+    }
+    let per = n.div_ceil(w);
+    std::thread::scope(|s| {
+        let mut rest = acc;
+        let mut start = 0usize;
+        while !rest.is_empty() {
+            let take = per.min(rest.len());
+            let (span, tail) = rest.split_at_mut(take);
+            rest = tail;
+            let fr = &f;
+            s.spawn(move || fr(start, span));
+            start += take;
+        }
+    });
+}
+
+/// Whether the packed sub-word kernel applies: the engine must be packing
+/// sub-word lanes (pack factor > 1 — FxP-8/4) and the bank's words must
+/// satisfy the exactness gate ([`linear::swar_mac_ok`]).
+fn use_packed_kernel(engine: &EngineConfig, policy: LayerPolicy, bank: &LayerBank, iters: u32) -> bool {
+    engine.packing
+        && pack_factor(policy.precision) > 1
+        && linear::swar_mac_ok(bank.all_direct, bank.min_tz, iters)
 }
 
 fn wave_dense(
     d: &DenseParams,
+    bank: &LayerBank,
     x: &Tensor,
     policy: LayerPolicy,
     engine: &EngineConfig,
@@ -783,36 +865,43 @@ fn wave_dense(
     let slots = engine.lane_slots(policy.precision);
     let mut af = MultiAfBlock::new(af_iters(policy.mode));
     let xg = quantize_bank(x.data(), policy);
-    let wg = quantize_bank(&d.weights, policy);
-    let bg = quantize_bank(&d.biases, policy);
+    let packed = use_packed_kernel(engine, policy, bank, iters);
 
     let macs = (d.inputs * d.outputs) as u64;
     let mac_cycles = mac_wave_cycles(macs, slots, cfg.cycles_per_mac());
     let ramp = pipeline_ramp_cycles(macs, d.outputs as u64, cfg.cycles_per_mac());
+
+    // phase A: all pre-activation accumulators over the transposed bank —
+    // each input activation is fetched once and broadcast across the lane
+    // run, whose weights are one contiguous bank row
+    let mut acc = vec![0i64; d.outputs];
+    let workers = worker_count(engine.resolved_threads(), macs);
+    par_lanes(&mut acc, workers, |start, span| {
+        // biases enter the wide accumulators directly (plain adder input)
+        span.copy_from_slice(&bank.biases[start..start + span.len()]);
+        let mut z = vec![0i64; span.len()];
+        for (i, &xv) in xg.iter().enumerate() {
+            let row = &bank.weights[i * d.outputs + start..][..span.len()];
+            if packed {
+                linear::mac_bx_row_packed(span, &mut z, xv, row, iters);
+            } else {
+                linear::mac_bx_row(span, &mut z, xv, row, iters);
+            }
+        }
+    });
+
+    // phase B: canonical-order chunk replay — AF, drain bookkeeping, output
     let mut drain =
         ChunkDrain::new(sched, d.act, t0, ramp, mac_cycles, engine.af_overlap);
-
-    let mut out = Vec::with_capacity(d.outputs);
-    let mut acc = vec![0i64; slots];
+    let mut out = vec![0f64; d.outputs];
     let mut o0 = 0usize;
     while o0 < d.outputs {
         let lanes = slots.min(d.outputs - o0);
-        // biases enter the wide accumulators directly (plain adder input)
-        acc[..lanes].copy_from_slice(&bg[o0..o0 + lanes]);
-        // each input activation is fetched once and broadcast to every
-        // lane; lane l's weight row advances with stride `inputs`
-        for (i, &xv) in xg.iter().enumerate() {
-            let mut widx = o0 * d.inputs + i;
-            for a in acc[..lanes].iter_mut() {
-                *a = linear::mac(*a, xv, wg[widx], iters).value;
-                widx += d.inputs;
-            }
-        }
         // wide accumulate-then-activate, lane order = scalar output order
-        for &a in &acc[..lanes] {
-            let (y, c) = af.apply_raw(d.act, a);
+        for (o, dst) in out.iter_mut().enumerate().skip(o0).take(lanes) {
+            let (y, c) = af.apply_raw(d.act, acc[o]);
             drain.absorb(c);
-            out.push(from_guard(y));
+            *dst = from_guard(y);
         }
         drain.retire(lanes);
         o0 += lanes;
@@ -831,11 +920,12 @@ fn wave_dense(
         outputs: d.outputs,
         ..Default::default()
     };
-    (Tensor::vector(&out), stats)
+    (Tensor::from_vec(&[d.outputs], out), stats)
 }
 
 fn wave_conv(
     c: &Conv2dParams,
+    bank: &LayerBank,
     x: &Tensor,
     policy: LayerPolicy,
     engine: &EngineConfig,
@@ -851,47 +941,63 @@ fn wave_conv(
     let (oh, ow) = (c.out_dim(h), c.out_dim(w));
     let positions = oh * ow;
     let xg = quantize_bank(x.data(), policy);
-    let wg = quantize_bank(&c.weights, policy);
-    let bg = quantize_bank(&c.biases, policy);
 
     let macs = (positions * c.out_ch * c.in_ch * c.kernel * c.kernel) as u64;
     let mac_cycles = mac_wave_cycles(macs, slots, cfg.cycles_per_mac());
     let ramp =
         pipeline_ramp_cycles(macs, (c.out_ch * positions) as u64, cfg.cycles_per_mac());
-    let mut drain =
-        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap);
 
-    let mut out = Tensor::zeros(&[c.out_ch, oh, ow]);
-    let mut acc = vec![0i64; slots];
-    let mut base = vec![0usize; slots];
-    for o in 0..c.out_ch {
-        let mut p0 = 0usize;
-        while p0 < positions {
-            let lanes = slots.min(positions - p0);
-            for (l, b) in base[..lanes].iter_mut().enumerate() {
-                let p = p0 + l;
+    // phase A over the flat (och, position) lane space: one kernel weight
+    // word is fetched per tap and broadcast across the position run, whose
+    // window words gather through a per-run base table
+    let mut acc = vec![0i64; c.out_ch * positions];
+    let workers = worker_count(engine.resolved_threads(), macs);
+    par_lanes(&mut acc, workers, |start, span| {
+        let mut base = vec![0usize; positions.min(span.len())];
+        let mut xrow = vec![0i64; positions.min(span.len())];
+        let mut pos = 0usize;
+        while pos < span.len() {
+            let e = start + pos;
+            let o = e / positions;
+            let p0 = e % positions;
+            let run = (positions - p0).min(span.len() - pos);
+            for (j, b) in base[..run].iter_mut().enumerate() {
+                let p = p0 + j;
                 *b = (p / ow) * c.stride * w + (p % ow) * c.stride;
             }
-            acc[..lanes].fill(bg[o]);
-            // one kernel weight is fetched per wave and broadcast across
-            // the lanes; each lane gathers its own input window word
+            let arun = &mut span[pos..pos + run];
+            arun.fill(bank.biases[o]);
             for i in 0..c.in_ch {
                 for ky in 0..c.kernel {
                     let row = i * h * w + ky * w;
                     for kx in 0..c.kernel {
                         let off = row + kx;
-                        let wv = wg[c.widx(o, i, ky, kx)];
-                        for (a, &b) in acc[..lanes].iter_mut().zip(&base[..lanes]) {
-                            *a = linear::mac(*a, xg[off + b], wv, iters).value;
+                        let wv = bank.weights[c.widx(o, i, ky, kx)];
+                        for (xr, &b) in xrow[..run].iter_mut().zip(&base[..run]) {
+                            *xr = xg[off + b];
                         }
+                        linear::mac_bw_row(arun, &xrow[..run], wv, iters);
                     }
                 }
             }
-            let dst = &mut out.data_mut()[o * positions + p0..o * positions + p0 + lanes];
-            for (l, &a) in acc[..lanes].iter().enumerate() {
-                let (y, cst) = af.apply_raw(c.act, a);
+            pos += run;
+        }
+    });
+
+    // phase B: chunk replay in the canonical (och, position-chunk) order
+    let mut drain =
+        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap);
+    let mut out = Tensor::zeros(&[c.out_ch, oh, ow]);
+    for o in 0..c.out_ch {
+        let mut p0 = 0usize;
+        while p0 < positions {
+            let lanes = slots.min(positions - p0);
+            let flat = o * positions + p0;
+            let dst = &mut out.data_mut()[flat..flat + lanes];
+            for (l, dv) in dst.iter_mut().enumerate() {
+                let (y, cst) = af.apply_raw(c.act, acc[flat + l]);
                 drain.absorb(cst);
-                dst[l] = from_guard(y);
+                *dv = from_guard(y);
             }
             drain.retire(lanes);
             p0 += lanes;
@@ -934,6 +1040,7 @@ fn wave_conv(
 
 fn batch_dense(
     d: &DenseParams,
+    bank: &LayerBank,
     xs: &[Tensor],
     policy: LayerPolicy,
     engine: &EngineConfig,
@@ -945,8 +1052,9 @@ fn batch_dense(
     let iters = cfg.iterations();
     let slots = engine.lane_slots(policy.precision);
     let mut af = MultiAfBlock::new(af_iters(policy.mode));
-    let wg = quantize_bank(&d.weights, policy);
-    let bg = quantize_bank(&d.biases, policy);
+    let packed = use_packed_kernel(engine, policy, bank, iters);
+    // the shared parameter bank comes quantised from the cache — only the
+    // per-sample activations quantise here, once each
     let xg: Vec<Vec<i64>> = xs
         .iter()
         .map(|x| {
@@ -959,34 +1067,47 @@ fn batch_dense(
     let macs = (elements * d.inputs) as u64;
     let mac_cycles = mac_wave_cycles(macs, slots, cfg.cycles_per_mac());
     let ramp = pipeline_ramp_cycles(macs, elements as u64, cfg.cycles_per_mac());
+
+    // phase A over the flat sample-major element space: runs sharing a
+    // sample broadcast that sample's activation word against a contiguous
+    // row of the transposed bank
+    let mut acc = vec![0i64; elements];
+    let workers = worker_count(engine.resolved_threads(), macs);
+    par_lanes(&mut acc, workers, |start, span| {
+        let mut z = vec![0i64; d.outputs.min(span.len())];
+        let mut pos = 0usize;
+        while pos < span.len() {
+            let e = start + pos;
+            let s = e / d.outputs;
+            let n0 = e % d.outputs;
+            let run = (d.outputs - n0).min(span.len() - pos);
+            let arun = &mut span[pos..pos + run];
+            arun.copy_from_slice(&bank.biases[n0..n0 + run]);
+            let xrow = &xg[s];
+            for (i, &xv) in xrow.iter().enumerate() {
+                let row = &bank.weights[i * d.outputs + n0..][..run];
+                if packed {
+                    linear::mac_bx_row_packed(arun, &mut z, xv, row, iters);
+                } else {
+                    linear::mac_bx_row(arun, &mut z, xv, row, iters);
+                }
+            }
+            pos += run;
+        }
+    });
+
+    // phase B: canonical chunk replay; elements are sample-major, so
+    // pushes land in scalar output order
     let mut drain =
         ChunkDrain::new(sched, d.act, t0, ramp, mac_cycles, engine.af_overlap);
     let mut out = vec![Vec::with_capacity(d.outputs); bsz];
-    let mut acc = vec![0i64; slots];
-    let mut sample = vec![0usize; slots];
-    let mut neuron = vec![0usize; slots];
     let mut e0 = 0usize;
     while e0 < elements {
         let lanes = slots.min(elements - e0);
-        for l in 0..lanes {
-            let e = e0 + l;
-            sample[l] = e / d.outputs;
-            neuron[l] = e % d.outputs;
-            acc[l] = bg[neuron[l]];
-        }
-        // one wave per input index: lane l reads its own sample's
-        // activation word and its own neuron's weight row
-        for i in 0..d.inputs {
-            for l in 0..lanes {
-                let wv = wg[neuron[l] * d.inputs + i];
-                acc[l] = linear::mac(acc[l], xg[sample[l]][i], wv, iters).value;
-            }
-        }
-        // elements are sample-major, so pushes land in scalar output order
-        for l in 0..lanes {
-            let (y, c) = af.apply_raw(d.act, acc[l]);
+        for (e, &a) in acc.iter().enumerate().skip(e0).take(lanes) {
+            let (y, c) = af.apply_raw(d.act, a);
             drain.absorb(c);
-            out[sample[l]].push(from_guard(y));
+            out[e / d.outputs].push(from_guard(y));
         }
         drain.retire(lanes);
         e0 += lanes;
@@ -1007,11 +1128,12 @@ fn batch_dense(
         outputs: d.outputs,
         ..Default::default()
     };
-    (out.iter().map(|o| Tensor::vector(o)).collect(), stats)
+    (out.into_iter().map(|o| Tensor::from_vec(&[d.outputs], o)).collect(), stats)
 }
 
 fn batch_conv(
     c: &Conv2dParams,
+    bank: &LayerBank,
     xs: &[Tensor],
     policy: LayerPolicy,
     engine: &EngineConfig,
@@ -1028,8 +1150,6 @@ fn batch_conv(
     let (oh, ow) = (c.out_dim(h), c.out_dim(w));
     let positions = oh * ow;
     let per_sample = c.out_ch * positions;
-    let wg = quantize_bank(&c.weights, policy);
-    let bg = quantize_bank(&c.biases, policy);
     let xg: Vec<Vec<i64>> = xs
         .iter()
         .map(|x| {
@@ -1042,46 +1162,58 @@ fn batch_conv(
     let macs = (elements * c.in_ch * c.kernel * c.kernel) as u64;
     let mac_cycles = mac_wave_cycles(macs, slots, cfg.cycles_per_mac());
     let ramp = pipeline_ramp_cycles(macs, elements as u64, cfg.cycles_per_mac());
-    let mut drain =
-        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap);
-    let mut out = vec![Tensor::zeros(&[c.out_ch, oh, ow]); bsz];
-    let mut acc = vec![0i64; slots];
-    let mut sample = vec![0usize; slots];
-    let mut och = vec![0usize; slots];
-    let mut ridx = vec![0usize; slots]; // o * positions + p: the flat output index
-    let mut base = vec![0usize; slots];
-    let mut e0 = 0usize;
-    while e0 < elements {
-        let lanes = slots.min(elements - e0);
-        for l in 0..lanes {
-            let e = e0 + l;
-            sample[l] = e / per_sample;
+
+    // phase A over the flat (sample, och, position) element space: runs
+    // sharing (sample, och) broadcast one kernel word per tap against the
+    // run's gathered window words
+    let mut acc = vec![0i64; elements];
+    let workers = worker_count(engine.resolved_threads(), macs);
+    par_lanes(&mut acc, workers, |start, span| {
+        let mut base = vec![0usize; positions.min(span.len())];
+        let mut xrow = vec![0i64; positions.min(span.len())];
+        let mut pos = 0usize;
+        while pos < span.len() {
+            let e = start + pos;
+            let s = e / per_sample;
             let r = e % per_sample;
-            let p = r % positions;
-            och[l] = r / positions;
-            ridx[l] = r;
-            base[l] = (p / ow) * c.stride * w + (p % ow) * c.stride;
-            acc[l] = bg[och[l]];
-        }
-        // one wave per kernel tap: lane l gathers its own sample's input
-        // window word against its own output channel's kernel word
-        for i in 0..c.in_ch {
-            for ky in 0..c.kernel {
-                let row = i * h * w + ky * w;
-                for kx in 0..c.kernel {
-                    let off = row + kx;
-                    for l in 0..lanes {
-                        let wv = wg[c.widx(och[l], i, ky, kx)];
-                        acc[l] =
-                            linear::mac(acc[l], xg[sample[l]][off + base[l]], wv, iters).value;
+            let o = r / positions;
+            let p0 = r % positions;
+            let run = (positions - p0).min(span.len() - pos);
+            for (j, b) in base[..run].iter_mut().enumerate() {
+                let p = p0 + j;
+                *b = (p / ow) * c.stride * w + (p % ow) * c.stride;
+            }
+            let arun = &mut span[pos..pos + run];
+            arun.fill(bank.biases[o]);
+            let xsamp = &xg[s];
+            for i in 0..c.in_ch {
+                for ky in 0..c.kernel {
+                    let row = i * h * w + ky * w;
+                    for kx in 0..c.kernel {
+                        let off = row + kx;
+                        let wv = bank.weights[c.widx(o, i, ky, kx)];
+                        for (xr, &b) in xrow[..run].iter_mut().zip(&base[..run]) {
+                            *xr = xsamp[off + b];
+                        }
+                        linear::mac_bw_row(arun, &xrow[..run], wv, iters);
                     }
                 }
             }
+            pos += run;
         }
-        for l in 0..lanes {
-            let (y, cst) = af.apply_raw(c.act, acc[l]);
+    });
+
+    // phase B: canonical chunk replay over the flat element order
+    let mut drain =
+        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap);
+    let mut out = vec![Tensor::zeros(&[c.out_ch, oh, ow]); bsz];
+    let mut e0 = 0usize;
+    while e0 < elements {
+        let lanes = slots.min(elements - e0);
+        for (e, &a) in acc.iter().enumerate().skip(e0).take(lanes) {
+            let (y, cst) = af.apply_raw(c.act, a);
             drain.absorb(cst);
-            out[sample[l]].data_mut()[ridx[l]] = from_guard(y);
+            out[e / per_sample].data_mut()[e % per_sample] = from_guard(y);
         }
         drain.retire(lanes);
         e0 += lanes;

@@ -34,6 +34,7 @@
 
 pub mod exec;
 mod lower;
+pub mod wcache;
 pub mod workloads;
 
 #[cfg(test)]
@@ -43,6 +44,7 @@ pub use exec::{
     graph_batch_occupancy, layer_pipeline_cycles, pipeline_ramp_cycles, BatchLayerStats,
     BatchRunStats, WaveExecutor, WaveLayerStats, WaveRunStats,
 };
+pub use wcache::{LayerBank, WeightCache};
 
 use crate::activation::ActFn;
 use crate::cordic::mac::{ExecMode, MacConfig};

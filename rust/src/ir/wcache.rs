@@ -1,0 +1,295 @@
+//! Quantise-once weight caching for the wave executors.
+//!
+//! Every wave/batch forward used to re-run `quantize_bank` over each
+//! layer's full weight and bias tensors — per call, per sample stream,
+//! per serving request. Quantisation depends only on the layer's FP32
+//! parameters and the operating [`Precision`] (the [`ExecMode`] knob picks
+//! the iteration budget, not the word format), so the guard-format banks
+//! are immutable per `(layer, precision)` and belong in a cache owned by
+//! the [`crate::model::Network`] they quantise.
+//!
+//! Invalidation contract (DESIGN.md §14):
+//!
+//! * **precision / policy changes** need no invalidation at all — the
+//!   cache key *is* the precision, so flipping a layer's
+//!   [`crate::quant::LayerPolicy`] from FxP-16 to FxP-8 addresses a
+//!   different bank and the stale words are never consulted;
+//! * **in-place weight mutation** (the trainer's SGD steps, manual layer
+//!   surgery) must call [`WeightCache::clear`] — reachable as
+//!   [`crate::model::Network::invalidate_weight_cache`]. As
+//!   defence-in-depth every lookup revalidates a sampled fingerprint of
+//!   the FP32 source and rebuilds on mismatch, so even a missed `clear`
+//!   converges to correct words for any mutation the sample catches;
+//! * **cloned networks** start with a fresh empty cache, so divergent
+//!   clones never thrash one shared map.
+//!
+//! [`ExecMode`]: crate::cordic::mac::ExecMode
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cordic::linear::direct_mac_range;
+use crate::cordic::mac::to_guard_raw;
+use crate::fxp::Fxp;
+use crate::model::layer::{Conv2dParams, DenseParams};
+use crate::quant::Precision;
+use crate::telemetry;
+
+/// Quantise an f64 slice into guard-format words at `precision` — the
+/// single quantisation routine behind both the cache and the uncached
+/// paths (input activations still quantise per call; only parameters are
+/// cacheable).
+pub fn quantize_bank(values: &[f64], precision: Precision) -> Vec<i64> {
+    let fmt = precision.format();
+    values.iter().map(|&v| to_guard_raw(Fxp::from_f64(v, fmt))).collect()
+}
+
+/// One immutable quantised parameter bank: a compute layer's weights and
+/// biases in guard format at one precision, plus the packed-kernel gate
+/// facts derived while quantising.
+#[derive(Debug)]
+pub struct LayerBank {
+    /// Guard-format weight words. Layout is layer-kind specific: dense
+    /// banks are stored **input-major** (`w_t[i * outputs + o]`) so both
+    /// the single-sample and batched dense kernels read one contiguous
+    /// run per broadcast activation; conv banks keep the natural
+    /// `Conv2dParams::widx` order (the conv kernels broadcast one weight
+    /// word per tap).
+    pub weights: Vec<i64>,
+    /// Guard-format bias words, natural order.
+    pub biases: Vec<i64>,
+    /// Every weight word lies in the direct rotate range `[-1, 1)`.
+    pub all_direct: bool,
+    /// Minimum trailing-zero count across weight words (63 for an
+    /// all-zero bank) — the divisibility half of the
+    /// [`crate::cordic::linear::swar_mac_ok`] packed-kernel gate.
+    pub min_tz: u32,
+    /// Sampled fingerprint of the FP32 source used to detect in-place
+    /// mutation on later lookups.
+    fingerprint: u64,
+}
+
+impl LayerBank {
+    fn build(weights: Vec<i64>, biases: Vec<i64>, fingerprint: u64) -> Arc<LayerBank> {
+        let all_direct = weights.iter().all(|&w| direct_mac_range(w));
+        let min_tz =
+            weights.iter().map(|&w| w.trailing_zeros().min(63)).min().unwrap_or(63);
+        Arc::new(LayerBank { weights, biases, all_direct, min_tz, fingerprint })
+    }
+}
+
+/// FNV-1a over a byte stream, seeded per call site.
+fn fnv1a(seed: u64, bytes: impl IntoIterator<Item = u64>) -> u64 {
+    let mut h = 0xcbf29ce484222325u64 ^ seed;
+    for word in bytes {
+        for b in word.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    }
+    h
+}
+
+/// Positions sampled per tensor when fingerprinting (plus first/last and
+/// both lengths — enough to catch shape changes and any mutation that
+/// touches a sampled element, at O(1) cost per forward).
+const FP_SAMPLES: usize = 64;
+
+fn fingerprint(weights: &[f64], biases: &[f64]) -> u64 {
+    let sample = |vs: &[f64]| -> Vec<u64> {
+        if vs.is_empty() {
+            return vec![0];
+        }
+        let stride = (vs.len() / FP_SAMPLES).max(1);
+        let mut out: Vec<u64> = vs.iter().step_by(stride).map(|v| v.to_bits()).collect();
+        out.push(vs[vs.len() - 1].to_bits());
+        out
+    };
+    let mut words = vec![weights.len() as u64, biases.len() as u64];
+    words.extend(sample(weights));
+    words.extend(sample(biases));
+    fnv1a(0x524f_5645_5443, words)
+}
+
+/// Per-network cache of quantised parameter banks, keyed by
+/// `(compute-layer index, precision)`. Thread-safe: lookups share a map
+/// behind a mutex, bank payloads are immutable behind `Arc`s, and builds
+/// happen outside the lock (a racing duplicate build is idempotent).
+#[derive(Default)]
+pub struct WeightCache {
+    banks: Mutex<HashMap<(usize, Precision), Arc<LayerBank>>>,
+    quant_passes: AtomicU64,
+    hits: AtomicU64,
+}
+
+impl std::fmt::Debug for WeightCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WeightCache")
+            .field("entries", &self.banks.lock().unwrap().len())
+            .field("quant_passes", &self.quant_passes())
+            .field("hits", &self.hits())
+            .finish()
+    }
+}
+
+impl WeightCache {
+    /// Fresh empty cache.
+    pub fn new() -> WeightCache {
+        WeightCache::default()
+    }
+
+    /// Number of full quantisation passes performed (cache misses and
+    /// fingerprint-forced rebuilds). The "`forward_batch` quantises each
+    /// bank exactly once" regression test pins this counter.
+    pub fn quant_passes(&self) -> u64 {
+        self.quant_passes.load(Ordering::Relaxed)
+    }
+
+    /// Number of lookups served from a cached bank.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Drop every cached bank — the explicit invalidation hook for
+    /// in-place weight mutation.
+    pub fn clear(&self) {
+        self.banks.lock().unwrap().clear();
+    }
+
+    fn lookup_or_build(
+        &self,
+        key: (usize, Precision),
+        fp: u64,
+        build: impl FnOnce() -> (Vec<i64>, Vec<i64>),
+    ) -> Arc<LayerBank> {
+        if let Some(bank) = self.banks.lock().unwrap().get(&key) {
+            if bank.fingerprint == fp {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(bank);
+            }
+        }
+        let mut span = telemetry::span("wave.quantize");
+        span.field_u64("layer", key.0 as u64);
+        self.quant_passes.fetch_add(1, Ordering::Relaxed);
+        let (weights, biases) = build();
+        let bank = LayerBank::build(weights, biases, fp);
+        self.banks.lock().unwrap().insert(key, Arc::clone(&bank));
+        bank
+    }
+
+    /// Bank for a dense layer: weights transposed to input-major order
+    /// (see [`LayerBank::weights`]), biases in natural order.
+    pub fn dense_bank(
+        &self,
+        layer_idx: usize,
+        d: &DenseParams,
+        precision: Precision,
+    ) -> Arc<LayerBank> {
+        let fp = fingerprint(&d.weights, &d.biases);
+        self.lookup_or_build((layer_idx, precision), fp, || {
+            let fmt = precision.format();
+            let mut wt = vec![0i64; d.weights.len()];
+            for o in 0..d.outputs {
+                for i in 0..d.inputs {
+                    wt[i * d.outputs + o] =
+                        to_guard_raw(Fxp::from_f64(d.weights[o * d.inputs + i], fmt));
+                }
+            }
+            (wt, quantize_bank(&d.biases, precision))
+        })
+    }
+
+    /// Bank for a conv layer: weights and biases both in natural order.
+    pub fn conv_bank(
+        &self,
+        layer_idx: usize,
+        c: &Conv2dParams,
+        precision: Precision,
+    ) -> Arc<LayerBank> {
+        let fp = fingerprint(&c.weights, &c.biases);
+        self.lookup_or_build((layer_idx, precision), fp, || {
+            (quantize_bank(&c.weights, precision), quantize_bank(&c.biases, precision))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::activation::ActFn;
+
+    fn dense(inputs: usize, outputs: usize, seed: u64) -> DenseParams {
+        let mut rng = crate::testutil::Xoshiro256::new(seed);
+        DenseParams {
+            inputs,
+            outputs,
+            weights: rng.uniform_vec(inputs * outputs, -0.9, 0.9),
+            biases: rng.uniform_vec(outputs, -0.4, 0.4),
+            act: ActFn::Relu,
+        }
+    }
+
+    #[test]
+    fn dense_bank_is_the_exact_transpose_of_quantize_bank() {
+        let d = dense(7, 5, 3);
+        let cache = WeightCache::new();
+        let bank = cache.dense_bank(0, &d, Precision::Fxp8);
+        let flat = quantize_bank(&d.weights, Precision::Fxp8);
+        for o in 0..d.outputs {
+            for i in 0..d.inputs {
+                assert_eq!(bank.weights[i * d.outputs + o], flat[o * d.inputs + i]);
+            }
+        }
+        assert_eq!(bank.biases, quantize_bank(&d.biases, Precision::Fxp8));
+    }
+
+    #[test]
+    fn cache_hits_after_first_build_and_keys_by_precision() {
+        let d = dense(6, 4, 9);
+        let cache = WeightCache::new();
+        let b1 = cache.dense_bank(2, &d, Precision::Fxp16);
+        assert_eq!((cache.quant_passes(), cache.hits()), (1, 0));
+        let b2 = cache.dense_bank(2, &d, Precision::Fxp16);
+        assert_eq!((cache.quant_passes(), cache.hits()), (1, 1));
+        assert!(Arc::ptr_eq(&b1, &b2));
+        // a different precision is a different bank, not an overwrite
+        let b3 = cache.dense_bank(2, &d, Precision::Fxp8);
+        assert_eq!(cache.quant_passes(), 2);
+        assert_ne!(b1.weights, b3.weights);
+        let again = cache.dense_bank(2, &d, Precision::Fxp16);
+        assert!(Arc::ptr_eq(&b1, &again));
+    }
+
+    #[test]
+    fn fingerprint_mismatch_rebuilds_instead_of_serving_stale_words() {
+        let mut d = dense(8, 8, 11);
+        let cache = WeightCache::new();
+        let stale = cache.dense_bank(0, &d, Precision::Fxp8);
+        d.weights[0] = 0.77;
+        let fresh = cache.dense_bank(0, &d, Precision::Fxp8);
+        assert_eq!(cache.quant_passes(), 2);
+        // w[o=0][i=0] sits at transposed index 0 either way
+        assert_ne!(stale.weights[0], fresh.weights[0]);
+    }
+
+    #[test]
+    fn clear_forces_requantisation() {
+        let d = dense(4, 4, 13);
+        let cache = WeightCache::new();
+        cache.dense_bank(0, &d, Precision::Fxp4);
+        cache.clear();
+        cache.dense_bank(0, &d, Precision::Fxp4);
+        assert_eq!(cache.quant_passes(), 2);
+    }
+
+    #[test]
+    fn bank_gate_facts_match_the_words() {
+        let d = dense(5, 3, 17);
+        let cache = WeightCache::new();
+        let bank = cache.dense_bank(0, &d, Precision::Fxp8);
+        assert!(bank.all_direct, "sub-unit weights quantise into [-1, 1)");
+        // Q3.4 words are raws shifted by 24 bits: at least 24 trailing zeros
+        assert!(bank.min_tz >= 24, "min_tz {} for Q3.4 bank", bank.min_tz);
+    }
+}

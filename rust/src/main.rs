@@ -165,6 +165,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.pool_units = (pes / 8).max(1);
     cfg.packing = parse_packing(args)?;
     cfg.af_overlap = parse_overlap(args)?;
+    cfg.threads = args.num_or("threads", 0usize)?;
     let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
     let report = VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
     let asic = corvet::hwcost::engine_asic_at(&cfg, precision, policy.layer(0).mode);
@@ -215,6 +216,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     engine.pool_units = (pes / 8).max(1);
     engine.packing = parse_packing(args)?;
     engine.af_overlap = parse_overlap(args)?;
+    engine.threads = args.num_or("threads", 0usize)?;
 
     let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
     let annotated = graph.with_policy(&policy);
@@ -392,6 +394,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "wave" => {
             let mut engine = EngineConfig { pes, ..EngineConfig::default() };
             engine.packing = parse_packing(args)?;
+            engine.threads = args.num_or("threads", 0usize)?;
             // capacity planning before the server spins up: the simulated
             // per-dispatch price at the configured max batch, through the
             // packed-lane and AF-overlap laws
@@ -458,7 +461,8 @@ fn cmd_metrics(args: &Args) -> Result<()> {
     // weights are fine — the exposition, not the accuracy, is the product
     let net = paper_mlp(7);
     let width: usize = net.input_shape.iter().product();
-    let engine = EngineConfig { pes, ..EngineConfig::default() };
+    let mut engine = EngineConfig { pes, ..EngineConfig::default() };
+    engine.threads = args.num_or("threads", 0usize)?;
     let mut server = Server::start_wave(net, engine, ServerConfig::default())?;
     let mut rng = Xoshiro256::new(11);
     let mut pending = Vec::with_capacity(n_requests);

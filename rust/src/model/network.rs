@@ -8,7 +8,7 @@ use crate::cordic::mac::{CordicMac, ExecMode, MacConfig};
 use crate::cordic::{from_guard, to_guard};
 use crate::engine::EngineConfig;
 use crate::fxp::Fxp;
-use crate::ir::{BatchRunStats, Graph, WaveExecutor, WaveRunStats};
+use crate::ir::{BatchRunStats, Graph, WaveExecutor, WaveRunStats, WeightCache};
 use crate::pooling::sliding::AadSlidingWindow;
 use crate::pooling::PoolCost;
 use crate::quant::{LayerPolicy, PolicyTable, Precision};
@@ -73,7 +73,7 @@ impl CordicRunStats {
 }
 
 /// A feed-forward network (sequential layers).
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug)]
 pub struct Network {
     /// Layers in execution order.
     pub layers: Vec<Layer>,
@@ -81,12 +81,54 @@ pub struct Network {
     pub input_shape: Vec<usize>,
     /// Human-readable name for reports.
     pub name: String,
+    /// Quantise-once parameter banks for the wave executors, keyed by
+    /// `(layer, precision)` — see [`crate::ir::WeightCache`] for the
+    /// invalidation contract. Clones start with a fresh cache; equality
+    /// ignores it (it is derived state).
+    wcache: WeightCache,
+}
+
+impl Clone for Network {
+    fn clone(&self) -> Self {
+        Network {
+            layers: self.layers.clone(),
+            input_shape: self.input_shape.clone(),
+            name: self.name.clone(),
+            wcache: WeightCache::new(),
+        }
+    }
+}
+
+impl PartialEq for Network {
+    fn eq(&self, other: &Self) -> bool {
+        self.layers == other.layers
+            && self.input_shape == other.input_shape
+            && self.name == other.name
+    }
 }
 
 impl Network {
     /// New network.
     pub fn new(name: &str, input_shape: &[usize], layers: Vec<Layer>) -> Self {
-        Network { layers, input_shape: input_shape.to_vec(), name: name.to_string() }
+        Network {
+            layers,
+            input_shape: input_shape.to_vec(),
+            name: name.to_string(),
+            wcache: WeightCache::new(),
+        }
+    }
+
+    /// The network's quantised-parameter cache (wave/batch executors read
+    /// banks through it; counters feed the single-quantisation-pass tests).
+    pub fn weight_cache(&self) -> &WeightCache {
+        &self.wcache
+    }
+
+    /// Drop every cached quantised bank. Call after mutating layer
+    /// parameters in place; policy/precision changes need no invalidation
+    /// (the precision is part of the cache key).
+    pub fn invalidate_weight_cache(&self) {
+        self.wcache.clear();
     }
 
     /// Number of compute layers (dense + conv) — the policy table length.
@@ -119,7 +161,10 @@ impl Network {
                     x.reshape(&[n])
                 }
                 Layer::Softmax => {
-                    Tensor::vector(&crate::activation::reference_softmax(x.data()))
+                    Tensor::from_vec(
+                        &[x.len()],
+                        crate::activation::reference_softmax(x.data()),
+                    )
                 }
             };
         }
@@ -253,7 +298,7 @@ fn dense_f64(d: &DenseParams, x: &Tensor) -> Tensor {
         let s: f64 = w.iter().zip(x.data()).map(|(wi, xi)| wi * xi).sum::<f64>() + d.biases[o];
         out.push(d.act.reference(s));
     }
-    Tensor::vector(&out)
+    Tensor::from_vec(&[d.outputs], out)
 }
 
 fn conv_f64(c: &Conv2dParams, x: &Tensor) -> Tensor {
@@ -341,7 +386,8 @@ pub(crate) fn softmax_cordic(x: &Tensor, iters: u32) -> (Tensor, LayerStats) {
         outputs: ys.len(),
         ..Default::default()
     };
-    (Tensor::vector(&ys), stats)
+    let n = ys.len();
+    (Tensor::from_vec(&[n], ys), stats)
 }
 
 fn dense_cordic(d: &DenseParams, x: &Tensor, policy: LayerPolicy) -> (Tensor, LayerStats) {
@@ -375,7 +421,7 @@ fn dense_cordic(d: &DenseParams, x: &Tensor, policy: LayerPolicy) -> (Tensor, La
         outputs: d.outputs,
         ..Default::default()
     };
-    (Tensor::vector(&out), stats)
+    (Tensor::from_vec(&[d.outputs], out), stats)
 }
 
 fn conv_cordic(c: &Conv2dParams, x: &Tensor, policy: LayerPolicy) -> (Tensor, LayerStats) {

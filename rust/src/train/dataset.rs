@@ -80,7 +80,7 @@ impl Dataset {
                 .iter()
                 .map(|&p| (p + shift + rng.normal_ms(0.0, config.noise)).clamp(-1.0, 1.0))
                 .collect();
-            Tensor::vector(&data)
+            Tensor::from_vec(&[dim], data)
         };
 
         let gen_split = |rng: &mut Xoshiro256, count: usize| {

@@ -199,7 +199,7 @@ fn backprop_one(net: &Network, x: &Tensor, y: usize, grads: &mut [Option<Velocit
                 }
                 let out: Vec<f64> = pre.iter().map(|&z| d.act.reference(z)).collect();
                 caches.push(Cache::Dense { input, pre });
-                a = Tensor::vector(&out);
+                a = Tensor::from_vec(&[d.outputs], out);
             }
             Layer::Conv2d(c) => {
                 let input = a.clone();
@@ -277,7 +277,8 @@ fn backprop_one(net: &Network, x: &Tensor, y: usize, grads: &mut [Option<Velocit
             Layer::Softmax => {
                 let probs = crate::activation::reference_softmax(a.data());
                 caches.push(Cache::Softmax { probs: probs.clone() });
-                a = Tensor::vector(&probs);
+                let n = probs.len();
+                a = Tensor::from_vec(&[n], probs);
             }
         }
     }

@@ -769,3 +769,156 @@ fn wave_cycle_accounting_matches_engine_simulator() {
     assert_eq!(wave_mac, sim_mac, "wave law must be shared");
     assert!(wave.total_waves() > 0);
 }
+
+// ---------------------------------------------------------------------------
+// Quantise-once weight cache and host threading (DESIGN.md §14): neither the
+// cache (cold vs warm banks) nor the worker count may change a single output
+// bit or any cycle-law number.
+
+#[test]
+fn prop_cached_quantisation_bit_identical_to_fresh() {
+    // warm-cache runs (second forward on the same network) against
+    // cold-cache runs (a clone starts with an empty cache) across the
+    // precision x mode x packing x batch matrix — outputs bit-identical,
+    // and the warm run performs zero additional quantisation passes
+    let acts = [ActFn::Tanh, ActFn::Relu, ActFn::Gelu];
+    check_prop("warm weight cache == fresh quantisation", |rng| {
+        let dims = vec![
+            rng.int_in(3, 10) as usize,
+            rng.int_in(2, 8) as usize,
+            rng.int_in(2, 5) as usize,
+        ];
+        let net = mlp("cachemlp", &dims, acts[rng.index(acts.len())], rng.int_in(0, 9999) as u64);
+        let policy = rand_policy(rng, net.compute_layers());
+        let packing = rng.chance(0.5);
+        let cfg = EngineConfig { pes: 16, packing, ..EngineConfig::default() };
+        let b = rng.int_in(1, 4) as usize;
+        let xs = inputs_for(&net, rng, b);
+
+        let cold = net.clone(); // fresh empty cache
+        let (y_warmup, _) = net.forward_wave(&xs[0], &policy, &cfg); // populate
+        let passes_after_first = net.weight_cache().quant_passes();
+        let (y_warm, s_warm) = net.forward_wave(&xs[0], &policy, &cfg);
+        assert_eq!(
+            net.weight_cache().quant_passes(),
+            passes_after_first,
+            "warm run must not re-quantise"
+        );
+        let (y_cold, s_cold) = cold.forward_wave(&xs[0], &policy, &cfg);
+        for ((a, w), c) in y_warmup.data().iter().zip(y_warm.data()).zip(y_cold.data()) {
+            assert_eq!(a.to_bits(), w.to_bits(), "warm drifted from first run");
+            assert_eq!(w.to_bits(), c.to_bits(), "warm drifted from cold");
+        }
+        assert_eq!(
+            s_warm.total_pipeline_cycles(),
+            s_cold.total_pipeline_cycles(),
+            "cache must not touch cycle accounting"
+        );
+
+        let (yb_warm, _) = net.forward_batch(&xs, &policy, &cfg);
+        let (yb_cold, _) = cold.forward_batch(&xs, &policy, &cfg);
+        for (sw, sc) in yb_warm.iter().zip(&yb_cold) {
+            for (a, b) in sw.data().iter().zip(sc.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "batched warm drifted from cold");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn policy_precision_change_never_serves_a_stale_bank() {
+    // the regression the cache key exists for: run warm at FxP-16, flip the
+    // layer policy to FxP-8, and the next forward must match a
+    // never-cached network at FxP-8 bit for bit (the FxP-16 bank is a
+    // different key, not a stale hit)
+    let net = mlp("flip-mlp", &[10, 8, 4], ActFn::Sigmoid, 404);
+    let cfg = EngineConfig::pe64();
+    let mut rng = Xoshiro256::new(71);
+    let x = Tensor::vector(&rng.uniform_vec(10, -0.9, 0.9));
+
+    let mut policy =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp16, ExecMode::Accurate);
+    net.forward_wave(&x, &policy, &cfg); // warm every FxP-16 bank
+    assert!(net.weight_cache().quant_passes() > 0);
+
+    for i in 0..net.compute_layers() {
+        policy.layer_mut(i).precision = Precision::Fxp8;
+    }
+    let (y_flipped, _) = net.forward_wave(&x, &policy, &cfg);
+    let fresh = net.clone();
+    let (y_fresh, _) = fresh.forward_wave(&x, &policy, &cfg);
+    for (a, b) in y_flipped.data().iter().zip(y_fresh.data()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "stale FxP-16 bank served after policy flip");
+    }
+    // and the scalar reference agrees, closing the loop
+    let (y_scalar, _) = net.forward_cordic(&x, &policy);
+    for (a, b) in y_flipped.data().iter().zip(y_scalar.data()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "post-flip wave diverged from scalar");
+    }
+}
+
+#[test]
+fn forward_batch_quantises_each_layer_exactly_once() {
+    // the hoisted-bank contract: a B-sample batch performs exactly one
+    // quantisation pass per compute layer — not B, not one per chunk
+    for b in [1usize, 3, 8, 64, 71] {
+        let net = paper_mlp(83);
+        let cfg = EngineConfig::pe64();
+        let policy =
+            PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Approximate);
+        let mut rng = Xoshiro256::new(29);
+        let xs = inputs_for(&net, &mut rng, b);
+        net.forward_batch(&xs, &policy, &cfg);
+        assert_eq!(
+            net.weight_cache().quant_passes(),
+            net.compute_layers() as u64,
+            "B={b}: one quantisation pass per compute layer"
+        );
+        // a second batch is served entirely from the cache
+        net.forward_batch(&xs, &policy, &cfg);
+        assert_eq!(net.weight_cache().quant_passes(), net.compute_layers() as u64);
+        assert!(net.weight_cache().hits() >= net.compute_layers() as u64);
+    }
+}
+
+#[test]
+fn thread_count_is_functionally_invisible() {
+    // threads are a host-speed knob only: outputs, per-layer stats and
+    // every cycle-law number are identical at 1, 2, 5 and auto workers, on
+    // the wave and batched paths, for MLP and CNN layer kinds
+    let nets = [mlp("thr-mlp", &[14, 11, 6], ActFn::Gelu, 58), small_cnn("thr-cnn", PoolKind::Aad, 59)];
+    let mut rng = Xoshiro256::new(61);
+    for net in &nets {
+        let xs = inputs_for(net, &mut rng, 3);
+        for precision in [Precision::Fxp4, Precision::Fxp8, Precision::Fxp16] {
+            let policy =
+                PolicyTable::uniform(net.compute_layers(), precision, ExecMode::Accurate);
+            let serial = EngineConfig { pes: 8, threads: 1, ..EngineConfig::default() };
+            let (y1, s1) = net.forward_wave(&xs[0], &policy, &serial);
+            let (yb1, sb1) = net.forward_batch(&xs, &policy, &serial);
+            for threads in [2usize, 5, 0] {
+                let cfg = EngineConfig { threads, ..serial };
+                let (yn, sn) = net.forward_wave(&xs[0], &policy, &cfg);
+                for (a, b) in y1.data().iter().zip(yn.data()) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}: wave output");
+                }
+                assert_eq!(
+                    s1.total_pipeline_cycles(),
+                    sn.total_pipeline_cycles(),
+                    "threads={threads}: pipeline cycles"
+                );
+                assert_eq!(s1.total_mac_cycles(), sn.total_mac_cycles());
+                assert_eq!(s1.total_af_cycles(), sn.total_af_cycles());
+                assert_eq!(s1.total_waves(), sn.total_waves());
+                let (ybn, sbn) = net.forward_batch(&xs, &policy, &cfg);
+                for (sa, sb) in yb1.iter().zip(&ybn) {
+                    for (a, b) in sa.data().iter().zip(sb.data()) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "threads={threads}: batch output");
+                    }
+                }
+                assert_eq!(sb1.total_pipeline_cycles(), sbn.total_pipeline_cycles());
+            }
+        }
+    }
+}

@@ -14,19 +14,28 @@ envelope (schema tag `corvet.bench.v1`, see DESIGN.md §13) into
      silently;
   2. validates the envelope structure and numeric sanity of every result
      row (min <= median <= max, mean > 0, samples >= 1);
-  3. optionally compares mean_ns per result name against a checked-in
-     baseline directory (default scripts/bench_baseline/). A result that
-     regresses by more than the threshold fails the gate. Smoke-mode runs
+  3. compares mean_ns per result name against a checked-in baseline
+     directory (default scripts/bench_baseline/). A result that regresses
+     by more than the threshold fails the gate. Smoke-mode runs
      (CORVET_BENCH_SMOKE=1, `"smoke": true` in the envelope) use a much
      looser threshold because 3-sample timings are noisy; they only catch
-     order-of-magnitude blowups. When no baseline exists the comparison
-     is skipped (tolerant bootstrap) -- copy the bench-json artifacts into
-     the baseline directory to arm the gate.
+     order-of-magnitude blowups;
+  4. prints a one-line perf-trajectory delta per suite (geometric mean of
+     the per-row mean_ns ratios vs baseline) and appends the same lines to
+     `$GITHUB_STEP_SUMMARY` when CI provides one.
+
+The gate is **enforced** when `BENCH_GATE_REQUIRE_BASELINE=1` (CI's
+bench-smoke job sets it): a bench file with no checked-in baseline fails
+instead of being skipped, so new suites must land with a baseline and the
+trajectory can only be re-armed deliberately (see
+scripts/bench_baseline/README.md and scripts/capture_bench_baseline.sh).
+Without the variable, missing baselines are tolerated for local bootstrap.
 
 Exit status 0 when everything passes, 1 otherwise. Stdlib only.
 """
 
 import json
+import math
 import os
 import pathlib
 import re
@@ -36,6 +45,7 @@ import sys
 # one-off investigations without editing CI.
 THRESHOLD_PCT = float(os.environ.get("BENCH_GATE_THRESHOLD_PCT", "25"))
 SMOKE_THRESHOLD_PCT = float(os.environ.get("BENCH_GATE_SMOKE_THRESHOLD_PCT", "400"))
+REQUIRE_BASELINE = os.environ.get("BENCH_GATE_REQUIRE_BASELINE") == "1"
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 HARNESS_SRC = REPO_ROOT / "rust" / "src" / "bench_harness" / "mod.rs"
@@ -96,12 +106,15 @@ def check_file(path: pathlib.Path, schema: str, errors: list) -> dict | None:
     return doc
 
 
-def compare_to_baseline(doc: dict, base_path: pathlib.Path, errors: list):
+def compare_to_baseline(doc: dict, base_path: pathlib.Path, errors: list) -> str | None:
+    """Gate every matched row, returning the suite's one-line trajectory
+    delta (geometric mean of current/baseline mean_ns ratios), or None
+    when nothing matched."""
     try:
         base = json.loads(base_path.read_text())
     except (OSError, json.JSONDecodeError) as e:
-        print(f"  baseline {base_path.name} unreadable ({e}); skipping comparison")
-        return
+        errors.append(f"{base_path.name}: baseline unreadable ({e})")
+        return None
     smoke = bool(doc.get("smoke"))
     threshold = SMOKE_THRESHOLD_PCT if smoke else THRESHOLD_PCT
     base_means = {
@@ -109,11 +122,13 @@ def compare_to_baseline(doc: dict, base_path: pathlib.Path, errors: list):
         for r in base.get("results", [])
         if isinstance(r, dict) and isinstance(r.get("mean_ns"), (int, float))
     }
+    log_ratios = []
     for r in doc.get("results", []):
         name, mean = r.get("name"), r.get("mean_ns")
         old = base_means.get(name)
-        if old is None or not isinstance(mean, (int, float)) or old <= 0:
+        if old is None or not isinstance(mean, (int, float)) or old <= 0 or mean <= 0:
             continue
+        log_ratios.append(math.log(mean / old))
         delta_pct = 100.0 * (mean - old) / old
         tag = " (smoke)" if smoke else ""
         if delta_pct > threshold:
@@ -124,6 +139,27 @@ def compare_to_baseline(doc: dict, base_path: pathlib.Path, errors: list):
             )
         elif abs(delta_pct) > threshold / 2:
             print(f"  note: {doc.get('name')}/{name} moved {delta_pct:+.1f}%{tag}")
+    if not log_ratios:
+        return None
+    geo_pct = 100.0 * (math.exp(sum(log_ratios) / len(log_ratios)) - 1.0)
+    arrow = "faster" if geo_pct < 0 else "slower"
+    return (
+        f"trajectory {doc.get('name')}: {geo_pct:+.1f}% vs baseline "
+        f"({abs(geo_pct):.1f}% {arrow}, geomean over {len(log_ratios)} row(s)"
+        f"{', smoke' if smoke else ''})"
+    )
+
+
+def emit_summary(lines: list):
+    """Print trajectory lines and mirror them into the CI job summary."""
+    for line in lines:
+        print(f"  {line}")
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary and lines:
+        with open(summary, "a", encoding="utf-8") as f:
+            f.write("### Bench perf trajectory\n\n")
+            for line in lines:
+                f.write(f"- {line}\n")
 
 
 def main(argv: list) -> int:
@@ -137,9 +173,11 @@ def main(argv: list) -> int:
         print(f"bench_gate: no BENCH_*.json files in {bench_dir}")
         return 1
     schema = rust_bench_schema()
-    print(f"bench_gate: {len(files)} file(s), schema {schema!r}")
+    mode = "enforced" if REQUIRE_BASELINE else "tolerant"
+    print(f"bench_gate: {len(files)} file(s), schema {schema!r}, baselines {mode}")
 
     errors: list = []
+    trajectory: list = []
     for path in files:
         doc = check_file(path, schema, errors)
         n = len(doc.get("results", [])) if isinstance(doc, dict) else 0
@@ -148,10 +186,16 @@ def main(argv: list) -> int:
             continue
         base_path = baseline_dir / path.name
         if base_path.is_file():
-            compare_to_baseline(doc, base_path, errors)
+            line = compare_to_baseline(doc, base_path, errors)
+            if line:
+                trajectory.append(line)
+        elif REQUIRE_BASELINE:
+            fail(errors, path, f"no baseline in {baseline_dir} (gate is enforced; "
+                 "see scripts/bench_baseline/README.md)")
         else:
             print(f"  no baseline for {path.name}; validation only")
 
+    emit_summary(trajectory)
     if errors:
         print("\nbench_gate: FAIL")
         for e in errors:

@@ -1,0 +1,29 @@
+#!/usr/bin/env sh
+# Capture fresh bench baselines for the perf-trajectory gate.
+#
+# Runs every harness bench in full (non-smoke) release mode with the
+# single-thread kernel configuration the baselines describe, writes the
+# BENCH_<suite>.json envelopes into scripts/bench_baseline/, then replays
+# the gate against the freshly captured numbers as a self-check.
+#
+# Run on a quiet machine (no other load); review `git diff` before
+# committing — see scripts/bench_baseline/README.md for the re-arm policy.
+set -eu
+
+repo_root=$(CDPATH= cd -- "$(dirname -- "$0")/.." && pwd)
+baseline_dir="$repo_root/scripts/bench_baseline"
+
+export CORVET_BENCH_JSON_DIR="$baseline_dir"
+export CORVET_BENCH_THREADS="${CORVET_BENCH_THREADS:-1}"
+unset CORVET_BENCH_SMOKE || true
+
+cd "$repo_root/rust"
+for suite in forward_wave serve_wave packed_waves af_overlap; do
+    echo "==> cargo bench --bench $suite"
+    cargo bench --bench "$suite"
+done
+
+echo "==> replaying the gate against the new baselines"
+python3 "$repo_root/scripts/bench_gate.py" "$baseline_dir" "$baseline_dir"
+
+echo "baselines refreshed in $baseline_dir — review with: git diff scripts/bench_baseline/"
