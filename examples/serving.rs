@@ -11,7 +11,7 @@
 //!
 //! Run: `make artifacts && cargo run --release --example serving [--quick]`
 
-use corvet::coordinator::{GovernorConfig, Server, ServerConfig};
+use corvet::coordinator::{AdmissionConfig, GovernorConfig, Server, ServerConfig};
 use corvet::model::workloads::paper_mlp;
 use corvet::quant::Precision;
 use corvet::report::fnum;
@@ -47,6 +47,9 @@ fn main() -> anyhow::Result<()> {
     let config = ServerConfig {
         precision: Precision::Fxp8,
         governor: GovernorConfig { approx_threshold: 12, accurate_threshold: 3, pinned: None },
+        // the whole replay is submitted up front, so size the admission
+        // queue to hold it — this demo measures accuracy, not backpressure
+        admission: AdmissionConfig { queue_cap: 1024, ..Default::default() },
         ..Default::default()
     };
     let mut server = Server::start("artifacts", weights, config)?;
@@ -71,7 +74,7 @@ fn main() -> anyhow::Result<()> {
     let mut correct = 0usize;
     let mut served_approx = 0usize;
     for (idx, rx) in pending {
-        let resp = rx.recv()?;
+        let resp = rx.recv()??;
         if resp.class == data.test_y[idx] {
             correct += 1;
         }

@@ -1,0 +1,254 @@
+//! Bench: the continuous-batching admission layer under storm traffic —
+//! requests/s, lane occupancy, and p50/p99 latency vs offered load, for
+//! both admission modes over identical seeded traces. Captured results
+//! belong in EXPERIMENTS.md §serve_storm.
+//!
+//! Three sections:
+//!
+//! 1. closed-loop capacity calibration (burst-submit, drain) — the
+//!    absolute rates below are expressed relative to this, so the bench
+//!    lands in the same load regimes on any machine;
+//! 2. the A/B storm: open-loop Poisson replay at 0.5×/0.9×/1.3× capacity
+//!    through `--admission continuous` vs `oneshot` — throughput, tail
+//!    latency, and measured lane occupancy side by side;
+//! 3. backpressure under bursts: a bursty trace against a small
+//!    `--queue-cap` and a tight `--deadline-ms`, showing typed
+//!    `QueueFull`/`DeadlineExpired` rejections instead of silent drops,
+//!    plus a diurnal replay for the long-period load swing.
+//!
+//! JSON rows (corvet.bench.v1): `service_per_req` rows carry wall-clock
+//! ns per served request (so `per_second` is req/s); `p50_latency` /
+//! `p99_latency` rows carry that quantile in ns; `occupancy_milli` rows
+//! carry mean lane occupancy × 1000 (unitless, scaled so the gate's
+//! relative thresholds apply unchanged).
+
+use corvet::bench_harness::traffic::{bursty_trace, diurnal_trace, offered_rate_hz, poisson_trace};
+use corvet::bench_harness::{bench_threads, smoke_mode, write_bench_json, BenchReport, BenchResult};
+use corvet::coordinator::{AdmissionMode, MetricsSnapshot, Server, ServerConfig};
+use corvet::engine::EngineConfig;
+use corvet::model::workloads::paper_mlp;
+use corvet::model::Network;
+use corvet::quant::Precision;
+use corvet::report::fnum;
+use corvet::testutil::Xoshiro256;
+use std::time::{Duration, Instant};
+
+const INPUT_WIDTH: usize = 196;
+
+/// Outcome of one open-loop trace replay.
+struct StormRun {
+    served: u64,
+    rejected_full: u64,
+    rejected_deadline: u64,
+    wall: Duration,
+    snap: MetricsSnapshot,
+}
+
+/// Busy-accurate pacing: sleep for the bulk of the gap, spin the last
+/// stretch (std sleep alone overshoots sub-millisecond inter-arrivals).
+fn pace_until(t0: Instant, offset: Duration) {
+    loop {
+        let elapsed = t0.elapsed();
+        if elapsed >= offset {
+            return;
+        }
+        let left = offset - elapsed;
+        if left > Duration::from_micros(300) {
+            std::thread::sleep(left - Duration::from_micros(200));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// Replay `trace` open-loop against a fresh server in `mode`: submit on
+/// the trace clock regardless of completions, then drain every response.
+fn run_storm(
+    net: &Network,
+    engine: EngineConfig,
+    mode: AdmissionMode,
+    trace: &[Duration],
+    queue_cap: usize,
+    deadline: Option<Duration>,
+    inputs: &[Vec<f64>],
+) -> anyhow::Result<StormRun> {
+    let mut config = ServerConfig { precision: Precision::Fxp8, ..Default::default() };
+    config.admission.mode = mode;
+    config.admission.queue_cap = queue_cap;
+    config.admission.deadline = deadline;
+    let mut server = Server::start_wave(net.clone(), engine, config)?;
+
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(trace.len());
+    for (i, &offset) in trace.iter().enumerate() {
+        pace_until(t0, offset);
+        pending.push(server.submit(inputs[i % inputs.len()].clone())?);
+    }
+    let (mut served, mut rejected_full, mut rejected_deadline) = (0u64, 0u64, 0u64);
+    for rx in pending {
+        match rx.recv()? {
+            Ok(_) => served += 1,
+            Err(rej) => match rej.reason {
+                corvet::coordinator::RejectReason::QueueFull { .. } => rejected_full += 1,
+                corvet::coordinator::RejectReason::DeadlineExpired { .. } => {
+                    rejected_deadline += 1
+                }
+            },
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = server.shutdown()?;
+    Ok(StormRun { served, rejected_full, rejected_deadline, wall, snap })
+}
+
+/// A synthetic result row: `mean_ns` carries the quantity named by `name`
+/// (see the module docs for the unit conventions).
+fn row(name: String, value_ns: f64) -> BenchResult {
+    // the gate requires strictly positive means; clamp degenerate values
+    // (e.g. sub-µs quantiles rounding to zero) to one
+    let value_ns = value_ns.max(1.0);
+    BenchResult {
+        name,
+        mean_ns: value_ns,
+        median_ns: value_ns,
+        stddev_ns: 0.0,
+        min_ns: value_ns,
+        max_ns: value_ns,
+        samples: 1,
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let net = paper_mlp(11);
+    let mut engine = EngineConfig::pe64();
+    engine.threads = bench_threads();
+    let smoke = smoke_mode();
+    let n = if smoke { 60 } else { 400 };
+    let mut rng = Xoshiro256::new(13);
+    let inputs: Vec<Vec<f64>> =
+        (0..64).map(|_| rng.uniform_vec(INPUT_WIDTH, -0.9, 0.9)).collect();
+    let mut rep = BenchReport::new();
+
+    // --- 1. closed-loop capacity calibration (everything queued at t0)
+    let n_cal = if smoke { 32 } else { 128 };
+    let burst_at_zero: Vec<Duration> = vec![Duration::ZERO; n_cal];
+    let cal = run_storm(
+        &net,
+        engine,
+        AdmissionMode::Continuous,
+        &burst_at_zero,
+        n_cal,
+        None,
+        &inputs,
+    )?;
+    let capacity_rps = cal.served as f64 / cal.wall.as_secs_f64();
+    println!(
+        "capacity calibration: {} req/s closed-loop ({} requests, occupancy {})",
+        fnum(capacity_rps),
+        cal.served,
+        fnum(cal.snap.mean_occupancy)
+    );
+
+    // --- 2. continuous vs oneshot over identical Poisson traces
+    let mults: &[f64] = if smoke { &[0.9] } else { &[0.5, 0.9, 1.3] };
+    println!("\nadmission A/B, Poisson open loop ({n} requests per cell):");
+    println!(
+        "  {:>5} {:>11} | {:>9} {:>9} {:>9} {:>9} | {:>9}",
+        "load", "mode", "req/s", "p50 ms", "p99 ms", "occ", "rejected"
+    );
+    for &mult in mults {
+        let rate = capacity_rps * mult;
+        let trace = poisson_trace(101, rate, n);
+        let mut per_mode: Vec<(AdmissionMode, StormRun)> = Vec::new();
+        for mode in [AdmissionMode::Continuous, AdmissionMode::OneShot] {
+            let run = run_storm(&net, engine, mode, &trace, 512, None, &inputs)?;
+            let rps = run.served as f64 / run.wall.as_secs_f64();
+            println!(
+                "  {:>4.1}x {:>11} | {:>9} {:>9} {:>9} {:>9} | {:>9}",
+                mult,
+                mode.to_string(),
+                fnum(rps),
+                fnum(run.snap.latency.p50_ms),
+                fnum(run.snap.latency.p99_ms),
+                fnum(run.snap.mean_occupancy),
+                run.rejected_full + run.rejected_deadline,
+            );
+            // name by load multiplier, not absolute rate: row names must
+            // be stable across machines for baseline comparison
+            let tag = format!("{mode} x{mult:.1}");
+            rep.push(row(
+                format!("{tag} service_per_req"),
+                run.wall.as_nanos() as f64 / run.served.max(1) as f64,
+            ));
+            rep.push(row(format!("{tag} p50_latency"), run.snap.latency.p50_ms * 1e6));
+            rep.push(row(format!("{tag} p99_latency"), run.snap.latency.p99_ms * 1e6));
+            rep.push(row(format!("{tag} occupancy_milli"), run.snap.mean_occupancy * 1e3));
+            per_mode.push((mode, run));
+        }
+        let cont = &per_mode[0].1;
+        let ones = &per_mode[1].1;
+        let cont_rps = cont.served as f64 / cont.wall.as_secs_f64();
+        let ones_rps = ones.served as f64 / ones.wall.as_secs_f64();
+        println!(
+            "        continuous/oneshot: {}x throughput, p99 {} vs {} ms",
+            fnum(cont_rps / ones_rps.max(1e-9)),
+            fnum(cont.snap.latency.p99_ms),
+            fnum(ones.snap.latency.p99_ms),
+        );
+    }
+
+    // --- 3. backpressure: bursty overload against a small queue and a
+    // tight deadline — every unserved request gets a typed rejection
+    let burst_rate = capacity_rps * 2.0;
+    let bursty = bursty_trace(77, burst_rate, n, 16);
+    let run = run_storm(
+        &net,
+        engine,
+        AdmissionMode::Continuous,
+        &bursty,
+        16,
+        Some(Duration::from_millis(50)),
+        &inputs,
+    )?;
+    println!(
+        "\nbursty overload (2x capacity, queue_cap 16, deadline 50 ms, realised {} req/s):",
+        fnum(offered_rate_hz(&bursty))
+    );
+    println!(
+        "  served {} | rejected: queue_full {} deadline {} | accounted {}/{}",
+        run.served,
+        run.rejected_full,
+        run.rejected_deadline,
+        run.served + run.rejected_full + run.rejected_deadline,
+        n,
+    );
+    assert_eq!(
+        run.served + run.rejected_full + run.rejected_deadline,
+        n as u64,
+        "every request must resolve to exactly one typed outcome"
+    );
+    rep.push(row(
+        "bursty 2x served_per_req".to_string(),
+        run.wall.as_nanos() as f64 / run.served.max(1) as f64,
+    ));
+
+    let diurnal = diurnal_trace(55, capacity_rps * 0.8, 0.8, Duration::from_secs(1), n);
+    let run = run_storm(&net, engine, AdmissionMode::Continuous, &diurnal, 512, None, &inputs)?;
+    println!(
+        "diurnal swing (0.8x capacity ± 80%): {} req/s, p99 {} ms, occupancy {}",
+        fnum(run.served as f64 / run.wall.as_secs_f64()),
+        fnum(run.snap.latency.p99_ms),
+        fnum(run.snap.mean_occupancy),
+    );
+    rep.push(row(
+        "diurnal 0.8x service_per_req".to_string(),
+        run.wall.as_nanos() as f64 / run.served.max(1) as f64,
+    ));
+
+    print!("{}", rep.render("serve_storm"));
+    match write_bench_json("serve_storm", &rep) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench JSON not written: {e}"),
+    }
+    Ok(())
+}

@@ -14,7 +14,7 @@
 //! 3. end-to-end `Server` + `WaveBackend` requests/s vs `max_batch`.
 
 use corvet::bench_harness::{bench_threads, write_bench_json, BenchReport, Bencher};
-use corvet::coordinator::{BatcherConfig, Server, ServerConfig};
+use corvet::coordinator::{AdmissionMode, BatcherConfig, Server, ServerConfig};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::EngineConfig;
 use corvet::ir::{graph_batch_occupancy, workloads};
@@ -100,12 +100,17 @@ fn main() -> anyhow::Result<()> {
     for max_batch in [1usize, 8, 32] {
         let mut config = ServerConfig { precision: Precision::Fxp8, ..Default::default() };
         config.batcher = BatcherConfig { max_batch, ..Default::default() };
+        // one-shot admission so max_batch stays the knob under test
+        // (continuous mode sizes chunks from the backend hint instead);
+        // serve_storm benches the admission modes against each other
+        config.admission.mode = AdmissionMode::OneShot;
+        config.admission.queue_cap = inputs.len();
         let mut server = Server::start_wave(net.clone(), cfg, config)?;
         let t0 = std::time::Instant::now();
         let pending: Vec<_> =
             inputs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
         for rx in pending {
-            rx.recv()?;
+            rx.recv()??;
         }
         let wall = t0.elapsed().as_secs_f64();
         let snap = server.shutdown()?;

@@ -3,7 +3,7 @@
 //! throughput. Skips gracefully when artifacts are not built.
 
 use corvet::bench_harness::{BenchReport, Bencher};
-use corvet::coordinator::{BatcherConfig, Server, ServerConfig};
+use corvet::coordinator::{AdmissionMode, BatcherConfig, Server, ServerConfig};
 use corvet::cordic::mac::ExecMode;
 use corvet::model::workloads::paper_mlp;
 use corvet::quant::Precision;
@@ -59,12 +59,15 @@ fn main() -> anyhow::Result<()> {
         let (weights, _) = quantize_network(&net)?;
         let mut cfg = ServerConfig { precision: Precision::Fxp8, ..Default::default() };
         cfg.batcher = BatcherConfig { max_batch, ..Default::default() };
+        // one-shot admission keeps max_batch as the knob under test
+        cfg.admission.mode = AdmissionMode::OneShot;
+        cfg.admission.queue_cap = inputs.len();
         let mut server = Server::start("artifacts", weights, cfg)?;
         let t0 = std::time::Instant::now();
         let pending: Vec<_> =
             inputs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
         for rx in pending {
-            rx.recv()?;
+            rx.recv()??;
         }
         let wall = t0.elapsed().as_secs_f64();
         let snap = server.shutdown()?;

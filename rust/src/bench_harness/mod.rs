@@ -18,6 +18,8 @@ use crate::report::json::{envelope, Json, ToJson};
 use crate::report::{fnum, Table};
 use std::time::Instant;
 
+pub mod traffic;
+
 /// Schema tag stamped on every [`BenchReport::to_json`] export; CI's
 /// `scripts/bench_gate.py` cross-checks it against the emitted files.
 pub const BENCH_SCHEMA: &str = "corvet.bench.v1";

@@ -1,0 +1,163 @@
+//! Seeded traffic-trace generators for serving benchmarks
+//! (`benches/serve_storm.rs`, EXPERIMENTS.md §serve_storm).
+//!
+//! A trace is a sorted list of **arrival offsets** from the start of the
+//! run. An *open-loop* driver replays the offsets on a wall clock and
+//! submits regardless of completions (offered load is independent of the
+//! server — the regime where queues actually build and tail latency
+//! means something); a *closed-loop* driver ignores the clock and submits
+//! the next request when the previous response lands. All generators are
+//! deterministic in their seed, so continuous-vs-oneshot A/B runs replay
+//! byte-identical arrival processes.
+
+use crate::testutil::Xoshiro256;
+use std::time::Duration;
+
+/// One exponential inter-arrival sample at `rate_hz` (the memoryless gap
+/// of a Poisson process), via inverse-transform sampling.
+fn exp_gap(rng: &mut Xoshiro256, rate_hz: f64) -> f64 {
+    // next_f64 is [0, 1); flip to (0, 1] so ln never sees zero
+    let u = 1.0 - rng.next_f64();
+    -u.ln() / rate_hz
+}
+
+/// Poisson arrivals: `n` offsets with exponential inter-arrival times at
+/// mean rate `rate_hz`. The canonical open-loop offered-load model.
+///
+/// # Panics
+/// Panics if `rate_hz` is not finite and positive.
+pub fn poisson_trace(seed: u64, rate_hz: f64, n: usize) -> Vec<Duration> {
+    assert!(rate_hz.is_finite() && rate_hz > 0.0, "rate_hz must be positive");
+    let mut rng = Xoshiro256::new(seed);
+    let mut t = 0.0_f64;
+    (0..n)
+        .map(|_| {
+            t += exp_gap(&mut rng, rate_hz);
+            Duration::from_secs_f64(t)
+        })
+        .collect()
+}
+
+/// Bursty arrivals: requests land in back-to-back bursts of `burst_len`
+/// (one exponential "intra" gap at `burst_len × rate_hz` between members),
+/// with exponential quiet gaps between bursts sized so the long-run mean
+/// rate stays ≈ `rate_hz`. Stresses the admission queue's bound and the
+/// tail far harder than Poisson at the same offered load.
+///
+/// # Panics
+/// Panics if `rate_hz` is not finite and positive or `burst_len` is 0.
+pub fn bursty_trace(seed: u64, rate_hz: f64, n: usize, burst_len: usize) -> Vec<Duration> {
+    assert!(rate_hz.is_finite() && rate_hz > 0.0, "rate_hz must be positive");
+    assert!(burst_len > 0, "burst_len must be at least 1");
+    let mut rng = Xoshiro256::new(seed);
+    let mut t = 0.0_f64;
+    let mut out = Vec::with_capacity(n);
+    // split each burst's time budget: ~half in the quiet gap before it,
+    // ~half spread across the burst, keeping the mean rate at rate_hz
+    let burst_budget = burst_len as f64 / rate_hz;
+    while out.len() < n {
+        t += exp_gap(&mut rng, 2.0 / burst_budget); // quiet gap, mean budget/2
+        for _ in 0..burst_len.min(n - out.len()) {
+            t += exp_gap(&mut rng, 2.0 * burst_len as f64 / burst_budget);
+            out.push(Duration::from_secs_f64(t));
+        }
+    }
+    out
+}
+
+/// Diurnal arrivals: a non-homogeneous Poisson process whose rate swings
+/// sinusoidally between `(1 − depth)` and `(1 + depth)` times `rate_hz`
+/// over `period` — a day/night load curve compressed into a bench run.
+/// Sampled by Lewis–Shedler thinning against the peak rate, so it is
+/// exact, not a step approximation.
+///
+/// # Panics
+/// Panics if `rate_hz` or `period` is not positive, or `depth` is outside
+/// `[0, 1)`.
+pub fn diurnal_trace(
+    seed: u64,
+    rate_hz: f64,
+    depth: f64,
+    period: Duration,
+    n: usize,
+) -> Vec<Duration> {
+    assert!(rate_hz.is_finite() && rate_hz > 0.0, "rate_hz must be positive");
+    assert!((0.0..1.0).contains(&depth), "depth must be in [0, 1)");
+    let period_s = period.as_secs_f64();
+    assert!(period_s > 0.0, "period must be positive");
+    let peak = rate_hz * (1.0 + depth);
+    let mut rng = Xoshiro256::new(seed);
+    let mut t = 0.0_f64;
+    let mut out = Vec::with_capacity(n);
+    while out.len() < n {
+        t += exp_gap(&mut rng, peak);
+        let lambda_t =
+            rate_hz * (1.0 + depth * (std::f64::consts::TAU * t / period_s).sin());
+        if rng.next_f64() < lambda_t / peak {
+            out.push(Duration::from_secs_f64(t));
+        }
+    }
+    out
+}
+
+/// Mean offered rate of a trace in requests/second (for reporting; the
+/// generators' nominal `rate_hz` is the asymptotic value, this is the
+/// realised one).
+pub fn offered_rate_hz(trace: &[Duration]) -> f64 {
+    match trace.last() {
+        Some(last) if !last.is_zero() => trace.len() as f64 / last.as_secs_f64(),
+        _ => 0.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_sorted(trace: &[Duration]) {
+        assert!(trace.windows(2).all(|w| w[0] <= w[1]), "offsets must be nondecreasing");
+    }
+
+    #[test]
+    fn poisson_is_deterministic_sorted_and_near_the_nominal_rate() {
+        let a = poisson_trace(7, 1000.0, 4000);
+        let b = poisson_trace(7, 1000.0, 4000);
+        assert_eq!(a, b);
+        assert_ne!(a, poisson_trace(8, 1000.0, 4000));
+        assert_sorted(&a);
+        let rate = offered_rate_hz(&a);
+        assert!((rate - 1000.0).abs() < 100.0, "realised rate {rate} too far from 1000");
+    }
+
+    #[test]
+    fn bursty_keeps_the_long_run_rate_and_clusters_arrivals() {
+        let a = bursty_trace(11, 1000.0, 4000, 16);
+        assert_eq!(a, bursty_trace(11, 1000.0, 4000, 16));
+        assert_sorted(&a);
+        let rate = offered_rate_hz(&a);
+        assert!((rate - 1000.0).abs() < 150.0, "realised rate {rate} too far from 1000");
+        // clustered: the median gap is far below the mean gap
+        let gaps: Vec<f64> = a.windows(2).map(|w| (w[1] - w[0]).as_secs_f64()).collect();
+        let mut sorted = gaps.clone();
+        sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
+        let median = sorted[sorted.len() / 2];
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        assert!(median < 0.5 * mean, "median gap {median} vs mean {mean}: not bursty");
+    }
+
+    #[test]
+    fn diurnal_is_deterministic_and_near_the_nominal_rate() {
+        let a = diurnal_trace(3, 1000.0, 0.8, Duration::from_secs(2), 4000);
+        assert_eq!(a, diurnal_trace(3, 1000.0, 0.8, Duration::from_secs(2), 4000));
+        assert_sorted(&a);
+        let rate = offered_rate_hz(&a);
+        // over whole periods the sinusoid averages out to rate_hz
+        assert!((rate - 1000.0).abs() < 150.0, "realised rate {rate} too far from 1000");
+    }
+
+    #[test]
+    fn offered_rate_handles_degenerate_traces() {
+        assert_eq!(offered_rate_hz(&[]), 0.0);
+        assert_eq!(offered_rate_hz(&[Duration::ZERO]), 0.0);
+    }
+}

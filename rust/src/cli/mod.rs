@@ -91,9 +91,17 @@ COMMANDS:
   sensitivity [--quick] [--budget F] run the accuracy-sensitivity heuristic
   serve [--requests N] [--batch N] [--precision fxp8|fxp16]
         [--backend pjrt|wave] [--pes N] [--packing on|off] [--threads T]
+        [--admission continuous|oneshot] [--queue-cap N] [--deadline-ms D]
         [--artifacts DIR] [--quick] [--trace-out FILE]
                                      e2e serving demo: PJRT artifacts or the
-                                     native batched wave backend (no artifacts)
+                                     native batched wave backend (no artifacts).
+                                     --admission continuous joins arrivals to
+                                     the next wave chunk (DESIGN.md §15);
+                                     oneshot = legacy collect-then-drain.
+                                     --queue-cap bounds the admission queue
+                                     (0 = size to the request count);
+                                     --deadline-ms rejects requests that wait
+                                     longer than D (0 = no deadline)
   cluster [--workload tinyyolo|vgg16|vit-mlp] [--shards M] [--pes N]
           [--strategy pipeline|tensor|data] [--batches B] [--batch S]
           [--precision P] [--mode approx|accurate] [--packing on|off]

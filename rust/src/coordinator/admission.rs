@@ -1,0 +1,360 @@
+//! The continuous-batching admission layer: bounded queue, typed
+//! backpressure, per-request deadlines (DESIGN.md §15).
+//!
+//! The serving loop used to collect a batch, drain it, and only then look
+//! at the channel again — a request that missed a batch waited for the
+//! whole batch. This module replaces that one-shot shape with an explicit
+//! **admission queue** the scheduler pulls *wave chunks* from:
+//!
+//! * **Bounded with typed backpressure** — when the queue holds
+//!   `queue_cap` requests, new arrivals are refused with
+//!   [`RejectReason::QueueFull`] instead of queueing unboundedly (or being
+//!   dropped silently). The caller sees a typed [`Rejection`] on its
+//!   response channel and can back off.
+//! * **Deadline-aware** — each request may carry a deadline from ingress.
+//!   [`AdmissionQueue::take`] diverts entries whose deadline has already
+//!   passed into the caller's expired list *before* backend submit, so a
+//!   request that aged out while queued is rejected with
+//!   [`RejectReason::DeadlineExpired`] rather than executed and replied
+//!   late.
+//! * **Starvation-free** — dispatch order is strict FIFO over admitted,
+//!   unexpired requests: a request can only leave the queue by being
+//!   served or by missing its own deadline, never by being overtaken.
+//!
+//! [`AdmissionMode`] selects the scheduler built on top: `Continuous`
+//! dispatches a wave chunk as soon as lanes and work exist (newly admitted
+//! requests join the *next chunk* of an executing stream — the chunk-join
+//! law of [`crate::ir::BatchSession`]), `OneShot` reproduces the legacy
+//! collect-then-drain batching for A/B comparison (`benches/serve_storm.rs`).
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::time::{Duration, Instant};
+
+/// How the serving scheduler admits work into the backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AdmissionMode {
+    /// In-flight batching: dispatch wave chunks continuously; arrivals
+    /// join the next chunk of an already-executing stream.
+    #[default]
+    Continuous,
+    /// Legacy batching: collect up to `max_batch` (or until `max_wait`),
+    /// drain the whole batch, repeat.
+    OneShot,
+}
+
+impl AdmissionMode {
+    /// Parse the CLI spelling (`continuous` | `oneshot`).
+    pub fn parse(s: &str) -> Option<AdmissionMode> {
+        match s {
+            "continuous" => Some(AdmissionMode::Continuous),
+            "oneshot" => Some(AdmissionMode::OneShot),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for AdmissionMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            AdmissionMode::Continuous => "continuous",
+            AdmissionMode::OneShot => "oneshot",
+        })
+    }
+}
+
+/// Admission policy: scheduler mode, queue bound, default deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AdmissionConfig {
+    /// Scheduler shape (`serve --admission continuous|oneshot`).
+    pub mode: AdmissionMode,
+    /// Bounded queue capacity (`--queue-cap`); arrivals beyond it are
+    /// rejected with [`RejectReason::QueueFull`]. Clamped to ≥ 1.
+    pub queue_cap: usize,
+    /// Default per-request deadline applied at ingress when the submitter
+    /// did not set one (`--deadline-ms`); `None` = no deadline.
+    pub deadline: Option<Duration>,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig { mode: AdmissionMode::Continuous, queue_cap: 256, deadline: None }
+    }
+}
+
+/// Why a request was refused instead of served.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RejectReason {
+    /// The bounded admission queue was full at arrival.
+    QueueFull {
+        /// Queue depth observed at rejection.
+        depth: usize,
+        /// Configured queue capacity.
+        cap: usize,
+    },
+    /// The request's deadline passed while it waited in the queue; it was
+    /// rejected **before** backend submit, not executed and replied late.
+    DeadlineExpired {
+        /// How long the request had waited when the expiry was detected.
+        waited: Duration,
+    },
+}
+
+impl fmt::Display for RejectReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            RejectReason::QueueFull { depth, cap } => {
+                write!(f, "queue full ({depth}/{cap})")
+            }
+            RejectReason::DeadlineExpired { waited } => {
+                write!(f, "deadline expired after {:.1} ms queued", waited.as_secs_f64() * 1e3)
+            }
+        }
+    }
+}
+
+/// A typed backpressure response: the request was not served, and this is
+/// why. Sent on the same per-request channel a success would use, so
+/// callers always learn the outcome.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Rejection {
+    /// The refused request's id.
+    pub id: u64,
+    /// Why it was refused.
+    pub reason: RejectReason,
+}
+
+impl fmt::Display for Rejection {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "request {} rejected: {}", self.id, self.reason)
+    }
+}
+
+impl std::error::Error for Rejection {}
+
+/// One admitted entry: the payload plus its ingress instant and deadline.
+#[derive(Debug)]
+pub struct Admitted<T> {
+    /// The admitted payload.
+    pub item: T,
+    /// When the request entered the queue.
+    pub enqueued: Instant,
+    /// Absolute deadline, if any; at or past it the entry must be
+    /// rejected, not dispatched.
+    pub deadline: Option<Instant>,
+}
+
+impl<T> Admitted<T> {
+    /// Has this entry's deadline passed at `now`? (A deadline exactly at
+    /// `now` counts as expired, so a zero-duration deadline always
+    /// rejects.)
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline.is_some_and(|d| d <= now)
+    }
+}
+
+/// Monotonic admission counters, for drain-accurate accounting: every
+/// offered request ends up in exactly one of `admitted` (and later served
+/// or `expired`) or `rejected_full`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionCounters {
+    /// Requests accepted into the queue.
+    pub admitted: u64,
+    /// Requests refused at ingress (queue full).
+    pub rejected_full: u64,
+    /// Admitted requests whose deadline expired before dispatch.
+    pub expired: u64,
+}
+
+/// The bounded, deadline-aware FIFO the serving scheduler pulls wave
+/// chunks from. Single-threaded by design: owned by the server worker,
+/// fed from its control channel.
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    q: VecDeque<Admitted<T>>,
+    cap: usize,
+    counters: AdmissionCounters,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// New queue bounded at `cap` entries (clamped to ≥ 1).
+    pub fn new(cap: usize) -> Self {
+        AdmissionQueue { q: VecDeque::new(), cap: cap.max(1), counters: AdmissionCounters::default() }
+    }
+
+    /// Entries currently queued.
+    pub fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    /// Is the queue empty?
+    pub fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    /// The configured bound.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Offer one request. Admitted in FIFO order unless the queue is at
+    /// capacity, in which case the item is handed back (typed-rejection
+    /// path) and `rejected_full` counts it.
+    pub fn offer(&mut self, item: T, enqueued: Instant, deadline: Option<Instant>) -> Result<(), T> {
+        if self.q.len() >= self.cap {
+            self.counters.rejected_full += 1;
+            return Err(item);
+        }
+        self.counters.admitted += 1;
+        self.q.push_back(Admitted { item, enqueued, deadline });
+        Ok(())
+    }
+
+    /// Pull the next wave chunk: up to `max` FIFO entries whose deadline
+    /// has not passed at `now`. Entries found expired are diverted into
+    /// `expired_out` (and counted) instead of being dispatched — the
+    /// execution-time deadline check. FIFO order is preserved in both
+    /// outputs, so dispatch is starvation-free.
+    pub fn take(
+        &mut self,
+        now: Instant,
+        max: usize,
+        expired_out: &mut Vec<Admitted<T>>,
+    ) -> Vec<Admitted<T>> {
+        let mut out = Vec::new();
+        while out.len() < max {
+            match self.q.front() {
+                None => break,
+                Some(e) if e.expired(now) => {
+                    self.counters.expired += 1;
+                    expired_out.push(self.q.pop_front().expect("front exists"));
+                }
+                Some(_) => out.push(self.q.pop_front().expect("front exists")),
+            }
+        }
+        out
+    }
+
+    /// Drain every remaining entry in FIFO order (shutdown path); expired
+    /// entries are still diverted and counted.
+    pub fn drain_all(&mut self, now: Instant, expired_out: &mut Vec<Admitted<T>>) -> Vec<Admitted<T>> {
+        let n = self.q.len();
+        self.take(now, n, expired_out)
+    }
+
+    /// Ingress instant of the oldest queued entry (the batch-window clock
+    /// one-shot mode waits on).
+    pub fn oldest_enqueued(&self) -> Option<Instant> {
+        self.q.front().map(|e| e.enqueued)
+    }
+
+    /// The admission counters so far.
+    pub fn counters(&self) -> AdmissionCounters {
+        self.counters
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t0() -> Instant {
+        Instant::now()
+    }
+
+    #[test]
+    fn admits_fifo_and_bounds_at_capacity() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(2);
+        let now = t0();
+        assert!(q.offer(1, now, None).is_ok());
+        assert!(q.offer(2, now, None).is_ok());
+        // third offer bounces back with the payload intact
+        assert_eq!(q.offer(3, now, None), Err(3));
+        assert_eq!(q.len(), 2);
+        let mut expired = Vec::new();
+        let taken = q.take(now, 8, &mut expired);
+        assert_eq!(taken.iter().map(|e| e.item).collect::<Vec<_>>(), vec![1, 2]);
+        assert!(expired.is_empty());
+        let c = q.counters();
+        assert_eq!((c.admitted, c.rejected_full, c.expired), (2, 1, 0));
+    }
+
+    #[test]
+    fn take_respects_the_chunk_size_and_keeps_fifo_order() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(16);
+        let now = t0();
+        for i in 0..6 {
+            q.offer(i, now, None).unwrap();
+        }
+        let mut expired = Vec::new();
+        let a = q.take(now, 4, &mut expired);
+        let b = q.take(now, 4, &mut expired);
+        assert_eq!(a.iter().map(|e| e.item).collect::<Vec<_>>(), vec![0, 1, 2, 3]);
+        assert_eq!(b.iter().map(|e| e.item).collect::<Vec<_>>(), vec![4, 5]);
+    }
+
+    #[test]
+    fn expired_entries_divert_before_dispatch() {
+        let mut q: AdmissionQueue<&str> = AdmissionQueue::new(8);
+        let now = t0();
+        let later = now + Duration::from_millis(50);
+        q.offer("lives", now, Some(now + Duration::from_secs(60))).unwrap();
+        q.offer("dies", now, Some(now + Duration::from_millis(10))).unwrap();
+        q.offer("nodeadline", now, None).unwrap();
+        let mut expired = Vec::new();
+        let taken = q.take(later, 8, &mut expired);
+        assert_eq!(taken.iter().map(|e| e.item).collect::<Vec<_>>(), vec!["lives", "nodeadline"]);
+        assert_eq!(expired.iter().map(|e| e.item).collect::<Vec<_>>(), vec!["dies"]);
+        assert_eq!(q.counters().expired, 1);
+    }
+
+    #[test]
+    fn zero_duration_deadline_always_expires() {
+        let now = t0();
+        let e = Admitted { item: (), enqueued: now, deadline: Some(now) };
+        assert!(e.expired(now));
+        assert!(e.expired(now + Duration::from_nanos(1)));
+    }
+
+    #[test]
+    fn drain_all_empties_the_queue_with_accounting() {
+        let mut q: AdmissionQueue<u32> = AdmissionQueue::new(8);
+        let now = t0();
+        q.offer(1, now, Some(now)).unwrap(); // already expired
+        q.offer(2, now, None).unwrap();
+        q.offer(3, now, None).unwrap();
+        let mut expired = Vec::new();
+        let served = q.drain_all(now, &mut expired);
+        assert!(q.is_empty());
+        assert_eq!(served.len() + expired.len(), 3);
+        let c = q.counters();
+        assert_eq!(c.admitted, 3);
+        assert_eq!(c.expired, 1);
+    }
+
+    #[test]
+    fn capacity_clamps_to_one() {
+        let q: AdmissionQueue<()> = AdmissionQueue::new(0);
+        assert_eq!(q.capacity(), 1);
+    }
+
+    #[test]
+    fn mode_parses_the_cli_spellings() {
+        assert_eq!(AdmissionMode::parse("continuous"), Some(AdmissionMode::Continuous));
+        assert_eq!(AdmissionMode::parse("oneshot"), Some(AdmissionMode::OneShot));
+        assert_eq!(AdmissionMode::parse("sometimes"), None);
+        assert_eq!(AdmissionMode::Continuous.to_string(), "continuous");
+        assert_eq!(AdmissionMode::OneShot.to_string(), "oneshot");
+    }
+
+    #[test]
+    fn rejection_renders_a_useful_message() {
+        let r = Rejection { id: 7, reason: RejectReason::QueueFull { depth: 4, cap: 4 } };
+        assert!(r.to_string().contains("queue full (4/4)"));
+        let r = Rejection {
+            id: 8,
+            reason: RejectReason::DeadlineExpired { waited: Duration::from_millis(12) },
+        };
+        assert!(r.to_string().contains("deadline expired"));
+    }
+}

@@ -19,7 +19,7 @@
 
 use crate::cordic::mac::ExecMode;
 use crate::engine::{EngineConfig, VectorEngine};
-use crate::ir::WaveExecutor;
+use crate::ir::{BatchSession, WaveExecutor};
 use crate::model::{Network, Tensor};
 use crate::quant::{PolicyTable, Precision};
 use crate::runtime::{quantize_input, ArtifactRegistry, ModelWeights, PjrtRuntime};
@@ -41,6 +41,23 @@ pub trait ExecBackend {
 
     /// Human-readable descriptor for logs/metrics.
     fn describe(&self) -> String;
+
+    /// The chunk-granular submit hook (DESIGN.md §15): how many requests
+    /// the continuous admission scheduler should dispatch per wave chunk.
+    /// Backends that know their lane geometry size this so one chunk fills
+    /// the PE array at the narrowest layer; the default suits backends
+    /// with no lane model.
+    fn preferred_chunk(&self) -> usize {
+        8
+    }
+
+    /// MAC-lane occupancy of the most recent [`Self::execute`] call
+    /// (0..1), when the backend measures it — the wave backend reports
+    /// [`BatchRunStats::mean_occupancy`](crate::ir::BatchRunStats::mean_occupancy);
+    /// backends without a lane model return `None`.
+    fn lane_occupancy(&self) -> Option<f64> {
+        None
+    }
 }
 
 /// The AOT path: compiled HLO artifacts through the PJRT CPU client.
@@ -104,13 +121,17 @@ impl ExecBackend for PjrtBackend {
     }
 }
 
-/// The native path: batched CORDIC waves over the model itself.
+/// The native path: batched CORDIC waves over the model itself, executed
+/// through a persistent [`BatchSession`] so chunk-granular dispatches
+/// reuse one scratch arena and accumulate session statistics.
 pub struct WaveBackend {
     net: Network,
-    exec: WaveExecutor,
+    session: BatchSession,
     precision: Precision,
     input_width: usize,
     output_width: usize,
+    chunk_hint: usize,
+    last_occupancy: Option<f64>,
 }
 
 impl WaveBackend {
@@ -122,6 +143,20 @@ impl WaveBackend {
         let output_width =
             graph.layers.last().context("network lowered to an empty graph")?.cost.outputs
                 as usize;
+        // chunk-granular scheduling hint: enough samples per wave chunk to
+        // fill the packed PE array at the *narrowest* compute layer
+        // (B · min_outputs ≥ lane_slots — the graph_batch_occupancy law),
+        // clamped so a pathological 1-wide layer cannot demand an
+        // unboundedly large chunk
+        let min_outputs = graph
+            .layers
+            .iter()
+            .filter(|l| l.is_compute())
+            .map(|l| l.cost.outputs.max(1))
+            .min()
+            .unwrap_or(1) as usize;
+        let slots = engine.lane_slots(precision);
+        let chunk_hint = slots.div_ceil(min_outputs).clamp(1, 64);
         // prewarm the quantise-once banks so the first served request pays
         // no quantisation latency (the governor only switches modes, never
         // precisions, so this is the one precision serving will touch)
@@ -140,12 +175,20 @@ impl WaveBackend {
             }
         }
         Ok(WaveBackend {
-            exec: WaveExecutor::new(engine),
+            session: BatchSession::new(WaveExecutor::new(engine)),
             net,
             precision,
             input_width,
             output_width,
+            chunk_hint,
+            last_occupancy: None,
         })
+    }
+
+    /// Cumulative run statistics over every chunk this backend executed
+    /// (merged via [`crate::ir::BatchRunStats::merge`]).
+    pub fn session_stats(&self) -> &crate::ir::BatchRunStats {
+        self.session.stats()
     }
 
     /// The per-layer policy a governor mode programs: uniform at the
@@ -168,7 +211,7 @@ impl WaveBackend {
     /// the simulated serving price.
     pub fn estimated_batch_cycles(&self, batch: usize, mode: ExecMode) -> u64 {
         let graph = self.net.to_ir().with_policy(&self.policy(mode));
-        VectorEngine::new(self.exec.config)
+        VectorEngine::new(self.session.executor().config)
             .run_ir_batch(&graph, batch.max(1))
             .total_cycles
     }
@@ -196,7 +239,9 @@ impl ExecBackend for WaveBackend {
                 Ok(Tensor::from_vec(&self.net.input_shape, row.to_vec()))
             })
             .collect::<Result<_>>()?;
-        let (outs, _) = self.exec.forward_batch(&self.net, &inputs, &self.policy(mode));
+        let policy = self.policy(mode);
+        let (outs, chunk_stats) = self.session.submit_chunk(&self.net, &inputs, &policy);
+        self.last_occupancy = Some(chunk_stats.mean_occupancy());
         Ok(outs
             .iter()
             .flat_map(|t| t.data().iter().map(|&v| v as f32))
@@ -204,7 +249,20 @@ impl ExecBackend for WaveBackend {
     }
 
     fn describe(&self) -> String {
-        format!("wave({}, {} PEs, {})", self.precision, self.exec.config.pes, self.net.name)
+        format!(
+            "wave({}, {} PEs, {})",
+            self.precision,
+            self.session.executor().config.pes,
+            self.net.name
+        )
+    }
+
+    fn preferred_chunk(&self) -> usize {
+        self.chunk_hint
+    }
+
+    fn lane_occupancy(&self) -> Option<f64> {
+        self.last_occupancy
     }
 }
 
@@ -282,6 +340,44 @@ mod tests {
         let b8 = on.estimated_batch_cycles(8, ExecMode::Approximate);
         let b1 = on.estimated_batch_cycles(1, ExecMode::Approximate);
         assert!(b8 < 8 * b1, "packed dispatch must be sub-linear: {b8} vs 8x{b1}");
+    }
+
+    #[test]
+    fn wave_backend_chunk_hint_fills_the_narrowest_layer() {
+        let net = paper_mlp(3);
+        let backend = WaveBackend::new(net.clone(), EngineConfig::pe64(), Precision::Fxp8).unwrap();
+        // the hint is the graph_batch_occupancy law solved for B at the
+        // narrowest compute layer: B · min_outputs ≥ lane_slots
+        let graph = net.to_ir();
+        let min_outputs = graph
+            .layers
+            .iter()
+            .filter(|l| l.is_compute())
+            .map(|l| l.cost.outputs.max(1))
+            .min()
+            .unwrap() as usize;
+        let slots = EngineConfig::pe64().lane_slots(Precision::Fxp8);
+        assert_eq!(backend.preferred_chunk(), slots.div_ceil(min_outputs).clamp(1, 64));
+        let full = backend.preferred_chunk() * min_outputs;
+        assert!(full >= slots, "one chunk must fill the narrowest layer's slots");
+    }
+
+    #[test]
+    fn wave_backend_measures_occupancy_and_accumulates_session_stats() {
+        let mut backend =
+            WaveBackend::new(paper_mlp(7), EngineConfig::pe64(), Precision::Fxp8).unwrap();
+        assert_eq!(backend.lane_occupancy(), None, "no chunk executed yet");
+        let mut rng = Xoshiro256::new(11);
+        let chunk = backend.preferred_chunk();
+        let rows: Vec<Vec<f64>> = (0..chunk).map(|_| rng.uniform_vec(196, -0.9, 0.9)).collect();
+        let refs: Vec<&[f64]> = rows.iter().map(|r| r.as_slice()).collect();
+        backend.execute(&refs, ExecMode::Approximate).unwrap();
+        let occ = backend.lane_occupancy().expect("occupancy measured after execute");
+        assert!(occ > 0.0 && occ <= 1.0, "occupancy {occ} out of range");
+        backend.execute(&refs, ExecMode::Approximate).unwrap();
+        let s = backend.session_stats();
+        assert_eq!(s.batch, 2 * chunk, "session stats accumulate across chunks");
+        assert!(s.mean_occupancy() > 0.0);
     }
 
     #[test]

@@ -1,4 +1,7 @@
-//! Serving metrics: latency distributions, throughput, batch statistics.
+//! Serving metrics: latency distributions, throughput, batch statistics,
+//! and the admission layer's tail-latency accounting (DESIGN.md §15) —
+//! per-stage (queue / execute / reply) p50/p99/p999, queue-depth and
+//! lane-occupancy distributions, and the typed-rejection counters.
 //!
 //! Backed by the telemetry layer's [`LogHistogram`] (DESIGN.md §13), so the
 //! accumulator is **bounded memory** under sustained load — the old
@@ -14,6 +17,7 @@
 //! request — or any burst completing in the same instant — reported
 //! 0 req/s.
 
+use super::admission::RejectReason;
 use crate::report::json::{Json, ToJson};
 use crate::telemetry::{
     write_prometheus_counter, write_prometheus_gauge, write_prometheus_histogram, LogHistogram,
@@ -73,6 +77,20 @@ pub struct MetricsSnapshot {
     pub queue: LatencyStats,
     /// Execute-stage latency stats (one sample per dispatched batch).
     pub execute: LatencyStats,
+    /// Reply-stage latency stats (backend done → responses sent, one
+    /// sample per dispatched chunk).
+    pub reply: LatencyStats,
+    /// Requests rejected at admission: bounded queue full.
+    pub rejected_queue_full: u64,
+    /// Requests rejected at dispatch: deadline expired while queued.
+    pub rejected_deadline: u64,
+    /// Mean admission-queue depth observed at dispatch instants.
+    pub mean_queue_depth: f64,
+    /// Max admission-queue depth observed at dispatch instants.
+    pub max_queue_depth: u64,
+    /// Mean backend lane occupancy over dispatched chunks (0..1; 0 when
+    /// the backend does not report occupancy).
+    pub mean_occupancy: f64,
     /// Requests completed.
     pub completed: u64,
     /// Batches dispatched.
@@ -98,6 +116,12 @@ impl ToJson for MetricsSnapshot {
                 ("latency", self.latency.to_json()),
                 ("queue", self.queue.to_json()),
                 ("execute", self.execute.to_json()),
+                ("reply", self.reply.to_json()),
+                ("rejected_queue_full", Json::U64(self.rejected_queue_full)),
+                ("rejected_deadline", Json::U64(self.rejected_deadline)),
+                ("mean_queue_depth", Json::F64(self.mean_queue_depth)),
+                ("max_queue_depth", Json::U64(self.max_queue_depth)),
+                ("mean_occupancy", Json::F64(self.mean_occupancy)),
                 ("completed", Json::U64(self.completed)),
                 ("batches", Json::U64(self.batches)),
                 ("mean_batch", Json::F64(self.mean_batch)),
@@ -116,6 +140,11 @@ pub struct Metrics {
     latency_us: LogHistogram,
     queue_us: LogHistogram,
     execute_us: LogHistogram,
+    reply_us: LogHistogram,
+    depth: LogHistogram,
+    occupancy_bp: LogHistogram,
+    rejected_full: u64,
+    rejected_deadline: u64,
     completed: u64,
     batches: u64,
     batched_items: u64,
@@ -138,6 +167,11 @@ impl Metrics {
             latency_us: LogHistogram::new(),
             queue_us: LogHistogram::new(),
             execute_us: LogHistogram::new(),
+            reply_us: LogHistogram::new(),
+            depth: LogHistogram::new(),
+            occupancy_bp: LogHistogram::new(),
+            rejected_full: 0,
+            rejected_deadline: 0,
             completed: 0,
             batches: 0,
             batched_items: 0,
@@ -167,6 +201,33 @@ impl Metrics {
         self.execute_us.record(execute.as_micros() as u64);
     }
 
+    /// Record one chunk's reply-stage duration (backend done → responses
+    /// sent).
+    pub fn record_reply(&mut self, reply: Duration) {
+        self.reply_us.record(reply.as_micros() as u64);
+    }
+
+    /// Record the admission-queue depth observed at a dispatch instant.
+    pub fn record_depth(&mut self, depth: usize) {
+        self.depth.record(depth as u64);
+    }
+
+    /// Record one chunk's backend lane occupancy (0..1; stored in basis
+    /// points, so the histogram's relative error bound applies to the
+    /// fraction itself).
+    pub fn record_occupancy(&mut self, occupancy: f64) {
+        let bp = (occupancy.clamp(0.0, 1.0) * 1e4).round() as u64;
+        self.occupancy_bp.record(bp);
+    }
+
+    /// Record one typed rejection (the backpressure counters).
+    pub fn record_rejected(&mut self, reason: &RejectReason) {
+        match reason {
+            RejectReason::QueueFull { .. } => self.rejected_full += 1,
+            RejectReason::DeadlineExpired { .. } => self.rejected_deadline += 1,
+        }
+    }
+
     /// Record one dispatched batch.
     pub fn record_batch(&mut self, size: usize) {
         self.batches += 1;
@@ -186,6 +247,12 @@ impl Metrics {
             latency: LatencyStats::from_histogram(&self.latency_us),
             queue: LatencyStats::from_histogram(&self.queue_us),
             execute: LatencyStats::from_histogram(&self.execute_us),
+            reply: LatencyStats::from_histogram(&self.reply_us),
+            rejected_queue_full: self.rejected_full,
+            rejected_deadline: self.rejected_deadline,
+            mean_queue_depth: self.depth.mean(),
+            max_queue_depth: self.depth.max(),
+            mean_occupancy: self.occupancy_bp.mean() / 1e4,
             completed: self.completed,
             batches: self.batches,
             mean_batch: if self.batches == 0 {
@@ -206,9 +273,26 @@ impl Metrics {
         write_prometheus_histogram(&mut out, "corvet_request_latency_us", &self.latency_us);
         write_prometheus_histogram(&mut out, "corvet_request_queue_us", &self.queue_us);
         write_prometheus_histogram(&mut out, "corvet_batch_execute_us", &self.execute_us);
+        write_prometheus_histogram(&mut out, "corvet_chunk_reply_us", &self.reply_us);
+        write_prometheus_histogram(&mut out, "corvet_queue_depth", &self.depth);
+        write_prometheus_histogram(&mut out, "corvet_lane_occupancy_bp", &self.occupancy_bp);
         write_prometheus_counter(&mut out, "corvet_requests_completed", self.completed);
         write_prometheus_counter(&mut out, "corvet_batches_dispatched", self.batches);
         write_prometheus_counter(&mut out, "corvet_requests_approx", self.approx_served);
+        write_prometheus_counter(&mut out, "corvet_requests_rejected_queue_full", self.rejected_full);
+        write_prometheus_counter(&mut out, "corvet_requests_rejected_deadline", self.rejected_deadline);
+        // tail-latency gauges per stage: the p50/p99 a dashboard alerts on,
+        // precomputed from the stage histograms (same error bound)
+        for (stage, h) in [
+            ("request", &self.latency_us),
+            ("queue", &self.queue_us),
+            ("execute", &self.execute_us),
+            ("reply", &self.reply_us),
+        ] {
+            let s = LatencyStats::from_histogram(h);
+            write_prometheus_gauge(&mut out, &format!("corvet_{stage}_p50_ms"), s.p50_ms);
+            write_prometheus_gauge(&mut out, &format!("corvet_{stage}_p99_ms"), s.p99_ms);
+        }
         let snap_rps = self.snapshot().throughput_rps;
         write_prometheus_gauge(&mut out, "corvet_throughput_rps", snap_rps);
         out
@@ -337,14 +421,66 @@ mod tests {
             "corvet_request_latency_us",
             "corvet_request_queue_us",
             "corvet_batch_execute_us",
+            "corvet_chunk_reply_us",
+            "corvet_queue_depth",
+            "corvet_lane_occupancy_bp",
             "corvet_requests_completed",
             "corvet_batches_dispatched",
             "corvet_requests_approx",
+            "corvet_requests_rejected_queue_full",
+            "corvet_requests_rejected_deadline",
+            "corvet_request_p50_ms",
+            "corvet_request_p99_ms",
+            "corvet_queue_p50_ms",
+            "corvet_queue_p99_ms",
+            "corvet_execute_p50_ms",
+            "corvet_execute_p99_ms",
+            "corvet_reply_p50_ms",
+            "corvet_reply_p99_ms",
             "corvet_throughput_rps",
         ] {
             assert!(text.contains(family), "missing {family} in:\n{text}");
         }
         assert!(text.contains("corvet_requests_completed 1"));
+    }
+
+    #[test]
+    fn rejection_counters_split_by_reason() {
+        let mut m = Metrics::new();
+        m.record_rejected(&RejectReason::QueueFull { depth: 4, cap: 4 });
+        m.record_rejected(&RejectReason::QueueFull { depth: 4, cap: 4 });
+        m.record_rejected(&RejectReason::DeadlineExpired { waited: Duration::from_millis(9) });
+        let s = m.snapshot();
+        assert_eq!(s.rejected_queue_full, 2);
+        assert_eq!(s.rejected_deadline, 1);
+        let text = m.prometheus();
+        assert!(text.contains("corvet_requests_rejected_queue_full 2"));
+        assert!(text.contains("corvet_requests_rejected_deadline 1"));
+    }
+
+    #[test]
+    fn queue_depth_and_occupancy_summaries() {
+        let mut m = Metrics::new();
+        m.record_depth(2);
+        m.record_depth(6);
+        m.record_occupancy(0.5);
+        m.record_occupancy(1.0);
+        let s = m.snapshot();
+        assert!((s.mean_queue_depth - 4.0).abs() < 1e-9, "depth mean {}", s.mean_queue_depth);
+        assert_eq!(s.max_queue_depth, 6);
+        assert!((s.mean_occupancy - 0.75).abs() < 1e-9, "occupancy {}", s.mean_occupancy);
+        // occupancy is clamped into [0, 1]
+        m.record_occupancy(7.0);
+        assert!(m.snapshot().mean_occupancy <= 1.0);
+    }
+
+    #[test]
+    fn reply_stage_lands_in_the_snapshot() {
+        let mut m = Metrics::new();
+        m.record_reply(Duration::from_micros(800));
+        let s = m.snapshot();
+        assert_eq!(s.reply.count, 1);
+        assert!((s.reply.max_ms - 0.8).abs() < 1e-9);
     }
 
     #[test]

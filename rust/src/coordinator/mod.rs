@@ -6,10 +6,14 @@
 //! completion. On top of that single-model runtime this module adds what a
 //! production edge deployment needs:
 //!
-//! * [`DynamicBatcher`] — collect requests into batches matched to the
-//!   compiled artifact shapes (size/deadline policy), amortising per-call
-//!   overhead — the software analogue of the engine's vectorised,
-//!   time-multiplexed execution;
+//! * [`AdmissionQueue`] — the continuous-batching admission layer
+//!   (DESIGN.md §15): a bounded, deadline-aware FIFO with typed
+//!   backpressure ([`Rejection`]) that the scheduler pulls *wave chunks*
+//!   from, so newly admitted requests join the next chunk of an executing
+//!   stream instead of waiting out a whole batch;
+//! * [`DynamicBatcher`] — the legacy collect-then-drain batch collector
+//!   (size/deadline policy), kept as the `oneshot` admission mode's policy
+//!   source and for library callers;
 //! * [`PrecisionGovernor`] — the runtime accuracy–latency knob: switches
 //!   between approximate and accurate execution from queue pressure,
 //!   exactly the paper's "dynamic reconfiguration between approximate and
@@ -26,6 +30,7 @@
 //!
 //! No tokio in the vendored environment: std threads + mpsc channels.
 
+mod admission;
 mod backend;
 mod batcher;
 mod metrics;
@@ -33,9 +38,13 @@ mod policy;
 mod router;
 mod server;
 
+pub use admission::{
+    AdmissionConfig, AdmissionCounters, AdmissionMode, AdmissionQueue, Admitted, RejectReason,
+    Rejection,
+};
 pub use backend::{ExecBackend, PjrtBackend, WaveBackend};
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use policy::{GovernorConfig, PrecisionGovernor};
 pub use router::{RoutePolicy, ShardRouter, ShardedResponse, ShardedService};
-pub use server::{InferenceRequest, InferenceResponse, Server, ServerConfig};
+pub use server::{InferenceRequest, InferenceResponse, ServeResult, Server, ServerConfig};

@@ -1,15 +1,31 @@
-//! The serving loop: request channel → dynamic batcher → precision
-//! governor → [`ExecBackend`] execute → responses.
+//! The serving loop: request channel → bounded admission queue →
+//! precision governor → chunk-granular [`ExecBackend`] dispatch → typed
+//! responses.
 //!
 //! One worker thread owns the backend (the PJRT client is not shareable
 //! across threads in the vendored crate, and a single CPU client saturates
 //! the host anyway — the wave backend simply inherits the same layout);
-//! clients talk to it through an mpsc channel and get responses on
-//! per-request channels. Backends are therefore constructed *inside* the
-//! worker from a `Send` factory.
+//! clients talk to it through an mpsc channel and get typed outcomes
+//! ([`ServeResult`]) on per-request channels. Backends are therefore
+//! constructed *inside* the worker from a `Send` factory.
+//!
+//! **Admission scheduler** (DESIGN.md §15). Requests land in a bounded
+//! [`AdmissionQueue`]; arrivals past the bound are refused with a typed
+//! [`Rejection`] instead of queueing unboundedly, and a request whose
+//! deadline passes while queued is rejected *before* backend submit.
+//! Under [`AdmissionMode::Continuous`] the loop dispatches one **wave
+//! chunk** ([`ExecBackend::preferred_chunk`]) at a time and re-pumps the
+//! channel between chunks, so newly admitted requests join the next chunk
+//! of an executing stream — in-flight batching at wave-chunk granularity,
+//! with per-sample outputs bit-identical to one
+//! [`forward_batch`](crate::ir::WaveExecutor::forward_batch) over the same
+//! samples (the chunk-join law, pinned by `tests/ir_parity.rs`).
+//! [`AdmissionMode::OneShot`] reproduces the legacy collect-then-drain
+//! batching for A/B comparison (`benches/serve_storm.rs`).
 
+use super::admission::{AdmissionMode, AdmissionQueue, Admitted, RejectReason, Rejection};
 use super::backend::{ExecBackend, PjrtBackend, WaveBackend};
-use super::batcher::{BatcherConfig, DynamicBatcher};
+use super::batcher::BatcherConfig;
 use super::metrics::{Metrics, MetricsSnapshot};
 use super::policy::{GovernorConfig, PrecisionGovernor};
 use crate::cordic::mac::ExecMode;
@@ -21,7 +37,9 @@ use crate::telemetry;
 use anyhow::{Context, Result};
 use std::sync::mpsc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+pub use super::admission::AdmissionConfig;
 
 /// One inference request: a flat input vector in (-1, 1).
 #[derive(Debug)]
@@ -30,8 +48,11 @@ pub struct InferenceRequest {
     pub id: u64,
     /// Input features (length = model input width).
     pub input: Vec<f64>,
+    /// Absolute deadline carried from ingress; at or past it the request
+    /// is rejected, not served.
+    pub deadline: Option<Instant>,
     /// Respond on this channel.
-    pub respond: mpsc::Sender<InferenceResponse>,
+    pub respond: mpsc::Sender<ServeResult>,
 }
 
 /// The response.
@@ -49,15 +70,24 @@ pub struct InferenceResponse {
     pub mode: ExecMode,
 }
 
+/// Every request resolves to exactly one typed outcome: served
+/// ([`InferenceResponse`]) or refused ([`Rejection`] — queue full at
+/// ingress, or deadline expired while queued). No silent drops.
+pub type ServeResult = std::result::Result<InferenceResponse, Rejection>;
+
 /// Server configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct ServerConfig {
     /// Operand precision the backend serves at.
     pub precision: Precision,
-    /// Batching policy.
+    /// Batching policy: `max_batch`/`max_wait` bound the one-shot batch
+    /// window (continuous admission sizes chunks from the backend hint
+    /// instead).
     pub batcher: BatcherConfig,
     /// Precision-governor policy.
     pub governor: GovernorConfig,
+    /// Admission policy: scheduler mode, queue bound, default deadline.
+    pub admission: AdmissionConfig,
 }
 
 impl Default for ServerConfig {
@@ -66,6 +96,7 @@ impl Default for ServerConfig {
             precision: Precision::Fxp8,
             batcher: BatcherConfig::default(),
             governor: GovernorConfig::default(),
+            admission: AdmissionConfig::default(),
         }
     }
 }
@@ -83,6 +114,7 @@ pub struct Server {
     worker: Option<JoinHandle<Result<MetricsSnapshot>>>,
     backend_descriptor: String,
     next_id: u64,
+    default_deadline: Option<Duration>,
 }
 
 impl Server {
@@ -118,6 +150,7 @@ impl Server {
                 worker: Some(worker),
                 backend_descriptor: descriptor,
                 next_id: 0,
+                default_deadline: config.admission.deadline,
             }),
             Ok(Err(e)) => {
                 let _ = worker.join();
@@ -164,13 +197,34 @@ impl Server {
         )
     }
 
-    /// Submit a request; returns the receiver for its response.
-    pub fn submit(&mut self, input: Vec<f64>) -> Result<mpsc::Receiver<InferenceResponse>> {
+    /// Submit a request under the server's default deadline policy
+    /// ([`AdmissionConfig::deadline`]); returns the receiver for its typed
+    /// outcome.
+    pub fn submit(&mut self, input: Vec<f64>) -> Result<mpsc::Receiver<ServeResult>> {
+        let deadline = self.default_deadline;
+        self.submit_with_deadline(input, deadline)
+    }
+
+    /// Submit a request with an explicit deadline (`None` = never expires,
+    /// overriding the server default). The deadline is carried from this
+    /// ingress instant to the reply: expiry while queued yields
+    /// `Err(`[`Rejection`]`)` with [`RejectReason::DeadlineExpired`].
+    pub fn submit_with_deadline(
+        &mut self,
+        input: Vec<f64>,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<ServeResult>> {
         let (rtx, rrx) = mpsc::channel();
         self.next_id += 1;
-        let req = InferenceRequest { id: self.next_id, input, respond: rtx };
+        let now = Instant::now();
+        let req = InferenceRequest {
+            id: self.next_id,
+            input,
+            deadline: deadline.map(|d| now + d),
+            respond: rtx,
+        };
         self.tx
-            .send(Control::Request(Box::new(req), Instant::now()))
+            .send(Control::Request(Box::new(req), now))
             .map_err(|_| anyhow::anyhow!("server is down"))?;
         Ok(rrx)
     }
@@ -190,9 +244,10 @@ impl Server {
         rx.recv().context("server dropped prometheus request")
     }
 
-    /// Graceful shutdown: drains the queue, then returns the worker's
-    /// **post-drain** snapshot — requests served during the drain are
-    /// counted (snapshotting before the drain used to drop them).
+    /// Graceful shutdown: drains the admission queue (serving what still
+    /// meets its deadline, rejecting what does not), then returns the
+    /// worker's **post-drain** snapshot — every admitted request is
+    /// accounted as served or rejected, never lost.
     pub fn shutdown(mut self) -> Result<MetricsSnapshot> {
         self.tx.send(Control::Shutdown).ok();
         let worker = self.worker.take().expect("worker present until shutdown/drop");
@@ -209,9 +264,60 @@ impl Drop for Server {
     }
 }
 
-struct QueuedReq {
-    req: Box<InferenceRequest>,
-    enqueued: Instant,
+/// Apply one control message to the admission state. Queue-full arrivals
+/// get their typed rejection immediately — backpressure is synchronous
+/// with admission, not deferred to dispatch. Returns `true` on
+/// `Shutdown`.
+fn handle_control(
+    msg: Control,
+    queue: &mut AdmissionQueue<Box<InferenceRequest>>,
+    metrics: &mut Metrics,
+) -> bool {
+    match msg {
+        Control::Request(req, at) => {
+            let deadline = req.deadline;
+            if let Err(req) = queue.offer(req, at, deadline) {
+                let reason =
+                    RejectReason::QueueFull { depth: queue.len(), cap: queue.capacity() };
+                metrics.record_rejected(&reason);
+                let id = req.id;
+                req.respond.send(Err(Rejection { id, reason })).ok();
+            }
+            false
+        }
+        Control::Snapshot(tx) => {
+            tx.send(metrics.snapshot()).ok();
+            false
+        }
+        Control::Prometheus(tx) => {
+            tx.send(metrics.prometheus()).ok();
+            false
+        }
+        Control::Shutdown => true,
+    }
+}
+
+/// How long the admission pump may block before a dispatch is due:
+/// one-shot mode waits out the batch window (a full batch dispatches
+/// immediately); continuous mode never waits while work is queued — the
+/// next wave chunk is always due.
+fn dispatch_wait(
+    queue: &AdmissionQueue<Box<InferenceRequest>>,
+    config: &ServerConfig,
+    chunk_cap: usize,
+) -> Duration {
+    match config.admission.mode {
+        AdmissionMode::Continuous => Duration::ZERO,
+        AdmissionMode::OneShot => {
+            if queue.len() >= chunk_cap {
+                return Duration::ZERO;
+            }
+            match queue.oldest_enqueued() {
+                Some(t) => config.batcher.max_wait.saturating_sub(t.elapsed()),
+                None => Duration::ZERO,
+            }
+        }
+    }
 }
 
 fn serve_loop(
@@ -219,124 +325,139 @@ fn serve_loop(
     config: ServerConfig,
     rx: mpsc::Receiver<Control>,
 ) -> Result<MetricsSnapshot> {
-    let mut batcher: DynamicBatcher<QueuedReq> = DynamicBatcher::new(config.batcher);
+    let mut queue: AdmissionQueue<Box<InferenceRequest>> =
+        AdmissionQueue::new(config.admission.queue_cap);
     let mut governor = PrecisionGovernor::new(config.governor);
     let mut metrics = Metrics::new();
     let mut shutting_down = false;
+    // dispatch width: the backend's wave-chunk hint under continuous
+    // admission (keep lane_slots full), the legacy batch bound one-shot
+    let chunk_cap = match config.admission.mode {
+        AdmissionMode::Continuous => backend.preferred_chunk().max(1),
+        AdmissionMode::OneShot => config.batcher.max_batch.max(1),
+    };
 
     loop {
-        // wait for work (bounded by the batching deadline)
+        // 1 ── admit: pump the control channel into the bounded queue.
+        // Everything immediately available is drained, so arrivals join
+        // the *next* wave chunk and queue pressure is visible to both the
+        // governor and the backpressure bound.
         if !shutting_down {
-            let now = Instant::now();
-            let msg = if batcher.is_empty() {
-                rx.recv().ok()
+            let msg = if queue.is_empty() {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        shutting_down = true;
+                        None
+                    }
+                }
             } else {
-                match batcher.time_to_deadline(now) {
-                    Some(d) if !d.is_zero() && batcher.len() < config.batcher.max_batch => {
-                        match rx.recv_timeout(d) {
-                            Ok(m) => Some(m),
-                            Err(mpsc::RecvTimeoutError::Timeout) => None,
-                            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                                shutting_down = true;
-                                None
-                            }
+                let wait = dispatch_wait(&queue, &config, chunk_cap);
+                if wait.is_zero() {
+                    rx.try_recv().ok()
+                } else {
+                    match rx.recv_timeout(wait) {
+                        Ok(m) => Some(m),
+                        Err(mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            shutting_down = true;
+                            None
                         }
                     }
-                    _ => match rx.try_recv() {
-                        Ok(m) => Some(m),
-                        Err(_) => None,
-                    },
                 }
             };
-            match msg {
-                Some(Control::Request(req, at)) => {
-                    batcher.push(QueuedReq { req, enqueued: at }, at);
-                    // drain everything immediately available so the queue
-                    // pressure is visible to the precision governor (the
-                    // batcher caps each dispatch at max_batch regardless)
-                    while batcher.len() < 65_536 {
-                        match rx.try_recv() {
-                            Ok(Control::Request(r, at)) => {
-                                batcher.push(QueuedReq { req: r, enqueued: at }, at)
-                            }
-                            Ok(Control::Snapshot(tx)) => {
-                                tx.send(metrics.snapshot()).ok();
-                            }
-                            Ok(Control::Prometheus(tx)) => {
-                                tx.send(metrics.prometheus()).ok();
-                            }
-                            Ok(Control::Shutdown) => {
-                                shutting_down = true;
-                                break;
-                            }
-                            Err(_) => break,
-                        }
+            if let Some(m) = msg {
+                shutting_down |= handle_control(m, &mut queue, &mut metrics);
+                while !shutting_down {
+                    match rx.try_recv() {
+                        Ok(m) => shutting_down |= handle_control(m, &mut queue, &mut metrics),
+                        Err(_) => break,
                     }
                 }
-                Some(Control::Snapshot(tx)) => {
-                    tx.send(metrics.snapshot()).ok();
-                    continue;
-                }
-                Some(Control::Prometheus(tx)) => {
-                    tx.send(metrics.prometheus()).ok();
-                    continue;
-                }
-                Some(Control::Shutdown) => {
-                    shutting_down = true;
-                }
-                None => {}
+            }
+        } else {
+            // draining: keep absorbing control traffic without blocking so
+            // requests racing shutdown are still admitted and accounted
+            while let Ok(m) = rx.try_recv() {
+                handle_control(m, &mut queue, &mut metrics);
             }
         }
 
-        if shutting_down && batcher.is_empty() {
+        if shutting_down && queue.is_empty() {
             return Ok(metrics.snapshot());
         }
 
+        // 2 ── schedule: is a wave chunk due?
         let now = Instant::now();
-        if !(batcher.ready(now) || (shutting_down && !batcher.is_empty())) {
+        let due = match config.admission.mode {
+            AdmissionMode::Continuous => !queue.is_empty(),
+            AdmissionMode::OneShot => {
+                (shutting_down && !queue.is_empty())
+                    || queue.len() >= chunk_cap
+                    || queue
+                        .oldest_enqueued()
+                        .is_some_and(|t| now.saturating_duration_since(t) >= config.batcher.max_wait)
+            }
+        };
+        if !due {
             continue;
         }
 
-        // dispatch one batch
-        let mode = governor.observe(batcher.len());
-        let batch = batcher.take_batch();
+        // 3 ── dispatch one wave chunk
+        metrics.record_depth(queue.len());
+        let mode = governor.observe(queue.len());
+        let mut expired: Vec<Admitted<Box<InferenceRequest>>> = Vec::new();
+        let chunk = queue.take(now, chunk_cap, &mut expired);
+
+        // execution-time deadline check: a request that aged out while
+        // queued is rejected BEFORE backend submit, never executed and
+        // replied late
+        for e in expired {
+            let reason = RejectReason::DeadlineExpired {
+                waited: now.saturating_duration_since(e.enqueued),
+            };
+            metrics.record_rejected(&reason);
+            let id = e.item.id;
+            e.item.respond.send(Err(Rejection { id, reason })).ok();
+        }
 
         // drop malformed requests here, with their id — the response
         // channel closes, surfacing the failure to that caller alone, and
         // one bad request cannot kill the dispatch or the worker (backends
         // still assert width as their own API contract)
         let width = backend.input_width();
-        let batch: Vec<QueuedReq> = batch
+        let chunk: Vec<Admitted<Box<InferenceRequest>>> = chunk
             .into_iter()
-            .filter(|q| {
-                let ok = q.req.input.len() == width;
+            .filter(|e| {
+                let ok = e.item.input.len() == width;
                 if !ok {
                     eprintln!(
                         "corvet-server: dropping request {}: input width {} != {}",
-                        q.req.id,
-                        q.req.input.len(),
+                        e.item.id,
+                        e.item.input.len(),
                         width
                     );
                 }
                 ok
             })
             .collect();
-        if batch.is_empty() {
+        if chunk.is_empty() {
             continue;
         }
-        metrics.record_batch(batch.len());
+        metrics.record_batch(chunk.len());
 
         let mut batch_span = telemetry::span("serve.batch");
-        batch_span.field_u64("batch", batch.len() as u64);
-        batch_span.field_str("mode", if mode == ExecMode::Approximate { "approx" } else { "accurate" });
+        batch_span.field_u64("batch", chunk.len() as u64);
+        batch_span
+            .field_str("mode", if mode == ExecMode::Approximate { "approx" } else { "accurate" });
 
         // queue stage: enqueue → this dispatch, one sample per request
         let dispatched = Instant::now();
-        for q in &batch {
-            metrics.record_queue(dispatched.duration_since(q.enqueued));
+        for e in &chunk {
+            metrics.record_queue(dispatched.duration_since(e.enqueued));
         }
 
-        let rows: Vec<&[f64]> = batch.iter().map(|q| q.req.input.as_slice()).collect();
+        let rows: Vec<&[f64]> = chunk.iter().map(|e| e.item.input.as_slice()).collect();
         let logits = {
             let _exec_span = telemetry::span("serve.execute");
             backend.execute(&rows, mode)?
@@ -344,8 +465,11 @@ fn serve_loop(
         let classes = backend.output_width();
         let done = Instant::now();
         metrics.record_execute(done.duration_since(dispatched));
+        if let Some(occ) = backend.lane_occupancy() {
+            metrics.record_occupancy(occ);
+        }
         let _reply_span = telemetry::span("serve.reply");
-        for (i, q) in batch.into_iter().enumerate() {
+        for (i, e) in chunk.into_iter().enumerate() {
             let l = logits[i * classes..(i + 1) * classes].to_vec();
             let class = l
                 .iter()
@@ -353,12 +477,13 @@ fn serve_loop(
                 .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                 .map(|(i, _)| i)
                 .unwrap_or(0);
-            let latency = done.duration_since(q.enqueued);
+            let latency = done.duration_since(e.enqueued);
             metrics.record(latency, mode == ExecMode::Approximate, done);
-            q.req
+            e.item
                 .respond
-                .send(InferenceResponse { id: q.req.id, logits: l, class, latency, mode })
+                .send(Ok(InferenceResponse { id: e.item.id, logits: l, class, latency, mode }))
                 .ok();
         }
+        metrics.record_reply(done.elapsed());
     }
 }

@@ -409,6 +409,44 @@ impl BatchRunStats {
         let elements: u64 = self.per_layer.iter().map(|l| l.elements).sum();
         elements as f64 / slots as f64
     }
+
+    /// Fold another run's stats into this accumulator — the aggregation a
+    /// continuous-batching session ([`BatchSession`]) performs per wave
+    /// chunk (DESIGN.md §15). Per-layer counters (MACs, waves, cycles,
+    /// elements, chunks, lane slots, AF/pool costs, makespans) add; the
+    /// shared AF-block report recombines through
+    /// [`UtilizationReport::merge`], which reproduces the continuous-run
+    /// report exactly; `batch` accumulates the total samples. Descriptor
+    /// fields (`pes`, `packing`, `overlap`, per-layer `kind`/`outputs`)
+    /// must already match — both runs must come from the same graph on the
+    /// same engine configuration. Merging into an empty (`Default`)
+    /// accumulator clones `other`, so a session needs no priming run.
+    pub fn merge(&mut self, other: &BatchRunStats) {
+        if self.per_layer.is_empty() && self.batch == 0 {
+            *self = other.clone();
+            return;
+        }
+        assert_eq!(
+            self.per_layer.len(),
+            other.per_layer.len(),
+            "BatchRunStats::merge needs runs of the same graph"
+        );
+        debug_assert_eq!(self.pes, other.pes, "merged runs must share the engine config");
+        self.batch += other.batch;
+        self.af_util = self.af_util.merge(other.af_util);
+        for (a, b) in self.per_layer.iter_mut().zip(&other.per_layer) {
+            debug_assert_eq!(a.kind, b.kind, "merged runs must share the layer structure");
+            a.macs += b.macs;
+            a.waves += b.waves;
+            a.mac_cycles += b.mac_cycles;
+            a.elements += b.elements;
+            a.chunks += b.chunks;
+            a.lane_slots += b.lane_slots;
+            a.af_cost = a.af_cost.merge(b.af_cost);
+            a.pool_cost = a.pool_cost.merge(b.pool_cost);
+            a.pipeline_cycles += b.pipeline_cycles;
+        }
+    }
 }
 
 /// The analytic lane-occupancy law of the batched executor over an IR
@@ -567,6 +605,7 @@ impl WaveExecutor {
         let cfg = &self.config;
         let mut run_span = telemetry::span("wave.forward");
         run_span.field_u64("pes", cfg.pes as u64);
+        let mut arena = ExecArena::default();
         let mut x = input.clone();
         let mut stats =
             WaveRunStats { pes: cfg.pes, overlap: cfg.af_overlap, ..Default::default() };
@@ -586,7 +625,8 @@ impl WaveExecutor {
                     current = policy.layer(pidx);
                     let bank = net.weight_cache().dense_bank(pidx, d, current.precision);
                     pidx += 1;
-                    let (y, st) = wave_dense(d, &bank, &x, current, cfg, &mut sched, clock);
+                    let (y, st) =
+                        wave_dense(d, &bank, &x, current, cfg, &mut sched, clock, &mut arena);
                     x = y;
                     clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
@@ -595,7 +635,8 @@ impl WaveExecutor {
                     current = policy.layer(pidx);
                     let bank = net.weight_cache().conv_bank(pidx, c, current.precision);
                     pidx += 1;
-                    let (y, st) = wave_conv(c, &bank, &x, current, cfg, &mut sched, clock);
+                    let (y, st) =
+                        wave_conv(c, &bank, &x, current, cfg, &mut sched, clock, &mut arena);
                     x = y;
                     clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
@@ -664,6 +705,20 @@ impl WaveExecutor {
         inputs: &[Tensor],
         policy: &PolicyTable,
     ) -> (Vec<Tensor>, BatchRunStats) {
+        let mut arena = ExecArena::default();
+        self.forward_batch_in(net, inputs, policy, &mut arena)
+    }
+
+    /// [`Self::forward_batch`] with a caller-owned scratch arena, so a
+    /// [`BatchSession`] reuses one set of buffers across every submitted
+    /// chunk instead of reallocating per call.
+    fn forward_batch_in(
+        &self,
+        net: &Network,
+        inputs: &[Tensor],
+        policy: &PolicyTable,
+        arena: &mut ExecArena,
+    ) -> (Vec<Tensor>, BatchRunStats) {
         assert!(!inputs.is_empty(), "forward_batch needs at least one sample");
         for x in inputs {
             assert_eq!(x.shape(), &net.input_shape[..], "input shape mismatch");
@@ -703,7 +758,8 @@ impl WaveExecutor {
                     // batch quantises each layer's parameters exactly once
                     let bank = net.weight_cache().dense_bank(pidx, d, current.precision);
                     pidx += 1;
-                    let (ys, st) = batch_dense(d, &bank, &xs, current, cfg, &mut sched, clock);
+                    let (ys, st) =
+                        batch_dense(d, &bank, &xs, current, cfg, &mut sched, clock, arena);
                     xs = ys;
                     clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
@@ -712,7 +768,8 @@ impl WaveExecutor {
                     current = policy.layer(pidx);
                     let bank = net.weight_cache().conv_bank(pidx, c, current.precision);
                     pidx += 1;
-                    let (ys, st) = batch_conv(c, &bank, &xs, current, cfg, &mut sched, clock);
+                    let (ys, st) =
+                        batch_conv(c, &bank, &xs, current, cfg, &mut sched, clock, arena);
                     xs = ys;
                     clock += st.pipeline_cycles;
                     stats.per_layer.push(st);
@@ -778,14 +835,116 @@ impl WaveExecutor {
     }
 }
 
-/// Quantise an f64 bank into guard-format words through the datapath
-/// format — the exact quantisation the scalar path applies per element.
-/// Delegates to [`super::wcache::quantize_bank`], the one quantisation
-/// routine: parameter banks additionally cache their quantised form per
-/// `(layer, precision)` ([`WeightCache`]), input activations quantise here
-/// per call.
-fn quantize_bank(values: &[f64], policy: LayerPolicy) -> Vec<i64> {
-    super::wcache::quantize_bank(values, policy.precision)
+/// A continuous-batching execution session: the executor's **between-chunk
+/// admission point** (DESIGN.md §15). The serving scheduler partitions its
+/// admitted request stream into wave chunks and submits each through
+/// [`Self::submit_chunk`]; between submissions it is free to admit newly
+/// arrived requests into the next chunk — in-flight batching at wave-chunk
+/// granularity instead of batch granularity.
+///
+/// **Chunk-join law**: lanes are independent and every chunk replays the
+/// scalar operand order from a fresh AF clock — exactly what a standalone
+/// [`WaveExecutor::forward_batch`] call does — so per-sample outputs are
+/// bit-identical to one `forward_batch` over the same samples for *any*
+/// partition of the stream into chunks, and each chunk prices under the
+/// unchanged cycle laws (DESIGN.md §10/§12). Both halves are pinned by
+/// `tests/ir_parity.rs`. Cumulative statistics aggregate through
+/// [`BatchRunStats::merge`]; the session also carries the executor scratch
+/// arena across chunks, so steady-state serving allocates no per-chunk
+/// buffers.
+#[derive(Debug)]
+pub struct BatchSession {
+    exec: WaveExecutor,
+    arena: ExecArena,
+    stats: BatchRunStats,
+    chunks: u64,
+}
+
+impl BatchSession {
+    /// Open a session over `exec`'s engine configuration.
+    pub fn new(exec: WaveExecutor) -> Self {
+        BatchSession {
+            exec,
+            arena: ExecArena::default(),
+            stats: BatchRunStats::default(),
+            chunks: 0,
+        }
+    }
+
+    /// The executor this session schedules on.
+    pub fn executor(&self) -> &WaveExecutor {
+        &self.exec
+    }
+
+    /// Execute one wave chunk of admitted samples. Returns the per-sample
+    /// outputs (bit-identical to [`WaveExecutor::forward_batch`] over the
+    /// same samples) and the chunk's own run stats; the session's
+    /// cumulative stats absorb the chunk via [`BatchRunStats::merge`].
+    pub fn submit_chunk(
+        &mut self,
+        net: &Network,
+        inputs: &[Tensor],
+        policy: &PolicyTable,
+    ) -> (Vec<Tensor>, BatchRunStats) {
+        let (outs, st) = self.exec.forward_batch_in(net, inputs, policy, &mut self.arena);
+        self.stats.merge(&st);
+        self.chunks += 1;
+        (outs, st)
+    }
+
+    /// Wave chunks submitted so far.
+    pub fn chunks(&self) -> u64 {
+        self.chunks
+    }
+
+    /// Cumulative statistics over every submitted chunk.
+    pub fn stats(&self) -> &BatchRunStats {
+        &self.stats
+    }
+
+    /// Close the session, yielding the cumulative statistics.
+    pub fn into_stats(self) -> BatchRunStats {
+        self.stats
+    }
+}
+
+/// Reusable per-run scratch buffers (ROADMAP "raw-speed" leftover): the
+/// pre-activation accumulators and quantised activation words each kernel
+/// needs are allocated once per executor run — growing to the widest layer
+/// and reused across layers — instead of once per layer. Every kernel
+/// fully overwrites the region it borrows before reading it (phase A
+/// covers each accumulator span with a bias fill/copy), so reuse cannot
+/// leak state between layers: outputs are bit-identical with or without
+/// reuse, pinned by `tests/ir_parity.rs`. A [`BatchSession`] additionally
+/// carries one arena across chunks, eliminating steady-state serving
+/// allocations entirely.
+#[derive(Debug, Default)]
+struct ExecArena {
+    /// Pre-activation guard-word accumulators (phase A output).
+    acc: Vec<i64>,
+    /// Quantised activation words — single-sample kernels.
+    xg: Vec<i64>,
+    /// Quantised activation words per sample — batched kernels.
+    rows: Vec<Vec<i64>>,
+}
+
+impl ExecArena {
+    /// Quantise one sample's activations into the reusable word buffer —
+    /// the exact per-element quantisation the scalar path applies
+    /// ([`super::wcache::quantize_bank_into`]); parameter banks instead
+    /// come pre-quantised from the [`super::wcache::WeightCache`].
+    fn quantize(&mut self, values: &[f64], policy: LayerPolicy) {
+        super::wcache::quantize_bank_into(values, policy.precision, &mut self.xg);
+    }
+
+    /// Quantise a batch of samples into the reusable per-sample buffers.
+    fn quantize_rows(&mut self, xs: &[Tensor], policy: LayerPolicy) {
+        self.rows.truncate(xs.len());
+        self.rows.resize_with(xs.len(), Vec::new);
+        for (row, x) in self.rows.iter_mut().zip(xs) {
+            super::wcache::quantize_bank_into(x.data(), policy.precision, row);
+        }
+    }
 }
 
 // ---- phase-split fused kernels ---------------------------------------------
@@ -848,6 +1007,7 @@ fn use_packed_kernel(engine: &EngineConfig, policy: LayerPolicy, bank: &LayerBan
         && linear::swar_mac_ok(bank.all_direct, bank.min_tz, iters)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn wave_dense(
     d: &DenseParams,
     bank: &LayerBank,
@@ -856,6 +1016,7 @@ fn wave_dense(
     engine: &EngineConfig,
     sched: &mut AfScheduler,
     t0: u64,
+    arena: &mut ExecArena,
 ) -> (Tensor, WaveLayerStats) {
     assert_eq!(x.len(), d.inputs, "dense input width mismatch");
     let cfg = MacConfig::new(policy.precision, policy.mode);
@@ -864,7 +1025,7 @@ fn wave_dense(
     // each slot still runs the scalar guard-word MAC sequence
     let slots = engine.lane_slots(policy.precision);
     let mut af = MultiAfBlock::new(af_iters(policy.mode));
-    let xg = quantize_bank(x.data(), policy);
+    arena.quantize(x.data(), policy);
     let packed = use_packed_kernel(engine, policy, bank, iters);
 
     let macs = (d.inputs * d.outputs) as u64;
@@ -873,10 +1034,13 @@ fn wave_dense(
 
     // phase A: all pre-activation accumulators over the transposed bank —
     // each input activation is fetched once and broadcast across the lane
-    // run, whose weights are one contiguous bank row
-    let mut acc = vec![0i64; d.outputs];
+    // run, whose weights are one contiguous bank row. acc/xg are disjoint
+    // arena fields, reused across layers without reallocation.
+    arena.acc.clear();
+    arena.acc.resize(d.outputs, 0);
+    let (acc, xg) = (&mut arena.acc, &arena.xg);
     let workers = worker_count(engine.resolved_threads(), macs);
-    par_lanes(&mut acc, workers, |start, span| {
+    par_lanes(acc, workers, |start, span| {
         // biases enter the wide accumulators directly (plain adder input)
         span.copy_from_slice(&bank.biases[start..start + span.len()]);
         let mut z = vec![0i64; span.len()];
@@ -923,6 +1087,7 @@ fn wave_dense(
     (Tensor::from_vec(&[d.outputs], out), stats)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn wave_conv(
     c: &Conv2dParams,
     bank: &LayerBank,
@@ -931,6 +1096,7 @@ fn wave_conv(
     engine: &EngineConfig,
     sched: &mut AfScheduler,
     t0: u64,
+    arena: &mut ExecArena,
 ) -> (Tensor, WaveLayerStats) {
     let (in_ch, h, w) = (x.shape()[0], x.shape()[1], x.shape()[2]);
     assert_eq!(in_ch, c.in_ch, "conv input channels mismatch");
@@ -940,7 +1106,7 @@ fn wave_conv(
     let mut af = MultiAfBlock::new(af_iters(policy.mode));
     let (oh, ow) = (c.out_dim(h), c.out_dim(w));
     let positions = oh * ow;
-    let xg = quantize_bank(x.data(), policy);
+    arena.quantize(x.data(), policy);
 
     let macs = (positions * c.out_ch * c.in_ch * c.kernel * c.kernel) as u64;
     let mac_cycles = mac_wave_cycles(macs, slots, cfg.cycles_per_mac());
@@ -949,10 +1115,13 @@ fn wave_conv(
 
     // phase A over the flat (och, position) lane space: one kernel weight
     // word is fetched per tap and broadcast across the position run, whose
-    // window words gather through a per-run base table
-    let mut acc = vec![0i64; c.out_ch * positions];
+    // window words gather through a per-run base table. acc/xg reuse the
+    // arena across layers.
+    arena.acc.clear();
+    arena.acc.resize(c.out_ch * positions, 0);
+    let (acc, xg) = (&mut arena.acc, &arena.xg);
     let workers = worker_count(engine.resolved_threads(), macs);
-    par_lanes(&mut acc, workers, |start, span| {
+    par_lanes(acc, workers, |start, span| {
         let mut base = vec![0usize; positions.min(span.len())];
         let mut xrow = vec![0i64; positions.min(span.len())];
         let mut pos = 0usize;
@@ -1038,6 +1207,7 @@ fn wave_conv(
 // `tests/ir_parity.rs::prop_forward_batch_bit_identical_per_sample`, which
 // asserts batch == wave == scalar across random nets/policies/lane counts.
 
+#[allow(clippy::too_many_arguments)]
 fn batch_dense(
     d: &DenseParams,
     bank: &LayerBank,
@@ -1046,6 +1216,7 @@ fn batch_dense(
     engine: &EngineConfig,
     sched: &mut AfScheduler,
     t0: u64,
+    arena: &mut ExecArena,
 ) -> (Vec<Tensor>, BatchLayerStats) {
     let bsz = xs.len();
     let cfg = MacConfig::new(policy.precision, policy.mode);
@@ -1054,14 +1225,12 @@ fn batch_dense(
     let mut af = MultiAfBlock::new(af_iters(policy.mode));
     let packed = use_packed_kernel(engine, policy, bank, iters);
     // the shared parameter bank comes quantised from the cache — only the
-    // per-sample activations quantise here, once each
-    let xg: Vec<Vec<i64>> = xs
-        .iter()
-        .map(|x| {
-            assert_eq!(x.len(), d.inputs, "dense input width mismatch");
-            quantize_bank(x.data(), policy)
-        })
-        .collect();
+    // per-sample activations quantise here, once each, into the arena's
+    // reusable per-sample buffers
+    for x in xs {
+        assert_eq!(x.len(), d.inputs, "dense input width mismatch");
+    }
+    arena.quantize_rows(xs, policy);
 
     let elements = bsz * d.outputs;
     let macs = (elements * d.inputs) as u64;
@@ -1071,9 +1240,11 @@ fn batch_dense(
     // phase A over the flat sample-major element space: runs sharing a
     // sample broadcast that sample's activation word against a contiguous
     // row of the transposed bank
-    let mut acc = vec![0i64; elements];
+    arena.acc.clear();
+    arena.acc.resize(elements, 0);
+    let (acc, xg) = (&mut arena.acc, &arena.rows);
     let workers = worker_count(engine.resolved_threads(), macs);
-    par_lanes(&mut acc, workers, |start, span| {
+    par_lanes(acc, workers, |start, span| {
         let mut z = vec![0i64; d.outputs.min(span.len())];
         let mut pos = 0usize;
         while pos < span.len() {
@@ -1131,6 +1302,7 @@ fn batch_dense(
     (out.into_iter().map(|o| Tensor::from_vec(&[d.outputs], o)).collect(), stats)
 }
 
+#[allow(clippy::too_many_arguments)]
 fn batch_conv(
     c: &Conv2dParams,
     bank: &LayerBank,
@@ -1139,6 +1311,7 @@ fn batch_conv(
     engine: &EngineConfig,
     sched: &mut AfScheduler,
     t0: u64,
+    arena: &mut ExecArena,
 ) -> (Vec<Tensor>, BatchLayerStats) {
     let bsz = xs.len();
     let (in_ch, h, w) = (xs[0].shape()[0], xs[0].shape()[1], xs[0].shape()[2]);
@@ -1150,13 +1323,10 @@ fn batch_conv(
     let (oh, ow) = (c.out_dim(h), c.out_dim(w));
     let positions = oh * ow;
     let per_sample = c.out_ch * positions;
-    let xg: Vec<Vec<i64>> = xs
-        .iter()
-        .map(|x| {
-            assert_eq!(x.shape(), xs[0].shape(), "batch samples must share a shape");
-            quantize_bank(x.data(), policy)
-        })
-        .collect();
+    for x in xs {
+        assert_eq!(x.shape(), xs[0].shape(), "batch samples must share a shape");
+    }
+    arena.quantize_rows(xs, policy);
 
     let elements = bsz * per_sample;
     let macs = (elements * c.in_ch * c.kernel * c.kernel) as u64;
@@ -1166,9 +1336,11 @@ fn batch_conv(
     // phase A over the flat (sample, och, position) element space: runs
     // sharing (sample, och) broadcast one kernel word per tap against the
     // run's gathered window words
-    let mut acc = vec![0i64; elements];
+    arena.acc.clear();
+    arena.acc.resize(elements, 0);
+    let (acc, xg) = (&mut arena.acc, &arena.rows);
     let workers = worker_count(engine.resolved_threads(), macs);
-    par_lanes(&mut acc, workers, |start, span| {
+    par_lanes(acc, workers, |start, span| {
         let mut base = vec![0usize; positions.min(span.len())];
         let mut xrow = vec![0i64; positions.min(span.len())];
         let mut pos = 0usize;

@@ -42,7 +42,7 @@ mod tests;
 
 pub use exec::{
     graph_batch_occupancy, layer_pipeline_cycles, pipeline_ramp_cycles, BatchLayerStats,
-    BatchRunStats, WaveExecutor, WaveLayerStats, WaveRunStats,
+    BatchRunStats, BatchSession, WaveExecutor, WaveLayerStats, WaveRunStats,
 };
 pub use wcache::{LayerBank, WeightCache};
 

@@ -45,6 +45,16 @@ pub fn quantize_bank(values: &[f64], precision: Precision) -> Vec<i64> {
     values.iter().map(|&v| to_guard_raw(Fxp::from_f64(v, fmt))).collect()
 }
 
+/// [`quantize_bank`] into a caller-owned buffer, reusing its capacity —
+/// the executor arena's per-run scratch path. Same arithmetic, element for
+/// element; the buffer is cleared first, so the result is identical to a
+/// fresh [`quantize_bank`] call.
+pub fn quantize_bank_into(values: &[f64], precision: Precision, buf: &mut Vec<i64>) {
+    let fmt = precision.format();
+    buf.clear();
+    buf.extend(values.iter().map(|&v| to_guard_raw(Fxp::from_f64(v, fmt))));
+}
+
 /// One immutable quantised parameter bank: a compute layer's weights and
 /// biases in guard format at one precision, plus the packed-kernel gate
 /// facts derived while quantising.

@@ -4,7 +4,7 @@
 use anyhow::{bail, Context, Result};
 use corvet::cli::{Args, USAGE};
 use corvet::cluster::{parse_strategy, Cluster, ClusterConfig, InterconnectConfig};
-use corvet::coordinator::{Server, ServerConfig};
+use corvet::coordinator::{AdmissionMode, Server, ServerConfig};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::{EngineConfig, VectorEngine};
 use corvet::ir::{self, Graph};
@@ -380,12 +380,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .context("bad --precision")?;
     let max_batch: usize = args.num_or("batch", 8usize)?;
     let pes: usize = args.num_or("pes", 64usize)?;
+    let admission = args.opt_or("admission", "continuous");
+    let admission = AdmissionMode::parse(&admission)
+        .with_context(|| format!("bad --admission {admission:?} (continuous|oneshot)"))?;
+    let queue_cap: usize = args.num_or("queue-cap", 0usize)?;
+    let deadline_ms: u64 = args.num_or("deadline-ms", 0u64)?;
 
     let (data, net) = trained_mlp(quick);
     let fp32_acc = net.accuracy_f64(&data.test_x, &data.test_y);
 
     let mut config = ServerConfig { precision, ..Default::default() };
     config.batcher.max_batch = max_batch;
+    config.admission.mode = admission;
+    // the demo replays the whole request burst at once; an unset cap sizes
+    // the queue to it so backpressure is opt-in here
+    config.admission.queue_cap = if queue_cap == 0 { n_requests.max(1) } else { queue_cap };
+    config.admission.deadline =
+        (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
     let mut server = match backend.as_str() {
         "pjrt" => {
             let (weights, _) = quantize_network(&net)?;
@@ -427,24 +438,40 @@ fn cmd_serve(args: &Args) -> Result<()> {
         pending.push((idx, rx));
     }
     let mut correct = 0usize;
+    let mut rejected = 0usize;
     for (idx, rx) in pending {
-        let resp = rx.recv().context("response channel closed")?;
-        if resp.class == data.test_y[idx] {
-            correct += 1;
+        match rx.recv().context("response channel closed")? {
+            Ok(resp) => {
+                if resp.class == data.test_y[idx] {
+                    correct += 1;
+                }
+            }
+            Err(_) => rejected += 1,
         }
     }
     let wall = t0.elapsed();
     let snap = server.shutdown()?;
+    let served = n_requests - rejected;
 
     println!("backend             : {}", server_descriptor);
-    println!("requests            : {n_requests}");
-    println!("served accuracy     : {}", fnum(correct as f64 / n_requests as f64));
+    println!("requests            : {n_requests} (admission {admission})");
+    println!("served accuracy     : {}", fnum(correct as f64 / served.max(1) as f64));
     println!("fp32 accuracy       : {}", fnum(fp32_acc));
     println!("wall time           : {} ms", fnum(wall.as_secs_f64() * 1e3));
-    println!("throughput          : {} req/s", fnum(n_requests as f64 / wall.as_secs_f64()));
+    println!("throughput          : {} req/s", fnum(served as f64 / wall.as_secs_f64()));
     println!("latency mean/p50/p99: {} / {} / {} ms", fnum(snap.latency.mean_ms), fnum(snap.latency.p50_ms), fnum(snap.latency.p99_ms));
     println!("batches (mean size) : {} ({})", snap.batches, fnum(snap.mean_batch));
     println!("approx-served       : {}/{}", snap.approx_served, snap.completed);
+    println!(
+        "rejected            : {} queue-full, {} deadline-expired",
+        snap.rejected_queue_full, snap.rejected_deadline
+    );
+    println!(
+        "queue depth / occ   : mean {} max {} / {}",
+        fnum(snap.mean_queue_depth),
+        snap.max_queue_depth,
+        fnum(snap.mean_occupancy)
+    );
 
     let (sim_ms, sim_w) = tables::e2e_simulated();
     emit(tables::e2e_table(Some((sim_ms, sim_w))), args.has_flag("csv"));
@@ -471,7 +498,7 @@ fn cmd_metrics(args: &Args) -> Result<()> {
         pending.push(server.submit(input)?);
     }
     for rx in pending {
-        rx.recv().context("response channel closed")?;
+        rx.recv().context("response channel closed")?.context("request rejected")?;
     }
 
     // serving metrics first (latency/queue/execute histograms, counters),

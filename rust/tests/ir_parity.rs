@@ -922,3 +922,142 @@ fn thread_count_is_functionally_invisible() {
         }
     }
 }
+
+// ───────────── admission chunking: the chunk-join law (DESIGN.md §15) ─────────────
+
+/// Every way of partitioning `xs` into wave chunks through a
+/// [`BatchSession`] must reproduce, bit for bit, the outputs of one
+/// `forward_batch` over the whole set — the invariant that lets the
+/// continuous admission scheduler split a request stream at any chunk
+/// boundary without perturbing results.
+fn assert_chunk_join_bit_identical(
+    net: &Network,
+    xs: &[Tensor],
+    policy: &PolicyTable,
+    cfg: EngineConfig,
+    partition: &[usize],
+) {
+    use corvet::ir::{BatchSession, WaveExecutor};
+    assert_eq!(partition.iter().sum::<usize>(), xs.len(), "bad partition");
+    let (whole, whole_stats) = net.forward_batch(xs, policy, &cfg);
+
+    let mut session = BatchSession::new(WaveExecutor::new(cfg));
+    let mut joined: Vec<Tensor> = Vec::new();
+    let mut manual = corvet::ir::BatchRunStats::default();
+    let mut offset = 0usize;
+    for &span in partition {
+        let (outs, chunk_stats) = session.submit_chunk(net, &xs[offset..offset + span], policy);
+        assert_eq!(outs.len(), span);
+        assert_eq!(chunk_stats.batch, span);
+        manual.merge(&chunk_stats);
+        joined.extend(outs);
+        offset += span;
+    }
+    assert_eq!(session.chunks(), partition.len() as u64);
+    assert_eq!(session.stats().batch, xs.len(), "session stats absorb every chunk");
+    assert_eq!(manual.batch, session.stats().batch, "merge is reproducible");
+
+    for (i, (a, b)) in whole.iter().zip(&joined).enumerate() {
+        assert_eq!(a.shape(), b.shape());
+        for (j, (wa, wb)) in a.data().iter().zip(b.data()).enumerate() {
+            assert!(
+                wa.to_bits() == wb.to_bits(),
+                "{} partition {partition:?}: sample {i} output {j}: whole {wa} chunked {wb}",
+                net.name
+            );
+        }
+    }
+    // the per-sample outputs also pin to the scalar reference, so the
+    // session path cannot drift even if forward_batch itself regressed
+    for (x, yb) in xs.iter().zip(&joined) {
+        let (y_scalar, _) = net.forward_cordic(x, policy);
+        for (a, b) in y_scalar.data().iter().zip(yb.data()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{}: chunked vs scalar", net.name);
+        }
+    }
+    // MAC work is partition-invariant even though chunk/wave counts are
+    // not (lane packing differs per chunk size)
+    let macs = |s: &corvet::ir::BatchRunStats| -> u64 { s.per_layer.iter().map(|l| l.macs).sum() };
+    assert_eq!(macs(&whole_stats), macs(session.stats()), "total MACs are partition-invariant");
+}
+
+#[test]
+fn batch_session_chunk_join_is_bit_identical_to_forward_batch() {
+    let mut rng = Xoshiro256::new(41);
+    let net = mlp("chunk-join-mlp", &[12, 9, 5], ActFn::Tanh, 99);
+    let xs = inputs_for(&net, &mut rng, 5);
+    for precision in [Precision::Fxp16, Precision::Fxp8, Precision::Fxp4] {
+        let policy = PolicyTable::uniform(net.compute_layers(), precision, ExecMode::Accurate);
+        let cfg = EngineConfig { pes: 8, ..EngineConfig::default() };
+        for partition in [&[5usize][..], &[1, 4], &[2, 3], &[1, 1, 3], &[1, 2, 1, 1]] {
+            assert_chunk_join_bit_identical(&net, &xs, &policy, cfg, partition);
+        }
+    }
+}
+
+#[test]
+fn prop_chunk_join_bit_identical_on_random_partitions() {
+    check_prop("BatchSession chunk-join == forward_batch", |rng| {
+        let net = if rng.chance(0.5) {
+            let dims = vec![
+                rng.int_in(3, 12) as usize,
+                rng.int_in(2, 10) as usize,
+                rng.int_in(2, 6) as usize,
+            ];
+            mlp("randjoin", &dims, ActFn::Sigmoid, rng.int_in(0, 10_000) as u64)
+        } else {
+            rand_cnn(rng)
+        };
+        let policy = rand_policy(rng, net.compute_layers());
+        let b = rng.int_in(2, 7) as usize;
+        let xs = inputs_for(&net, rng, b);
+        let cfg = EngineConfig {
+            pes: [1usize, 3, 16][rng.index(3)],
+            packing: rng.chance(0.5),
+            af_overlap: rng.chance(0.5),
+            ..EngineConfig::default()
+        };
+        // random partition of b
+        let mut partition = Vec::new();
+        let mut left = b;
+        while left > 0 {
+            let take = (rng.int_in(1, left as i64) as usize).min(left);
+            partition.push(take);
+            left -= take;
+        }
+        assert_chunk_join_bit_identical(&net, &xs, &policy, cfg, &partition);
+        Ok(())
+    });
+}
+
+#[test]
+fn arena_reuse_across_heterogeneous_chunks_does_not_change_bits() {
+    // the per-chunk scratch arena is reused across layers and chunks
+    // (grown, never cleared between runs): interleave wide and narrow
+    // chunks so stale arena contents from a bigger run precede a smaller
+    // one, and re-run the first chunk — all outputs must stay bit-exact
+    let mut rng = Xoshiro256::new(43);
+    let net = mlp("arena-mlp", &[14, 10, 6, 4], ActFn::Gelu, 7);
+    let policy = PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+    let cfg = EngineConfig { pes: 8, ..EngineConfig::default() };
+    let wide = inputs_for(&net, &mut rng, 6);
+    let narrow = inputs_for(&net, &mut rng, 1);
+
+    use corvet::ir::{BatchSession, WaveExecutor};
+    let mut session = BatchSession::new(WaveExecutor::new(cfg));
+    let (first, _) = session.submit_chunk(&net, &wide, &policy);
+    let (small, _) = session.submit_chunk(&net, &narrow, &policy);
+    let (again, _) = session.submit_chunk(&net, &wide, &policy);
+
+    for (a, b) in first.iter().zip(&again) {
+        for (wa, wb) in a.data().iter().zip(b.data()) {
+            assert_eq!(wa.to_bits(), wb.to_bits(), "dirty arena must not leak into outputs");
+        }
+    }
+    let (y_scalar, _) = net.forward_cordic(&narrow[0], &policy);
+    for (a, b) in y_scalar.data().iter().zip(small[0].data()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "narrow chunk after wide chunk stays scalar-exact");
+    }
+    let stats = session.into_stats();
+    assert_eq!(stats.batch, 13, "6 + 1 + 6 samples absorbed");
+}

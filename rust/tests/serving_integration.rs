@@ -1,9 +1,16 @@
 //! Integration tests for the serving coordinator: the native wave-backend
 //! path (always runs — no artifacts needed) and the PJRT artifact path
 //! (skips gracefully when artifacts are not built) — batching, precision
-//! governor, metrics, graceful shutdown.
+//! governor, metrics, graceful shutdown, and the continuous-batching
+//! admission layer (DESIGN.md §15): typed backpressure, deadline expiry
+//! before backend submit, FIFO starvation-freedom, continuous-vs-oneshot
+//! occupancy.
 
-use corvet::coordinator::{BatcherConfig, GovernorConfig, Server, ServerConfig};
+use corvet::bench_harness::traffic::poisson_trace;
+use corvet::coordinator::{
+    AdmissionConfig, AdmissionMode, BatcherConfig, ExecBackend, GovernorConfig, RejectReason,
+    Server, ServerConfig, WaveBackend,
+};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::EngineConfig;
 use corvet::model::workloads::paper_mlp;
@@ -11,6 +18,8 @@ use corvet::model::Tensor;
 use corvet::quant::{PolicyTable, Precision};
 use corvet::runtime::quantize_network;
 use corvet::testutil::Xoshiro256;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 fn artifacts_dir() -> std::path::PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
@@ -18,6 +27,86 @@ fn artifacts_dir() -> std::path::PathBuf {
 
 fn have_artifacts() -> bool {
     artifacts_dir().join("manifest.tsv").exists()
+}
+
+/// A wave backend that sleeps through its first `execute` (a stalled
+/// worker) and logs the first element of every row it actually executes —
+/// lets tests build queue pressure deterministically and observe dispatch
+/// order and the deadline check at the backend-submit boundary.
+struct StallBackend {
+    inner: WaveBackend,
+    stall: Duration,
+    stalled: bool,
+    executed: Arc<Mutex<Vec<f64>>>,
+}
+
+impl ExecBackend for StallBackend {
+    fn input_width(&self) -> usize {
+        self.inner.input_width()
+    }
+    fn output_width(&self) -> usize {
+        self.inner.output_width()
+    }
+    fn execute(&mut self, batch: &[&[f64]], mode: ExecMode) -> anyhow::Result<Vec<f32>> {
+        if !self.stalled {
+            self.stalled = true;
+            std::thread::sleep(self.stall);
+        }
+        let mut log = self.executed.lock().unwrap();
+        for row in batch {
+            log.push(row[0]);
+        }
+        drop(log);
+        self.inner.execute(batch, mode)
+    }
+    fn describe(&self) -> String {
+        format!("stalled({})", self.inner.describe())
+    }
+    fn preferred_chunk(&self) -> usize {
+        self.inner.preferred_chunk()
+    }
+    fn lane_occupancy(&self) -> Option<f64> {
+        self.inner.lane_occupancy()
+    }
+}
+
+/// Start a wave server whose first dispatch stalls for `stall`, exposing
+/// the rows-executed log. Marker values go in `input[0]`.
+fn start_stalled(
+    mode: AdmissionMode,
+    queue_cap: usize,
+    max_batch: usize,
+    stall: Duration,
+) -> (Server, Arc<Mutex<Vec<f64>>>) {
+    let executed = Arc::new(Mutex::new(Vec::new()));
+    let log = executed.clone();
+    let config = ServerConfig {
+        precision: Precision::Fxp8,
+        batcher: BatcherConfig { max_batch, ..Default::default() },
+        governor: GovernorConfig {
+            approx_threshold: usize::MAX,
+            accurate_threshold: 0,
+            pinned: Some(ExecMode::Accurate),
+        },
+        admission: AdmissionConfig { mode, queue_cap, deadline: None },
+    };
+    let server = Server::start_with_backend(
+        move || {
+            let inner = WaveBackend::new(paper_mlp(29), EngineConfig::pe64(), Precision::Fxp8)?;
+            Ok(Box::new(StallBackend { inner, stall, stalled: false, executed: log })
+                as Box<dyn ExecBackend>)
+        },
+        config,
+    )
+    .unwrap();
+    (server, executed)
+}
+
+/// A 196-wide input whose first element is a recognisable marker.
+fn marked_input(rng: &mut Xoshiro256, marker: f64) -> Vec<f64> {
+    let mut v = rng.uniform_vec(196, -0.9, 0.9);
+    v[0] = marker;
+    v
 }
 
 #[test]
@@ -35,7 +124,7 @@ fn server_serves_batches_and_shuts_down() {
         .map(|_| server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap())
         .collect();
     for rx in pending {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").expect("served");
         assert_eq!(resp.logits.len(), 10);
         assert!(resp.class < 10);
     }
@@ -58,6 +147,7 @@ fn governor_switches_to_approximate_under_pressure() {
         precision: Precision::Fxp8,
         batcher: BatcherConfig::default(),
         governor: GovernorConfig { approx_threshold: 4, accurate_threshold: 0, pinned: None },
+        admission: AdmissionConfig::default(),
     };
     let mut server = Server::start(artifacts_dir(), weights, config).unwrap();
 
@@ -68,7 +158,7 @@ fn governor_switches_to_approximate_under_pressure() {
         .collect();
     let mut approx = 0;
     for rx in pending {
-        if rx.recv().unwrap().mode == ExecMode::Approximate {
+        if rx.recv().unwrap().expect("served").mode == ExecMode::Approximate {
             approx += 1;
         }
     }
@@ -93,6 +183,7 @@ fn pinned_governor_stays_accurate() {
             accurate_threshold: 0,
             pinned: Some(ExecMode::Accurate),
         },
+        admission: AdmissionConfig::default(),
     };
     let mut server = Server::start(artifacts_dir(), weights, config).unwrap();
     let mut rng = Xoshiro256::new(3);
@@ -100,7 +191,7 @@ fn pinned_governor_stays_accurate() {
         .map(|_| server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap())
         .collect();
     for rx in pending {
-        assert_eq!(rx.recv().unwrap().mode, ExecMode::Accurate);
+        assert_eq!(rx.recv().unwrap().expect("served").mode, ExecMode::Accurate);
     }
     let snap = server.shutdown().unwrap();
     assert_eq!(snap.approx_served, 0);
@@ -119,6 +210,7 @@ fn wave_backend_serves_correct_classes_without_artifacts() {
             accurate_threshold: 0,
             pinned: Some(ExecMode::Accurate),
         },
+        admission: AdmissionConfig::default(),
     };
     let mut server = Server::start_wave(net.clone(), EngineConfig::pe64(), config).unwrap();
 
@@ -129,7 +221,7 @@ fn wave_backend_serves_correct_classes_without_artifacts() {
     let pending: Vec<_> =
         inputs.iter().map(|x| server.submit(x.clone()).unwrap()).collect();
     for (input, rx) in inputs.iter().zip(pending) {
-        let resp = rx.recv().expect("response");
+        let resp = rx.recv().expect("response").expect("served");
         assert_eq!(resp.logits.len(), 10);
         assert_eq!(resp.mode, ExecMode::Accurate);
         let (y, _) = net.forward_cordic(&Tensor::vector(input), &policy);
@@ -150,6 +242,7 @@ fn wave_backend_governor_maps_modes_onto_cordic_budgets() {
         precision: Precision::Fxp8,
         batcher: BatcherConfig::default(),
         governor: GovernorConfig { approx_threshold: 4, accurate_threshold: 0, pinned: None },
+        admission: AdmissionConfig::default(),
     };
     let mut server = Server::start_wave(net, EngineConfig::pe64(), config).unwrap();
     let mut rng = Xoshiro256::new(7);
@@ -158,7 +251,7 @@ fn wave_backend_governor_maps_modes_onto_cordic_budgets() {
         .collect();
     let approx = pending
         .into_iter()
-        .filter(|rx| rx.recv().unwrap().mode == ExecMode::Approximate)
+        .filter(|rx| rx.recv().unwrap().expect("served").mode == ExecMode::Approximate)
         .count();
     let snap = server.shutdown().unwrap();
     assert!(approx > 0, "governor never engaged approximate mode");
@@ -175,8 +268,11 @@ fn malformed_request_is_dropped_without_killing_the_server() {
     let bad = server.submit(vec![0.1; 10]).unwrap(); // wrong width
     let good_after = server.submit(rng.uniform_vec(196, -0.9, 0.9)).unwrap();
 
-    assert!(good_before.recv().is_ok(), "valid request before the bad one is served");
-    assert!(good_after.recv().is_ok(), "server survives the malformed request");
+    assert!(
+        matches!(good_before.recv(), Ok(Ok(_))),
+        "valid request before the bad one is served"
+    );
+    assert!(matches!(good_after.recv(), Ok(Ok(_))), "server survives the malformed request");
     assert!(bad.recv().is_err(), "malformed request's channel closes unanswered");
     let snap = server.shutdown().unwrap();
     assert_eq!(snap.completed, 2, "only the two valid requests complete");
@@ -186,12 +282,14 @@ fn malformed_request_is_dropped_without_killing_the_server() {
 fn shutdown_snapshot_counts_requests_served_during_drain() {
     // regression: shutdown() used to snapshot metrics *before* sending
     // Control::Shutdown, so requests served during the drain were missing
-    // from the "final" snapshot
+    // from the "final" snapshot (one-shot mode so max_batch stays the
+    // dispatch width under test)
     let net = paper_mlp(19);
     let config = ServerConfig {
         precision: Precision::Fxp8,
         batcher: BatcherConfig { max_batch: 4, ..Default::default() },
         governor: GovernorConfig::default(),
+        admission: AdmissionConfig { mode: AdmissionMode::OneShot, ..Default::default() },
     };
     let mut server = Server::start_wave(net, EngineConfig::pe64(), config).unwrap();
     let mut rng = Xoshiro256::new(9);
@@ -205,7 +303,7 @@ fn shutdown_snapshot_counts_requests_served_during_drain() {
     assert_eq!(snap.completed, n as u64, "drained requests must be in the final snapshot");
     assert!(snap.batches >= (n / 4) as u64);
     for rx in pending {
-        let resp = rx.recv().expect("drained response delivered");
+        let resp = rx.recv().expect("drained response delivered").expect("served");
         assert!(resp.class < 10);
     }
 }
@@ -240,10 +338,188 @@ fn served_results_match_direct_runtime_execution() {
             accurate_threshold: 0,
             pinned: Some(ExecMode::Accurate),
         },
+        admission: AdmissionConfig::default(),
     };
     let mut server = Server::start(artifacts_dir(), weights, config).unwrap();
-    let resp = server.submit(input).unwrap().recv().unwrap();
+    let resp = server.submit(input).unwrap().recv().unwrap().expect("served");
     server.shutdown().unwrap();
 
     assert_eq!(resp.logits, direct, "served logits must equal direct execution");
+}
+
+// ───────────────────────── admission layer (DESIGN.md §15) ─────────────────────────
+
+#[test]
+fn stalled_worker_expires_queued_deadlines_before_backend_submit() {
+    // regression for the deadline law: a request whose deadline passes
+    // while the worker is stalled inside execute must be rejected at the
+    // next dispatch, BEFORE backend submit — the backend never sees it
+    let (mut server, executed) =
+        start_stalled(AdmissionMode::Continuous, 64, 8, Duration::from_millis(400));
+    let mut rng = Xoshiro256::new(21);
+
+    // A dispatches alone and stalls the worker inside execute
+    let a = server.submit(marked_input(&mut rng, 0.11)).unwrap();
+    std::thread::sleep(Duration::from_millis(120));
+    // B's 50 ms deadline expires during the remaining ~280 ms stall; C has
+    // no deadline and must be served after the stall
+    let b = server
+        .submit_with_deadline(marked_input(&mut rng, 0.22), Some(Duration::from_millis(50)))
+        .unwrap();
+    let c = server.submit(marked_input(&mut rng, 0.33)).unwrap();
+
+    assert!(a.recv().unwrap().is_ok(), "stalled request is still served");
+    let rej = b.recv().unwrap().expect_err("deadline must expire while queued");
+    assert!(
+        matches!(rej.reason, RejectReason::DeadlineExpired { waited } if waited >= Duration::from_millis(50)),
+        "wrong rejection: {rej}"
+    );
+    assert!(c.recv().unwrap().is_ok(), "no-deadline request rides the next chunk");
+
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.completed, 2);
+    assert_eq!(snap.rejected_deadline, 1);
+    assert_eq!(snap.rejected_queue_full, 0);
+    let log = executed.lock().unwrap();
+    assert!(log.contains(&0.11) && log.contains(&0.33), "served rows executed");
+    assert!(!log.contains(&0.22), "expired request must never reach the backend");
+}
+
+#[test]
+fn queue_cap_rejections_are_typed_and_counted() {
+    // worker stalls with request 1; 12 more arrive against queue_cap 4:
+    // exactly 4 admit, 8 bounce with QueueFull — and the snapshot's
+    // counters agree with the per-request outcomes
+    let (mut server, executed) =
+        start_stalled(AdmissionMode::Continuous, 4, 8, Duration::from_millis(300));
+    let mut rng = Xoshiro256::new(23);
+    let first = server.submit(marked_input(&mut rng, 0.0)).unwrap();
+    std::thread::sleep(Duration::from_millis(100));
+    let pending: Vec<_> = (1..=12)
+        .map(|i| server.submit(marked_input(&mut rng, i as f64 / 100.0)).unwrap())
+        .collect();
+
+    assert!(first.recv().unwrap().is_ok());
+    let (mut served, mut rejected_full) = (1u64, 0u64);
+    for rx in pending {
+        match rx.recv().unwrap() {
+            Ok(_) => served += 1,
+            Err(rej) => {
+                assert!(
+                    matches!(rej.reason, RejectReason::QueueFull { cap: 4, .. }),
+                    "wrong rejection: {rej}"
+                );
+                rejected_full += 1;
+            }
+        }
+    }
+    assert_eq!(served, 5, "stalled request + the 4 admitted");
+    assert_eq!(rejected_full, 8);
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.completed, served);
+    assert_eq!(snap.rejected_queue_full, rejected_full);
+    // starvation-freedom: the admitted requests executed in FIFO order
+    let log = executed.lock().unwrap();
+    let mut sorted = log.clone();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    assert_eq!(*log, sorted, "dispatch must be FIFO over admitted requests");
+}
+
+#[test]
+fn dispatch_is_fifo_across_wave_chunks() {
+    // starvation-freedom at chunk granularity: 30 requests queued behind a
+    // stall drain over several continuous chunks, and the backend sees the
+    // rows in exact submission order — no request is overtaken
+    let (mut server, executed) =
+        start_stalled(AdmissionMode::Continuous, 64, 8, Duration::from_millis(250));
+    let mut rng = Xoshiro256::new(25);
+    let first = server.submit(marked_input(&mut rng, 0.0)).unwrap();
+    std::thread::sleep(Duration::from_millis(80));
+    let pending: Vec<_> = (1..=30)
+        .map(|i| server.submit(marked_input(&mut rng, i as f64 / 100.0)).unwrap())
+        .collect();
+    assert!(first.recv().unwrap().is_ok());
+    for rx in pending {
+        assert!(rx.recv().unwrap().is_ok(), "no deadline, ample queue: all served");
+    }
+    let snap = server.shutdown().unwrap();
+    assert_eq!(snap.completed, 31);
+    assert!(snap.batches >= 3, "chunked dispatch expected, got {} batches", snap.batches);
+    let log = executed.lock().unwrap();
+    let expect: Vec<f64> = (0..=30).map(|i| i as f64 / 100.0).collect();
+    assert_eq!(*log, expect, "FIFO order must survive chunking");
+}
+
+#[test]
+fn continuous_admission_occupancy_is_at_least_oneshot_on_a_poisson_trace() {
+    // identical seeded Poisson arrivals (compressed so the whole trace
+    // lands inside the stall) through both admission modes: continuous
+    // dispatches backend-hint-sized wave chunks, one-shot drains batches
+    // of max_batch=2 — continuous must recover at least one-shot's mean
+    // lane occupancy, at the same served count
+    let trace = poisson_trace(31, 5_000.0, 24);
+    let run = |mode: AdmissionMode| {
+        let (mut server, _) = start_stalled(mode, 64, 2, Duration::from_millis(250));
+        let mut rng = Xoshiro256::new(33);
+        let t0 = std::time::Instant::now();
+        let pending: Vec<_> = trace
+            .iter()
+            .map(|&at| {
+                while t0.elapsed() < at / 10 {
+                    std::hint::spin_loop();
+                }
+                server.submit(marked_input(&mut rng, 0.5)).unwrap()
+            })
+            .collect();
+        for rx in pending {
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.completed, 24);
+        snap
+    };
+    let cont = run(AdmissionMode::Continuous);
+    let ones = run(AdmissionMode::OneShot);
+    assert!(cont.mean_occupancy > 0.0 && ones.mean_occupancy > 0.0);
+    assert!(
+        cont.mean_occupancy >= ones.mean_occupancy - 1e-9,
+        "continuous occupancy {} must be >= one-shot {}",
+        cont.mean_occupancy,
+        ones.mean_occupancy
+    );
+    assert!(
+        cont.mean_batch >= ones.mean_batch,
+        "continuous chunks {} must not be smaller than one-shot batches {}",
+        cont.mean_batch,
+        ones.mean_batch
+    );
+}
+
+#[test]
+fn shutdown_drains_with_accurate_reject_and_served_accounting() {
+    // flood a tiny queue behind a stall, then shut down before receiving
+    // anything: every submitted request must resolve to exactly one typed
+    // outcome, and the post-drain snapshot's counters must match them
+    let (mut server, _) =
+        start_stalled(AdmissionMode::Continuous, 8, 8, Duration::from_millis(200));
+    let mut rng = Xoshiro256::new(27);
+    let n = 20;
+    let pending: Vec<_> =
+        (0..n).map(|i| server.submit(marked_input(&mut rng, i as f64 / 100.0)).unwrap()).collect();
+    let snap = server.shutdown().unwrap();
+
+    let (mut served, mut rejected) = (0u64, 0u64);
+    for rx in pending {
+        match rx.recv().expect("every request gets exactly one outcome") {
+            Ok(_) => served += 1,
+            Err(_) => rejected += 1,
+        }
+    }
+    assert_eq!(served + rejected, n as u64, "no request may vanish");
+    assert_eq!(snap.completed, served, "snapshot must count the drain's served requests");
+    assert_eq!(
+        snap.rejected_queue_full + snap.rejected_deadline,
+        rejected,
+        "snapshot must count every typed rejection"
+    );
 }

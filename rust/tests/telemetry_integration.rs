@@ -4,11 +4,15 @@
 //! Prometheus text exposition, and the JSON-lines trace format end to end
 //! (file round-trip through `report::json::parse`).
 
+use corvet::coordinator::{Metrics, RejectReason, Server, ServerConfig};
+use corvet::engine::EngineConfig;
+use corvet::model::workloads::paper_mlp;
 use corvet::report::json::parse;
 use corvet::telemetry::{
     LogHistogram, Registry, Telemetry, MAX_RELATIVE_ERROR, NUM_BUCKETS,
 };
 use corvet::testutil::{check_prop, Xoshiro256};
+use std::time::{Duration, Instant};
 
 /// One-bucket-width tolerance at value `v` (the documented quantile error
 /// law), plus 1 for the integer sub-32 buckets.
@@ -315,4 +319,112 @@ fn memory_stays_bounded_under_sustained_recording() {
     assert!(h.quantile(0.5) > 0);
     // NUM_BUCKETS is compile-time fixed; nothing else accumulates
     assert!(NUM_BUCKETS < 4096);
+}
+
+// ---- serving-metrics exposition (DESIGN.md §15): the tail-latency,
+// queue-depth, occupancy, and rejection families behind Server::prometheus()
+
+#[test]
+fn serving_metrics_render_the_tail_latency_and_admission_families() {
+    let t0 = Instant::now();
+    let mut m = Metrics::anchored(t0);
+    // a known workload: 1..=200 ms request latencies, queue/execute/reply
+    // stages, two dispatches, one of each rejection kind, depth + occupancy
+    for i in 1..=200u64 {
+        m.record(Duration::from_millis(i), i % 2 == 0, t0 + Duration::from_millis(i));
+        m.record_queue(Duration::from_millis(i / 2));
+    }
+    m.record_batch(128);
+    m.record_batch(72);
+    m.record_execute(Duration::from_millis(40));
+    m.record_execute(Duration::from_millis(60));
+    m.record_reply(Duration::from_micros(900));
+    m.record_reply(Duration::from_micros(1100));
+    m.record_depth(3);
+    m.record_depth(17);
+    m.record_occupancy(0.8125);
+    m.record_rejected(&RejectReason::QueueFull { depth: 17, cap: 16 });
+    m.record_rejected(&RejectReason::DeadlineExpired {
+        waited: Duration::from_millis(5),
+    });
+
+    let text = m.prometheus();
+    assert_valid_prometheus(&text);
+    // every serving family must be present — a rename or dropped family is a
+    // dashboard-breaking change and should fail here
+    for family in [
+        "corvet_request_latency_us",
+        "corvet_request_queue_us",
+        "corvet_batch_execute_us",
+        "corvet_chunk_reply_us",
+        "corvet_queue_depth",
+        "corvet_lane_occupancy_bp",
+        "corvet_requests_completed",
+        "corvet_batches_dispatched",
+        "corvet_requests_approx",
+        "corvet_requests_rejected_queue_full",
+        "corvet_requests_rejected_deadline",
+        "corvet_request_p50_ms",
+        "corvet_request_p99_ms",
+        "corvet_queue_p50_ms",
+        "corvet_queue_p99_ms",
+        "corvet_execute_p50_ms",
+        "corvet_execute_p99_ms",
+        "corvet_reply_p50_ms",
+        "corvet_reply_p99_ms",
+        "corvet_throughput_rps",
+    ] {
+        assert!(text.contains(family), "exposition missing family {family}:\n{text}");
+    }
+    assert!(text.contains("corvet_requests_completed 200"));
+    assert!(text.contains("corvet_requests_rejected_queue_full 1"));
+    assert!(text.contains("corvet_requests_rejected_deadline 1"));
+    assert!(text.contains("corvet_queue_depth_count 2"));
+    assert!(text.contains("corvet_lane_occupancy_bp_count 1"));
+
+    // the p50/p99 gauges agree with the snapshot (same histogram, same
+    // error bound), so dashboards and `MetricsSnapshot` consumers see one
+    // consistent story
+    let snap = m.snapshot();
+    let p99_line = text
+        .lines()
+        .find(|l| l.starts_with("corvet_request_p99_ms "))
+        .expect("p99 gauge line");
+    let p99: f64 = p99_line.split_whitespace().nth(1).unwrap().parse().unwrap();
+    assert!(
+        (p99 - snap.latency.p99_ms).abs() <= 1e-9,
+        "gauge {p99} vs snapshot {}",
+        snap.latency.p99_ms
+    );
+    assert!(snap.latency.p99_ms > snap.latency.p50_ms, "200-point spread has a tail");
+}
+
+#[test]
+fn live_wave_server_exposes_valid_prometheus_mid_flight() {
+    // end-to-end: the same exposition over the control channel of a running
+    // wave server, after real traffic — the path `corvet metrics` scrapes
+    let mut server =
+        Server::start_wave(paper_mlp(61), EngineConfig::pe64(), ServerConfig::default())
+            .expect("wave server starts");
+    let mut rng = Xoshiro256::new(13);
+    let pending: Vec<_> = (0..12)
+        .map(|_| server.submit(rng.uniform_vec(196, -0.9, 0.9)).expect("submit"))
+        .collect();
+    for rx in pending {
+        rx.recv().expect("response").expect("served, not rejected");
+    }
+    let text = server.prometheus().expect("live exposition");
+    server.shutdown().expect("clean shutdown");
+
+    assert_valid_prometheus(&text);
+    assert!(text.contains("corvet_requests_completed 12"), "{text}");
+    for family in
+        ["corvet_request_p99_ms", "corvet_chunk_reply_us", "corvet_queue_depth"]
+    {
+        assert!(text.contains(family), "live exposition missing {family}");
+    }
+    // no rejections in this friendly run, but the counters must still render
+    // (absent-when-zero families make dashboards lie)
+    assert!(text.contains("corvet_requests_rejected_queue_full 0"));
+    assert!(text.contains("corvet_requests_rejected_deadline 0"));
 }

@@ -31,6 +31,16 @@ trajectory can only be re-armed deliberately (see
 scripts/bench_baseline/README.md and scripts/capture_bench_baseline.sh).
 Without the variable, missing baselines are tolerated for local bootstrap.
 
+Suite notes: the gate is name-agnostic (any BENCH_<suite>.json with the
+envelope shape is validated and compared), but `BENCH_serve_storm.json`
+deserves a caveat — its rows are open-loop serving measurements, not
+iteration timings: `service_per_req` rows carry wall-clock ns per served
+request (per_second = req/s), `p50_latency`/`p99_latency` rows carry that
+latency quantile in ns, and `occupancy_milli` rows carry mean lane
+occupancy x 1000 (unitless, bounded at 1000). The relative thresholds
+apply unchanged; tail-latency rows are the noisiest, which the seeded
+upper-envelope baseline accounts for.
+
 Exit status 0 when everything passes, 1 otherwise. Stdlib only.
 """
 
