@@ -1,0 +1,249 @@
+//! Bench: fleet-wide admission on the sharded cluster path under storm
+//! traffic — the typed-outcome accounting identity under 2x bursty
+//! overload with a mid-trace shard kill. Captured results belong in
+//! EXPERIMENTS.md §cluster_storm.
+//!
+//! Three sections:
+//!
+//! 1. closed-loop capacity calibration (burst-submit, drain) over the
+//!    4-shard replica fleet — the storm's offered rate is expressed
+//!    relative to this, so the bench lands in the same load regime on any
+//!    machine;
+//! 2. the storm: an open-loop bursty replay at 2x fleet capacity against
+//!    small per-shard queue caps and a request deadline, with one shard
+//!    worker killed halfway through the trace — every micro-batch must
+//!    resolve to exactly one typed outcome, and
+//!    `served + rejected_full + rejected_deadline + rejected_down ==
+//!    offered` is asserted, client-side tallies against fleet snapshot
+//!    sums;
+//! 3. a no-kill control at the same rate, separating the cost of losing a
+//!    shard from the cost of the overload itself.
+//!
+//! JSON rows (corvet.bench.v1): `service_per_req` rows carry wall-clock
+//! ns per served micro-batch (so `per_second` is micro-batches/s);
+//! `p99_latency` rows carry the worst per-shard p99 in ns.
+
+use corvet::bench_harness::traffic::{bursty_trace, offered_rate_hz};
+use corvet::bench_harness::{bench_threads, smoke_mode, write_bench_json, BenchReport, BenchResult};
+use corvet::cluster::plan::plan;
+use corvet::cluster::{InterconnectConfig, PartitionStrategy};
+use corvet::coordinator::{
+    AdmissionConfig, ClusterSnapshot, RejectReason, RoutePolicy, ShardServiceConfig,
+    ShardedService,
+};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::EngineConfig;
+use corvet::model::workloads::paper_mlp;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::report::fnum;
+use std::time::{Duration, Instant};
+
+const SHARDS: usize = 4;
+const REQUESTS_PER_MICRO_BATCH: usize = 4;
+
+/// Outcome of one open-loop trace replay against the fleet.
+struct StormRun {
+    offered: u64,
+    served: u64,
+    rejected_full: u64,
+    rejected_deadline: u64,
+    rejected_down: u64,
+    wall: Duration,
+    snap: ClusterSnapshot,
+}
+
+impl StormRun {
+    fn worst_p99_ms(&self) -> f64 {
+        self.snap.shards.iter().map(|s| s.latency.p99_ms).fold(0.0, f64::max)
+    }
+}
+
+/// Busy-accurate pacing: sleep for the bulk of the gap, spin the last
+/// stretch (std sleep alone overshoots sub-millisecond inter-arrivals).
+fn pace_until(t0: Instant, offset: Duration) {
+    loop {
+        let elapsed = t0.elapsed();
+        if elapsed >= offset {
+            return;
+        }
+        let left = offset - elapsed;
+        if left > Duration::from_micros(300) {
+            std::thread::sleep(left - Duration::from_micros(200));
+        } else {
+            std::hint::spin_loop();
+        }
+    }
+}
+
+/// A fresh 4-shard data-parallel (replica) service over the bench MLP.
+fn fleet(engine: EngineConfig, queue_cap: usize, deadline: Option<Duration>) -> ShardedService {
+    let net = paper_mlp(11);
+    let graph = net.to_ir().with_policy(&PolicyTable::uniform(
+        net.compute_layers(),
+        Precision::Fxp8,
+        ExecMode::Approximate,
+    ));
+    let pl = plan(&graph, SHARDS, &engine, &InterconnectConfig::default(), PartitionStrategy::Data);
+    let config = ShardServiceConfig {
+        policy: RoutePolicy::LeastLoaded,
+        admission: AdmissionConfig { queue_cap, deadline, ..Default::default() },
+        ..Default::default()
+    };
+    ShardedService::start_with(&pl, engine, config)
+}
+
+/// Replay `trace` open-loop: submit on the trace clock regardless of
+/// completions (killing `kill.0`'s worker right after submission index
+/// `kill.1`), then drain every receiver and reconcile client-side tallies
+/// against the fleet snapshot. Every micro-batch must resolve typed.
+fn run_storm(
+    engine: EngineConfig,
+    trace: &[Duration],
+    queue_cap: usize,
+    deadline: Option<Duration>,
+    kill: Option<(usize, usize)>,
+) -> StormRun {
+    let mut svc = fleet(engine, queue_cap, deadline);
+    let t0 = Instant::now();
+    let mut pending = Vec::with_capacity(trace.len());
+    for (i, &offset) in trace.iter().enumerate() {
+        pace_until(t0, offset);
+        pending.push(svc.submit(REQUESTS_PER_MICRO_BATCH).1);
+        if let Some((shard, at)) = kill {
+            if i == at {
+                assert!(svc.kill_shard(shard), "mid-trace kill must sever a live shard");
+            }
+        }
+    }
+    let (mut served, mut rejected_full, mut rejected_deadline, mut rejected_down) =
+        (0u64, 0u64, 0u64, 0u64);
+    for rx in pending {
+        match rx.recv().expect("every micro-batch resolves to one typed outcome") {
+            Ok(_) => served += 1,
+            Err(rej) => match rej.reason {
+                RejectReason::QueueFull { .. } => rejected_full += 1,
+                RejectReason::DeadlineExpired { .. } => rejected_deadline += 1,
+                RejectReason::ShardDown { .. } => rejected_down += 1,
+            },
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = svc.shutdown();
+    let run = StormRun {
+        offered: trace.len() as u64,
+        served,
+        rejected_full,
+        rejected_deadline,
+        rejected_down,
+        wall,
+        snap,
+    };
+    // the headline acceptance law, checked from both sides of the fence
+    assert_eq!(
+        run.served + run.rejected_full + run.rejected_deadline + run.rejected_down,
+        run.offered,
+        "accounting identity: served + typed rejections must equal offered"
+    );
+    assert_eq!(run.snap.served(), run.served, "fleet snapshot agrees on served");
+    assert_eq!(run.snap.rejected_queue_full(), run.rejected_full);
+    assert_eq!(run.snap.rejected_deadline(), run.rejected_deadline);
+    assert_eq!(run.snap.rejected_down(), run.rejected_down);
+    assert_eq!(run.snap.resolved(), run.offered, "snapshot-side identity");
+    run
+}
+
+/// A synthetic result row: `mean_ns` carries the quantity named by `name`
+/// (see the module docs for the unit conventions).
+fn row(name: String, value_ns: f64) -> BenchResult {
+    // the gate requires strictly positive means; clamp degenerate values
+    let value_ns = value_ns.max(1.0);
+    BenchResult {
+        name,
+        mean_ns: value_ns,
+        median_ns: value_ns,
+        stddev_ns: 0.0,
+        min_ns: value_ns,
+        max_ns: value_ns,
+        samples: 1,
+    }
+}
+
+fn print_cell(tag: &str, run: &StormRun) {
+    println!(
+        "  {tag:>10} | offered {:>4} served {:>4} | queue_full {:>4} deadline {:>4} down {:>4} (router {}) | p99 {} ms",
+        run.offered,
+        run.served,
+        run.rejected_full,
+        run.rejected_deadline,
+        run.rejected_down,
+        run.snap.rejected_down_at_router,
+        fnum(run.worst_p99_ms()),
+    );
+}
+
+fn main() {
+    let mut engine = EngineConfig::pe64();
+    engine.threads = bench_threads();
+    let smoke = smoke_mode();
+    let n = if smoke { 80 } else { 400 };
+    let mut rep = BenchReport::new();
+
+    // --- 1. closed-loop capacity calibration (everything queued at t0)
+    let n_cal = if smoke { 48 } else { 160 };
+    let burst_at_zero: Vec<Duration> = vec![Duration::ZERO; n_cal];
+    let cal = run_storm(engine, &burst_at_zero, n_cal, None, None);
+    assert_eq!(cal.served, n_cal as u64, "calibration must serve everything");
+    let capacity_rps = cal.served as f64 / cal.wall.as_secs_f64();
+    println!(
+        "capacity calibration: {} micro-batches/s closed-loop over {SHARDS} shards",
+        fnum(capacity_rps)
+    );
+    rep.push(row(
+        "cluster_capacity service_per_req".to_string(),
+        cal.wall.as_nanos() as f64 / cal.served.max(1) as f64,
+    ));
+
+    // --- 2. the storm: 2x bursty overload, one shard killed mid-trace
+    let bursty = bursty_trace(77, capacity_rps * 2.0, n, 16);
+    println!(
+        "\nbursty overload (2x capacity, queue_cap 16, deadline 50 ms, realised {} /s):",
+        fnum(offered_rate_hz(&bursty))
+    );
+    let killed = run_storm(
+        engine,
+        &bursty,
+        16,
+        Some(Duration::from_millis(50)),
+        Some((1, n / 2)),
+    );
+    print_cell("shard kill", &killed);
+    assert!(
+        killed.snap.shards[1].completed + killed.snap.shards[1].rejected_down
+            <= killed.offered,
+        "the victim's counters stay inside the trace"
+    );
+    rep.push(row(
+        "storm2x_kill service_per_req".to_string(),
+        killed.wall.as_nanos() as f64 / killed.served.max(1) as f64,
+    ));
+    rep.push(row("storm2x_kill p99_latency".to_string(), killed.worst_p99_ms() * 1e6));
+
+    // --- 3. no-kill control at the same offered rate
+    let control = run_storm(engine, &bursty, 16, Some(Duration::from_millis(50)), None);
+    print_cell("control", &control);
+    assert_eq!(control.rejected_down, 0, "no kill, no ShardDown");
+    rep.push(row(
+        "storm2x_control service_per_req".to_string(),
+        control.wall.as_nanos() as f64 / control.served.max(1) as f64,
+    ));
+    println!(
+        "\nidentity held on both cells: {} and {} micro-batches accounted",
+        killed.offered, control.offered
+    );
+
+    print!("{}", rep.render("cluster_storm"));
+    match write_bench_json("cluster_storm", &rep) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench JSON not written: {e}"),
+    }
+}

@@ -93,6 +93,10 @@ fn run_storm(
                 corvet::coordinator::RejectReason::DeadlineExpired { .. } => {
                     rejected_deadline += 1
                 }
+                // single-engine path: no shards to go down
+                corvet::coordinator::RejectReason::ShardDown { .. } => {
+                    unreachable!("ShardDown on the single-engine server")
+                }
             },
         }
     }

@@ -108,6 +108,18 @@ COMMANDS:
           [--overlap on|off] [--threads T] [--sweep] [--csv] [--trace-out FILE]
                                      sharded multi-engine simulation
                                      (S samples per micro-batch, packed waves)
+  cluster serve [--workload W] [--shards M] [--pes N] [--strategy data|...]
+          [--policy round-robin|least-loaded] [--admission continuous|oneshot]
+          [--queue-cap N] [--deadline-ms D] [--requests N] [--batch S]
+          [--kill-shard K] [--csv] [--trace-out FILE]
+                                     online fleet serving over the shard plan:
+                                     per-shard bounded admission queues,
+                                     deadlines and typed rejections
+                                     (DESIGN.md §16). --queue-cap 0 sizes the
+                                     queue to the stream (backpressure off);
+                                     --kill-shard K severs one worker halfway
+                                     to demo ShardDown divert/reject; closes
+                                     with the fleet accounting identity
   metrics [--requests N] [--pes N] [--threads T]
                                      run a short wave-serving workload and
                                      print the Prometheus text exposition

@@ -13,6 +13,13 @@
 //! pipeline fill of the stages ahead of it; whatever is not hidden shows up
 //! as a cold-start stall in the makespan and in the shard's
 //! [`PrefetchStats`](crate::memory::PrefetchStats).
+//!
+//! This executor is the *offline* (throughput/makespan) view of the
+//! cluster; the *online* serving view — one long-lived admission-layer
+//! worker per shard, typed backpressure, deadlines, dead-shard diversion —
+//! is [`crate::coordinator::ShardedService`] (DESIGN.md §16). Both price
+//! shard compute through the same [`VectorEngine`] cycle laws, so a plan
+//! that balances here serves evenly there.
 
 use super::interconnect::InterconnectConfig;
 use super::plan::{split_even, PartitionPlan, PartitionStrategy, ShardPlan};

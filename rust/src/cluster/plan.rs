@@ -42,6 +42,17 @@ pub enum PartitionStrategy {
     Data,
 }
 
+impl PartitionStrategy {
+    /// Whether every shard under this strategy holds the *full* model, so
+    /// any shard can serve any micro-batch. This is what lets the serving
+    /// router ([`crate::coordinator::ShardedService`]) divert a dead
+    /// shard's traffic to survivors; slice strategies must reject instead
+    /// (a survivor would simulate the wrong slice).
+    pub fn is_replica(&self) -> bool {
+        matches!(self, PartitionStrategy::Data)
+    }
+}
+
 impl std::fmt::Display for PartitionStrategy {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
@@ -446,6 +457,13 @@ mod tests {
         assert_eq!(auto_strategy(&g, 4), PartitionStrategy::Pipeline);
         assert_eq!(auto_strategy(&g, 16), PartitionStrategy::Tensor);
         assert_eq!(auto_strategy(&g, 1), PartitionStrategy::Pipeline);
+    }
+
+    #[test]
+    fn only_data_plans_are_replicas() {
+        assert!(PartitionStrategy::Data.is_replica());
+        assert!(!PartitionStrategy::Pipeline.is_replica());
+        assert!(!PartitionStrategy::Tensor.is_replica());
     }
 
     #[test]

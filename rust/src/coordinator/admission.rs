@@ -98,6 +98,15 @@ pub enum RejectReason {
         /// How long the request had waited when the expiry was detected.
         waited: Duration,
     },
+    /// The shard a request was (or would have been) placed on has no live
+    /// worker, and no replica could absorb the traffic. Replaces the old
+    /// `.expect("shard worker is down")` panic on the cluster path: a dead
+    /// shard is an *outcome* the submitter handles, not a crash
+    /// (DESIGN.md §16).
+    ShardDown {
+        /// The dead shard the rejection is attributed to.
+        shard: usize,
+    },
 }
 
 impl fmt::Display for RejectReason {
@@ -108,6 +117,9 @@ impl fmt::Display for RejectReason {
             }
             RejectReason::DeadlineExpired { waited } => {
                 write!(f, "deadline expired after {:.1} ms queued", waited.as_secs_f64() * 1e3)
+            }
+            RejectReason::ShardDown { shard } => {
+                write!(f, "shard {shard} is down")
             }
         }
     }
@@ -356,5 +368,7 @@ mod tests {
             reason: RejectReason::DeadlineExpired { waited: Duration::from_millis(12) },
         };
         assert!(r.to_string().contains("deadline expired"));
+        let r = Rejection { id: 9, reason: RejectReason::ShardDown { shard: 2 } };
+        assert!(r.to_string().contains("shard 2 is down"));
     }
 }

@@ -24,6 +24,8 @@ use crate::model::{Network, Tensor};
 use crate::quant::{PolicyTable, Precision};
 use crate::runtime::{quantize_input, ArtifactRegistry, ModelWeights, PjrtRuntime};
 use anyhow::{ensure, Context, Result};
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
 use std::path::Path;
 
 /// One batch-execution engine behind the serving loop.
@@ -132,6 +134,11 @@ pub struct WaveBackend {
     output_width: usize,
     chunk_hint: usize,
     last_occupancy: Option<f64>,
+    // capacity quotes are pure in (batch, mode) for a fixed backend, so
+    // each pair is lowered and simulated exactly once (interior
+    // mutability: quoting is a read from the caller's point of view)
+    quote_cache: RefCell<HashMap<(usize, ExecMode), u64>>,
+    quote_hits: Cell<u64>,
 }
 
 impl WaveBackend {
@@ -182,6 +189,8 @@ impl WaveBackend {
             output_width,
             chunk_hint,
             last_occupancy: None,
+            quote_cache: RefCell::new(HashMap::new()),
+            quote_hits: Cell::new(0),
         })
     }
 
@@ -200,20 +209,34 @@ impl WaveBackend {
 
     /// Simulated engine cycles for one `batch`-sample dispatch under
     /// governor `mode` — the wave backend's latency estimate for capacity
-    /// planning (printed by `corvet serve --backend wave`; per-request
-    /// admission would want the [`ShardedService`](super::ShardedService)
-    /// cached-pricing pattern, as this re-lowers and re-simulates per
-    /// call). Priced by the engine simulator on the backend's own
-    /// configuration, so the estimate inherits the packed lane law *and*
-    /// the AF-overlap pipeline law
+    /// planning (printed by `corvet serve --backend wave`). Memoised per
+    /// `(batch, mode)` — the [`ShardedService`](super::ShardedService)
+    /// cached-pricing pattern — so only the first quote for a pair lowers
+    /// and simulates the graph; repeats are bit-equal map hits
+    /// ([`Self::quote_cache_hits`]). Priced by the engine simulator on the
+    /// backend's own configuration, so the estimate inherits the packed
+    /// lane law *and* the AF-overlap pipeline law
     /// ([`crate::ir::exec::layer_pipeline_cycles`]): turning `af_overlap`
     /// off on the engine config raises the estimate, exactly as it raises
     /// the simulated serving price.
     pub fn estimated_batch_cycles(&self, batch: usize, mode: ExecMode) -> u64 {
+        let key = (batch.max(1), mode);
+        if let Some(&cycles) = self.quote_cache.borrow().get(&key) {
+            self.quote_hits.set(self.quote_hits.get() + 1);
+            return cycles;
+        }
         let graph = self.net.to_ir().with_policy(&self.policy(mode));
-        VectorEngine::new(self.session.executor().config)
-            .run_ir_batch(&graph, batch.max(1))
-            .total_cycles
+        let cycles = VectorEngine::new(self.session.executor().config)
+            .run_ir_batch(&graph, key.0)
+            .total_cycles;
+        self.quote_cache.borrow_mut().insert(key, cycles);
+        cycles
+    }
+
+    /// How many [`Self::estimated_batch_cycles`] calls were answered from
+    /// the `(batch, mode)` cache instead of re-simulating.
+    pub fn quote_cache_hits(&self) -> u64 {
+        self.quote_hits.get()
     }
 }
 
@@ -378,6 +401,29 @@ mod tests {
         let s = backend.session_stats();
         assert_eq!(s.batch, 2 * chunk, "session stats accumulate across chunks");
         assert!(s.mean_occupancy() > 0.0);
+    }
+
+    #[test]
+    fn estimated_batch_cycles_memoises_per_batch_and_mode() {
+        // regression: quoting used to re-lower and re-simulate the graph
+        // on every call; now the second quote for a (batch, mode) pair is
+        // a cache hit and bit-equal to the first
+        let backend =
+            WaveBackend::new(paper_mlp(5), EngineConfig::pe64(), Precision::Fxp8).unwrap();
+        let first = backend.estimated_batch_cycles(8, ExecMode::Approximate);
+        assert_eq!(backend.quote_cache_hits(), 0, "first quote must simulate");
+        let second = backend.estimated_batch_cycles(8, ExecMode::Approximate);
+        assert_eq!(backend.quote_cache_hits(), 1, "second quote must hit the cache");
+        assert_eq!(first, second, "cached quote must be bit-equal");
+        // a different key still simulates — and modes stay distinct
+        let accurate = backend.estimated_batch_cycles(8, ExecMode::Accurate);
+        assert_eq!(backend.quote_cache_hits(), 1);
+        assert!(accurate > second, "accurate budget must out-price approximate");
+        // batch 0 clamps to 1, sharing the batch-1 cache slot
+        let b1 = backend.estimated_batch_cycles(1, ExecMode::Approximate);
+        let b0 = backend.estimated_batch_cycles(0, ExecMode::Approximate);
+        assert_eq!(b0, b1);
+        assert_eq!(backend.quote_cache_hits(), 2, "clamped batch reuses the batch-1 entry");
     }
 
     #[test]

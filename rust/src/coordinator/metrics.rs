@@ -20,7 +20,8 @@
 use super::admission::RejectReason;
 use crate::report::json::{Json, ToJson};
 use crate::telemetry::{
-    write_prometheus_counter, write_prometheus_gauge, write_prometheus_histogram, LogHistogram,
+    write_prometheus_counter_labeled, write_prometheus_gauge_labeled,
+    write_prometheus_histogram_labeled, LogHistogram,
 };
 use std::time::{Duration, Instant};
 
@@ -84,6 +85,9 @@ pub struct MetricsSnapshot {
     pub rejected_queue_full: u64,
     /// Requests rejected at dispatch: deadline expired while queued.
     pub rejected_deadline: u64,
+    /// Requests rejected because their shard had no live worker (cluster
+    /// path only; always 0 on a single-engine `Server`).
+    pub rejected_down: u64,
     /// Mean admission-queue depth observed at dispatch instants.
     pub mean_queue_depth: f64,
     /// Max admission-queue depth observed at dispatch instants.
@@ -119,6 +123,7 @@ impl ToJson for MetricsSnapshot {
                 ("reply", self.reply.to_json()),
                 ("rejected_queue_full", Json::U64(self.rejected_queue_full)),
                 ("rejected_deadline", Json::U64(self.rejected_deadline)),
+                ("rejected_down", Json::U64(self.rejected_down)),
                 ("mean_queue_depth", Json::F64(self.mean_queue_depth)),
                 ("max_queue_depth", Json::U64(self.max_queue_depth)),
                 ("mean_occupancy", Json::F64(self.mean_occupancy)),
@@ -145,6 +150,7 @@ pub struct Metrics {
     occupancy_bp: LogHistogram,
     rejected_full: u64,
     rejected_deadline: u64,
+    rejected_down: u64,
     completed: u64,
     batches: u64,
     batched_items: u64,
@@ -172,6 +178,7 @@ impl Metrics {
             occupancy_bp: LogHistogram::new(),
             rejected_full: 0,
             rejected_deadline: 0,
+            rejected_down: 0,
             completed: 0,
             batches: 0,
             batched_items: 0,
@@ -225,6 +232,7 @@ impl Metrics {
         match reason {
             RejectReason::QueueFull { .. } => self.rejected_full += 1,
             RejectReason::DeadlineExpired { .. } => self.rejected_deadline += 1,
+            RejectReason::ShardDown { .. } => self.rejected_down += 1,
         }
     }
 
@@ -250,6 +258,7 @@ impl Metrics {
             reply: LatencyStats::from_histogram(&self.reply_us),
             rejected_queue_full: self.rejected_full,
             rejected_deadline: self.rejected_deadline,
+            rejected_down: self.rejected_down,
             mean_queue_depth: self.depth.mean(),
             max_queue_depth: self.depth.max(),
             mean_occupancy: self.occupancy_bp.mean() / 1e4,
@@ -269,18 +278,44 @@ impl Metrics {
     /// Render the accumulator as Prometheus text exposition — the payload
     /// behind `Server::prometheus()` and the CLI's `corvet metrics`.
     pub fn prometheus(&self) -> String {
+        self.prometheus_labeled("")
+    }
+
+    /// Render the accumulator with a pre-rendered label set (e.g.
+    /// `shard="3"`) attached to every series. The cluster exporter
+    /// concatenates one labeled payload per shard worker, so per-shard
+    /// stage histograms, depth gauges, and rejection counters share metric
+    /// names and differ only by label (DESIGN.md §16). An empty label set
+    /// yields the single-engine payload unchanged.
+    pub fn prometheus_labeled(&self, labels: &str) -> String {
         let mut out = String::new();
-        write_prometheus_histogram(&mut out, "corvet_request_latency_us", &self.latency_us);
-        write_prometheus_histogram(&mut out, "corvet_request_queue_us", &self.queue_us);
-        write_prometheus_histogram(&mut out, "corvet_batch_execute_us", &self.execute_us);
-        write_prometheus_histogram(&mut out, "corvet_chunk_reply_us", &self.reply_us);
-        write_prometheus_histogram(&mut out, "corvet_queue_depth", &self.depth);
-        write_prometheus_histogram(&mut out, "corvet_lane_occupancy_bp", &self.occupancy_bp);
-        write_prometheus_counter(&mut out, "corvet_requests_completed", self.completed);
-        write_prometheus_counter(&mut out, "corvet_batches_dispatched", self.batches);
-        write_prometheus_counter(&mut out, "corvet_requests_approx", self.approx_served);
-        write_prometheus_counter(&mut out, "corvet_requests_rejected_queue_full", self.rejected_full);
-        write_prometheus_counter(&mut out, "corvet_requests_rejected_deadline", self.rejected_deadline);
+        write_prometheus_histogram_labeled(&mut out, "corvet_request_latency_us", labels, &self.latency_us);
+        write_prometheus_histogram_labeled(&mut out, "corvet_request_queue_us", labels, &self.queue_us);
+        write_prometheus_histogram_labeled(&mut out, "corvet_batch_execute_us", labels, &self.execute_us);
+        write_prometheus_histogram_labeled(&mut out, "corvet_chunk_reply_us", labels, &self.reply_us);
+        write_prometheus_histogram_labeled(&mut out, "corvet_queue_depth", labels, &self.depth);
+        write_prometheus_histogram_labeled(&mut out, "corvet_lane_occupancy_bp", labels, &self.occupancy_bp);
+        write_prometheus_counter_labeled(&mut out, "corvet_requests_completed", labels, self.completed);
+        write_prometheus_counter_labeled(&mut out, "corvet_batches_dispatched", labels, self.batches);
+        write_prometheus_counter_labeled(&mut out, "corvet_requests_approx", labels, self.approx_served);
+        write_prometheus_counter_labeled(
+            &mut out,
+            "corvet_requests_rejected_queue_full",
+            labels,
+            self.rejected_full,
+        );
+        write_prometheus_counter_labeled(
+            &mut out,
+            "corvet_requests_rejected_deadline",
+            labels,
+            self.rejected_deadline,
+        );
+        write_prometheus_counter_labeled(
+            &mut out,
+            "corvet_requests_rejected_shard_down",
+            labels,
+            self.rejected_down,
+        );
         // tail-latency gauges per stage: the p50/p99 a dashboard alerts on,
         // precomputed from the stage histograms (same error bound)
         for (stage, h) in [
@@ -290,11 +325,11 @@ impl Metrics {
             ("reply", &self.reply_us),
         ] {
             let s = LatencyStats::from_histogram(h);
-            write_prometheus_gauge(&mut out, &format!("corvet_{stage}_p50_ms"), s.p50_ms);
-            write_prometheus_gauge(&mut out, &format!("corvet_{stage}_p99_ms"), s.p99_ms);
+            write_prometheus_gauge_labeled(&mut out, &format!("corvet_{stage}_p50_ms"), labels, s.p50_ms);
+            write_prometheus_gauge_labeled(&mut out, &format!("corvet_{stage}_p99_ms"), labels, s.p99_ms);
         }
         let snap_rps = self.snapshot().throughput_rps;
-        write_prometheus_gauge(&mut out, "corvet_throughput_rps", snap_rps);
+        write_prometheus_gauge_labeled(&mut out, "corvet_throughput_rps", labels, snap_rps);
         out
     }
 }
@@ -429,6 +464,7 @@ mod tests {
             "corvet_requests_approx",
             "corvet_requests_rejected_queue_full",
             "corvet_requests_rejected_deadline",
+            "corvet_requests_rejected_shard_down",
             "corvet_request_p50_ms",
             "corvet_request_p99_ms",
             "corvet_queue_p50_ms",
@@ -450,12 +486,31 @@ mod tests {
         m.record_rejected(&RejectReason::QueueFull { depth: 4, cap: 4 });
         m.record_rejected(&RejectReason::QueueFull { depth: 4, cap: 4 });
         m.record_rejected(&RejectReason::DeadlineExpired { waited: Duration::from_millis(9) });
+        m.record_rejected(&RejectReason::ShardDown { shard: 1 });
         let s = m.snapshot();
         assert_eq!(s.rejected_queue_full, 2);
         assert_eq!(s.rejected_deadline, 1);
+        assert_eq!(s.rejected_down, 1);
         let text = m.prometheus();
         assert!(text.contains("corvet_requests_rejected_queue_full 2"));
         assert!(text.contains("corvet_requests_rejected_deadline 1"));
+        assert!(text.contains("corvet_requests_rejected_shard_down 1"));
+    }
+
+    #[test]
+    fn labeled_payload_tags_every_series() {
+        let mut m = Metrics::new();
+        let t = Instant::now();
+        m.record(Duration::from_millis(3), false, t);
+        m.record_rejected(&RejectReason::ShardDown { shard: 0 });
+        let text = m.prometheus_labeled("shard=\"2\"");
+        assert!(text.contains("corvet_requests_completed{shard=\"2\"} 1"));
+        assert!(text.contains("corvet_requests_rejected_shard_down{shard=\"2\"} 1"));
+        assert!(text.contains("corvet_request_latency_us_count{shard=\"2\"} 1"));
+        // every sample line (non-comment) carries the label
+        for line in text.lines().filter(|l| !l.starts_with('#')) {
+            assert!(line.contains("shard=\"2\""), "unlabeled series: {line}");
+        }
     }
 
     #[test]

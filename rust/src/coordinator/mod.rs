@@ -25,8 +25,13 @@
 //! * [`Server`] — worker thread owning one backend, request channel,
 //!   response plumbing, metrics;
 //! * [`ShardRouter`] / [`ShardedService`] — the cluster-serving layer:
-//!   spread micro-batches across M simulated engine shards
-//!   (round-robin or least-loaded), one worker thread per shard.
+//!   spread micro-batches across M simulated engine shards (round-robin
+//!   or least-loaded over live admission-queue depth), one admission-layer
+//!   worker per shard. The typed-outcome contract holds fleet-wide
+//!   (DESIGN.md §16): every submit resolves to `Ok` or a typed
+//!   [`Rejection`] — `QueueFull`, `DeadlineExpired`, or `ShardDown` — and
+//!   a dead worker diverts its traffic to survivors under replica plans
+//!   instead of panicking the submitter.
 //!
 //! No tokio in the vendored environment: std threads + mpsc channels.
 
@@ -46,5 +51,8 @@ pub use backend::{ExecBackend, PjrtBackend, WaveBackend};
 pub use batcher::{BatcherConfig, DynamicBatcher};
 pub use metrics::{LatencyStats, Metrics, MetricsSnapshot};
 pub use policy::{GovernorConfig, PrecisionGovernor};
-pub use router::{RoutePolicy, ShardRouter, ShardedResponse, ShardedService};
+pub use router::{
+    ClusterSnapshot, RoutePolicy, ShardResult, ShardRouter, ShardServiceConfig, ShardedResponse,
+    ShardedService,
+};
 pub use server::{InferenceRequest, InferenceResponse, ServeResult, Server, ServerConfig};

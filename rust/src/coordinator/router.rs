@@ -1,22 +1,42 @@
-//! Shard-aware request routing: spread micro-batches across a cluster of
-//! simulated engine shards.
+//! Shard-aware request routing with fleet-wide admission: spread
+//! micro-batches across a cluster of simulated engine shards while keeping
+//! the typed-outcome contract of the admission layer (DESIGN.md §15–16).
 //!
 //! The single-engine serving path ([`super::Server`]) owns one runtime; a
 //! cluster deployment has M engine shards and needs a *placement* decision
 //! per micro-batch before batching/precision policies apply. That decision
 //! is [`ShardRouter`]: round-robin for uniform traffic, least-loaded for
-//! bursty traffic (backlog-driven, the same signal the precision governor
-//! watches). [`ShardedService`] wires the router to one worker thread per
-//! shard, each owning a [`VectorEngine`] that cycle-simulates its replica
-//! of the workload — the serving-side counterpart of
-//! [`crate::cluster::ShardExecutor`].
+//! bursty traffic — both routing on **admission-queue depth** and skipping
+//! shards whose worker has died. [`ShardedService`] wires the router to one
+//! worker thread per shard, each owning a bounded [`AdmissionQueue`] with
+//! per-request deadlines and wave-granular chunk dispatch over a
+//! [`VectorEngine`] that cycle-simulates its replica of the workload — the
+//! serving-side counterpart of [`crate::cluster::ShardExecutor`].
+//!
+//! Every submitted micro-batch resolves to exactly one typed outcome
+//! ([`ShardResult`]): `Ok(`[`ShardedResponse`]`)` or a [`Rejection`]
+//! carrying [`RejectReason::QueueFull`], [`RejectReason::DeadlineExpired`],
+//! or [`RejectReason::ShardDown`]. A dead worker no longer panics the
+//! submitter: under replica (data-parallel) plans its traffic is diverted
+//! to survivors, otherwise callers get the typed `ShardDown`.
 
-use crate::cluster::PartitionPlan;
+use super::admission::{
+    Admitted, AdmissionConfig, AdmissionMode, AdmissionQueue, RejectReason, Rejection,
+};
+use super::batcher::BatcherConfig;
+use super::metrics::{Metrics, MetricsSnapshot};
+use super::policy::{GovernorConfig, PrecisionGovernor};
+use crate::cluster::{PartitionPlan, PartitionStrategy};
+use crate::cordic::mac::ExecMode;
 use crate::engine::{EngineConfig, VectorEngine};
+use crate::ir::{ExecPolicy, Graph};
+use crate::quant::LayerPolicy;
+use crate::telemetry::write_prometheus_gauge_labeled;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 /// Placement policy for micro-batches.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -28,6 +48,11 @@ pub enum RoutePolicy {
 }
 
 /// Backlog-tracking micro-batch router.
+///
+/// Standalone use ([`Self::pick`] / [`Self::complete`]) keeps its own
+/// in-flight counters; [`ShardedService`] instead feeds
+/// [`Self::route_over`] live per-shard admission-queue depths, with `None`
+/// marking a shard whose worker is down.
 #[derive(Debug)]
 pub struct ShardRouter {
     policy: RoutePolicy,
@@ -53,27 +78,55 @@ impl ShardRouter {
         self.inflight.len()
     }
 
-    /// Choose a shard for the next micro-batch and account it as in flight.
-    pub fn pick(&mut self) -> usize {
-        let m = self.shards();
+    /// Choose a shard given one load sample per shard; `None` marks a dead
+    /// shard that must be skipped. Round-robin advances past dead entries;
+    /// least-loaded takes the minimum over live ones (ties to the lowest
+    /// index). Returns `None` only when every shard is dead. The accepted
+    /// placement is counted in [`Self::routed`].
+    pub fn route_over(&mut self, loads: &[Option<usize>]) -> Option<usize> {
+        assert_eq!(loads.len(), self.shards(), "one load sample per shard");
+        let m = loads.len();
         let shard = match self.policy {
             RoutePolicy::RoundRobin => {
-                let s = self.next % m;
-                self.next = (self.next + 1) % m;
-                s
+                let mut found = None;
+                for i in 0..m {
+                    let s = (self.next + i) % m;
+                    if loads[s].is_some() {
+                        found = Some(s);
+                        self.next = (s + 1) % m;
+                        break;
+                    }
+                }
+                found?
             }
-            RoutePolicy::LeastLoaded => (0..m)
-                .min_by_key(|&s| self.inflight[s].load(Ordering::SeqCst))
-                .unwrap(),
+            RoutePolicy::LeastLoaded => {
+                (0..m).filter_map(|s| loads[s].map(|l| (l, s))).min()?.1
+            }
         };
-        self.inflight[shard].fetch_add(1, Ordering::SeqCst);
         self.routed[shard] += 1;
+        Some(shard)
+    }
+
+    /// Choose a shard for the next micro-batch and account it as in flight
+    /// on the router's own counters (standalone mode; all shards assumed
+    /// live).
+    pub fn pick(&mut self) -> usize {
+        let loads: Vec<Option<usize>> =
+            self.inflight.iter().map(|c| Some(c.load(Ordering::SeqCst))).collect();
+        let shard = self.route_over(&loads).expect("all shards marked live");
+        self.inflight[shard].fetch_add(1, Ordering::SeqCst);
         shard
     }
 
-    /// Mark one micro-batch on `shard` as completed.
+    /// Mark one micro-batch on `shard` as completed. Saturates at zero: an
+    /// unmatched call used to wrap the `usize` backlog to `usize::MAX`,
+    /// which permanently poisoned least-loaded placement (the shard looked
+    /// infinitely busy forever). The contract violation still trips a
+    /// `debug_assert`, but release routing stays sane.
     pub fn complete(&self, shard: usize) {
-        self.inflight[shard].fetch_sub(1, Ordering::SeqCst);
+        let r = self.inflight[shard]
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |c| c.checked_sub(1));
+        debug_assert!(r.is_ok(), "complete() without matching pick() on shard {shard}");
     }
 
     /// Current in-flight micro-batches on `shard`.
@@ -86,14 +139,10 @@ impl ShardRouter {
         (0..self.shards()).map(|s| self.backlog(s)).sum()
     }
 
-    /// Micro-batches routed to `shard` so far.
+    /// Micro-batches placed on `shard` so far (placement decisions, not
+    /// completions).
     pub fn routed(&self, shard: usize) -> u64 {
         self.routed[shard]
-    }
-
-    /// Shared in-flight counters (for workers to decrement on completion).
-    fn counters(&self) -> Arc<Vec<AtomicUsize>> {
-        Arc::clone(&self.inflight)
     }
 }
 
@@ -108,103 +157,606 @@ pub struct ShardedResponse {
     pub requests: usize,
     /// Simulated engine cycles the micro-batch took on its shard.
     pub sim_cycles: u64,
+    /// CORDIC mode the shard's governor dispatched it under.
+    pub mode: ExecMode,
+}
+
+/// Typed outcome of one submitted micro-batch: served, or rejected with a
+/// reason. Exactly one arrives on the receiver [`ShardedService::submit`]
+/// returns — never a silent drop, never a panic.
+pub type ShardResult = Result<ShardedResponse, Rejection>;
+
+/// Admission + routing configuration for a [`ShardedService`]: every shard
+/// worker runs the same bounded-queue/deadline/governor policy the
+/// single-engine [`super::Server`] uses (DESIGN.md §15), so backpressure
+/// and deadlines hold fleet-wide.
+#[derive(Debug, Clone, Copy)]
+pub struct ShardServiceConfig {
+    /// Placement policy across shards.
+    pub policy: RoutePolicy,
+    /// Per-shard admission: scheduler mode, bounded queue capacity, and
+    /// the default deadline applied when a submit does not carry one.
+    pub admission: AdmissionConfig,
+    /// One-shot batch window (`admission.mode == OneShot` only).
+    pub batcher: BatcherConfig,
+    /// Per-shard precision governor thresholds (each worker watches its
+    /// own queue depth).
+    pub governor: GovernorConfig,
+}
+
+impl Default for ShardServiceConfig {
+    fn default() -> Self {
+        ShardServiceConfig {
+            policy: RoutePolicy::RoundRobin,
+            admission: AdmissionConfig::default(),
+            batcher: BatcherConfig::default(),
+            governor: GovernorConfig::default(),
+        }
+    }
+}
+
+/// Final per-shard accounting a [`ShardedService::shutdown`] returns: one
+/// [`MetricsSnapshot`] per shard worker (killed workers included — they
+/// snapshot on exit) plus the router-side `ShardDown` rejections issued
+/// when no live shard could take a request. The accounting identity
+/// `served + rejected_full + rejected_deadline + rejected_down == offered`
+/// holds over these sums (`benches/cluster_storm.rs` proves it under
+/// overload with a mid-trace kill).
+#[derive(Debug, Clone)]
+pub struct ClusterSnapshot {
+    /// Final snapshot of every shard worker, indexed by shard.
+    pub shards: Vec<MetricsSnapshot>,
+    /// `ShardDown` rejections issued at the router (submit side), before
+    /// any worker saw the request.
+    pub rejected_down_at_router: u64,
+}
+
+impl ClusterSnapshot {
+    /// Micro-batches served, summed across shards.
+    pub fn served(&self) -> u64 {
+        self.shards.iter().map(|s| s.completed).sum()
+    }
+
+    /// Queue-full rejections, summed across shards.
+    pub fn rejected_queue_full(&self) -> u64 {
+        self.shards.iter().map(|s| s.rejected_queue_full).sum()
+    }
+
+    /// Deadline-expiry rejections, summed across shards.
+    pub fn rejected_deadline(&self) -> u64 {
+        self.shards.iter().map(|s| s.rejected_deadline).sum()
+    }
+
+    /// `ShardDown` rejections: issued by dying workers draining their
+    /// queues plus the router-side ones.
+    pub fn rejected_down(&self) -> u64 {
+        self.shards.iter().map(|s| s.rejected_down).sum::<u64>() + self.rejected_down_at_router
+    }
+
+    /// All typed rejections.
+    pub fn rejected(&self) -> u64 {
+        self.rejected_queue_full() + self.rejected_deadline() + self.rejected_down()
+    }
+
+    /// Micro-batches that resolved to *some* typed outcome — must equal
+    /// the offered count when every receiver has been waited on.
+    pub fn resolved(&self) -> u64 {
+        self.served() + self.rejected()
+    }
 }
 
 struct Job {
     id: u64,
     requests: usize,
-    respond: mpsc::Sender<ShardedResponse>,
+    enqueued: Instant,
+    deadline: Option<Instant>,
+    respond: mpsc::Sender<ShardResult>,
+}
+
+/// Control protocol into one shard worker. `Drain` marks a cooperative
+/// shutdown: the worker serves out its queue before exiting. A channel
+/// that closes *without* `Drain` (worker killed / service dropped) makes
+/// the worker reject everything still queued as [`RejectReason::ShardDown`]
+/// — queued work always resolves, whichever way the worker goes down.
+enum ShardMsg {
+    Job(Job),
+    Snapshot(mpsc::Sender<MetricsSnapshot>),
+    Prometheus(mpsc::Sender<String>),
+    Drain,
 }
 
 /// A cluster-serving harness: M worker threads, each cycle-simulating one
-/// shard of a [`PartitionPlan`], fed through a [`ShardRouter`].
+/// shard of a [`PartitionPlan`] behind its own bounded admission queue,
+/// fed through a [`ShardRouter`] that routes on live queue depth.
 ///
 /// Intended for replica (data-parallel) plans, where every shard can serve
-/// any micro-batch; with other plans each worker simply simulates its own
-/// slice per routed batch.
+/// any micro-batch and a dead shard's traffic diverts to survivors; with
+/// other plans each worker simulates its own slice per routed batch and a
+/// dead shard yields typed [`RejectReason::ShardDown`] rejections.
 pub struct ShardedService {
-    txs: Vec<mpsc::Sender<Job>>,
-    workers: Vec<JoinHandle<u64>>,
+    txs: Vec<Option<mpsc::Sender<ShardMsg>>>,
+    workers: Vec<JoinHandle<MetricsSnapshot>>,
     router: ShardRouter,
+    alive: Arc<Vec<AtomicBool>>,
+    in_channel: Arc<Vec<AtomicUsize>>,
+    depth: Arc<Vec<AtomicUsize>>,
+    config: ShardServiceConfig,
+    strategy: PartitionStrategy,
     next_id: u64,
+    rejected_down_at_router: u64,
 }
 
 impl ShardedService {
-    /// Spawn one simulation worker per shard of `plan`.
+    /// Spawn one simulation worker per shard of `plan` with default
+    /// admission (bounded queue, no deadline, continuous dispatch).
     pub fn start(plan: &PartitionPlan, engine: EngineConfig, policy: RoutePolicy) -> Self {
+        Self::start_with(plan, engine, ShardServiceConfig { policy, ..Default::default() })
+    }
+
+    /// Spawn one admission-layer worker per shard of `plan` under an
+    /// explicit [`ShardServiceConfig`].
+    pub fn start_with(
+        plan: &PartitionPlan,
+        engine: EngineConfig,
+        config: ShardServiceConfig,
+    ) -> Self {
         assert!(!plan.is_empty(), "empty partition plan");
-        let router = ShardRouter::new(plan.len(), policy);
-        let mut txs = Vec::with_capacity(plan.len());
-        let mut workers = Vec::with_capacity(plan.len());
+        let m = plan.len();
+        let router = ShardRouter::new(m, config.policy);
+        let alive: Arc<Vec<AtomicBool>> =
+            Arc::new((0..m).map(|_| AtomicBool::new(true)).collect());
+        let in_channel: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..m).map(|_| AtomicUsize::new(0)).collect());
+        let depth: Arc<Vec<AtomicUsize>> =
+            Arc::new((0..m).map(|_| AtomicUsize::new(0)).collect());
+        let mut txs = Vec::with_capacity(m);
+        let mut workers = Vec::with_capacity(m);
         for sp in &plan.shards {
-            let (tx, rx) = mpsc::channel::<Job>();
+            let (tx, rx) = mpsc::channel::<ShardMsg>();
             let graph = sp.ir.clone();
             let shard = sp.shard;
-            let counters = router.counters();
+            let (alive_c, in_c, depth_c) =
+                (Arc::clone(&alive), Arc::clone(&in_channel), Arc::clone(&depth));
             let handle = std::thread::Builder::new()
                 .name(format!("corvet-shard-{shard}"))
-                .spawn(move || {
-                    // a micro-batch of B requests executes as packed
-                    // multi-sample waves (Graph::with_batch), so its cycle
-                    // cost is deterministic per batch size but sub-linear
-                    // in B: simulate each size once and cache
-                    let mut cycles_by_batch: HashMap<usize, u64> = HashMap::new();
-                    let mut served = 0u64;
-                    while let Ok(job) = rx.recv() {
-                        let b = job.requests.max(1);
-                        let sim_cycles = *cycles_by_batch.entry(b).or_insert_with(|| {
-                            VectorEngine::new(engine).run_ir_batch(&graph, b).total_cycles
-                        });
-                        served += 1;
-                        job.respond
-                            .send(ShardedResponse {
-                                id: job.id,
-                                shard,
-                                requests: job.requests,
-                                sim_cycles,
-                            })
-                            .ok();
-                        counters[shard].fetch_sub(1, Ordering::SeqCst);
-                    }
-                    served
-                })
+                .spawn(move || shard_loop(shard, graph, engine, config, rx, alive_c, in_c, depth_c))
                 .expect("spawning shard worker");
-            txs.push(tx);
+            txs.push(Some(tx));
             workers.push(handle);
         }
-        ShardedService { txs, workers, router, next_id: 0 }
+        ShardedService {
+            txs,
+            workers,
+            router,
+            alive,
+            in_channel,
+            depth,
+            config,
+            strategy: plan.strategy,
+            next_id: 0,
+            rejected_down_at_router: 0,
+        }
     }
 
-    /// Route one micro-batch of `requests` requests; returns the receiver
-    /// for its completion along with the shard chosen.
-    pub fn submit(&mut self, requests: usize) -> (usize, mpsc::Receiver<ShardedResponse>) {
-        let shard = self.router.pick();
+    /// Number of shards (live or dead).
+    pub fn shards(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Is `shard`'s worker still accepting work?
+    pub fn is_alive(&self, shard: usize) -> bool {
+        self.txs[shard].is_some() && self.alive[shard].load(Ordering::SeqCst)
+    }
+
+    /// The routing load signal for `shard`: micro-batches submitted but
+    /// not yet absorbed by the worker, plus its published admission-queue
+    /// depth.
+    pub fn load(&self, shard: usize) -> usize {
+        self.in_channel[shard].load(Ordering::SeqCst) + self.depth[shard].load(Ordering::SeqCst)
+    }
+
+    /// Route one micro-batch of `requests` requests under the configured
+    /// default deadline. Returns the placed shard (`None` if the request
+    /// was rejected at routing time) and the receiver its single typed
+    /// outcome arrives on.
+    pub fn submit(&mut self, requests: usize) -> (Option<usize>, mpsc::Receiver<ShardResult>) {
+        self.submit_with_deadline(requests, self.config.admission.deadline)
+    }
+
+    /// [`Self::submit`] with an explicit per-request deadline (measured
+    /// from now; `None` = no deadline). A dead shard never panics the
+    /// submitter: under replica plans the request is diverted to a
+    /// surviving shard, otherwise — or when no shard survives — the typed
+    /// [`RejectReason::ShardDown`] lands on the returned receiver.
+    pub fn submit_with_deadline(
+        &mut self,
+        requests: usize,
+        deadline: Option<Duration>,
+    ) -> (Option<usize>, mpsc::Receiver<ShardResult>) {
         let (tx, rx) = mpsc::channel();
         self.next_id += 1;
-        self.txs[shard]
-            .send(Job { id: self.next_id, requests, respond: tx })
-            .expect("shard worker is down");
-        (shard, rx)
+        let id = self.next_id;
+        let now = Instant::now();
+        let abs_deadline = deadline.map(|d| now + d);
+        // only replica plans can divert: every shard holds the full model,
+        // so any survivor serves the same answer. Slice plans must reject —
+        // a survivor would simulate the wrong slice.
+        let reroute = self.strategy.is_replica();
+        let mut down_shard: Option<usize> = None;
+        loop {
+            let loads: Vec<Option<usize>> = (0..self.shards())
+                .map(|s| {
+                    if reroute && !self.is_alive(s) {
+                        None
+                    } else {
+                        Some(self.load(s))
+                    }
+                })
+                .collect();
+            let Some(shard) = self.router.route_over(&loads) else { break };
+            let job =
+                Job { id, requests, enqueued: now, deadline: abs_deadline, respond: tx.clone() };
+            let sent = match &self.txs[shard] {
+                Some(wtx) => wtx.send(ShardMsg::Job(job)).is_ok(),
+                None => false,
+            };
+            if sent {
+                self.in_channel[shard].fetch_add(1, Ordering::SeqCst);
+                return (Some(shard), rx);
+            }
+            // the worker exited between the liveness check and the send
+            self.alive[shard].store(false, Ordering::SeqCst);
+            down_shard.get_or_insert(shard);
+            if !reroute {
+                break;
+            }
+        }
+        let shard = down_shard
+            .or_else(|| (0..self.shards()).find(|&s| !self.is_alive(s)))
+            .unwrap_or(0);
+        let reason = RejectReason::ShardDown { shard };
+        self.rejected_down_at_router += 1;
+        tx.send(Err(Rejection { id, reason })).ok();
+        (None, rx)
     }
 
-    /// Router view (backlogs, routed counts).
+    /// Sever one shard's control channel **without** a drain marker — the
+    /// crash-injection hook: the worker observes the closed channel,
+    /// rejects everything still queued as [`RejectReason::ShardDown`], and
+    /// exits. Returns `false` if the shard was already severed.
+    pub fn kill_shard(&mut self, shard: usize) -> bool {
+        match self.txs[shard].take() {
+            Some(tx) => {
+                drop(tx);
+                self.alive[shard].store(false, Ordering::SeqCst);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Live metrics snapshot of one shard worker (`None` when the worker
+    /// is down — its final snapshot arrives via [`Self::shutdown`]).
+    pub fn metrics(&self, shard: usize) -> Option<MetricsSnapshot> {
+        let tx = self.txs[shard].as_ref()?;
+        let (stx, srx) = mpsc::channel();
+        tx.send(ShardMsg::Snapshot(stx)).ok()?;
+        srx.recv().ok()
+    }
+
+    /// Fleet Prometheus payload: each live worker's full stage-histogram /
+    /// depth / rejection families labeled `shard="<i>"`, plus cluster-level
+    /// gauges (`corvet_cluster_shards_alive`,
+    /// `corvet_cluster_rejected_down_router`). Type headers repeat per
+    /// shard because payloads are rendered per worker and concatenated;
+    /// series names never collide thanks to the label.
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut live = 0usize;
+        for slot in &self.txs {
+            let Some(tx) = slot else { continue };
+            let (ptx, prx) = mpsc::channel();
+            if tx.send(ShardMsg::Prometheus(ptx)).is_ok() {
+                if let Ok(payload) = prx.recv() {
+                    out.push_str(&payload);
+                    live += 1;
+                }
+            }
+        }
+        write_prometheus_gauge_labeled(&mut out, "corvet_cluster_shards_alive", "", live as f64);
+        write_prometheus_gauge_labeled(
+            &mut out,
+            "corvet_cluster_rejected_down_router",
+            "",
+            self.rejected_down_at_router as f64,
+        );
+        out
+    }
+
+    /// Router view (placement counts, standalone backlogs).
     pub fn router(&self) -> &ShardRouter {
         &self.router
     }
 
-    /// Drain the workers and return micro-batches served per shard.
-    pub fn shutdown(self) -> Vec<u64> {
-        drop(self.txs); // closes every worker's channel
-        self.workers
-            .into_iter()
-            .map(|h| h.join().expect("shard worker panicked"))
-            .collect()
+    /// The admission/routing configuration this service runs.
+    pub fn config(&self) -> &ShardServiceConfig {
+        &self.config
+    }
+
+    /// Drain every live worker (queued micro-batches are served or
+    /// deadline-rejected, never dropped), join all workers — killed ones
+    /// included — and return the fleet accounting.
+    pub fn shutdown(mut self) -> ClusterSnapshot {
+        for tx in self.txs.iter().flatten() {
+            tx.send(ShardMsg::Drain).ok();
+        }
+        self.txs.clear(); // closes every remaining channel
+        let shards: Vec<MetricsSnapshot> = self
+            .workers
+            .drain(..)
+            .map(|h| h.join().unwrap_or_else(|_| Metrics::new().snapshot()))
+            .collect();
+        ClusterSnapshot { shards, rejected_down_at_router: self.rejected_down_at_router }
+    }
+}
+
+/// Wave-granular dispatch width for one shard: enough micro-batches per
+/// round to fill the packed PE array at the narrowest compute layer —
+/// the same `lane_slots / min_outputs` law as
+/// [`super::WaveBackend::preferred_chunk`](super::ExecBackend::preferred_chunk),
+/// clamped to `[1, 64]`.
+fn wave_chunk_cap(graph: &Graph, engine: &EngineConfig) -> usize {
+    let min_outputs = graph
+        .layers
+        .iter()
+        .filter(|l| l.is_compute())
+        .map(|l| l.cost.outputs.max(1))
+        .min()
+        .unwrap_or(1) as usize;
+    let precision = graph
+        .layers
+        .iter()
+        .filter(|l| l.is_compute())
+        .find_map(|l| l.policy)
+        .unwrap_or_default()
+        .precision;
+    engine.lane_slots(precision).div_ceil(min_outputs).clamp(1, 64)
+}
+
+/// `graph` with every compute layer's mode overridden to `mode`,
+/// normalised per layer (FxP-4 keeps its single accurate budget). The
+/// shard worker prices each governor mode against its own annotated copy,
+/// so per-layer precisions survive the mode switch.
+fn graph_with_mode(graph: &Graph, mode: ExecMode) -> Graph {
+    let mut g = graph.clone();
+    for l in g.layers.iter_mut().filter(|l| l.is_compute()) {
+        let p = l.policy.unwrap_or_default();
+        let lp = LayerPolicy { layer: 0, precision: p.precision, mode }.normalised();
+        l.policy = Some(ExecPolicy { precision: lp.precision, mode: lp.mode });
+    }
+    g
+}
+
+/// Apply one control message. Jobs are offered to the bounded queue —
+/// queue-full arrivals get their typed rejection synchronously, exactly
+/// like the single-engine server. Returns `true` on `Drain`.
+fn handle_msg(
+    msg: ShardMsg,
+    shard: usize,
+    queue: &mut AdmissionQueue<Job>,
+    metrics: &mut Metrics,
+    in_channel: &AtomicUsize,
+) -> bool {
+    match msg {
+        ShardMsg::Job(job) => {
+            in_channel.fetch_sub(1, Ordering::SeqCst);
+            let (enqueued, deadline) = (job.enqueued, job.deadline);
+            if let Err(job) = queue.offer(job, enqueued, deadline) {
+                let reason =
+                    RejectReason::QueueFull { depth: queue.len(), cap: queue.capacity() };
+                metrics.record_rejected(&reason);
+                job.respond.send(Err(Rejection { id: job.id, reason })).ok();
+            }
+            false
+        }
+        ShardMsg::Snapshot(tx) => {
+            tx.send(metrics.snapshot()).ok();
+            false
+        }
+        ShardMsg::Prometheus(tx) => {
+            tx.send(metrics.prometheus_labeled(&format!("shard=\"{shard}\""))).ok();
+            false
+        }
+        ShardMsg::Drain => true,
+    }
+}
+
+/// One shard worker: the admission pump / chunk dispatch loop of
+/// `Server::serve_loop`, specialised to cycle-simulated micro-batches. A
+/// micro-batch of B requests executes as packed multi-sample waves
+/// ([`Graph::with_batch`]), so its cycle cost is deterministic per
+/// `(batch, mode)` but sub-linear in B: each pair is simulated once and
+/// cached.
+#[allow(clippy::too_many_arguments)]
+fn shard_loop(
+    shard: usize,
+    graph: Graph,
+    engine: EngineConfig,
+    config: ShardServiceConfig,
+    rx: mpsc::Receiver<ShardMsg>,
+    alive: Arc<Vec<AtomicBool>>,
+    in_channel: Arc<Vec<AtomicUsize>>,
+    depth: Arc<Vec<AtomicUsize>>,
+) -> MetricsSnapshot {
+    let chunk_cap = match config.admission.mode {
+        AdmissionMode::Continuous => wave_chunk_cap(&graph, &engine),
+        AdmissionMode::OneShot => config.batcher.max_batch.max(1),
+    };
+    let mut queue: AdmissionQueue<Job> = AdmissionQueue::new(config.admission.queue_cap);
+    let mut governor = PrecisionGovernor::new(config.governor);
+    let mut metrics = Metrics::new();
+    let mut graphs: HashMap<ExecMode, Graph> = HashMap::new();
+    let mut cycles: HashMap<(usize, ExecMode), u64> = HashMap::new();
+    let mut draining = false; // Drain received: serve out the queue, then exit
+    let mut severed = false; // channel died without Drain: reject the queue
+
+    loop {
+        // 1 ── admit: pump the control channel into the bounded queue
+        if !draining && !severed {
+            let msg = if queue.is_empty() {
+                match rx.recv() {
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        severed = true;
+                        None
+                    }
+                }
+            } else {
+                let wait = match config.admission.mode {
+                    AdmissionMode::Continuous => Duration::ZERO,
+                    AdmissionMode::OneShot if queue.len() >= chunk_cap => Duration::ZERO,
+                    AdmissionMode::OneShot => queue
+                        .oldest_enqueued()
+                        .map(|t| config.batcher.max_wait.saturating_sub(t.elapsed()))
+                        .unwrap_or(Duration::ZERO),
+                };
+                if wait.is_zero() {
+                    rx.try_recv().ok()
+                } else {
+                    match rx.recv_timeout(wait) {
+                        Ok(m) => Some(m),
+                        Err(mpsc::RecvTimeoutError::Timeout) => None,
+                        Err(mpsc::RecvTimeoutError::Disconnected) => {
+                            severed = true;
+                            None
+                        }
+                    }
+                }
+            };
+            if let Some(m) = msg {
+                draining |= handle_msg(m, shard, &mut queue, &mut metrics, &in_channel[shard]);
+                loop {
+                    match rx.try_recv() {
+                        Ok(m) => {
+                            draining |=
+                                handle_msg(m, shard, &mut queue, &mut metrics, &in_channel[shard])
+                        }
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => {
+                            if !draining {
+                                severed = true;
+                            }
+                            break;
+                        }
+                    }
+                }
+            }
+        } else {
+            // closing down: absorb whatever is still buffered so every
+            // submitted micro-batch resolves to a typed outcome
+            while let Ok(m) = rx.try_recv() {
+                draining |= handle_msg(m, shard, &mut queue, &mut metrics, &in_channel[shard]);
+            }
+        }
+        depth[shard].store(queue.len(), Ordering::SeqCst);
+
+        if severed {
+            // killed mid-trace: everything still queued resolves to the
+            // typed ShardDown rejection — no silent drops, no panic
+            let now = Instant::now();
+            let mut expired: Vec<Admitted<Job>> = Vec::new();
+            let mut rest = queue.drain_all(now, &mut expired);
+            rest.extend(expired);
+            for e in rest {
+                let reason = RejectReason::ShardDown { shard };
+                metrics.record_rejected(&reason);
+                e.item.respond.send(Err(Rejection { id: e.item.id, reason })).ok();
+            }
+            depth[shard].store(0, Ordering::SeqCst);
+            alive[shard].store(false, Ordering::SeqCst);
+            return metrics.snapshot();
+        }
+        if draining && queue.is_empty() {
+            alive[shard].store(false, Ordering::SeqCst);
+            return metrics.snapshot();
+        }
+
+        // 2 ── schedule: is a chunk due?
+        let now = Instant::now();
+        let due = match config.admission.mode {
+            AdmissionMode::Continuous => !queue.is_empty(),
+            AdmissionMode::OneShot => {
+                (draining && !queue.is_empty())
+                    || queue.len() >= chunk_cap
+                    || queue.oldest_enqueued().is_some_and(|t| {
+                        now.saturating_duration_since(t) >= config.batcher.max_wait
+                    })
+            }
+        };
+        if !due {
+            continue;
+        }
+
+        // 3 ── dispatch one wave-granular chunk
+        metrics.record_depth(queue.len());
+        let mode = governor.observe(queue.len());
+        let mut expired: Vec<Admitted<Job>> = Vec::new();
+        let chunk = queue.take(now, chunk_cap, &mut expired);
+        for e in expired {
+            let reason = RejectReason::DeadlineExpired {
+                waited: now.saturating_duration_since(e.enqueued),
+            };
+            metrics.record_rejected(&reason);
+            e.item.respond.send(Err(Rejection { id: e.item.id, reason })).ok();
+        }
+        if chunk.is_empty() {
+            depth[shard].store(queue.len(), Ordering::SeqCst);
+            continue;
+        }
+        metrics.record_batch(chunk.len());
+        let dispatched = Instant::now();
+        for e in &chunk {
+            metrics.record_queue(dispatched.saturating_duration_since(e.enqueued));
+        }
+        let mode_graph = &*graphs.entry(mode).or_insert_with(|| graph_with_mode(&graph, mode));
+        let sims: Vec<u64> = chunk
+            .iter()
+            .map(|e| {
+                let b = e.item.requests.max(1);
+                *cycles.entry((b, mode)).or_insert_with(|| {
+                    VectorEngine::new(engine).run_ir_batch(mode_graph, b).total_cycles
+                })
+            })
+            .collect();
+        let done = Instant::now();
+        metrics.record_execute(done.saturating_duration_since(dispatched));
+        let approx = mode == ExecMode::Approximate;
+        for (e, sim) in chunk.into_iter().zip(sims) {
+            e.item
+                .respond
+                .send(Ok(ShardedResponse {
+                    id: e.item.id,
+                    shard,
+                    requests: e.item.requests,
+                    sim_cycles: sim,
+                    mode,
+                }))
+                .ok();
+            metrics.record(done.saturating_duration_since(e.enqueued), approx, done);
+        }
+        metrics.record_reply(done.elapsed());
+        depth[shard].store(queue.len(), Ordering::SeqCst);
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::plan::plan;
+    use crate::cluster::InterconnectConfig;
+    use crate::model::workloads::paper_mlp;
+    use crate::quant::{PolicyTable, Precision};
+    use std::panic::{catch_unwind, AssertUnwindSafe};
 
     #[test]
     fn round_robin_cycles_evenly() {
@@ -239,29 +791,67 @@ mod tests {
     }
 
     #[test]
-    fn sharded_service_cached_pricing_consumes_the_pack_law() {
-        // the per-batch-size cycle cache prices through VectorEngine, which
-        // derives effective lanes from the engine pack law — a packed FxP-8
-        // service must quote fewer simulated cycles than an unpacked one
-        use crate::cluster::plan::{plan, PartitionStrategy};
-        use crate::cordic::mac::ExecMode;
-        use crate::model::workloads::paper_mlp;
-        use crate::quant::{PolicyTable, Precision};
+    fn extra_complete_saturates_and_cannot_invert_routing_order() {
+        // regression: the old unconditional fetch_sub wrapped the backlog
+        // to usize::MAX, permanently poisoning least-loaded placement
+        let mut r = ShardRouter::new(2, RoutePolicy::LeastLoaded);
+        // unmatched complete: trips the debug_assert (caught here) in
+        // debug builds, saturates silently in release — either way the
+        // counter must stay at zero, not wrap
+        let _ = catch_unwind(AssertUnwindSafe(|| r.complete(1)));
+        assert_eq!(r.backlog(1), 0, "unmatched complete must saturate at zero");
+        // a wrapped shard 1 would look infinitely busy and never be picked
+        assert_eq!(r.pick(), 0);
+        assert_eq!(r.pick(), 1, "routing order inverted by an unmatched complete");
+    }
 
+    #[test]
+    fn route_over_skips_dead_shards() {
+        let mut rr = ShardRouter::new(3, RoutePolicy::RoundRobin);
+        assert_eq!(rr.route_over(&[Some(0), None, Some(0)]), Some(0));
+        assert_eq!(rr.route_over(&[Some(0), None, Some(0)]), Some(2), "skips the dead shard");
+        assert_eq!(rr.route_over(&[Some(0), None, Some(0)]), Some(0));
+        assert_eq!(rr.route_over(&[None, None, None]), None, "no live shard to route to");
+
+        let mut ll = ShardRouter::new(3, RoutePolicy::LeastLoaded);
+        assert_eq!(ll.route_over(&[Some(9), None, Some(2)]), Some(2));
+        assert_eq!(ll.route_over(&[Some(1), None, Some(2)]), Some(0));
+        assert_eq!(ll.route_over(&[None, None, None]), None);
+    }
+
+    fn replica_service(shards: usize, policy: RoutePolicy) -> ShardedService {
+        let net = paper_mlp(3);
+        let graph = net.to_ir().with_policy(&PolicyTable::uniform(
+            net.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Approximate,
+        ));
+        let engine = EngineConfig::pe64();
+        let icn = InterconnectConfig::default();
+        let pl = plan(&graph, shards, &engine, &icn, PartitionStrategy::Data);
+        ShardedService::start(&pl, engine, policy)
+    }
+
+    #[test]
+    fn sharded_service_cached_pricing_consumes_the_pack_law() {
+        // the per-(batch, mode) cycle cache prices through VectorEngine,
+        // which derives effective lanes from the engine pack law — a packed
+        // FxP-8 service must quote fewer simulated cycles than an unpacked
+        // one
         let net = paper_mlp(13);
         let graph = net.to_ir().with_policy(&PolicyTable::uniform(
             net.compute_layers(),
             Precision::Fxp8,
             ExecMode::Approximate,
         ));
-        let icn = crate::cluster::InterconnectConfig::default();
+        let icn = InterconnectConfig::default();
         let quote = |packing: bool| -> u64 {
             let mut engine = EngineConfig::pe64();
             engine.packing = packing;
             let pl = plan(&graph, 2, &engine, &icn, PartitionStrategy::Data);
             let mut svc = ShardedService::start(&pl, engine, RoutePolicy::RoundRobin);
             let (_, rx) = svc.submit(4);
-            let c = rx.recv().unwrap().sim_cycles;
+            let c = rx.recv().unwrap().expect("served").sim_cycles;
             svc.shutdown();
             c
         };
@@ -275,26 +865,11 @@ mod tests {
 
     #[test]
     fn batched_micro_batches_price_sublinearly() {
-        use crate::cluster::plan::{plan, PartitionStrategy};
-        use crate::cordic::mac::ExecMode;
-        use crate::model::workloads::paper_mlp;
-        use crate::quant::{PolicyTable, Precision};
-
-        let net = paper_mlp(3);
-        let graph = net.to_ir().with_policy(&PolicyTable::uniform(
-            net.compute_layers(),
-            Precision::Fxp8,
-            ExecMode::Approximate,
-        ));
-        let engine = EngineConfig::pe64();
-        let icn = crate::cluster::InterconnectConfig::default();
-        let pl = plan(&graph, 2, &engine, &icn, PartitionStrategy::Data);
-        let mut svc = ShardedService::start(&pl, engine, RoutePolicy::RoundRobin);
-
+        let mut svc = replica_service(2, RoutePolicy::RoundRobin);
         let (_, rx1) = svc.submit(1);
-        let c1 = rx1.recv().unwrap().sim_cycles;
+        let c1 = rx1.recv().unwrap().expect("served").sim_cycles;
         let (_, rx8) = svc.submit(8);
-        let c8 = rx8.recv().unwrap().sim_cycles;
+        let c8 = rx8.recv().unwrap().expect("served").sim_cycles;
         svc.shutdown();
 
         assert!(c8 > c1, "more samples cost more cycles ({c8} vs {c1})");
@@ -303,5 +878,74 @@ mod tests {
             "packed waves amortise the per-dispatch cost: b8 {c8} vs 8 x b1 {}",
             8 * c1
         );
+    }
+
+    #[test]
+    fn killed_shard_diverts_to_survivors_then_rejects_typed() {
+        let mut svc = replica_service(2, RoutePolicy::RoundRobin);
+        assert!(svc.kill_shard(0));
+        assert!(!svc.kill_shard(0), "second kill is a no-op");
+        // replica plan: the survivor absorbs everything — no panic, all Ok
+        for _ in 0..4 {
+            let (shard, rx) = svc.submit(2);
+            let resp = rx.recv().expect("outcome").expect("served by the survivor");
+            assert_eq!(resp.shard, 1);
+            assert_eq!(shard, Some(1));
+        }
+        // kill the survivor too: the typed ShardDown lands, still no panic
+        assert!(svc.kill_shard(1));
+        let (shard, rx) = svc.submit(2);
+        assert_eq!(shard, None);
+        match rx.recv().expect("outcome") {
+            Err(Rejection { reason: RejectReason::ShardDown { .. }, .. }) => {}
+            other => panic!("expected ShardDown, got {other:?}"),
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.served(), 4);
+        assert_eq!(snap.rejected_down_at_router, 1);
+        assert_eq!(snap.resolved(), 5, "every submit resolved to one typed outcome");
+    }
+
+    #[test]
+    fn expired_deadline_is_rejected_before_dispatch() {
+        let mut svc = replica_service(2, RoutePolicy::LeastLoaded);
+        let (_, rx) = svc.submit_with_deadline(2, Some(Duration::ZERO));
+        match rx.recv().expect("outcome") {
+            Err(Rejection { reason: RejectReason::DeadlineExpired { .. }, .. }) => {}
+            other => panic!("expected DeadlineExpired, got {other:?}"),
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.rejected_deadline(), 1);
+        assert_eq!(snap.served(), 0);
+    }
+
+    #[test]
+    fn shutdown_snapshot_accounts_every_outcome() {
+        let mut svc = replica_service(2, RoutePolicy::RoundRobin);
+        let receivers: Vec<_> = (0..6).map(|_| svc.submit(1).1).collect();
+        for rx in receivers {
+            rx.recv().expect("outcome").expect("served");
+        }
+        let snap = svc.shutdown();
+        assert_eq!(snap.served(), 6);
+        assert_eq!(snap.rejected(), 0);
+        assert_eq!(snap.resolved(), 6);
+        // both shards saw work under round-robin
+        assert!(snap.shards.iter().all(|s| s.completed == 3));
+    }
+
+    #[test]
+    fn cluster_prometheus_labels_every_shard() {
+        let mut svc = replica_service(2, RoutePolicy::RoundRobin);
+        let (_, rx) = svc.submit(1);
+        rx.recv().unwrap().expect("served");
+        let text = svc.prometheus();
+        assert!(text.contains("shard=\"0\""));
+        assert!(text.contains("shard=\"1\""));
+        assert!(text.contains("corvet_cluster_shards_alive 2"));
+        let snap0 = svc.metrics(0).expect("live shard snapshots on demand");
+        let snap1 = svc.metrics(1).expect("live shard snapshots on demand");
+        assert_eq!(snap0.completed + snap1.completed, 1);
+        svc.shutdown();
     }
 }

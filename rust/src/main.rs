@@ -4,7 +4,10 @@
 use anyhow::{bail, Context, Result};
 use corvet::cli::{Args, USAGE};
 use corvet::cluster::{parse_strategy, Cluster, ClusterConfig, InterconnectConfig};
-use corvet::coordinator::{AdmissionMode, Server, ServerConfig};
+use corvet::coordinator::{
+    AdmissionMode, RejectReason, RoutePolicy, Server, ServerConfig, ShardServiceConfig,
+    ShardedService,
+};
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::{EngineConfig, VectorEngine};
 use corvet::ir::{self, Graph};
@@ -194,6 +197,9 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 }
 
 fn cmd_cluster(args: &Args) -> Result<()> {
+    if args.positional.get(1).map(String::as_str) == Some("serve") {
+        return cmd_cluster_serve(args);
+    }
     let _trace = init_trace(args)?;
     let workload = args.opt_or("workload", "vgg16");
     let graph = workload_graph(&workload)?;
@@ -295,6 +301,149 @@ fn cmd_cluster(args: &Args) -> Result<()> {
 
     if args.has_flag("sweep") {
         emit(tables::cluster_scaling(), args.has_flag("csv"));
+    }
+    Ok(())
+}
+
+/// `corvet cluster serve`: the online counterpart of `cluster` — a
+/// [`ShardedService`] replays a micro-batch stream through per-shard
+/// admission queues (DESIGN.md §16), optionally killing one shard halfway
+/// to demonstrate the typed `ShardDown` path, and closes with the
+/// fleet-wide accounting identity.
+fn cmd_cluster_serve(args: &Args) -> Result<()> {
+    let _trace = init_trace(args)?;
+    let workload = args.opt_or("workload", "tinyyolo");
+    let graph = workload_graph(&workload)?;
+    let shards: usize = args.num_or("shards", 4usize)?;
+    let pes: usize = args.num_or("pes", 256usize)?;
+    let n_requests: usize = args.num_or("requests", 256usize)?;
+    let batch: usize = args.num_or("batch", 4usize)?;
+    if shards == 0 || pes == 0 || n_requests == 0 || batch == 0 {
+        bail!("--shards, --pes, --requests and --batch must all be >= 1");
+    }
+    let precision = Precision::parse(&args.opt_or("precision", "fxp8"))
+        .context("bad --precision")?;
+    let mode = parse_mode(&args.opt_or("mode", "approx"))?;
+    let strategy =
+        parse_strategy(&args.opt_or("strategy", "data")).context("bad --strategy")?;
+    let route = match args.opt_or("policy", "least-loaded").as_str() {
+        "round-robin" | "rr" => RoutePolicy::RoundRobin,
+        "least-loaded" | "ll" => RoutePolicy::LeastLoaded,
+        other => bail!("bad --policy {other:?} (round-robin|least-loaded)"),
+    };
+    let admission = args.opt_or("admission", "continuous");
+    let admission = AdmissionMode::parse(&admission)
+        .with_context(|| format!("bad --admission {admission:?} (continuous|oneshot)"))?;
+    let queue_cap: usize = args.num_or("queue-cap", 0usize)?;
+    let deadline_ms: u64 = args.num_or("deadline-ms", 0u64)?;
+    let kill: Option<usize> = match args.options.get("kill-shard") {
+        Some(v) => Some(v.parse().with_context(|| format!("bad --kill-shard value {v:?}"))?),
+        None => None,
+    };
+    if let Some(k) = kill {
+        if k >= shards {
+            bail!("--kill-shard {k} out of range (shards 0..{shards})");
+        }
+    }
+
+    let mut engine = EngineConfig { pes, ..EngineConfig::pe256() };
+    engine.af_blocks = (pes / 64).max(1);
+    engine.pool_units = (pes / 8).max(1);
+    engine.packing = parse_packing(args)?;
+    engine.threads = args.num_or("threads", 0usize)?;
+
+    let table = PolicyTable::uniform(graph.compute_layers(), precision, mode);
+    let annotated = graph.with_policy(&table);
+    let plan = corvet::cluster::plan::plan(
+        &annotated,
+        shards,
+        &engine,
+        &InterconnectConfig::default(),
+        strategy,
+    );
+    let mut config = ShardServiceConfig { policy: route, ..Default::default() };
+    config.admission.mode = admission;
+    // the demo replays the whole stream at once; an unset cap sizes the
+    // queue to it so backpressure is opt-in here
+    config.admission.queue_cap = if queue_cap == 0 { n_requests } else { queue_cap };
+    config.admission.deadline =
+        (deadline_ms > 0).then(|| std::time::Duration::from_millis(deadline_ms));
+    if kill.is_some() && !plan.strategy.is_replica() {
+        eprintln!(
+            "note: --strategy {} is not a replica plan — killed-shard traffic gets \
+             typed ShardDown rejections instead of diverting",
+            plan.strategy
+        );
+    }
+    let mut svc = ShardedService::start_with(&plan, engine, config);
+
+    let t0 = std::time::Instant::now();
+    let mut pending = Vec::with_capacity(n_requests);
+    for i in 0..n_requests {
+        pending.push(svc.submit(batch).1);
+        if let Some(k) = kill {
+            if i == n_requests / 2 && svc.kill_shard(k) {
+                eprintln!("killed shard {k} after micro-batch {i}");
+            }
+        }
+    }
+    let wall_submit = t0.elapsed();
+    let (mut served, mut r_full, mut r_deadline, mut r_down) = (0u64, 0u64, 0u64, 0u64);
+    let mut per_shard_served = vec![0u64; shards];
+    for rx in pending {
+        match rx.recv().context("shard outcome channel closed")? {
+            Ok(resp) => {
+                served += 1;
+                per_shard_served[resp.shard] += 1;
+            }
+            Err(rej) => match rej.reason {
+                RejectReason::QueueFull { .. } => r_full += 1,
+                RejectReason::DeadlineExpired { .. } => r_deadline += 1,
+                RejectReason::ShardDown { .. } => r_down += 1,
+            },
+        }
+    }
+    let wall = t0.elapsed();
+    let snap = svc.shutdown();
+
+    println!("fleet            : {shards} x {pes}-PE shards, {} plan, {route:?} routing", plan.strategy);
+    println!("admission        : {admission}, queue_cap {} / shard, deadline {}",
+        config.admission.queue_cap,
+        if deadline_ms > 0 { format!("{deadline_ms} ms") } else { "none".to_string() });
+    println!("offered          : {n_requests} micro-batches x {batch} sample(s)");
+    println!("served           : {served}");
+    println!(
+        "rejected         : {r_full} queue-full, {r_deadline} deadline, {r_down} shard-down"
+    );
+    println!("wall             : {} ms submit, {} ms total",
+        fnum(wall_submit.as_secs_f64() * 1e3), fnum(wall.as_secs_f64() * 1e3));
+    let resolved = served + r_full + r_deadline + r_down;
+    println!(
+        "identity         : {resolved}/{n_requests} resolved ({})",
+        if resolved == n_requests as u64 { "holds" } else { "VIOLATED" }
+    );
+
+    let mut t = Table::new(
+        "per-shard admission accounting",
+        &["shard", "served", "queue-full", "deadline", "shard-down", "batches", "p99 ms"],
+    );
+    for (s, m) in snap.shards.iter().enumerate() {
+        t.row(vec![
+            s.to_string(),
+            per_shard_served[s].to_string(),
+            m.rejected_queue_full.to_string(),
+            m.rejected_deadline.to_string(),
+            m.rejected_down.to_string(),
+            m.batches.to_string(),
+            fnum(m.latency.p99_ms),
+        ]);
+    }
+    emit(t, args.has_flag("csv"));
+    if snap.rejected_down_at_router > 0 {
+        println!("router-side shard-down rejections: {}", snap.rejected_down_at_router);
+    }
+    if resolved != n_requests as u64 {
+        bail!("typed-outcome contract violated: {resolved} of {n_requests} resolved");
     }
     Ok(())
 }

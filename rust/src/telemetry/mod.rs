@@ -40,8 +40,9 @@ mod sink;
 
 pub use histogram::{LogHistogram, BUCKETS_PER_OCTAVE, MAX_RELATIVE_ERROR, NUM_BUCKETS};
 pub use registry::{
-    prometheus_sanitize, write_prometheus_counter, write_prometheus_gauge,
-    write_prometheus_histogram, Counter, Gauge, Histogram, Registry,
+    prometheus_sanitize, write_prometheus_counter, write_prometheus_counter_labeled,
+    write_prometheus_gauge, write_prometheus_gauge_labeled, write_prometheus_histogram,
+    write_prometheus_histogram_labeled, Counter, Gauge, Histogram, Registry,
 };
 pub use sink::{EventKind, EventSink, FieldValue, JsonlSink, MemorySink, TraceEvent};
 

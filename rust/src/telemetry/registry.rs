@@ -208,31 +208,66 @@ pub fn prometheus_sanitize(name: &str) -> String {
 
 /// Append one counter in exposition format.
 pub fn write_prometheus_counter(out: &mut String, name: &str, v: u64) {
-    let n = prometheus_sanitize(name);
-    let _ = writeln!(out, "# TYPE {n} counter");
-    let _ = writeln!(out, "{n} {v}");
+    write_prometheus_counter_labeled(out, name, "", v);
 }
 
 /// Append one gauge in exposition format.
 pub fn write_prometheus_gauge(out: &mut String, name: &str, v: f64) {
-    let n = prometheus_sanitize(name);
-    let _ = writeln!(out, "# TYPE {n} gauge");
-    let _ = writeln!(out, "{n} {v}");
+    write_prometheus_gauge_labeled(out, name, "", v);
 }
 
 /// Append one histogram in exposition format: cumulative buckets over the
 /// non-empty [`LogHistogram`] buckets, then `+Inf`, `_sum`, `_count`.
 pub fn write_prometheus_histogram(out: &mut String, name: &str, h: &LogHistogram) {
+    write_prometheus_histogram_labeled(out, name, "", h);
+}
+
+/// Append one counter carrying a pre-rendered label set (e.g.
+/// `shard="3"`); an empty `labels` string emits a bare series. The cluster
+/// exporter uses this for per-shard families sharing one metric name.
+pub fn write_prometheus_counter_labeled(out: &mut String, name: &str, labels: &str, v: u64) {
     let n = prometheus_sanitize(name);
+    let _ = writeln!(out, "# TYPE {n} counter");
+    if labels.is_empty() {
+        let _ = writeln!(out, "{n} {v}");
+    } else {
+        let _ = writeln!(out, "{n}{{{labels}}} {v}");
+    }
+}
+
+/// Append one gauge carrying a pre-rendered label set (see
+/// [`write_prometheus_counter_labeled`]).
+pub fn write_prometheus_gauge_labeled(out: &mut String, name: &str, labels: &str, v: f64) {
+    let n = prometheus_sanitize(name);
+    let _ = writeln!(out, "# TYPE {n} gauge");
+    if labels.is_empty() {
+        let _ = writeln!(out, "{n} {v}");
+    } else {
+        let _ = writeln!(out, "{n}{{{labels}}} {v}");
+    }
+}
+
+/// Append one histogram carrying a pre-rendered label set; the extra
+/// labels are merged ahead of each bucket's `le` label and onto the
+/// `_sum`/`_count` series.
+pub fn write_prometheus_histogram_labeled(
+    out: &mut String,
+    name: &str,
+    labels: &str,
+    h: &LogHistogram,
+) {
+    let n = prometheus_sanitize(name);
+    let sep = if labels.is_empty() { String::new() } else { format!("{labels},") };
+    let tail = if labels.is_empty() { String::new() } else { format!("{{{labels}}}") };
     let _ = writeln!(out, "# TYPE {n} histogram");
     let mut acc = 0u64;
     for (ub, c) in h.nonzero_buckets() {
         acc += c;
-        let _ = writeln!(out, "{n}_bucket{{le=\"{ub}\"}} {acc}");
+        let _ = writeln!(out, "{n}_bucket{{{sep}le=\"{ub}\"}} {acc}");
     }
-    let _ = writeln!(out, "{n}_bucket{{le=\"+Inf\"}} {}", h.count());
-    let _ = writeln!(out, "{n}_sum {}", h.sum());
-    let _ = writeln!(out, "{n}_count {}", h.count());
+    let _ = writeln!(out, "{n}_bucket{{{sep}le=\"+Inf\"}} {}", h.count());
+    let _ = writeln!(out, "{n}_sum{tail} {}", h.sum());
+    let _ = writeln!(out, "{n}_count{tail} {}", h.count());
 }
 
 #[cfg(test)]
@@ -275,6 +310,27 @@ mod tests {
         assert_eq!(prometheus_sanitize("9lives"), "_9lives");
         assert_eq!(prometheus_sanitize("a:b_c1"), "a:b_c1");
         assert_eq!(prometheus_sanitize("Ünicode-x"), "_nicode_x");
+    }
+
+    #[test]
+    fn labeled_writers_merge_label_sets() {
+        let mut out = String::new();
+        write_prometheus_counter_labeled(&mut out, "reqs.total", "shard=\"2\"", 7);
+        write_prometheus_gauge_labeled(&mut out, "depth", "shard=\"2\"", 1.5);
+        let mut h = LogHistogram::new();
+        h.record(10);
+        h.record(5000);
+        write_prometheus_histogram_labeled(&mut out, "lat.us", "shard=\"2\"", &h);
+        assert!(out.contains("reqs_total{shard=\"2\"} 7"));
+        assert!(out.contains("depth{shard=\"2\"} 1.5"));
+        assert!(out.contains("lat_us_bucket{shard=\"2\",le=\"10\"} 1"));
+        assert!(out.contains("lat_us_bucket{shard=\"2\",le=\"+Inf\"} 2"));
+        assert!(out.contains("lat_us_sum{shard=\"2\"} 5010"));
+        assert!(out.contains("lat_us_count{shard=\"2\"} 2"));
+        // empty label set degrades to the bare spelling
+        let mut bare = String::new();
+        write_prometheus_counter_labeled(&mut bare, "reqs.total", "", 7);
+        assert!(bare.contains("reqs_total 7"));
     }
 
     #[test]

@@ -134,12 +134,12 @@ fn sharded_service_serves_batches_across_two_shards() {
     let mut pending = Vec::new();
     for _ in 0..12 {
         let (shard, rx) = service.submit(4);
-        assert!(shard < 2);
+        assert!(shard.expect("live shard placed") < 2);
         pending.push(rx);
     }
     let mut per_shard = [0u64; 2];
     for rx in pending {
-        let resp = rx.recv().expect("shard response");
+        let resp = rx.recv().expect("shard outcome").expect("served, not rejected");
         assert_eq!(resp.requests, 4);
         assert!(resp.sim_cycles > 0, "batch must cost engine cycles");
         per_shard[resp.shard] += 1;
@@ -148,9 +148,10 @@ fn sharded_service_serves_batches_across_two_shards() {
     assert_eq!(service.router().routed(0), 6);
     assert_eq!(service.router().routed(1), 6);
 
-    let served = service.shutdown();
-    assert_eq!(served.iter().sum::<u64>(), 12);
-    assert!(served.iter().all(|&s| s > 0), "both shards must serve");
+    let snap = service.shutdown();
+    assert_eq!(snap.served(), 12);
+    assert_eq!(snap.rejected(), 0);
+    assert!(snap.shards.iter().all(|s| s.completed > 0), "both shards must serve");
 }
 
 #[test]
@@ -173,15 +174,16 @@ fn least_loaded_service_round_trips_every_batch() {
     let mut pending = Vec::new();
     for _ in 0..8 {
         let (shard, rx) = service.submit(2);
-        assert!(shard < 2);
+        assert!(shard.expect("live shard placed") < 2);
         pending.push(rx);
     }
     for rx in pending {
-        let resp = rx.recv().expect("shard response");
+        let resp = rx.recv().expect("shard outcome").expect("served, not rejected");
         assert!(resp.shard < 2);
         assert_eq!(resp.requests, 2);
         assert!(resp.sim_cycles > 0);
     }
-    let served = service.shutdown();
-    assert_eq!(served.iter().sum::<u64>(), 8);
+    let snap = service.shutdown();
+    assert_eq!(snap.served(), 8);
+    assert_eq!(snap.resolved(), 8, "every micro-batch resolved to one typed outcome");
 }

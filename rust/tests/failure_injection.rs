@@ -1,13 +1,20 @@
 //! Failure-injection tests: the runtime and coordinator must fail loudly
 //! and cleanly (no hangs, no partial state) on corrupt artifacts, malformed
-//! manifests, bad weights and misuse.
+//! manifests, bad weights, misuse — and a shard worker killed mid-trace
+//! (typed `ShardDown` rejections plus reroute, never a panic or a hang).
 
+use corvet::cluster::{InterconnectConfig, PartitionStrategy};
+use corvet::coordinator::{
+    AdmissionConfig, AdmissionMode, BatcherConfig, GovernorConfig, RejectReason, RoutePolicy,
+    Server, ServerConfig, ShardServiceConfig, ShardedService,
+};
 use corvet::cordic::mac::ExecMode;
-use corvet::coordinator::{Server, ServerConfig};
-use corvet::quant::Precision;
+use corvet::engine::EngineConfig;
+use corvet::quant::{PolicyTable, Precision};
 use corvet::runtime::{ArtifactRegistry, ModelWeights, PjrtRuntime};
 use std::io::Write;
 use std::path::PathBuf;
+use std::time::Duration;
 
 fn tmpdir(tag: &str) -> PathBuf {
     let d = std::env::temp_dir().join(format!("corvet-fail-{tag}-{}", std::process::id()));
@@ -146,4 +153,78 @@ fn weights_file_roundtrip_rejects_corruption() {
 
 fn artifacts_dir() -> PathBuf {
     std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn killed_shard_worker_yields_typed_rejections_not_a_panic() {
+    // regression: `ShardedService::submit` used to
+    // `.expect("shard worker is down")` — one dead worker panicked the
+    // whole serving front end. Kill one of four replica shards mid-trace:
+    // its queued micro-batches must resolve to typed `ShardDown`
+    // rejections, later traffic must divert to the survivors, and the
+    // fleet accounting identity must still close.
+    let net = corvet::model::workloads::paper_mlp(47);
+    let graph = net.to_ir().with_policy(&PolicyTable::uniform(
+        net.compute_layers(),
+        Precision::Fxp8,
+        ExecMode::Accurate,
+    ));
+    let engine = EngineConfig::pe64();
+    let plan = corvet::cluster::plan::plan(
+        &graph,
+        4,
+        &engine,
+        &InterconnectConfig::default(),
+        PartitionStrategy::Data,
+    );
+    // a long one-shot window keeps every shard's queue populated, so the
+    // kill lands while the victim still holds undispatched work
+    let config = ShardServiceConfig {
+        policy: RoutePolicy::RoundRobin,
+        admission: AdmissionConfig {
+            mode: AdmissionMode::OneShot,
+            queue_cap: 64,
+            deadline: None,
+        },
+        batcher: BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(400) },
+        governor: GovernorConfig::default(),
+    };
+    let mut svc = ShardedService::start_with(&plan, engine, config);
+
+    let first: Vec<_> = (0..20).map(|_| svc.submit(1).1).collect();
+    assert!(svc.kill_shard(2), "kill severs the worker channel");
+    assert!(!svc.is_alive(2));
+    let second: Vec<_> = (0..20)
+        .map(|_| {
+            let (shard, rx) = svc.submit(1);
+            let s = shard.expect("survivors must absorb the diverted traffic");
+            assert_ne!(s, 2, "dead shard must not be routed to");
+            rx
+        })
+        .collect();
+    let snap = svc.shutdown();
+
+    let (mut served, mut down) = (0u64, 0u64);
+    for rx in first.into_iter().chain(second) {
+        match rx.recv().expect("no silent drops: every micro-batch resolves") {
+            Ok(resp) => {
+                assert_ne!(resp.shard, 2, "the killed shard cannot serve");
+                served += 1;
+            }
+            Err(rej) => match rej.reason {
+                RejectReason::ShardDown { shard } => {
+                    assert_eq!(shard, 2, "rejections name the dead shard");
+                    down += 1;
+                }
+                other => panic!("unexpected rejection: {other:?}"),
+            },
+        }
+    }
+    assert_eq!(served, 35, "survivors serve everything not queued on the victim");
+    assert_eq!(down, 5, "the victim's queued micro-batches get the typed ShardDown");
+    assert_eq!(snap.served(), 35);
+    assert_eq!(snap.rejected_down(), 5);
+    assert_eq!(snap.shards[2].rejected_down, 5, "the dying worker counts its own drain");
+    assert_eq!(snap.rejected_down_at_router, 0, "routing never placed work on the dead shard");
+    assert_eq!(snap.resolved(), 40, "fleet accounting identity under a mid-trace kill");
 }

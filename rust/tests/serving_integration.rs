@@ -7,9 +7,10 @@
 //! occupancy.
 
 use corvet::bench_harness::traffic::poisson_trace;
+use corvet::cluster::{InterconnectConfig, PartitionStrategy};
 use corvet::coordinator::{
     AdmissionConfig, AdmissionMode, BatcherConfig, ExecBackend, GovernorConfig, RejectReason,
-    Server, ServerConfig, WaveBackend,
+    RoutePolicy, Server, ServerConfig, ShardServiceConfig, ShardedService, WaveBackend,
 };
 use corvet::cordic::mac::ExecMode;
 use corvet::engine::EngineConfig;
@@ -522,4 +523,170 @@ fn shutdown_drains_with_accurate_reject_and_served_accounting() {
         rejected,
         "snapshot must count every typed rejection"
     );
+}
+
+// ─────────────────── fleet-wide admission (DESIGN.md §16) ───────────────────
+
+/// A data-parallel (replica) service over `shards` copies of a small MLP
+/// under an explicit admission config — the fleet-side analogue of
+/// `start_stalled`.
+fn fleet(shards: usize, config: ShardServiceConfig) -> ShardedService {
+    let net = paper_mlp(41);
+    let graph = net.to_ir().with_policy(&PolicyTable::uniform(
+        net.compute_layers(),
+        Precision::Fxp8,
+        ExecMode::Accurate,
+    ));
+    let engine = EngineConfig::pe64();
+    let plan = corvet::cluster::plan::plan(
+        &graph,
+        shards,
+        &engine,
+        &InterconnectConfig::default(),
+        PartitionStrategy::Data,
+    );
+    ShardedService::start_with(&plan, engine, config)
+}
+
+/// One-shot admission with a long batch window is the cluster tests'
+/// deterministic "stall": shard workers cycle-simulate (no wall-clock
+/// execute to sleep through), so queued micro-batches sit in the window
+/// until it expires or a drain arrives — exactly when queue caps and
+/// deadlines must do their job.
+fn window_config(queue_cap: usize, max_batch: usize, window: Duration) -> ShardServiceConfig {
+    ShardServiceConfig {
+        policy: RoutePolicy::RoundRobin,
+        admission: AdmissionConfig { mode: AdmissionMode::OneShot, queue_cap, deadline: None },
+        batcher: BatcherConfig { max_batch, max_wait: window },
+        governor: GovernorConfig {
+            approx_threshold: usize::MAX,
+            accurate_threshold: 0,
+            pinned: Some(ExecMode::Accurate),
+        },
+    }
+}
+
+#[test]
+fn fleet_queue_cap_rejections_are_typed_and_counted_per_shard() {
+    // burst 12 micro-batches round-robin across 2 shards whose one-shot
+    // windows hold everything queued: queue_cap 3 per shard admits 3 and
+    // bounces 3 on each — typed QueueFull, counted on the right shard
+    let mut svc = fleet(2, window_config(3, 8, Duration::from_millis(250)));
+    let pending: Vec<_> = (0..12).map(|_| svc.submit(2).1).collect();
+    let (mut served, mut rejected) = (0u64, 0u64);
+    let mut served_per_shard = [0u64; 2];
+    for rx in pending {
+        match rx.recv().expect("every micro-batch resolves") {
+            Ok(resp) => {
+                served += 1;
+                served_per_shard[resp.shard] += 1;
+            }
+            Err(rej) => {
+                assert!(
+                    matches!(rej.reason, RejectReason::QueueFull { cap: 3, .. }),
+                    "wrong rejection: {rej}"
+                );
+                rejected += 1;
+            }
+        }
+    }
+    assert_eq!(served, 6, "each shard's window admits queue_cap micro-batches");
+    assert_eq!(rejected, 6);
+    assert_eq!(served_per_shard, [3, 3], "the burst spreads across both shards");
+    let snap = svc.shutdown();
+    assert_eq!(snap.served(), 6);
+    assert_eq!(snap.rejected_queue_full(), 6);
+    for (s, shard) in snap.shards.iter().enumerate() {
+        assert_eq!(shard.completed, 3, "shard {s} serves its admitted micro-batches");
+        assert_eq!(shard.rejected_queue_full, 3, "shard {s} counts its own bounces");
+    }
+    assert_eq!(snap.resolved(), 12, "fleet accounting identity");
+}
+
+#[test]
+fn fleet_deadline_expires_in_the_window_before_pricing() {
+    // a deadline shorter than the shard's batch window: the micro-batch
+    // sits queued while the window holds (the stalled-shard regime),
+    // expires, and is diverted at dispatch — the engine never prices it
+    let mut svc = fleet(1, window_config(8, 8, Duration::from_millis(200)));
+    let (shard_a, a) = svc.submit(2);
+    let (shard_b, b) = svc.submit_with_deadline(2, Some(Duration::from_millis(20)));
+    assert_eq!(shard_a, Some(0));
+    assert_eq!(shard_b, Some(0), "the deadlined micro-batch is placed, then expires");
+
+    let resp = a.recv().expect("outcome").expect("no-deadline micro-batch is served");
+    assert!(resp.sim_cycles > 0);
+    let rej = b.recv().expect("outcome").expect_err("deadline must expire in the window");
+    match rej.reason {
+        RejectReason::DeadlineExpired { waited } => {
+            assert!(waited >= Duration::from_millis(20), "waited only {waited:?}")
+        }
+        other => panic!("expected DeadlineExpired, got {other:?}"),
+    }
+    let snap = svc.shutdown();
+    assert_eq!(snap.served(), 1);
+    assert_eq!(snap.rejected_deadline(), 1);
+    assert_eq!(
+        snap.shards[0].batches, 1,
+        "one dispatched chunk; the expired micro-batch never joined it"
+    );
+    assert_eq!(snap.resolved(), 2);
+}
+
+#[test]
+fn fleet_dispatch_is_fifo_within_a_shard_across_chunks() {
+    // 12 micro-batches drain through one shard in chunks of at most 4: by
+    // the time the last submission resolves, every earlier one must
+    // already hold its outcome — FIFO at chunk granularity, no overtaking
+    let mut svc = fleet(1, window_config(64, 4, Duration::from_millis(40)));
+    let mut pending: Vec<_> = (0..12).map(|i| svc.submit(i % 3 + 1).1).collect();
+    let last = pending.pop().unwrap();
+    let tail = last.recv().expect("outcome").expect("served");
+    assert_eq!(tail.shard, 0);
+    for (i, rx) in pending.iter().enumerate() {
+        let resp = rx
+            .try_recv()
+            .unwrap_or_else(|_| panic!("micro-batch {i} overtaken by the last submission"))
+            .expect("served");
+        assert_eq!(resp.id as usize, i + 1, "ids issue in submission order");
+    }
+    let snap = svc.shutdown();
+    assert_eq!(snap.served(), 12);
+    assert!(
+        snap.shards[0].batches >= 3,
+        "expected chunked dispatch, got {} batches",
+        snap.shards[0].batches
+    );
+}
+
+#[test]
+fn fleet_shutdown_drain_accounting_identity_sums_across_shards() {
+    // flood 3 shards' windows past their queue caps, then shut down before
+    // receiving anything: the drain must resolve every micro-batch, and
+    // the client-side tallies must equal the snapshot sums — fleet-wide
+    // `served + rejected == offered`
+    let mut svc = fleet(3, window_config(4, 8, Duration::from_millis(300)));
+    let pending: Vec<_> = (0..30).map(|_| svc.submit(1).1).collect();
+    let snap = svc.shutdown();
+
+    let (mut served, mut rejected_full) = (0u64, 0u64);
+    for rx in pending {
+        match rx.recv().expect("every micro-batch gets exactly one outcome") {
+            Ok(_) => served += 1,
+            Err(rej) => match rej.reason {
+                RejectReason::QueueFull { cap: 4, .. } => rejected_full += 1,
+                other => panic!("unexpected rejection: {other:?}"),
+            },
+        }
+    }
+    assert_eq!(served, 12, "each shard drains its 4 admitted micro-batches");
+    assert_eq!(rejected_full, 18);
+    assert_eq!(snap.served(), served);
+    assert_eq!(snap.rejected_queue_full(), rejected_full);
+    assert_eq!(snap.rejected_down(), 0);
+    assert_eq!(snap.resolved(), 30, "offered == served + rejected, summed across shards");
+    for s in &snap.shards {
+        assert_eq!(s.completed, 4);
+        assert_eq!(s.rejected_queue_full, 6);
+    }
 }

@@ -428,3 +428,63 @@ fn live_wave_server_exposes_valid_prometheus_mid_flight() {
     assert!(text.contains("corvet_requests_rejected_queue_full 0"));
     assert!(text.contains("corvet_requests_rejected_deadline 0"));
 }
+
+#[test]
+fn sharded_service_exposes_per_shard_labeled_prometheus() {
+    // the fleet exposition (`corvet cluster serve` scrapes this): every
+    // worker renders its full metrics families labeled shard="<i>", so
+    // concatenated payloads never collide, and the cluster-level gauges
+    // ride along unlabeled
+    use corvet::cluster::{InterconnectConfig, PartitionStrategy};
+    use corvet::coordinator::{RoutePolicy, ShardedService};
+    use corvet::cordic::mac::ExecMode;
+    use corvet::quant::{PolicyTable, Precision};
+
+    let net = paper_mlp(67);
+    let graph = net.to_ir().with_policy(&PolicyTable::uniform(
+        net.compute_layers(),
+        Precision::Fxp8,
+        ExecMode::Accurate,
+    ));
+    let engine = EngineConfig::pe64();
+    let plan = corvet::cluster::plan::plan(
+        &graph,
+        2,
+        &engine,
+        &InterconnectConfig::default(),
+        PartitionStrategy::Data,
+    );
+    let mut svc = ShardedService::start(&plan, engine, RoutePolicy::RoundRobin);
+    let pending: Vec<_> = (0..8).map(|_| svc.submit(1).1).collect();
+    for rx in pending {
+        rx.recv().expect("outcome").expect("served");
+    }
+    let text = svc.prometheus();
+    svc.shutdown();
+
+    assert_valid_prometheus(&text);
+    for s in 0..2 {
+        assert!(
+            text.contains(&format!("corvet_requests_completed{{shard=\"{s}\"}} 4")),
+            "shard {s} counter missing or unlabeled:\n{text}"
+        );
+        assert!(
+            text.contains(&format!("corvet_requests_rejected_shard_down{{shard=\"{s}\"}} 0")),
+            "zero-valued rejection counters must still render per shard"
+        );
+        assert!(
+            text.contains(&format!("corvet_queue_depth_bucket{{shard=\"{s}\",le=")),
+            "histogram buckets must merge the shard label ahead of le"
+        );
+        assert!(text.contains(&format!("corvet_queue_depth_count{{shard=\"{s}\"}}")));
+    }
+    assert!(text.contains("corvet_cluster_shards_alive 2"));
+    assert!(text.contains("corvet_cluster_rejected_down_router 0"));
+    // nothing leaks through unlabeled from a worker: every per-request
+    // family sample carries a shard label
+    for line in text.lines() {
+        if line.starts_with("corvet_requests_") {
+            assert!(line.contains("shard=\""), "unlabeled fleet sample: {line}");
+        }
+    }
+}

@@ -39,7 +39,13 @@ request (per_second = req/s), `p50_latency`/`p99_latency` rows carry that
 latency quantile in ns, and `occupancy_milli` rows carry mean lane
 occupancy x 1000 (unitless, bounded at 1000). The relative thresholds
 apply unchanged; tail-latency rows are the noisiest, which the seeded
-upper-envelope baseline accounts for.
+upper-envelope baseline accounts for. `BENCH_cluster_storm.json` follows
+the same conventions over the sharded fleet (`service_per_req` is per
+served micro-batch, `p99_latency` is the worst per-shard p99); its bench
+main additionally hard-asserts the fleet accounting identity
+`served + rejected_full + rejected_deadline + rejected_down == offered`
+under 2x bursty overload with a mid-trace shard kill, so a run that even
+reaches the gate already proves the typed-outcome contract.
 
 Exit status 0 when everything passes, 1 otherwise. Stdlib only.
 """
