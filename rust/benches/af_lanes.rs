@@ -1,0 +1,100 @@
+//! Bench: lane-shared AF execution — what borrowing idle MAC lane-slots
+//! for AF micro-ops (DESIGN.md §17) buys over the dedicated AF block, on a
+//! softmax-heavy graph where the dedicated block is the bottleneck.
+//! Captured results belong in EXPERIMENTS.md §af_lanes.
+//!
+//! Three sections:
+//!
+//! 1. the hidden-vs-borrowed A/B table (`tables::af_lanes`): separate vs
+//!    lane-shared simulated cycles per workload × lane policy, the cycle
+//!    fraction the borrow removes, and the sustained GOPS both schedules
+//!    price to at identical silicon;
+//! 2. host-executed wave runs with lane borrowing threaded through the
+//!    executor: off / auto / fixed-64 pipeline totals and the peak borrow,
+//!    with output bit-identity spot-checked inline — the schedule re-times
+//!    the drain, it never touches the arithmetic;
+//! 3. wall-clock of `forward_wave` with lane sharing off vs auto — the
+//!    borrow is bookkeeping, so host time should be flat while modelled
+//!    cycles drop.
+
+use corvet::bench_harness::{bench_threads, BenchReport, Bencher};
+use corvet::cordic::mac::ExecMode;
+use corvet::engine::{AfLanes, EngineConfig};
+use corvet::model::workloads::{paper_mlp, transformer_mlp};
+use corvet::model::Tensor;
+use corvet::quant::{PolicyTable, Precision};
+use corvet::tables;
+use corvet::testutil::Xoshiro256;
+
+fn main() {
+    // --- 1. the simulated A/B across workloads and lane policies
+    print!("{}", tables::af_lanes().render());
+
+    // --- 2. host-executed wave runs, lane borrowing threaded through
+    let mut rng = Xoshiro256::new(29);
+    println!("\nhost-executed wave runs, 64 PEs — separate vs lane-shared:");
+    println!(
+        "  {:>14} {:>10} {:>12} {:>12} {:>12} {:>10}",
+        "model", "policy", "off cyc", "auto cyc", "fixed64 cyc", "max borrow"
+    );
+    let mlp = paper_mlp(23);
+    let tf = transformer_mlp(31);
+    for net in [&mlp, &tf] {
+        let n: usize = net.input_shape.iter().product();
+        let x = Tensor::vector(&rng.uniform_vec(n, -0.9, 0.9));
+        for (precision, mode) in [
+            (Precision::Fxp8, ExecMode::Approximate),
+            (Precision::Fxp8, ExecMode::Accurate),
+        ] {
+            let policy = PolicyTable::uniform(net.compute_layers(), precision, mode);
+            let run = |lanes: AfLanes| {
+                let mut cfg = EngineConfig::pe64();
+                cfg.threads = bench_threads();
+                cfg.af_lanes = lanes;
+                net.forward_wave(&x, &policy, &cfg)
+            };
+            let (y_off, s_off) = run(AfLanes::Off);
+            let (y_auto, s_auto) = run(AfLanes::Auto);
+            let (y_fix, s_fix) = run(AfLanes::Fixed(64));
+            for y in [&y_auto, &y_fix] {
+                assert_eq!(y.data(), y_off.data(), "lane sharing must be functionally invisible");
+            }
+            assert!(s_auto.total_pipeline_cycles() <= s_off.total_pipeline_cycles());
+            assert!(s_fix.total_pipeline_cycles() <= s_off.total_pipeline_cycles());
+            let borrow =
+                s_auto.per_layer.iter().map(|l| l.af_lanes_borrowed).max().unwrap_or(0);
+            println!(
+                "  {:>14} {:>10} {:>12} {:>12} {:>12} {:>10}",
+                net.name,
+                format!("{precision}/{mode:?}"),
+                s_off.total_pipeline_cycles(),
+                s_auto.total_pipeline_cycles(),
+                s_fix.total_pipeline_cycles(),
+                borrow,
+            );
+        }
+    }
+
+    // --- 3. wall-clock: the borrow is bookkeeping, not arithmetic
+    let policy =
+        PolicyTable::uniform(mlp.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+    let x = Tensor::vector(&rng.uniform_vec(mlp.input_shape.iter().product(), -0.9, 0.9));
+    let b = Bencher::from_env(Bencher { warmup: 2, samples: 10, iters_per_sample: 2 });
+    let mut rep = BenchReport::new();
+    for lanes in [AfLanes::Off, AfLanes::Auto] {
+        let mut cfg = EngineConfig::pe64();
+        cfg.threads = bench_threads();
+        cfg.af_lanes = lanes;
+        rep.push(
+            b.run(&format!("forward_wave af-lanes={lanes}"), || {
+                mlp.forward_wave(&x, &policy, &cfg)
+            }),
+        );
+    }
+    println!();
+    print!("{}", rep.render("af_lanes host wall-clock (paper_mlp, 64 PEs)"));
+    match corvet::bench_harness::write_bench_json("af_lanes", &rep) {
+        Ok(p) => eprintln!("wrote {}", p.display()),
+        Err(e) => eprintln!("bench JSON not written: {e}"),
+    }
+}

@@ -77,15 +77,20 @@ corvet — CORDIC-powered vector engine (paper reproduction)
 USAGE: corvet <command> [options]
 
 COMMANDS:
-  table <1|2|3|4|5|packed|af> [--csv] regenerate a paper table (`packed` =
+  table <1|2|3|4|5|packed|af|lanes> [--csv]
+                                     regenerate a paper table (`packed` =
                                      sub-word lane throughput: the 4x claim;
-                                     `af` = AF-overlap hidden-cycle A/B)
+                                     `af` = AF-overlap hidden-cycle A/B;
+                                     `lanes` = lane-shared AF schedule A/B)
   fig <11|13> [--quick] [--csv]      regenerate a paper figure's data
-  simulate [--workload tinyyolo|vgg16|vit-mlp] [--pes N] [--precision fxp4|8|16]
-           [--mode approx|accurate] [--packing on|off] [--overlap on|off]
+  simulate [--workload tinyyolo|vgg16|attn-mlp|vit-mlp] [--pes N]
+           [--precision fxp4|8|16] [--mode approx|accurate]
+           [--packing on|off] [--overlap on|off] [--af-lanes auto|off|N]
            [--threads T]             run the vector-engine simulator
                                      (--packing off = one element per lane A/B;
                                      --overlap off = serial MAC-then-AF A/B;
+                                     --af-lanes = idle MAC lane-slots absorb
+                                     AF micro-ops, DESIGN.md §17;
                                      --threads 0 = auto, 1 = serial host)
   train [--quick] [--out FILE]       train the MLP on synthetic data (FP32)
   sensitivity [--quick] [--budget F] run the accuracy-sensitivity heuristic
@@ -102,10 +107,11 @@ COMMANDS:
                                      (0 = size to the request count);
                                      --deadline-ms rejects requests that wait
                                      longer than D (0 = no deadline)
-  cluster [--workload tinyyolo|vgg16|vit-mlp] [--shards M] [--pes N]
+  cluster [--workload tinyyolo|vgg16|attn-mlp|vit-mlp] [--shards M] [--pes N]
           [--strategy pipeline|tensor|data] [--batches B] [--batch S]
           [--precision P] [--mode approx|accurate] [--packing on|off]
-          [--overlap on|off] [--threads T] [--sweep] [--csv] [--trace-out FILE]
+          [--overlap on|off] [--af-lanes auto|off|N] [--threads T]
+          [--sweep] [--csv] [--trace-out FILE]
                                      sharded multi-engine simulation
                                      (S samples per micro-batch, packed waves)
   cluster serve [--workload W] [--shards M] [--pes N] [--strategy data|...]

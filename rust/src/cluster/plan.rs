@@ -10,7 +10,11 @@
 //!   model, which since the fused AF pipeline (DESIGN.md §12) means the DP
 //!   boundaries see **overlapped** stage times: a layer whose AF drain
 //!   hides behind its MAC waves weighs its pipeline-law makespan
-//!   ([`crate::ir::exec::layer_pipeline_cycles`]), not the serial sum.
+//!   ([`crate::ir::exec::layer_pipeline_cycles`]), not the serial sum —
+//!   and when the engine borrows idle MAC lane-slots for AF micro-ops
+//!   (`af_lanes`, DESIGN.md §17) the weights reprice through
+//!   [`crate::ir::exec::layer_pipeline_cycles_shared`], so the DP cuts
+//!   move with the lane-sharing schedule.
 //!   Stage boundaries pay a point-to-point activation transfer.
 //! * **Tensor** (output-channel-parallel): every layer is split across all
 //!   shards; convolutions all-gather their output slices, dense layers
@@ -435,6 +439,40 @@ mod tests {
             assert_eq!(s.weight_words, g.total_params());
         }
         assert!((plan.mac_imbalance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pipeline_dp_reprices_through_the_lane_sharing_law() {
+        // the DP's layer weights are simulated cycles, so a lane-sharing
+        // policy must shrink the planned bottleneck stage on a
+        // softmax-heavy graph: element-wise smaller weights can only
+        // lower the min-max optimum
+        use crate::engine::AfLanes;
+        use crate::ir::workloads::attention_mlp;
+        let g = annotated(&attention_mlp());
+        let off = EngineConfig::pe256();
+        let mut shared = off;
+        shared.af_lanes = AfLanes::Fixed(64);
+        let bottleneck = |engine: &EngineConfig| -> u64 {
+            let p = plan(
+                &g,
+                3,
+                engine,
+                &InterconnectConfig::default(),
+                PartitionStrategy::Pipeline,
+            );
+            p.shards
+                .iter()
+                .map(|s| VectorEngine::new(*engine).run_ir(&s.ir).total_cycles)
+                .max()
+                .unwrap()
+        };
+        let b_off = bottleneck(&off);
+        let b_shared = bottleneck(&shared);
+        assert!(
+            b_shared < b_off,
+            "lane sharing must shrink the bottleneck stage: {b_shared} vs {b_off}"
+        );
     }
 
     #[test]

@@ -218,7 +218,10 @@ impl WaveBackend {
     /// lane law *and* the AF-overlap pipeline law
     /// ([`crate::ir::exec::layer_pipeline_cycles`]): turning `af_overlap`
     /// off on the engine config raises the estimate, exactly as it raises
-    /// the simulated serving price.
+    /// the simulated serving price. The lane-sharing schedule flows the
+    /// same way: an `af_lanes` policy that borrows idle MAC slots
+    /// ([`crate::ir::exec::layer_pipeline_cycles_shared`], DESIGN.md §17)
+    /// lowers the quote without touching served bits.
     pub fn estimated_batch_cycles(&self, batch: usize, mode: ExecMode) -> u64 {
         let key = (batch.max(1), mode);
         if let Some(&cycles) = self.quote_cache.borrow().get(&key) {
@@ -363,6 +366,40 @@ mod tests {
         let b8 = on.estimated_batch_cycles(8, ExecMode::Approximate);
         let b1 = on.estimated_batch_cycles(1, ExecMode::Approximate);
         assert!(b8 < 8 * b1, "packed dispatch must be sub-linear: {b8} vs 8x{b1}");
+    }
+
+    #[test]
+    fn wave_backend_latency_estimate_inherits_the_lane_sharing_law() {
+        use crate::engine::AfLanes;
+        let net = paper_mlp(17);
+        let off_cfg = EngineConfig::pe64();
+        let mut shared_cfg = off_cfg;
+        shared_cfg.af_lanes = AfLanes::Fixed(64);
+        let off = WaveBackend::new(net.clone(), off_cfg, Precision::Fxp8).unwrap();
+        let shared = WaveBackend::new(net.clone(), shared_cfg, Precision::Fxp8).unwrap();
+        for mode in [ExecMode::Approximate, ExecMode::Accurate] {
+            let e_shared = shared.estimated_batch_cycles(8, mode);
+            let e_off = off.estimated_batch_cycles(8, mode);
+            assert!(e_shared > 0);
+            assert!(
+                e_shared <= e_off,
+                "{mode:?}: lane-shared quote {e_shared} must not exceed separate {e_off}"
+            );
+        }
+        // with overlap disabled the AF drain is fully exposed, so borrowed
+        // lanes must strictly shorten the quote on an AF-bearing model
+        let mut serial_off = off_cfg;
+        serial_off.af_overlap = false;
+        let mut serial_shared = shared_cfg;
+        serial_shared.af_overlap = false;
+        let off = WaveBackend::new(net.clone(), serial_off, Precision::Fxp8).unwrap();
+        let shared = WaveBackend::new(net, serial_shared, Precision::Fxp8).unwrap();
+        let e_off = off.estimated_batch_cycles(8, ExecMode::Accurate);
+        let e_shared = shared.estimated_batch_cycles(8, ExecMode::Accurate);
+        assert!(
+            e_shared < e_off,
+            "exposed drain must shrink under borrowed lanes: {e_shared} vs {e_off}"
+        );
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Lane-resident AF micro-kernels: every activation function of the
+//! multi-AF block decomposed into the micro-op classes a CORDIC lane
+//! executes — hyperbolic rotation, linear vectoring, linear rotation and
+//! bypass — under the same per-lane iteration law as [`super::mac`]
+//! (DESIGN.md §17).
+//!
+//! The paper's multi-AF block and both related cores ("CORDIC Is All You
+//! Need"; CARMEN) run sigmoid/tanh/exp on the *same* iterative shift-add
+//! engine as MACs. This module is the software twin of that claim: an
+//! [`AfKernel`] evaluates an activation as an ordered [`MicroOp`] program
+//! whose phases call the exact guard-format primitives
+//! ([`hyperbolic::tanh`], [`hyperbolic::exp`], [`linear::multiply`],
+//! [`linear::divide`]) that [`crate::activation::funcs`] composes — so the
+//! lane schedule re-times the work but **never changes the arithmetic**.
+//! Two invariants are pinned by the test matrix below and by
+//! `tests/ir_parity.rs`:
+//!
+//! * **Bit identity** — `AfKernel::eval(f, x)` returns the same guard word
+//!   as `funcs::apply(f, x, iters)` for every `ActFn` × iteration budget,
+//!   and [`AfKernel::eval_softmax`] matches `funcs::softmax` element-wise.
+//! * **Cycle identity** — the micro-op program's per-datapath cycles fold
+//!   to exactly the [`AfCost`] the shared block books, so a drain served
+//!   by borrowed MAC lane-slots
+//!   ([`crate::ir::exec::layer_pipeline_cycles_shared`]) divides the same
+//!   cycle mass the separate-block schedule would serve.
+
+use super::{cycles_for_iters, hyperbolic, linear, ONE};
+use crate::activation::funcs::AfCost;
+use crate::activation::ActFn;
+
+/// One scheduled lane micro-op: a CORDIC phase class plus its iteration
+/// budget. A micro-op is the unit the lane-sharing scheduler moves between
+/// the shared AF block and borrowed MAC lane-slots — phases are atomic, so
+/// rescheduling can only re-time them, never split or alter them.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MicroOp {
+    /// Hyperbolic-rotation phase (sinh/cosh/exp) of `n` micro-rotations.
+    HyperRotate(u32),
+    /// Linear-vectoring phase (division / normalisation) of `n`
+    /// micro-rotations.
+    LinearVector(u32),
+    /// Linear-rotation phase on the block's small auxiliary multipliers
+    /// (GELU/Swish/SELU scaling) of `n` micro-rotations.
+    LinearRotate(u32),
+    /// Bypass buffer / mux pass (ReLU, shift-add fixups, max scans): one
+    /// cycle, no CORDIC iterations.
+    Bypass,
+}
+
+impl MicroOp {
+    /// Clock cycles this micro-op occupies a lane, under the same
+    /// two-stage-per-cycle unrolling as the MAC datapath
+    /// ([`cycles_for_iters`]).
+    pub fn cycles(&self) -> u32 {
+        match *self {
+            MicroOp::HyperRotate(n) | MicroOp::LinearVector(n) | MicroOp::LinearRotate(n) => {
+                cycles_for_iters(n)
+            }
+            MicroOp::Bypass => 1,
+        }
+    }
+
+    /// This micro-op's cost on the shared block's per-datapath ledger —
+    /// the bridge between the lane schedule and [`AfCost`] accounting.
+    pub fn cost(&self) -> AfCost {
+        match *self {
+            MicroOp::HyperRotate(n) => AfCost { hr: cycles_for_iters(n), ..Default::default() },
+            MicroOp::LinearVector(n) => AfCost { lv: cycles_for_iters(n), ..Default::default() },
+            MicroOp::LinearRotate(n) => AfCost { lin: cycles_for_iters(n), ..Default::default() },
+            MicroOp::Bypass => AfCost { bypass: 1, ..Default::default() },
+        }
+    }
+}
+
+/// Outcome of one lane-resident AF evaluation: the guard-format value plus
+/// the ordered micro-op program that produced it.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LaneEval {
+    /// Result in the internal guard format (bit-identical to
+    /// [`crate::activation::funcs::apply`]).
+    pub value: i64,
+    /// Ordered micro-op phases the lane executed.
+    pub ops: Vec<MicroOp>,
+}
+
+impl LaneEval {
+    /// Fold the program into the shared block's per-datapath cost ledger —
+    /// equals `funcs::apply`'s [`AfCost`] exactly (tested per ActFn ×
+    /// iteration budget).
+    pub fn cost(&self) -> AfCost {
+        self.ops.iter().fold(AfCost::default(), |a, op| a.merge(op.cost()))
+    }
+
+    /// Total lane cycles of the program (identical to
+    /// [`AfCost::total`] of [`Self::cost`] by construction: phases are
+    /// sequential on one lane just as they are on the shared block).
+    pub fn cycles(&self) -> u64 {
+        self.ops.iter().map(|op| op.cycles() as u64).sum()
+    }
+}
+
+/// SELU constants (guard-format quantisation happens at use, matching
+/// `activation::funcs` bit-for-bit).
+const SELU_LAMBDA: f64 = 1.0507009873554805;
+const SELU_ALPHA: f64 = 1.6732632423543772;
+
+/// A per-lane AF executor with a fixed iteration budget — the software
+/// twin of one MAC lane-slot temporarily reconfigured to run AF micro-ops
+/// (the paper's reconfigurable shift-add datapath; DESIGN.md §17).
+#[derive(Debug, Clone, Copy)]
+pub struct AfKernel {
+    /// CORDIC micro-rotations per phase (the runtime accuracy knob, same
+    /// law as [`super::mac::MacConfig::iterations`]).
+    pub iters: u32,
+}
+
+impl AfKernel {
+    /// Kernel with an explicit per-phase iteration budget.
+    pub fn new(iters: u32) -> Self {
+        AfKernel { iters }
+    }
+
+    /// Evaluate a scalar activation as a lane micro-op program.
+    /// Bit-identical to `funcs::apply(f, x, self.iters)` in both value and
+    /// folded cost; panics on [`ActFn::Softmax`] (vector-valued — use
+    /// [`Self::eval_softmax`]).
+    pub fn eval(&self, f: ActFn, x: i64) -> LaneEval {
+        let it = self.iters;
+        let mut ops = Vec::new();
+        let value = match f {
+            ActFn::Identity => x,
+            ActFn::Relu => {
+                ops.push(MicroOp::Bypass);
+                x.max(0)
+            }
+            ActFn::Tanh => self.tanh_phases(x, &mut ops),
+            ActFn::Sigmoid => self.sigmoid_phases(x, &mut ops),
+            ActFn::Gelu => {
+                // c = sqrt(2/pi), k = 0.044715 — the same guard constants
+                // funcs::gelu quantises
+                let c = (0.7978845608028654 * ONE as f64) as i64;
+                let k = (0.044715 * ONE as f64) as i64;
+                // mult #1 pipeline: x², then x³·k — one LIN phase
+                ops.push(MicroOp::LinearRotate(it));
+                let x2 = linear::multiply(x, x, it).value;
+                let x3k = linear::multiply(linear::multiply(x2, x, it).value, k, it).value;
+                let inner = linear::multiply(x + x3k, c, it).value;
+                let t = self.tanh_phases(inner, &mut ops);
+                // mult #2 pipeline: c·(..) and ½x·tanh — one LIN phase
+                ops.push(MicroOp::LinearRotate(it));
+                ops.push(MicroOp::Bypass);
+                let half_x = x >> 1;
+                half_x + linear::multiply(half_x, t, it).value
+            }
+            ActFn::Swish => {
+                let s = self.sigmoid_phases(x, &mut ops);
+                ops.push(MicroOp::LinearRotate(it));
+                linear::multiply(x, s, it).value
+            }
+            ActFn::Selu => {
+                let lambda = (SELU_LAMBDA * ONE as f64) as i64;
+                if x > 0 {
+                    ops.push(MicroOp::LinearRotate(it));
+                    linear::multiply(x, lambda, it).value
+                } else {
+                    let la = (SELU_LAMBDA * SELU_ALPHA * ONE as f64) as i64;
+                    ops.push(MicroOp::HyperRotate(it));
+                    let e = hyperbolic::exp(x, it);
+                    ops.push(MicroOp::LinearRotate(it));
+                    linear::multiply(e.value - ONE, la, it).value
+                }
+            }
+            ActFn::Softmax => panic!("softmax is vector-valued; call AfKernel::eval_softmax"),
+        };
+        LaneEval { value, ops }
+    }
+
+    /// Softmax over a guard-format vector as one lane program: a bypass
+    /// max-scan, one HR exp phase per element, one LV normalisation phase
+    /// per element — element-wise bit-identical to `funcs::softmax` with
+    /// the same folded cost.
+    pub fn eval_softmax(&self, xs: &[i64]) -> (Vec<i64>, Vec<MicroOp>) {
+        assert!(!xs.is_empty(), "softmax of empty vector");
+        let it = self.iters;
+        let mut ops = Vec::with_capacity(3 * xs.len());
+        let m = *xs.iter().max().unwrap();
+        for _ in xs {
+            ops.push(MicroOp::Bypass); // max scan / subtract mux
+        }
+        let mut exps = Vec::with_capacity(xs.len());
+        let mut sum: i64 = 0;
+        for &x in xs {
+            ops.push(MicroOp::HyperRotate(it));
+            let e = hyperbolic::exp(x - m, it);
+            exps.push(e.value);
+            sum += e.value;
+        }
+        let ys = exps
+            .iter()
+            .map(|&e| {
+                ops.push(MicroOp::LinearVector(it));
+                linear::divide(e, sum, it).value
+            })
+            .collect();
+        (ys, ops)
+    }
+
+    /// tanh as the lane's two-phase program: HR rotation then LV division.
+    /// The arithmetic is [`hyperbolic::tanh`] itself — the one function the
+    /// shared block evaluates — so rescheduling cannot change a bit.
+    fn tanh_phases(&self, x: i64, ops: &mut Vec<MicroOp>) -> i64 {
+        ops.push(MicroOp::HyperRotate(self.iters));
+        ops.push(MicroOp::LinearVector(self.iters));
+        hyperbolic::tanh(x, self.iters).value
+    }
+
+    /// sigmoid(x) = ½(1 + tanh(x/2)): the tanh phases plus one bypass
+    /// shift-add fixup, exactly funcs::sigmoid's composition.
+    fn sigmoid_phases(&self, x: i64, ops: &mut Vec<MicroOp>) -> i64 {
+        let t = self.tanh_phases(x >> 1, ops);
+        ops.push(MicroOp::Bypass);
+        (ONE + t) >> 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::activation::funcs;
+    use crate::cordic::to_guard;
+    use crate::testutil::check_prop;
+
+    /// Every scalar ActFn the block evaluates (Softmax is vector-valued).
+    const SCALAR_FNS: [ActFn; 7] = [
+        ActFn::Identity,
+        ActFn::Relu,
+        ActFn::Tanh,
+        ActFn::Sigmoid,
+        ActFn::Gelu,
+        ActFn::Swish,
+        ActFn::Selu,
+    ];
+
+    const BUDGETS: [u32; 6] = [4, 8, 12, 16, 20, 24];
+
+    #[test]
+    fn lane_eval_bit_identical_to_funcs_for_every_actfn_and_budget() {
+        // the tentpole acceptance matrix: value AND per-datapath cost must
+        // match the shared-block reference exactly — the lane schedule
+        // never changes arithmetic
+        for &iters in &BUDGETS {
+            let k = AfKernel::new(iters);
+            for f in SCALAR_FNS {
+                for x in [-6.0, -2.5, -1.0, -0.3, 0.0, 0.1, 0.7, 1.3, 3.0, 7.5] {
+                    let g = to_guard(x);
+                    let lane = k.eval(f, g);
+                    let (want, want_cost) = funcs::apply(f, g, iters);
+                    assert_eq!(lane.value, want, "{f}({x}) @ {iters} iters: value drift");
+                    assert_eq!(lane.cost(), want_cost, "{f}({x}) @ {iters} iters: cost drift");
+                    assert_eq!(
+                        lane.cycles(),
+                        want_cost.total() as u64,
+                        "{f}({x}) @ {iters} iters: cycle ledger drift"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn softmax_bit_identical_to_funcs() {
+        for &iters in &BUDGETS {
+            let k = AfKernel::new(iters);
+            let xs: Vec<i64> =
+                [-2.0, -0.5, 0.0, 0.9, 2.4, 4.0].iter().map(|&v| to_guard(v)).collect();
+            let (ys, ops) = k.eval_softmax(&xs);
+            let (want, want_cost) = funcs::softmax(&xs, iters);
+            assert_eq!(ys, want, "softmax values drift at {iters} iters");
+            let cost = ops.iter().fold(AfCost::default(), |a, op| a.merge(op.cost()));
+            assert_eq!(cost, want_cost, "softmax cost drift at {iters} iters");
+        }
+    }
+
+    #[test]
+    fn prop_lane_eval_matches_funcs_on_random_inputs() {
+        // seeded via CORVET_PROP_SEED like every property in the crate
+        check_prop("afkernel bit-identity on random inputs", |rng| {
+            let iters = BUDGETS[rng.index(BUDGETS.len())];
+            let f = SCALAR_FNS[rng.index(SCALAR_FNS.len())];
+            let x = to_guard(rng.uniform(-8.0, 8.0));
+            let lane = AfKernel::new(iters).eval(f, x);
+            let (want, want_cost) = funcs::apply(f, x, iters);
+            if lane.value != want {
+                return Err(format!("{f}@{iters}: lane {} != block {want}", lane.value));
+            }
+            if lane.cost() != want_cost {
+                return Err(format!("{f}@{iters}: cost {:?} != {:?}", lane.cost(), want_cost));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn micro_op_cycles_follow_the_mac_iteration_law() {
+        // one lane cycle executes STAGES_PER_CYCLE micro-rotations, the
+        // same unrolling as the MAC datapath
+        for &n in &BUDGETS {
+            assert_eq!(MicroOp::HyperRotate(n).cycles(), cycles_for_iters(n));
+            assert_eq!(MicroOp::LinearVector(n).cycles(), cycles_for_iters(n));
+            assert_eq!(MicroOp::LinearRotate(n).cycles(), cycles_for_iters(n));
+        }
+        assert_eq!(MicroOp::Bypass.cycles(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "softmax is vector-valued")]
+    fn scalar_eval_rejects_softmax() {
+        AfKernel::new(12).eval(ActFn::Softmax, 0);
+    }
+}

@@ -115,27 +115,34 @@ pub fn exp(t: i64, iters: u32) -> CordicResult {
 /// `tanh t` for any `t`: direct HR rotation + LV division when within
 /// convergence; fold through `e^{2t}` otherwise.
 /// `value = tanh(t)`; cycle cost covers both phases.
+///
+/// Odd by construction: negative arguments fold to `-tanh(|t|)` **before**
+/// any CORDIC phase runs, so `tanh(-t) == -tanh(t)` holds bit-exactly at
+/// every iteration budget (the micro-rotation direction decisions are not
+/// sign-symmetric at the bit level, so computing the negative side
+/// directly would break the identity by an LSB on some inputs; the fold is
+/// a mux, free in hardware). Property-tested in `cordic/tests.rs`.
 pub fn tanh(t: i64, iters: u32) -> CordicResult {
+    if t < 0 {
+        let r = tanh(t.saturating_neg(), iters);
+        return CordicResult { value: r.value.saturating_neg(), ..r };
+    }
     // Convergence bound ~1.1182; stay well inside it.
     let bound = (1.1 * ONE as f64) as i64;
-    if t.abs() <= bound {
+    if t <= bound {
         let cs = cosh_sinh(t, iters);
         let d = linear::divide(cs.aux, cs.value, iters);
         return R::new(d.value, 0, iters * 2);
     }
-    // tanh(t) = 1 - 2 / (e^{2t} + 1), with sign symmetry.
-    let neg = t < 0;
-    let ta = t.abs();
+    // tanh(t) = 1 - 2 / (e^{2t} + 1).
     // saturate: tanh(>= ~10) == 1 at guard precision
-    if ta >= 10 * ONE {
-        let one = ONE;
-        return R::new(if neg { -one } else { one }, 0, iters);
+    if t >= 10 * ONE {
+        return R::new(ONE, 0, iters);
     }
-    let e2t = exp(ta << 1, iters);
+    let e2t = exp(t << 1, iters);
     let denom = e2t.value + ONE;
     let frac = linear::divide(2 * ONE, denom, iters);
-    let v = ONE - frac.value;
-    R::new(if neg { -v } else { v }, 0, iters * 2)
+    R::new(ONE - frac.value, 0, iters * 2)
 }
 
 /// Hyperbolic vectoring: drives `y → 0`, accumulating `atanh(y/x)` in `z`.

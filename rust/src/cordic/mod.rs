@@ -27,6 +27,7 @@
 //! formats happens at the [`mac`] / [`crate::activation`] boundary, exactly
 //! where the RTL width-converts.
 
+pub mod afkernel;
 pub mod circular;
 pub mod hyperbolic;
 pub mod linear;

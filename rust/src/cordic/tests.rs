@@ -73,3 +73,156 @@ fn prop_div_then_mul_is_identity() {
         }
     });
 }
+
+// ---- hyperbolic convergence-law property suite (PR 10 satellite) -----------
+//
+// The per-iteration convergence law: after n micro-rotations the residual
+// angle is ~atanh(2^-n) ≈ 2^-n, so the output error is bounded by
+// C · 2^-n plus a guard-quantisation floor. The budgets below are the ones
+// the lane-shared AF kernel runs at; every random case replays under
+// CORVET_PROP_SEED through the crate's check_prop hook.
+
+/// Iteration budgets the AF datapath is specified at.
+const AF_BUDGETS: [u32; 4] = [8, 12, 16, 24];
+
+/// Error bound of the per-iteration convergence law at `iters`
+/// micro-rotations: geometric in the budget, floored at the guard
+/// quantisation noise the two chained phases (HR + LV) accumulate.
+fn convergence_tol(iters: u32) -> f64 {
+    8.0 * (-(iters as f64)).exp2() + 4e-6
+}
+
+#[test]
+fn tanh_error_bounded_by_the_convergence_law_across_the_domain() {
+    // deterministic sweep over the full range-folded domain: the direct
+    // HR+LV branch (|t| <= 1.1), the e^{2t} fold, and saturation
+    for &iters in &AF_BUDGETS {
+        let tol = convergence_tol(iters);
+        let mut t = -12.0f64;
+        while t <= 12.0 + 1e-9 {
+            let got = from_guard(hyperbolic::tanh(to_guard(t), iters).value);
+            let want = t.tanh();
+            assert!(
+                (got - want).abs() <= tol,
+                "tanh({t}) @ {iters} iters: |{got} - {want}| > {tol}"
+            );
+            t += 0.0625;
+        }
+    }
+}
+
+#[test]
+fn exp_relative_error_bounded_by_the_convergence_law() {
+    for &iters in &AF_BUDGETS {
+        let tol = convergence_tol(iters);
+        let mut t = -6.0f64;
+        while t <= 4.0 + 1e-9 {
+            let got = from_guard(hyperbolic::exp(to_guard(t), iters).value);
+            let want = t.exp();
+            assert!(
+                (got - want).abs() <= tol * (1.0 + want),
+                "exp({t}) @ {iters} iters: |{got} - {want}| > {tol} rel"
+            );
+            t += 0.0625;
+        }
+    }
+}
+
+#[test]
+fn prop_convergence_law_holds_on_random_inputs() {
+    check_prop("tanh/exp error inside the per-iteration bound", |rng| {
+        let iters = AF_BUDGETS[rng.index(AF_BUDGETS.len())];
+        let tol = convergence_tol(iters);
+        let t = rng.uniform(-10.0, 10.0);
+        let th = from_guard(hyperbolic::tanh(to_guard(t), iters).value);
+        if (th - t.tanh()).abs() > tol {
+            return Err(format!("tanh({t})@{iters}: err {}", (th - t.tanh()).abs()));
+        }
+        let te = rng.uniform(-6.0, 4.0);
+        let ex = from_guard(hyperbolic::exp(to_guard(te), iters).value);
+        if (ex - te.exp()).abs() > tol * (1.0 + te.exp()) {
+            return Err(format!("exp({te})@{iters}: err {}", (ex - te.exp()).abs()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tanh_odd_symmetry_is_bit_exact() {
+    // not a tolerance band: tanh folds the sign before any CORDIC phase,
+    // so the identity holds on raw guard words at every budget
+    check_prop("tanh(-x) == -tanh(x) bit-exact", |rng| {
+        let iters = AF_BUDGETS[rng.index(AF_BUDGETS.len())];
+        let g = to_guard(rng.uniform(-12.0, 12.0));
+        let p = hyperbolic::tanh(g, iters).value;
+        let n = hyperbolic::tanh(-g, iters).value;
+        if n == -p {
+            Ok(())
+        } else {
+            Err(format!("raw {g}@{iters}: tanh(-x)={n} != -tanh(x)={}", -p))
+        }
+    });
+}
+
+#[test]
+fn tanh_odd_symmetry_bit_exact_on_the_branch_edges() {
+    // pin the identity exactly where the implementation switches branches
+    for &iters in &AF_BUDGETS {
+        for t in [0.0, 1e-6, 0.5, 1.0999, 1.1001, 2.0, 9.9999, 10.0, 20.0] {
+            let g = to_guard(t);
+            let p = hyperbolic::tanh(g, iters).value;
+            let n = hyperbolic::tanh(-g, iters).value;
+            assert_eq!(n, -p, "tanh odd symmetry broken at ±{t} @ {iters} iters");
+        }
+    }
+}
+
+#[test]
+fn repeated_iterations_cover_the_extended_convergence_domain() {
+    // Walther repeats at schedule indices 4 and 13 extend rotation
+    // convergence to sum(atanh 2^-i, with repeats) ≈ 1.1182; without them
+    // arguments near the edge would not converge. The repeat at 4 is
+    // inside every budget here; the repeat at 13 is exercised by the
+    // 16/24-iteration budgets (schedule positions 14/15).
+    let s: Vec<u32> = hyperbolic::SCHEDULE.iter().take(16).copied().collect();
+    assert_eq!(s.iter().filter(|&&i| i == 4).count(), 2, "repeat at i=4");
+    assert_eq!(s.iter().filter(|&&i| i == 13).count(), 2, "repeat at i=13");
+    for &iters in &AF_BUDGETS {
+        let tol = convergence_tol(iters);
+        // domain-edge arguments only converge because of the repeats
+        for t in [1.0, 1.05, 1.09, 1.1] {
+            let r = hyperbolic::cosh_sinh(to_guard(t), iters);
+            let (c, sh) = (from_guard(r.value), from_guard(r.aux));
+            assert!(
+                (c - t.cosh()).abs() <= tol * t.cosh(),
+                "cosh({t}) @ {iters}: {c} vs {}",
+                t.cosh()
+            );
+            assert!(
+                (sh - t.sinh()).abs() <= tol * t.cosh(),
+                "sinh({t}) @ {iters}: {sh} vs {}",
+                t.sinh()
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_rotation_residual_shrinks_with_the_schedule() {
+    // the z-residual after n micro-rotations is bounded by the tail of the
+    // atanh table — the direct statement of the per-iteration law
+    check_prop("rotate_raw residual bounded by the schedule tail", |rng| {
+        let iters = AF_BUDGETS[rng.index(AF_BUDGETS.len())];
+        let t = rng.uniform(-1.1, 1.1);
+        let x0 = hyperbolic::gain_inverse(iters);
+        let (_, _, z) = hyperbolic::rotate_raw(x0, 0, to_guard(t), iters);
+        // last applied shift index for this budget
+        let last = hyperbolic::SCHEDULE[iters as usize - 1];
+        let bound = 2.0 * (2f64.powi(-(last as i32))).atanh() + 1e-7;
+        if from_guard(z).abs() <= bound {
+            Ok(())
+        } else {
+            Err(format!("t={t}@{iters}: residual {} > {bound}", from_guard(z)))
+        }
+    });
+}

@@ -98,6 +98,51 @@ pub fn mac_wave_cycles(macs: u64, lanes: usize, cycles_per_mac: u32) -> u64 {
     mac_waves(macs, lanes) * cycles_per_mac as u64
 }
 
+/// Lane-sharing policy for AF micro-ops (CLI `--af-lanes auto|off|N`):
+/// how many idle MAC lane-slots may absorb activation work alongside the
+/// dedicated multi-AF block (DESIGN.md §17). The AFs execute through
+/// [`crate::cordic::afkernel`] — the same iterative shift-add engine as the
+/// MACs — so a borrowed lane serves AF micro-ops at the block's own per-op
+/// cycle cost, and the schedule never touches arithmetic: outputs are
+/// bit-identical at any setting (pinned in `tests/ir_parity.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AfLanes {
+    /// Separate-block schedule (the PR-5 pricing, reproduced exactly).
+    #[default]
+    Off,
+    /// Borrow exactly the slots the layer's final issue chunk leaves idle
+    /// (every slot on layers with no MAC phase) — free by construction:
+    /// the MAC schedule is unchanged.
+    Auto,
+    /// Borrow up to N slots (capped at the layer's lane-slot count).
+    Fixed(usize),
+}
+
+impl std::fmt::Display for AfLanes {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            AfLanes::Off => write!(f, "off"),
+            AfLanes::Auto => write!(f, "auto"),
+            AfLanes::Fixed(n) => write!(f, "{n}"),
+        }
+    }
+}
+
+impl std::str::FromStr for AfLanes {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "off" => Ok(AfLanes::Off),
+            "auto" => Ok(AfLanes::Auto),
+            n => n
+                .parse::<usize>()
+                .map(AfLanes::Fixed)
+                .map_err(|_| format!("bad af-lanes value `{n}` (auto|off|N)")),
+        }
+    }
+}
+
 /// Vector-engine configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct EngineConfig {
@@ -122,6 +167,10 @@ pub struct EngineConfig {
     /// `n`). Purely a host-speed knob: thread count never changes output
     /// bits, statistics, or cycle accounting (DESIGN.md §14).
     pub threads: usize,
+    /// Lane-sharing policy for AF micro-ops ([`AfLanes`]; CLI
+    /// `--af-lanes`). `Off` (the default) keeps the PR-5 separate-block
+    /// pricing bit-for-bit.
+    pub af_lanes: AfLanes,
 }
 
 impl Default for EngineConfig {
@@ -135,6 +184,7 @@ impl Default for EngineConfig {
             af_overlap: true,
             packing: true,
             threads: 0,
+            af_lanes: AfLanes::Off,
         }
     }
 }
@@ -155,6 +205,49 @@ impl EngineConfig {
         match self.threads {
             0 => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
             n => n.max(1),
+        }
+    }
+
+    /// Resolve the [`af_lanes`](Self::af_lanes) policy into a concrete
+    /// borrow count for one layer: `slots` is the layer's lane-slot
+    /// capacity ([`Self::lane_slots`] at its precision) and `mac_elements`
+    /// the output elements scheduled on those slots (0 for layers with no
+    /// MAC phase). `Auto` harvests exactly the slots the final issue chunk
+    /// leaves idle — the occupancy shortfall `chunks·slots − elements` —
+    /// so borrowing never delays a MAC wave; a layer with no MAC phase
+    /// lends the whole array. The result feeds
+    /// [`crate::ir::exec::shared_af_drain`].
+    ///
+    /// ```
+    /// use corvet::engine::{AfLanes, EngineConfig};
+    /// let mut cfg = EngineConfig::pe64();
+    /// // Off borrows nothing, anywhere
+    /// assert_eq!(cfg.af_lanes_borrowed(64, 60), 0);
+    /// cfg.af_lanes = AfLanes::Auto;
+    /// // 60 elements on 64 slots: the final (only) chunk idles 4 slots
+    /// assert_eq!(cfg.af_lanes_borrowed(64, 60), 4);
+    /// // slot-aligned layers idle nothing
+    /// assert_eq!(cfg.af_lanes_borrowed(64, 128), 0);
+    /// // a MAC-free layer (softmax) lends the whole array
+    /// assert_eq!(cfg.af_lanes_borrowed(64, 0), 64);
+    /// cfg.af_lanes = AfLanes::Fixed(100);
+    /// // explicit borrows cap at the physical slot count
+    /// assert_eq!(cfg.af_lanes_borrowed(64, 60), 64);
+    /// ```
+    pub fn af_lanes_borrowed(&self, slots: usize, mac_elements: u64) -> usize {
+        match self.af_lanes {
+            AfLanes::Off => 0,
+            AfLanes::Fixed(n) => n.min(slots),
+            AfLanes::Auto => {
+                if slots == 0 {
+                    0
+                } else if mac_elements == 0 {
+                    slots
+                } else {
+                    let offered = mac_elements.div_ceil(slots as u64) * slots as u64;
+                    (offered - mac_elements) as usize
+                }
+            }
         }
     }
 

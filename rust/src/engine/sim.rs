@@ -14,7 +14,10 @@ use super::{mac_waves, EngineConfig};
 use crate::activation::funcs;
 use crate::activation::ActFn;
 use crate::cordic::to_guard;
-use crate::ir::{layer_pipeline_cycles, pipeline_ramp_cycles, Graph, LayerIr};
+use crate::ir::{
+    layer_pipeline_cycles, layer_pipeline_cycles_shared, pipeline_ramp_cycles, shared_af_drain,
+    Graph, LayerIr,
+};
 use crate::memory::Prefetcher;
 use crate::model::network::af_iters;
 use crate::model::workloads::TraceKind;
@@ -132,7 +135,15 @@ impl ToJson for EngineReport {
 fn af_cost_cycles(f: ActFn, iters: u32) -> u64 {
     match f {
         ActFn::Identity => 0,
-        ActFn::Softmax => 0, // handled per-vector below
+        ActFn::Softmax => {
+            // per-element cost probed on a singleton vector: one HR exp,
+            // one LV divide, one bypass max-scan slot — softmax layers are
+            // priced like every other AF, which is what keeps the
+            // lane-shared schedule dominant (never cheaper to leave the
+            // drain unpriced on one path)
+            let (_, c) = funcs::softmax(&[to_guard(0.5)], iters);
+            c.total() as u64
+        }
         _ => {
             let (_, c) = funcs::apply(f, to_guard(0.5), iters);
             // negative-branch functions (SELU) cost more; probe both sides
@@ -175,19 +186,36 @@ pub fn run(config: EngineConfig, graph: &Graph) -> EngineReport {
                 sim_compute_layer(&config, layer, lp, &mut prefetch, now)
             }
             TraceKind::Pool => sim_pool_layer(&config, layer),
-            TraceKind::Plumbing => LayerTiming {
-                name: layer.name.clone(),
-                kind: layer.kind(),
-                macs: 0,
-                mac_cycles: 0,
-                af_cycles: 0,
-                pool_cycles: 0,
-                mem_stall_cycles: 0,
+            TraceKind::Plumbing => {
                 // a pass over the outputs on the broadcast bus
-                total_cycles: layer.cost.outputs / config.burst_words.max(1) + 1,
-                pe_utilization: 0.0,
-                policy: None,
-            },
+                let move_cycles = layer.cost.outputs / config.burst_words.max(1) + 1;
+                // softmax layers additionally drain the AF block (exp +
+                // divide per element, divided across the block instances);
+                // they have no MAC phase, so under lane sharing the whole
+                // idle array may absorb the drain
+                let af_cycles = if layer.af == ActFn::Softmax && layer.cost.af_ops > 0 {
+                    let lp = layer.policy.unwrap_or_default();
+                    let per_op = af_cost_cycles(ActFn::Softmax, af_iters(lp.mode));
+                    let pooled =
+                        (layer.cost.af_ops * per_op).div_ceil(config.af_blocks as u64);
+                    let slots = config.lane_slots(lp.precision);
+                    shared_af_drain(pooled, slots, config.af_lanes_borrowed(slots, 0))
+                } else {
+                    0
+                };
+                LayerTiming {
+                    name: layer.name.clone(),
+                    kind: layer.kind(),
+                    macs: 0,
+                    mac_cycles: 0,
+                    af_cycles,
+                    pool_cycles: 0,
+                    mem_stall_cycles: 0,
+                    total_cycles: move_cycles + af_cycles,
+                    pe_utilization: 0.0,
+                    policy: None,
+                }
+            }
         };
         now += timing.total_cycles;
         per_layer.push(timing);
@@ -232,11 +260,15 @@ fn sim_compute_layer(
     let iters = af_iters(lp.mode);
     let per_op = af_cost_cycles(layer.af, iters);
     let af_total = (layer.cost.af_ops * per_op).div_ceil(config.af_blocks as u64);
+    // lane sharing: idle slots of the final issue chunk absorb AF
+    // micro-ops, dividing the drain ([`shared_af_drain`]) without touching
+    // the MAC phase — zero borrowed reproduces the PR-5 pricing exactly
+    let borrowed = config.af_lanes_borrowed(lanes, layer.cost.outputs);
     let (af_cycles, compute_span) = if config.af_overlap {
         let ramp = pipeline_ramp_cycles(macs, layer.cost.outputs, lp.cycles_per_mac());
-        (af_total, layer_pipeline_cycles(mac_cycles, af_total, ramp))
+        (af_total, layer_pipeline_cycles_shared(mac_cycles, af_total, ramp, lanes, borrowed))
     } else {
-        (af_total, mac_cycles + af_total)
+        (af_total, mac_cycles + shared_af_drain(af_total, lanes, borrowed))
     };
 
     // Parameter fetch for the layer (weights stream once per inference);

@@ -46,6 +46,10 @@ impl SystemAsic {
     /// this is where AF-block overlap reaches the hwcost operating points:
     /// the same workload sustains strictly more GOPS with `af_overlap` on
     /// than off on AF-bearing layers (`tables::af_overlap` prints both).
+    /// The lane-sharing law reprices the same way: with `--af-lanes`
+    /// borrowing slots ([`crate::ir::exec::layer_pipeline_cycles_shared`],
+    /// DESIGN.md §17) a softmax-heavy graph sustains strictly more GOPS at
+    /// identical silicon (`tables::af_lanes` prints the A/B).
     pub fn sustained_gops(&self, report: &crate::engine::EngineReport) -> f64 {
         report.gops(self.freq_ghz * 1e9)
     }
@@ -395,6 +399,40 @@ mod tests {
         assert!(g_on > g_off, "overlap must sustain more: {g_on} vs {g_off}");
         // consistency: sustained == the report's own GOPS at the asic clock
         assert!((g_on - r_on.gops(asic_on.freq_ghz * 1e9)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sustained_pricing_reflects_the_lane_sharing_law() {
+        // borrowed CORDIC lanes are a schedule, not silicon: identical
+        // area/power/clock, strictly more sustained GOPS on a graph whose
+        // layers are dominated by AF drains (the attention-MLP twin)
+        use crate::engine::{AfLanes, VectorEngine};
+        use crate::ir::workloads::attention_mlp;
+        use crate::quant::PolicyTable;
+        let off = EngineConfig::pe256();
+        let mut shared = off;
+        shared.af_lanes = AfLanes::Fixed(64);
+        let g = attention_mlp();
+        let g = g.with_policy(&PolicyTable::uniform(
+            g.compute_layers(),
+            Precision::Fxp8,
+            ExecMode::Accurate,
+        ));
+        let asic_off = engine_asic_at(&off, Precision::Fxp8, ExecMode::Accurate);
+        let asic_shared = engine_asic_at(&shared, Precision::Fxp8, ExecMode::Accurate);
+        assert_eq!(asic_off.area_mm2, asic_shared.area_mm2, "lane sharing adds no silicon");
+        assert_eq!(asic_off.power_mw, asic_shared.power_mw);
+        assert_eq!(asic_off.freq_ghz, asic_shared.freq_ghz);
+        let r_off = VectorEngine::new(off).run_ir(&g);
+        let r_shared = VectorEngine::new(shared).run_ir(&g);
+        let g_off = asic_off.sustained_gops(&r_off);
+        let g_shared = asic_shared.sustained_gops(&r_shared);
+        assert!(
+            g_shared > g_off,
+            "borrowed lanes must sustain more on a softmax-heavy graph: \
+             {g_shared} vs {g_off}"
+        );
+        assert!((g_off - r_off.gops(asic_off.freq_ghz * 1e9)).abs() < 1e-12);
     }
 
     #[test]

@@ -140,6 +140,72 @@ pub fn pipeline_ramp_cycles(macs: u64, outputs: u64, cycles_per_mac: u32) -> u64
     macs.div_ceil(outputs).saturating_mul(cycles_per_mac as u64)
 }
 
+/// Shared-block drain cycles when `borrowed` idle MAC lane-slots absorb AF
+/// micro-ops alongside the dedicated block: the drain divides across
+/// `1 + min(borrowed, lanes)` equivalent servers (the AF block plus each
+/// borrowed CORDIC lane — same iterative engine, same per-op cycle count,
+/// see [`crate::cordic::afkernel`]). `borrowed == 0` is the identity, so
+/// every PR-5 number is reproduced exactly when lane sharing is off.
+///
+/// ```
+/// use corvet::ir::exec::shared_af_drain;
+/// // zero borrowed lanes: the drain is untouched
+/// assert_eq!(shared_af_drain(1000, 64, 0), 1000);
+/// // 3 borrowed lanes: the drain divides across 4 servers
+/// assert_eq!(shared_af_drain(1000, 64, 3), 250);
+/// // borrowing is capped at the physical lane count
+/// assert_eq!(shared_af_drain(1000, 2, 100), shared_af_drain(1000, 2, 2));
+/// ```
+#[inline]
+pub fn shared_af_drain(af_cycles: u64, lanes: usize, borrowed: usize) -> u64 {
+    af_cycles.div_ceil(1 + borrowed.min(lanes) as u64)
+}
+
+/// The two-resource generalisation of [`layer_pipeline_cycles`]: the MAC
+/// waves and the **lane-shared** AF drain run as the same fused two-stage
+/// pipeline, but the drain is first divided across the AF block plus
+/// `af_lanes_borrowed` idle MAC lane-slots ([`shared_af_drain`]). Borrowing
+/// never touches the MAC phase — the scheduler only harvests slots the
+/// final issue chunk leaves idle ([`crate::engine::EngineConfig::af_lanes_borrowed`]),
+/// so `mac` is unchanged and the law is monotone non-increasing in
+/// `af_lanes_borrowed` (never worse than the separate-block law; the golden
+/// dominance test in `tests/golden_crossval.rs` pins this layer-wise).
+///
+/// Degenerates to the PR-5 law **exactly** at zero borrowed lanes:
+///
+/// ```
+/// use corvet::ir::exec::{layer_pipeline_cycles, layer_pipeline_cycles_shared};
+/// for (mac, af, ramp) in [(1000, 400, 36), (400, 1000, 36), (1000, 0, 36), (400, 1000, 4000)] {
+///     assert_eq!(
+///         layer_pipeline_cycles_shared(mac, af, ramp, 64, 0),
+///         layer_pipeline_cycles(mac, af, ramp),
+///     );
+/// }
+/// // AF-bound layer: 3 borrowed lanes quarter the drain and it hides fully
+/// assert_eq!(layer_pipeline_cycles_shared(400, 1000, 36, 64, 3), 400);
+/// // monotone non-increasing in borrowed lanes
+/// let mut prev = u64::MAX;
+/// for b in 0..=8 {
+///     let c = layer_pipeline_cycles_shared(400, 1000, 36, 64, b);
+///     assert!(c <= prev);
+///     prev = c;
+/// }
+/// ```
+#[inline]
+pub fn layer_pipeline_cycles_shared(
+    mac_cycles: u64,
+    af_cycles: u64,
+    ramp_cycles: u64,
+    lanes: usize,
+    af_lanes_borrowed: usize,
+) -> u64 {
+    layer_pipeline_cycles(
+        mac_cycles,
+        shared_af_drain(af_cycles, lanes, af_lanes_borrowed),
+        ramp_cycles,
+    )
+}
+
 /// Per-layer statistics from a wave-vectorised forward pass.
 #[derive(Debug, Clone, Default)]
 pub struct WaveLayerStats {
@@ -159,10 +225,15 @@ pub struct WaveLayerStats {
     pub af_cost: AfCost,
     /// Pooling datapath cost.
     pub pool_cost: PoolCost,
-    /// Layer makespan under the active schedule: the overlap law
-    /// ([`layer_pipeline_cycles`]) with `af_overlap` on, the serial sum
-    /// ([`Self::serial_cycles`]) with it off.
+    /// Layer makespan under the active schedule: the two-resource law
+    /// ([`layer_pipeline_cycles_shared`]) with `af_overlap` on, the serial
+    /// sum over the lane-shared drain with it off. With zero borrowed
+    /// lanes this is exactly the PR-5 pricing.
     pub pipeline_cycles: u64,
+    /// Idle MAC lane-slots that absorbed AF micro-ops for this layer
+    /// ([`crate::engine::EngineConfig::af_lanes_borrowed`]; 0 = the
+    /// separate-block schedule).
+    pub af_lanes_borrowed: usize,
     /// Output element count.
     pub outputs: usize,
 }
@@ -295,9 +366,13 @@ pub struct BatchLayerStats {
     /// Pooling datapath cost across the batch.
     pub pool_cost: PoolCost,
     /// Layer makespan across the batch under the active schedule: the
-    /// overlap law ([`layer_pipeline_cycles`]) with `af_overlap` on, the
-    /// serial sum with it off.
+    /// two-resource law ([`layer_pipeline_cycles_shared`]) with
+    /// `af_overlap` on, the serial sum over the lane-shared drain with it
+    /// off. Zero borrowed lanes reproduces the PR-5 pricing exactly.
     pub pipeline_cycles: u64,
+    /// Idle MAC lane-slots that absorbed AF micro-ops for this layer
+    /// (0 = the separate-block schedule).
+    pub af_lanes_borrowed: usize,
     /// Output element count **per sample**.
     pub outputs: usize,
 }
@@ -436,6 +511,10 @@ impl BatchRunStats {
         self.af_util = self.af_util.merge(other.af_util);
         for (a, b) in self.per_layer.iter_mut().zip(&other.per_layer) {
             debug_assert_eq!(a.kind, b.kind, "merged runs must share the layer structure");
+            debug_assert_eq!(
+                a.af_lanes_borrowed, b.af_lanes_borrowed,
+                "merged runs must share the lane-sharing schedule"
+            );
             a.macs += b.macs;
             a.waves += b.waves;
             a.mac_cycles += b.mac_cycles;
@@ -491,12 +570,20 @@ struct ChunkDrain<'a> {
     ramp: u64,
     mac_cycles: u64,
     overlap: bool,
+    /// Lane slots of the layer's issue chunks (the cap on borrowing).
+    lanes: usize,
+    /// Idle lane-slots absorbing AF micro-ops ([`shared_af_drain`] divisor
+    /// minus one). Only re-times the drain: the MAC phase, the arithmetic
+    /// and the chunk structure are untouched, so outputs stay bit-identical
+    /// at any borrow count.
+    borrowed: usize,
     chunk: u64,
     pending: AfCost,
     layer_total: AfCost,
 }
 
 impl<'a> ChunkDrain<'a> {
+    #[allow(clippy::too_many_arguments)]
     fn new(
         sched: &'a mut AfScheduler,
         act: ActFn,
@@ -504,6 +591,8 @@ impl<'a> ChunkDrain<'a> {
         ramp: u64,
         mac_cycles: u64,
         overlap: bool,
+        lanes: usize,
+        borrowed: usize,
     ) -> Self {
         ChunkDrain {
             sched,
@@ -512,6 +601,8 @@ impl<'a> ChunkDrain<'a> {
             ramp,
             mac_cycles,
             overlap,
+            lanes,
+            borrowed,
             chunk: 0,
             pending: AfCost::default(),
             layer_total: AfCost::default(),
@@ -555,12 +646,17 @@ impl<'a> ChunkDrain<'a> {
 
     /// The layer's whole drain cost, and the layer makespan it prices to
     /// under the active schedule — the one place the kernels derive both.
+    /// Lane sharing divides the drain under **both** schedules (the
+    /// borrowed lanes serve AF micro-ops whether or not the drain overlaps
+    /// the next chunk's MAC waves); the scheduler above was still served
+    /// the full cost — it is a diagnostic pooled-resource measurement, the
+    /// makespan contract stays the analytic law.
     fn finish(&self) -> (AfCost, u64) {
         let af = self.layer_total.total() as u64;
         let pipeline = if self.overlap {
-            layer_pipeline_cycles(self.mac_cycles, af, self.ramp)
+            layer_pipeline_cycles_shared(self.mac_cycles, af, self.ramp, self.lanes, self.borrowed)
         } else {
-            self.mac_cycles + af
+            self.mac_cycles + shared_af_drain(af, self.lanes, self.borrowed)
         };
         (self.layer_total, pipeline)
     }
@@ -656,7 +752,14 @@ impl WaveExecutor {
                 Layer::Softmax => {
                     let (y, st) = softmax_cordic(&x, af_iters(current.mode));
                     x = y;
-                    let wst = WaveLayerStats::from_scalar(st);
+                    let mut wst = WaveLayerStats::from_scalar(st);
+                    // a softmax layer has no MAC phase, so the whole PE
+                    // array is idle — lane sharing spreads its drain across
+                    // the AF block plus every borrowable lane-slot
+                    let slots = cfg.lane_slots(current.precision);
+                    let borrowed = cfg.af_lanes_borrowed(slots, 0);
+                    wst.af_lanes_borrowed = borrowed;
+                    wst.pipeline_cycles = shared_af_drain(wst.serial_cycles(), slots, borrowed);
                     drain_block(&mut sched, ActFn::Softmax, clock, wst.af_cost);
                     clock += wst.pipeline_cycles;
                     stats.per_layer.push(wst);
@@ -799,6 +902,16 @@ impl WaveExecutor {
                         drain_block(&mut sched, ActFn::Softmax, clock, st.af_cost);
                         agg.merge_scalar(&st);
                     }
+                    // no MAC phase across the whole batch: the array is
+                    // idle, so the batched drain lane-shares as one pool
+                    let slots = cfg.lane_slots(current.precision);
+                    let borrowed = cfg.af_lanes_borrowed(slots, 0);
+                    agg.af_lanes_borrowed = borrowed;
+                    agg.pipeline_cycles = shared_af_drain(
+                        agg.af_cost.total() as u64 + agg.pool_cost.total() as u64,
+                        slots,
+                        borrowed,
+                    );
                     clock += agg.pipeline_cycles;
                     stats.per_layer.push(agg);
                 }
@@ -1055,8 +1168,9 @@ fn wave_dense(
     });
 
     // phase B: canonical-order chunk replay — AF, drain bookkeeping, output
+    let borrowed = engine.af_lanes_borrowed(slots, d.outputs as u64);
     let mut drain =
-        ChunkDrain::new(sched, d.act, t0, ramp, mac_cycles, engine.af_overlap);
+        ChunkDrain::new(sched, d.act, t0, ramp, mac_cycles, engine.af_overlap, slots, borrowed);
     let mut out = vec![0f64; d.outputs];
     let mut o0 = 0usize;
     while o0 < d.outputs {
@@ -1081,6 +1195,7 @@ fn wave_dense(
         mac_cycles,
         af_cost,
         pipeline_cycles,
+        af_lanes_borrowed: borrowed,
         outputs: d.outputs,
         ..Default::default()
     };
@@ -1154,8 +1269,9 @@ fn wave_conv(
     });
 
     // phase B: chunk replay in the canonical (och, position-chunk) order
+    let borrowed = engine.af_lanes_borrowed(slots, (c.out_ch * positions) as u64);
     let mut drain =
-        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap);
+        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap, slots, borrowed);
     let mut out = Tensor::zeros(&[c.out_ch, oh, ow]);
     for o in 0..c.out_ch {
         let mut p0 = 0usize;
@@ -1183,6 +1299,7 @@ fn wave_conv(
         mac_cycles,
         af_cost,
         pipeline_cycles,
+        af_lanes_borrowed: borrowed,
         outputs: c.out_ch * positions,
         ..Default::default()
     };
@@ -1269,8 +1386,9 @@ fn batch_dense(
 
     // phase B: canonical chunk replay; elements are sample-major, so
     // pushes land in scalar output order
+    let borrowed = engine.af_lanes_borrowed(slots, elements as u64);
     let mut drain =
-        ChunkDrain::new(sched, d.act, t0, ramp, mac_cycles, engine.af_overlap);
+        ChunkDrain::new(sched, d.act, t0, ramp, mac_cycles, engine.af_overlap, slots, borrowed);
     let mut out = vec![Vec::with_capacity(d.outputs); bsz];
     let mut e0 = 0usize;
     while e0 < elements {
@@ -1296,6 +1414,7 @@ fn batch_dense(
         lane_slots: chunks * slots as u64,
         af_cost,
         pipeline_cycles,
+        af_lanes_borrowed: borrowed,
         outputs: d.outputs,
         ..Default::default()
     };
@@ -1376,8 +1495,9 @@ fn batch_conv(
     });
 
     // phase B: canonical chunk replay over the flat element order
+    let borrowed = engine.af_lanes_borrowed(slots, elements as u64);
     let mut drain =
-        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap);
+        ChunkDrain::new(sched, c.act, t0, ramp, mac_cycles, engine.af_overlap, slots, borrowed);
     let mut out = vec![Tensor::zeros(&[c.out_ch, oh, ow]); bsz];
     let mut e0 = 0usize;
     while e0 < elements {
@@ -1403,6 +1523,7 @@ fn batch_conv(
         lane_slots: chunks * slots as u64,
         af_cost,
         pipeline_cycles,
+        af_lanes_borrowed: borrowed,
         outputs: per_sample,
         ..Default::default()
     };

@@ -41,8 +41,9 @@ pub mod workloads;
 mod tests;
 
 pub use exec::{
-    graph_batch_occupancy, layer_pipeline_cycles, pipeline_ramp_cycles, BatchLayerStats,
-    BatchRunStats, BatchSession, WaveExecutor, WaveLayerStats, WaveRunStats,
+    graph_batch_occupancy, layer_pipeline_cycles, layer_pipeline_cycles_shared,
+    pipeline_ramp_cycles, shared_af_drain, BatchLayerStats, BatchRunStats, BatchSession,
+    WaveExecutor, WaveLayerStats, WaveRunStats,
 };
 pub use wcache::{LayerBank, WeightCache};
 

@@ -92,6 +92,31 @@ pub fn tinyyolo() -> Graph {
     )
 }
 
+/// Attention-style MLP twin: the softmax-heavy workload for the
+/// lane-shared AF schedule A/B (`--af-lanes`, `benches/af_lanes.rs`,
+/// DESIGN.md §17). Two transformer-ish blocks — a QK projection feeding an
+/// explicit [`Op::Softmax`] score layer, a mixing projection, and a GELU
+/// MLP — then a classifier head ending in softmax. Roughly a third of the
+/// layers are pure AF drains with **no MAC phase**, which is exactly the
+/// shape where a separate AF block serialises and borrowed CORDIC lanes
+/// win (the golden dominance test in `tests/golden_crossval.rs` requires
+/// strict improvement on at least one of these score layers).
+pub fn attention_mlp() -> Graph {
+    let d = 256usize; // model width
+    let ff = 1024usize; // MLP hidden width
+    let mut specs = Vec::new();
+    for b in 1..=2 {
+        specs.push(dense(&format!("blk{b}-qk"), d, d, ActFn::Identity));
+        specs.push(NodeSpec::new(&format!("blk{b}-scores"), Op::Softmax));
+        specs.push(dense(&format!("blk{b}-mix"), d, d, ActFn::Identity));
+        specs.push(dense(&format!("blk{b}-ffn-up"), d, ff, ActFn::Gelu));
+        specs.push(dense(&format!("blk{b}-ffn-down"), ff, d, ActFn::Identity));
+    }
+    specs.push(dense("head", d, 64, ActFn::Identity));
+    specs.push(NodeSpec::new("probs", Op::Softmax));
+    Graph::build("attn-mlp", &[d], specs)
+}
+
 /// VGG-16 at 224×224×3 (the Fig. 13 layer-wise breakdown workload).
 pub fn vgg16() -> Graph {
     let relu = ActFn::Relu;

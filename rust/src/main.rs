@@ -9,7 +9,7 @@ use corvet::coordinator::{
     ShardedService,
 };
 use corvet::cordic::mac::ExecMode;
-use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::engine::{AfLanes, EngineConfig, VectorEngine};
 use corvet::ir::{self, Graph};
 use corvet::model::workloads::{paper_mlp, vit_tiny_mlp_trace};
 use corvet::quant::{assign_modes_ir, describe, PolicyTable, Precision};
@@ -71,7 +71,8 @@ fn cmd_table(args: &Args) -> Result<()> {
         "5" => tables::table5(),
         "packed" => tables::packed_throughput(),
         "af" | "overlap" => tables::af_overlap(),
-        _ => bail!("tables 1-5, `packed` and `af` exist"),
+        "lanes" | "af-lanes" => tables::af_lanes(),
+        _ => bail!("tables 1-5, `packed`, `af` and `lanes` exist"),
     };
     emit(t, args.has_flag("csv"));
     Ok(())
@@ -121,6 +122,13 @@ fn parse_overlap(args: &Args) -> Result<bool> {
     parse_switch(args, "overlap", "on")
 }
 
+/// Parse the `--af-lanes auto|off|N` lane-sharing knob (default: off —
+/// DESIGN.md §17's borrowed-CORDIC-lane AF schedule stays opt-in so the
+/// PR-5 pricing is reproduced bit-for-bit unless asked for).
+fn parse_af_lanes(args: &Args) -> Result<AfLanes> {
+    args.opt_or("af-lanes", "off").parse::<AfLanes>().map_err(anyhow::Error::msg)
+}
+
 fn cmd_fig(args: &Args) -> Result<()> {
     let n: u32 = args.pos(1, "figure number")?.parse().context("figure number")?;
     let quick = args.has_flag("quick");
@@ -150,8 +158,9 @@ fn workload_graph(workload: &str) -> Result<Graph> {
     Ok(match workload {
         "tinyyolo" => ir::workloads::tinyyolo(),
         "vgg16" => ir::workloads::vgg16(),
+        "attn-mlp" | "attention" => ir::workloads::attention_mlp(),
         "vit-mlp" | "transformer" => Graph::from_trace(&vit_tiny_mlp_trace()),
-        other => bail!("unknown workload {other:?} (tinyyolo|vgg16|vit-mlp)"),
+        other => bail!("unknown workload {other:?} (tinyyolo|vgg16|attn-mlp|vit-mlp)"),
     })
 }
 
@@ -168,6 +177,7 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     cfg.pool_units = (pes / 8).max(1);
     cfg.packing = parse_packing(args)?;
     cfg.af_overlap = parse_overlap(args)?;
+    cfg.af_lanes = parse_af_lanes(args)?;
     cfg.threads = args.num_or("threads", 0usize)?;
     let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
     let report = VectorEngine::new(cfg).run_ir(&graph.with_policy(&policy));
@@ -186,6 +196,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
         "overlap        : {} (AF drain {} MAC waves)",
         if cfg.af_overlap { "on" } else { "off" },
         if cfg.af_overlap { "hidden behind" } else { "serialised after" }
+    );
+    println!(
+        "af-lanes       : {} ({})",
+        cfg.af_lanes,
+        match cfg.af_lanes {
+            AfLanes::Off => "dedicated AF block only",
+            AfLanes::Auto => "idle final-chunk slots absorb AF micro-ops",
+            AfLanes::Fixed(_) => "fixed lane borrow, capped at the slot count",
+        }
     );
     println!("cycles         : {}", report.total_cycles);
     println!("latency        : {} ms", fnum(report.time_ms(clock)));
@@ -222,6 +241,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
     engine.pool_units = (pes / 8).max(1);
     engine.packing = parse_packing(args)?;
     engine.af_overlap = parse_overlap(args)?;
+    engine.af_lanes = parse_af_lanes(args)?;
     engine.threads = args.num_or("threads", 0usize)?;
 
     let policy = PolicyTable::uniform(graph.compute_layers(), precision, mode);
@@ -266,6 +286,7 @@ fn cmd_cluster(args: &Args) -> Result<()> {
         if engine.af_overlap { "on" } else { "off" },
         if engine.af_overlap { "priced through" } else { "serialised, bypassing" }
     );
+    println!("af-lanes       : {}", engine.af_lanes);
     println!("MAC imbalance  : {}", fnum(plan.mac_imbalance()));
     println!("micro-batches  : {batches} x {batch} sample(s), packed waves");
     println!("cycles/batch   : {} (steady state)", report.cycles_per_batch);
@@ -350,6 +371,7 @@ fn cmd_cluster_serve(args: &Args) -> Result<()> {
     engine.af_blocks = (pes / 64).max(1);
     engine.pool_units = (pes / 8).max(1);
     engine.packing = parse_packing(args)?;
+    engine.af_lanes = parse_af_lanes(args)?;
     engine.threads = args.num_or("threads", 0usize)?;
 
     let table = PolicyTable::uniform(graph.compute_layers(), precision, mode);
@@ -554,6 +576,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "wave" => {
             let mut engine = EngineConfig { pes, ..EngineConfig::default() };
             engine.packing = parse_packing(args)?;
+            engine.af_lanes = parse_af_lanes(args)?;
             engine.threads = args.num_or("threads", 0usize)?;
             // capacity planning before the server spins up: the simulated
             // per-dispatch price at the configured max batch, through the

@@ -15,7 +15,7 @@ pub use figs::{fig11, fig13, Fig11Point};
 use crate::cluster::{Cluster, ClusterConfig, ClusterReport, InterconnectConfig, PartitionStrategy};
 use crate::engine::EngineConfig;
 use crate::hwcost;
-use crate::ir::workloads::{tinyyolo, vgg16};
+use crate::ir::workloads::{attention_mlp, tinyyolo, vgg16};
 use crate::quant::{PolicyTable, Precision};
 use crate::report::{delta_pct, fnum, Table};
 
@@ -350,6 +350,51 @@ pub fn af_overlap() -> Table {
     t
 }
 
+/// The AF lane-sharing A/B table (`--af-lanes`, DESIGN.md §17): per
+/// workload × lane policy, the simulated cycle total on the 256-PE engine,
+/// the summed AF drain cycles, the fraction of the `off` (separate-block,
+/// PR-5) total the borrowed lanes hide, and sustained GOPS. The softmax-
+/// heavy attention-MLP twin is the motivating workload: its score layers
+/// have **no MAC phase**, so under `auto` the whole idle array absorbs
+/// their exp/divide drains; vgg-16's drains already hide behind its MAC
+/// waves, so lane sharing buys ~nothing there — the contrast is the point
+/// of the table (dominance is golden-tested in `tests/golden_crossval.rs`;
+/// exact captured rows in EXPERIMENTS.md §af_lanes).
+pub fn af_lanes() -> Table {
+    use crate::cordic::mac::ExecMode;
+    use crate::engine::AfLanes;
+    let settings = [AfLanes::Off, AfLanes::Auto, AfLanes::Fixed(4), AfLanes::Fixed(64)];
+    let mut t = Table::new(
+        "AF lane-sharing A/B — 256-PE engine, FxP-8 accurate, cycles vs borrowed lanes",
+        &["workload", "af-lanes", "total (Mcyc)", "af drain (Mcyc)", "hidden vs off", "GOPS"],
+    );
+    for graph in [attention_mlp(), vgg16()] {
+        let policy =
+            PolicyTable::uniform(graph.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+        let annotated = graph.with_policy(&policy);
+        let mut off_total = 0u64;
+        for setting in settings {
+            let mut cfg = EngineConfig::pe256();
+            cfg.af_lanes = setting;
+            let r = crate::engine::VectorEngine::new(cfg).run_ir(&annotated);
+            if setting == AfLanes::Off {
+                off_total = r.total_cycles;
+            }
+            let asic = hwcost::engine_asic_at(&cfg, Precision::Fxp8, ExecMode::Accurate);
+            let af: u64 = r.per_layer.iter().map(|l| l.af_cycles).sum();
+            t.row(vec![
+                graph.name.clone(),
+                setting.to_string(),
+                fnum(r.total_cycles as f64 / 1e6),
+                fnum(af as f64 / 1e6),
+                fnum(1.0 - r.total_cycles as f64 / off_total as f64),
+                fnum(asic.sustained_gops(&r)),
+            ]);
+        }
+    }
+    t
+}
+
 /// Cluster scaling table (beyond the paper's single-engine Table V): M
 /// engine shards on the VGG-16 trace under the pipeline partition, with
 /// steady-state throughput, per-run utilisation and the multi-engine ASIC
@@ -546,6 +591,35 @@ mod tests {
             assert!(frac(w, "FxP-8", "Approximate") > frac(w, "FxP-16", "Approximate"), "{w}");
             assert!(frac(w, "FxP-8", "Approximate") > 0.0, "{w}: something must hide");
         }
+    }
+
+    #[test]
+    fn af_lanes_table_dominates_and_wins_on_softmax() {
+        let t = af_lanes();
+        assert_eq!(t.rows.len(), 8, "2 workloads x 4 lane policies");
+        let hidden = |workload: &str, lanes: &str| -> f64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == workload && r[1] == lanes)
+                .unwrap_or_else(|| panic!("{workload}/{lanes} row missing"))[4]
+                .parse()
+                .unwrap()
+        };
+        // dominance: borrowing lanes never costs cycles on any row
+        for r in &t.rows {
+            let h: f64 = r[4].parse().unwrap();
+            assert!((0.0..1.0).contains(&h), "{}/{}: hidden {h}", r[0], r[1]);
+        }
+        // the off rows ARE the PR-5 separate-block baseline
+        assert_eq!(hidden("attn-mlp", "off"), 0.0);
+        assert_eq!(hidden("vgg-16", "off"), 0.0);
+        // softmax-heavy graph strictly wins under auto (its score layers
+        // have no MAC phase, so the whole idle array absorbs the drain);
+        // a wide explicit borrow also accelerates the GELU-bound layers
+        assert!(hidden("attn-mlp", "auto") > 0.0);
+        assert!(hidden("attn-mlp", "64") > hidden("attn-mlp", "auto"));
+        // vgg-16's drains already hide behind its MAC waves
+        assert!(hidden("vgg-16", "auto") < 0.05);
     }
 
     #[test]

@@ -7,11 +7,15 @@
 //! * the 256-PE configuration sustains at least the 64-PE throughput on the
 //!   evaluation workloads, for every precision/mode policy;
 //! * the same two invariants lifted to the cluster: adding shards never
-//!   slows steady-state throughput for 1→4 shards.
+//!   slows steady-state throughput for 1→4 shards;
+//! * lane-shared AF execution (DESIGN.md §17) only ever helps: borrowing
+//!   more lane-slots is monotone non-increasing in cycles, `Fixed(0)`
+//!   prices exactly as `Off`, and the dominance survives batching.
 
 use corvet::cluster::{Cluster, ClusterConfig, InterconnectConfig, PartitionStrategy};
 use corvet::cordic::mac::ExecMode;
-use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::engine::{AfLanes, EngineConfig, VectorEngine};
+use corvet::ir::{workloads, Graph};
 use corvet::model::workloads::{tinyyolo_trace, vgg16_trace, Trace};
 use corvet::quant::{PolicyTable, Precision};
 use corvet::testutil::{check_prop, Xoshiro256};
@@ -117,6 +121,109 @@ fn prop_packing_never_slows_and_bounds_mac_speedup() {
                 mac(&r_off),
                 mac(&r_on)
             ));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_public_hyperbolic_api_holds_the_convergence_law() {
+    // the integration-level twin of the `cordic::tests` convergence suite:
+    // through the *public* API, at the budgets the lane-shared AF kernel
+    // runs at, tanh error stays inside the per-iteration law
+    // (C·2⁻ⁿ + guard floor) and odd symmetry is bit-exact on raw guard
+    // words — seeded replay via CORVET_PROP_SEED like every check_prop
+    use corvet::cordic::{from_guard, hyperbolic, to_guard};
+    check_prop("public tanh convergence + bit-exact oddness", |rng| {
+        let iters = [8u32, 12, 16, 24][rng.index(4)];
+        let tol = 8.0 * (-(iters as f64)).exp2() + 4e-6;
+        let t = rng.uniform(-10.0, 10.0);
+        let g = to_guard(t);
+        let r = hyperbolic::tanh(g, iters);
+        let err = (from_guard(r.value) - t.tanh()).abs();
+        if err > tol {
+            return Err(format!("tanh({t})@{iters}: err {err} > {tol}"));
+        }
+        let n = hyperbolic::tanh(-g, iters).value;
+        if n != -r.value {
+            return Err(format!("raw {g}@{iters}: tanh(-x) = {n} != {}", -r.value));
+        }
+        Ok(())
+    });
+}
+
+fn rand_graph(rng: &mut Xoshiro256) -> Graph {
+    match rng.index(3) {
+        0 => workloads::tinyyolo(),
+        1 => workloads::vgg16(),
+        _ => workloads::attention_mlp(),
+    }
+}
+
+#[test]
+fn prop_af_lane_borrowing_monotone_non_increasing() {
+    // borrowing more MAC lane-slots for AF micro-ops divides the AF drain
+    // harder and touches nothing else, so whole-run cycles are monotone
+    // non-increasing in the borrow count, Fixed(0) degenerates to Off
+    // exactly, and auto never loses to off — under either AF schedule
+    check_prop("af-lane borrowing monotone", |rng| {
+        let graph = rand_graph(rng);
+        let policy =
+            PolicyTable::uniform(graph.compute_layers(), rand_precision(rng), rand_mode(rng));
+        let g = graph.with_policy(&policy);
+        let pes = [64usize, 128, 256][rng.index(3)];
+        let af_overlap = rng.index(2) == 0;
+        let base = EngineConfig { pes, af_overlap, ..EngineConfig::pe256() };
+        let run = |lanes: AfLanes| {
+            let mut cfg = base;
+            cfg.af_lanes = lanes;
+            VectorEngine::new(cfg).run_ir(&g).total_cycles
+        };
+        let off = run(AfLanes::Off);
+        if run(AfLanes::Fixed(0)) != off {
+            return Err(format!("{}: Fixed(0) must price exactly as Off", g.name));
+        }
+        let lo = rng.int_in(1, 512) as usize;
+        let hi = lo + rng.int_in(1, 512) as usize;
+        let (c_lo, c_hi) = (run(AfLanes::Fixed(lo)), run(AfLanes::Fixed(hi)));
+        if c_lo > off || c_hi > c_lo {
+            return Err(format!(
+                "{} {pes} PEs overlap={af_overlap}: expected off {off} >= \
+                 Fixed({lo}) {c_lo} >= Fixed({hi}) {c_hi}",
+                g.name
+            ));
+        }
+        let auto = run(AfLanes::Auto);
+        if auto > off {
+            return Err(format!("{}: auto {auto} cycles > off {off}", g.name));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lane_sharing_dominance_survives_batching() {
+    // `run_ir_batch` prices the batch-expanded graph through the same
+    // two-resource law, so the shared schedule can never quote a batch
+    // worse than the separate-block schedule does
+    check_prop("lane sharing batch dominance", |rng| {
+        let graph = rand_graph(rng);
+        let policy =
+            PolicyTable::uniform(graph.compute_layers(), rand_precision(rng), rand_mode(rng));
+        let g = graph.with_policy(&policy);
+        let batch = rng.int_in(1, 6) as usize;
+        let base = EngineConfig { pes: [64usize, 256][rng.index(2)], ..EngineConfig::pe256() };
+        let off = VectorEngine::new(base).run_ir_batch(&g, batch).total_cycles;
+        for lanes in [AfLanes::Auto, AfLanes::Fixed(rng.int_in(1, 256) as usize)] {
+            let mut cfg = base;
+            cfg.af_lanes = lanes;
+            let c = VectorEngine::new(cfg).run_ir_batch(&g, batch).total_cycles;
+            if c > off {
+                return Err(format!(
+                    "{} batch {batch} ({lanes}): shared {c} cycles > separate {off}",
+                    g.name
+                ));
+            }
         }
         Ok(())
     });

@@ -175,6 +175,119 @@ fn analytic_occupancy_agrees_with_the_simulator_on_real_workloads() {
 }
 
 #[test]
+fn lane_shared_af_schedule_dominates_the_separate_block_schedule() {
+    // the golden dominance contract of the lane-sharing schedule
+    // (DESIGN.md §17): against the separate-block (PR-5) pricing,
+    // borrowing idle MAC lane-slots is layer-wise dominant — never worse
+    // anywhere, strictly better on at least one softmax layer of the
+    // attention twin — and the off setting reproduces the one-resource
+    // law exactly, layer by layer
+    use corvet::activation::ActFn;
+    use corvet::engine::AfLanes;
+    use corvet::ir::{layer_pipeline_cycles, pipeline_ramp_cycles};
+    use corvet::model::workloads::TraceKind;
+
+    for graph in [workloads::attention_mlp(), workloads::tinyyolo()] {
+        let policy =
+            PolicyTable::uniform(graph.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+        let annotated = graph.with_policy(&policy);
+        let off_cfg = EngineConfig::pe256();
+        let r_off = VectorEngine::new(off_cfg).run_ir(&annotated);
+
+        // off == the PR-5 one-resource law (the zero-borrow degeneration,
+        // checked end to end on the real reports, not just in the doctest)
+        let mut pidx = 0usize;
+        for (l, t) in annotated.layers.iter().zip(&r_off.per_layer) {
+            if !matches!(t.kind, TraceKind::Conv | TraceKind::Dense) {
+                continue;
+            }
+            let cpm = policy.layer(pidx).cycles_per_mac();
+            pidx += 1;
+            let ramp = pipeline_ramp_cycles(t.macs, l.cost.outputs, cpm);
+            assert_eq!(
+                t.total_cycles - t.mem_stall_cycles,
+                layer_pipeline_cycles(t.mac_cycles, t.af_cycles, ramp),
+                "{} {}: af-lanes off must reproduce the PR-5 law",
+                graph.name,
+                t.name
+            );
+        }
+
+        for lanes in [AfLanes::Auto, AfLanes::Fixed(64)] {
+            let mut cfg = off_cfg;
+            cfg.af_lanes = lanes;
+            let r = VectorEngine::new(cfg).run_ir(&annotated);
+            for (a, b) in r.per_layer.iter().zip(&r_off.per_layer) {
+                assert!(
+                    a.total_cycles <= b.total_cycles,
+                    "{} {} ({lanes}): shared {} > separate {}",
+                    graph.name,
+                    a.name,
+                    a.total_cycles,
+                    b.total_cycles
+                );
+            }
+            assert!(r.total_cycles <= r_off.total_cycles, "{}: total dominance", graph.name);
+        }
+    }
+
+    // strict win: the attention twin's MAC-free score layers lend the
+    // whole array under auto, so at least one softmax layer must get
+    // strictly cheaper (and with it the run)
+    let graph = workloads::attention_mlp();
+    let policy =
+        PolicyTable::uniform(graph.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+    let annotated = graph.with_policy(&policy);
+    let r_off = VectorEngine::new(EngineConfig::pe256()).run_ir(&annotated);
+    let mut auto_cfg = EngineConfig::pe256();
+    auto_cfg.af_lanes = AfLanes::Auto;
+    let r_auto = VectorEngine::new(auto_cfg).run_ir(&annotated);
+    let strict_softmax_wins = annotated
+        .layers
+        .iter()
+        .zip(r_auto.per_layer.iter().zip(&r_off.per_layer))
+        .filter(|(l, (a, b))| l.af == ActFn::Softmax && a.total_cycles < b.total_cycles)
+        .count();
+    assert!(
+        strict_softmax_wins >= 1,
+        "auto must strictly beat the separate block on a softmax layer"
+    );
+    assert!(r_auto.total_cycles < r_off.total_cycles, "attn-mlp: strict total win");
+}
+
+#[test]
+fn lane_sharing_is_identity_on_af_free_graphs() {
+    // a graph with no AF work gives borrowed lanes nothing to absorb: any
+    // lane policy must price bit-for-bit as off, totals and per-layer both
+    use corvet::activation::ActFn;
+    use corvet::engine::AfLanes;
+    use corvet::ir::{Graph, NodeSpec, Op};
+    let g = Graph::build(
+        "af-free",
+        &[64],
+        vec![
+            NodeSpec::new("d1", Op::Dense { inputs: 64, outputs: 96, act: ActFn::Identity }),
+            NodeSpec::new("d2", Op::Dense { inputs: 96, outputs: 32, act: ActFn::Identity }),
+        ],
+    );
+    let policy = PolicyTable::uniform(g.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+    let annotated = g.with_policy(&policy);
+    let r_off = VectorEngine::new(EngineConfig::pe256()).run_ir(&annotated);
+    for lanes in [AfLanes::Auto, AfLanes::Fixed(7), AfLanes::Fixed(512)] {
+        let mut cfg = EngineConfig::pe256();
+        cfg.af_lanes = lanes;
+        let r = VectorEngine::new(cfg).run_ir(&annotated);
+        assert_eq!(
+            r.total_cycles, r_off.total_cycles,
+            "{lanes}: nothing to absorb, nothing may change"
+        );
+        for (a, b) in r.per_layer.iter().zip(&r_off.per_layer) {
+            assert_eq!(a.total_cycles, b.total_cycles, "{}", a.name);
+        }
+    }
+}
+
+#[test]
 fn af_vectors_within_tolerance() {
     let Some(vectors) = load_vectors() else {
         eprintln!("skipping: artifacts/golden.tsv not built");

@@ -17,7 +17,7 @@
 
 use corvet::activation::ActFn;
 use corvet::cordic::mac::ExecMode;
-use corvet::engine::{EngineConfig, VectorEngine};
+use corvet::engine::{AfLanes, EngineConfig, VectorEngine};
 use corvet::ir::{workloads, Graph};
 use corvet::model::workloads::{
     mlp, paper_mlp, small_cnn, tinyyolo_trace, transformer_mlp, vgg16_trace, Trace, TraceKind,
@@ -110,59 +110,81 @@ fn rand_policy(rng: &mut Xoshiro256, layers: usize) -> PolicyTable {
 fn assert_bit_identical(net: &Network, x: &Tensor, policy: &PolicyTable, pes: usize) {
     let (y_scalar, _) = net.forward_cordic(x, policy);
     // sub-word packing widens the issue chunk (2x/4x element slots for
-    // FxP-8/FxP-4) and the overlap schedule re-times the shared-block
-    // drain — both must be functionally invisible: check all four corners
+    // FxP-8/FxP-4), the overlap schedule re-times the shared-block drain,
+    // and the lane-sharing policy re-times it again by borrowing idle MAC
+    // slots — all three must be functionally invisible: check every corner
     for packing in [true, false] {
         for af_overlap in [true, false] {
-            let cfg = EngineConfig { pes, packing, af_overlap, ..EngineConfig::default() };
-            let (y_wave, stats) = net.forward_wave(x, policy, &cfg);
-            assert_eq!(y_scalar.shape(), y_wave.shape());
-            assert_eq!(stats.overlap, af_overlap);
-            for (i, (a, b)) in y_scalar.data().iter().zip(y_wave.data()).enumerate() {
-                assert!(
-                    a.to_bits() == b.to_bits(),
-                    "{} pes={pes} packing={packing} overlap={af_overlap}: \
-                     output {i} differs: scalar {a} wave {b}",
-                    net.name
-                );
+            for af_lanes in [AfLanes::Off, AfLanes::Auto] {
+                let cfg = EngineConfig {
+                    pes,
+                    packing,
+                    af_overlap,
+                    af_lanes,
+                    ..EngineConfig::default()
+                };
+                let (y_wave, stats) = net.forward_wave(x, policy, &cfg);
+                assert_eq!(y_scalar.shape(), y_wave.shape());
+                assert_eq!(stats.overlap, af_overlap);
+                for (i, (a, b)) in y_scalar.data().iter().zip(y_wave.data()).enumerate() {
+                    assert!(
+                        a.to_bits() == b.to_bits(),
+                        "{} pes={pes} packing={packing} overlap={af_overlap} \
+                         af-lanes={af_lanes}: output {i} differs: scalar {a} wave {b}",
+                        net.name
+                    );
+                }
+                assert_wave_stats_follow_the_pipeline_law(&stats, &cfg, policy);
             }
-            assert_wave_stats_follow_the_pipeline_law(&stats, &cfg, policy);
         }
     }
 }
 
-/// The executed wave stats must reproduce the analytic pipeline law from
-/// their own aggregates: with overlap on, every compute layer's
-/// `pipeline_cycles` equals `layer_pipeline_cycles(mac, af, ramp)`; with
-/// overlap off it equals the serial sum; and overlap never exceeds serial,
-/// strictly beating it exactly when the layer drains AF work across more
-/// than one issue chunk.
+/// The executed wave stats must reproduce the analytic two-resource law
+/// from their own aggregates: with overlap on, every compute layer's
+/// `pipeline_cycles` equals `layer_pipeline_cycles_shared(mac, af, ramp,
+/// slots, borrowed)`; with overlap off it equals the MAC phase plus the
+/// lane-shared drain; and overlap never exceeds serial. With zero borrowed
+/// lanes the shared law IS the PR-5 law, so the historical strict/equality
+/// refinement is kept for that case.
 fn assert_wave_stats_follow_the_pipeline_law(
     stats: &corvet::ir::WaveRunStats,
     cfg: &EngineConfig,
     policy: &PolicyTable,
 ) {
     use corvet::cordic::mac::MacConfig;
-    use corvet::ir::{layer_pipeline_cycles, pipeline_ramp_cycles};
+    use corvet::ir::{layer_pipeline_cycles_shared, pipeline_ramp_cycles, shared_af_drain};
     let mut pidx = 0usize;
     for l in stats.per_layer.iter().filter(|l| l.macs > 0) {
         let lp = policy.layer(pidx);
         pidx += 1;
         let cpm = MacConfig::new(lp.precision, lp.mode).cycles_per_mac();
+        let slots = cfg.lane_slots(lp.precision);
         let af = l.af_cost.total() as u64;
         let ramp = pipeline_ramp_cycles(l.macs, l.outputs as u64, cpm);
+        // the executed borrow must be exactly what the config policy says
+        // for this layer's element count — one law, two derivations
+        assert_eq!(
+            l.af_lanes_borrowed,
+            cfg.af_lanes_borrowed(slots, l.outputs as u64),
+            "{}: borrowed-lane parity",
+            l.kind
+        );
+        let borrowed = l.af_lanes_borrowed;
         let expect = if cfg.af_overlap {
-            layer_pipeline_cycles(l.mac_cycles, af, ramp)
+            layer_pipeline_cycles_shared(l.mac_cycles, af, ramp, slots, borrowed)
         } else {
-            l.mac_cycles + af
+            l.mac_cycles + shared_af_drain(af, slots, borrowed)
         };
-        assert_eq!(l.pipeline_cycles, expect, "{}: pipeline law", l.kind);
+        assert_eq!(l.pipeline_cycles, expect, "{}: two-resource pipeline law", l.kind);
         assert!(l.pipeline_cycles <= l.serial_cycles(), "{}: overlap <= serial", l.kind);
         // strict exactly when there is AF work to hide AND the one-chunk
         // fill is shorter than the whole MAC phase (a single-chunk layer
         // has nothing to overlap with: the ramp clamps to mac and the law
-        // degenerates to the serial sum)
-        if cfg.af_overlap && af > 0 {
+        // degenerates to the serial sum). Only a zero-borrow schedule
+        // preserves the equality half — borrowed lanes divide the drain,
+        // so they may beat serial even on single-chunk layers.
+        if cfg.af_overlap && af > 0 && borrowed == 0 {
             if ramp < l.mac_cycles {
                 assert!(
                     l.pipeline_cycles < l.serial_cycles(),
@@ -273,42 +295,53 @@ fn wave_bit_identical_across_named_operating_points() {
 /// Every sample of a batched run must be bit-identical to its own scalar
 /// and single-sample wave runs — regardless of how the batch dimension
 /// packed elements into lanes, with sub-word precision packing on or off,
-/// and with the AF-overlap schedule on or off. Packed chunk/wave counts
-/// must also follow the analytic law `ceil(elements / (pes·pack))`, and
-/// the per-layer makespans the shared pipeline law.
+/// with the AF-overlap schedule on or off, and with lane-shared AF
+/// execution off or auto. Packed chunk/wave counts must also follow the
+/// analytic law `ceil(elements / (pes·pack))`, and the per-layer makespans
+/// the two-resource pipeline law.
 fn assert_batch_bit_identical(net: &Network, xs: &[Tensor], policy: &PolicyTable, pes: usize) {
     for packing in [true, false] {
         for af_overlap in [true, false] {
-            let cfg = EngineConfig { pes, packing, af_overlap, ..EngineConfig::default() };
-            let (ys, stats) = net.forward_batch(xs, policy, &cfg);
-            assert_eq!(ys.len(), xs.len());
-            assert_eq!(stats.batch, xs.len());
-            assert_eq!(stats.pes, pes);
-            assert_eq!(stats.packing, packing);
-            assert_eq!(stats.overlap, af_overlap);
-            assert_batch_counts_follow_packed_law(&stats, &cfg, policy);
-            assert_batch_stats_follow_the_pipeline_law(&stats, &cfg, policy);
-            for (i, (x, yb)) in xs.iter().zip(&ys).enumerate() {
-                let (y_scalar, _) = net.forward_cordic(x, policy);
-                let (y_wave, _) = net.forward_wave(x, policy, &cfg);
-                assert_eq!(y_scalar.shape(), yb.shape());
-                for (j, (a, b)) in y_scalar.data().iter().zip(yb.data()).enumerate() {
-                    assert!(
-                        a.to_bits() == b.to_bits(),
-                        "{} pes={pes} packing={packing} overlap={af_overlap} B={}: \
-                         sample {i} output {j}: scalar {a} batch {b}",
-                        net.name,
-                        xs.len()
-                    );
-                }
-                for (j, (a, b)) in y_wave.data().iter().zip(yb.data()).enumerate() {
-                    assert!(
-                        a.to_bits() == b.to_bits(),
-                        "{} pes={pes} packing={packing} overlap={af_overlap} B={}: \
-                         sample {i} output {j}: wave {a} batch {b}",
-                        net.name,
-                        xs.len()
-                    );
+            for af_lanes in [AfLanes::Off, AfLanes::Auto] {
+                let cfg = EngineConfig {
+                    pes,
+                    packing,
+                    af_overlap,
+                    af_lanes,
+                    ..EngineConfig::default()
+                };
+                let (ys, stats) = net.forward_batch(xs, policy, &cfg);
+                assert_eq!(ys.len(), xs.len());
+                assert_eq!(stats.batch, xs.len());
+                assert_eq!(stats.pes, pes);
+                assert_eq!(stats.packing, packing);
+                assert_eq!(stats.overlap, af_overlap);
+                assert_batch_counts_follow_packed_law(&stats, &cfg, policy);
+                assert_batch_stats_follow_the_pipeline_law(&stats, &cfg, policy);
+                for (i, (x, yb)) in xs.iter().zip(&ys).enumerate() {
+                    let (y_scalar, _) = net.forward_cordic(x, policy);
+                    let (y_wave, _) = net.forward_wave(x, policy, &cfg);
+                    assert_eq!(y_scalar.shape(), yb.shape());
+                    for (j, (a, b)) in y_scalar.data().iter().zip(yb.data()).enumerate() {
+                        assert!(
+                            a.to_bits() == b.to_bits(),
+                            "{} pes={pes} packing={packing} overlap={af_overlap} \
+                             af-lanes={af_lanes} B={}: \
+                             sample {i} output {j}: scalar {a} batch {b}",
+                            net.name,
+                            xs.len()
+                        );
+                    }
+                    for (j, (a, b)) in y_wave.data().iter().zip(yb.data()).enumerate() {
+                        assert!(
+                            a.to_bits() == b.to_bits(),
+                            "{} pes={pes} packing={packing} overlap={af_overlap} \
+                             af-lanes={af_lanes} B={}: \
+                             sample {i} output {j}: wave {a} batch {b}",
+                            net.name,
+                            xs.len()
+                        );
+                    }
                 }
             }
         }
@@ -323,20 +356,28 @@ fn assert_batch_stats_follow_the_pipeline_law(
     policy: &PolicyTable,
 ) {
     use corvet::cordic::mac::MacConfig;
-    use corvet::ir::{layer_pipeline_cycles, pipeline_ramp_cycles};
+    use corvet::ir::{layer_pipeline_cycles_shared, pipeline_ramp_cycles, shared_af_drain};
     let mut pidx = 0usize;
     for l in stats.per_layer.iter().filter(|l| l.macs > 0) {
         let lp = policy.layer(pidx);
         pidx += 1;
         let cpm = MacConfig::new(lp.precision, lp.mode).cycles_per_mac();
+        let slots = cfg.lane_slots(lp.precision);
         let af = l.af_cost.total() as u64;
+        assert_eq!(
+            l.af_lanes_borrowed,
+            cfg.af_lanes_borrowed(slots, l.elements),
+            "{}: batched borrowed-lane parity",
+            l.kind
+        );
+        let borrowed = l.af_lanes_borrowed;
         let expect = if cfg.af_overlap {
             let ramp = pipeline_ramp_cycles(l.macs, l.elements, cpm);
-            layer_pipeline_cycles(l.mac_cycles, af, ramp)
+            layer_pipeline_cycles_shared(l.mac_cycles, af, ramp, slots, borrowed)
         } else {
-            l.mac_cycles + af
+            l.mac_cycles + shared_af_drain(af, slots, borrowed)
         };
-        assert_eq!(l.pipeline_cycles, expect, "{}: batched pipeline law", l.kind);
+        assert_eq!(l.pipeline_cycles, expect, "{}: batched two-resource law", l.kind);
         assert!(l.pipeline_cycles <= l.serial_cycles(), "{}: overlap <= serial", l.kind);
     }
 }
@@ -657,6 +698,63 @@ fn overlap_equals_serial_exactly_when_af_cost_is_zero() {
     assert_eq!(s_on.total_pipeline_cycles(), s_on.total_mac_cycles());
     assert_eq!(s_on.hidden_fraction(), 0.0);
     assert_eq!(s_on.af_util.served, 0, "nothing to schedule on the shared block");
+}
+
+#[test]
+fn af_lane_borrowing_is_monotone_and_fixed_zero_is_off() {
+    // the lane-sharing schedule is pure pricing: outputs never move, and
+    // cycles are non-increasing in the number of borrowed lanes (each
+    // extra lane can only divide the drain further). Fixed(0) must be
+    // indistinguishable from Off — the PR-5 degeneration at the executor
+    // level, not just in the law's doctest.
+    let net = mlp("lanes-mlp", &[12, 40, 40, 5], ActFn::Sigmoid, 91);
+    let mut rng = Xoshiro256::new(47);
+    let x = Tensor::vector(&rng.uniform_vec(12, -0.9, 0.9));
+    let policy =
+        PolicyTable::uniform(net.compute_layers(), Precision::Fxp8, ExecMode::Accurate);
+    for af_overlap in [true, false] {
+        let base = EngineConfig { pes: 8, af_overlap, ..EngineConfig::default() };
+        let (y_off, s_off) = net.forward_wave(&x, &policy, &base);
+        let mut zero = base;
+        zero.af_lanes = AfLanes::Fixed(0);
+        let (y_zero, s_zero) = net.forward_wave(&x, &policy, &zero);
+        assert_eq!(
+            s_zero.total_pipeline_cycles(),
+            s_off.total_pipeline_cycles(),
+            "overlap={af_overlap}: Fixed(0) must price exactly as Off"
+        );
+        for (l0, l1) in s_off.per_layer.iter().zip(&s_zero.per_layer) {
+            assert_eq!(l0.pipeline_cycles, l1.pipeline_cycles, "{}: Fixed(0) == Off", l0.kind);
+        }
+        for (a, b) in y_off.data().iter().zip(y_zero.data()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let mut prev = u64::MAX;
+        for n in [0usize, 1, 2, 4, 8, 16] {
+            let mut cfg = base;
+            cfg.af_lanes = AfLanes::Fixed(n);
+            let (y, s) = net.forward_wave(&x, &policy, &cfg);
+            for (a, b) in y_off.data().iter().zip(y.data()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "Fixed({n}) changed output bits");
+            }
+            let total = s.total_pipeline_cycles();
+            assert!(
+                total <= prev,
+                "overlap={af_overlap}: borrowing more lanes may never cost cycles: \
+                 Fixed({n}) {total} > previous {prev}"
+            );
+            prev = total;
+        }
+        // at 8 PEs the Fxp8 slots cap the borrow, so maxed-out borrowing
+        // must actually have divided the exposed drain on this AF-heavy net
+        let mut maxed = base;
+        maxed.af_lanes = AfLanes::Fixed(usize::MAX);
+        let (_, s_max) = net.forward_wave(&x, &policy, &maxed);
+        assert!(
+            s_max.total_pipeline_cycles() < s_off.total_pipeline_cycles(),
+            "overlap={af_overlap}: a full-array borrow must shorten the run"
+        );
+    }
 }
 
 #[test]

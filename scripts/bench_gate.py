@@ -46,6 +46,12 @@ main additionally hard-asserts the fleet accounting identity
 `served + rejected_full + rejected_deadline + rejected_down == offered`
 under 2x bursty overload with a mid-trace shard kill, so a run that even
 reaches the gate already proves the typed-outcome contract.
+`BENCH_af_lanes.json` is plain iteration timing, but its two rows are
+expected to be statistically identical: lane-shared AF execution
+(DESIGN.md §17) only re-times the modelled drain, so any host wall-clock
+divergence between `af-lanes=off` and `af-lanes=auto` beyond noise means
+bookkeeping leaked into the arithmetic path; its bench main also
+hard-asserts output bit-identity across lane policies before timing.
 
 Exit status 0 when everything passes, 1 otherwise. Stdlib only.
 """
